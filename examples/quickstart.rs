@@ -1,0 +1,61 @@
+//! Quickstart: the three-layer stack in one page.
+//!
+//! 1. Load the AOT artifacts (Pallas kernels + JAX model, compiled to HLO
+//!    by `make artifacts`) through the PJRT runtime.
+//! 2. Run the gate and one expert through real executables.
+//! 3. Plan a sparse materialization with Algorithm 1 and inspect the spAG.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use hecate::collectives::sparse::build_spag;
+use hecate::materialize::{sparse_materialize, MatConstraints};
+use hecate::placement::Placement;
+use hecate::runtime::{HostTensor, Runtime};
+use hecate::topology::Topology;
+
+fn main() -> anyhow::Result<()> {
+    // ---- L2/L1 through PJRT -------------------------------------------
+    let mut rt = Runtime::open("artifacts")?;
+    println!("artifacts: {:?}", rt.entry_names().collect::<Vec<_>>());
+
+    let gate = rt.entry("gate_fwd")?.clone();
+    let (t, dm) = (gate.inputs[0].shape[0], gate.inputs[0].shape[1]);
+    let experts = gate.inputs[1].shape[1];
+    let x = HostTensor::f32(vec![t, dm], (0..t * dm).map(|i| (i as f32 * 0.3).sin()).collect());
+    let wg = HostTensor::f32(
+        vec![dm, experts],
+        (0..dm * experts).map(|i| (i as f32 * 0.17).cos()).collect(),
+    );
+    let out = rt.execute("gate_fwd", &[x, wg])?;
+    let idx = out[2].as_i32()?;
+    println!("gate: routed {t} tokens; first 4 top-2 pairs: {:?}", &idx[..8]);
+
+    // ---- L3: FSSDP planning -------------------------------------------
+    let topo = Topology::cluster_a(2, 4);
+    let shards = Placement::round_robin(experts, topo.num_devices());
+    // pretend expert 3 is hot
+    let mut loads = vec![0.05; experts];
+    loads[3] = 0.5;
+    let plan = sparse_materialize(
+        &topo,
+        &shards,
+        &loads,
+        MatConstraints { overlap_degree: 4, mem_slots: 2 },
+    );
+    println!(
+        "Algorithm 1: expert 3 materialized on {} devices (was 1)",
+        plan.replication(3)
+    );
+    let spag = build_spag(&topo, &shards, &plan)?;
+    println!(
+        "spAG: {} transfers, λ = {:.2}, est. {:.3} ms on {}",
+        spag.transfers.len(),
+        spag.sparsity,
+        spag.time(&topo, 4e6) * 1e3,
+        topo.name
+    );
+    println!("quickstart OK");
+    Ok(())
+}

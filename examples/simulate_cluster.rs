@@ -1,0 +1,28 @@
+//! Cluster-simulation example: compare all systems on both paper testbeds
+//! and print Figure-9/10-style speedup tables plus a Figure-12 breakdown.
+//!
+//! ```bash
+//! cargo run --release --example simulate_cluster
+//! ```
+
+use hecate::config::ClusterPreset;
+use hecate::sim::report;
+
+fn main() {
+    let opts = report::default_opts();
+
+    println!("== Table 1 ==");
+    print!("{}", report::table1().to_markdown());
+
+    println!("\n== End-to-end speedups, Cluster A (4x8 V100, 100 Gbps) ==");
+    print!("{}", report::end_to_end(ClusterPreset::A, 4, 8, &opts).to_markdown());
+
+    println!("\n== End-to-end speedups, Cluster B (4x8 A100, 400 Gbps) ==");
+    print!("{}", report::end_to_end(ClusterPreset::B, 4, 8, &opts).to_markdown());
+
+    println!("\n== Critical-path breakdown (BERT-MoE-Deep @ B) ==");
+    print!("{}", report::figure12(&opts).to_markdown());
+
+    println!("\n== Peak MoE memory ==");
+    print!("{}", report::figure13(&opts).to_markdown());
+}

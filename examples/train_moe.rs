@@ -1,0 +1,24 @@
+//! End-to-end training driver (EXPERIMENTS.md §E2E): train the ~100M-param
+//! GPT-MoE model (`e2e` artifacts; falls back to `tiny` with a warning)
+//! for a few hundred steps on the synthetic Markov corpus through the PJRT
+//! runtime, and log the loss curve to `train_loss.csv`.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_moe -- [steps]
+//! ```
+
+use hecate::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let rt = Runtime::open("artifacts")?;
+    let tag = if rt.entry("e2e_train_step").is_ok() {
+        "e2e"
+    } else {
+        eprintln!("warning: e2e artifacts missing, training tiny model instead");
+        "tiny"
+    };
+    drop(rt);
+    println!("training `{tag}` for {steps} steps…");
+    hecate::train::run_training("artifacts", tag, steps, Some("train_loss.csv"))
+}

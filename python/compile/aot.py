@@ -1,0 +1,219 @@
+"""AOT pipeline: lower every L2 entry point to HLO **text** + manifest.
+
+HLO text (NOT serialized protos) is the interchange format: jax ≥ 0.5
+emits 64-bit instruction ids that the Rust side's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts (written to ``--out``, default ``../artifacts``):
+
+* ``e2e_init`` / ``e2e_train_step`` — the ~100M-param GPT-MoE model used by
+  ``examples/train_moe``: full fwd/bwd/Adam in one executable.
+* ``tiny_init`` / ``tiny_train_step`` — same entries at the TINY config for
+  fast integration tests.
+* ``gate_fwd`` — gate logits→softmax→Pallas top-2 (the L3 dispatcher's
+  gate call in the numeric FSSDP engine).
+* ``expert_ffn_fwd`` / ``expert_ffn_bwd`` — single-expert Pallas FFN
+  forward and VJP at the engine's capacity tile, called per materialized
+  expert by the numeric engine.
+* ``manifest.json`` — shapes/dtypes/orderings for the Rust runtime.
+
+Python runs ONCE (`make artifacts`); nothing here is on the training path.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import gating, moe_ffn
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_of(x) -> dict:
+    return {"shape": list(x.shape), "dtype": x.dtype.name}
+
+
+# --------------------------------------------------------------------------
+# Entry-point builders
+# --------------------------------------------------------------------------
+
+def flat_train_step(cfg: model.ModelCfg, adam: model.AdamCfg):
+    """train_step over a flat arg list (stable ordering for the manifest).
+
+    Args: [params…, m…, v…, t, tokens, targets] (params in param_order).
+    Returns: (loss, nll, loads, params'…, m'…, v'…, t').
+    """
+    order = model.param_order(cfg)
+    n = len(order)
+
+    def fn(*flat):
+        params = dict(zip(order, flat[:n]))
+        m = dict(zip(order, flat[n : 2 * n]))
+        v = dict(zip(order, flat[2 * n : 3 * n]))
+        t = flat[3 * n]
+        tokens, targets = flat[3 * n + 1], flat[3 * n + 2]
+        opt = {"m": m, "v": v, "t": t}
+        loss, nll, loads, new_p, new_o = model.train_step(
+            params, opt, tokens, targets, cfg, adam
+        )
+        out = [loss, nll, loads]
+        out += [new_p[k] for k in order]
+        out += [new_o["m"][k] for k in order]
+        out += [new_o["v"][k] for k in order]
+        out += [new_o["t"]]
+        return tuple(out)
+
+    return fn, order
+
+
+def flat_init(cfg: model.ModelCfg):
+    """init over a scalar seed -> (params…, m…, v…, t) flat tuple."""
+    order = model.param_order(cfg)
+
+    def fn(seed):
+        key = jax.random.PRNGKey(seed)
+        params = model.init_params(cfg, key)
+        opt = model.adam_init(params)
+        out = [params[k] for k in order]
+        out += [opt["m"][k] for k in order]
+        out += [opt["v"][k] for k in order]
+        out += [opt["t"]]
+        return tuple(out)
+
+    return fn, order
+
+
+def expert_ffn_fwd_fn(x, w1, b1, w2, b2):
+    """Single-expert FFN forward at the engine tile ([cap, dm])."""
+    y = moe_ffn.grouped_ffn(x[None], w1[None], b1[None], w2[None], b2[None])
+    return (y[0],)
+
+
+def expert_ffn_bwd_fn(x, w1, b1, w2, b2, gy):
+    """Single-expert FFN VJP: returns (gx, gw1, gb1, gw2, gb2)."""
+    y, h = moe_ffn.grouped_ffn_fwd(x[None], w1[None], b1[None], w2[None], b2[None])
+    del y
+    gx, gw1, gb1, gw2, gb2 = moe_ffn.grouped_ffn_bwd_kernels(
+        x[None], w1[None], b1[None], w2[None], b2[None], h, gy[None]
+    )
+    return gx[0], gw1[0], gb1[0], gw2[0], gb2[0]
+
+
+def gate_fwd_fn(x, wg):
+    return gating.gate_fwd(x, wg)
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+def lower_entry(name, fn, example_args, out_dir, manifest, extra=None):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    outputs = jax.eval_shape(fn, *example_args)
+    if not isinstance(outputs, (tuple, list)):
+        outputs = (outputs,)
+    entry = {
+        "file": fname,
+        "inputs": [spec_of(a) for a in example_args],
+        "outputs": [spec_of(o) for o in outputs],
+    }
+    if extra:
+        entry.update(extra)
+    manifest["entries"][name] = entry
+    print(f"  {name}: {len(text) / 1e6:.2f} MB, "
+          f"{len(entry['inputs'])} in / {len(entry['outputs'])} out")
+
+
+def model_entries(tag, cfg, batch, out_dir, manifest):
+    adam = model.AdamCfg()
+    order = model.param_order(cfg)
+
+    init_fn, _ = flat_init(cfg)
+    lower_entry(
+        f"{tag}_init", init_fn,
+        [jax.ShapeDtypeStruct((), jnp.int32)],
+        out_dir, manifest,
+        extra={"param_order": order, "config": cfg.__dict__},
+    )
+
+    step_fn, _ = flat_train_step(cfg, adam)
+    params = jax.eval_shape(lambda s: flat_init(cfg)[0](s), jnp.int32(0))
+    tokens = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    targets = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    args = list(params[:-1]) + [params[-1], tokens, targets]
+    lower_entry(
+        f"{tag}_train_step", step_fn, args, out_dir, manifest,
+        extra={"param_order": order, "batch": batch, "config": cfg.__dict__},
+    )
+
+
+def engine_entries(out_dir, manifest, cfg=model.TINY, tokens=128, cap=64):
+    """Artifacts for the numeric FSSDP engine (expert granularity)."""
+    dm, dff, e = cfg.d_model, cfg.d_ffn, cfg.experts
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    lower_entry(
+        "gate_fwd", gate_fwd_fn,
+        [s((tokens, dm), f32), s((dm, e), f32)],
+        out_dir, manifest,
+        extra={"tokens": tokens, "d_model": dm, "experts": e},
+    )
+    ffn_args = [
+        s((cap, dm), f32), s((dm, dff), f32), s((dff,), f32),
+        s((dff, dm), f32), s((dm,), f32),
+    ]
+    lower_entry(
+        "expert_ffn_fwd", expert_ffn_fwd_fn, ffn_args, out_dir, manifest,
+        extra={"cap": cap, "d_model": dm, "d_ffn": dff},
+    )
+    lower_entry(
+        "expert_ffn_bwd", expert_ffn_bwd_fn,
+        ffn_args + [s((cap, dm), f32)], out_dir, manifest,
+        extra={"cap": cap, "d_model": dm, "d_ffn": dff},
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-e2e", action="store_true",
+                    help="skip the large e2e model (fast CI runs)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"entries": {}, "format": "hlo-text", "version": 1}
+
+    print("lowering engine entries (tiny)…")
+    engine_entries(args.out, manifest)
+    print("lowering tiny model…")
+    model_entries("tiny", model.TINY, batch=2, out_dir=args.out, manifest=manifest)
+    if not args.skip_e2e:
+        print("lowering e2e 100M model…")
+        model_entries("e2e", model.E2E_100M, batch=4, out_dir=args.out, manifest=manifest)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"manifest: {len(manifest['entries'])} entries -> {args.out}/manifest.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

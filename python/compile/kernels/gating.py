@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: GShard top-2 gate selection.
+
+One pass over the ``[T, E]`` probability matrix computes (max, argmax) and
+(second-max, arg-second-max) per row without a sort — a VPU-friendly pair
+of masked reductions — then normalizes the two weights to sum to 1
+(GShard top-2 normalization, §5.1 of the paper).
+
+The kernel grid blocks over tokens only; `E` is small (≤ 64 in the paper)
+so a full row fits comfortably in VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _top2_kernel(p_ref, w_ref, idx_ref):
+    p = p_ref[...].astype(jnp.float32)  # [blk, E]
+    e = p.shape[-1]
+    idx1 = jnp.argmax(p, axis=-1)
+    p1 = jnp.max(p, axis=-1)
+    # mask out the winner, then take the max again (ties -> lower index wins
+    # first slot; strict masking matches ref.top2)
+    onehot1 = jax.nn.one_hot(idx1, e, dtype=jnp.bool_)
+    masked = jnp.where(onehot1, -jnp.inf, p)
+    idx2 = jnp.argmax(masked, axis=-1)
+    p2 = jnp.max(masked, axis=-1)
+    denom = p1 + p2
+    w_ref[...] = jnp.stack([p1 / denom, p2 / denom], axis=-1).astype(w_ref.dtype)
+    idx_ref[...] = jnp.stack([idx1, idx2], axis=-1).astype(jnp.int32)
+
+
+def top2_gate(probs):
+    """Top-2 selection: probs [T, E] -> (w [T, 2], idx [T, 2] int32)."""
+    t, e = probs.shape
+    blk = t
+    for b in (256, 128, 64, 32, 16, 8):
+        if t % b == 0:
+            blk = b
+            break
+    return pl.pallas_call(
+        _top2_kernel,
+        grid=(t // blk,),
+        in_specs=[pl.BlockSpec((blk, e), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((blk, 2), lambda i: (i, 0)),
+            pl.BlockSpec((blk, 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, 2), probs.dtype),
+            jax.ShapeDtypeStruct((t, 2), jnp.int32),
+        ],
+        interpret=True,
+    )(probs)
+
+
+def gate_fwd(x, wg):
+    """Full gate for the Rust runtime: logits -> softmax -> Pallas top-2.
+
+    x: [T, dm]; wg: [dm, E]. Returns (probs [T, E], w [T, 2], idx [T, 2]).
+    Exported as an AOT artifact so the L3 dispatcher gets gate decisions
+    from one executable call.
+    """
+    logits = x @ wg
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = top2_gate(probs)
+    return probs, w, idx

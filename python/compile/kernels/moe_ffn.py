@@ -1,0 +1,198 @@
+"""L1 Pallas kernels: the grouped expert FFN — the paper's compute hot-spot.
+
+Hardware adaptation (DESIGN.md §3): instead of CUDA grouped-GEMM over
+dynamically sized token groups, tokens are capacity-packed into fixed
+``[E, cap, d_model]`` tiles (GShard-style) so the kernel is a static-shape
+blocked matmul the MXU can stream. The grid iterates over (expert,
+token-block); each program keeps one expert's ``w1/w2`` resident in VMEM
+while token tiles stream through, which BlockSpec expresses via the
+index maps below.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact runs
+under the Rust runtime. Real-TPU efficiency is estimated structurally in
+DESIGN.md §Perf (VMEM footprint / MXU utilization), not from CPU wallclock.
+
+The backward pass is its own pair of Pallas kernels wired up via
+``jax.custom_vjp`` so the L2 train step can differentiate through the
+forward kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _pick_block(cap: int) -> int:
+    """Token-block size: multiples of 8 (fp32 sublane), at most 128."""
+    for b in (128, 64, 32, 16, 8):
+        if cap % b == 0:
+            return b
+    return cap
+
+
+def _ffn_fwd_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, y_ref, h_ref):
+    """One (expert, token-block) program: y = gelu(x@w1+b1)@w2 + b2.
+
+    The activation ``h`` is also written out as the residual for the
+    backward kernels (recompute-free bwd at the cost of cap×d_ffn VMEM).
+    Accumulation happens in f32 regardless of input dtype.
+    """
+    x = x_ref[0].astype(jnp.float32)      # [blk, dm]
+    w1 = w1_ref[0].astype(jnp.float32)    # [dm, dff]
+    h = ref.gelu(jnp.dot(x, w1) + b1_ref[0].astype(jnp.float32))
+    y = jnp.dot(h, w2_ref[0].astype(jnp.float32)) + b2_ref[0].astype(jnp.float32)
+    h_ref[0] = h.astype(h_ref.dtype)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def grouped_ffn_fwd(x, w1, b1, w2, b2):
+    """Forward grouped FFN, returning (y, h).
+
+    x: [E, cap, dm]; w1: [E, dm, dff]; b1: [E, dff]; w2: [E, dff, dm];
+    b2: [E, dm]. The grid is (E, cap // blk): expert weights are re-read
+    per token-block (they stay VMEM-resident across the inner grid dim on
+    TPU since the index map is constant in it).
+    """
+    e, cap, dm = x.shape
+    dff = w1.shape[2]
+    blk = _pick_block(cap)
+    grid = (e, cap // blk)
+    return pl.pallas_call(
+        _ffn_fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk, dm), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, dm, dff), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, dff), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, dff, dm), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, dm), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk, dm), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, blk, dff), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((e, cap, dm), x.dtype),
+            jax.ShapeDtypeStruct((e, cap, dff), x.dtype),
+        ],
+        interpret=True,
+    )(x, w1, b1, w2, b2)
+
+
+def _gelu_grad(s):
+    """d/ds gelu(s) for the tanh approximation."""
+    c = 0.7978845608028654
+    t = jnp.tanh(c * (s + 0.044715 * s**3))
+    return 0.5 * (1.0 + t) + 0.5 * s * (1.0 - t * t) * c * (1.0 + 3 * 0.044715 * s * s)
+
+
+def _ffn_bwd_dw_kernel(x_ref, h_ref, gh_ref, gy_ref, gw1_ref, gb1_ref, gw2_ref, gb2_ref):
+    """Backward weight-path program (one expert per program):
+    gw1 = xᵀ gh, gb1 = Σ gh, gw2 = hᵀ gy, gb2 = Σ gy."""
+    x = x_ref[0].astype(jnp.float32)
+    h = h_ref[0].astype(jnp.float32)
+    gh = gh_ref[0].astype(jnp.float32)
+    gy = gy_ref[0].astype(jnp.float32)
+    gw1_ref[...] = jnp.dot(x.T, gh)[None].astype(gw1_ref.dtype)
+    gb1_ref[...] = jnp.sum(gh, axis=0)[None].astype(gb1_ref.dtype)
+    gw2_ref[...] = jnp.dot(h.T, gy)[None].astype(gw2_ref.dtype)
+    gb2_ref[...] = jnp.sum(gy, axis=0)[None].astype(gb2_ref.dtype)
+
+
+def grouped_ffn_bwd_kernels(x, w1, b1, w2, b2, h, gy):
+    """Run the two backward kernels; returns (gx, gw1, gb1, gw2, gb2)."""
+    e, cap, dm = x.shape
+    dff = w1.shape[2]
+    blk = _pick_block(cap)
+
+    def dx_kernel(gy_ref, h_ref, x_ref, w1_ref, b1_ref, w2_ref, gx_ref, gh_ref):
+        """gh = (gy @ w2ᵀ) * gelu'(s) with s = x@w1+b1 recomputed; gx = gh @ w1ᵀ."""
+        gy_ = gy_ref[0].astype(jnp.float32)
+        x_ = x_ref[0].astype(jnp.float32)
+        w1_ = w1_ref[0].astype(jnp.float32)
+        w2_ = w2_ref[0].astype(jnp.float32)
+        s = jnp.dot(x_, w1_) + b1_ref[0].astype(jnp.float32)
+        gh = jnp.dot(gy_, w2_.T) * _gelu_grad(s)
+        gx = jnp.dot(gh, w1_.T)
+        gx_ref[0] = gx.astype(gx_ref.dtype)
+        gh_ref[0] = gh.astype(gh_ref.dtype)
+        del h_ref
+
+    gx, gh = pl.pallas_call(
+        dx_kernel,
+        grid=(e, cap // blk),
+        in_specs=[
+            pl.BlockSpec((1, blk, dm), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, blk, dff), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, blk, dm), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, dm, dff), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, dff), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, dff, dm), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk, dm), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, blk, dff), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((e, cap, dm), x.dtype),
+            jax.ShapeDtypeStruct((e, cap, dff), x.dtype),
+        ],
+        interpret=True,
+    )(gy, h, x, w1, b1, w2)
+
+    gw1, gb1, gw2, gb2 = pl.pallas_call(
+        _ffn_bwd_dw_kernel,
+        grid=(e,),
+        in_specs=[
+            pl.BlockSpec((1, cap, dm), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, cap, dff), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, cap, dff), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, cap, dm), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, dm, dff), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, dff), lambda i: (i, 0)),
+            pl.BlockSpec((1, dff, dm), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, dm), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(w1.shape, w1.dtype),
+            jax.ShapeDtypeStruct(b1.shape, b1.dtype),
+            jax.ShapeDtypeStruct(w2.shape, w2.dtype),
+            jax.ShapeDtypeStruct(b2.shape, b2.dtype),
+        ],
+        interpret=True,
+    )(x, h, gh, gy)
+    return gx, gw1, gb1, gw2, gb2
+
+
+@jax.custom_vjp
+def grouped_ffn(x, w1, b1, w2, b2):
+    """Differentiable grouped expert FFN (Pallas fwd + Pallas bwd)."""
+    y, _ = grouped_ffn_fwd(x, w1, b1, w2, b2)
+    return y
+
+
+def _vjp_fwd(x, w1, b1, w2, b2):
+    y, h = grouped_ffn_fwd(x, w1, b1, w2, b2)
+    return y, (x, w1, b1, w2, b2, h)
+
+
+def _vjp_bwd(res, gy):
+    x, w1, b1, w2, b2, h = res
+    return grouped_ffn_bwd_kernels(x, w1, b1, w2, b2, h, gy)
+
+
+grouped_ffn.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def expert_ffn(x, w1, b1, w2, b2):
+    """Single-expert convenience wrapper ([cap, dm] in/out)."""
+    y = grouped_ffn(x[None], w1[None], b1[None], w2[None], b2[None])
+    return y[0]

@@ -1,0 +1,54 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an oracle here; pytest asserts
+allclose between kernel and oracle across shape/dtype sweeps (hypothesis).
+These refs are also the semantics documentation: the kernels must match
+them bit-for-bit up to float tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def gelu(x):
+    """tanh-approx GeLU (matches the kernel's VPU-friendly form)."""
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))
+
+
+def expert_ffn(x, w1, b1, w2, b2):
+    """One expert FFN: ``gelu(x @ w1 + b1) @ w2 + b2``.
+
+    x: [cap, d_model]; w1: [d_model, d_ffn]; w2: [d_ffn, d_model].
+    """
+    h = gelu(x @ w1 + b1)
+    return h @ w2 + b2
+
+
+def grouped_ffn(x, w1, b1, w2, b2):
+    """All experts' FFN: x [E, cap, d_model], weights stacked on E."""
+    return jax.vmap(expert_ffn)(x, w1, b1, w2, b2)
+
+
+def grouped_ffn_bwd(x, w1, b1, w2, b2, gy):
+    """VJP of grouped_ffn wrt (x, w1, b1, w2, b2) for cotangent gy."""
+    _, vjp = jax.vjp(grouped_ffn, x, w1, b1, w2, b2)
+    return vjp(gy)
+
+
+def top2(probs):
+    """Top-2 selection with GShard normalization.
+
+    probs: [T, E] gate probabilities (rows sum to 1).
+    Returns (w, idx): w [T, 2] normalized top-2 weights summing to 1,
+    idx [T, 2] int32 expert ids. Ties broken toward the lower index
+    (the kernel uses strict > for the second max).
+    """
+    idx1 = jnp.argmax(probs, axis=-1)
+    p1 = jnp.take_along_axis(probs, idx1[:, None], axis=-1)[:, 0]
+    masked = probs.at[jnp.arange(probs.shape[0]), idx1].set(-jnp.inf)
+    idx2 = jnp.argmax(masked, axis=-1)
+    p2 = jnp.take_along_axis(probs, idx2[:, None], axis=-1)[:, 0]
+    denom = p1 + p2
+    w = jnp.stack([p1 / denom, p2 / denom], axis=-1)
+    idx = jnp.stack([idx1, idx2], axis=-1).astype(jnp.int32)
+    return w, idx

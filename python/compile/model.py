@@ -1,0 +1,247 @@
+"""L2: the JAX Transformer-MoE model (fwd/bwd + Adam) — build-time only.
+
+The architecture follows the paper's §5.1 setup: GPT-style decoder blocks
+whose FFNs are replaced by MoE layers (experts are FFNs with
+``d_ffn = 2·d_model``), GShard top-2 gating with capacity factor and
+auxiliary load-balancing loss. The expert compute runs through the L1
+Pallas grouped-FFN kernel (``kernels.moe_ffn.grouped_ffn``); gating is
+differentiable jnp, with the L1 ``top2_gate`` Pallas kernel exported
+separately for the Rust dispatcher.
+
+Everything here is AOT-lowered by ``aot.py`` to HLO text; Python never
+runs at training time.
+"""
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """Mirror of the Rust `config::ModelConfig` (kept in sync via the
+    manifest; Rust is the source of truth for Table 1 presets)."""
+
+    vocab: int = 8192
+    d_model: int = 512
+    seq_len: int = 256
+    layers: int = 4
+    experts: int = 16
+    n_heads: int = 8
+    top_k: int = 2
+    capacity_factor: float = 2.0
+    aux_weight: float = 1e-2
+
+    @property
+    def d_ffn(self) -> int:
+        return 2 * self.d_model
+
+    def capacity(self, tokens: int) -> int:
+        cap = int(self.capacity_factor * tokens * self.top_k / self.experts)
+        # round up to a multiple of 8 for kernel block alignment
+        return max(8, (cap + 7) // 8 * 8)
+
+
+TINY = ModelCfg(vocab=512, d_model=64, seq_len=32, layers=2, experts=8, n_heads=4)
+E2E_100M = ModelCfg(vocab=8192, d_model=512, seq_len=256, layers=4, experts=16, n_heads=8)
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ModelCfg, key: jax.Array) -> Dict[str, Any]:
+    """Initialize the parameter pytree. Layer params are stacked on a
+    leading L axis so the block loop is a `lax.scan` (small HLO)."""
+    k = jax.random.split(key, 12)
+    dm, dff, L, E = cfg.d_model, cfg.d_ffn, cfg.layers, cfg.experts
+    s = lambda key, shape, scale: (jax.random.normal(key, shape, jnp.float32) * scale)
+    return {
+        "embed": s(k[0], (cfg.vocab, dm), 0.02),
+        "pos": s(k[1], (cfg.seq_len, dm), 0.01),
+        "ln1_g": jnp.ones((L, dm)),
+        "ln1_b": jnp.zeros((L, dm)),
+        "qkv_w": s(k[2], (L, dm, 3 * dm), dm ** -0.5),
+        "qkv_b": jnp.zeros((L, 3 * dm)),
+        "proj_w": s(k[3], (L, dm, dm), dm ** -0.5),
+        "proj_b": jnp.zeros((L, dm)),
+        "ln2_g": jnp.ones((L, dm)),
+        "ln2_b": jnp.zeros((L, dm)),
+        "gate_w": s(k[4], (L, dm, E), dm ** -0.5),
+        "w1": s(k[5], (L, E, dm, dff), dm ** -0.5),
+        "b1": jnp.zeros((L, E, dff)),
+        "w2": s(k[6], (L, E, dff, dm), dff ** -0.5),
+        "b2": jnp.zeros((L, E, dm)),
+        "lnf_g": jnp.ones((dm,)),
+        "lnf_b": jnp.zeros((dm,)),
+    }
+
+
+def param_order(cfg: ModelCfg) -> List[str]:
+    """Canonical flattening order shared with the Rust runtime manifest."""
+    del cfg
+    return [
+        "embed", "pos", "ln1_g", "ln1_b", "qkv_w", "qkv_b", "proj_w",
+        "proj_b", "ln2_g", "ln2_b", "gate_w", "w1", "b1", "w2", "b2",
+        "lnf_g", "lnf_b",
+    ]
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def attention(x, lp, cfg: ModelCfg):
+    """Causal multi-head attention. x: [B, S, dm]."""
+    b, s, dm = x.shape
+    h = cfg.n_heads
+    hd = dm // h
+    qkv = x @ lp["qkv_w"] + lp["qkv_b"]  # [B, S, 3dm]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    scores = q @ k.transpose(0, 1, 3, 2) / jnp.sqrt(hd).astype(x.dtype)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask, scores, -1e9)
+    out = jax.nn.softmax(scores, axis=-1) @ v  # [B, H, S, hd]
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, dm)
+    return out @ lp["proj_w"] + lp["proj_b"]
+
+
+def moe_layer(x, lp, cfg: ModelCfg) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """GShard top-2 MoE layer over flattened tokens.
+
+    x: [T, dm] (tokens = B*S). Returns (y [T, dm], aux_loss, expert_load
+    fractions [E] — exported to the L3 load predictor)."""
+    t, dm = x.shape
+    e = cfg.experts
+    cap = cfg.capacity(t)
+
+    logits = x @ lp["gate_w"]  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-2 (differentiable formulation; the Pallas top2_gate kernel is the
+    # dispatcher-facing artifact and is ref-tested against this)
+    p1 = jnp.max(probs, axis=-1)
+    i1 = jnp.argmax(probs, axis=-1)
+    masked = probs - jax.nn.one_hot(i1, e) * 1e9
+    p2 = jnp.max(masked, axis=-1)
+    i2 = jnp.argmax(masked, axis=-1)
+    denom = p1 + p2
+    w1g, w2g = p1 / denom, p2 / denom
+
+    # capacity assignment: position of each token within its expert queue
+    oh1 = jax.nn.one_hot(i1, e, dtype=jnp.float32)  # [T, E]
+    oh2 = jax.nn.one_hot(i2, e, dtype=jnp.float32)
+    pos1 = (jnp.cumsum(oh1, axis=0) - 1.0) * oh1  # [T, E]
+    # second choices queue behind all first choices
+    pos2 = (jnp.cumsum(oh2, axis=0) - 1.0 + oh1.sum(0, keepdims=True)) * oh2
+    keep1 = (pos1 < cap) & (oh1 > 0)
+    keep2 = (pos2 < cap) & (oh2 > 0)
+
+    # dispatch/combine tensors [T, E, cap]
+    d1 = jax.nn.one_hot(pos1.sum(-1), cap) [:, None, :] * (keep1 * oh1)[:, :, None]
+    d2 = jax.nn.one_hot(pos2.sum(-1), cap)[:, None, :] * (keep2 * oh2)[:, :, None]
+    dispatch = d1 + d2
+    combine = d1 * w1g[:, None, None] + d2 * w2g[:, None, None]
+
+    expert_in = jnp.einsum("tec,td->ecd", dispatch, x)  # [E, cap, dm]
+    expert_out = moe_ffn.grouped_ffn(
+        expert_in, lp["w1"], lp["b1"], lp["w2"], lp["b2"]
+    )  # [E, cap, dm]
+    y = jnp.einsum("tec,ecd->td", combine, expert_out)
+
+    # GShard aux loss: E * mean_e(m_e * c_e)
+    me = probs.mean(0)                       # mean gate prob per expert
+    ce = oh1.mean(0)                         # fraction of tokens (1st choice)
+    aux = e * jnp.sum(me * ce)
+    load = (oh1.sum(0) + oh2.sum(0)) / (2.0 * t)
+    return y, aux, load
+
+
+def forward(params, tokens, cfg: ModelCfg):
+    """Full model: tokens [B, S] int32 -> logits [B, S, V].
+
+    Returns (logits, aux_total, loads [L, E])."""
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["pos"][None, :s, :]
+
+    def block(carry, lp):
+        x, aux = carry
+        h = layer_norm(x, lp["ln1_g"], lp["ln1_b"])
+        x = x + attention(h, lp, cfg)
+        h = layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+        hflat = h.reshape(b * s, cfg.d_model)
+        y, a, load = moe_layer(hflat, lp, cfg)
+        x = x + y.reshape(b, s, cfg.d_model)
+        return (x, aux + a), load
+
+    layer_params = {
+        k: params[k]
+        for k in [
+            "ln1_g", "ln1_b", "qkv_w", "qkv_b", "proj_w", "proj_b",
+            "ln2_g", "ln2_b", "gate_w", "w1", "b1", "w2", "b2",
+        ]
+    }
+    (x, aux), loads = jax.lax.scan(block, (x, 0.0), layer_params)
+    x = layer_norm(x, params["lnf_g"], params["lnf_b"])
+    logits = x @ params["embed"].T
+    return logits, aux, loads
+
+
+def loss_fn(params, tokens, targets, cfg: ModelCfg):
+    """Mean cross-entropy + aux loss. targets [B, S] int32."""
+    logits, aux, loads = forward(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+    return nll + cfg.aux_weight * aux, (nll, loads)
+
+
+# --------------------------------------------------------------------------
+# Adam (no optax in this environment — hand-rolled, matches Kingma & Ba)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamCfg:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.float32)}
+
+
+def adam_update(params, grads, state, cfg: AdamCfg):
+    t = state["t"] + 1.0
+    m = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1.0 - cfg.b1 ** t)
+    vhat_scale = 1.0 / (1.0 - cfg.b2 ** t)
+    new_params = jax.tree.map(
+        lambda p, m, v: p - cfg.lr * (m * mhat_scale) / (jnp.sqrt(v * vhat_scale) + cfg.eps),
+        params, m, v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train_step(params, opt_state, tokens, targets, cfg: ModelCfg, adam: AdamCfg):
+    """One full training step. Returns (loss, nll, loads, params', opt')."""
+    (loss, (nll, loads)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, tokens, targets, cfg
+    )
+    new_params, new_state = adam_update(params, grads, opt_state, adam)
+    return loss, nll, loads, new_params, new_state

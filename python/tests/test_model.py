@@ -1,0 +1,128 @@
+"""L2 model tests: shapes, gradient flow, loss descent, MoE invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = model.TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    tokens = jax.random.randint(k1, (2, CFG.seq_len), 0, CFG.vocab)
+    targets = jax.random.randint(k2, (2, CFG.seq_len), 0, CFG.vocab)
+    return tokens, targets
+
+
+class TestForward:
+    def test_logits_shape(self, params, batch):
+        tokens, _ = batch
+        logits, aux, loads = model.forward(params, tokens, CFG)
+        assert logits.shape == (2, CFG.seq_len, CFG.vocab)
+        assert loads.shape == (CFG.layers, CFG.experts)
+        assert float(aux) > 0.0
+
+    def test_loads_are_fractions(self, params, batch):
+        tokens, _ = batch
+        _, _, loads = model.forward(params, tokens, CFG)
+        # each layer's load sums to <= 1 (== 1 when no tokens dropped)
+        sums = np.asarray(loads.sum(-1))
+        assert (sums <= 1.0 + 1e-5).all()
+        assert (sums > 0.5).all()
+
+    def test_attention_is_causal(self, params):
+        # NOTE: the full model is NOT strictly causal across MoE routing —
+        # GShard second choices queue behind ALL first choices, so capacity
+        # competition is batch-global (faithful to the paper's gating). The
+        # attention path itself must be causal:
+        lp = {k: params[k][0] for k in [
+            "ln1_g", "ln1_b", "qkv_w", "qkv_b", "proj_w", "proj_b",
+            "ln2_g", "ln2_b", "gate_w", "w1", "b1", "w2", "b2"]}
+        x = jax.random.normal(jax.random.PRNGKey(4), (1, CFG.seq_len, CFG.d_model))
+        y1 = model.attention(x, lp, CFG)
+        x2 = x.at[0, -1].add(1.0)
+        y2 = model.attention(x2, lp, CFG)
+        np.testing.assert_allclose(
+            y1[0, : CFG.seq_len - 1], y2[0, : CFG.seq_len - 1], rtol=1e-4, atol=1e-5
+        )
+
+    def test_routing_competition_is_batch_global(self, params):
+        # documents the GShard property above: a future token CAN shift an
+        # earlier token's second-choice slot when capacity is contended.
+        tokens = jnp.zeros((1, CFG.seq_len), jnp.int32)
+        l1, _, _ = model.forward(params, tokens, CFG)
+        l2, _, _ = model.forward(params, tokens.at[0, -1].set(5), CFG)
+        assert l1.shape == l2.shape  # smoke: both run; equality not required
+
+
+class TestLossAndGrads:
+    def test_loss_finite_and_near_uniform_at_init(self, params, batch):
+        tokens, targets = batch
+        loss, (nll, _) = model.loss_fn(params, tokens, targets, CFG)
+        assert np.isfinite(float(loss))
+        # at random init, nll ≈ ln(vocab)
+        assert abs(float(nll) - np.log(CFG.vocab)) < 1.0
+
+    def test_grads_flow_to_all_params(self, params, batch):
+        tokens, targets = batch
+        grads = jax.grad(lambda p: model.loss_fn(p, tokens, targets, CFG)[0])(params)
+        for name, g in grads.items():
+            norm = float(jnp.abs(g).max())
+            assert np.isfinite(norm), name
+            assert norm > 0.0, f"no gradient reaches {name}"
+
+
+class TestAdam:
+    def test_matches_closed_form_single_step(self):
+        p = {"w": jnp.array([1.0, 2.0])}
+        g = {"w": jnp.array([0.5, -0.5])}
+        st = model.adam_init(p)
+        cfg = model.AdamCfg(lr=0.1)
+        new_p, new_st = model.adam_update(p, g, st, cfg)
+        # after one step: m_hat = g, v_hat = g^2 -> update = lr * sign-ish
+        expect = p["w"] - 0.1 * g["w"] / (jnp.abs(g["w"]) + 1e-8)
+        np.testing.assert_allclose(new_p["w"], expect, rtol=1e-5)
+        assert float(new_st["t"]) == 1.0
+
+    def test_train_step_decreases_loss(self, batch):
+        tokens, targets = batch
+        params = model.init_params(CFG, jax.random.PRNGKey(2))
+        opt = model.adam_init(params)
+        adam = model.AdamCfg(lr=3e-3)
+        step = jax.jit(
+            lambda p, o, tk, tg: model.train_step(p, o, tk, tg, CFG, adam)
+        )
+        loss0, *_ = step(params, opt, tokens, targets)
+        losses = [float(loss0)]
+        for _ in range(8):
+            loss, nll, loads, params, opt = step(params, opt, tokens, targets)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.5, f"no descent: {losses}"
+
+
+class TestCapacity:
+    def test_capacity_multiple_of_8(self):
+        assert CFG.capacity(64) % 8 == 0
+        assert model.E2E_100M.capacity(1024) % 8 == 0
+
+    def test_moe_layer_conserves_when_underloaded(self, params):
+        # tokens spread under capacity: every kept token contributes
+        lp = {k: params[k][0] for k in [
+            "ln1_g", "ln1_b", "qkv_w", "qkv_b", "proj_w", "proj_b",
+            "ln2_g", "ln2_b", "gate_w", "w1", "b1", "w2", "b2"]}
+        x = jax.random.normal(jax.random.PRNGKey(3), (32, CFG.d_model)) * 0.1
+        y, aux, load = model.moe_layer(x, lp, CFG)
+        assert y.shape == x.shape
+        assert float(load.sum()) <= 1.0 + 1e-6
+        assert np.isfinite(np.asarray(y)).all()

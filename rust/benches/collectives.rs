@@ -1,0 +1,66 @@
+//! Microbenchmarks of the sparse collectives: plan construction, cost
+//! evaluation, and real-buffer execution — the L3 hot path of every FSSDP
+//! iteration (perf pass target: plan+exec well under the per-layer budget).
+//!
+//! `cargo bench --bench collectives [-- --quick] [filter]`
+
+use hecate::bench::Bench;
+use hecate::collectives::exec::{run_spag, run_sprs, ClusterMem};
+use hecate::collectives::sparse::{build_spag, build_sprs};
+use hecate::placement::Placement;
+use hecate::topology::{DeviceId, Topology};
+use hecate::util::rng::Rng;
+
+fn materialized(pre: &Placement, extra: usize, seed: u64) -> Placement {
+    let mut rng = Rng::new(seed);
+    let mut post = pre.clone();
+    for _ in 0..extra {
+        post.add(rng.below(pre.num_chunks()), DeviceId(rng.below(pre.num_devices())));
+    }
+    post
+}
+
+fn main() {
+    let b = Bench::from_args();
+    b.section("sparse collective planning (64 experts, 32 devices)");
+    let topo = Topology::cluster_a(4, 8);
+    let pre = Placement::round_robin(64, 32);
+    let post = materialized(&pre, 96, 1);
+
+    b.run_val("spag_plan_build", || build_spag(&topo, &pre, &post).unwrap());
+    b.run_val("sprs_plan_build", || build_sprs(&topo, &post, &pre).unwrap());
+
+    let spag = build_spag(&topo, &pre, &post).unwrap();
+    b.run_val("spag_cost_eval", || spag.time(&topo, 4.7e6));
+
+    b.section("real-buffer execution (chunk = 16k floats)");
+    let chunk = 16_576;
+    let mut base = ClusterMem::new(32);
+    let mut rng = Rng::new(2);
+    for c in 0..64 {
+        let d = pre.holders(c).next().unwrap();
+        base.dev_mut(d).insert(c, (0..chunk).map(|_| rng.normal() as f32).collect());
+    }
+    b.run("spag_exec_64x16k", || {
+        let mut mem = base.clone();
+        run_spag(&mut mem, &spag).unwrap();
+    });
+
+    let sprs = build_sprs(&topo, &post, &pre).unwrap();
+    let mut full = base.clone();
+    run_spag(&mut full, &spag).unwrap();
+    b.run("sprs_exec_64x16k", || {
+        let mut mem = full.clone();
+        run_sprs(&mut mem, &sprs, &pre).unwrap();
+    });
+
+    b.section("dense cost models");
+    let devices: Vec<DeviceId> = topo.all_devices().collect();
+    b.run_val("allreduce_cost", || {
+        hecate::collectives::dense::allreduce_time(&topo, &devices, 1e8)
+    });
+    let matrix = vec![vec![1e5; 32]; 32];
+    b.run_val("alltoall_cost_32x32", || {
+        hecate::collectives::dense::alltoall_time(&topo, &matrix)
+    });
+}

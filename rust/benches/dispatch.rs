@@ -1,0 +1,37 @@
+//! Benchmarks of the topology-aware token dispatcher (§4.4): the per-layer
+//! per-iteration routing decision in the coordinator hot path.
+//!
+//! `cargo bench --bench dispatch [-- --quick] [filter]`
+
+use hecate::bench::Bench;
+use hecate::dispatch::dispatch;
+use hecate::placement::Placement;
+use hecate::topology::{DeviceId, Topology};
+use hecate::util::rng::Rng;
+
+fn main() {
+    let b = Bench::from_args();
+    let topo = Topology::cluster_a(4, 8);
+    let mut rng = Rng::new(1);
+
+    for (experts, tokens) in [(32usize, 4096usize), (64, 8192), (64, 16384)] {
+        let mut placement = Placement::round_robin(experts, 32);
+        for _ in 0..experts {
+            placement.add(rng.below(experts), DeviceId(rng.below(32)));
+        }
+        let f = rng.dirichlet(0.3, experts);
+        let asg: Vec<Vec<usize>> = (0..32)
+            .map(|_| f.iter().map(|p| (p * tokens as f64) as usize).collect())
+            .collect();
+        b.run_val(&format!("dispatch_e{experts}_t{tokens}"), || {
+            dispatch(&topo, &placement, &asg)
+        });
+    }
+
+    // fully-replicated worst case (most candidates per token)
+    let placement = Placement::full(64, 32);
+    let f = rng.dirichlet(0.3, 64);
+    let asg: Vec<Vec<usize>> =
+        (0..32).map(|_| f.iter().map(|p| (p * 8192.0) as usize).collect()).collect();
+    b.run_val("dispatch_full_replication", || dispatch(&topo, &placement, &asg));
+}

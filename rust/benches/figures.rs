@@ -1,0 +1,62 @@
+//! One bench target per paper table/figure: times the full simulation that
+//! regenerates each artifact AND prints the resulting rows (so `cargo
+//! bench --bench figures` doubles as the repro driver with timing).
+//!
+//! `cargo bench --bench figures [-- --quick] [fig09|fig10|fig11|fig12|fig13|fig14|fig15|claims|table1]`
+
+use hecate::bench::Bench;
+use hecate::config::ClusterPreset;
+use hecate::sim::engine::SimOptions;
+use hecate::sim::report;
+
+fn main() {
+    let mut b = Bench::from_args();
+    // each figure is a multi-second simulation sweep: keep sample counts
+    // small so `cargo bench` stays minutes, not hours, on small hosts.
+    b.samples = b.samples.min(3);
+    b.warmup = b.warmup.min(1);
+    b.min_sample_time = std::time::Duration::ZERO;
+    let opts = SimOptions { iterations: 30, warmup: 6, seed: 42, balanced_loads: false };
+
+    if let Some(r) = b.run_val("table1", report::table1) {
+        let _ = r;
+        print!("{}", report::table1().to_markdown());
+    }
+    if b.run_val("fig03_load_trace", || report::figure3(30)).is_some() {
+        // rows printed on demand via `hecate repro --figure 3`
+    }
+    if b.run_val("fig09_cluster_a_32gpu", || {
+        report::end_to_end(ClusterPreset::A, 4, 8, &opts)
+    })
+    .is_some()
+    {
+        print!("{}", report::end_to_end(ClusterPreset::A, 4, 8, &opts).to_markdown());
+    }
+    if b.run_val("fig10_cluster_b_32gpu", || report::figure10(&opts)).is_some() {
+        print!("{}", report::figure10(&opts).to_markdown());
+    }
+    if b.run_val("fig11_layerwise", || report::figure11(&opts)).is_some() {
+        print!("{}", report::figure11(&opts).to_markdown());
+    }
+    if b.run_val("fig12_breakdown", || report::figure12(&opts)).is_some() {
+        print!("{}", report::figure12(&opts).to_markdown());
+    }
+    if b.run_val("fig13_memory", || report::figure13(&opts)).is_some() {
+        print!("{}", report::figure13(&opts).to_markdown());
+    }
+    if b.run_val("fig14_batch_scaling", || report::figure14(&opts)).is_some() {
+        print!("{}", report::figure14(&opts).to_markdown());
+    }
+    if b.run_val("fig15a_ablation", || report::figure15a(&opts)).is_some() {
+        print!("{}", report::figure15a(&opts).to_markdown());
+    }
+    if b.run_val("fig15b_reshard_interval", || report::figure15b(&opts)).is_some() {
+        print!("{}", report::figure15b(&opts).to_markdown());
+    }
+    if b.run_val("claims_section1", || report::claims(&opts)).is_some() {
+        for (name, t) in report::claims(&opts) {
+            println!("-- {name} --");
+            print!("{}", t.to_markdown());
+        }
+    }
+}

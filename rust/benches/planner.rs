@@ -1,0 +1,67 @@
+//! Benchmarks of the placement planners: Algorithm 1 (sparse
+//! materialization), Algorithm 2 (heterogeneous sharding), and the load
+//! predictor. These run once per iteration (Alg 1) or per re-shard
+//! (Alg 2) in the coordinator; both must stay negligible next to a
+//! ~100 ms training iteration.
+//!
+//! `cargo bench --bench planner [-- --quick] [filter]`
+
+use hecate::bench::Bench;
+use hecate::loadsim::{LoadPredictor, ModelLoadTrace};
+use hecate::materialize::{sparse_materialize, MatConstraints};
+use hecate::placement::Placement;
+use hecate::sharding::heterogeneous;
+use hecate::topology::Topology;
+use hecate::util::rng::Rng;
+
+fn main() {
+    let b = Bench::from_args();
+    let topo = Topology::cluster_a(4, 8);
+    let mut rng = Rng::new(1);
+
+    b.section("Algorithm 1: sparse materialization (64 experts, 32 devices)");
+    let shards = Placement::round_robin(64, 32);
+    let loads = rng.dirichlet(0.2, 64);
+    for (t, m) in [(4, 8), (16, 4), (32, 2)] {
+        b.run_val(&format!("alg1_t{t}_m{m}"), || {
+            sparse_materialize(
+                &topo,
+                &shards,
+                &loads,
+                MatConstraints { overlap_degree: t, mem_slots: m },
+            )
+        });
+    }
+
+    b.section("Algorithm 2: heterogeneous sharding (12 layers x 64 experts)");
+    let all_loads: Vec<Vec<f64>> = (0..12).map(|_| rng.dirichlet(0.2, 64)).collect();
+    for t in [8usize, 16] {
+        b.run_val(&format!("alg2_12x64_t{t}"), || heterogeneous(&topo, &all_loads, t));
+    }
+    let deep: Vec<Vec<f64>> = (0..24).map(|_| rng.dirichlet(0.2, 64)).collect();
+    b.run_val("alg2_24x64_t8", || heterogeneous(&topo, &deep, 8));
+
+    b.section("full simulator iteration (gpt-moe-s, 32 devices)");
+    {
+        use hecate::config::{ClusterPreset, ModelConfig, SystemConfig, SystemKind, TrainConfig};
+        use hecate::sim::engine::{simulate, SimOptions};
+        let topo = ClusterPreset::A.build(4, 8);
+        let model = ModelConfig::preset("gpt-moe-s").unwrap();
+        let train = TrainConfig { batch_per_device: 4, ..Default::default() };
+        let opts = SimOptions { iterations: 10, warmup: 2, seed: 3, balanced_loads: false };
+        for kind in [SystemKind::Ep, SystemKind::Hecate, SystemKind::FlexMoe] {
+            b.run_val(&format!("simulate_10it_{}", kind.name()), || {
+                simulate(&topo, &model, &SystemConfig::new(kind), &train, &opts)
+            });
+        }
+    }
+
+    b.section("load prediction");
+    let mut predictor = LoadPredictor::new(64, 5);
+    let mut trace = ModelLoadTrace::new(1, 64, 3);
+    for _ in 0..5 {
+        predictor.observe(&trace.step()[0]);
+    }
+    b.run_val("predictor_predict_64", || predictor.predict());
+    b.run_val("loadgen_step_64", || trace.step());
+}

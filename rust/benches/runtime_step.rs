@@ -1,0 +1,66 @@
+//! End-to-end runtime benchmarks: PJRT executable invocation latency (the
+//! L3↔L2 boundary) and one full numeric-FSSDP engine iteration. Skipped
+//! gracefully when `artifacts/` is absent.
+//!
+//! `cargo bench --bench runtime_step [-- --quick] [filter]`
+
+use hecate::bench::Bench;
+use hecate::fssdp::FssdpEngine;
+use hecate::runtime::{HostTensor, Runtime};
+use hecate::topology::Topology;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first; skipping");
+        return;
+    }
+    let b = Bench::from_args();
+
+    b.section("PJRT executable invocation");
+    let mut rt = Runtime::open("artifacts").unwrap();
+    let gate = rt.entry("gate_fwd").unwrap().clone();
+    let (t, dm) = (gate.inputs[0].shape[0], gate.inputs[0].shape[1]);
+    let experts = gate.inputs[1].shape[1];
+    let x = HostTensor::f32(vec![t, dm], vec![0.1; t * dm]);
+    let wg = HostTensor::f32(vec![dm, experts], vec![0.05; dm * experts]);
+    b.run_val("gate_fwd_hlo", || rt.execute("gate_fwd", &[x.clone(), wg.clone()]).unwrap());
+
+    let ffn = rt.entry("expert_ffn_fwd").unwrap().clone();
+    let (cap, dff) = (ffn.inputs[0].shape[0], ffn.inputs[1].shape[1]);
+    let args = vec![
+        HostTensor::f32(vec![cap, dm], vec![0.1; cap * dm]),
+        HostTensor::f32(vec![dm, dff], vec![0.02; dm * dff]),
+        HostTensor::f32(vec![dff], vec![0.0; dff]),
+        HostTensor::f32(vec![dff, dm], vec![0.02; dff * dm]),
+        HostTensor::f32(vec![dm], vec![0.0; dm]),
+    ];
+    b.run_val("expert_ffn_fwd_hlo", || rt.execute("expert_ffn_fwd", &args).unwrap());
+    let mut bwd_args = args.clone();
+    bwd_args.push(HostTensor::f32(vec![cap, dm], vec![0.01; cap * dm]));
+    b.run_val("expert_ffn_bwd_hlo", || rt.execute("expert_ffn_bwd", &bwd_args).unwrap());
+
+    b.section("numeric FSSDP engine");
+    let mut engine = FssdpEngine::new("artifacts", Topology::cluster_a(2, 4), 5).unwrap();
+    let mut iter = 0u64;
+    b.run("fssdp_full_iteration_8dev", || {
+        engine.step(iter, 8).unwrap();
+        iter += 1;
+    });
+
+    b.section("tiny train step (full model fwd+bwd+Adam)");
+    let mut state = rt
+        .execute("tiny_init", &[HostTensor::scalar_i32(0)])
+        .unwrap();
+    let step_entry = rt.entry("tiny_train_step").unwrap().clone();
+    let batch = step_entry.extra_usize("batch").unwrap_or(2);
+    let seq = step_entry.inputs[step_entry.inputs.len() - 2].shape[1];
+    let tokens = HostTensor::i32(vec![batch, seq], vec![1; batch * seq]);
+    let targets = HostTensor::i32(vec![batch, seq], vec![2; batch * seq]);
+    b.run("tiny_train_step_hlo", || {
+        let mut inputs = state.clone();
+        inputs.push(tokens.clone());
+        inputs.push(targets.clone());
+        let out = rt.execute("tiny_train_step", &inputs).unwrap();
+        state = out[3..].to_vec();
+    });
+}

@@ -1,0 +1,190 @@
+//! Criterion-style benchmark harness (the registry snapshot has no
+//! `criterion`). Bench targets are declared with `harness = false` in
+//! `Cargo.toml` and drive this module directly.
+//!
+//! Measurement protocol: warmup runs, then `samples` timed batches; reports
+//! median ± MAD and throughput. `--bench <filter>` (forwarded by
+//! `cargo bench -- <filter>`) selects benchmarks by substring; `--quick`
+//! cuts sample counts for smoke runs.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// Harness configuration, parsed from argv by [`Bench::from_args`].
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub filter: Option<String>,
+    pub warmup: usize,
+    pub samples: usize,
+    /// Minimum wall time a sample batch should take; iterations auto-scale.
+    pub min_sample_time: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            filter: None,
+            warmup: 3,
+            samples: 15,
+            min_sample_time: Duration::from_millis(20),
+        }
+    }
+}
+
+/// One benchmark result, also returned for programmatic use in reports.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median: Duration,
+    pub mad: Duration,
+    pub iters_per_sample: u64,
+}
+
+impl Bench {
+    /// Parse `cargo bench` forwarded args. Unknown flags are ignored so
+    /// `cargo bench -- --quick fig09` works.
+    pub fn from_args() -> Bench {
+        let mut b = Bench::default();
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        let mut i = 0;
+        while i < args.len() {
+            match args[i].as_str() {
+                "--quick" => {
+                    b.warmup = 1;
+                    b.samples = 5;
+                    b.min_sample_time = Duration::from_millis(5);
+                }
+                "--samples" if i + 1 < args.len() => {
+                    b.samples = args[i + 1].parse().unwrap_or(b.samples);
+                    i += 1;
+                }
+                "--bench" | "--exact" => {} // cargo-internal flags
+                s if !s.starts_with("--") => b.filter = Some(s.to_string()),
+                _ => {}
+            }
+            i += 1;
+        }
+        b
+    }
+
+    fn selected(&self, name: &str) -> bool {
+        match &self.filter {
+            None => true,
+            Some(f) => name.contains(f.as_str()),
+        }
+    }
+
+    /// Time `f`, auto-scaling the iteration count per sample so each sample
+    /// batch takes at least `min_sample_time`.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Option<BenchResult> {
+        if !self.selected(name) {
+            return None;
+        }
+        // Calibrate iterations per sample.
+        let mut iters: u64 = 1;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let elapsed = t0.elapsed();
+            if elapsed >= self.min_sample_time || iters >= 1 << 24 {
+                break;
+            }
+            let scale = (self.min_sample_time.as_secs_f64() / elapsed.as_secs_f64().max(1e-9))
+                .ceil()
+                .max(2.0);
+            iters = (iters as f64 * scale).min((1u64 << 24) as f64) as u64;
+        }
+        for _ in 0..self.warmup {
+            for _ in 0..iters {
+                f();
+            }
+        }
+        let mut per_iter = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            per_iter.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        let med = stats::median(&per_iter);
+        let mad = stats::mad(&per_iter);
+        let result = BenchResult {
+            name: name.to_string(),
+            median: Duration::from_secs_f64(med),
+            mad: Duration::from_secs_f64(mad),
+            iters_per_sample: iters,
+        };
+        println!(
+            "{:<52} {:>12} ± {:>10}  ({} iters/sample, {} samples)",
+            result.name,
+            fmt_duration(result.median),
+            fmt_duration(result.mad),
+            iters,
+            self.samples
+        );
+        Some(result)
+    }
+
+    /// Convenience: benchmark a function returning a value (black-boxed).
+    pub fn run_val<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Option<BenchResult> {
+        self.run(name, || {
+            black_box(f());
+        })
+    }
+
+    /// Print a section header (skipped entirely if the filter excludes it).
+    pub fn section(&self, title: &str) {
+        println!("\n== {title} ==");
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bench {
+            filter: None,
+            warmup: 1,
+            samples: 3,
+            min_sample_time: Duration::from_micros(100),
+        };
+        let r = b.run("noop", || {}).unwrap();
+        assert!(r.iters_per_sample >= 1);
+        assert!(r.median.as_secs_f64() < 1.0);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let b = Bench { filter: Some("match".into()), ..Bench::default() };
+        assert!(b.run("other", || {}).is_none());
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with(" s"));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with(" ms"));
+        assert!(fmt_duration(Duration::from_micros(5)).ends_with(" µs"));
+        assert!(fmt_duration(Duration::from_nanos(5)).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,211 @@
+//! α–β cost models for the classical collectives.
+//!
+//! These drive the baseline systems in the simulator and the paper's §3.1
+//! comparison: ring AllGather/ReduceScatter move `(D-1)/D · S` per device,
+//! AllReduce twice that; All-to-All is bottlenecked by the most-loaded
+//! device row/column of the transfer matrix, with inter-node rows sharing
+//! each node's NIC.
+
+use crate::topology::{DeviceId, Topology};
+
+/// Time of a ring AllGather of a buffer of `bytes` total across the group
+/// `devices` (each device starts with `bytes / D` and ends with all of it).
+pub fn allgather_time(topo: &Topology, devices: &[DeviceId], bytes: f64) -> f64 {
+    ring_time(topo, devices, bytes)
+}
+
+/// Time of a ring ReduceScatter (same volume profile as AllGather).
+pub fn reducescatter_time(topo: &Topology, devices: &[DeviceId], bytes: f64) -> f64 {
+    ring_time(topo, devices, bytes)
+}
+
+/// Time of a ring AllReduce (= ReduceScatter + AllGather).
+pub fn allreduce_time(topo: &Topology, devices: &[DeviceId], bytes: f64) -> f64 {
+    2.0 * ring_time(topo, devices, bytes)
+}
+
+/// Ring collective: `D-1` steps, each moving `bytes/D` along the slowest
+/// link in the ring.
+fn ring_time(topo: &Topology, devices: &[DeviceId], bytes: f64) -> f64 {
+    let d = devices.len();
+    if d <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    // Slowest hop in the natural ring order.
+    let mut worst_bw = f64::INFINITY;
+    let mut worst_lat: f64 = 0.0;
+    for i in 0..d {
+        let a = devices[i];
+        let b = devices[(i + 1) % d];
+        worst_bw = worst_bw.min(topo.bw(a, b));
+        worst_lat = worst_lat.max(topo.lat(a, b));
+    }
+    let steps = (d - 1) as f64;
+    let chunk = bytes / d as f64;
+    steps * (worst_lat + chunk / worst_bw)
+}
+
+/// Time of a broadcast of `bytes` from `root` to `dsts` (tree within a node,
+/// one cross-node hop per destination node).
+pub fn broadcast_time(topo: &Topology, root: DeviceId, dsts: &[DeviceId], bytes: f64) -> f64 {
+    if dsts.is_empty() || bytes <= 0.0 {
+        return 0.0;
+    }
+    let cross_nodes = dsts
+        .iter()
+        .filter(|&&d| !topo.same_node(root, d))
+        .map(|&d| topo.node_of(d))
+        .collect::<std::collections::BTreeSet<_>>()
+        .len();
+    let intra = dsts.iter().any(|&d| topo.same_node(root, d) && d != root);
+    // Root serializes cross-node sends over its NIC; intra-node forwarding
+    // proceeds in parallel afterwards (pipelined tree — one extra hop).
+    let mut t = cross_nodes as f64 * (topo.inter_lat + bytes / topo.inter_bw);
+    if intra || cross_nodes > 0 {
+        t += topo.intra_lat + bytes / topo.intra_bw;
+    }
+    t
+}
+
+/// Time of an All-to-All described by a transfer matrix:
+/// `matrix[s][d]` = bytes sent from global device `s` to `d`.
+///
+/// The bottleneck analysis matches §1/§5.3: each device's outbound and
+/// inbound bytes are split into intra-node traffic (NVLink) and inter-node
+/// traffic; inter-node bytes from all devices of a node share that node's
+/// NIC. The All-to-All finishes when the slowest port finishes.
+pub fn alltoall_time(topo: &Topology, matrix: &[Vec<f64>]) -> f64 {
+    let n = topo.num_devices();
+    assert_eq!(matrix.len(), n, "matrix rows must equal device count");
+    let mut dev_intra_out = vec![0.0f64; n];
+    let mut dev_intra_in = vec![0.0f64; n];
+    let mut node_inter_out = vec![0.0f64; topo.nodes];
+    let mut node_inter_in = vec![0.0f64; topo.nodes];
+
+    for s in 0..n {
+        assert_eq!(matrix[s].len(), n);
+        for d in 0..n {
+            if s == d {
+                continue;
+            }
+            let bytes = matrix[s][d];
+            if bytes <= 0.0 {
+                continue;
+            }
+            let (sd, dd) = (DeviceId(s), DeviceId(d));
+            if topo.same_node(sd, dd) {
+                dev_intra_out[s] += bytes;
+                dev_intra_in[d] += bytes;
+            } else {
+                node_inter_out[topo.node_of(sd).0] += bytes;
+                node_inter_in[topo.node_of(dd).0] += bytes;
+            }
+        }
+    }
+
+    let intra = dev_intra_out
+        .iter()
+        .chain(dev_intra_in.iter())
+        .cloned()
+        .fold(0.0, f64::max)
+        / topo.intra_bw;
+    let inter = node_inter_out
+        .iter()
+        .chain(node_inter_in.iter())
+        .cloned()
+        .fold(0.0, f64::max)
+        / topo.inter_bw;
+    let any_inter = node_inter_out.iter().any(|&b| b > 0.0);
+    let any_intra = dev_intra_out.iter().any(|&b| b > 0.0);
+    let lat = if any_inter { topo.inter_lat } else { 0.0 }
+        + if any_intra { topo.intra_lat } else { 0.0 };
+    intra.max(inter) + lat
+}
+
+/// Build the All-to-All matrix for token dispatch: `sends[s][d]` tokens of
+/// `token_bytes` each, from the dispatch plan.
+pub fn tokens_to_matrix(sends: &[Vec<usize>], token_bytes: f64) -> Vec<Vec<f64>> {
+    sends
+        .iter()
+        .map(|row| row.iter().map(|&t| t as f64 * token_bytes).collect())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat4() -> (Topology, Vec<DeviceId>) {
+        let t = Topology::flat(4, 1e9);
+        let d: Vec<DeviceId> = t.all_devices().collect();
+        (t, d)
+    }
+
+    #[test]
+    fn allreduce_is_twice_reducescatter() {
+        let (t, d) = flat4();
+        let rs = reducescatter_time(&t, &d, 4e6);
+        let ar = allreduce_time(&t, &d, 4e6);
+        assert!((ar - 2.0 * rs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_volume_matches_closed_form() {
+        let (t, d) = flat4();
+        // (D-1)/D * S / bw  (+ (D-1) α)
+        let s = 4e6;
+        let expected = 3.0 * (1e-6 + (s / 4.0) / 1e9);
+        assert!((ring_time(&t, &d, s) - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trivial_groups_are_free() {
+        let (t, d) = flat4();
+        assert_eq!(allreduce_time(&t, &d[..1], 1e6), 0.0);
+        assert_eq!(allgather_time(&t, &d, 0.0), 0.0);
+    }
+
+    #[test]
+    fn broadcast_cross_node_serializes_on_nic() {
+        let t = Topology::cluster_a(4, 8);
+        let root = DeviceId(0);
+        // one destination per remote node
+        let dsts = vec![DeviceId(8), DeviceId(16), DeviceId(24)];
+        let one = broadcast_time(&t, root, &dsts[..1], 1e6);
+        let three = broadcast_time(&t, root, &dsts, 1e6);
+        assert!(three > 2.5 * (one - (t.intra_lat + 1e6 / t.intra_bw)));
+    }
+
+    #[test]
+    fn alltoall_balanced_vs_skewed() {
+        let t = Topology::cluster_a(2, 2);
+        let n = t.num_devices();
+        let balanced = vec![vec![1e6; n]; n];
+        let mut skewed = vec![vec![0.0; n]; n];
+        // everyone sends everything to device 3 (on node 1)
+        for s in 0..n {
+            skewed[s][3] = 3e6;
+        }
+        let tb = alltoall_time(&t, &balanced);
+        let ts = alltoall_time(&t, &skewed);
+        assert!(ts > tb, "skewed {ts} should exceed balanced {tb}");
+    }
+
+    #[test]
+    fn alltoall_internode_slower_than_intranode() {
+        let t = Topology::cluster_a(2, 2);
+        let n = t.num_devices();
+        let mut intra = vec![vec![0.0; n]; n];
+        intra[0][1] = 1e7; // same node
+        let mut inter = vec![vec![0.0; n]; n];
+        inter[0][2] = 1e7; // cross node
+        assert!(alltoall_time(&t, &inter) > alltoall_time(&t, &intra));
+    }
+
+    #[test]
+    fn tokens_matrix_scaling() {
+        let m = tokens_to_matrix(&[vec![0, 2], vec![1, 0]], 4.0);
+        assert_eq!(m[0][1], 8.0);
+        assert_eq!(m[1][0], 4.0);
+    }
+}

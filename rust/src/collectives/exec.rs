@@ -1,0 +1,339 @@
+//! Real-buffer execution of sparse collective plans.
+//!
+//! The numeric FSSDP engine runs N simulated devices inside one process,
+//! each owning a [`ChunkStore`] of host `f32` buffers (one buffer per
+//! expert). [`run_spag`] and [`run_sprs`] apply a compiled [`SparsePlan`]
+//! to those stores, byte-for-byte the traffic the plan describes — this is
+//! what the equivalence tests (sparse ≡ dense AllReduce on replicas) and
+//! the end-to-end FSSDP training numerics run on.
+
+use std::collections::BTreeMap;
+
+use crate::placement::{ChunkId, Placement};
+use crate::topology::DeviceId;
+
+use super::sparse::SparsePlan;
+
+/// Per-device chunk buffers.
+#[derive(Debug, Clone, Default)]
+pub struct ChunkStore {
+    bufs: BTreeMap<ChunkId, Vec<f32>>,
+}
+
+impl ChunkStore {
+    pub fn new() -> ChunkStore {
+        ChunkStore::default()
+    }
+
+    pub fn insert(&mut self, c: ChunkId, data: Vec<f32>) {
+        self.bufs.insert(c, data);
+    }
+
+    pub fn get(&self, c: ChunkId) -> Option<&Vec<f32>> {
+        self.bufs.get(&c)
+    }
+
+    pub fn get_mut(&mut self, c: ChunkId) -> Option<&mut Vec<f32>> {
+        self.bufs.get_mut(&c)
+    }
+
+    pub fn remove(&mut self, c: ChunkId) -> Option<Vec<f32>> {
+        self.bufs.remove(&c)
+    }
+
+    pub fn contains(&self, c: ChunkId) -> bool {
+        self.bufs.contains_key(&c)
+    }
+
+    pub fn chunks(&self) -> impl Iterator<Item = ChunkId> + '_ {
+        self.bufs.keys().copied()
+    }
+
+    /// Total floats resident (for memory accounting).
+    pub fn resident_len(&self) -> usize {
+        self.bufs.values().map(|b| b.len()).sum()
+    }
+}
+
+/// The cluster's device memories for one logical buffer (e.g. one MoE
+/// layer's expert parameters, or their gradients).
+#[derive(Debug, Clone, Default)]
+pub struct ClusterMem {
+    pub devices: Vec<ChunkStore>,
+}
+
+impl ClusterMem {
+    pub fn new(num_devices: usize) -> ClusterMem {
+        ClusterMem { devices: vec![ChunkStore::new(); num_devices] }
+    }
+
+    pub fn dev(&self, d: DeviceId) -> &ChunkStore {
+        &self.devices[d.0]
+    }
+
+    pub fn dev_mut(&mut self, d: DeviceId) -> &mut ChunkStore {
+        &mut self.devices[d.0]
+    }
+
+    /// The placement implied by which buffers are resident.
+    pub fn placement(&self, num_chunks: usize) -> Placement {
+        let mut p = Placement::empty(num_chunks, self.devices.len());
+        for (d, store) in self.devices.iter().enumerate() {
+            for c in store.chunks() {
+                p.add(c, DeviceId(d));
+            }
+        }
+        p
+    }
+
+    /// Bytes resident across all devices (f32 buffers).
+    pub fn total_bytes(&self) -> usize {
+        self.devices.iter().map(|s| s.resident_len() * 4).sum()
+    }
+}
+
+/// Execute a SparseAllGather plan: copy chunk buffers along the staged
+/// transfers. Errors if a source buffer is missing (plan/state mismatch).
+pub fn run_spag(mem: &mut ClusterMem, plan: &SparsePlan) -> anyhow::Result<()> {
+    for stage in 0..plan.num_stages {
+        // Collect the payloads first so intra-stage transfers all read the
+        // pre-stage state (stages are the dependency barrier).
+        let mut payloads: Vec<(ChunkId, DeviceId, Vec<f32>)> = Vec::new();
+        for t in plan.transfers.iter().filter(|t| t.stage == stage) {
+            anyhow::ensure!(!t.reduce, "spAG plan must not contain reduce transfers");
+            let buf = mem
+                .dev(t.src)
+                .get(t.chunk)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("spAG: device {} lacks chunk {}", t.src.0, t.chunk)
+                })?
+                .clone();
+            payloads.push((t.chunk, t.dst, buf));
+        }
+        for (chunk, dst, buf) in payloads {
+            mem.dev_mut(dst).insert(chunk, buf);
+        }
+    }
+    Ok(())
+}
+
+/// Execute a SparseReduceScatter plan: accumulate gradient buffers along the
+/// staged transfers, then drop non-owner replicas (the "scatter").
+///
+/// `owners` is the post-condition placement; after the call only owner
+/// devices retain each chunk, holding the sum of all replicas.
+pub fn run_sprs(
+    mem: &mut ClusterMem,
+    plan: &SparsePlan,
+    owners: &Placement,
+) -> anyhow::Result<()> {
+    for stage in 0..plan.num_stages {
+        let mut payloads: Vec<(ChunkId, DeviceId, bool, Vec<f32>)> = Vec::new();
+        for t in plan.transfers.iter().filter(|t| t.stage == stage) {
+            let buf = mem
+                .dev(t.src)
+                .get(t.chunk)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("spRS: device {} lacks chunk {}", t.src.0, t.chunk)
+                })?
+                .clone();
+            payloads.push((t.chunk, t.dst, t.reduce, buf));
+        }
+        for (chunk, dst, reduce, buf) in payloads {
+            let store = mem.dev_mut(dst);
+            match (reduce, store.get_mut(chunk)) {
+                (true, Some(acc)) => {
+                    anyhow::ensure!(acc.len() == buf.len(), "chunk size mismatch");
+                    for (a, b) in acc.iter_mut().zip(buf.iter()) {
+                        *a += b;
+                    }
+                }
+                (true, None) => anyhow::bail!(
+                    "spRS: reduce destination {} lacks chunk {}",
+                    dst.0,
+                    chunk
+                ),
+                (false, _) => store.insert(chunk, buf),
+            }
+        }
+    }
+    // Scatter: release replicas not owned per the post-condition.
+    for d in 0..mem.devices.len() {
+        let dev = DeviceId(d);
+        let resident: Vec<ChunkId> = mem.dev(dev).chunks().collect();
+        for c in resident {
+            if !owners.contains(c, dev) {
+                mem.dev_mut(dev).remove(c);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Reference implementation: dense AllReduce of each chunk across its
+/// replica group (what rearrangement systems do, §3.1 "Comparison with
+/// Rearrangement"). Every replica ends with the sum.
+pub fn run_dense_allreduce(mem: &mut ClusterMem, placement: &Placement) -> anyhow::Result<()> {
+    for c in 0..placement.num_chunks() {
+        let holders: Vec<DeviceId> = placement.holders(c).collect();
+        if holders.len() <= 1 {
+            continue;
+        }
+        let mut sum: Option<Vec<f32>> = None;
+        for &h in &holders {
+            let buf = mem
+                .dev(h)
+                .get(c)
+                .ok_or_else(|| anyhow::anyhow!("allreduce: missing chunk {c} on {}", h.0))?;
+            match &mut sum {
+                None => sum = Some(buf.clone()),
+                Some(s) => {
+                    for (a, b) in s.iter_mut().zip(buf.iter()) {
+                        *a += b;
+                    }
+                }
+            }
+        }
+        let sum = sum.unwrap();
+        for &h in &holders {
+            mem.dev_mut(h).insert(c, sum.clone());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::sparse::{build_spag, build_sprs};
+    use crate::testing::{self, assert_allclose};
+    use crate::topology::Topology;
+    use crate::util::rng::Rng;
+
+    fn fill(mem: &mut ClusterMem, p: &Placement, len: usize, rng: &mut Rng) {
+        for c in 0..p.num_chunks() {
+            for d in p.holders(c) {
+                let buf: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+                mem.dev_mut(d).insert(c, buf);
+            }
+        }
+    }
+
+    #[test]
+    fn spag_materializes_identical_copies() {
+        let t = Topology::cluster_a(2, 4);
+        let pre = Placement::round_robin(8, 8);
+        let mut post = pre.clone();
+        post.add(0, DeviceId(5));
+        post.add(0, DeviceId(6));
+        post.add(3, DeviceId(0));
+        let plan = build_spag(&t, &pre, &post).unwrap();
+
+        let mut mem = ClusterMem::new(8);
+        let mut rng = Rng::new(1);
+        fill(&mut mem, &pre, 16, &mut rng);
+        let owner_buf = mem.dev(DeviceId(0)).get(0).unwrap().clone();
+
+        run_spag(&mut mem, &plan).unwrap();
+        assert_eq!(mem.placement(8), post);
+        assert_allclose(mem.dev(DeviceId(5)).get(0).unwrap(), &owner_buf, 0.0, 0.0);
+        assert_allclose(mem.dev(DeviceId(6)).get(0).unwrap(), &owner_buf, 0.0, 0.0);
+    }
+
+    #[test]
+    fn sprs_matches_dense_allreduce() {
+        // The paper's key equivalence: spRS(P', P) leaves the owner with the
+        // same sum AllReduce would give every replica.
+        let t = Topology::cluster_a(2, 4);
+        let owners = Placement::round_robin(8, 8);
+        let mut materialized = owners.clone();
+        let mut rng = Rng::new(2);
+        for _ in 0..12 {
+            materialized.add(rng.below(8), DeviceId(rng.below(8)));
+        }
+        let mut grads = ClusterMem::new(8);
+        fill(&mut grads, &materialized, 32, &mut rng);
+        let mut reference = grads.clone();
+
+        let plan = build_sprs(&t, &materialized, &owners).unwrap();
+        run_sprs(&mut grads, &plan, &owners).unwrap();
+        run_dense_allreduce(&mut reference, &materialized).unwrap();
+
+        for c in 0..8 {
+            let owner = owners.holders(c).next().unwrap();
+            let got = grads.dev(owner).get(c).unwrap();
+            let want = reference.dev(owner).get(c).unwrap();
+            assert_allclose(got, want, 1e-5, 1e-5);
+        }
+        // non-owners released
+        assert_eq!(grads.placement(8), owners);
+    }
+
+    #[test]
+    fn prop_spag_then_sprs_roundtrip_scales_by_replication() {
+        // Materialize with spAG (copies), backprop identical grads on every
+        // replica, reduce with spRS: owner grad == replication × original.
+        testing::check(
+            |rng: &mut Rng, size| {
+                let nodes = 1 + rng.below(3);
+                let dpn = 1 + rng.below(3);
+                let t = Topology::cluster_a(nodes, dpn);
+                let nd = t.num_devices();
+                let chunks = 1 + rng.below(size.max(1) * 2);
+                let pre = Placement::round_robin(chunks, nd);
+                let mut post = pre.clone();
+                for _ in 0..rng.below(chunks * 2 + 1) {
+                    post.add(rng.below(chunks), DeviceId(rng.below(nd)));
+                }
+                let seed = rng.next_u64();
+                (t, pre, post, seed)
+            },
+            |(t, pre, post, seed)| {
+                let mut rng = Rng::new(*seed);
+                let mut mem = ClusterMem::new(t.num_devices());
+                fill(&mut mem, pre, 8, &mut rng);
+                let originals: Vec<Vec<f32>> = (0..pre.num_chunks())
+                    .map(|c| {
+                        let d = pre.holders(c).next().unwrap();
+                        mem.dev(d).get(c).unwrap().clone()
+                    })
+                    .collect();
+                let ag = build_spag(t, pre, post).map_err(|e| e.to_string())?;
+                run_spag(&mut mem, &ag).map_err(|e| e.to_string())?;
+                let rs = build_sprs(t, post, pre).map_err(|e| e.to_string())?;
+                run_sprs(&mut mem, &rs, pre).map_err(|e| e.to_string())?;
+                for c in 0..pre.num_chunks() {
+                    let owner = pre.holders(c).next().unwrap();
+                    let got = mem.dev(owner).get(c).ok_or("owner lost chunk")?;
+                    let k = post.replication(c) as f32;
+                    for (g, o) in got.iter().zip(originals[c].iter()) {
+                        let want = k * o;
+                        if (g - want).abs() > 1e-4 * want.abs().max(1.0) {
+                            return Err(format!("chunk {c}: got {g}, want {want} (k={k})"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn spag_missing_source_errors() {
+        let t = Topology::flat(2, 1e9);
+        let pre = Placement::round_robin(2, 2);
+        let mut post = pre.clone();
+        post.add(0, DeviceId(1));
+        let plan = build_spag(&t, &pre, &post).unwrap();
+        let mut mem = ClusterMem::new(2); // buffers never filled
+        assert!(run_spag(&mut mem, &plan).is_err());
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let mut mem = ClusterMem::new(2);
+        mem.dev_mut(DeviceId(0)).insert(0, vec![0.0; 100]);
+        mem.dev_mut(DeviceId(1)).insert(1, vec![0.0; 50]);
+        assert_eq!(mem.total_bytes(), 600);
+    }
+}

@@ -1,0 +1,17 @@
+//! Communication collectives for FSSDP.
+//!
+//! * [`dense`] — α–β cost models of the classical collectives (AllGather,
+//!   ReduceScatter, AllReduce, All-to-All, Broadcast) used by the baselines
+//!   and by the paper's §3.1 comparisons.
+//! * [`sparse`] — the paper's two novel collectives, `SparseAllGather`
+//!   (spAG) and `SparseReduceScatter` (spRS): topology-aware transfer-plan
+//!   construction and the bottleneck cost model of Equation 1.
+//! * [`exec`] — executes sparse-collective plans on real host buffers across
+//!   in-process simulated devices; powers the numeric FSSDP engine and the
+//!   equivalence tests against dense AllReduce.
+
+pub mod dense;
+pub mod exec;
+pub mod sparse;
+
+pub use sparse::{SparsePlan, Transfer};

@@ -1,0 +1,427 @@
+//! The paper's two sparse collectives (§3.1): **SparseAllGather** and
+//! **SparseReduceScatter**.
+//!
+//! Both are described by a pair of chunk placements `(pre, post)` and
+//! compile to a [`SparsePlan`] — a staged list of point-to-point
+//! [`Transfer`]s (the prototype in the paper schedules these as grouped
+//! NCCL Broadcast/Reduce calls; p2p sends are the same traffic).
+//!
+//! Plans are built **topology-aware and hierarchical**: a chunk crosses any
+//! node boundary at most once per destination node (stage 0), then fans out
+//! intra-node (stage 1). For spRS the stages run in the opposite direction:
+//! intra-node partial reduction first, then one cross-node transfer per
+//! contributing node, summed at the owner.
+//!
+//! The cost model implements the bottleneck analysis of Equation 1:
+//! `Vol(spAG(P,P')) = Vol(spRS(P',P)) = O(λS)`, with per-device intra-node
+//! ports and per-node NICs as the contended resources.
+
+use std::collections::BTreeMap;
+
+use crate::placement::{validate_spag, validate_sprs, ChunkId, Placement};
+use crate::topology::{DeviceId, Topology};
+
+/// One point-to-point chunk transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transfer {
+    pub chunk: ChunkId,
+    pub src: DeviceId,
+    pub dst: DeviceId,
+    /// Stage index; transfers in stage `k+1` may depend on stage `k`.
+    pub stage: usize,
+    /// For spRS: the destination *accumulates* (sums) instead of copying.
+    pub reduce: bool,
+}
+
+/// A compiled sparse collective.
+#[derive(Debug, Clone)]
+pub struct SparsePlan {
+    pub transfers: Vec<Transfer>,
+    pub num_stages: usize,
+    /// λ from §3.1: fraction of chunks requiring inter-device traffic.
+    pub sparsity: f64,
+}
+
+impl SparsePlan {
+    pub fn empty() -> SparsePlan {
+        SparsePlan { transfers: Vec::new(), num_stages: 0, sparsity: 0.0 }
+    }
+
+    /// Total bytes moved (all links), given the per-chunk byte size.
+    pub fn total_bytes(&self, chunk_bytes: f64) -> f64 {
+        self.transfers.len() as f64 * chunk_bytes
+    }
+
+    /// Bottleneck completion time on `topo` (Equation 1 style): per stage,
+    /// the slowest port (device NVLink port or node NIC) determines the
+    /// stage time; stages serialize.
+    pub fn time(&self, topo: &Topology, chunk_bytes: f64) -> f64 {
+        let mut total = 0.0;
+        for stage in 0..self.num_stages {
+            let mut dev_out: BTreeMap<usize, f64> = BTreeMap::new();
+            let mut dev_in: BTreeMap<usize, f64> = BTreeMap::new();
+            let mut nic_out: BTreeMap<usize, f64> = BTreeMap::new();
+            let mut nic_in: BTreeMap<usize, f64> = BTreeMap::new();
+            let mut any_intra = false;
+            let mut any_inter = false;
+            for t in self.transfers.iter().filter(|t| t.stage == stage) {
+                if t.src == t.dst {
+                    continue;
+                }
+                if topo.same_node(t.src, t.dst) {
+                    any_intra = true;
+                    *dev_out.entry(t.src.0).or_default() += chunk_bytes;
+                    *dev_in.entry(t.dst.0).or_default() += chunk_bytes;
+                } else {
+                    any_inter = true;
+                    *nic_out.entry(topo.node_of(t.src).0).or_default() += chunk_bytes;
+                    *nic_in.entry(topo.node_of(t.dst).0).or_default() += chunk_bytes;
+                }
+            }
+            let intra = dev_out
+                .values()
+                .chain(dev_in.values())
+                .cloned()
+                .fold(0.0, f64::max)
+                / topo.intra_bw;
+            let inter = nic_out
+                .values()
+                .chain(nic_in.values())
+                .cloned()
+                .fold(0.0, f64::max)
+                / topo.inter_bw;
+            let lat = if any_inter { topo.inter_lat } else { 0.0 }
+                + if any_intra { topo.intra_lat } else { 0.0 };
+            total += intra.max(inter) + lat;
+        }
+        total
+    }
+}
+
+/// Compile `spAG(pre, post)`: materialize every `(chunk, device)` in
+/// `post \ pre`, sourcing each chunk topology-aware:
+///
+/// 1. **stage 0** — for every destination *node* lacking the chunk, one
+///    transfer from the nearest holder (same-node holder impossible by
+///    construction, so a cross-node send from the owner node; among holders
+///    prefer one on the least-used NIC so far);
+/// 2. **stage 1** — intra-node fan-out from the node's (new or existing)
+///    holder to the remaining destination devices.
+pub fn build_spag(topo: &Topology, pre: &Placement, post: &Placement) -> anyhow::Result<SparsePlan> {
+    validate_spag(pre, post)?;
+    let mut transfers = Vec::new();
+    let mut nic_out_load: BTreeMap<usize, usize> = BTreeMap::new();
+    let missing = post.diff(pre);
+    let mut by_chunk: BTreeMap<ChunkId, Vec<DeviceId>> = BTreeMap::new();
+    for (c, d) in missing {
+        by_chunk.entry(c).or_default().push(d);
+    }
+    let mut num_stages = 0;
+    for (&chunk, dsts) in &by_chunk {
+        // Group destinations by node.
+        let mut by_node: BTreeMap<usize, Vec<DeviceId>> = BTreeMap::new();
+        for &d in dsts {
+            by_node.entry(topo.node_of(d).0).or_default().push(d);
+        }
+        for (&node, node_dsts) in &by_node {
+            // Does any device on this node already hold the chunk (in pre)?
+            let local_holder = pre
+                .holders(chunk)
+                .find(|&h| topo.node_of(h).0 == node);
+            let fan_root = if let Some(h) = local_holder {
+                h
+            } else {
+                // Cross-node stage-0 transfer from the least-loaded holder NIC.
+                let src = pre
+                    .holders(chunk)
+                    .min_by_key(|h| {
+                        (nic_out_load.get(&topo.node_of(*h).0).copied().unwrap_or(0), h.0)
+                    })
+                    .expect("pre is surjective");
+                let dst = node_dsts[0];
+                *nic_out_load.entry(topo.node_of(src).0).or_default() += 1;
+                transfers.push(Transfer { chunk, src, dst, stage: 0, reduce: false });
+                num_stages = num_stages.max(1);
+                dst
+            };
+            // Intra-node fan-out.
+            for &d in node_dsts {
+                if d != fan_root {
+                    transfers.push(Transfer {
+                        chunk,
+                        src: fan_root,
+                        dst: d,
+                        stage: 1,
+                        reduce: false,
+                    });
+                    num_stages = num_stages.max(2);
+                }
+            }
+        }
+    }
+    let sparsity = post.sparsity(pre);
+    Ok(SparsePlan { transfers, num_stages, sparsity })
+}
+
+/// Compile `spRS(pre, post)`: reduce the gradients of every replica in
+/// `pre` down to the owners in `post` (which must be a surjective subset).
+///
+/// 1. **stage 0** — on every node with >1 replica of a chunk, partial-reduce
+///    to one node leader (the owner itself if local, else the lowest id);
+/// 2. **stage 1** — each node leader sends its partial sum to the owner,
+///    which accumulates.
+pub fn build_sprs(topo: &Topology, pre: &Placement, post: &Placement) -> anyhow::Result<SparsePlan> {
+    validate_sprs(pre, post)?;
+    let mut transfers = Vec::new();
+    let mut num_stages = 0;
+    for chunk in 0..pre.num_chunks() {
+        // Owner = the post holder (post is surjective; if multiple, each
+        // owner must end with the full sum — handled by sending to each).
+        let owners: Vec<DeviceId> = post.holders(chunk).collect();
+        let replicas: Vec<DeviceId> = pre.holders(chunk).collect();
+        if replicas.len() <= 1 {
+            continue; // gradient already at its only holder (== owner)
+        }
+        let owner = owners[0];
+        // Group replicas by node; elect leaders.
+        let mut by_node: BTreeMap<usize, Vec<DeviceId>> = BTreeMap::new();
+        for &d in &replicas {
+            by_node.entry(topo.node_of(d).0).or_default().push(d);
+        }
+        let owner_node = topo.node_of(owner).0;
+        for (&node, members) in &by_node {
+            let leader = if node == owner_node {
+                owner
+            } else {
+                *members.iter().min_by_key(|d| d.0).unwrap()
+            };
+            // stage 0: intra-node partial reduction into the leader
+            for &d in members {
+                if d != leader {
+                    transfers.push(Transfer {
+                        chunk,
+                        src: d,
+                        dst: leader,
+                        stage: 0,
+                        reduce: true,
+                    });
+                    num_stages = num_stages.max(1);
+                }
+            }
+            // stage 1: cross-node partial sum to the owner
+            if node != owner_node {
+                transfers.push(Transfer {
+                    chunk,
+                    src: leader,
+                    dst: owner,
+                    stage: 1,
+                    reduce: true,
+                });
+                num_stages = num_stages.max(2);
+            }
+        }
+        // Additional owners (rare: post with replicated ownership) receive a
+        // copy of the final sum in a trailing stage.
+        for &extra in owners.iter().skip(1) {
+            transfers.push(Transfer { chunk, src: owner, dst: extra, stage: 2, reduce: false });
+            num_stages = num_stages.max(3);
+        }
+    }
+    let sparsity = pre.sparsity(post);
+    Ok(SparsePlan { transfers, num_stages, sparsity })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::rng::Rng;
+
+    fn topo() -> Topology {
+        Topology::cluster_a(2, 4)
+    }
+
+    #[test]
+    fn spag_empty_when_post_equals_pre() {
+        let t = topo();
+        let pre = Placement::round_robin(16, 8);
+        let plan = build_spag(&t, &pre, &pre).unwrap();
+        assert!(plan.transfers.is_empty());
+        assert_eq!(plan.sparsity, 0.0);
+        assert_eq!(plan.time(&t, 1e6), 0.0);
+    }
+
+    #[test]
+    fn spag_crosses_node_once_per_dest_node() {
+        let t = topo(); // 2 nodes × 4 devices
+        let mut pre = Placement::empty(1, 8);
+        pre.add(0, DeviceId(0)); // owner on node 0
+        let mut post = pre.clone();
+        // replicate to all 4 devices of node 1
+        for d in 4..8 {
+            post.add(0, DeviceId(d));
+        }
+        let plan = build_spag(&t, &pre, &post).unwrap();
+        let cross: Vec<_> = plan
+            .transfers
+            .iter()
+            .filter(|tr| !t.same_node(tr.src, tr.dst))
+            .collect();
+        assert_eq!(cross.len(), 1, "exactly one cross-node hop: {:?}", plan.transfers);
+        assert_eq!(plan.transfers.len(), 4); // 1 cross + 3 intra fan-out
+    }
+
+    #[test]
+    fn spag_prefers_local_holder() {
+        let t = topo();
+        let mut pre = Placement::empty(1, 8);
+        pre.add(0, DeviceId(0));
+        pre.add(0, DeviceId(5)); // replica already on node 1
+        // pre must be surjective over chunks — it is (chunk 0 held).
+        let mut post = pre.clone();
+        post.add(0, DeviceId(6));
+        let plan = build_spag(&t, &pre, &post).unwrap();
+        assert_eq!(plan.transfers.len(), 1);
+        let tr = plan.transfers[0];
+        assert_eq!(tr.src, DeviceId(5), "should fan out from the node-local holder");
+        assert!(t.same_node(tr.src, tr.dst));
+    }
+
+    #[test]
+    fn sprs_reduces_hierarchically() {
+        let t = topo();
+        let mut post = Placement::empty(1, 8);
+        post.add(0, DeviceId(0)); // owner on node 0
+        let mut pre = post.clone();
+        for d in [1, 4, 5, 6] {
+            pre.add(0, DeviceId(d));
+        }
+        let plan = build_sprs(&t, &pre, &post).unwrap();
+        // stage0: 1->0 (node0), 5->4, 6->4 (node1). stage1: 4->0.
+        let cross: Vec<_> =
+            plan.transfers.iter().filter(|tr| !t.same_node(tr.src, tr.dst)).collect();
+        assert_eq!(cross.len(), 1, "{:?}", plan.transfers);
+        assert_eq!(plan.transfers.len(), 4);
+        assert!(plan.transfers.iter().all(|tr| tr.reduce));
+    }
+
+    #[test]
+    fn volume_symmetry_eq1() {
+        // Vol(spAG(P,P')) == Vol(spRS(P',P)) — same transfer count.
+        let t = topo();
+        let pre = Placement::round_robin(16, 8);
+        let mut post = pre.clone();
+        let mut rng = Rng::new(11);
+        for _ in 0..20 {
+            post.add(rng.below(16), DeviceId(rng.below(8)));
+        }
+        let ag = build_spag(&t, &pre, &post).unwrap();
+        let rs = build_sprs(&t, &post, &pre).unwrap();
+        assert_eq!(ag.total_bytes(1.0), rs.total_bytes(1.0));
+        assert!((ag.sparsity - rs.sparsity).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_cheaper_than_dense_fsdp() {
+        // §3.1: O(λS) << O(S) when λ << 1.
+        let t = topo();
+        let chunks = 64;
+        let pre = Placement::round_robin(chunks, 8);
+        let mut post = pre.clone();
+        post.add(0, DeviceId(3)); // materialize a single extra replica
+        let plan = build_spag(&t, &pre, &post).unwrap();
+        let chunk_bytes = 4e6;
+        let sparse_t = plan.time(&t, chunk_bytes);
+        let devices: Vec<DeviceId> = t.all_devices().collect();
+        let dense_t = crate::collectives::dense::allgather_time(
+            &t,
+            &devices,
+            chunks as f64 * chunk_bytes,
+        );
+        assert!(
+            sparse_t < dense_t / 4.0,
+            "sparse {sparse_t} should be far below dense {dense_t}"
+        );
+    }
+
+    #[test]
+    fn prop_spag_plan_reaches_exactly_post() {
+        testing::check(
+            |rng: &mut Rng, size| {
+                let nodes = 1 + rng.below(3);
+                let dpn = 1 + rng.below(4);
+                let t = Topology::cluster_a(nodes, dpn);
+                let nd = t.num_devices();
+                let chunks = 1 + rng.below(4 * size.max(1));
+                let pre = Placement::round_robin(chunks, nd);
+                let mut post = pre.clone();
+                for _ in 0..rng.below(2 * chunks + 1) {
+                    post.add(rng.below(chunks), DeviceId(rng.below(nd)));
+                }
+                (t, pre, post)
+            },
+            |(t, pre, post)| {
+                let plan = build_spag(t, pre, post).map_err(|e| e.to_string())?;
+                // Simulate plan: devices' chunk sets start at pre, apply stages.
+                let mut have = pre.clone();
+                for stage in 0..plan.num_stages {
+                    let mut next = have.clone();
+                    for tr in plan.transfers.iter().filter(|tr| tr.stage == stage) {
+                        if !have.contains(tr.chunk, tr.src) {
+                            return Err(format!(
+                                "stage {stage}: src {:?} lacks chunk {}",
+                                tr.src, tr.chunk
+                            ));
+                        }
+                        next.add(tr.chunk, tr.dst);
+                    }
+                    have = next;
+                }
+                if &have != post {
+                    return Err("plan result != post placement".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_sprs_reduces_each_replica_once() {
+        testing::check(
+            |rng: &mut Rng, size| {
+                let t = Topology::cluster_a(1 + rng.below(3), 1 + rng.below(4));
+                let nd = t.num_devices();
+                let chunks = 1 + rng.below(4 * size.max(1));
+                let post = Placement::round_robin(chunks, nd);
+                let mut pre = post.clone();
+                for _ in 0..rng.below(2 * chunks + 1) {
+                    pre.add(rng.below(chunks), DeviceId(rng.below(nd)));
+                }
+                (t, pre, post)
+            },
+            |(t, pre, post)| {
+                let plan = build_sprs(t, pre, post).map_err(|e| e.to_string())?;
+                // Per chunk: #reduce transfers == #replicas - 1 when single owner.
+                for c in 0..pre.num_chunks() {
+                    let reps = pre.replication(c);
+                    let n = plan.transfers.iter().filter(|tr| tr.chunk == c).count();
+                    if reps >= 1 && n != reps - 1 {
+                        return Err(format!(
+                            "chunk {c}: {reps} replicas but {n} transfers"
+                        ));
+                    }
+                    // every replica is a source at most once (each partial
+                    // flows exactly one way)
+                    let mut src_counts: BTreeMap<usize, usize> = BTreeMap::new();
+                    for tr in plan.transfers.iter().filter(|tr| tr.chunk == c) {
+                        *src_counts.entry(tr.src.0).or_default() += 1;
+                    }
+                    if src_counts.values().any(|&v| v > 1) {
+                        return Err(format!("chunk {c}: a device sends twice"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

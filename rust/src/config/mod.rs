@@ -1,0 +1,127 @@
+//! Configuration system: model architectures (paper Table 1), cluster
+//! presets, system selection and hyper-parameters, and training options.
+//! Configs load from JSON files or CLI overrides.
+
+pub mod model;
+pub mod system;
+
+pub use model::ModelConfig;
+pub use system::{SystemConfig, SystemKind};
+
+use crate::topology::Topology;
+use crate::util::json::Json;
+
+/// Which paper testbed to simulate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterPreset {
+    A,
+    B,
+    Flat,
+}
+
+impl ClusterPreset {
+    pub fn parse(s: &str) -> anyhow::Result<ClusterPreset> {
+        match s.to_ascii_lowercase().as_str() {
+            "a" | "cluster-a" | "v100" => Ok(ClusterPreset::A),
+            "b" | "cluster-b" | "a100" => Ok(ClusterPreset::B),
+            "flat" => Ok(ClusterPreset::Flat),
+            _ => anyhow::bail!("unknown cluster `{s}` (expected a|b|flat)"),
+        }
+    }
+
+    pub fn build(&self, nodes: usize, devices_per_node: usize) -> Topology {
+        match self {
+            ClusterPreset::A => Topology::cluster_a(nodes, devices_per_node),
+            ClusterPreset::B => Topology::cluster_b(nodes, devices_per_node),
+            ClusterPreset::Flat => Topology::flat(nodes * devices_per_node, 50e9),
+        }
+    }
+}
+
+/// Training-loop options shared by the simulator and the numeric engine.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Mini-batch size (sequences) per device.
+    pub batch_per_device: usize,
+    /// Iterations to run.
+    pub iterations: usize,
+    /// Random seed.
+    pub seed: u64,
+    /// Sliding window size for load prediction (paper: w = 5).
+    pub predict_window: usize,
+    /// Re-sharding interval in iterations (paper default: 100).
+    pub reshard_interval: usize,
+    /// Adam learning rate (numeric engine / e2e training).
+    pub lr: f32,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            batch_per_device: 2,
+            iterations: 100,
+            seed: 42,
+            predict_window: 5,
+            reshard_interval: 100,
+            lr: 1e-3,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn to_json(&self) -> Json {
+        crate::util::json::obj([
+            ("batch_per_device", self.batch_per_device.into()),
+            ("iterations", self.iterations.into()),
+            ("seed", (self.seed as usize).into()),
+            ("predict_window", self.predict_window.into()),
+            ("reshard_interval", self.reshard_interval.into()),
+            ("lr", (self.lr as f64).into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<TrainConfig> {
+        let d = TrainConfig::default();
+        Ok(TrainConfig {
+            batch_per_device: j
+                .get("batch_per_device")
+                .and_then(Json::as_usize)
+                .unwrap_or(d.batch_per_device),
+            iterations: j.get("iterations").and_then(Json::as_usize).unwrap_or(d.iterations),
+            seed: j.get("seed").and_then(Json::as_usize).unwrap_or(d.seed as usize) as u64,
+            predict_window: j
+                .get("predict_window")
+                .and_then(Json::as_usize)
+                .unwrap_or(d.predict_window),
+            reshard_interval: j
+                .get("reshard_interval")
+                .and_then(Json::as_usize)
+                .unwrap_or(d.reshard_interval),
+            lr: j.get("lr").and_then(Json::as_f64).unwrap_or(d.lr as f64) as f32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_presets() {
+        assert_eq!(ClusterPreset::parse("A").unwrap(), ClusterPreset::A);
+        assert_eq!(ClusterPreset::parse("v100").unwrap(), ClusterPreset::A);
+        assert!(ClusterPreset::parse("z").is_err());
+        let t = ClusterPreset::B.build(4, 8);
+        assert_eq!(t.num_devices(), 32);
+    }
+
+    #[test]
+    fn train_config_roundtrip() {
+        let c = TrainConfig { batch_per_device: 4, iterations: 7, ..Default::default() };
+        let j = c.to_json();
+        let back = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(back.batch_per_device, 4);
+        assert_eq!(back.iterations, 7);
+        assert_eq!(back.predict_window, 5);
+    }
+}

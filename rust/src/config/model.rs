@@ -1,0 +1,210 @@
+//! MoE model architectures — paper Table 1 plus the small configs used by
+//! the numeric engine and the end-to-end training example.
+//!
+//! | Model         | d_model | SeqLen | Layers | Experts | Params |
+//! |---------------|---------|--------|--------|---------|--------|
+//! | GPT-MoE-S     | 768     | 2048   | 12     | 64      | 1.84B  |
+//! | GPT-MoE-L     | 1536    | 2048   | 12     | 64      | 7.36B  |
+//! | BERT-MoE      | 1024    | 512    | 12     | 64      | 3.27B  |
+//! | BERT-MoE-Deep | 1024    | 512    | 24     | 64      | 6.54B  |
+//!
+//! Experts are FFNs with `d_ffn = 2 * d_model` (§5.1); gating is GShard
+//! top-2.
+
+use crate::util::json::{obj, Json};
+
+/// Transformer-MoE architecture description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub seq_len: usize,
+    /// Number of Transformer-MoE blocks (each: attention + MoE FFN).
+    pub layers: usize,
+    /// Experts per MoE layer.
+    pub experts: usize,
+    /// Top-k routing (paper uses GShard top-2).
+    pub top_k: usize,
+    /// Vocabulary size (embedding / lm-head), used by the e2e trainer.
+    pub vocab: usize,
+    /// Bytes per parameter for *parameters* on device (fp16 in the paper's
+    /// mixed-precision setup).
+    pub param_bytes: usize,
+    /// Bytes of optimizer state per parameter (Adam mixed precision:
+    /// fp32 master + m + v = 12, paper says ≥6× params of 2 bytes).
+    pub opt_bytes_per_param: usize,
+}
+
+impl ModelConfig {
+    fn new(name: &str, d_model: usize, seq_len: usize, layers: usize, experts: usize) -> Self {
+        ModelConfig {
+            name: name.to_string(),
+            d_model,
+            seq_len,
+            layers,
+            experts,
+            top_k: 2,
+            vocab: 50_257,
+            param_bytes: 2,
+            opt_bytes_per_param: 12,
+        }
+    }
+
+    /// Paper Table 1 presets. `experts` can be overridden for weak scaling
+    /// (the paper uses 32 experts for the 16-GPU runs).
+    pub fn preset(name: &str) -> anyhow::Result<ModelConfig> {
+        match name.to_ascii_lowercase().as_str() {
+            "gpt-moe-s" => Ok(Self::new("GPT-MoE-S", 768, 2048, 12, 64)),
+            "gpt-moe-l" => Ok(Self::new("GPT-MoE-L", 1536, 2048, 12, 64)),
+            "bert-moe" => Ok(Self::new("BERT-MoE", 1024, 512, 12, 64)),
+            "bert-moe-deep" => Ok(Self::new("BERT-MoE-Deep", 1024, 512, 24, 64)),
+            // Small configs for the numeric engine / e2e example / tests.
+            "tiny" => Ok(ModelConfig {
+                vocab: 1024,
+                ..Self::new("Tiny", 64, 32, 2, 8)
+            }),
+            "e2e-100m" => Ok(ModelConfig {
+                vocab: 8192,
+                ..Self::new("E2E-100M", 512, 256, 4, 16)
+            }),
+            _ => anyhow::bail!(
+                "unknown model `{name}` (gpt-moe-s|gpt-moe-l|bert-moe|bert-moe-deep|tiny|e2e-100m)"
+            ),
+        }
+    }
+
+    pub fn all_paper_models() -> Vec<ModelConfig> {
+        ["gpt-moe-s", "gpt-moe-l", "bert-moe", "bert-moe-deep"]
+            .iter()
+            .map(|n| Self::preset(n).unwrap())
+            .collect()
+    }
+
+    /// With a different expert count (weak scaling).
+    pub fn with_experts(mut self, experts: usize) -> Self {
+        self.experts = experts;
+        self
+    }
+
+    /// FFN hidden dim: `2 * d_model` per the paper.
+    pub fn d_ffn(&self) -> usize {
+        2 * self.d_model
+    }
+
+    /// Parameters in one expert (two dense layers + biases).
+    pub fn expert_params(&self) -> usize {
+        self.d_model * self.d_ffn() + self.d_ffn() // w1 + b1
+            + self.d_ffn() * self.d_model + self.d_model // w2 + b2
+    }
+
+    /// Bytes of one expert's parameters on device.
+    pub fn expert_bytes(&self) -> usize {
+        self.expert_params() * self.param_bytes
+    }
+
+    /// Parameters in one attention block (qkv + proj + 2 layernorms).
+    pub fn attention_params(&self) -> usize {
+        4 * self.d_model * self.d_model + 4 * self.d_model + 4 * self.d_model
+    }
+
+    /// Parameters of the gate of one MoE layer.
+    pub fn gate_params(&self) -> usize {
+        self.d_model * self.experts
+    }
+
+    /// Total parameters of the model (embeddings + blocks + head).
+    pub fn total_params(&self) -> usize {
+        let embed = self.vocab * self.d_model + self.seq_len * self.d_model;
+        let per_layer =
+            self.attention_params() + self.gate_params() + self.experts * self.expert_params();
+        embed + self.layers * per_layer
+    }
+
+    /// Total parameters of all MoE experts (the sharded portion in FSSDP).
+    pub fn total_expert_params(&self) -> usize {
+        self.layers * self.experts * self.expert_params()
+    }
+
+    /// Forward flops of one attention block for `tokens` tokens
+    /// (projections + score/context matmuls).
+    pub fn attention_fwd_flops(&self, tokens: usize) -> f64 {
+        let proj = 2.0 * tokens as f64 * (4 * self.d_model * self.d_model) as f64;
+        let attn = 2.0 * 2.0 * tokens as f64 * self.seq_len as f64 * self.d_model as f64;
+        proj + attn
+    }
+
+    /// Forward flops of one expert processing `tokens` tokens.
+    pub fn expert_fwd_flops(&self, tokens: usize) -> f64 {
+        2.0 * tokens as f64 * (2 * self.d_model * self.d_ffn()) as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("name", self.name.as_str().into()),
+            ("d_model", self.d_model.into()),
+            ("seq_len", self.seq_len.into()),
+            ("layers", self.layers.into()),
+            ("experts", self.experts.into()),
+            ("top_k", self.top_k.into()),
+            ("vocab", self.vocab.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_param_counts_match_paper() {
+        // Paper Table 1 reports total params; dominated by experts:
+        // 64 experts/layer, expert ≈ 4*d_model^2 params.
+        let s = ModelConfig::preset("gpt-moe-s").unwrap();
+        let b = s.total_params() as f64 / 1e9;
+        assert!((b - 1.84).abs() < 0.15, "GPT-MoE-S {b:.2}B vs paper 1.84B");
+
+        let l = ModelConfig::preset("gpt-moe-l").unwrap();
+        let b = l.total_params() as f64 / 1e9;
+        assert!((b - 7.36).abs() < 0.5, "GPT-MoE-L {b:.2}B vs paper 7.36B");
+
+        let bert = ModelConfig::preset("bert-moe").unwrap();
+        let b = bert.total_params() as f64 / 1e9;
+        assert!((b - 3.27).abs() < 0.25, "BERT-MoE {b:.2}B vs paper 3.27B");
+
+        let deep = ModelConfig::preset("bert-moe-deep").unwrap();
+        let b = deep.total_params() as f64 / 1e9;
+        assert!((b - 6.54).abs() < 0.5, "BERT-MoE-Deep {b:.2}B vs paper 6.54B");
+    }
+
+    #[test]
+    fn e2e_model_is_about_100m() {
+        let m = ModelConfig::preset("e2e-100m").unwrap();
+        let p = m.total_params() as f64 / 1e6;
+        assert!((60.0..200.0).contains(&p), "{p:.1}M params");
+    }
+
+    #[test]
+    fn ffn_dim_is_2x() {
+        let m = ModelConfig::preset("bert-moe").unwrap();
+        assert_eq!(m.d_ffn(), 2048);
+        assert_eq!(m.top_k, 2);
+    }
+
+    #[test]
+    fn weak_scaling_override() {
+        let m = ModelConfig::preset("gpt-moe-s").unwrap().with_experts(32);
+        assert_eq!(m.experts, 32);
+    }
+
+    #[test]
+    fn flops_monotone_in_tokens() {
+        let m = ModelConfig::preset("gpt-moe-s").unwrap();
+        assert!(m.expert_fwd_flops(200) > m.expert_fwd_flops(100));
+        assert!(m.attention_fwd_flops(2048) > 0.0);
+    }
+
+    #[test]
+    fn unknown_preset_errors() {
+        assert!(ModelConfig::preset("nope").is_err());
+    }
+}

@@ -1,0 +1,137 @@
+//! Selection and hyper-parameters of the MoE training systems under
+//! comparison (§5.1): EP, FasterMoE, SmartMoE, FlexMoE, FSDP, and
+//! Hecate (± re-materialization).
+
+/// Which system plans expert placement each iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SystemKind {
+    /// Plain expert parallelism: static even placement, All-to-All dispatch.
+    Ep,
+    /// FasterMoE-style shadowing: replicate the most-loaded experts to every
+    /// device after the gate decision (rearrangement on the critical path).
+    FasterMoe,
+    /// SmartMoE-style permutation: periodically *exchange* experts between
+    /// devices to pack high+low loads together (no replication).
+    SmartMoe,
+    /// FlexMoE-style replication/relocation with reserved memory.
+    FlexMoe,
+    /// Vanilla FSDP applied to MoE layers: full AllGather of every expert.
+    Fsdp,
+    /// Hecate: FSSDP with heterogeneous sharding + sparse materialization.
+    Hecate,
+    /// Hecate with re-materialization (release params after use).
+    HecateRm,
+}
+
+impl SystemKind {
+    pub fn parse(s: &str) -> anyhow::Result<SystemKind> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "ep" => Ok(SystemKind::Ep),
+            "fastermoe" | "faster-moe" => Ok(SystemKind::FasterMoe),
+            "smartmoe" | "smart-moe" => Ok(SystemKind::SmartMoe),
+            "flexmoe" | "flex-moe" => Ok(SystemKind::FlexMoe),
+            "fsdp" => Ok(SystemKind::Fsdp),
+            "hecate" => Ok(SystemKind::Hecate),
+            "hecate-rm" | "hecaterm" => Ok(SystemKind::HecateRm),
+            _ => anyhow::bail!(
+                "unknown system `{s}` (ep|fastermoe|smartmoe|flexmoe|fsdp|hecate|hecate-rm)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemKind::Ep => "EP",
+            SystemKind::FasterMoe => "FasterMoE",
+            SystemKind::SmartMoe => "SmartMoE",
+            SystemKind::FlexMoe => "FlexMoE",
+            SystemKind::Fsdp => "FSDP",
+            SystemKind::Hecate => "Hecate",
+            SystemKind::HecateRm => "Hecate-RM",
+        }
+    }
+
+    /// The comparison set used in the paper's end-to-end figures.
+    pub fn paper_lineup() -> Vec<SystemKind> {
+        vec![
+            SystemKind::Ep,
+            SystemKind::FasterMoe,
+            SystemKind::SmartMoe,
+            SystemKind::FlexMoe,
+            SystemKind::Hecate,
+        ]
+    }
+}
+
+/// Per-system tunables (the knobs §2.3 calls out).
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub kind: SystemKind,
+    /// Rearrangement interval in iterations (SmartMoE / FlexMoE). The paper
+    /// tunes these per-workload; defaults follow its §1/§5 discussion
+    /// (moderate frequency, e.g. every 25 steps).
+    pub rearrange_interval: usize,
+    /// Extra expert slots of memory reserved per device for rearrangement
+    /// (FlexMoE "reserved memory"), in units of experts.
+    pub reserved_slots: usize,
+    /// Hecate: re-sharding interval (paper: 100, insensitive).
+    pub reshard_interval: usize,
+    /// Hecate: enable the post-gate calibration stage (§4.2).
+    pub calibration: bool,
+    /// Hecate ablation switches (Figure 15a).
+    pub hetero_sharding: bool,
+    pub sparse_materialization: bool,
+}
+
+impl SystemConfig {
+    pub fn new(kind: SystemKind) -> SystemConfig {
+        SystemConfig {
+            kind,
+            rearrange_interval: 25,
+            reserved_slots: match kind {
+                SystemKind::FlexMoe => 4,
+                SystemKind::FasterMoe => 2,
+                _ => 0,
+            },
+            reshard_interval: 100,
+            calibration: true,
+            hetero_sharding: true,
+            sparse_materialization: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all() {
+        for (s, k) in [
+            ("ep", SystemKind::Ep),
+            ("FasterMoE", SystemKind::FasterMoe),
+            ("smart-moe", SystemKind::SmartMoe),
+            ("flexmoe", SystemKind::FlexMoe),
+            ("fsdp", SystemKind::Fsdp),
+            ("hecate", SystemKind::Hecate),
+            ("hecate-rm", SystemKind::HecateRm),
+        ] {
+            assert_eq!(SystemKind::parse(s).unwrap(), k);
+        }
+        assert!(SystemKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn lineup_contains_hecate_and_ep() {
+        let l = SystemKind::paper_lineup();
+        assert!(l.contains(&SystemKind::Ep));
+        assert!(l.contains(&SystemKind::Hecate));
+        assert_eq!(l.len(), 5);
+    }
+
+    #[test]
+    fn flexmoe_reserves_memory() {
+        assert_eq!(SystemConfig::new(SystemKind::FlexMoe).reserved_slots, 4);
+        assert_eq!(SystemConfig::new(SystemKind::Ep).reserved_slots, 0);
+    }
+}

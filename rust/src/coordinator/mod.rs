@@ -1,0 +1,202 @@
+//! L3 coordinator CLI: subcommand dispatch for the `hecate` binary.
+//!
+//! ```text
+//! hecate repro   --figure 9|10|11|12|13|14|15a|15b | --table 1 | --claims | --all
+//! hecate simulate --cluster a|b --model gpt-moe-s --system hecate [--nodes 4 --dpn 8]
+//! hecate train   --model e2e --steps 200 [--artifacts DIR]   (runs PJRT)
+//! hecate fssdp   --devices 8 --iters 20                      (numeric engine)
+//! ```
+
+use crate::config::{ClusterPreset, ModelConfig, SystemConfig, SystemKind, TrainConfig};
+use crate::sim::engine::simulate;
+use crate::sim::report;
+use crate::util::cli::Args;
+
+/// Entry point called by `main`.
+pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
+    crate::util::logging::init();
+    let Some((cmd, rest)) = argv.split_first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(rest.iter().cloned());
+    match cmd.as_str() {
+        "repro" => cmd_repro(&args),
+        "simulate" => cmd_simulate(&args),
+        "train" => cmd_train(&args),
+        "fssdp" => cmd_fssdp(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            print_usage();
+            anyhow::bail!("unknown command `{other}`")
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "hecate — FSSDP MoE training (paper reproduction)\n\
+         USAGE:\n  hecate repro    [--figure N | --table 1 | --claims | --all] [--iters N]\n  \
+         hecate simulate --cluster a|b --model NAME --system NAME [--nodes N --dpn N --batch N]\n  \
+         hecate train    [--steps N] [--artifacts DIR] [--model tiny|e2e] [--log FILE]\n  \
+         hecate fssdp    [--devices N] [--iters N] [--artifacts DIR]"
+    );
+}
+
+fn cmd_repro(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["figure", "table", "claims", "all", "iters"])?;
+    let mut opts = report::default_opts();
+    opts.iterations = args.usize_or("iters", opts.iterations)?;
+    let all = args.has("all");
+    let fig = args.str_or("figure", "");
+    let table = args.str_or("table", "");
+
+    if all || table == "1" {
+        println!("\n== Table 1: model architectures ==");
+        print!("{}", report::table1().to_markdown());
+    }
+    if all || fig == "3" {
+        println!("\n== Figure 3: expert load distribution over iterations ==");
+        print!("{}", report::figure3(30).to_markdown());
+    }
+    if all || fig == "9" {
+        println!("\n== Figure 9: end-to-end speedup vs EP, Cluster A ==");
+        for (t, label) in report::figure9(&opts).into_iter().zip(["16 GPUs", "32 GPUs"]) {
+            println!("-- {label} --");
+            print!("{}", t.to_markdown());
+        }
+    }
+    if all || fig == "10" {
+        println!("\n== Figure 10: end-to-end speedup vs EP, Cluster B (32 GPUs) ==");
+        print!("{}", report::figure10(&opts).to_markdown());
+    }
+    if all || fig == "11" {
+        println!("\n== Figure 11: layer-wise MoE speedup (GPT-MoE-S, Cluster B) ==");
+        print!("{}", report::figure11(&opts).to_markdown());
+    }
+    if all || fig == "12" {
+        println!("\n== Figure 12: critical-path breakdown (BERT-MoE-Deep, Cluster B) ==");
+        print!("{}", report::figure12(&opts).to_markdown());
+    }
+    if all || fig == "13" {
+        println!("\n== Figure 13: peak MoE memory per device ==");
+        print!("{}", report::figure13(&opts).to_markdown());
+    }
+    if all || fig == "14" {
+        println!("\n== Figure 14: batch-size scaling (GPT-MoE-S, Cluster A) ==");
+        print!("{}", report::figure14(&opts).to_markdown());
+    }
+    if all || fig == "15a" || fig == "15" {
+        println!("\n== Figure 15a: component ablation ==");
+        print!("{}", report::figure15a(&opts).to_markdown());
+    }
+    if all || fig == "15b" || fig == "15" {
+        println!("\n== Figure 15b: re-sharding interval sweep ==");
+        print!("{}", report::figure15b(&opts).to_markdown());
+    }
+    if all || args.has("claims") {
+        for (name, t) in report::claims(&opts) {
+            println!("\n== Claim: {name} ==");
+            print!("{}", t.to_markdown());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&[
+        "cluster", "model", "system", "nodes", "dpn", "batch", "iters", "seed", "experts",
+    ])?;
+    let cluster = ClusterPreset::parse(&args.str_or("cluster", "a"))?;
+    let nodes = args.usize_or("nodes", 4)?;
+    let dpn = args.usize_or("dpn", 8)?;
+    let topo = cluster.build(nodes, dpn);
+    let mut model = ModelConfig::preset(&args.str_or("model", "gpt-moe-s"))?;
+    if let Some(e) = args.get("experts") {
+        model = model.with_experts(e.parse()?);
+    }
+    let system = SystemKind::parse(&args.str_or("system", "hecate"))?;
+    let batch = args.usize_or("batch", report::paper_batch(&model))?;
+    let train = TrainConfig { batch_per_device: batch, ..Default::default() };
+    let mut opts = report::default_opts();
+    opts.iterations = args.usize_or("iters", opts.iterations)?;
+    opts.seed = args.usize_or("seed", opts.seed as usize)? as u64;
+
+    let r = simulate(&topo, &model, &SystemConfig::new(system), &train, &opts);
+    println!("system     : {}", r.system);
+    println!("topology   : {}", topo.name);
+    println!("model      : {} ({} experts, batch {})", model.name, model.experts, batch);
+    println!("iter time  : {:.2} ms", r.iter_time * 1e3);
+    let b = &r.breakdown;
+    println!(
+        "breakdown  : attn {:.2} ms | expert {:.2} ms | a2a {:.2} ms | exposed-comm {:.2} ms | rearr {:.2} ms",
+        b.attn * 1e3,
+        b.expert * 1e3,
+        b.a2a * 1e3,
+        b.exposed_comm * 1e3,
+        b.rearrange * 1e3
+    );
+    println!(
+        "moe memory : params {:.2} GB | grads {:.2} GB | opt {:.2} GB",
+        r.memory.params / 1e9,
+        r.memory.grads / 1e9,
+        r.memory.opt / 1e9
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["steps", "artifacts", "model", "log", "lr", "seed"])?;
+    let steps = args.usize_or("steps", 200)?;
+    let dir = args.str_or("artifacts", "artifacts");
+    let tag = args.str_or("model", "tiny");
+    let log = args.get("log").map(|s| s.to_string());
+    crate::train::run_training(&dir, &tag, steps, log.as_deref())
+}
+
+fn cmd_fssdp(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["devices", "iters", "artifacts", "nodes", "seed"])?;
+    let devices = args.usize_or("devices", 8)?;
+    let nodes = args.usize_or("nodes", 2)?;
+    let iters = args.usize_or("iters", 10)?;
+    let dir = args.str_or("artifacts", "artifacts");
+    let seed = args.usize_or("seed", 42)? as u64;
+    crate::fssdp::run_demo(&dir, nodes, devices, iters, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(vec!["bogus".into()]).is_err());
+    }
+
+    #[test]
+    fn help_ok() {
+        assert!(run(vec!["help".into()]).is_ok());
+    }
+
+    #[test]
+    fn simulate_smoke() {
+        let argv: Vec<String> = [
+            "simulate", "--cluster", "a", "--model", "gpt-moe-s", "--system", "hecate",
+            "--nodes", "2", "--dpn", "2", "--iters", "8", "--experts", "8",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        run(argv).unwrap();
+    }
+
+    #[test]
+    fn repro_table1_smoke() {
+        let argv: Vec<String> =
+            ["repro", "--table", "1"].iter().map(|s| s.to_string()).collect();
+        run(argv).unwrap();
+    }
+}

@@ -1,0 +1,416 @@
+//! The numeric FSSDP engine: real FSSDP training of an MoE layer across N
+//! simulated devices inside one process.
+//!
+//! Everything the paper's Figure 5 shows actually happens here, with real
+//! numbers:
+//!
+//! 1. **Sharding phase** — expert parameters + Adam states are partitioned
+//!    into per-expert chunks owned by distinct devices.
+//! 2. **Materialization phase** — each iteration the scheduler predicts
+//!    loads (sliding window, w=5), runs Algorithm 1, and executes
+//!    `spAG(P, P')` on the real parameter buffers
+//!    ([`crate::collectives::exec`]).
+//! 3. The **gate** runs as an AOT-compiled HLO executable per device
+//!    (logits → softmax → Pallas top-2); the L3 **dispatcher** routes each
+//!    token to a materialized replica (topology-aware, §4.4).
+//! 4. **Expert compute** runs through the `expert_ffn_fwd`/`_bwd` HLO
+//!    executables (Pallas kernels under PJRT), capacity-tiled.
+//! 5. **Gradient reduction** executes `spRS(P', P)` on the real gradient
+//!    buffers; shard owners apply Adam.
+//!
+//! The equivalence test (`examples/fssdp_numeric`, `rust/tests/`) runs the
+//! same workload on 1 device (all experts local — no collectives, no
+//! dispatch) and asserts the final parameters match: FSSDP's placement
+//! freedom does not change the math.
+
+pub mod adam;
+
+use std::collections::BTreeMap;
+
+use crate::collectives::exec::{run_spag, run_sprs, ClusterMem};
+use crate::collectives::sparse::{build_spag, build_sprs};
+use crate::dispatch::dispatch;
+use crate::loadsim::LoadPredictor;
+use crate::materialize::{sparse_materialize, MatConstraints};
+use crate::placement::Placement;
+use crate::runtime::{HostTensor, Runtime};
+use crate::topology::{DeviceId, Topology};
+use crate::util::rng::Rng;
+
+use adam::{AdamCfg, AdamState};
+
+/// Static dimensions of the engine's MoE layer (from the artifact manifest).
+#[derive(Debug, Clone, Copy)]
+pub struct LayerDims {
+    pub tokens: usize,
+    pub d_model: usize,
+    pub d_ffn: usize,
+    pub experts: usize,
+    pub cap: usize,
+}
+
+impl LayerDims {
+    /// Floats in one expert's packed chunk: w1 ++ b1 ++ w2 ++ b2.
+    pub fn chunk_len(&self) -> usize {
+        self.d_model * self.d_ffn + self.d_ffn + self.d_ffn * self.d_model + self.d_model
+    }
+
+    fn from_runtime(rt: &Runtime) -> anyhow::Result<LayerDims> {
+        let gate = rt.entry("gate_fwd")?;
+        let ffn = rt.entry("expert_ffn_fwd")?;
+        Ok(LayerDims {
+            tokens: gate.extra_usize("tokens").unwrap_or(gate.inputs[0].shape[0]),
+            d_model: gate.extra_usize("d_model").unwrap_or(gate.inputs[0].shape[1]),
+            d_ffn: ffn.extra_usize("d_ffn").unwrap_or(ffn.inputs[1].shape[1]),
+            experts: gate.inputs[1].shape[1],
+            cap: ffn.extra_usize("cap").unwrap_or(ffn.inputs[0].shape[0]),
+        })
+    }
+}
+
+/// Unpack a chunk into (w1, b1, w2, b2) host tensors.
+fn unpack_chunk(dims: &LayerDims, chunk: &[f32]) -> (HostTensor, HostTensor, HostTensor, HostTensor) {
+    let (dm, dff) = (dims.d_model, dims.d_ffn);
+    let mut off = 0;
+    let w1 = HostTensor::f32(vec![dm, dff], chunk[off..off + dm * dff].to_vec());
+    off += dm * dff;
+    let b1 = HostTensor::f32(vec![dff], chunk[off..off + dff].to_vec());
+    off += dff;
+    let w2 = HostTensor::f32(vec![dff, dm], chunk[off..off + dff * dm].to_vec());
+    off += dff * dm;
+    let b2 = HostTensor::f32(vec![dm], chunk[off..off + dm].to_vec());
+    (w1, b1, w2, b2)
+}
+
+/// Pack (gw1, gb1, gw2, gb2) into a gradient chunk, accumulating.
+fn accumulate_grad_chunk(acc: &mut [f32], parts: &[HostTensor]) -> anyhow::Result<()> {
+    let mut off = 0;
+    for p in parts {
+        let data = p.as_f32()?;
+        for (a, &g) in acc[off..off + data.len()].iter_mut().zip(data.iter()) {
+            *a += g;
+        }
+        off += data.len();
+    }
+    anyhow::ensure!(off == acc.len(), "grad pack length mismatch");
+    Ok(())
+}
+
+/// Per-iteration statistics of the engine.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub loss: f64,
+    /// λ of the spAG this iteration.
+    pub spag_sparsity: f64,
+    /// Materialized (chunk, device) pairs beyond the shards.
+    pub replicas: usize,
+    /// Tokens that crossed devices.
+    pub remote_tokens: usize,
+    /// Straggler factor of per-device expert tokens.
+    pub straggler: f64,
+}
+
+/// The engine itself.
+pub struct FssdpEngine {
+    pub topo: Topology,
+    pub dims: LayerDims,
+    rt: Runtime,
+    /// Expert parameter chunks, placed per `shards`.
+    params: ClusterMem,
+    shards: Placement,
+    /// Adam state on shard owners only (the single global copy).
+    opt: BTreeMap<usize, AdamState>,
+    adam: AdamCfg,
+    /// Gate weights, replicated on every device (dense DP part; frozen in
+    /// the engine — the gate's drift is exogenous, from the data stream).
+    gate_w: Vec<f32>,
+    predictor: LoadPredictor,
+    /// Memory headroom per device for Algorithm 1, in expert slots.
+    pub mem_slots: usize,
+    /// Overlap degree for Algorithm 1.
+    pub overlap_degree: usize,
+    rng: Rng,
+}
+
+impl FssdpEngine {
+    /// Build the engine: load artifacts, shard experts round-robin, init
+    /// parameters deterministically from `seed`.
+    pub fn new(artifact_dir: &str, topo: Topology, seed: u64) -> anyhow::Result<FssdpEngine> {
+        let rt = Runtime::open(artifact_dir)?;
+        let dims = LayerDims::from_runtime(&rt)?;
+        let nd = topo.num_devices();
+        let shards = Placement::round_robin(dims.experts, nd);
+        let mut rng = Rng::new(seed);
+
+        // deterministic init: chunk e seeded on (seed, e) only, so the
+        // device count / placement cannot affect initial values.
+        let mut params = ClusterMem::new(nd);
+        let mut opt = BTreeMap::new();
+        for e in 0..dims.experts {
+            let mut er = Rng::new(seed ^ (0x9E37 + e as u64 * 0x1000193));
+            let scale = (dims.d_model as f64).powf(-0.5);
+            let chunk: Vec<f32> =
+                (0..dims.chunk_len()).map(|_| (er.normal() * scale) as f32).collect();
+            let owner = shards.holders(e).next().unwrap();
+            params.dev_mut(owner).insert(e, chunk);
+            opt.insert(e, AdamState::new(dims.chunk_len()));
+        }
+        let gate_scale = (dims.d_model as f64).powf(-0.5);
+        let gate_w: Vec<f32> = (0..dims.d_model * dims.experts)
+            .map(|_| (rng.normal() * gate_scale * 3.0) as f32)
+            .collect();
+        let predictor = LoadPredictor::new(dims.experts, 5);
+        Ok(FssdpEngine {
+            topo,
+            dims,
+            rt,
+            params,
+            shards,
+            opt,
+            adam: AdamCfg::default(),
+            gate_w,
+            predictor,
+            mem_slots: 4,
+            overlap_degree: 4,
+            rng,
+        })
+    }
+
+    /// Owner device of expert `e`.
+    pub fn owner(&self, e: usize) -> DeviceId {
+        self.shards.holders(e).next().unwrap()
+    }
+
+    /// Read back an expert's parameter chunk (from its owner).
+    pub fn expert_chunk(&self, e: usize) -> &Vec<f32> {
+        self.params.dev(self.owner(e)).get(e).expect("owner holds its shard")
+    }
+
+    /// Generate each device's token batch for iteration `iter`
+    /// (deterministic in (seed, iter, device) — the FSSDP run and the
+    /// 1-device reference see identical data).
+    fn batch(&self, iter: u64, source: usize) -> Vec<f32> {
+        let mut r = Rng::new(0xDA7A ^ (iter.wrapping_mul(0x9E3779B97F4A7C15)) ^ (source as u64) << 32);
+        // drift the token distribution over iterations so expert loads
+        // fluctuate (the Figure 3 dynamic the predictor must track)
+        let phase = iter as f64 * 0.05;
+        (0..self.dims.tokens * self.dims.d_model)
+            .map(|i| {
+                let base = r.normal() as f32;
+                let drift = ((i % self.dims.d_model) as f64 * 0.1 + phase).sin() as f32;
+                base + 0.8 * drift
+            })
+            .collect()
+    }
+
+    /// Run one FSSDP training iteration over `sources` logical data shards
+    /// (== devices in the distributed run; all mapped to device 0 in the
+    /// reference run). Returns iteration statistics.
+    pub fn step(&mut self, iter: u64, sources: usize) -> anyhow::Result<EngineStats> {
+        let nd = self.topo.num_devices();
+        let dims = self.dims;
+        let mut stats = EngineStats::default();
+
+        // ---- materialization phase: predict → Algorithm 1 → spAG ----
+        let predicted = self.predictor.predict();
+        let placement = sparse_materialize(
+            &self.topo,
+            &self.shards,
+            &predicted,
+            MatConstraints { overlap_degree: self.overlap_degree, mem_slots: self.mem_slots },
+        );
+        let spag = build_spag(&self.topo, &self.shards, &placement)?;
+        stats.spag_sparsity = spag.sparsity;
+        stats.replicas = placement.len() - self.shards.len();
+        run_spag(&mut self.params, &spag)?;
+
+        // ---- gate (HLO) per source batch ----
+        let gate_wt = HostTensor::f32(vec![dims.d_model, dims.experts], self.gate_w.clone());
+        let mut batches: Vec<Vec<f32>> = Vec::with_capacity(sources);
+        let mut gate_w_out: Vec<Vec<f32>> = Vec::with_capacity(sources);
+        let mut gate_idx: Vec<Vec<i32>> = Vec::with_capacity(sources);
+        for s in 0..sources {
+            let x = self.batch(iter, s);
+            let xt = HostTensor::f32(vec![dims.tokens, dims.d_model], x.clone());
+            let out = self.rt.execute("gate_fwd", &[xt, gate_wt.clone()])?;
+            gate_w_out.push(out[1].as_f32()?.to_vec());
+            gate_idx.push(out[2].as_i32()?.to_vec());
+            batches.push(x);
+        }
+
+        // realized loads feed the predictor for the NEXT iteration
+        let mut load_counts = vec![0usize; dims.experts];
+        for idx in &gate_idx {
+            for &e in idx {
+                load_counts[e as usize] += 1;
+            }
+        }
+        let total: usize = load_counts.iter().sum();
+        let realized: Vec<f64> =
+            load_counts.iter().map(|&c| c as f64 / total.max(1) as f64).collect();
+
+        // ---- dispatch (L3) ----
+        // assignments[src_device][expert] — sources map round-robin onto
+        // devices (all on device 0 in the 1-device reference).
+        let mut asg = vec![vec![0usize; dims.experts]; nd];
+        for (s, idx) in gate_idx.iter().enumerate() {
+            let dev = s % nd;
+            for &e in idx {
+                asg[dev][e as usize] += 1;
+            }
+        }
+        let dplan = dispatch(&self.topo, &placement, &asg);
+        stats.remote_tokens = dplan.remote_tokens();
+        stats.straggler = crate::util::stats::straggler_factor(
+            &dplan.device_compute_tokens().iter().map(|&t| t as f64).collect::<Vec<_>>(),
+        );
+
+        // Physical routing: per (dst_device, expert) → list of
+        // (source, token_row, slot (0|1), gate_weight). Routing must follow
+        // the dispatch plan: we re-derive each token's destination with the
+        // same rule (local → same-node → any; round-robin among candidates).
+        let mut routes: BTreeMap<(usize, usize), Vec<(usize, usize, f32)>> = BTreeMap::new();
+        let mut cursors = vec![0usize; dims.experts];
+        for (s, idx) in gate_idx.iter().enumerate() {
+            let src = DeviceId(s % nd);
+            for (t, pair) in idx.chunks(2).enumerate() {
+                for (slot, &e) in pair.iter().enumerate() {
+                    let e = e as usize;
+                    let w = gate_w_out[s][t * 2 + slot];
+                    let dst = if placement.contains(e, src) {
+                        src
+                    } else {
+                        let local = placement.holders_on_node(
+                            &self.topo,
+                            e,
+                            self.topo.node_of(src),
+                        );
+                        let cands: Vec<DeviceId> = if local.is_empty() {
+                            placement.holders(e).collect()
+                        } else {
+                            local
+                        };
+                        let d = cands[cursors[e] % cands.len()];
+                        cursors[e] += 1;
+                        d
+                    };
+                    routes.entry((dst.0, e)).or_default().push((s, t, w));
+                }
+            }
+        }
+
+        // ---- expert forward (HLO), combine, loss, backward (HLO) ----
+        // grads cluster-mem mirrors the materialized placement with zeros
+        let mut grads = ClusterMem::new(nd);
+        for e in 0..dims.experts {
+            for d in placement.holders(e) {
+                grads.dev_mut(d).insert(e, vec![0.0f32; dims.chunk_len()]);
+            }
+        }
+        let mut loss = 0.0f64;
+        let inv_t = 1.0f32 / (dims.tokens * sources) as f32;
+        for (&(dev, e), toks) in &routes {
+            let chunk = self
+                .params
+                .dev(DeviceId(dev))
+                .get(e)
+                .ok_or_else(|| anyhow::anyhow!("device {dev} lacks expert {e}"))?
+                .clone();
+            let (w1, b1, w2, b2) = unpack_chunk(&dims, &chunk);
+            for group in toks.chunks(dims.cap) {
+                // pack token rows (zero-padded to cap)
+                let mut xin = vec![0.0f32; dims.cap * dims.d_model];
+                for (row, &(s, t, _w)) in group.iter().enumerate() {
+                    let src = &batches[s][t * dims.d_model..(t + 1) * dims.d_model];
+                    xin[row * dims.d_model..(row + 1) * dims.d_model].copy_from_slice(src);
+                }
+                let xt = HostTensor::f32(vec![dims.cap, dims.d_model], xin);
+                let y = self.rt.execute(
+                    "expert_ffn_fwd",
+                    &[xt.clone(), w1.clone(), b1.clone(), w2.clone(), b2.clone()],
+                )?;
+                let yv = y[0].as_f32()?;
+                // combine + loss + cotangent: target 0 ⇒ L = ½‖w·y‖²/T,
+                // gy_row = w²·y·(1/T) (chain through the combine weight)
+                let mut gy = vec![0.0f32; dims.cap * dims.d_model];
+                for (row, &(_s, _t, w)) in group.iter().enumerate() {
+                    for c in 0..dims.d_model {
+                        let o = w * yv[row * dims.d_model + c];
+                        loss += 0.5 * (o as f64) * (o as f64) * inv_t as f64;
+                        gy[row * dims.d_model + c] = w * o * inv_t;
+                    }
+                }
+                let gyt = HostTensor::f32(vec![dims.cap, dims.d_model], gy);
+                let out = self.rt.execute(
+                    "expert_ffn_bwd",
+                    &[xt, w1.clone(), b1.clone(), w2.clone(), b2.clone(), gyt],
+                )?;
+                // out = (gx, gw1, gb1, gw2, gb2); gx unused (gate frozen)
+                let acc = grads.dev_mut(DeviceId(dev)).get_mut(e).unwrap();
+                accumulate_grad_chunk(acc, &out[1..5])?;
+            }
+        }
+        stats.loss = loss;
+
+        // ---- spRS: reduce gradients to the shard owners ----
+        let sprs = build_sprs(&self.topo, &placement, &self.shards)?;
+        run_sprs(&mut grads, &sprs, &self.shards)?;
+
+        // ---- optimizer step on owners; release materialized replicas ----
+        for e in 0..dims.experts {
+            let owner = self.owner(e);
+            let g = grads
+                .dev(owner)
+                .get(e)
+                .ok_or_else(|| anyhow::anyhow!("owner of {e} lost its gradient"))?
+                .clone();
+            let p = self.params.dev_mut(owner).get_mut(e).unwrap();
+            self.opt.get_mut(&e).unwrap().update(&self.adam, p, &g);
+        }
+        // re-materialization: drop non-shard replicas (memory reuse, §4)
+        for d in 0..nd {
+            let dev = DeviceId(d);
+            let resident: Vec<usize> = self.params.dev(dev).chunks().collect();
+            for e in resident {
+                if !self.shards.contains(e, dev) {
+                    self.params.dev_mut(dev).remove(e);
+                }
+            }
+        }
+
+        self.predictor.observe(&realized);
+        let _ = &self.rng; // reserved for stochastic extensions
+        Ok(stats)
+    }
+}
+
+/// CLI driver: run the engine and print per-iteration stats.
+pub fn run_demo(
+    artifact_dir: &str,
+    nodes: usize,
+    devices: usize,
+    iters: usize,
+    seed: u64,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(devices % nodes == 0, "devices must divide evenly into nodes");
+    let topo = Topology::cluster_a(nodes, devices / nodes);
+    println!("FSSDP numeric engine on {} ({} devices)", topo.name, devices);
+    let mut engine = FssdpEngine::new(artifact_dir, topo, seed)?;
+    println!(
+        "layer: {} experts, d_model {}, d_ffn {}, {} tokens/source, cap {}",
+        engine.dims.experts,
+        engine.dims.d_model,
+        engine.dims.d_ffn,
+        engine.dims.tokens,
+        engine.dims.cap
+    );
+    for iter in 0..iters {
+        let s = engine.step(iter as u64, devices)?;
+        println!(
+            "iter {iter:>3}  loss {:.5}  λ={:.2}  replicas {}  remote_tokens {}  straggler {:.2}",
+            s.loss, s.spag_sparsity, s.replicas, s.remote_tokens, s.straggler
+        );
+    }
+    println!("done — parameters live on their shard owners (one global copy).");
+    Ok(())
+}

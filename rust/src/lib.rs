@@ -1,0 +1,42 @@
+//! # Hecate — Fully Sharded Sparse Data Parallelism (FSSDP) for MoE training
+//!
+//! Reproduction of *"Hecate: Unlocking Efficient Sparse Model Training via
+//! Fully Sharded Sparse Data Parallelism"* (2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: heterogeneous sharding
+//!   (Algorithm 2), sparse materialization (Algorithm 1), topology-aware
+//!   token dispatch, the [`collectives`] `SparseAllGather` /
+//!   `SparseReduceScatter`, baseline systems (EP, FasterMoE, SmartMoE,
+//!   FlexMoE, FSDP), a discrete-event cluster simulator reproducing the
+//!   paper's figures, and a numeric FSSDP engine running real HLO compute
+//!   via PJRT.
+//! * **L2 (python/compile)** — the JAX Transformer-MoE model, AOT-lowered to
+//!   HLO text in `artifacts/`.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the expert FFN and
+//!   top-2 gating, verified against pure-jnp oracles.
+//!
+//! Python never runs at training time: the Rust binary loads compiled
+//! artifacts through [`runtime`].
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every paper table/figure to a module and bench target.
+
+pub mod bench;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod dispatch;
+pub mod fssdp;
+pub mod loadsim;
+pub mod materialize;
+pub mod metrics;
+pub mod placement;
+pub mod runtime;
+pub mod sharding;
+pub mod sim;
+pub mod systems;
+pub mod testing;
+pub mod topology;
+pub mod train;
+pub mod util;

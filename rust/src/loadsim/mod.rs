@@ -1,0 +1,191 @@
+//! Expert-load dynamics: a generator reproducing the paper's Figure 3
+//! (loads fluctuate and are imbalanced, but drift smoothly between
+//! iterations — "temporal locality", §3.2) and the sliding-window load
+//! predictor Hecate's scheduler uses (w = 5, §4.2).
+
+pub mod predictor;
+
+pub use predictor::LoadPredictor;
+
+use crate::util::rng::Rng;
+
+/// Generates per-iteration expert load distributions for one MoE layer.
+///
+/// Model: the gate's affinity for each expert follows a latent log-weight
+/// vector that random-walks slowly (smooth drift), initialized from a
+/// Dirichlet draw whose concentration controls imbalance; occasional
+/// regime shifts re-draw a subset of weights (the sharper changes visible
+/// early in training in Figure 3).
+#[derive(Debug, Clone)]
+pub struct LoadGenerator {
+    log_w: Vec<f64>,
+    rng: Rng,
+    /// Per-iteration random-walk std on log-weights.
+    pub drift: f64,
+    /// Probability per iteration of a regime shift.
+    pub shift_prob: f64,
+    /// Fraction of experts re-drawn in a shift.
+    pub shift_frac: f64,
+}
+
+impl LoadGenerator {
+    /// `alpha` is the Dirichlet concentration of the initial distribution —
+    /// lower means more skewed loads (Figure 3 shows strong skew; the
+    /// paper's §1 measures up to 5.18× straggler slowdown).
+    pub fn new(experts: usize, alpha: f64, seed: u64) -> LoadGenerator {
+        let mut rng = Rng::new(seed);
+        let p = rng.dirichlet(alpha, experts);
+        let log_w = p.iter().map(|&x| x.max(1e-12).ln()).collect();
+        LoadGenerator { log_w, rng, drift: 0.08, shift_prob: 0.02, shift_frac: 0.2 }
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.log_w.len()
+    }
+
+    /// Advance one iteration and return the token-fraction per expert
+    /// (sums to 1).
+    pub fn step(&mut self) -> Vec<f64> {
+        // smooth drift
+        for w in &mut self.log_w {
+            *w += self.rng.normal() * self.drift;
+        }
+        // occasional sharper regime change
+        if self.rng.f64() < self.shift_prob {
+            let k = ((self.log_w.len() as f64 * self.shift_frac) as usize).max(1);
+            let idx = self.rng.sample_indices(self.log_w.len(), k);
+            for i in idx {
+                self.log_w[i] += self.rng.normal() * 1.0;
+            }
+        }
+        self.fractions()
+    }
+
+    /// Current distribution without advancing.
+    pub fn fractions(&self) -> Vec<f64> {
+        let max = self.log_w.iter().cloned().fold(f64::MIN, f64::max);
+        let exp: Vec<f64> = self.log_w.iter().map(|w| (w - max).exp()).collect();
+        let sum: f64 = exp.iter().sum();
+        exp.iter().map(|e| e / sum).collect()
+    }
+
+    /// Sample integer token counts for `tokens` tokens routed by the gate
+    /// this iteration (multinomial around the current fractions — the
+    /// stochastic gap between predicted and realized loads that Hecate's
+    /// calibration stage handles, §4.2).
+    pub fn sample_counts(&mut self, tokens: usize) -> Vec<usize> {
+        let f = self.fractions();
+        self.rng.multinomial(tokens, &f)
+    }
+}
+
+/// A full-model load trace: one generator per MoE layer, each with its own
+/// skew (Figure 11 shows degrees of imbalance vary strongly across layers).
+#[derive(Debug, Clone)]
+pub struct ModelLoadTrace {
+    pub layers: Vec<LoadGenerator>,
+}
+
+impl ModelLoadTrace {
+    pub fn new(num_layers: usize, experts: usize, seed: u64) -> ModelLoadTrace {
+        let mut meta = Rng::new(seed);
+        let layers = (0..num_layers)
+            .map(|l| {
+                // Layer-dependent skew: alternate strongly- and mildly-skewed
+                // layers, matching the per-layer variation in Figure 11.
+                let alpha = match l % 4 {
+                    0 => 0.08,
+                    1 => 0.25,
+                    2 => 0.6,
+                    _ => 1.5,
+                };
+                LoadGenerator::new(experts, alpha, meta.next_u64())
+            })
+            .collect();
+        ModelLoadTrace { layers }
+    }
+
+    /// Advance all layers one iteration; returns per-layer fractions.
+    pub fn step(&mut self) -> Vec<Vec<f64>> {
+        self.layers.iter_mut().map(|g| g.step()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn fractions_are_distribution() {
+        let mut g = LoadGenerator::new(64, 0.1, 7);
+        for _ in 0..50 {
+            let f = g.step();
+            assert_eq!(f.len(), 64);
+            assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(f.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn loads_are_imbalanced_and_fluctuating() {
+        let mut g = LoadGenerator::new(64, 0.1, 3);
+        let mut stragglers = Vec::new();
+        for _ in 0..100 {
+            let f = g.step();
+            stragglers.push(stats::straggler_factor(&f));
+        }
+        // Figure 3 / §1: strong imbalance — max expert well above mean.
+        assert!(stats::mean(&stragglers) > 3.0, "mean straggler {}", stats::mean(&stragglers));
+    }
+
+    #[test]
+    fn temporal_locality_consecutive_iterations_similar() {
+        // §3.2: load distribution changes smoothly -> consecutive L1
+        // distance should be much smaller than distance to a far iteration.
+        let mut g = LoadGenerator::new(64, 0.2, 11);
+        let mut prev = g.step();
+        let first = prev.clone();
+        let mut consec = Vec::new();
+        for _ in 0..200 {
+            let cur = g.step();
+            let d: f64 = cur.iter().zip(prev.iter()).map(|(a, b)| (a - b).abs()).sum();
+            consec.push(d);
+            prev = cur;
+        }
+        let far: f64 = prev.iter().zip(first.iter()).map(|(a, b)| (a - b).abs()).sum();
+        assert!(stats::mean(&consec) < far / 3.0,
+            "consecutive drift {} vs long-run {}", stats::mean(&consec), far);
+    }
+
+    #[test]
+    fn sample_counts_sum() {
+        let mut g = LoadGenerator::new(16, 0.5, 5);
+        g.step();
+        let counts = g.sample_counts(4096);
+        assert_eq!(counts.iter().sum::<usize>(), 4096);
+    }
+
+    #[test]
+    fn per_layer_skew_varies() {
+        let mut t = ModelLoadTrace::new(12, 64, 9);
+        // settle
+        let mut last = Vec::new();
+        for _ in 0..20 {
+            last = t.step();
+        }
+        let skews: Vec<f64> = last.iter().map(|f| stats::straggler_factor(f)).collect();
+        let max = skews.iter().cloned().fold(f64::MIN, f64::max);
+        let min = skews.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max > 2.0 * min, "layer skews should vary: {skews:?}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = LoadGenerator::new(8, 0.3, 42);
+        let mut b = LoadGenerator::new(8, 0.3, 42);
+        for _ in 0..10 {
+            assert_eq!(a.step(), b.step());
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Sliding-window expert-load predictor (§4.2): Hecate estimates the next
+//! iteration's load distribution as the average of the latest `w`
+//! iterations (the paper uses `w = 5`), relying on the temporal locality of
+//! gate decisions.
+
+use std::collections::VecDeque;
+
+/// Per-layer sliding-window average of expert load fractions.
+#[derive(Debug, Clone)]
+pub struct LoadPredictor {
+    window: usize,
+    history: VecDeque<Vec<f64>>,
+    experts: usize,
+}
+
+impl LoadPredictor {
+    pub fn new(experts: usize, window: usize) -> LoadPredictor {
+        assert!(window >= 1);
+        LoadPredictor { window, history: VecDeque::new(), experts }
+    }
+
+    /// Record the realized load fractions of an iteration.
+    pub fn observe(&mut self, loads: &[f64]) {
+        assert_eq!(loads.len(), self.experts);
+        if self.history.len() == self.window {
+            self.history.pop_front();
+        }
+        self.history.push_back(loads.to_vec());
+    }
+
+    /// Predicted fractions for the next iteration. Uniform until the first
+    /// observation (cold start = EP's assumption).
+    pub fn predict(&self) -> Vec<f64> {
+        if self.history.is_empty() {
+            return vec![1.0 / self.experts as f64; self.experts];
+        }
+        let mut avg = vec![0.0; self.experts];
+        for h in &self.history {
+            for (a, v) in avg.iter_mut().zip(h.iter()) {
+                *a += v;
+            }
+        }
+        let n = self.history.len() as f64;
+        for a in &mut avg {
+            *a /= n;
+        }
+        avg
+    }
+
+    pub fn observations(&self) -> usize {
+        self.history.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loadsim::LoadGenerator;
+    use crate::util::stats;
+
+    #[test]
+    fn cold_start_uniform() {
+        let p = LoadPredictor::new(4, 5);
+        assert_eq!(p.predict(), vec![0.25; 4]);
+    }
+
+    #[test]
+    fn window_averages_last_w() {
+        let mut p = LoadPredictor::new(2, 2);
+        p.observe(&[1.0, 0.0]);
+        p.observe(&[0.0, 1.0]);
+        assert_eq!(p.predict(), vec![0.5, 0.5]);
+        p.observe(&[0.0, 1.0]); // evicts [1,0]
+        assert_eq!(p.predict(), vec![0.0, 1.0]);
+        assert_eq!(p.observations(), 2);
+    }
+
+    #[test]
+    fn predictor_beats_uniform_on_smooth_trace() {
+        // The whole premise of §3.2: with temporal locality, a sliding
+        // window predicts the next distribution far better than uniform.
+        let mut g = LoadGenerator::new(32, 0.15, 21);
+        let mut p = LoadPredictor::new(32, 5);
+        let mut err_pred = Vec::new();
+        let mut err_unif = Vec::new();
+        for _ in 0..10 {
+            p.observe(&g.step());
+        }
+        for _ in 0..200 {
+            let pred = p.predict();
+            let actual = g.step();
+            err_pred.push(
+                pred.iter().zip(actual.iter()).map(|(a, b)| (a - b).abs()).sum::<f64>(),
+            );
+            let u = 1.0 / 32.0;
+            err_unif.push(actual.iter().map(|b| (u - b).abs()).sum::<f64>());
+            p.observe(&actual);
+        }
+        assert!(
+            stats::mean(&err_pred) < 0.4 * stats::mean(&err_unif),
+            "pred {} vs uniform {}",
+            stats::mean(&err_pred),
+            stats::mean(&err_unif)
+        );
+    }
+}

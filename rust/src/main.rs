@@ -1,0 +1,14 @@
+//! `hecate` — the L3 coordinator binary.
+//!
+//! See `hecate help` (or [`hecate::coordinator`]) for subcommands: `repro`
+//! regenerates the paper's tables/figures, `simulate` runs a single
+//! cluster simulation, `train` drives the AOT-compiled model end-to-end
+//! through PJRT, and `fssdp` runs the numeric multi-device FSSDP engine.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = hecate::coordinator::run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,355 @@
+//! Sparse materialization — the paper's **Algorithm 1** (§4.2) plus the
+//! post-gate *calibration* stage and the overlap-degree computation.
+//!
+//! Given the sharded placement `P`, a (predicted) expert-load distribution
+//! `F`, the overlap degree `t` (how many expert materializations can hide
+//! under the attention layer) and the per-device memory headroom `m` (in
+//! expert slots), the scheduler returns a materialization plan `P' ⊇ P`:
+//!
+//! * `t ≤ m`  — replicate the top-`t` loaded experts on **all** devices
+//!   (communication is the binding constraint; memory is plentiful);
+//! * `t > m`  — hand out `|D|·m` replica slots to the top-`t` experts
+//!   proportionally to load, spreading each expert's replicas across nodes
+//!   that do not yet hold it (topology-aware, mitigating inter-node
+//!   All-to-All congestion).
+
+use crate::placement::Placement;
+use crate::topology::{DeviceId, Topology};
+
+/// System constraints for Algorithm 1.
+#[derive(Debug, Clone, Copy)]
+pub struct MatConstraints {
+    /// Overlap degree `t`: max expert materializations hideable under the
+    /// preceding non-MoE computation.
+    pub overlap_degree: usize,
+    /// Memory capacity `m`: expert slots of headroom per device.
+    pub mem_slots: usize,
+}
+
+/// `t = T_non-MoE · bw / expert_size` (§4.2). `bw` must be
+/// [`Topology::planning_bw`] — inter-node bandwidth on heterogeneous
+/// clusters, since the algorithm minimizes cross-node traffic first.
+pub fn overlap_degree(t_non_moe: f64, bw: f64, expert_bytes: f64) -> usize {
+    if expert_bytes <= 0.0 {
+        return 0;
+    }
+    (t_non_moe * bw / expert_bytes).floor() as usize
+}
+
+/// Indices of the top-`t` experts by load, descending.
+pub fn top_by_load(loads: &[f64], t: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..loads.len()).collect();
+    idx.sort_by(|&a, &b| loads[b].partial_cmp(&loads[a]).unwrap().then(a.cmp(&b)));
+    idx.truncate(t);
+    idx
+}
+
+/// Algorithm 1: sparse materialization plan.
+///
+/// `shards` is the pre-condition `P` (must be surjective), `loads` the
+/// per-expert (predicted) fractions `F`.
+pub fn sparse_materialize(
+    topo: &Topology,
+    shards: &Placement,
+    loads: &[f64],
+    cons: MatConstraints,
+) -> Placement {
+    let num_experts = shards.num_chunks();
+    assert_eq!(loads.len(), num_experts);
+    let num_devices = shards.num_devices();
+
+    // line 1: t <- min(t, |E|), m <- min(m, t)
+    let t = cons.overlap_degree.min(num_experts);
+    let m = cons.mem_slots.min(t);
+    // line 2: P' <- P
+    let mut plan = shards.clone();
+    if t == 0 || m == 0 {
+        return plan;
+    }
+
+    let top_t = top_by_load(loads, t);
+
+    if t <= m {
+        // lines 4-5: replicate all top-t experts on every device.
+        for &e in &top_t {
+            for d in 0..num_devices {
+                plan.add(e, DeviceId(d));
+            }
+        }
+        return plan;
+    }
+
+    // lines 7-11: proportional slot assignment under memory pressure.
+    let tot_slots = num_devices * m;
+    let mut free_slots: Vec<usize> = vec![m; num_devices];
+    let top_load_sum: f64 = top_t.iter().map(|&e| loads[e]).sum();
+    let mut remaining = tot_slots;
+
+    for &e in &top_t {
+        if remaining == 0 {
+            break;
+        }
+        // line 9: slots by load share (at least 1 for a top-t expert).
+        let share = if top_load_sum > 0.0 { loads[e] / top_load_sum } else { 0.0 };
+        let n = ((share * tot_slots as f64).round() as usize)
+            .clamp(1, remaining)
+            .min(num_devices);
+        // line 10: distribute n replicas across nodes, prioritizing nodes
+        // that do not yet hold the expert, then devices with free slots.
+        let placed = distribute_replicas(topo, &mut plan, &mut free_slots, e, n);
+        remaining = remaining.saturating_sub(placed);
+    }
+    plan
+}
+
+/// Place up to `n` new replicas of expert `e`, preferring (1) nodes without
+/// any replica, (2) nodes with more free slots, then within a node the
+/// device with most free slots. Returns how many replicas were placed.
+fn distribute_replicas(
+    topo: &Topology,
+    plan: &mut Placement,
+    free_slots: &mut [usize],
+    e: usize,
+    n: usize,
+) -> usize {
+    let mut placed = 0;
+    while placed < n {
+        // Rank nodes: without-expert first, then most free slots.
+        let best_node = topo
+            .all_nodes()
+            .filter(|&node| {
+                topo.devices_on(node).any(|d| free_slots[d.0] > 0 && !plan.contains(e, d))
+            })
+            .min_by_key(|&node| {
+                let has = !plan.holders_on_node(topo, e, node).is_empty();
+                let free: usize = topo.devices_on(node).map(|d| free_slots[d.0]).sum();
+                (has, usize::MAX - free, node.0)
+            });
+        let Some(node) = best_node else { break };
+        let dev = topo
+            .devices_on(node)
+            .filter(|d| free_slots[d.0] > 0 && !plan.contains(e, *d))
+            .max_by_key(|d| (free_slots[d.0], usize::MAX - d.0))
+            .unwrap();
+        plan.add(e, dev);
+        free_slots[dev.0] -= 1;
+        placed += 1;
+    }
+    placed
+}
+
+/// Post-gate calibration (§4.2): once the real token assignment is known,
+/// re-run Algorithm 1 with the realized loads and remaining memory, and
+/// accept the extra materialization only if the *estimated* MoE latency
+/// reduction exceeds the additional on-critical-path communication cost.
+///
+/// Returns `Some(new_plan)` when calibration pays off.
+pub struct CalibrationResult {
+    pub plan: Placement,
+    /// Extra spAG time placed on the critical path.
+    pub extra_comm: f64,
+    /// Estimated MoE latency before/after.
+    pub est_before: f64,
+    pub est_after: f64,
+}
+
+pub fn calibrate(
+    topo: &Topology,
+    _shards: &Placement,
+    current_plan: &Placement,
+    realized_loads: &[f64],
+    remaining_mem_slots: usize,
+    expert_bytes: f64,
+    moe_latency_est: impl Fn(&Placement, &[f64]) -> f64,
+) -> Option<CalibrationResult> {
+    let cons = MatConstraints {
+        // Calibration traffic is *not* overlapped, so the overlap degree no
+        // longer binds; memory is the only constraint.
+        overlap_degree: usize::MAX,
+        mem_slots: remaining_mem_slots,
+    };
+    // Re-run Algorithm 1 seeded from the current materialized placement.
+    let candidate = sparse_materialize(topo, current_plan, realized_loads, cons);
+    if &candidate == current_plan {
+        return None;
+    }
+    let extra = crate::collectives::sparse::build_spag(topo, current_plan, &candidate).ok()?;
+    let extra_comm = extra.time(topo, expert_bytes);
+    let est_before = moe_latency_est(current_plan, realized_loads);
+    let est_after = moe_latency_est(&candidate, realized_loads);
+    if est_after + extra_comm < est_before {
+        Some(CalibrationResult { plan: candidate, extra_comm, est_before, est_after })
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::rng::Rng;
+
+    fn skewed_loads(n: usize, hot: usize) -> Vec<f64> {
+        let mut f = vec![0.5 / (n - 1) as f64; n];
+        f[hot] = 0.5;
+        f
+    }
+
+    #[test]
+    fn overlap_degree_formula() {
+        // t = T_nonMoE * bw / expert_size
+        assert_eq!(overlap_degree(0.01, 12.5e9, 25e6), 5);
+        assert_eq!(overlap_degree(0.0, 12.5e9, 25e6), 0);
+        assert_eq!(overlap_degree(1.0, 1e9, 0.0), 0);
+    }
+
+    #[test]
+    fn plentiful_memory_replicates_top_t_everywhere() {
+        let topo = Topology::cluster_a(2, 4);
+        let shards = Placement::round_robin(16, 8);
+        let loads = skewed_loads(16, 3);
+        let plan = sparse_materialize(
+            &topo,
+            &shards,
+            &loads,
+            MatConstraints { overlap_degree: 2, mem_slots: 8 },
+        );
+        // hottest expert (3) on all 8 devices
+        assert_eq!(plan.replication(3), 8);
+        // exactly top-2 experts are fully replicated
+        let fully: Vec<usize> = (0..16).filter(|&e| plan.replication(e) == 8).collect();
+        assert_eq!(fully.len(), 2);
+        assert!(fully.contains(&3));
+        assert!(shards.is_subset_of(&plan));
+    }
+
+    #[test]
+    fn memory_pressure_respects_slots() {
+        let topo = Topology::cluster_a(2, 4);
+        let shards = Placement::round_robin(16, 8);
+        let loads = skewed_loads(16, 0);
+        let m = 1;
+        let plan = sparse_materialize(
+            &topo,
+            &shards,
+            &loads,
+            MatConstraints { overlap_degree: 8, mem_slots: m },
+        );
+        // no device gained more than m new experts
+        for d in topo.all_devices() {
+            let extra = plan.load_of(d) - shards.load_of(d);
+            assert!(extra <= m, "device {} gained {extra} > m={m}", d.0);
+        }
+        // hottest expert got the most replicas
+        let r0 = plan.replication(0);
+        for e in 1..16 {
+            assert!(plan.replication(e) <= r0);
+        }
+        assert!(r0 > 1);
+    }
+
+    #[test]
+    fn replicas_spread_across_nodes_first() {
+        let topo = Topology::cluster_a(4, 2); // 4 nodes × 2 devices
+        let mut shards = Placement::empty(8, 8);
+        for e in 0..8 {
+            shards.add(e, DeviceId(e % 8));
+        }
+        let loads = skewed_loads(8, 0); // expert 0 hot, lives on node 0
+        let plan = sparse_materialize(
+            &topo,
+            &shards,
+            &loads,
+            MatConstraints { overlap_degree: 8, mem_slots: 1 },
+        );
+        // expert 0's replicas should touch multiple nodes, not pile on node 0
+        let nodes: std::collections::BTreeSet<usize> =
+            plan.holders(0).map(|d| topo.node_of(d).0).collect();
+        assert!(nodes.len() >= 3, "expert 0 replicas on nodes {nodes:?}");
+    }
+
+    #[test]
+    fn zero_constraints_are_noop() {
+        let topo = Topology::flat(4, 1e9);
+        let shards = Placement::round_robin(8, 4);
+        let loads = vec![1.0 / 8.0; 8];
+        for cons in [
+            MatConstraints { overlap_degree: 0, mem_slots: 4 },
+            MatConstraints { overlap_degree: 4, mem_slots: 0 },
+        ] {
+            assert_eq!(sparse_materialize(&topo, &shards, &loads, cons), shards);
+        }
+    }
+
+    #[test]
+    fn prop_plan_is_valid_spag_target() {
+        testing::check(
+            |rng: &mut Rng, size| {
+                let topo = Topology::cluster_a(1 + rng.below(3), 1 + rng.below(4));
+                let nd = topo.num_devices();
+                let experts = (1 + rng.below(4 * size.max(1))).max(nd.min(4));
+                let shards = Placement::round_robin(experts, nd);
+                let loads = rng.dirichlet(0.2, experts);
+                let cons = MatConstraints {
+                    overlap_degree: rng.below(experts + 2),
+                    mem_slots: rng.below(6),
+                };
+                (topo, shards, loads, cons)
+            },
+            |(topo, shards, loads, cons)| {
+                let plan = sparse_materialize(topo, shards, loads, *cons);
+                if !shards.is_subset_of(&plan) {
+                    return Err("P ⊄ P'".into());
+                }
+                crate::placement::validate_spag(shards, &plan).map_err(|e| e.to_string())?;
+                // memory bound: every device gains at most min(m, t) slots
+                let bound = cons.mem_slots.min(cons.overlap_degree);
+                for d in topo.all_devices() {
+                    let extra = plan.load_of(d) - shards.load_of(d);
+                    // in the t<=m branch the gain is top-t (≤ t ≤ bound
+                    // only when t ≤ m); overall gain ≤ max(t, m) ≤ experts
+                    let t = cons.overlap_degree.min(plan.num_chunks());
+                    let m = cons.mem_slots.min(t);
+                    let limit = if t <= m { t } else { bound };
+                    if extra > limit {
+                        return Err(format!("device {} gained {extra} > {limit}", d.0));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn calibration_accepts_only_when_profitable() {
+        let topo = Topology::cluster_a(2, 4);
+        let shards = Placement::round_robin(16, 8);
+        let mut realized = vec![0.02; 16];
+        realized[5] = 0.7; // unexpectedly hot
+        let current = shards.clone(); // predictor missed it entirely
+        // latency estimator: straggler factor of per-device load under the plan
+        let est = |p: &Placement, loads: &[f64]| {
+            let mut dev_load = vec![0.0; 8];
+            for e in 0..16 {
+                let reps: Vec<_> = p.holders(e).collect();
+                for d in &reps {
+                    dev_load[d.0] += loads[e] / reps.len() as f64;
+                }
+            }
+            dev_load.iter().cloned().fold(0.0, f64::max)
+        };
+        let r = calibrate(&topo, &shards, &current, &realized, 4, 1e6, est);
+        assert!(r.is_some(), "hot miss should trigger calibration");
+        let r = r.unwrap();
+        assert!(r.est_after < r.est_before);
+        assert!(r.plan.replication(5) > 1);
+
+        // balanced realized loads: nothing to gain
+        let balanced = vec![1.0 / 16.0; 16];
+        let r2 = calibrate(&topo, &shards, &current, &balanced, 4, 1e6, est);
+        if let Some(r2) = r2 {
+            assert!(r2.est_after + r2.extra_comm < r2.est_before);
+        }
+    }
+}

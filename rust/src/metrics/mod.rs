@@ -1,0 +1,152 @@
+//! Metrics: named timers/counters and table rendering for the repro
+//! drivers (markdown + CSV so EXPERIMENTS.md rows are copy-pasteable).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Accumulating named metrics.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    counters: BTreeMap<String, f64>,
+    timers: BTreeMap<String, Duration>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn add(&mut self, name: &str, v: f64) {
+        *self.counters.entry(name.to_string()).or_default() += v;
+    }
+
+    pub fn counter(&self, name: &str) -> f64 {
+        self.counters.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        *self.timers.entry(name.to_string()).or_default() += t0.elapsed();
+        out
+    }
+
+    pub fn timer(&self, name: &str) -> Duration {
+        self.timers.get(name).copied().unwrap_or_default()
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.counters {
+            s.push_str(&format!("{k}: {v}\n"));
+        }
+        for (k, v) in &self.timers {
+            s.push_str(&format!("{k}: {:?}\n", v));
+        }
+        s
+    }
+}
+
+/// A simple column-aligned table for repro output.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Markdown rendering (also valid for EXPERIMENTS.md).
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = width[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('|');
+        for w in &width {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::new();
+        m.add("tokens", 10.0);
+        m.add("tokens", 5.0);
+        assert_eq!(m.counter("tokens"), 15.0);
+        assert_eq!(m.counter("missing"), 0.0);
+    }
+
+    #[test]
+    fn timers_measure() {
+        let mut m = Metrics::new();
+        let v = m.time("work", || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(m.timer("work") >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn table_markdown_and_csv() {
+        let mut t = Table::new(&["system", "speedup"]);
+        t.row(vec!["Hecate".into(), "3.54".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| Hecate"));
+        assert!(md.contains("|---"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("system,speedup\n"));
+        assert!(csv.contains("Hecate,3.54"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new(&["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,352 @@
+//! Chunk placements — the core abstraction of FSSDP's sparse collectives
+//! (§3.1).
+//!
+//! A logical buffer is split into equal-sized chunks `C = {C_0, C_1, …}`
+//! (one chunk per expert). A *chunk placement* `P ⊆ C × D` records which
+//! chunk is available on which device. The two sparse collectives are
+//! defined by a (pre, post) placement pair:
+//!
+//! * `spAG(P0, P1)` requires `P0` surjective (every chunk somewhere) and
+//!   `P0 ⊆ P1`;
+//! * `spRS(P0, P1)` requires `P1` surjective and `P1 ⊆ P0`.
+//!
+//! [`Placement`] is stored as a per-chunk sorted device list, which is the
+//! access pattern every planner and both collectives need.
+
+use std::collections::BTreeSet;
+
+use crate::topology::{DeviceId, Topology};
+
+/// Index of a chunk (== expert index within an MoE layer).
+pub type ChunkId = usize;
+
+/// A chunk placement `P ⊆ C × D`.
+///
+/// Perf note (EXPERIMENTS.md §Perf): holders are stored as small *sorted
+/// vectors*, not `BTreeSet`s — placements are cloned per layer per
+/// simulated iteration and replication counts are tiny (1–32), so linear
+/// probes on a contiguous Vec beat tree nodes and halve simulator time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    /// `holders[c]` = sorted list of devices holding chunk `c`.
+    holders: Vec<Vec<DeviceId>>,
+    /// Number of devices in the group (for validation).
+    num_devices: usize,
+}
+
+impl Placement {
+    /// Empty placement over `chunks` chunks and `num_devices` devices.
+    pub fn empty(chunks: usize, num_devices: usize) -> Placement {
+        Placement { holders: vec![Vec::new(); chunks], num_devices }
+    }
+
+    /// The canonical EP/sharded placement: chunk `c` on device
+    /// `c % num_devices` (round-robin; even when `chunks % devices == 0`).
+    pub fn round_robin(chunks: usize, num_devices: usize) -> Placement {
+        let mut p = Placement::empty(chunks, num_devices);
+        for c in 0..chunks {
+            p.add(c, DeviceId(c % num_devices));
+        }
+        p
+    }
+
+    /// Fully-replicated placement (every chunk on every device).
+    pub fn full(chunks: usize, num_devices: usize) -> Placement {
+        let mut p = Placement::empty(chunks, num_devices);
+        for c in 0..chunks {
+            for d in 0..num_devices {
+                p.add(c, DeviceId(d));
+            }
+        }
+        p
+    }
+
+    /// Build from an explicit list of `(chunk, device)` pairs.
+    pub fn from_pairs(
+        chunks: usize,
+        num_devices: usize,
+        pairs: impl IntoIterator<Item = (ChunkId, DeviceId)>,
+    ) -> Placement {
+        let mut p = Placement::empty(chunks, num_devices);
+        for (c, d) in pairs {
+            p.add(c, d);
+        }
+        p
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.holders.len()
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.num_devices
+    }
+
+    /// Add `(c, d)` to the placement.
+    pub fn add(&mut self, c: ChunkId, d: DeviceId) {
+        assert!(d.0 < self.num_devices, "device {} out of range", d.0);
+        if let Err(pos) = self.holders[c].binary_search(&d) {
+            self.holders[c].insert(pos, d);
+        }
+    }
+
+    /// Remove `(c, d)`.
+    pub fn remove(&mut self, c: ChunkId, d: DeviceId) {
+        if let Ok(pos) = self.holders[c].binary_search(&d) {
+            self.holders[c].remove(pos);
+        }
+    }
+
+    /// Devices holding chunk `c`.
+    pub fn holders(&self, c: ChunkId) -> impl Iterator<Item = DeviceId> + '_ {
+        self.holders[c].iter().copied()
+    }
+
+    /// Number of replicas of chunk `c`.
+    pub fn replication(&self, c: ChunkId) -> usize {
+        self.holders[c].len()
+    }
+
+    pub fn contains(&self, c: ChunkId, d: DeviceId) -> bool {
+        self.holders[c].binary_search(&d).is_ok()
+    }
+
+    /// Chunks held by device `d`.
+    pub fn chunks_on(&self, d: DeviceId) -> Vec<ChunkId> {
+        (0..self.num_chunks()).filter(|&c| self.contains(c, d)).collect()
+    }
+
+    /// Number of chunks held by device `d` (its memory slots in use).
+    pub fn load_of(&self, d: DeviceId) -> usize {
+        (0..self.num_chunks()).filter(|&c| self.contains(c, d)).count()
+    }
+
+    /// Every chunk is held by at least one device (`P` surjective onto `C`).
+    pub fn is_surjective(&self) -> bool {
+        self.holders.iter().all(|h| !h.is_empty())
+    }
+
+    /// Every chunk is held by *exactly* one device — a sharding.
+    pub fn is_partition(&self) -> bool {
+        self.holders.iter().all(|h| h.len() == 1)
+    }
+
+    /// `self ⊆ other`.
+    pub fn is_subset_of(&self, other: &Placement) -> bool {
+        if self.num_chunks() != other.num_chunks() {
+            return false;
+        }
+        // sorted-merge subset check per chunk
+        self.holders.iter().zip(other.holders.iter()).all(|(a, b)| {
+            let mut j = 0;
+            'outer: for &x in a {
+                while j < b.len() {
+                    match b[j].cmp(&x) {
+                        std::cmp::Ordering::Less => j += 1,
+                        std::cmp::Ordering::Equal => {
+                            j += 1;
+                            continue 'outer;
+                        }
+                        std::cmp::Ordering::Greater => return false,
+                    }
+                }
+                return false;
+            }
+            true
+        })
+    }
+
+    /// Union of two placements over the same chunk/device space.
+    pub fn union(&self, other: &Placement) -> Placement {
+        assert_eq!(self.num_chunks(), other.num_chunks());
+        assert_eq!(self.num_devices, other.num_devices);
+        let mut out = self.clone();
+        for c in 0..other.num_chunks() {
+            for d in other.holders(c) {
+                out.add(c, d);
+            }
+        }
+        out
+    }
+
+    /// Pairs in `self` but not in `base` — the chunks a collective must move.
+    pub fn diff(&self, base: &Placement) -> Vec<(ChunkId, DeviceId)> {
+        let mut out = Vec::new();
+        for c in 0..self.num_chunks() {
+            for d in self.holders(c) {
+                if !base.contains(c, d) {
+                    out.push((c, d));
+                }
+            }
+        }
+        out
+    }
+
+    /// Total number of `(chunk, device)` pairs.
+    pub fn len(&self) -> usize {
+        self.holders.iter().map(|h| h.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The sparsity λ = |Ĉ|/|C| from §3.1: fraction of chunks that require
+    /// any inter-device communication to reach this placement from `base`.
+    pub fn sparsity(&self, base: &Placement) -> f64 {
+        if self.num_chunks() == 0 {
+            return 0.0;
+        }
+        let moved: BTreeSet<ChunkId> = self.diff(base).into_iter().map(|(c, _)| c).collect();
+        moved.len() as f64 / self.num_chunks() as f64
+    }
+
+    /// Replicas of chunk `c` on a given node.
+    pub fn holders_on_node(
+        &self,
+        topo: &Topology,
+        c: ChunkId,
+        node: crate::topology::NodeId,
+    ) -> Vec<DeviceId> {
+        self.holders(c).filter(|&d| topo.node_of(d) == node).collect()
+    }
+}
+
+/// Validated spAG precondition pair: `pre` surjective, `pre ⊆ post`.
+pub fn validate_spag(pre: &Placement, post: &Placement) -> anyhow::Result<()> {
+    if !pre.is_surjective() {
+        anyhow::bail!("spAG precondition must be surjective (every chunk owned somewhere)");
+    }
+    if !pre.is_subset_of(post) {
+        anyhow::bail!("spAG requires pre ⊆ post");
+    }
+    Ok(())
+}
+
+/// Validated spRS precondition pair: `post` surjective, `post ⊆ pre`.
+pub fn validate_sprs(pre: &Placement, post: &Placement) -> anyhow::Result<()> {
+    if !post.is_surjective() {
+        anyhow::bail!("spRS postcondition must be surjective");
+    }
+    if !post.is_subset_of(pre) {
+        anyhow::bail!("spRS requires post ⊆ pre");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn round_robin_is_partition() {
+        let p = Placement::round_robin(64, 8);
+        assert!(p.is_partition());
+        assert!(p.is_surjective());
+        assert_eq!(p.len(), 64);
+        assert_eq!(p.load_of(DeviceId(0)), 8);
+        assert!(p.contains(9, DeviceId(1)));
+    }
+
+    #[test]
+    fn full_replication() {
+        let p = Placement::full(4, 3);
+        assert_eq!(p.len(), 12);
+        assert_eq!(p.replication(2), 3);
+        assert!(!p.is_partition());
+        assert!(p.is_surjective());
+    }
+
+    #[test]
+    fn subset_union_diff() {
+        let base = Placement::round_robin(8, 4);
+        let mut post = base.clone();
+        post.add(0, DeviceId(1));
+        post.add(5, DeviceId(0));
+        assert!(base.is_subset_of(&post));
+        assert!(!post.is_subset_of(&base));
+        let d = post.diff(&base);
+        assert_eq!(d, vec![(0, DeviceId(1)), (5, DeviceId(0))]);
+        assert_eq!(base.union(&post), post);
+    }
+
+    #[test]
+    fn sparsity_counts_moved_chunks() {
+        let base = Placement::round_robin(10, 5);
+        let mut post = base.clone();
+        assert_eq!(post.sparsity(&base), 0.0);
+        post.add(0, DeviceId(3));
+        post.add(0, DeviceId(4)); // same chunk — still one moved chunk
+        post.add(7, DeviceId(0));
+        assert!((post.sparsity(&base) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_rules() {
+        let pre = Placement::round_robin(8, 4);
+        let mut post = pre.clone();
+        post.add(3, DeviceId(0));
+        assert!(validate_spag(&pre, &post).is_ok());
+        assert!(validate_sprs(&post, &pre).is_ok());
+        // broken: pre not surjective
+        let mut bad = pre.clone();
+        bad.remove(2, DeviceId(2));
+        assert!(validate_spag(&bad, &post).is_err());
+        // broken: post missing pre pair
+        let mut bad_post = pre.clone();
+        bad_post.remove(1, DeviceId(1));
+        bad_post.add(1, DeviceId(0));
+        assert!(validate_spag(&pre, &bad_post).is_err());
+        // (1, D0) ∈ bad_post but ∉ pre, so bad_post ⊄ pre
+        assert!(validate_sprs(&pre, &bad_post).is_err());
+    }
+
+    #[test]
+    fn prop_union_superset_and_diff_inverse() {
+        testing::check(
+            |rng: &mut Rng, size| {
+                let chunks = 1 + rng.below(4 * size);
+                let devices = 1 + rng.below(8);
+                let base = Placement::round_robin(chunks, devices);
+                let mut post = base.clone();
+                let extra = rng.below(chunks * devices / 2 + 1);
+                for _ in 0..extra {
+                    post.add(rng.below(chunks), DeviceId(rng.below(devices)));
+                }
+                (base, post)
+            },
+            |(base, post)| {
+                if !base.is_subset_of(post) {
+                    return Err("base ⊄ post after union-building".into());
+                }
+                // post == base ∪ diff(post, base)
+                let rebuilt = Placement::from_pairs(
+                    base.num_chunks(),
+                    base.num_devices(),
+                    base.diff(&Placement::empty(base.num_chunks(), base.num_devices()))
+                        .into_iter()
+                        .chain(post.diff(base)),
+                );
+                if &rebuilt != post {
+                    return Err("base ∪ diff != post".into());
+                }
+                validate_spag(base, post).map_err(|e| e.to_string())?;
+                validate_sprs(post, base).map_err(|e| e.to_string())
+            },
+        );
+    }
+
+    #[test]
+    fn holders_on_node_filters() {
+        let topo = Topology::cluster_a(2, 4);
+        let mut p = Placement::empty(2, 8);
+        p.add(0, DeviceId(0));
+        p.add(0, DeviceId(5));
+        let n0 = p.holders_on_node(&topo, 0, crate::topology::NodeId(0));
+        assert_eq!(n0, vec![DeviceId(0)]);
+        let n1 = p.holders_on_node(&topo, 0, crate::topology::NodeId(1));
+        assert_eq!(n1, vec![DeviceId(5)]);
+    }
+}

@@ -1,0 +1,211 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt` + manifest) and
+//! execute them from the Rust hot path. Python is never invoked here.
+//!
+//! The interchange format is HLO **text** (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! Executables return 1-tuples-of-N (lowered with `return_tuple=True`),
+//! unpacked with `Literal::to_tuple`.
+
+pub mod tensor;
+
+pub use tensor::HostTensor;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one executable input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<TensorSpec> {
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("shape must be an array"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let dtype = j.req("dtype")?.as_str().unwrap_or("float32").to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Raw manifest entry (for extras like `param_order`, `config`).
+    pub raw: Json,
+}
+
+impl EntrySpec {
+    /// `param_order` extra (model entries).
+    pub fn param_order(&self) -> Option<Vec<String>> {
+        self.raw.get("param_order").and_then(Json::as_arr).map(|a| {
+            a.iter().filter_map(|v| v.as_str().map(str::to_string)).collect()
+        })
+    }
+
+    pub fn extra_usize(&self, key: &str) -> Option<usize> {
+        self.raw.get(key).and_then(Json::as_usize)
+    }
+}
+
+/// Loaded manifest + PJRT client + compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    entries: BTreeMap<String, EntrySpec>,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open `dir/manifest.json`, create the CPU PJRT client. Executables
+    /// compile lazily on first use (compile-on-demand keeps `train` fast
+    /// when only one entry is needed).
+    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        let dir = dir.as_ref();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let mut entries = BTreeMap::new();
+        for (name, e) in manifest
+            .req("entries")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("entries must be an object"))?
+        {
+            let file = dir.join(
+                e.req("file")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("file must be a string"))?,
+            );
+            let inputs = e
+                .req("inputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let outputs = e
+                .req("outputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                EntrySpec { name: name.clone(), file, inputs, outputs, raw: e.clone() },
+            );
+        }
+        let client = xla::PjRtClient::cpu()?;
+        crate::log_info!(
+            "pjrt client up: platform={} entries={}",
+            client.platform_name(),
+            entries.len()
+        );
+        Ok(Runtime { client, entries, executables: BTreeMap::new() })
+    }
+
+    pub fn entry(&self, name: &str) -> anyhow::Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no artifact entry `{name}` in manifest"))
+    }
+
+    pub fn entry_names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    /// Compile (idempotent) and cache an executable.
+    pub fn compile(&mut self, name: &str) -> anyhow::Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.entry(name)?.clone();
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            entry
+                .file
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        crate::log_info!("compiled `{name}` in {:.2}s", t0.elapsed().as_secs_f64());
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an entry with host tensors; returns the unpacked outputs.
+    /// Inputs are validated against the manifest specs.
+    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        self.compile(name)?;
+        let entry = self.entry(name)?;
+        anyhow::ensure!(
+            inputs.len() == entry.inputs.len(),
+            "`{name}` expects {} inputs, got {}",
+            entry.inputs.len(),
+            inputs.len()
+        );
+        for (i, (t, spec)) in inputs.iter().zip(entry.inputs.iter()).enumerate() {
+            anyhow::ensure!(
+                t.shape() == spec.shape,
+                "`{name}` input {i}: shape {:?} != manifest {:?}",
+                t.shape(),
+                spec.shape
+            );
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(HostTensor::to_literal)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let exe = self.executables.get(name).expect("compiled above");
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // jax lowers with return_tuple=True: a single tuple of outputs.
+        let parts = result.to_tuple()?;
+        parts.into_iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need artifacts live in rust/tests/runtime_it.rs
+    // (integration, gated on artifacts/ existing). Here: manifest parsing.
+
+    #[test]
+    fn tensor_spec_from_json() {
+        let j = Json::parse(r#"{"shape": [2, 3], "dtype": "float32"}"#).unwrap();
+        let s = TensorSpec::from_json(&j).unwrap();
+        assert_eq!(s.shape, vec![2, 3]);
+        assert_eq!(s.elements(), 6);
+    }
+
+    #[test]
+    fn open_missing_dir_errors_helpfully() {
+        let Err(err) = Runtime::open("/nonexistent-dir").map(|_| ()) else {
+            panic!("expected error");
+        };
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

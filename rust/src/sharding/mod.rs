@@ -1,0 +1,385 @@
+//! Heterogeneous sharding — the paper's **Algorithm 2** (§4.3).
+//!
+//! FSSDP shards every MoE layer across all devices with the *expert* as the
+//! atomic unit. Homogeneous (even) sharding is the initialization; Hecate
+//! periodically re-shards *heterogeneously*: a device may hold anywhere
+//! from 0 to |E| experts of a given layer, as long as the **total** slot
+//! count per device stays balanced across all layers (unified memory space,
+//! §4.3 / Figure 8).
+//!
+//! The algorithm places *underloaded* ("non-overlappable") experts first —
+//! they are the ones whose tokens cannot be absorbed by replicas, so
+//! spreading them evens out each node's inbound All-to-All traffic — then
+//! fills the remaining slots with the overloaded (overlappable) experts.
+
+use crate::materialize::top_by_load;
+use crate::placement::Placement;
+use crate::topology::{DeviceId, Topology};
+
+/// Sharding plan for all MoE layers: `plans[l]` is a partition placement of
+/// layer `l`'s experts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardingPlan {
+    pub layers: Vec<Placement>,
+}
+
+impl ShardingPlan {
+    /// Total expert slots used on a device across all layers.
+    pub fn slots_used(&self, d: DeviceId) -> usize {
+        self.layers.iter().map(|p| p.load_of(d)).sum()
+    }
+
+    /// Max - min slot usage across devices (memory imbalance; 0 = balanced).
+    pub fn slot_imbalance(&self, num_devices: usize) -> usize {
+        let used: Vec<usize> = (0..num_devices).map(|d| self.slots_used(DeviceId(d))).collect();
+        used.iter().max().unwrap() - used.iter().min().unwrap()
+    }
+}
+
+/// Homogeneous (even) sharding: layer-wise round-robin. This is both the
+/// initialization of Hecate and the static placement of EP.
+pub fn homogeneous(num_layers: usize, experts: usize, num_devices: usize) -> ShardingPlan {
+    ShardingPlan {
+        layers: (0..num_layers)
+            .map(|_| Placement::round_robin(experts, num_devices))
+            .collect(),
+    }
+}
+
+/// Algorithm 2: heterogeneous sharding.
+///
+/// * `loads[l][e]` — load distribution `F^g` across all MoE layers;
+/// * `t` — overlap degree (top-`t` experts per layer are "overlappable" and
+///   placed last, since sparse materialization will replicate them anyway).
+pub fn heterogeneous(topo: &Topology, loads: &[Vec<f64>], t: usize) -> ShardingPlan {
+    heterogeneous_sticky(topo, loads, t, None)
+}
+
+/// Algorithm 2 with *stickiness*: prefer each expert's previous owner when
+/// the balance objective is indifferent. The paper places overlappable
+/// experts "arbitrarily" (line 16) and observes that underloaded experts'
+/// loads change slowly (§4.3) — so successive re-shards should move few
+/// experts, keeping re-shard traffic off the critical path ("executing
+/// only when shards change", §5.1). Without stickiness a greedy packer
+/// reshuffles wholesale on every trigger and pays ~full-model movement.
+pub fn heterogeneous_sticky(
+    topo: &Topology,
+    loads: &[Vec<f64>],
+    t: usize,
+    prev: Option<&ShardingPlan>,
+) -> ShardingPlan {
+    let num_layers = loads.len();
+    assert!(num_layers > 0);
+    let experts = loads[0].len();
+    let nd = topo.num_devices();
+
+    // line 1-2: J = top-t per layer (overlappable), J' = the rest.
+    let overlappable: Vec<Vec<usize>> = loads
+        .iter()
+        .map(|f| top_by_load(f, t.min(experts)))
+        .collect();
+
+    // line 3: available slots per device — even share of ALL layers' experts.
+    let total_experts = num_layers * experts;
+    let base = total_experts / nd;
+    let rem = total_experts % nd;
+    // first `rem` devices take one extra slot when not divisible.
+    let mut slots: Vec<usize> = (0..nd).map(|d| base + usize::from(d < rem)).collect();
+
+    let mut plans: Vec<Placement> = (0..num_layers)
+        .map(|_| Placement::empty(experts, nd))
+        .collect();
+
+    // Per-layer, per-node/device accumulated load (for least-loaded search).
+    let mut node_load = vec![vec![0.0f64; topo.nodes]; num_layers];
+    let mut dev_load = vec![vec![0.0f64; nd]; num_layers];
+
+    // lines 6-14: place underloaded experts first, layers ordered by their
+    // hottest underloaded expert, experts by load descending.
+    let mut layer_order: Vec<usize> = (0..num_layers).collect();
+    let layer_max: Vec<f64> = (0..num_layers)
+        .map(|l| {
+            loads[l]
+                .iter()
+                .enumerate()
+                .filter(|(e, _)| !overlappable[l].contains(e))
+                .map(|(_, &f)| f)
+                .fold(0.0, f64::max)
+        })
+        .collect();
+    layer_order.sort_by(|&a, &b| layer_max[b].partial_cmp(&layer_max[a]).unwrap());
+
+    for &l in &layer_order {
+        let mut under: Vec<usize> =
+            (0..experts).filter(|e| !overlappable[l].contains(e)).collect();
+        under.sort_by(|&a, &b| loads[l][b].partial_cmp(&loads[l][a]).unwrap());
+        for e in under {
+            // line 10: least-loaded node; tie -> fewer available slots.
+            let node = topo
+                .all_nodes()
+                .filter(|&n| topo.devices_on(n).any(|d| slots[d.0] > 0))
+                .min_by(|&a, &b| {
+                    let la = node_load[l][a.0];
+                    let lb = node_load[l][b.0];
+                    la.partial_cmp(&lb).unwrap().then_with(|| {
+                        let sa: usize = topo.devices_on(a).map(|d| slots[d.0]).sum();
+                        let sb: usize = topo.devices_on(b).map(|d| slots[d.0]).sum();
+                        sa.cmp(&sb)
+                    })
+                })
+                .expect("ran out of slots — total slots must equal total experts");
+            // line 11: least-loaded device on that node; tie -> fewer slots.
+            let mut dev = topo
+                .devices_on(node)
+                .filter(|d| slots[d.0] > 0)
+                .min_by(|a, b| {
+                    dev_load[l][a.0]
+                        .partial_cmp(&dev_load[l][b.0])
+                        .unwrap()
+                        .then(slots[a.0].cmp(&slots[b.0]))
+                })
+                .unwrap();
+            // stickiness: keep the previous owner when the balance penalty
+            // is at most this expert's own load (loads of underloaded
+            // experts drift slowly — §4.3).
+            if let Some(prev_dev) = prev
+                .and_then(|p| p.layers.get(l))
+                .and_then(|pl| pl.holders(e).next())
+            {
+                if prev_dev != dev
+                    && slots[prev_dev.0] > 0
+                    && dev_load[l][prev_dev.0] <= dev_load[l][dev.0] + loads[l][e]
+                {
+                    dev = prev_dev;
+                }
+            }
+            // lines 12-13
+            plans[l].add(e, dev);
+            slots[dev.0] -= 1;
+            node_load[l][topo.node_of(dev).0] += loads[l][e];
+            dev_load[l][dev.0] += loads[l][e];
+        }
+    }
+
+    // line 16: fill remaining slots with the overlappable experts. The paper
+    // places these "arbitrarily" — sparse materialization will replicate
+    // them anyway — so we keep each on its previous owner when possible
+    // (zero movement on re-shard), falling back to least-loaded.
+    for l in 0..num_layers {
+        let mut over = overlappable[l].clone();
+        over.sort_by(|&a, &b| loads[l][b].partial_cmp(&loads[l][a]).unwrap());
+        for e in over {
+            let prev_dev = prev
+                .and_then(|p| p.layers.get(l))
+                .and_then(|pl| pl.holders(e).next())
+                .filter(|d| slots[d.0] > 0);
+            let dev = prev_dev.unwrap_or_else(|| {
+                topo.all_devices()
+                    .filter(|d| slots[d.0] > 0)
+                    .min_by(|a, b| {
+                        dev_load[l][a.0]
+                            .partial_cmp(&dev_load[l][b.0])
+                            .unwrap()
+                            .then(a.0.cmp(&b.0))
+                    })
+                    .expect("slot arithmetic violated")
+            });
+            plans[l].add(e, dev);
+            slots[dev.0] -= 1;
+            dev_load[l][dev.0] += loads[l][e];
+            node_load[l][topo.node_of(dev).0] += loads[l][e];
+        }
+    }
+
+    ShardingPlan { layers: plans }
+}
+
+/// Bytes a re-shard must move: experts whose owner changed carry parameters
+/// *and* optimizer states (this is the cost §4.3 amortizes by re-sharding
+/// rarely).
+pub fn reshard_bytes(
+    old: &ShardingPlan,
+    new: &ShardingPlan,
+    expert_param_bytes: usize,
+    expert_opt_bytes: usize,
+) -> usize {
+    let mut moved = 0usize;
+    for (po, pn) in old.layers.iter().zip(new.layers.iter()) {
+        for e in 0..po.num_chunks() {
+            let o: Vec<_> = po.holders(e).collect();
+            let n: Vec<_> = pn.holders(e).collect();
+            if o != n {
+                moved += 1;
+            }
+        }
+    }
+    moved * (expert_param_bytes + expert_opt_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::rng::Rng;
+    use crate::util::stats;
+
+    fn gen_loads(rng: &mut Rng, layers: usize, experts: usize) -> Vec<Vec<f64>> {
+        (0..layers).map(|_| rng.dirichlet(0.2, experts)).collect()
+    }
+
+    #[test]
+    fn homogeneous_is_balanced_partition() {
+        let plan = homogeneous(12, 64, 8);
+        assert_eq!(plan.layers.len(), 12);
+        for p in &plan.layers {
+            assert!(p.is_partition());
+        }
+        assert_eq!(plan.slot_imbalance(8), 0);
+        assert_eq!(plan.slots_used(DeviceId(0)), 12 * 8);
+    }
+
+    #[test]
+    fn heterogeneous_places_every_expert_once() {
+        let topo = Topology::cluster_a(2, 4);
+        let mut rng = Rng::new(5);
+        let loads = gen_loads(&mut rng, 6, 16);
+        let plan = heterogeneous(&topo, &loads, 4);
+        for p in &plan.layers {
+            assert!(p.is_partition(), "each expert exactly one owner");
+        }
+    }
+
+    #[test]
+    fn heterogeneous_keeps_memory_balance() {
+        // Figure 8's point: shard counts per layer may differ wildly, but
+        // total memory per device stays even.
+        let topo = Topology::cluster_a(4, 8);
+        let mut rng = Rng::new(6);
+        let loads = gen_loads(&mut rng, 12, 64);
+        let plan = heterogeneous(&topo, &loads, 8);
+        assert_eq!(plan.slot_imbalance(32), 0, "12*64 divisible by 32");
+        // ...and is genuinely heterogeneous: some layer has an uneven split.
+        let uneven = plan.layers.iter().any(|p| {
+            let per_dev: Vec<usize> = (0..32).map(|d| p.load_of(DeviceId(d))).collect();
+            per_dev.iter().max() != per_dev.iter().min()
+        });
+        assert!(uneven, "expected at least one heterogeneous layer");
+    }
+
+    #[test]
+    fn heterogeneous_balances_underloaded_traffic_better_than_homogeneous() {
+        // The node-level inbound load of underloaded experts should be more
+        // even under Algorithm 2 than under a pathological static layout.
+        let topo = Topology::cluster_a(4, 2);
+        let mut rng = Rng::new(9);
+        let loads = gen_loads(&mut rng, 8, 16);
+        let t = 4;
+        let hetero = heterogeneous(&topo, &loads, t);
+        let homo = homogeneous(8, 16, topo.num_devices());
+        let mean_cv = |plan: &ShardingPlan| {
+            let mut cvs = Vec::new();
+            for (l, p) in plan.layers.iter().enumerate() {
+                let over = top_by_load(&loads[l], t);
+                let mut node_load = vec![0.0; topo.nodes];
+                for e in 0..16 {
+                    if over.contains(&e) {
+                        continue;
+                    }
+                    let d = p.holders(e).next().unwrap();
+                    node_load[topo.node_of(d).0] += loads[l][e];
+                }
+                cvs.push(stats::cv(&node_load));
+            }
+            stats::mean(&cvs)
+        };
+        let (h, o) = (mean_cv(&hetero), mean_cv(&homo));
+        assert!(h < o, "heterogeneous node CV {h:.3} should beat homogeneous {o:.3}");
+    }
+
+    #[test]
+    fn indivisible_totals_balance_within_one() {
+        let topo = Topology::cluster_a(1, 3);
+        let mut rng = Rng::new(10);
+        let loads = gen_loads(&mut rng, 2, 8); // 16 experts over 3 devices
+        let plan = heterogeneous(&topo, &loads, 2);
+        assert!(plan.slot_imbalance(3) <= 1);
+        for p in &plan.layers {
+            assert!(p.is_partition());
+        }
+    }
+
+    #[test]
+    fn reshard_bytes_counts_moves() {
+        let a = homogeneous(2, 4, 2);
+        let mut b = a.clone();
+        // move expert 0 of layer 0 from device 0 to 1
+        b.layers[0].remove(0, DeviceId(0));
+        b.layers[0].add(0, DeviceId(1));
+        assert_eq!(reshard_bytes(&a, &b, 10, 60), 70);
+        assert_eq!(reshard_bytes(&a, &a, 10, 60), 0);
+    }
+
+    #[test]
+    fn sticky_resharding_moves_few_experts_on_small_drift() {
+        let topo = Topology::cluster_a(4, 8);
+        let mut rng = Rng::new(31);
+        let loads = gen_loads(&mut rng, 12, 64);
+        let plan = heterogeneous(&topo, &loads, 8);
+        // small multiplicative drift on every load
+        let drifted: Vec<Vec<f64>> = loads
+            .iter()
+            .map(|f| {
+                let nudged: Vec<f64> =
+                    f.iter().map(|&x| x * (1.0 + 0.05 * rng.normal())).collect();
+                let s: f64 = nudged.iter().sum();
+                nudged.iter().map(|x| x / s).collect()
+            })
+            .collect();
+        let sticky = heterogeneous_sticky(&topo, &drifted, 8, Some(&plan));
+        let fresh = heterogeneous(&topo, &drifted, 8);
+        let moved = |new: &ShardingPlan| {
+            reshard_bytes(&plan, new, 1, 0) // 1 byte/expert => count of moves
+        };
+        let (ms, mf) = (moved(&sticky), moved(&fresh));
+        assert!(
+            ms * 4 < mf.max(1),
+            "sticky should move far fewer experts: sticky {ms} vs fresh {mf}"
+        );
+        // and stay a valid balanced partition
+        for p in &sticky.layers {
+            assert!(p.is_partition());
+        }
+        assert!(sticky.slot_imbalance(topo.num_devices()) <= 1);
+    }
+
+    #[test]
+    fn prop_heterogeneous_invariants() {
+        testing::check(
+            |rng: &mut Rng, size| {
+                let topo = Topology::cluster_a(1 + rng.below(3), 1 + rng.below(4));
+                let layers = 1 + rng.below(size.max(1) * 2);
+                let experts = topo.num_devices() * (1 + rng.below(4));
+                let loads = gen_loads(rng, layers, experts);
+                let t = rng.below(experts / 2 + 1);
+                (topo, loads, t)
+            },
+            |(topo, loads, t)| {
+                let plan = heterogeneous(topo, loads, *t);
+                for (l, p) in plan.layers.iter().enumerate() {
+                    if !p.is_partition() {
+                        return Err(format!("layer {l} not a partition"));
+                    }
+                }
+                let nd = topo.num_devices();
+                let total: usize = loads.len() * loads[0].len();
+                if plan.slot_imbalance(nd) > usize::from(total % nd != 0) {
+                    return Err(format!(
+                        "memory imbalance {} with total={total} devices={nd}",
+                        plan.slot_imbalance(nd)
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,375 @@
+//! Per-iteration discrete-event simulation of MoE training.
+//!
+//! For each iteration the engine: draws the realized expert loads from the
+//! [`crate::loadsim`] trace, lets the system under test plan placements
+//! (seeing only *predicted* loads where the real system would), dispatches
+//! tokens with [`crate::dispatch`], and accumulates the timeline:
+//!
+//! ```text
+//!  per layer:  attn fwd ───── MoE: A2A → expert fwd → A2A ── … ──
+//!              attn bwd(2×) ─ MoE bwd (2× fwd) ─ grad-sync ──
+//!  overlap:    spAG hides under attn fwd; spRS (+re-mat spAG) and grad
+//!              AllReduce hide under attn bwd; leftovers are exposed.
+//! ```
+//!
+//! The cost model reproduces the paper's §3.1 bottleneck analysis: A2A is
+//! bound by the busiest device port / node NIC, expert compute by the most
+//! loaded device, and collective times come from the α–β models in
+//! [`crate::collectives`].
+
+use crate::collectives::dense;
+use crate::config::{ModelConfig, SystemConfig, TrainConfig};
+use crate::dispatch::dispatch;
+use crate::loadsim::{LoadPredictor, ModelLoadTrace};
+use crate::systems::{build_system, GradSync, MatComm, MoeMemory, PlanCtx};
+use crate::topology::Topology;
+use crate::util::stats;
+
+/// Timing breakdown of one iteration (seconds).
+#[derive(Debug, Clone, Default)]
+pub struct IterationStats {
+    /// Dense attention compute, fwd + bwd, all layers.
+    pub attn: f64,
+    /// Expert compute (straggler-bound), fwd + bwd, all layers.
+    pub expert: f64,
+    /// All-to-All dispatch + combine, fwd + bwd, all layers.
+    pub a2a: f64,
+    /// Sparse/dense materialization + grad-sync time NOT hidden by overlap.
+    pub exposed_comm: f64,
+    /// Critical-path rearrangement traffic (incl. re-shard / transitions).
+    pub rearrange: f64,
+    /// Per-layer MoE time (a2a + expert + exposed) for Figure 11.
+    pub per_layer_moe: Vec<f64>,
+}
+
+impl IterationStats {
+    pub fn total(&self) -> f64 {
+        self.attn + self.expert + self.a2a + self.exposed_comm + self.rearrange
+    }
+}
+
+/// Aggregated simulation outcome.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub system: String,
+    /// Mean iteration time over the measured window.
+    pub iter_time: f64,
+    pub breakdown: IterationStats,
+    pub memory: MoeMemory,
+    /// Mean per-layer MoE time.
+    pub per_layer_moe: Vec<f64>,
+}
+
+/// Simulation-wide knobs.
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    pub iterations: usize,
+    pub warmup: usize,
+    /// Load-trace skew (Dirichlet α per layer family; see `ModelLoadTrace`).
+    pub seed: u64,
+    /// Override: force perfectly balanced loads (the §1 EP contrast).
+    pub balanced_loads: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { iterations: 60, warmup: 10, seed: 42, balanced_loads: false }
+    }
+}
+
+/// Simulate one system on one workload. Returns the averaged result.
+pub fn simulate(
+    topo: &Topology,
+    model: &ModelConfig,
+    sys_cfg: &SystemConfig,
+    train: &TrainConfig,
+    opts: &SimOptions,
+) -> SimResult {
+    let tokens_per_device = train.batch_per_device * model.seq_len;
+    let attn_fwd = model.attention_fwd_flops(tokens_per_device) / topo.device_flops;
+    let ctx = PlanCtx {
+        topo: topo.clone(),
+        model: model.clone(),
+        tokens_per_device,
+        attn_fwd_time: attn_fwd,
+    };
+    let mut system = build_system(sys_cfg);
+    let mut trace = ModelLoadTrace::new(model.layers, model.experts, opts.seed);
+    let mut predictors: Vec<LoadPredictor> = (0..model.layers)
+        .map(|_| LoadPredictor::new(model.experts, train.predict_window))
+        .collect();
+
+    let nd = topo.num_devices();
+    let token_bytes = (model.d_model * model.param_bytes) as f64;
+    let mut measured: Vec<IterationStats> = Vec::new();
+    let mut memory = MoeMemory::default();
+
+    for iter in 0..opts.iterations {
+        let realized: Vec<Vec<f64>> = if opts.balanced_loads {
+            vec![vec![1.0 / model.experts as f64; model.experts]; model.layers]
+        } else {
+            trace.step()
+        };
+        let predicted: Vec<Vec<f64>> =
+            predictors.iter().map(|p| p.predict()).collect();
+        let plan = system.plan(iter, &ctx, &predicted, &realized);
+
+        let mut it = IterationStats {
+            rearrange: plan.global_critical_time,
+            ..Default::default()
+        };
+        for (l, lp) in plan.layers.iter().enumerate() {
+            // ---- dense attention (fwd + 2× bwd) ----
+            let attn = 3.0 * attn_fwd;
+            it.attn += attn;
+
+            // ---- token dispatch / All-to-All ----
+            // every device sees the same load distribution (iid data
+            // parallel batches), realized[l]
+            let asg: Vec<Vec<usize>> = (0..nd)
+                .map(|_| {
+                    realized[l]
+                        .iter()
+                        .map(|f| (f * tokens_per_device as f64 * model.top_k as f64).round()
+                            as usize)
+                        .collect()
+                })
+                .collect();
+            let dplan = dispatch(&ctx.topo, &lp.placement, &asg);
+            let matrix = dense::tokens_to_matrix(&dplan.sends, token_bytes);
+            // dispatch + combine in fwd, and again in bwd: 4 one-way A2As
+            let a2a = 4.0 * dense::alltoall_time(&ctx.topo, &matrix);
+            it.a2a += a2a;
+
+            // ---- expert compute (straggler-bound) ----
+            let per_dev = dplan.device_compute_tokens();
+            let max_tokens = per_dev.iter().copied().max().unwrap_or(0);
+            let fwd = model.expert_fwd_flops(max_tokens) / topo.device_flops;
+            let expert = 3.0 * fwd; // fwd + 2× bwd
+            it.expert += expert;
+
+            // ---- parameter collectives & overlap accounting ----
+            let window_fwd = attn_fwd;
+            let window_bwd = 2.0 * attn_fwd;
+            let (mut exposed, mut used_bwd) = (0.0, 0.0);
+            match &lp.mat_comm {
+                MatComm::None => {}
+                MatComm::Spag { time, remat } => {
+                    // split: spAG ~ half the pair cost (Eq. 1 symmetry)
+                    let spag = time * 0.5;
+                    let sprs = time * 0.5;
+                    exposed += (spag - window_fwd).max(0.0);
+                    let bwd_comm = sprs + if *remat { spag } else { 0.0 };
+                    used_bwd = bwd_comm.min(window_bwd);
+                    exposed += (bwd_comm - window_bwd).max(0.0);
+                }
+                MatComm::DenseAg { time } => {
+                    // AG before fwd, AG before bwd (re-gather), RS after bwd
+                    exposed += (time - window_fwd).max(0.0);
+                    let bwd_comm = 2.0 * time;
+                    used_bwd = bwd_comm.min(window_bwd);
+                    exposed += (bwd_comm - window_bwd).max(0.0);
+                }
+                MatComm::Critical { time } => {
+                    it.rearrange += time;
+                }
+            }
+            // gradient sync of replicas overlaps with what's left of bwd
+            if let GradSync::AllReduceReplicas = lp.grad_sync {
+                let mut ar = 0.0;
+                for e in 0..lp.placement.num_chunks() {
+                    let group: Vec<_> = lp.placement.holders(e).collect();
+                    if group.len() > 1 {
+                        ar += dense::allreduce_time(&ctx.topo, &group, ctx.expert_bytes());
+                    }
+                }
+                let leftover = (window_bwd - used_bwd).max(0.0);
+                exposed += (ar - leftover).max(0.0);
+            }
+            it.exposed_comm += exposed;
+            it.per_layer_moe.push(a2a + expert + exposed);
+        }
+
+        // feed the predictors AFTER planning (next iteration sees this one)
+        for (p, r) in predictors.iter_mut().zip(realized.iter()) {
+            p.observe(r);
+        }
+
+        if iter >= opts.warmup {
+            measured.push(it);
+        }
+        if iter + 1 == opts.iterations {
+            memory = system.memory(&ctx, &plan);
+        }
+    }
+
+    let n = measured.len().max(1) as f64;
+    let mut agg = IterationStats::default();
+    let mut per_layer = vec![0.0; model.layers];
+    for it in &measured {
+        agg.attn += it.attn / n;
+        agg.expert += it.expert / n;
+        agg.a2a += it.a2a / n;
+        agg.exposed_comm += it.exposed_comm / n;
+        agg.rearrange += it.rearrange / n;
+        for (l, t) in it.per_layer_moe.iter().enumerate() {
+            per_layer[l] += t / n;
+        }
+    }
+    SimResult {
+        system: sys_cfg.kind.name().to_string(),
+        iter_time: agg.total(),
+        breakdown: agg,
+        memory,
+        per_layer_moe: per_layer,
+    }
+}
+
+/// Convenience: speedups of `systems` relative to the first entry (EP in
+/// the paper's figures).
+pub fn relative_speedups(results: &[SimResult]) -> Vec<f64> {
+    let base = results[0].iter_time;
+    results.iter().map(|r| base / r.iter_time).collect()
+}
+
+/// Geo-mean speedup of `a` over `b` across paired workload results.
+pub fn geomean_speedup(a: &[f64], b: &[f64]) -> f64 {
+    let ratios: Vec<f64> = a.iter().zip(b.iter()).map(|(x, y)| y / x).collect();
+    stats::geomean(&ratios)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterPreset, SystemKind};
+
+    fn quick_opts() -> SimOptions {
+        SimOptions { iterations: 20, warmup: 5, seed: 7, balanced_loads: false }
+    }
+
+    fn setup() -> (Topology, ModelConfig, TrainConfig) {
+        let topo = ClusterPreset::A.build(2, 4);
+        let model = ModelConfig::preset("gpt-moe-s").unwrap().with_experts(16);
+        let train = TrainConfig { batch_per_device: 1, ..Default::default() };
+        (topo, model, train)
+    }
+
+    #[test]
+    fn ep_imbalanced_slower_than_balanced() {
+        // §1: imbalanced loads slow EP down by up to 5.18×.
+        let (topo, model, train) = setup();
+        let cfg = SystemConfig::new(SystemKind::Ep);
+        let imb = simulate(&topo, &model, &cfg, &train, &quick_opts());
+        let bal = simulate(
+            &topo,
+            &model,
+            &cfg,
+            &train,
+            &SimOptions { balanced_loads: true, ..quick_opts() },
+        );
+        let slowdown = imb.iter_time / bal.iter_time;
+        assert!(slowdown > 1.5, "EP slowdown under imbalance: {slowdown:.2}");
+    }
+
+    #[test]
+    fn hecate_beats_ep_under_imbalance() {
+        let (topo, model, train) = setup();
+        let ep = simulate(&topo, &model, &SystemConfig::new(SystemKind::Ep), &train, &quick_opts());
+        let hec = simulate(
+            &topo,
+            &model,
+            &SystemConfig::new(SystemKind::Hecate),
+            &train,
+            &quick_opts(),
+        );
+        let speedup = ep.iter_time / hec.iter_time;
+        assert!(speedup > 1.2, "Hecate speedup over EP: {speedup:.2}");
+    }
+
+    #[test]
+    fn hecate_rm_slower_but_leaner_than_hecate() {
+        let (topo, model, train) = setup();
+        let hec = simulate(
+            &topo,
+            &model,
+            &SystemConfig::new(SystemKind::Hecate),
+            &train,
+            &quick_opts(),
+        );
+        let rm = simulate(
+            &topo,
+            &model,
+            &SystemConfig::new(SystemKind::HecateRm),
+            &train,
+            &quick_opts(),
+        );
+        assert!(rm.iter_time >= hec.iter_time, "RM pays re-materialization");
+        assert!(rm.memory.params < hec.memory.params, "RM frees parameter memory");
+    }
+
+    #[test]
+    fn fsdp_exposed_comm_dominates() {
+        // §2.4: FSDP's |E|× communication cannot hide under attention.
+        let (topo, model, train) = setup();
+        let fsdp = simulate(
+            &topo,
+            &model,
+            &SystemConfig::new(SystemKind::Fsdp),
+            &train,
+            &quick_opts(),
+        );
+        assert!(
+            fsdp.breakdown.exposed_comm > fsdp.breakdown.attn,
+            "exposed {} vs attn {}",
+            fsdp.breakdown.exposed_comm,
+            fsdp.breakdown.attn
+        );
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let (topo, model, train) = setup();
+        let r = simulate(
+            &topo,
+            &model,
+            &SystemConfig::new(SystemKind::Hecate),
+            &train,
+            &quick_opts(),
+        );
+        let b = &r.breakdown;
+        assert!((b.total() - r.iter_time).abs() < 1e-12);
+        assert!(b.attn > 0.0 && b.a2a > 0.0 && b.expert > 0.0);
+        assert_eq!(r.per_layer_moe.len(), model.layers);
+    }
+
+    #[test]
+    fn memory_ordering_matches_figure13() {
+        // SmartMoE ≈ EP ≤ Hecate-RM < Hecate < FlexMoE.
+        let (topo, model, train) = setup();
+        let o = quick_opts();
+        let mem = |k: SystemKind| {
+            simulate(&topo, &model, &SystemConfig::new(k), &train, &o).memory.total()
+        };
+        let ep = mem(SystemKind::Ep);
+        let smart = mem(SystemKind::SmartMoe);
+        let hec = mem(SystemKind::Hecate);
+        let rm = mem(SystemKind::HecateRm);
+        let flex = mem(SystemKind::FlexMoe);
+        assert!((smart - ep).abs() < 1e-6 * ep, "SmartMoE ≈ EP");
+        assert!(rm < hec, "RM below Hecate");
+        assert!(flex > hec, "FlexMoE above Hecate (replicated opt)");
+    }
+
+    #[test]
+    fn speedup_helpers() {
+        let (topo, model, train) = setup();
+        let o = quick_opts();
+        let results = vec![
+            simulate(&topo, &model, &SystemConfig::new(SystemKind::Ep), &train, &o),
+            simulate(&topo, &model, &SystemConfig::new(SystemKind::Hecate), &train, &o),
+        ];
+        let sp = relative_speedups(&results);
+        assert_eq!(sp[0], 1.0);
+        assert!(sp[1] > 1.0);
+    }
+}

@@ -1,0 +1,5 @@
+//! Discrete-event per-iteration simulator (placeholder — filled by the
+//! systems/simulator milestone).
+
+pub mod engine;
+pub mod report;

@@ -1,0 +1,391 @@
+//! Figure/table reproduction drivers. Each function regenerates one paper
+//! artifact (Table 1, Figures 3 and 9–15, plus the §1 claims) as a
+//! [`Table`], printed by `hecate repro` and recorded in EXPERIMENTS.md.
+
+use crate::config::{ClusterPreset, ModelConfig, SystemConfig, SystemKind, TrainConfig};
+use crate::loadsim::ModelLoadTrace;
+use crate::metrics::Table;
+use crate::sim::engine::{simulate, SimOptions, SimResult};
+use crate::util::stats;
+
+fn fmt(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+fn ms(x: f64) -> String {
+    format!("{:.1}", x * 1e3)
+}
+
+fn gb(x: f64) -> String {
+    format!("{:.2}", x / 1e9)
+}
+
+/// Default measured window for figure reproduction.
+pub fn default_opts() -> SimOptions {
+    SimOptions { iterations: 60, warmup: 10, seed: 42, balanced_loads: false }
+}
+
+/// Paper methodology (§5.1): "the largest batch size that did not cause an
+/// OOM error in any system" — short-sequence models fit proportionally
+/// larger batches. We target ~8k tokens per device.
+pub fn paper_batch(model: &ModelConfig) -> usize {
+    (8192 / model.seq_len).max(1)
+}
+
+/// Table 1: model architectures.
+pub fn table1() -> Table {
+    let mut t = Table::new(&["Model", "d_model", "SeqLen", "Layers", "Experts", "Params"]);
+    for m in ModelConfig::all_paper_models() {
+        t.row(vec![
+            m.name.clone(),
+            m.d_model.to_string(),
+            m.seq_len.to_string(),
+            m.layers.to_string(),
+            m.experts.to_string(),
+            format!("{:.2}B", m.total_params() as f64 / 1e9),
+        ]);
+    }
+    t
+}
+
+/// Figure 3: expert-load distribution over iterations (token proportion of
+/// the hottest/median/coldest expert, plus straggler factor).
+pub fn figure3(iterations: usize) -> Table {
+    let mut t = Table::new(&["iter", "max_frac", "p50_frac", "min_frac", "straggler"]);
+    let mut gen = ModelLoadTrace::new(1, 64, 42);
+    for i in 0..iterations {
+        let f = &gen.step()[0];
+        let mut sorted = f.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        t.row(vec![
+            i.to_string(),
+            format!("{:.3}", sorted[63]),
+            format!("{:.4}", sorted[32]),
+            format!("{:.5}", sorted[0]),
+            fmt(stats::straggler_factor(f)),
+        ]);
+    }
+    t
+}
+
+/// Shared worker for Figures 9 & 10: speedup vs EP for all systems, all
+/// four models, at `gpus` devices on `cluster`.
+pub fn end_to_end(cluster: ClusterPreset, nodes: usize, dpn: usize, opts: &SimOptions) -> Table {
+    let topo = cluster.build(nodes, dpn);
+    let gpus = topo.num_devices();
+    // weak scaling: 32 experts at 16 GPUs, 64 at 32 (paper §5.2)
+    let experts = if gpus <= 16 { 32 } else { 64 };
+    let mut t = Table::new(&["Model", "GPUs", "EP", "FasterMoE", "SmartMoE", "FlexMoE", "Hecate", "Hecate/best"]);
+    for model in ModelConfig::all_paper_models() {
+        let model = model.with_experts(experts);
+        let train = TrainConfig { batch_per_device: paper_batch(&model), ..Default::default() };
+        let results: Vec<SimResult> = SystemKind::paper_lineup()
+            .iter()
+            .map(|&k| simulate(&topo, &model, &SystemConfig::new(k), &train, opts))
+            .collect();
+        let ep_time = results[0].iter_time;
+        let speedups: Vec<f64> = results.iter().map(|r| ep_time / r.iter_time).collect();
+        let best_baseline = speedups[..4].iter().cloned().fold(f64::MIN, f64::max);
+        let hecate = speedups[4];
+        t.row(vec![
+            model.name.clone(),
+            gpus.to_string(),
+            fmt(speedups[0]),
+            fmt(speedups[1]),
+            fmt(speedups[2]),
+            fmt(speedups[3]),
+            fmt(hecate),
+            fmt(hecate / best_baseline),
+        ]);
+    }
+    t
+}
+
+/// Figure 9: Cluster A (16 and 32 GPUs).
+pub fn figure9(opts: &SimOptions) -> Vec<Table> {
+    vec![
+        end_to_end(ClusterPreset::A, 2, 8, opts),
+        end_to_end(ClusterPreset::A, 4, 8, opts),
+    ]
+}
+
+/// Figure 10: Cluster B (32 GPUs).
+pub fn figure10(opts: &SimOptions) -> Table {
+    end_to_end(ClusterPreset::B, 4, 8, opts)
+}
+
+/// Figure 11: layer-wise MoE speedup of Hecate over EP (GPT-MoE-S, B).
+pub fn figure11(opts: &SimOptions) -> Table {
+    let topo = ClusterPreset::B.build(4, 8);
+    let model = ModelConfig::preset("gpt-moe-s").unwrap();
+    let train = TrainConfig { batch_per_device: paper_batch(&model), ..Default::default() };
+    let ep = simulate(&topo, &model, &SystemConfig::new(SystemKind::Ep), &train, opts);
+    let hec = simulate(&topo, &model, &SystemConfig::new(SystemKind::Hecate), &train, opts);
+    let mut t = Table::new(&["layer", "EP_moe_ms", "Hecate_moe_ms", "speedup"]);
+    let mut speedups = Vec::new();
+    for l in 0..model.layers {
+        let s = ep.per_layer_moe[l] / hec.per_layer_moe[l];
+        speedups.push(s);
+        t.row(vec![l.to_string(), ms(ep.per_layer_moe[l]), ms(hec.per_layer_moe[l]), fmt(s)]);
+    }
+    t.row(vec!["geomean".into(), "".into(), "".into(), fmt(stats::geomean(&speedups))]);
+    t
+}
+
+/// Figure 12: critical-path breakdown (BERT-MoE-Deep, Cluster B).
+pub fn figure12(opts: &SimOptions) -> Table {
+    let topo = ClusterPreset::B.build(4, 8);
+    let model = ModelConfig::preset("bert-moe-deep").unwrap();
+    let train = TrainConfig { batch_per_device: paper_batch(&model), ..Default::default() };
+    let mut t = Table::new(&[
+        "System", "Attn_ms", "ExpertComp_ms", "A2A_ms", "SparseColl/Rearr_ms", "Total_ms",
+    ]);
+    let mut kinds = SystemKind::paper_lineup();
+    kinds.push(SystemKind::HecateRm);
+    for k in kinds {
+        let r = simulate(&topo, &model, &SystemConfig::new(k), &train, opts);
+        let b = &r.breakdown;
+        t.row(vec![
+            r.system.clone(),
+            ms(b.attn),
+            ms(b.expert),
+            ms(b.a2a),
+            ms(b.exposed_comm + b.rearrange),
+            ms(r.iter_time),
+        ]);
+    }
+    t
+}
+
+/// Figure 13: peak MoE memory (opt / grad / param) per system.
+pub fn figure13(opts: &SimOptions) -> Table {
+    let topo = ClusterPreset::B.build(4, 8);
+    let model = ModelConfig::preset("bert-moe-deep").unwrap();
+    let train = TrainConfig { batch_per_device: paper_batch(&model), ..Default::default() };
+    let mut t = Table::new(&["System", "Opt_GB", "Grad_GB", "Param_GB", "Total_GB", "vs_EP"]);
+    let mut kinds = SystemKind::paper_lineup();
+    kinds.push(SystemKind::HecateRm);
+    let ep_total = simulate(&topo, &model, &SystemConfig::new(SystemKind::Ep), &train, opts)
+        .memory
+        .total();
+    for k in kinds {
+        let r = simulate(&topo, &model, &SystemConfig::new(k), &train, opts);
+        let m = &r.memory;
+        t.row(vec![
+            r.system.clone(),
+            gb(m.opt),
+            gb(m.grads),
+            gb(m.params),
+            gb(m.total()),
+            fmt(m.total() / ep_total),
+        ]);
+    }
+    t
+}
+
+/// Figure 14: GPT-MoE-S across batch sizes 1..6; iteration time and OOM
+/// frontier (activation memory grows with batch; Hecate-RM survives
+/// longest).
+pub fn figure14(opts: &SimOptions) -> Table {
+    let topo = ClusterPreset::A.build(4, 8);
+    let model = ModelConfig::preset("gpt-moe-s").unwrap();
+    let mut t = Table::new(&["batch", "EP_ms", "FlexMoE_ms", "Hecate_ms", "HecateRM_ms"]);
+    for batch in 1..=6usize {
+        let train = TrainConfig { batch_per_device: batch, ..Default::default() };
+        // activation estimate per device: tokens × d_model × layers ×
+        // ~24 bytes (fwd activations kept for bwd, fp16 + ln/attn temps)
+        let act = (batch * model.seq_len * model.d_model * model.layers * 24) as f64;
+        let dense_base = 2e9; // dense params/opt/grads (DP-replicated)
+        let mut row = vec![batch.to_string()];
+        for k in [SystemKind::Ep, SystemKind::FlexMoe, SystemKind::Hecate, SystemKind::HecateRm] {
+            let r = simulate(&topo, &model, &SystemConfig::new(k), &train, opts);
+            let mem = r.memory.total() + act + dense_base;
+            if mem > topo.device_mem {
+                row.push("OOM".to_string());
+            } else {
+                row.push(ms(r.iter_time));
+            }
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Figure 15a: component ablation (sharding × materialization).
+pub fn figure15a(opts: &SimOptions) -> Table {
+    let topo = ClusterPreset::A.build(4, 8);
+    let model = ModelConfig::preset("gpt-moe-s").unwrap();
+    let train = TrainConfig { batch_per_device: paper_batch(&model), ..Default::default() };
+    let ep = simulate(&topo, &model, &SystemConfig::new(SystemKind::Ep), &train, opts);
+    let mut t = Table::new(&["Sharding", "Materialization", "iter_ms", "speedup_vs_EP"]);
+    for (sh, mat) in [(false, false), (true, false), (false, true), (true, true)] {
+        let mut cfg = SystemConfig::new(SystemKind::Hecate);
+        cfg.hetero_sharding = sh;
+        cfg.sparse_materialization = mat;
+        let r = simulate(&topo, &model, &cfg, &train, opts);
+        t.row(vec![
+            sh.to_string(),
+            mat.to_string(),
+            ms(r.iter_time),
+            fmt(ep.iter_time / r.iter_time),
+        ]);
+    }
+    t
+}
+
+/// Figure 15b: re-sharding interval sweep.
+pub fn figure15b(opts: &SimOptions) -> Table {
+    let topo = ClusterPreset::A.build(4, 8);
+    let model = ModelConfig::preset("gpt-moe-s").unwrap();
+    let ep_train = TrainConfig { batch_per_device: paper_batch(&model), ..Default::default() };
+    let ep = simulate(&topo, &model, &SystemConfig::new(SystemKind::Ep), &ep_train, opts);
+    let mut t = Table::new(&["reshard_interval", "iter_ms", "speedup_vs_EP"]);
+    for interval in [10usize, 25, 50, 100] {
+        let mut cfg = SystemConfig::new(SystemKind::Hecate);
+        cfg.reshard_interval = interval;
+        let train = TrainConfig {
+            batch_per_device: 4,
+            reshard_interval: interval,
+            ..Default::default()
+        };
+        let r = simulate(&topo, &model, &cfg, &train, opts);
+        t.row(vec![interval.to_string(), ms(r.iter_time), fmt(ep.iter_time / r.iter_time)]);
+    }
+    t
+}
+
+/// §1 claims: EP imbalance slowdown; FlexMoE reserve-vs-speedup; SmartMoE
+/// rearrangement-frequency tradeoff.
+pub fn claims(opts: &SimOptions) -> Vec<(String, Table)> {
+    let topo = ClusterPreset::A.build(4, 8);
+    let model = ModelConfig::preset("gpt-moe-s").unwrap();
+    let train = TrainConfig { batch_per_device: paper_batch(&model), ..Default::default() };
+    let mut out = Vec::new();
+
+    // EP: imbalanced vs balanced
+    let imb = simulate(&topo, &model, &SystemConfig::new(SystemKind::Ep), &train, opts);
+    let bal = simulate(
+        &topo,
+        &model,
+        &SystemConfig::new(SystemKind::Ep),
+        &train,
+        &SimOptions { balanced_loads: true, ..opts.clone() },
+    );
+    let mut t = Table::new(&["loads", "iter_ms", "slowdown"]);
+    t.row(vec!["balanced".into(), ms(bal.iter_time), fmt(1.0)]);
+    t.row(vec!["imbalanced".into(), ms(imb.iter_time), fmt(imb.iter_time / bal.iter_time)]);
+    out.push(("EP slowdown under imbalance (paper: up to 5.18x)".to_string(), t));
+
+    // FlexMoE: reserved memory vs speedup
+    let mut t = Table::new(&["reserved_slots", "iter_ms", "speedup_vs_EP", "mem_GB"]);
+    for slots in [1usize, 2, 4, 8] {
+        let mut cfg = SystemConfig::new(SystemKind::FlexMoe);
+        cfg.reserved_slots = slots;
+        let r = simulate(&topo, &model, &cfg, &train, opts);
+        t.row(vec![
+            slots.to_string(),
+            ms(r.iter_time),
+            fmt(imb.iter_time / r.iter_time),
+            gb(r.memory.total()),
+        ]);
+    }
+    out.push(("FlexMoE reserve-for-speedup (paper: 4x mem for 2.65x)".to_string(), t));
+
+    // SmartMoE: rearrangement frequency tradeoff
+    let mut t = Table::new(&["interval", "iter_ms", "speedup_vs_EP"]);
+    for interval in [10usize, 25, 50, 100] {
+        let mut cfg = SystemConfig::new(SystemKind::SmartMoe);
+        cfg.rearrange_interval = interval;
+        let r = simulate(&topo, &model, &cfg, &train, opts);
+        t.row(vec![interval.to_string(), ms(r.iter_time), fmt(imb.iter_time / r.iter_time)]);
+    }
+    out.push(("SmartMoE frequency tradeoff (paper: optimum at moderate interval)".to_string(), t));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> SimOptions {
+        SimOptions { iterations: 16, warmup: 4, seed: 7, balanced_loads: false }
+    }
+
+    #[test]
+    fn table1_matches_paper_shapes() {
+        let t = table1();
+        assert_eq!(t.rows.len(), 4);
+        assert!(t.rows[0][5].contains('B'));
+    }
+
+    #[test]
+    fn figure3_rows() {
+        let t = figure3(10);
+        assert_eq!(t.rows.len(), 10);
+    }
+
+    #[test]
+    fn end_to_end_hecate_wins() {
+        let t = end_to_end(ClusterPreset::A, 2, 4, &quick());
+        for row in &t.rows {
+            let hecate: f64 = row[6].parse().unwrap();
+            let others: Vec<f64> =
+                (2..6).map(|i| row[i].parse::<f64>().unwrap()).collect();
+            let best = others.iter().cloned().fold(f64::MIN, f64::max);
+            assert!(
+                hecate >= best * 0.95,
+                "{}: Hecate {hecate} vs best baseline {best}",
+                row[0]
+            );
+            assert!(hecate > 1.0, "{}: Hecate must beat EP", row[0]);
+        }
+    }
+
+    #[test]
+    fn figure11_layer_speedups_positive_and_varied() {
+        let t = figure11(&quick());
+        let speedups: Vec<f64> = t.rows[..t.rows.len() - 1]
+            .iter()
+            .map(|r| r[3].parse::<f64>().unwrap())
+            .collect();
+        assert!(speedups.iter().all(|&s| s > 1.0));
+        let max = speedups.iter().cloned().fold(f64::MIN, f64::max);
+        let min = speedups.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max / min > 1.3, "per-layer variation expected: {speedups:?}");
+    }
+
+    #[test]
+    fn figure13_shape() {
+        let t = figure13(&quick());
+        assert_eq!(t.rows.len(), 6);
+        // EP row has ratio 1.0
+        assert_eq!(t.rows[0][5], "1.00");
+    }
+
+    #[test]
+    fn figure14_rm_survives_largest_batch() {
+        let t = figure14(&quick());
+        let last = &t.rows[5];
+        assert_eq!(last[0], "6");
+        assert_ne!(last[4], "OOM", "Hecate-RM must survive batch 6");
+    }
+
+    #[test]
+    fn figure15a_combination_is_best() {
+        let t = figure15a(&quick());
+        let full: f64 = t.rows[3][3].parse().unwrap();
+        for r in &t.rows[..3] {
+            let s: f64 = r[3].parse().unwrap();
+            assert!(full >= s * 0.98, "full Hecate {full} vs partial {s}");
+        }
+    }
+
+    #[test]
+    fn claims_tables_render() {
+        let c = claims(&quick());
+        assert_eq!(c.len(), 3);
+        for (name, t) in &c {
+            assert!(!t.rows.is_empty(), "{name}");
+        }
+    }
+}

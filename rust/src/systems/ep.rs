@@ -1,0 +1,85 @@
+//! Plain expert parallelism (EP, §2.2): experts statically round-robin
+//! across devices; no replication, no parameter traffic; the straggler
+//! effect hits in full.
+
+use crate::config::SystemKind;
+use crate::placement::Placement;
+
+use super::{ep_memory, GradSync, IterationPlan, LayerPlan, MatComm, MoeMemory, MoeSystem, PlanCtx};
+
+pub struct Ep;
+
+impl Ep {
+    pub fn new() -> Ep {
+        Ep
+    }
+}
+
+impl Default for Ep {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MoeSystem for Ep {
+    fn kind(&self) -> SystemKind {
+        SystemKind::Ep
+    }
+
+    fn plan(
+        &mut self,
+        _iter: usize,
+        ctx: &PlanCtx,
+        _predicted: &[Vec<f64>],
+        _realized: &[Vec<f64>],
+    ) -> IterationPlan {
+        let p = Placement::round_robin(ctx.model.experts, ctx.topo.num_devices());
+        IterationPlan {
+            layers: (0..ctx.model.layers)
+                .map(|_| LayerPlan {
+                    placement: p.clone(),
+                    owners: p.clone(),
+                    grad_sync: GradSync::None,
+                    mat_comm: MatComm::None,
+                })
+                .collect(),
+            global_critical_time: 0.0,
+        }
+    }
+
+    fn memory(&self, ctx: &PlanCtx, _plan: &IterationPlan) -> MoeMemory {
+        ep_memory(ctx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::systems::test_ctx;
+
+    #[test]
+    fn static_partition_no_comm() {
+        let ctx = test_ctx(2, 4);
+        let mut ep = Ep::new();
+        let loads = vec![vec![1.0 / 16.0; 16]; ctx.model.layers];
+        let plan = ep.plan(0, &ctx, &loads, &loads);
+        for lp in &plan.layers {
+            assert!(lp.placement.is_partition());
+            assert!(matches!(lp.mat_comm, MatComm::None));
+            assert!(matches!(lp.grad_sync, GradSync::None));
+        }
+        assert_eq!(plan.global_critical_time, 0.0);
+    }
+
+    #[test]
+    fn memory_matches_even_share() {
+        let ctx = test_ctx(2, 4); // 16 experts / 8 devices = 2 per device
+        let mut ep = Ep::new();
+        let loads = vec![vec![0.0; 16]; ctx.model.layers];
+        let plan = ep.plan(0, &ctx, &loads, &loads);
+        let mem = ep.memory(&ctx, &plan);
+        let expect_params = 2.0 * ctx.expert_bytes() * ctx.model.layers as f64;
+        assert!((mem.params - expect_params).abs() < 1.0);
+        assert!(mem.opt > mem.params, "Adam state dominates");
+    }
+}

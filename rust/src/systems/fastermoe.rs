@@ -1,0 +1,153 @@
+//! FasterMoE-style *shadowing* (§2.3, [16]): after the gate decision is
+//! known, replicate the most-overloaded experts to **every** device. The
+//! broadcast happens inside the iteration — i.e. on the critical path —
+//! and the replicas' gradients are AllReduced at iteration end.
+//!
+//! FasterMoE imposes strict replication conditions (a load threshold) to
+//! bound that overhead, which makes it less sensitive to moderate
+//! imbalance.
+
+use crate::config::{SystemConfig, SystemKind};
+use crate::materialize::top_by_load;
+use crate::placement::Placement;
+use crate::topology::DeviceId;
+
+use super::{ep_memory, GradSync, IterationPlan, LayerPlan, MatComm, MoeMemory, MoeSystem, PlanCtx};
+
+pub struct FasterMoe {
+    cfg: SystemConfig,
+    /// Replicate experts whose load exceeds `threshold × mean` (the strict
+    /// condition of [16]).
+    pub threshold: f64,
+}
+
+impl FasterMoe {
+    pub fn new(cfg: SystemConfig) -> FasterMoe {
+        FasterMoe { cfg, threshold: 2.0 }
+    }
+}
+
+impl MoeSystem for FasterMoe {
+    fn kind(&self) -> SystemKind {
+        SystemKind::FasterMoe
+    }
+
+    fn plan(
+        &mut self,
+        _iter: usize,
+        ctx: &PlanCtx,
+        _predicted: &[Vec<f64>],
+        realized: &[Vec<f64>],
+    ) -> IterationPlan {
+        let nd = ctx.topo.num_devices();
+        let experts = ctx.model.experts;
+        let base = Placement::round_robin(experts, nd);
+        let mean = 1.0 / experts as f64;
+        let max_shadows = self.cfg.reserved_slots.max(1);
+
+        let layers = realized
+            .iter()
+            .map(|loads| {
+                // shadow candidates: above-threshold experts, hottest first,
+                // bounded by reserved memory slots.
+                let hot: Vec<usize> = top_by_load(loads, max_shadows)
+                    .into_iter()
+                    .filter(|&e| loads[e] > self.threshold * mean)
+                    .collect();
+                let mut placement = base.clone();
+                for &e in &hot {
+                    for d in 0..nd {
+                        placement.add(e, DeviceId(d));
+                    }
+                }
+                // Shadowing broadcast: each hot expert's params to all other
+                // devices, serialized on the owner's ports — on the critical
+                // path (FusedKernel Comp+A2A+Rearr in Figure 12).
+                let bcast_time: f64 = hot
+                    .iter()
+                    .map(|&e| {
+                        let owner = base.holders(e).next().unwrap();
+                        let dsts: Vec<DeviceId> =
+                            ctx.topo.all_devices().filter(|&d| d != owner).collect();
+                        crate::collectives::dense::broadcast_time(
+                            &ctx.topo,
+                            owner,
+                            &dsts,
+                            ctx.expert_bytes(),
+                        )
+                    })
+                    .sum();
+                LayerPlan {
+                    placement,
+                    owners: base.clone(),
+                    grad_sync: GradSync::AllReduceReplicas,
+                    mat_comm: MatComm::Critical { time: bcast_time },
+                }
+            })
+            .collect();
+        IterationPlan { layers, global_critical_time: 0.0 }
+    }
+
+    fn memory(&self, ctx: &PlanCtx, plan: &IterationPlan) -> MoeMemory {
+        let mut mem = ep_memory(ctx);
+        // Shadow replicas add parameter + gradient memory on every device
+        // (no optimizer state moves — owners keep it).
+        let shadow_layers: f64 = plan
+            .layers
+            .iter()
+            .map(|lp| {
+                let extra: usize = (0..lp.placement.num_chunks())
+                    .map(|e| lp.placement.replication(e).saturating_sub(1))
+                    .sum();
+                extra as f64 / ctx.topo.num_devices() as f64
+            })
+            .sum();
+        mem.params += shadow_layers * ctx.expert_bytes();
+        mem.grads += shadow_layers * ctx.expert_bytes();
+        mem
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::systems::test_ctx;
+
+    #[test]
+    fn shadows_only_above_threshold() {
+        let ctx = test_ctx(2, 4);
+        let mut s = FasterMoe::new(SystemConfig::new(SystemKind::FasterMoe));
+        // balanced loads: nothing shadowed, zero rearr time
+        let balanced = vec![vec![1.0 / 16.0; 16]; ctx.model.layers];
+        let plan = s.plan(0, &ctx, &balanced, &balanced);
+        for lp in &plan.layers {
+            assert!(lp.placement.is_partition());
+            assert!(matches!(lp.mat_comm, MatComm::Critical { time } if time == 0.0));
+        }
+        // hot expert: shadowed everywhere, positive critical time
+        let mut skewed = vec![vec![0.02; 16]; ctx.model.layers];
+        for l in &mut skewed {
+            l[7] = 0.7;
+        }
+        let plan = s.plan(1, &ctx, &skewed, &skewed);
+        for lp in &plan.layers {
+            assert_eq!(lp.placement.replication(7), 8);
+            assert!(matches!(lp.mat_comm, MatComm::Critical { time } if time > 0.0));
+            assert!(matches!(lp.grad_sync, GradSync::AllReduceReplicas));
+        }
+    }
+
+    #[test]
+    fn shadow_memory_grows() {
+        let ctx = test_ctx(2, 4);
+        let mut s = FasterMoe::new(SystemConfig::new(SystemKind::FasterMoe));
+        let mut skewed = vec![vec![0.02; 16]; ctx.model.layers];
+        for l in &mut skewed {
+            l[0] = 0.7;
+        }
+        let plan = s.plan(0, &ctx, &skewed, &skewed);
+        let mem = s.memory(&ctx, &plan);
+        assert!(mem.params > ep_memory(&ctx).params);
+        assert_eq!(mem.opt, ep_memory(&ctx).opt, "opt states never move");
+    }
+}

@@ -1,0 +1,175 @@
+//! FlexMoE-style dynamic device placement (§2.3, [31]): both replication
+//! and relocation of experts, driven by the observed load, within a
+//! *reserved memory* budget per device. Replicated experts carry their
+//! **optimizer states** (unlike Hecate), so both the placement-transition
+//! traffic and the standing memory cost are high — the paper measures 83%
+//! more memory than Hecate and a 4×-reserve-for-2.65×-speedup tradeoff.
+
+use crate::config::{SystemConfig, SystemKind};
+use crate::materialize::top_by_load;
+use crate::placement::Placement;
+use crate::topology::DeviceId;
+
+use super::{ep_memory, GradSync, IterationPlan, LayerPlan, MatComm, MoeMemory, MoeSystem, PlanCtx};
+
+pub struct FlexMoe {
+    cfg: SystemConfig,
+    current: Option<Vec<Placement>>,
+}
+
+impl FlexMoe {
+    pub fn new(cfg: SystemConfig) -> FlexMoe {
+        FlexMoe { cfg, current: None }
+    }
+
+    /// Build a placement: base shards + load-proportional replicas filling
+    /// each device's reserved slots (every MoE layer gets the same reserve —
+    /// the uniform-allocation inefficiency Figure 11 calls out).
+    fn place(ctx: &PlanCtx, loads: &[f64], reserve: usize) -> Placement {
+        let nd = ctx.topo.num_devices();
+        let e = ctx.model.experts;
+        let mut p = Placement::round_robin(e, nd);
+        if reserve == 0 {
+            return p;
+        }
+        let tot_slots = nd * reserve;
+        let mut free = vec![reserve; nd];
+        let hot = top_by_load(loads, (e / 2).max(1));
+        let hot_sum: f64 = hot.iter().map(|&x| loads[x]).sum();
+        let mut remaining = tot_slots;
+        for &ex in &hot {
+            if remaining == 0 {
+                break;
+            }
+            let n = (((loads[ex] / hot_sum.max(1e-12)) * tot_slots as f64).round() as usize)
+                .clamp(1, remaining)
+                .min(nd);
+            let mut placed = 0;
+            while placed < n {
+                // fill the least-loaded device without the expert
+                let Some(d) = (0..nd)
+                    .filter(|&d| free[d] > 0 && !p.contains(ex, DeviceId(d)))
+                    .max_by_key(|&d| free[d])
+                else {
+                    break;
+                };
+                p.add(ex, DeviceId(d));
+                free[d] -= 1;
+                placed += 1;
+            }
+            remaining = remaining.saturating_sub(placed);
+        }
+        p
+    }
+}
+
+impl MoeSystem for FlexMoe {
+    fn kind(&self) -> SystemKind {
+        SystemKind::FlexMoe
+    }
+
+    fn plan(
+        &mut self,
+        iter: usize,
+        ctx: &PlanCtx,
+        predicted: &[Vec<f64>],
+        _realized: &[Vec<f64>],
+    ) -> IterationPlan {
+        let interval = self.cfg.rearrange_interval.max(1);
+        let reserve = self.cfg.reserved_slots;
+        let mut transition = 0.0;
+        if self.current.is_none() || iter % interval == 0 {
+            let new: Vec<Placement> =
+                predicted.iter().map(|f| Self::place(ctx, f, reserve)).collect();
+            if let Some(old) = &self.current {
+                // new replicas receive params + optimizer states
+                let mut new_pairs = 0usize;
+                for (po, pn) in old.iter().zip(new.iter()) {
+                    new_pairs += pn.diff(po).len();
+                }
+                let bytes = new_pairs as f64 * (ctx.expert_bytes() + ctx.expert_opt_bytes());
+                let nodes = ctx.topo.nodes.max(1) as f64;
+                transition = ctx.topo.inter_lat + bytes / nodes / ctx.topo.inter_bw;
+            }
+            self.current = Some(new);
+        }
+        let placements = self.current.as_ref().unwrap();
+        IterationPlan {
+            layers: placements
+                .iter()
+                .map(|p| LayerPlan {
+                    placement: p.clone(),
+                    owners: p.clone(), // every replica keeps opt state
+                    grad_sync: GradSync::AllReduceReplicas,
+                    mat_comm: MatComm::None,
+                })
+                .collect(),
+            global_critical_time: transition,
+        }
+    }
+
+    fn memory(&self, ctx: &PlanCtx, _plan: &IterationPlan) -> MoeMemory {
+        // reserved slots hold params + grads + FULL optimizer state per
+        // replica, every layer — FlexMoE's memory hunger (Figure 13).
+        let mut mem = ep_memory(ctx);
+        let extra = self.cfg.reserved_slots as f64 * ctx.model.layers as f64;
+        mem.params += extra * ctx.expert_bytes();
+        mem.grads += extra * ctx.expert_bytes();
+        mem.opt += extra * ctx.expert_opt_bytes();
+        mem
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::systems::test_ctx;
+
+    #[test]
+    fn replicates_within_reserve() {
+        let ctx = test_ctx(2, 4);
+        let mut loads = vec![0.01; 16];
+        loads[2] = 0.5;
+        loads[9] = 0.3;
+        let p = FlexMoe::place(&ctx, &loads, 2);
+        assert!(p.replication(2) > 1);
+        for d in ctx.topo.all_devices() {
+            assert!(p.load_of(d) <= 2 + 2, "base 2 + reserve 2");
+        }
+        // zero reserve degenerates to EP
+        let p0 = FlexMoe::place(&ctx, &loads, 0);
+        assert!(p0.is_partition());
+    }
+
+    #[test]
+    fn memory_scales_with_reserve_including_opt() {
+        let ctx = test_ctx(2, 4);
+        let mut cfg = SystemConfig::new(SystemKind::FlexMoe);
+        let loads = vec![vec![1.0 / 16.0; 16]; ctx.model.layers];
+        cfg.reserved_slots = 1;
+        let mut s1 = FlexMoe::new(cfg.clone());
+        let plan1 = s1.plan(0, &ctx, &loads, &loads);
+        cfg.reserved_slots = 4;
+        let mut s4 = FlexMoe::new(cfg);
+        let plan4 = s4.plan(0, &ctx, &loads, &loads);
+        let m1 = s1.memory(&ctx, &plan1);
+        let m4 = s4.memory(&ctx, &plan4);
+        assert!(m4.total() > m1.total());
+        assert!(m4.opt > m1.opt, "FlexMoE replicates optimizer state");
+    }
+
+    #[test]
+    fn transition_cost_on_load_shift() {
+        let ctx = test_ctx(2, 4);
+        let mut cfg = SystemConfig::new(SystemKind::FlexMoe);
+        cfg.rearrange_interval = 2;
+        let mut s = FlexMoe::new(cfg);
+        let mut loads = vec![vec![1.0 / 16.0; 16]; ctx.model.layers];
+        s.plan(0, &ctx, &loads, &loads);
+        for l in &mut loads {
+            l[5] = 0.8;
+        }
+        let p = s.plan(2, &ctx, &loads, &loads);
+        assert!(p.global_critical_time > 0.0);
+    }
+}

@@ -1,0 +1,104 @@
+//! Vanilla FSDP applied to MoE layers (§2.4): shard everything, AllGather
+//! the **entire** layer before compute, ReduceScatter all gradients after.
+//! With |E| experts this moves |E|× the traffic of a dense layer — the
+//! inefficiency that motivates FSSDP.
+
+use crate::collectives::dense;
+use crate::config::SystemKind;
+use crate::placement::Placement;
+use crate::topology::DeviceId;
+
+use super::{GradSync, IterationPlan, LayerPlan, MatComm, MoeMemory, MoeSystem, PlanCtx};
+
+pub struct Fsdp;
+
+impl Fsdp {
+    pub fn new() -> Fsdp {
+        Fsdp
+    }
+}
+
+impl Default for Fsdp {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MoeSystem for Fsdp {
+    fn kind(&self) -> SystemKind {
+        SystemKind::Fsdp
+    }
+
+    fn plan(
+        &mut self,
+        _iter: usize,
+        ctx: &PlanCtx,
+        _predicted: &[Vec<f64>],
+        _realized: &[Vec<f64>],
+    ) -> IterationPlan {
+        let nd = ctx.topo.num_devices();
+        let shards = Placement::round_robin(ctx.model.experts, nd);
+        let full = Placement::full(ctx.model.experts, nd);
+        let devices: Vec<DeviceId> = ctx.topo.all_devices().collect();
+        let layer_bytes = ctx.model.experts as f64 * ctx.expert_bytes();
+        let ag_time = dense::allgather_time(&ctx.topo, &devices, layer_bytes);
+        IterationPlan {
+            layers: (0..ctx.model.layers)
+                .map(|_| LayerPlan {
+                    placement: full.clone(),
+                    owners: shards.clone(),
+                    grad_sync: GradSync::DenseRs,
+                    mat_comm: MatComm::DenseAg { time: ag_time },
+                })
+                .collect(),
+            global_critical_time: 0.0,
+        }
+    }
+
+    fn memory(&self, ctx: &PlanCtx, _plan: &IterationPlan) -> MoeMemory {
+        let nd = ctx.topo.num_devices() as f64;
+        let e = ctx.model.experts as f64;
+        let l = ctx.model.layers as f64;
+        let shard_params = e / nd * ctx.expert_bytes() * l;
+        // FSDP materializes (and frees) one full layer at a time.
+        let materialized = e * ctx.expert_bytes();
+        MoeMemory {
+            params: shard_params + materialized,
+            grads: materialized, // full-layer grads before ReduceScatter
+            opt: e / nd * ctx.expert_opt_bytes() * l,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::systems::test_ctx;
+
+    #[test]
+    fn full_materialization_every_layer() {
+        let ctx = test_ctx(2, 4);
+        let mut s = Fsdp::new();
+        let loads = vec![vec![1.0 / 16.0; 16]; ctx.model.layers];
+        let plan = s.plan(0, &ctx, &loads, &loads);
+        for lp in &plan.layers {
+            assert_eq!(lp.placement.replication(0), 8);
+            match lp.mat_comm {
+                MatComm::DenseAg { time } => assert!(time > 0.0),
+                _ => panic!("expected DenseAg"),
+            }
+        }
+    }
+
+    #[test]
+    fn opt_memory_is_sharded() {
+        let ctx = test_ctx(2, 4);
+        let mut s = Fsdp::new();
+        let loads = vec![vec![0.0; 16]; ctx.model.layers];
+        let plan = s.plan(0, &ctx, &loads, &loads);
+        let mem = s.memory(&ctx, &plan);
+        let ep_mem = crate::systems::ep_memory(&ctx);
+        assert_eq!(mem.opt, ep_mem.opt, "same sharded opt as EP's even share");
+        assert!(mem.params > ep_mem.params, "materialized layer adds params");
+    }
+}

@@ -1,0 +1,278 @@
+//! Hecate: FSSDP with heterogeneous sharding (Algorithm 2), sparse
+//! materialization (Algorithm 1), topology-aware dispatch, and optional
+//! re-materialization (§4).
+//!
+//! Per iteration and layer, a `spAG(P, P')` materializes the planned
+//! placement (overlappable with the preceding attention forward); after
+//! the layer's backward, `spRS(P', P)` returns gradients to the MoE
+//! shards, which hold the single global copy of the optimizer state.
+//! Re-sharding runs every `reshard_interval` iterations and only pays when
+//! shards actually change (§5.1).
+
+use crate::collectives::sparse::{build_spag, build_sprs};
+use crate::config::{SystemConfig, SystemKind};
+use crate::materialize::{sparse_materialize, MatConstraints};
+use crate::sharding::{self, ShardingPlan};
+use crate::topology::DeviceId;
+
+use super::{GradSync, IterationPlan, LayerPlan, MatComm, MoeMemory, MoeSystem, PlanCtx};
+
+pub struct Hecate {
+    cfg: SystemConfig,
+    /// Re-materialization: release parameters after each layer's compute and
+    /// re-gather for backward — 1 layer resident instead of all (§4 "RM").
+    pub rm: bool,
+    shards: Option<ShardingPlan>,
+    /// Fraction of device memory available for materialized placements.
+    pub mat_headroom_frac: f64,
+}
+
+impl Hecate {
+    pub fn new(cfg: SystemConfig, rm: bool) -> Hecate {
+        Hecate { cfg, rm, shards: None, mat_headroom_frac: 0.30 }
+    }
+
+    /// Memory slots per device available to Algorithm 1 for one layer.
+    /// Non-RM keeps every layer's materialization resident simultaneously,
+    /// so the headroom divides across layers; RM reserves one layer's worth
+    /// (the 90.2% parameter-memory reduction of §5.4).
+    fn mem_slots(&self, ctx: &PlanCtx) -> usize {
+        let headroom = self.mat_headroom_frac * ctx.topo.device_mem;
+        let per_layer = if self.rm {
+            headroom
+        } else {
+            headroom / ctx.model.layers as f64
+        };
+        (per_layer / ctx.expert_bytes()).floor() as usize
+    }
+
+    fn reshard(&mut self, ctx: &PlanCtx, predicted: &[Vec<f64>]) -> f64 {
+        let t = ctx.overlap_degree();
+        let new = if self.cfg.hetero_sharding {
+            sharding::heterogeneous_sticky(&ctx.topo, predicted, t, self.shards.as_ref())
+        } else {
+            sharding::homogeneous(
+                ctx.model.layers,
+                ctx.model.experts,
+                ctx.topo.num_devices(),
+            )
+        };
+        let cost = match &self.shards {
+            None => 0.0, // initial sharding is setup, not steady-state cost
+            Some(old) => {
+                let bytes = sharding::reshard_bytes(
+                    old,
+                    &new,
+                    ctx.model.expert_bytes(),
+                    ctx.model.expert_params() * ctx.model.opt_bytes_per_param,
+                ) as f64;
+                if bytes == 0.0 {
+                    0.0 // §5.1: "executing only when shards change"
+                } else {
+                    let nodes = ctx.topo.nodes.max(1) as f64;
+                    ctx.topo.inter_lat + bytes / nodes / ctx.topo.inter_bw
+                }
+            }
+        };
+        self.shards = Some(new);
+        cost
+    }
+}
+
+impl MoeSystem for Hecate {
+    fn kind(&self) -> SystemKind {
+        if self.rm {
+            SystemKind::HecateRm
+        } else {
+            SystemKind::Hecate
+        }
+    }
+
+    fn plan(
+        &mut self,
+        iter: usize,
+        ctx: &PlanCtx,
+        predicted: &[Vec<f64>],
+        _realized: &[Vec<f64>],
+    ) -> IterationPlan {
+        let interval = self.cfg.reshard_interval.max(1);
+        let mut global_critical_time = 0.0;
+        if self.shards.is_none() || iter % interval == 0 {
+            global_critical_time += self.reshard(ctx, predicted);
+        }
+        let shards = self.shards.as_ref().unwrap();
+        let t = ctx.overlap_degree();
+        let m = self.mem_slots(ctx);
+
+        let layers = (0..ctx.model.layers)
+            .map(|l| {
+                let base = &shards.layers[l];
+                if !self.cfg.sparse_materialization {
+                    // ablation: heterogeneous shards only, EP-style dispatch
+                    return LayerPlan {
+                        placement: base.clone(),
+                        owners: base.clone(),
+                        grad_sync: GradSync::None,
+                        mat_comm: MatComm::None,
+                    };
+                }
+                let placement = sparse_materialize(
+                    &ctx.topo,
+                    base,
+                    &predicted[l],
+                    MatConstraints { overlap_degree: t, mem_slots: m },
+                );
+                let spag = build_spag(&ctx.topo, base, &placement)
+                    .expect("Alg1 output is a valid spAG target");
+                let sprs = build_sprs(&ctx.topo, &placement, base)
+                    .expect("symmetric spRS");
+                let time = spag.time(&ctx.topo, ctx.expert_bytes())
+                    + sprs.time(&ctx.topo, ctx.expert_bytes());
+                LayerPlan {
+                    placement,
+                    owners: base.clone(),
+                    grad_sync: GradSync::SparseRs,
+                    mat_comm: MatComm::Spag { time, remat: self.rm },
+                }
+            })
+            .collect();
+        IterationPlan { layers, global_critical_time }
+    }
+
+    fn memory(&self, ctx: &PlanCtx, plan: &IterationPlan) -> MoeMemory {
+        let nd = ctx.topo.num_devices();
+        let shards = self.shards.as_ref().expect("plan() before memory()");
+        // shard memory: params + opt, exactly one global copy (C1)
+        let max_shard_slots = (0..nd)
+            .map(|d| shards.slots_used(DeviceId(d)))
+            .max()
+            .unwrap_or(0) as f64;
+        let shard_params = max_shard_slots * ctx.expert_bytes();
+        let opt = max_shard_slots * ctx.expert_opt_bytes();
+        // materialized replicas: per device, extra slots beyond its shard
+        let extra_per_layer: Vec<f64> = plan
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(l, lp)| {
+                (0..nd)
+                    .map(|d| {
+                        let dd = DeviceId(d);
+                        lp.placement.load_of(dd).saturating_sub(shards.layers[l].load_of(dd))
+                    })
+                    .max()
+                    .unwrap_or(0) as f64
+            })
+            .collect();
+        let mat_params = if self.rm {
+            // only one layer resident at a time
+            extra_per_layer.iter().cloned().fold(0.0, f64::max) * ctx.expert_bytes()
+        } else {
+            extra_per_layer.iter().sum::<f64>() * ctx.expert_bytes()
+        };
+        MoeMemory {
+            params: shard_params + mat_params,
+            // gradients exist per materialized expert until spRS drains them;
+            // with backward-overlap one layer's worth is live at a time.
+            grads: shard_params
+                + extra_per_layer.iter().cloned().fold(0.0, f64::max) * ctx.expert_bytes(),
+            opt,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::systems::test_ctx;
+    use crate::util::rng::Rng;
+
+    fn skewed(ctx: &PlanCtx, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        (0..ctx.model.layers).map(|_| rng.dirichlet(0.2, ctx.model.experts)).collect()
+    }
+
+    #[test]
+    fn materializes_hot_experts_with_overlappable_comm() {
+        let ctx = test_ctx(2, 4);
+        let mut h = Hecate::new(SystemConfig::new(SystemKind::Hecate), false);
+        let loads = skewed(&ctx, 1);
+        let plan = h.plan(0, &ctx, &loads, &loads);
+        let mut any_replicated = false;
+        for lp in &plan.layers {
+            assert!(matches!(lp.grad_sync, GradSync::SparseRs));
+            match lp.mat_comm {
+                MatComm::Spag { remat, .. } => assert!(!remat),
+                _ => panic!("expected spAG"),
+            }
+            if (0..ctx.model.experts).any(|e| lp.placement.replication(e) > 1) {
+                any_replicated = true;
+            }
+            assert!(lp.owners.is_subset_of(&lp.placement));
+        }
+        assert!(any_replicated, "skewed loads should trigger materialization");
+    }
+
+    #[test]
+    fn rm_reduces_param_memory() {
+        let ctx = test_ctx(2, 4);
+        let loads = skewed(&ctx, 2);
+        let mut h = Hecate::new(SystemConfig::new(SystemKind::Hecate), false);
+        let p = h.plan(0, &ctx, &loads, &loads);
+        let m = h.memory(&ctx, &p);
+        let mut hrm = Hecate::new(SystemConfig::new(SystemKind::HecateRm), true);
+        let prm = hrm.plan(0, &ctx, &loads, &loads);
+        let mrm = hrm.memory(&ctx, &prm);
+        assert!(
+            mrm.params < m.params,
+            "RM params {} should be below Hecate {}",
+            mrm.params,
+            m.params
+        );
+        assert_eq!(mrm.opt, m.opt, "opt stays sharded either way");
+    }
+
+    #[test]
+    fn opt_memory_is_single_global_copy() {
+        let ctx = test_ctx(2, 4);
+        let loads = skewed(&ctx, 3);
+        let mut h = Hecate::new(SystemConfig::new(SystemKind::Hecate), false);
+        let p = h.plan(0, &ctx, &loads, &loads);
+        let mem = h.memory(&ctx, &p);
+        // one global copy spread over 8 devices: per-device opt ≈ E*L/N
+        let expect =
+            (ctx.model.experts * ctx.model.layers / ctx.topo.num_devices()) as f64
+                * ctx.expert_opt_bytes();
+        assert!(mem.opt <= expect * 1.5, "opt {} vs even share {}", mem.opt, expect);
+    }
+
+    #[test]
+    fn reshard_costs_only_on_change() {
+        let ctx = test_ctx(2, 4);
+        let mut cfg = SystemConfig::new(SystemKind::Hecate);
+        cfg.reshard_interval = 2;
+        let mut h = Hecate::new(cfg, false);
+        let loads = skewed(&ctx, 4);
+        let p0 = h.plan(0, &ctx, &loads, &loads);
+        assert_eq!(p0.global_critical_time, 0.0, "initial sharding free");
+        let p2 = h.plan(2, &ctx, &loads, &loads);
+        assert_eq!(p2.global_critical_time, 0.0, "same loads -> same shards -> free");
+        let shifted = skewed(&ctx, 99);
+        let p4 = h.plan(4, &ctx, &shifted, &shifted);
+        assert!(p4.global_critical_time > 0.0, "changed shards pay movement");
+    }
+
+    #[test]
+    fn ablation_flags() {
+        let ctx = test_ctx(2, 4);
+        let loads = skewed(&ctx, 5);
+        let mut cfg = SystemConfig::new(SystemKind::Hecate);
+        cfg.sparse_materialization = false;
+        let mut h = Hecate::new(cfg, false);
+        let p = h.plan(0, &ctx, &loads, &loads);
+        for lp in &p.layers {
+            assert!(lp.placement.is_partition(), "no materialization in ablation");
+            assert!(matches!(lp.mat_comm, MatComm::None));
+        }
+    }
+}

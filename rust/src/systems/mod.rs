@@ -1,0 +1,237 @@
+//! The MoE training systems under comparison (§2.3, §5.1).
+//!
+//! Each system is a *placement policy*: per iteration it decides, for every
+//! MoE layer, (a) where expert parameters are materialized for compute,
+//! (b) where gradients/optimizer state live, (c) what parameter traffic it
+//! puts on the critical path (rearrangement) vs. overlappable with
+//! attention (Hecate's sparse collectives, FSDP's prefetch), and (d) how
+//! gradients of replicated experts are synchronized.
+//!
+//! The [`crate::sim`] engine turns these plans into time and memory.
+
+pub mod ep;
+pub mod fastermoe;
+pub mod flexmoe;
+pub mod fsdp;
+pub mod hecate;
+pub mod smartmoe;
+
+use crate::config::{ModelConfig, SystemConfig, SystemKind};
+use crate::placement::Placement;
+use crate::topology::Topology;
+
+/// Static context every system plans against.
+#[derive(Debug, Clone)]
+pub struct PlanCtx {
+    pub topo: Topology,
+    pub model: ModelConfig,
+    /// Tokens processed per device per iteration (batch × seq).
+    pub tokens_per_device: usize,
+    /// Attention (non-MoE) forward latency per layer, seconds — the overlap
+    /// window for materialization collectives.
+    pub attn_fwd_time: f64,
+}
+
+impl PlanCtx {
+    pub fn expert_bytes(&self) -> f64 {
+        self.model.expert_bytes() as f64
+    }
+
+    pub fn expert_opt_bytes(&self) -> f64 {
+        (self.model.expert_params() * self.model.opt_bytes_per_param) as f64
+    }
+
+    /// Algorithm 1's overlap degree for this context.
+    pub fn overlap_degree(&self) -> usize {
+        crate::materialize::overlap_degree(
+            self.attn_fwd_time,
+            self.topo.planning_bw(),
+            self.expert_bytes(),
+        )
+    }
+}
+
+/// How the gradients of materialized/replicated experts reach their owners.
+#[derive(Debug, Clone)]
+pub enum GradSync {
+    /// Every expert has exactly one holder: no inter-device sync (EP).
+    None,
+    /// AllReduce across each expert's replica group (rearrangement systems).
+    AllReduceReplicas,
+    /// Hecate: SparseReduceScatter back to the MoE shards.
+    SparseRs,
+    /// FSDP: dense ReduceScatter of the whole layer.
+    DenseRs,
+}
+
+/// Per-layer plan for one iteration.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    /// Where expert parameters are available for compute this iteration.
+    pub placement: Placement,
+    /// Where each expert's gradient/optimizer state must end up.
+    pub owners: Placement,
+    pub grad_sync: GradSync,
+    /// Parameter bytes this layer must receive *before compute*, and
+    /// whether that traffic is overlappable with preceding attention.
+    pub mat_comm: MatComm,
+}
+
+/// Materialization communication of one layer.
+#[derive(Debug, Clone)]
+pub enum MatComm {
+    /// No parameter movement (static placement).
+    None,
+    /// Hecate spAG: overlappable with the attention window; `plan` gives
+    /// the exact transfers. `remat` adds a second spAG before backward
+    /// (Hecate-RM or the re-use-across-layers mode of §3.2).
+    Spag { time: f64, remat: bool },
+    /// FSDP-style dense AllGather of the full layer (partially
+    /// overlappable).
+    DenseAg { time: f64 },
+    /// Rearrangement traffic that sits on the critical path (FasterMoE
+    /// shadowing, SmartMoE exchange, FlexMoE replication events).
+    Critical { time: f64 },
+}
+
+/// One iteration's full plan.
+#[derive(Debug, Clone)]
+pub struct IterationPlan {
+    pub layers: Vec<LayerPlan>,
+    /// Iteration-level critical-path overhead not attributable to a layer
+    /// (e.g. Hecate's periodic re-shard, FlexMoE's placement transition).
+    pub global_critical_time: f64,
+}
+
+/// Peak memory per device attributable to MoE layers, bytes (Figure 13).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MoeMemory {
+    pub params: f64,
+    pub grads: f64,
+    pub opt: f64,
+}
+
+impl MoeMemory {
+    pub fn total(&self) -> f64 {
+        self.params + self.grads + self.opt
+    }
+}
+
+/// A placement policy under test.
+pub trait MoeSystem {
+    fn kind(&self) -> SystemKind;
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Plan iteration `iter`. `predicted` are the per-layer expert-load
+    /// fractions the system is allowed to see *before* the gate runs
+    /// (realized loads of past iterations feed the predictor);
+    /// `realized` are this iteration's actual loads, available only to
+    /// systems that rearrange after gating (FasterMoE) or for calibration.
+    fn plan(&mut self, iter: usize, ctx: &PlanCtx, predicted: &[Vec<f64>], realized: &[Vec<f64>])
+        -> IterationPlan;
+
+    /// Peak per-device MoE memory under this system's steady state.
+    fn memory(&self, ctx: &PlanCtx, plan: &IterationPlan) -> MoeMemory;
+}
+
+/// Instantiate a system from config.
+pub fn build_system(cfg: &SystemConfig) -> Box<dyn MoeSystem> {
+    match cfg.kind {
+        SystemKind::Ep => Box::new(ep::Ep::new()),
+        SystemKind::FasterMoe => Box::new(fastermoe::FasterMoe::new(cfg.clone())),
+        SystemKind::SmartMoe => Box::new(smartmoe::SmartMoe::new(cfg.clone())),
+        SystemKind::FlexMoe => Box::new(flexmoe::FlexMoe::new(cfg.clone())),
+        SystemKind::Fsdp => Box::new(fsdp::Fsdp::new()),
+        SystemKind::Hecate => Box::new(hecate::Hecate::new(cfg.clone(), false)),
+        SystemKind::HecateRm => Box::new(hecate::Hecate::new(cfg.clone(), true)),
+    }
+}
+
+/// Shared helper: per-device MoE memory of a static `E/N`-experts-per-device
+/// layout (EP-style), for `layers` layers.
+pub(crate) fn ep_memory(ctx: &PlanCtx) -> MoeMemory {
+    let experts_per_dev =
+        (ctx.model.experts as f64 / ctx.topo.num_devices() as f64).ceil();
+    let per_layer = experts_per_dev * ctx.expert_bytes();
+    let l = ctx.model.layers as f64;
+    MoeMemory {
+        params: per_layer * l,
+        grads: per_layer * l,
+        opt: experts_per_dev * ctx.expert_opt_bytes() * l,
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_ctx(nodes: usize, dpn: usize) -> PlanCtx {
+    let topo = Topology::cluster_a(nodes, dpn);
+    let model = ModelConfig::preset("gpt-moe-s").unwrap().with_experts(16);
+    PlanCtx { topo, model, tokens_per_device: 4096, attn_fwd_time: 4e-3 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn build_all_kinds() {
+        for kind in [
+            SystemKind::Ep,
+            SystemKind::FasterMoe,
+            SystemKind::SmartMoe,
+            SystemKind::FlexMoe,
+            SystemKind::Fsdp,
+            SystemKind::Hecate,
+            SystemKind::HecateRm,
+        ] {
+            let sys = build_system(&SystemConfig::new(kind));
+            assert_eq!(sys.kind(), kind);
+        }
+    }
+
+    /// Smoke-run every system for a few iterations and validate invariants
+    /// every plan must satisfy.
+    #[test]
+    fn all_systems_produce_valid_plans() {
+        let ctx = test_ctx(2, 4);
+        let mut rng = Rng::new(3);
+        for kind in [
+            SystemKind::Ep,
+            SystemKind::FasterMoe,
+            SystemKind::SmartMoe,
+            SystemKind::FlexMoe,
+            SystemKind::Fsdp,
+            SystemKind::Hecate,
+            SystemKind::HecateRm,
+        ] {
+            let mut sys = build_system(&SystemConfig::new(kind));
+            for iter in 0..6 {
+                let loads: Vec<Vec<f64>> = (0..ctx.model.layers)
+                    .map(|_| rng.dirichlet(0.3, ctx.model.experts))
+                    .collect();
+                let plan = sys.plan(iter, &ctx, &loads, &loads);
+                assert_eq!(plan.layers.len(), ctx.model.layers, "{kind:?}");
+                for (l, lp) in plan.layers.iter().enumerate() {
+                    assert!(
+                        lp.placement.is_surjective(),
+                        "{kind:?} layer {l}: some expert unmaterialized"
+                    );
+                    assert!(
+                        lp.owners.is_surjective(),
+                        "{kind:?} layer {l}: some expert unowned"
+                    );
+                    assert!(
+                        lp.owners.is_subset_of(&lp.placement)
+                            || matches!(lp.grad_sync, GradSync::None),
+                        "{kind:?} layer {l}: owners must be materialized"
+                    );
+                }
+                let mem = sys.memory(&ctx, &plan);
+                assert!(mem.total() > 0.0, "{kind:?}: zero memory");
+            }
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! SmartMoE-style expert *exchange* (§2.3, [44]): periodically permute the
+//! expert→device assignment so that hot and cold experts share devices
+//! (classic LPT bin-packing), moving parameters **and optimizer states**.
+//! No replication — memory stays EP-like, but the achievable balance is
+//! limited (a device's load is the sum of whole experts), and the
+//! rearrangement traffic lands on the critical path at each trigger.
+
+use crate::config::{SystemConfig, SystemKind};
+use crate::placement::Placement;
+use crate::topology::DeviceId;
+
+use super::{ep_memory, GradSync, IterationPlan, LayerPlan, MatComm, MoeMemory, MoeSystem, PlanCtx};
+
+pub struct SmartMoe {
+    cfg: SystemConfig,
+    current: Option<Vec<Placement>>,
+}
+
+impl SmartMoe {
+    pub fn new(cfg: SystemConfig) -> SmartMoe {
+        SmartMoe { cfg, current: None }
+    }
+
+    /// LPT packing: experts sorted by load descending, each assigned to the
+    /// least-loaded device that still has slots (E/N experts per device —
+    /// the permutation constraint of [44]).
+    fn pack(ctx: &PlanCtx, loads: &[f64]) -> Placement {
+        let nd = ctx.topo.num_devices();
+        let e = ctx.model.experts;
+        let cap = e.div_ceil(nd);
+        let mut slots = vec![cap; nd];
+        let mut dev_load = vec![0.0f64; nd];
+        let mut order: Vec<usize> = (0..e).collect();
+        order.sort_by(|&a, &b| loads[b].partial_cmp(&loads[a]).unwrap());
+        let mut p = Placement::empty(e, nd);
+        for ex in order {
+            let d = (0..nd)
+                .filter(|&d| slots[d] > 0)
+                .min_by(|&a, &b| dev_load[a].partial_cmp(&dev_load[b]).unwrap())
+                .expect("slots exhausted");
+            p.add(ex, DeviceId(d));
+            slots[d] -= 1;
+            dev_load[d] += loads[ex];
+        }
+        p
+    }
+}
+
+impl MoeSystem for SmartMoe {
+    fn kind(&self) -> SystemKind {
+        SystemKind::SmartMoe
+    }
+
+    fn plan(
+        &mut self,
+        iter: usize,
+        ctx: &PlanCtx,
+        predicted: &[Vec<f64>],
+        _realized: &[Vec<f64>],
+    ) -> IterationPlan {
+        let interval = self.cfg.rearrange_interval.max(1);
+        let mut rearr_time = 0.0;
+        if self.current.is_none() || iter % interval == 0 {
+            let new: Vec<Placement> =
+                predicted.iter().map(|f| Self::pack(ctx, f)).collect();
+            if let Some(old) = &self.current {
+                // moved experts carry params + optimizer state across devices
+                let mut moved = 0usize;
+                for (po, pn) in old.iter().zip(new.iter()) {
+                    for e in 0..po.num_chunks() {
+                        if po.holders(e).next() != pn.holders(e).next() {
+                            moved += 1;
+                        }
+                    }
+                }
+                let bytes = moved as f64 * (ctx.expert_bytes() + ctx.expert_opt_bytes());
+                // exchanges are point-to-point, many in parallel; bottleneck
+                // ≈ the busiest NIC carrying its share of the bytes
+                let nodes = ctx.topo.nodes.max(1) as f64;
+                rearr_time = ctx.topo.inter_lat + bytes / nodes / ctx.topo.inter_bw;
+            }
+            self.current = Some(new);
+        }
+        let placements = self.current.as_ref().unwrap();
+        IterationPlan {
+            layers: placements
+                .iter()
+                .map(|p| LayerPlan {
+                    placement: p.clone(),
+                    owners: p.clone(),
+                    grad_sync: GradSync::None,
+                    mat_comm: MatComm::None,
+                })
+                .collect(),
+            global_critical_time: rearr_time,
+        }
+    }
+
+    fn memory(&self, ctx: &PlanCtx, _plan: &IterationPlan) -> MoeMemory {
+        // permutation keeps the EP memory profile (the paper's Figure 13
+        // shows SmartMoE ≈ EP).
+        ep_memory(ctx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::systems::test_ctx;
+    use crate::util::stats;
+
+    #[test]
+    fn packing_balances_device_load() {
+        let ctx = test_ctx(2, 4);
+        let mut loads = vec![0.02; 16];
+        loads[0] = 0.40;
+        loads[1] = 0.30;
+        let p = SmartMoe::pack(&ctx, &loads);
+        assert!(p.is_partition());
+        // hot experts end on different devices
+        assert_ne!(p.holders(0).next(), p.holders(1).next());
+        let mut dev_load = vec![0.0; 8];
+        for e in 0..16 {
+            dev_load[p.holders(e).next().unwrap().0] += loads[e];
+        }
+        let rr = Placement::round_robin(16, 8);
+        let mut rr_load = vec![0.0; 8];
+        for e in 0..16 {
+            rr_load[rr.holders(e).next().unwrap().0] += loads[e];
+        }
+        assert!(stats::straggler_factor(&dev_load) <= stats::straggler_factor(&rr_load));
+    }
+
+    #[test]
+    fn rearranges_only_at_interval() {
+        let ctx = test_ctx(2, 4);
+        let mut cfg = SystemConfig::new(SystemKind::SmartMoe);
+        cfg.rearrange_interval = 5;
+        let mut s = SmartMoe::new(cfg);
+        let mut loads = vec![vec![1.0 / 16.0; 16]; ctx.model.layers];
+        let p0 = s.plan(0, &ctx, &loads, &loads);
+        assert_eq!(p0.global_critical_time, 0.0, "first placement is free (init)");
+        // shift loads so the next trigger moves experts
+        for l in &mut loads {
+            l[3] = 0.6;
+            let rest = 0.4 / 15.0;
+            for (i, v) in l.iter_mut().enumerate() {
+                if i != 3 {
+                    *v = rest;
+                }
+            }
+        }
+        let p1 = s.plan(1, &ctx, &loads, &loads);
+        assert_eq!(p1.global_critical_time, 0.0, "no trigger between intervals");
+        let p5 = s.plan(5, &ctx, &loads, &loads);
+        assert!(p5.global_critical_time > 0.0, "interval trigger pays rearr cost");
+    }
+}

@@ -1,0 +1,139 @@
+//! Property-testing harness (the registry snapshot has no `proptest`).
+//!
+//! [`prop_check`] runs a property over many generated cases from a seeded
+//! [`Rng`](crate::util::rng::Rng); on failure it reports the failing case's
+//! seed so the case can be replayed deterministically, and performs a simple
+//! numeric shrink by retrying the generator with "smaller" size hints.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    /// Number of generated cases.
+    pub cases: usize,
+    /// Base seed (each case uses `seed + case_index`).
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // HECATE_PROP_CASES overrides for a heavier local run.
+        let cases = std::env::var("HECATE_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(128);
+        PropConfig { cases, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. `gen` receives a seeded RNG and
+/// a *size* hint growing from small to large across cases (so early cases are
+/// small and easier to debug). `prop` returns `Err(reason)` to signal
+/// failure.
+pub fn prop_check<T, G, P>(cfg: &PropConfig, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng, usize) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        // size ramps 1..=32 over the run
+        let size = 1 + (case * 32) / cfg.cases.max(1);
+        let input = gen(&mut rng, size);
+        if let Err(reason) = prop(&input) {
+            // try to find a smaller failing case by regenerating at smaller sizes
+            for shrink_size in (1..size).rev() {
+                let mut srng = Rng::new(seed);
+                let smaller = gen(&mut srng, shrink_size);
+                if prop(&smaller).is_err() {
+                    panic!(
+                        "property failed (seed={seed}, size={shrink_size}, shrunk from {size}):\n  input: {smaller:#?}\n  reason: {reason}"
+                    );
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, size={size}):\n  input: {input:#?}\n  reason: {reason}"
+            );
+        }
+    }
+}
+
+/// Shorthand: run with the default config.
+pub fn check<T, G, P>(gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng, usize) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    prop_check(&PropConfig::default(), gen, prop)
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "allclose failed at [{i}]: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+/// Relative max-abs error between two slices (0 when equal).
+pub fn max_rel_err(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| (x - y).abs() / y.abs().max(1e-6))
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop_check(
+            &PropConfig { cases: 50, seed: 1 },
+            |rng, size| rng.below(size.max(1) * 10),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        prop_check(
+            &PropConfig { cases: 50, seed: 1 },
+            |rng, _| rng.below(100),
+            |&x| if x < 1000 { Err(format!("x={x}")) } else { Ok(()) },
+        );
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-6, 2.0 - 1e-6], 1e-5, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "allclose failed")]
+    fn allclose_catches_mismatch() {
+        assert_allclose(&[1.0], &[1.1], 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn rel_err() {
+        assert_eq!(max_rel_err(&[2.0], &[2.0]), 0.0);
+        assert!((max_rel_err(&[2.2], &[2.0]) - 0.1).abs() < 1e-6);
+    }
+}

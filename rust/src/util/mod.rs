@@ -1,0 +1,11 @@
+//! Infrastructure substrates built in-repo because the build environment is
+//! offline (no serde / clap / rand / criterion in the registry): a minimal
+//! JSON codec, a fast deterministic PRNG with the distributions the load
+//! simulator needs, summary statistics, a CLI argument parser, and a tiny
+//! logger.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;

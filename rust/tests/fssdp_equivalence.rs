@@ -1,0 +1,70 @@
+//! Integration: the numeric FSSDP engine across N devices produces the
+//! SAME trained parameters as the 1-device reference (all experts local —
+//! no sparse collectives, no cross-device dispatch). This is the numeric
+//! proof of §3: FSSDP's placement freedom does not change the math.
+//!
+//! Requires `artifacts/` (run `make artifacts`); tests self-skip otherwise.
+
+use hecate::fssdp::FssdpEngine;
+use hecate::testing::max_rel_err;
+use hecate::topology::Topology;
+
+fn artifacts() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("skipping: artifacts/ not built");
+        None
+    }
+}
+
+fn train(topo: Topology, sources: usize, iters: u64, seed: u64) -> Vec<Vec<f32>> {
+    let mut engine = FssdpEngine::new(artifacts().unwrap(), topo, seed).unwrap();
+    for i in 0..iters {
+        engine.step(i, sources).unwrap();
+    }
+    (0..engine.dims.experts).map(|e| engine.expert_chunk(e).clone()).collect()
+}
+
+#[test]
+fn fssdp_matches_single_device_reference() {
+    if artifacts().is_none() {
+        return;
+    }
+    let sources = 8; // fixed data-shard count across both runs
+    let distributed = train(Topology::cluster_a(2, 4), sources, 4, 7);
+    let reference = train(Topology::flat(1, 1e9), sources, 4, 7);
+    assert_eq!(distributed.len(), reference.len());
+    for (e, (d, r)) in distributed.iter().zip(reference.iter()).enumerate() {
+        let err = max_rel_err(d, r);
+        assert!(err < 2e-3, "expert {e}: max rel err {err}");
+    }
+}
+
+#[test]
+fn fssdp_loss_decreases() {
+    if artifacts().is_none() {
+        return;
+    }
+    let mut engine = FssdpEngine::new("artifacts", Topology::cluster_a(2, 4), 11).unwrap();
+    let first = engine.step(0, 8).unwrap().loss;
+    let mut last = first;
+    for i in 1..6 {
+        last = engine.step(i, 8).unwrap().loss;
+    }
+    assert!(last < first * 0.9, "loss {first} -> {last}");
+}
+
+#[test]
+fn fssdp_four_device_topology_also_matches() {
+    if artifacts().is_none() {
+        return;
+    }
+    let sources = 4;
+    let a = train(Topology::cluster_a(4, 1), sources, 3, 13);
+    let b = train(Topology::flat(1, 1e9), sources, 3, 13);
+    for (e, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let err = max_rel_err(x, y);
+        assert!(err < 2e-3, "expert {e}: max rel err {err}");
+    }
+}

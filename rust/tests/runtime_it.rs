@@ -1,0 +1,138 @@
+//! Integration: the PJRT runtime loads and executes the AOT artifacts, and
+//! the end-to-end trainer reduces loss on the tiny model.
+//! Requires `artifacts/` (run `make artifacts`); tests self-skip otherwise.
+
+use hecate::runtime::{HostTensor, Runtime};
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts/ not built");
+    }
+    ok
+}
+
+#[test]
+fn manifest_lists_engine_entries() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::open("artifacts").unwrap();
+    for required in ["gate_fwd", "expert_ffn_fwd", "expert_ffn_bwd", "tiny_init", "tiny_train_step"] {
+        assert!(rt.entry(required).is_ok(), "missing entry {required}");
+    }
+}
+
+#[test]
+fn gate_fwd_produces_valid_top2() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut rt = Runtime::open("artifacts").unwrap();
+    let e = rt.entry("gate_fwd").unwrap().clone();
+    let (t, dm) = (e.inputs[0].shape[0], e.inputs[0].shape[1]);
+    let experts = e.inputs[1].shape[1];
+    let x = HostTensor::f32(vec![t, dm], (0..t * dm).map(|i| (i as f32 * 0.37).sin()).collect());
+    let wg = HostTensor::f32(
+        vec![dm, experts],
+        (0..dm * experts).map(|i| (i as f32 * 0.11).cos() * 0.3).collect(),
+    );
+    let out = rt.execute("gate_fwd", &[x, wg]).unwrap();
+    assert_eq!(out.len(), 3);
+    // probs rows sum to 1
+    let probs = out[0].as_f32().unwrap();
+    for row in probs.chunks(experts) {
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "row sum {s}");
+    }
+    // top-2 weights normalized, indices distinct and in range
+    let w = out[1].as_f32().unwrap();
+    let idx = out[2].as_i32().unwrap();
+    for (wpair, ipair) in w.chunks(2).zip(idx.chunks(2)) {
+        assert!((wpair[0] + wpair[1] - 1.0).abs() < 1e-4);
+        assert!(wpair[0] >= wpair[1], "first choice has the larger weight");
+        assert_ne!(ipair[0], ipair[1]);
+        assert!((0..experts as i32).contains(&ipair[0]));
+    }
+}
+
+#[test]
+fn expert_ffn_bwd_matches_finite_difference() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut rt = Runtime::open("artifacts").unwrap();
+    let e = rt.entry("expert_ffn_fwd").unwrap().clone();
+    let (cap, dm) = (e.inputs[0].shape[0], e.inputs[0].shape[1]);
+    let dff = e.inputs[1].shape[1];
+    let mk = |n: usize, f: f32| -> Vec<f32> { (0..n).map(|i| ((i as f32) * f).sin() * 0.1).collect() };
+    let x = HostTensor::f32(vec![cap, dm], mk(cap * dm, 0.13));
+    let w1 = HostTensor::f32(vec![dm, dff], mk(dm * dff, 0.07));
+    let b1 = HostTensor::f32(vec![dff], mk(dff, 0.19));
+    let w2 = HostTensor::f32(vec![dff, dm], mk(dff * dm, 0.05));
+    let b2 = HostTensor::f32(vec![dm], mk(dm, 0.23));
+    let gy = HostTensor::f32(vec![cap, dm], vec![1.0; cap * dm]);
+
+    let bwd = rt
+        .execute(
+            "expert_ffn_bwd",
+            &[x.clone(), w1.clone(), b1.clone(), w2.clone(), b2.clone(), gy],
+        )
+        .unwrap();
+    let gb2 = bwd[4].as_f32().unwrap();
+    // analytic: dL/db2 with gy=1 is cap (each row contributes 1)
+    for &g in gb2 {
+        assert!((g - cap as f32).abs() < 1e-3, "gb2 {g} vs {cap}");
+    }
+
+    // finite difference on one w1 element: L = sum(y)
+    let run_loss = |rt: &mut Runtime, w1v: &[f32]| -> f32 {
+        let w1t = HostTensor::f32(vec![dm, dff], w1v.to_vec());
+        let y = rt
+            .execute(
+                "expert_ffn_fwd",
+                &[x.clone(), w1t, b1.clone(), w2.clone(), b2.clone()],
+            )
+            .unwrap();
+        y[0].as_f32().unwrap().iter().sum()
+    };
+    let mut w1v = mk(dm * dff, 0.07);
+    let base_idx = 5;
+    let eps = 1e-3;
+    w1v[base_idx] += eps;
+    let lp = run_loss(&mut rt, &w1v);
+    w1v[base_idx] -= 2.0 * eps;
+    let lm = run_loss(&mut rt, &w1v);
+    let fd = (lp - lm) / (2.0 * eps);
+    let analytic = bwd[1].as_f32().unwrap()[base_idx];
+    assert!(
+        (fd - analytic).abs() < 2e-2 * analytic.abs().max(1.0),
+        "finite diff {fd} vs analytic {analytic}"
+    );
+}
+
+#[test]
+fn tiny_training_reduces_loss() {
+    if !have_artifacts() {
+        return;
+    }
+    // 60 steps at ~15 ms each; compare first/last quartile means (single
+    // steps are noisy at batch 2 × seq 32 = 64 tokens).
+    let report = hecate::train::train("artifacts", "tiny", 60, 3, |_, _, _, _| {}).unwrap();
+    assert_eq!(report.losses.len(), 60);
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+    let head: f32 = report.losses[..15].iter().sum::<f32>() / 15.0;
+    let tail: f32 = report.losses[45..].iter().sum::<f32>() / 15.0;
+    assert!(tail < head, "loss trend not decreasing: head {head:.4} tail {tail:.4}");
+}
+
+#[test]
+fn execute_validates_shapes() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut rt = Runtime::open("artifacts").unwrap();
+    let bad = HostTensor::f32(vec![2, 2], vec![0.0; 4]);
+    let err = rt.execute("gate_fwd", &[bad.clone(), bad]).unwrap_err().to_string();
+    assert!(err.contains("shape"), "{err}");
+}
