@@ -1,0 +1,94 @@
+//! Benchmarks of the checkpoint subsystem: shard blob serialize /
+//! deserialize throughput vs shard count, full save→load through the
+//! filesystem, and the elastic reshard planner.
+//!
+//! `cargo bench --bench checkpoint [-- --quick] [filter]`
+
+use hecate::bench::Bench;
+use hecate::checkpoint::{self, format, reshard, shard, ExpertState, TrainState};
+use hecate::fssdp::LayerDims;
+use hecate::topology::Topology;
+use hecate::util::rng::Rng;
+
+/// Build a synthetic TrainState: `experts` shards of `chunk_len` floats.
+fn state(experts: usize, d_model: usize, d_ffn: usize, world: usize) -> TrainState {
+    let dims = LayerDims { tokens: 64, d_model, d_ffn, experts, cap: 64 };
+    let cl = dims.chunk_len();
+    let mut rng = Rng::new(1);
+    let mut mk = || -> Vec<f32> { (0..cl).map(|_| rng.normal() as f32).collect() };
+    let experts_v: Vec<ExpertState> = (0..experts)
+        .map(|_| ExpertState { chunk: mk(), m: mk(), v: mk(), t: 5 })
+        .collect();
+    let mut rng2 = Rng::new(2);
+    TrainState {
+        step: 100,
+        dims,
+        seed: 1,
+        data_shards: world,
+        owners: (0..experts).map(|e| e % world).collect(),
+        experts: experts_v,
+        gate_w: (0..d_model * experts).map(|_| rng2.normal() as f32).collect(),
+        predictor_window: 5,
+        predictor_history: (0..5).map(|_| rng2.dirichlet(0.3, experts)).collect(),
+        rng_state: [1, 2, 3, 4],
+        mem_slots: 4,
+        overlap_degree: 4,
+    }
+}
+
+fn mb(bytes: usize) -> f64 {
+    bytes as f64 / 1e6
+}
+
+fn main() {
+    let b = Bench::from_args();
+
+    b.section("shard blob serialize/deserialize vs shard count");
+    for (experts, d_model) in [(8usize, 32usize), (32, 64), (64, 128)] {
+        let world = 8;
+        let st = state(experts, d_model, 2 * d_model, world);
+        let ids: Vec<usize> = (0..experts).filter(|e| e % world == 0).collect();
+        let blob = shard::encode_rank(&st, 0, &ids);
+        println!(
+            "  [e{experts} d{d_model}] rank blob {:.2} MB ({} experts/rank)",
+            mb(blob.len()),
+            ids.len()
+        );
+        b.run_val(&format!("encode_rank_e{experts}_d{d_model}"), || {
+            shard::encode_rank(&st, 0, &ids)
+        });
+        b.run_val(&format!("decode_rank_e{experts}_d{d_model}"), || {
+            shard::decode_rank(&blob, st.dims.chunk_len()).unwrap()
+        });
+        b.run_val(&format!("fnv1a64_e{experts}_d{d_model}"), || format::fnv1a64(&blob));
+    }
+
+    b.section("global blob");
+    let st = state(64, 64, 128, 8);
+    let blob = shard::encode_global(&st);
+    println!("  global blob {:.3} MB", mb(blob.len()));
+    b.run_val("encode_global_e64", || shard::encode_global(&st));
+    b.run_val("decode_global_e64", || shard::decode_global(&blob).unwrap());
+
+    b.section("full checkpoint save+load through the filesystem");
+    let dir = std::env::temp_dir().join(format!("hecate-bench-ckpt-{}", std::process::id()));
+    let topo = Topology::cluster_a(2, 4);
+    for experts in [16usize, 64] {
+        let st = state(experts, 64, 128, topo.num_devices());
+        b.run_val(&format!("save_e{experts}_w8"), || {
+            checkpoint::save(&dir, &st, &topo).unwrap()
+        });
+        checkpoint::save(&dir, &st, &topo).unwrap();
+        b.run_val(&format!("load_e{experts}_w8"), || checkpoint::load(&dir).unwrap());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    b.section("elastic reshard planning (64 experts)");
+    let st = state(64, 64, 128, 8);
+    for (nodes, dpn, tag) in [(1usize, 4usize, "shrink_8to4"), (4, 8, "grow_8to32")] {
+        let target = Topology::cluster_a(nodes, dpn);
+        b.run_val(&format!("reshard_plan_{tag}"), || {
+            reshard::plan(&st, 8, &target).unwrap()
+        });
+    }
+}

@@ -1,0 +1,213 @@
+//! Fault injection + recovery cost model for the cluster simulator.
+//!
+//! The simulator kills one device at a chosen step, restarts, and replays
+//! from the last snapshot. Recovery wall-clock decomposes as
+//!
+//! ```text
+//! MTTR = detect + restore_io + redistribute + replay
+//! ```
+//!
+//! * `detect` — failure detection / coordinator re-election (a constant,
+//!   dominated by heartbeat timeouts, default 5 s);
+//! * `restore_io` — surviving ranks re-read the checkpoint shards from
+//!   shared storage in parallel;
+//! * `redistribute` — the dead rank's shard must reach its new owners over
+//!   the inter-node fabric (a re-shard, priced like the spAG traffic the
+//!   elastic planner produces);
+//! * `replay` — iterations since the last snapshot re-run at steady-state
+//!   speed.
+//!
+//! Steady state pays the amortized snapshot cost `checkpoint_time /
+//! interval` per iteration — the classic Young/Daly trade the recovery
+//! table in `sim/report.rs` sweeps.
+
+use crate::config::ModelConfig;
+use crate::topology::Topology;
+
+/// Fault-injection scenario knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultSpec {
+    /// Iteration at which one device dies.
+    pub fail_step: usize,
+    /// Which device dies (bounded by the topology at use sites).
+    pub fail_device: usize,
+    /// Snapshot interval in iterations (0 = checkpointing disabled).
+    pub checkpoint_every: usize,
+    /// Failure-detection time, seconds.
+    pub detect_time: f64,
+    /// Per-device checkpoint read/write bandwidth to shared storage,
+    /// bytes/s.
+    pub disk_bw: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            fail_step: 50,
+            fail_device: 0,
+            checkpoint_every: 25,
+            detect_time: 5.0,
+            disk_bw: 2e9,
+        }
+    }
+}
+
+/// Cost breakdown of one failure + recovery.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RecoveryStats {
+    /// Durable bytes per snapshot (global copy of MoE params + opt state).
+    pub checkpoint_bytes: f64,
+    /// Wall time of one snapshot (parallel per-rank writes).
+    pub checkpoint_time: f64,
+    /// Amortized per-iteration snapshot overhead in steady state.
+    pub steady_overhead: f64,
+    pub detect: f64,
+    pub restore_io: f64,
+    pub redistribute: f64,
+    /// Iterations lost since the last snapshot.
+    pub replay_iters: usize,
+    pub replay: f64,
+    /// detect + restore_io + redistribute + replay.
+    pub mttr: f64,
+}
+
+/// Durable checkpoint bytes of one model: the sharded MoE expert parameters
+/// plus their optimizer state — the *single global copy* FSSDP maintains
+/// (§3.2). Dense/attention state is DP-replicated and dominated by this.
+pub fn checkpoint_bytes(model: &ModelConfig) -> f64 {
+    let per_expert =
+        model.expert_bytes() as f64 + (model.expert_params() * model.opt_bytes_per_param) as f64;
+    (model.layers * model.experts) as f64 * per_expert
+}
+
+/// Price a failure at `spec.fail_step` given the steady-state iteration
+/// time. Pure cost model — the numeric replay equivalence is proven
+/// separately by `rust/tests/checkpoint_resume.rs`.
+pub fn recover(
+    topo: &Topology,
+    model: &ModelConfig,
+    iter_time: f64,
+    spec: &FaultSpec,
+) -> RecoveryStats {
+    let world = topo.num_devices().max(1) as f64;
+    let bytes = checkpoint_bytes(model);
+
+    // A snapshot exists at failure time only if at least one interval
+    // completed before the failing step.
+    let has_snapshot = spec.checkpoint_every > 0 && spec.fail_step >= spec.checkpoint_every;
+    let (checkpoint_time, steady_overhead) = if spec.checkpoint_every == 0 {
+        (0.0, 0.0)
+    } else {
+        let t = bytes / (world * spec.disk_bw) + 1e-3; // + manifest write
+        (t, t / spec.checkpoint_every as f64)
+    };
+    let replay_iters = if has_snapshot {
+        spec.fail_step % spec.checkpoint_every
+    } else {
+        // No snapshot yet (checkpointing off, or failure before the first
+        // interval): everything since step 0 replays.
+        spec.fail_step
+    };
+
+    let survivors = (world - 1.0).max(1.0);
+    // Without a written snapshot there is nothing durable to read or
+    // redistribute: the run re-initializes from scratch and replays.
+    let (restore_io, redistribute) = if !has_snapshot {
+        (0.0, 0.0)
+    } else {
+        (
+            bytes / (survivors * spec.disk_bw),
+            // The dead rank's shard share crosses the inter-node fabric once
+            // the elastic planner re-assigns it (priced like one spAG of
+            // that volume).
+            topo.inter_lat + (bytes / world) / topo.inter_bw,
+        )
+    };
+    let replay = replay_iters as f64 * iter_time;
+    let detect = spec.detect_time;
+    RecoveryStats {
+        checkpoint_bytes: bytes,
+        checkpoint_time,
+        steady_overhead,
+        detect,
+        restore_io,
+        redistribute,
+        replay_iters,
+        replay,
+        mttr: detect + restore_io + redistribute + replay,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Topology, ModelConfig) {
+        (Topology::cluster_a(2, 4), ModelConfig::preset("gpt-moe-s").unwrap().with_experts(16))
+    }
+
+    #[test]
+    fn replay_follows_snapshot_cadence() {
+        let (topo, model) = setup();
+        let spec = FaultSpec { fail_step: 57, checkpoint_every: 25, ..Default::default() };
+        let r = recover(&topo, &model, 0.1, &spec);
+        assert_eq!(r.replay_iters, 57 % 25);
+        assert!((r.replay - (57 % 25) as f64 * 0.1).abs() < 1e-12);
+        assert!(r.mttr >= r.detect + r.replay);
+    }
+
+    #[test]
+    fn no_checkpoint_replays_from_scratch() {
+        let (topo, model) = setup();
+        let spec = FaultSpec { fail_step: 80, checkpoint_every: 0, ..Default::default() };
+        let r = recover(&topo, &model, 0.1, &spec);
+        assert_eq!(r.replay_iters, 80);
+        assert_eq!(r.steady_overhead, 0.0);
+        let with = recover(
+            &topo,
+            &model,
+            0.1,
+            &FaultSpec { fail_step: 80, checkpoint_every: 10, ..Default::default() },
+        );
+        assert!(with.mttr < r.mttr, "checkpointing must cut MTTR");
+        assert!(with.steady_overhead > 0.0, "…at a steady-state cost");
+    }
+
+    #[test]
+    fn failure_before_first_snapshot_replays_from_scratch() {
+        // every=25 but failing at step 5: no snapshot exists yet, so there
+        // is nothing to restore — replay everything, read nothing.
+        let (topo, model) = setup();
+        let spec = FaultSpec { fail_step: 5, checkpoint_every: 25, ..Default::default() };
+        let r = recover(&topo, &model, 0.1, &spec);
+        assert_eq!(r.replay_iters, 5);
+        assert_eq!(r.restore_io, 0.0);
+        assert_eq!(r.redistribute, 0.0);
+        // snapshots are still scheduled, so steady overhead is nonzero
+        assert!(r.steady_overhead > 0.0);
+    }
+
+    #[test]
+    fn tighter_interval_costs_more_overhead() {
+        let (topo, model) = setup();
+        let every = |n: usize| {
+            recover(
+                &topo,
+                &model,
+                0.1,
+                &FaultSpec { fail_step: 99, checkpoint_every: n, ..Default::default() },
+            )
+        };
+        assert!(every(10).steady_overhead > every(100).steady_overhead);
+        // same snapshot size regardless of cadence
+        assert_eq!(every(10).checkpoint_bytes, every(100).checkpoint_bytes);
+        assert!(every(10).checkpoint_bytes > 0.0);
+    }
+
+    #[test]
+    fn bytes_scale_with_model() {
+        let small = ModelConfig::preset("tiny").unwrap();
+        let big = ModelConfig::preset("gpt-moe-s").unwrap();
+        assert!(checkpoint_bytes(&big) > checkpoint_bytes(&small) * 10.0);
+    }
+}

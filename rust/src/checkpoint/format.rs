@@ -1,0 +1,324 @@
+//! Binary on-disk format of checkpoint blobs.
+//!
+//! Every blob (the global-state file and each per-rank shard file) is:
+//!
+//! ```text
+//! [magic "HCKP"] [version u8] [payload ...] [fnv1a64(header+payload) u64 LE]
+//! ```
+//!
+//! The payload is a flat little-endian stream written/read by [`Writer`] /
+//! [`Reader`]: scalars as fixed-width LE integers, slices length-prefixed
+//! with a `u64` count, floats as IEEE-754 bit patterns. There is no
+//! self-description — the schema is fixed per format [`VERSION`] and
+//! documented in `DESIGN.md §Checkpoint format`; bumping the schema means
+//! bumping the version byte, and readers reject unknown versions up front
+//! (the SNIPPETS.md snapshot idiom, minus serde).
+
+/// Magic prefix of every checkpoint blob.
+pub const MAGIC: [u8; 4] = *b"HCKP";
+
+/// Current format version. Readers accept exactly this version.
+pub const VERSION: u8 = 1;
+
+/// FNV-1a 64-bit hash, used as the integrity trailer of every blob.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001B3);
+    }
+    h
+}
+
+/// Append-only blob writer. `finish()` seals the blob with the checksum.
+#[derive(Debug, Clone)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Default for Writer {
+    fn default() -> Self {
+        Writer::new()
+    }
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        let mut buf = Vec::with_capacity(64);
+        buf.extend_from_slice(&MAGIC);
+        buf.push(VERSION);
+        Writer { buf }
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    pub fn put_f32s(&mut self, v: &[f32]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn put_f64s(&mut self, v: &[f64]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn put_i32s(&mut self, v: &[i32]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn put_usizes(&mut self, v: &[usize]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_u64(x as u64);
+        }
+    }
+
+    /// Seal the blob: appends the checksum over everything written so far
+    /// (including magic + version) and returns the bytes.
+    pub fn finish(mut self) -> Vec<u8> {
+        let sum = fnv1a64(&self.buf);
+        self.buf.extend_from_slice(&sum.to_le_bytes());
+        self.buf
+    }
+
+    /// Payload bytes written so far (excluding header), for size reporting.
+    pub fn payload_len(&self) -> usize {
+        self.buf.len().saturating_sub(MAGIC.len() + 1)
+    }
+}
+
+/// Sequential blob reader. [`Reader::open`] validates magic, version, and
+/// checksum before any field is consumed.
+#[derive(Debug)]
+pub struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn open(bytes: &'a [u8]) -> anyhow::Result<Reader<'a>> {
+        anyhow::ensure!(
+            bytes.len() >= MAGIC.len() + 1 + 8,
+            "checkpoint blob truncated ({} bytes)",
+            bytes.len()
+        );
+        anyhow::ensure!(
+            bytes[..MAGIC.len()] == MAGIC,
+            "not a hecate checkpoint blob (bad magic)"
+        );
+        let version = bytes[MAGIC.len()];
+        anyhow::ensure!(
+            version == VERSION,
+            "unsupported checkpoint format version {version} (this build reads v{VERSION})"
+        );
+        let (body, trailer) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(trailer.try_into().expect("8-byte trailer"));
+        let actual = fnv1a64(body);
+        anyhow::ensure!(
+            stored == actual,
+            "checkpoint blob corrupt: checksum {actual:#018x} != stored {stored:#018x}"
+        );
+        Ok(Reader { b: body, pos: MAGIC.len() + 1 })
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos + n <= self.b.len(),
+            "checkpoint blob underrun: need {n} bytes at offset {}",
+            self.pos
+        );
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn take_u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn take_u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    pub fn take_u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    pub fn take_usize(&mut self) -> anyhow::Result<usize> {
+        Ok(self.take_u64()? as usize)
+    }
+
+    fn take_len(&mut self) -> anyhow::Result<usize> {
+        let n = self.take_u64()? as usize;
+        // A length can never exceed the bytes that remain — reject early so
+        // a corrupt length cannot trigger a huge allocation.
+        anyhow::ensure!(
+            n <= self.b.len() - self.pos,
+            "checkpoint blob corrupt: implausible element count {n}"
+        );
+        Ok(n)
+    }
+
+    pub fn take_f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.take_len()?;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+            .collect())
+    }
+
+    pub fn take_f64s(&mut self) -> anyhow::Result<Vec<f64>> {
+        let n = self.take_len()?;
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().expect("8 bytes")))
+            .collect())
+    }
+
+    pub fn take_i32s(&mut self) -> anyhow::Result<Vec<i32>> {
+        let n = self.take_len()?;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().expect("4 bytes")))
+            .collect())
+    }
+
+    pub fn take_usizes(&mut self) -> anyhow::Result<Vec<usize>> {
+        let n = self.take_len()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.take_u64()? as usize);
+        }
+        Ok(out)
+    }
+
+    /// Assert the whole payload was consumed (schema drift detector).
+    pub fn done(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.pos == self.b.len(),
+            "checkpoint blob has {} trailing bytes (schema mismatch?)",
+            self.b.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_field_kinds() {
+        let mut w = Writer::new();
+        w.put_u8(7);
+        w.put_u32(0xDEADBEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_usize(42);
+        w.put_f32s(&[1.5, -2.25, f32::MIN_POSITIVE]);
+        w.put_f64s(&[0.1, -1e300]);
+        w.put_i32s(&[-1, 0, i32::MAX]);
+        w.put_usizes(&[3, 1, 4, 1, 5]);
+        let bytes = w.finish();
+
+        let mut r = Reader::open(&bytes).unwrap();
+        assert_eq!(r.take_u8().unwrap(), 7);
+        assert_eq!(r.take_u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.take_u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.take_usize().unwrap(), 42);
+        assert_eq!(r.take_f32s().unwrap(), vec![1.5, -2.25, f32::MIN_POSITIVE]);
+        assert_eq!(r.take_f64s().unwrap(), vec![0.1, -1e300]);
+        assert_eq!(r.take_i32s().unwrap(), vec![-1, 0, i32::MAX]);
+        assert_eq!(r.take_usizes().unwrap(), vec![3, 1, 4, 1, 5]);
+        r.done().unwrap();
+    }
+
+    #[test]
+    fn float_bits_survive_exactly() {
+        // Checkpoints must be bit-exact: NaN payloads, -0.0, subnormals.
+        let vals = [f32::NAN, -0.0, 1e-40, f32::INFINITY, -f32::INFINITY];
+        let mut w = Writer::new();
+        w.put_f32s(&vals);
+        let bytes = w.finish();
+        let mut r = Reader::open(&bytes).unwrap();
+        let back = r.take_f32s().unwrap();
+        for (a, b) in vals.iter().zip(back.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut w = Writer::new();
+        w.put_f32s(&[1.0, 2.0, 3.0]);
+        let mut bytes = w.finish();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let err = Reader::open(&bytes).unwrap_err().to_string();
+        assert!(err.contains("corrupt"), "{err}");
+    }
+
+    #[test]
+    fn version_and_magic_rejected() {
+        let mut w = Writer::new();
+        w.put_u8(1);
+        let good = w.finish();
+
+        let mut wrong_magic = good.clone();
+        wrong_magic[0] = b'X';
+        assert!(Reader::open(&wrong_magic).unwrap_err().to_string().contains("magic"));
+
+        // Future version: patch the byte and re-seal with a valid checksum.
+        let mut future = good.clone();
+        future[4] = VERSION + 1;
+        let body_len = future.len() - 8;
+        let sum = fnv1a64(&future[..body_len]);
+        future[body_len..].copy_from_slice(&sum.to_le_bytes());
+        let err = Reader::open(&future).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+
+        assert!(Reader::open(b"HC").is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_and_underrun_detected() {
+        let mut w = Writer::new();
+        w.put_u64(5);
+        let bytes = w.finish();
+        let mut r = Reader::open(&bytes).unwrap();
+        assert!(r.done().is_err()); // nothing consumed yet
+        assert_eq!(r.take_u64().unwrap(), 5);
+        r.done().unwrap();
+        assert!(r.take_u8().is_err()); // past the end
+
+        // implausible length prefix
+        let mut w = Writer::new();
+        w.put_u64(u64::MAX / 2);
+        let bytes = w.finish();
+        let mut r = Reader::open(&bytes).unwrap();
+        assert!(r.take_f32s().is_err());
+    }
+}

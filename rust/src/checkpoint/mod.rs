@@ -1,0 +1,447 @@
+//! Sharded checkpointing + elastic resume for FSSDP training.
+//!
+//! FSSDP's durable training state is *exactly the shard set*: expert
+//! parameter chunks and Adam moments live on their owner rank only (one
+//! global copy, §3.2), everything else (load-predictor window, RNG streams,
+//! step counter, gate weights) is small replicated metadata. A checkpoint
+//! is therefore:
+//!
+//! * one **manifest** (`manifest.json`, written through
+//!   [`crate::util::json`] — no serde in the offline registry),
+//! * one **global blob** (`global.bin`) with the replicated metadata,
+//! * one **shard blob per rank** (`rank-<r>.bin`) with the expert states
+//!   that rank owns.
+//!
+//! All blobs use the version-byte-prefixed binary format of [`format`]
+//! (magic + version + FNV-64 integrity trailer; see `DESIGN.md §Checkpoint
+//! format`).
+//!
+//! The headline capability is **elastic resume** ([`reshard`]): `load` +
+//! [`crate::fssdp::FssdpEngine::resume_reference`] accept a topology with a
+//! *different* device count than the one that wrote the checkpoint. The
+//! resharding planner re-runs the heterogeneous sharding algorithm
+//! ([`crate::sharding`]) over the restored load statistics to lay the
+//! chunks out on the new world — and because FSSDP placement freedom never
+//! changes the math, an N-device run resumes on M devices with numerically
+//! identical training (`rust/tests/checkpoint_resume.rs`).
+//!
+//! [`faults`] adds the failure model the simulator uses to report
+//! recovery-time/MTTR tables (`hecate simulate --fail-step …`).
+
+pub mod faults;
+pub mod format;
+pub mod reshard;
+pub mod shard;
+
+pub use reshard::ReshardPlan;
+
+use std::path::{Path, PathBuf};
+
+use crate::fssdp::LayerDims;
+use crate::topology::Topology;
+use crate::util::json::{obj, Json};
+
+/// Durable state of one expert: parameter chunk + Adam moments.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExpertState {
+    pub chunk: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: u32,
+}
+
+/// Complete training state of the numeric FSSDP engine at a step boundary.
+///
+/// `experts[e]` is the single global copy of expert `e`'s durable state;
+/// `owners[e]` records which rank held it when the snapshot was taken (used
+/// for zero-movement restore at the same world size, and for move
+/// accounting when resharding to a different world).
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    /// Next iteration to run (iterations `0..step` are already applied).
+    pub step: u64,
+    pub dims: LayerDims,
+    /// Engine construction seed (data streams are keyed on it).
+    pub seed: u64,
+    /// Logical data-shard count of the run. Fixed for the lifetime of a
+    /// training job — elastic resume changes the *device* count, never the
+    /// data stream.
+    pub data_shards: usize,
+    pub experts: Vec<ExpertState>,
+    pub owners: Vec<usize>,
+    pub gate_w: Vec<f32>,
+    pub predictor_window: usize,
+    /// Sliding-window load history, oldest first.
+    pub predictor_history: Vec<Vec<f64>>,
+    pub rng_state: [u64; 4],
+    pub mem_slots: usize,
+    pub overlap_degree: usize,
+}
+
+/// Topology recorded in a checkpoint manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SavedTopo {
+    pub nodes: usize,
+    pub devices_per_node: usize,
+}
+
+impl SavedTopo {
+    pub fn world(&self) -> usize {
+        self.nodes * self.devices_per_node
+    }
+}
+
+/// Result of a [`save`]: what landed on disk.
+#[derive(Debug, Clone)]
+pub struct CheckpointInfo {
+    pub dir: PathBuf,
+    pub files: usize,
+    pub total_bytes: usize,
+}
+
+fn rank_file(r: usize) -> String {
+    format!("rank-{r}.bin")
+}
+
+/// Write a checkpoint of `state` (taken on `topo`) into `dir`.
+///
+/// Layout: `manifest.json` + `global.bin` + one `rank-<r>.bin` per device,
+/// each rank blob holding exactly the experts `state.owners` assigns to it.
+/// Ranks that own no expert still get an (empty) blob so the manifest's
+/// rank list always matches the world size.
+pub fn save(dir: &Path, state: &TrainState, topo: &Topology) -> anyhow::Result<CheckpointInfo> {
+    let world = topo.num_devices();
+    anyhow::ensure!(
+        state.experts.len() == state.owners.len(),
+        "state has {} experts but {} owner entries",
+        state.experts.len(),
+        state.owners.len()
+    );
+    for (e, &o) in state.owners.iter().enumerate() {
+        anyhow::ensure!(o < world, "expert {e} owned by rank {o} outside world {world}");
+    }
+    std::fs::create_dir_all(dir)?;
+
+    let mut files = 0usize;
+    let mut total_bytes = 0usize;
+    let mut rank_entries: Vec<Json> = Vec::with_capacity(world);
+
+    for r in 0..world {
+        let expert_ids: Vec<usize> =
+            (0..state.experts.len()).filter(|&e| state.owners[e] == r).collect();
+        let bytes = shard::encode_rank(state, r, &expert_ids);
+        let sum = format::fnv1a64(&bytes);
+        let name = rank_file(r);
+        std::fs::write(dir.join(&name), &bytes)?;
+        total_bytes += bytes.len();
+        files += 1;
+        rank_entries.push(obj([
+            ("rank", r.into()),
+            ("file", name.as_str().into()),
+            ("experts", expert_ids.into()),
+            ("bytes", bytes.len().into()),
+            ("fnv", format!("{sum:#018x}").as_str().into()),
+        ]));
+    }
+
+    let global = shard::encode_global(state);
+    let global_sum = format::fnv1a64(&global);
+    std::fs::write(dir.join("global.bin"), &global)?;
+    total_bytes += global.len();
+    files += 1;
+
+    // Remove stale shard files left by a previous save with a larger world
+    // (elastic restarts shrink the rank set; load() is manifest-driven, but
+    // stale rank blobs would misrepresent the directory and leak bytes).
+    let mut stale = world;
+    while dir.join(rank_file(stale)).exists() {
+        std::fs::remove_file(dir.join(rank_file(stale)))?;
+        stale += 1;
+    }
+
+    let manifest = obj([
+        ("format", "hecate-checkpoint".into()),
+        ("version", (format::VERSION as usize).into()),
+        ("step", (state.step as usize).into()),
+        ("world", world.into()),
+        ("nodes", topo.nodes.into()),
+        ("devices_per_node", topo.devices_per_node.into()),
+        ("experts", state.experts.len().into()),
+        ("chunk_len", state.dims.chunk_len().into()),
+        ("global_file", "global.bin".into()),
+        ("global_fnv", format!("{global_sum:#018x}").as_str().into()),
+        ("ranks", Json::Arr(rank_entries)),
+    ]);
+    let text = manifest.to_string_pretty();
+    std::fs::write(dir.join("manifest.json"), &text)?;
+    total_bytes += text.len();
+    files += 1;
+
+    crate::log_info!(
+        "checkpoint: step {} -> {} ({} files, {:.2} MB)",
+        state.step,
+        dir.display(),
+        files,
+        total_bytes as f64 / 1e6
+    );
+    Ok(CheckpointInfo { dir: dir.to_path_buf(), files, total_bytes })
+}
+
+fn parse_hex_fnv(j: &Json, key: &str) -> anyhow::Result<u64> {
+    let s = j
+        .req(key)?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("manifest `{key}` must be a string"))?;
+    let hex = s.strip_prefix("0x").unwrap_or(s);
+    u64::from_str_radix(hex, 16).map_err(|_| anyhow::anyhow!("manifest `{key}`: bad hex `{s}`"))
+}
+
+fn req_usize(j: &Json, key: &str) -> anyhow::Result<usize> {
+    j.req(key)?
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("manifest `{key}` must be a non-negative integer"))
+}
+
+/// Read a checkpoint written by [`save`]. Verifies the manifest schema,
+/// every blob's magic/version/checksum, and that the shard set is complete
+/// (every expert restored exactly once).
+pub fn load(dir: &Path) -> anyhow::Result<(TrainState, SavedTopo)> {
+    let manifest_path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+        anyhow::anyhow!("cannot read checkpoint manifest {}: {e}", manifest_path.display())
+    })?;
+    let manifest =
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("checkpoint manifest: {e}"))?;
+
+    let fmt = manifest.req("format")?.as_str().unwrap_or("");
+    anyhow::ensure!(fmt == "hecate-checkpoint", "not a hecate checkpoint manifest (`{fmt}`)");
+    let version = req_usize(&manifest, "version")?;
+    anyhow::ensure!(
+        version == format::VERSION as usize,
+        "unsupported checkpoint version {version} (this build reads v{})",
+        format::VERSION
+    );
+    let world = req_usize(&manifest, "world")?;
+    let saved = SavedTopo {
+        nodes: req_usize(&manifest, "nodes")?,
+        devices_per_node: req_usize(&manifest, "devices_per_node")?,
+    };
+    anyhow::ensure!(
+        saved.world() == world && world > 0,
+        "manifest world {world} inconsistent with {} nodes x {} devices",
+        saved.nodes,
+        saved.devices_per_node
+    );
+    let num_experts = req_usize(&manifest, "experts")?;
+    let chunk_len = req_usize(&manifest, "chunk_len")?;
+
+    // ---- global blob ----
+    let global_name = manifest.req("global_file")?.as_str().unwrap_or("global.bin").to_string();
+    let global_bytes = std::fs::read(dir.join(&global_name))?;
+    anyhow::ensure!(
+        format::fnv1a64(&global_bytes) == parse_hex_fnv(&manifest, "global_fnv")?,
+        "{global_name}: content does not match manifest checksum"
+    );
+    let mut state = shard::decode_global(&global_bytes)?;
+    anyhow::ensure!(
+        state.dims.experts == num_experts,
+        "global blob has {} experts, manifest says {num_experts}",
+        state.dims.experts
+    );
+    anyhow::ensure!(
+        state.dims.chunk_len() == chunk_len,
+        "global blob chunk_len {} != manifest {chunk_len}",
+        state.dims.chunk_len()
+    );
+    anyhow::ensure!(
+        manifest.req("step")?.as_usize() == Some(state.step as usize),
+        "manifest step does not match global blob"
+    );
+
+    // ---- rank shard blobs ----
+    let ranks = manifest
+        .req("ranks")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("manifest `ranks` must be an array"))?;
+    anyhow::ensure!(ranks.len() == world, "manifest lists {} ranks, world is {world}", ranks.len());
+
+    let mut experts: Vec<Option<ExpertState>> = (0..num_experts).map(|_| None).collect();
+    let mut owners = vec![usize::MAX; num_experts];
+    for entry in ranks {
+        let r = req_usize(entry, "rank")?;
+        anyhow::ensure!(r < world, "manifest rank {r} outside world {world}");
+        let file = entry
+            .req("file")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("manifest rank {r}: `file` must be a string"))?;
+        let bytes = std::fs::read(dir.join(file))?;
+        anyhow::ensure!(
+            format::fnv1a64(&bytes) == parse_hex_fnv(entry, "fnv")?,
+            "{file}: content does not match manifest checksum"
+        );
+        let decoded = shard::decode_rank(&bytes, chunk_len)?;
+        anyhow::ensure!(decoded.rank == r, "{file}: blob is for rank {}, expected {r}", decoded.rank);
+        for (e, st) in decoded.experts {
+            anyhow::ensure!(e < num_experts, "{file}: expert id {e} out of range");
+            anyhow::ensure!(
+                experts[e].is_none(),
+                "expert {e} appears in multiple rank shards (ranks {} and {r})",
+                owners[e]
+            );
+            experts[e] = Some(st);
+            owners[e] = r;
+        }
+    }
+    let mut restored = Vec::with_capacity(num_experts);
+    for (e, st) in experts.into_iter().enumerate() {
+        restored
+            .push(st.ok_or_else(|| anyhow::anyhow!("expert {e} missing from every rank shard"))?);
+    }
+    state.experts = restored;
+    state.owners = owners;
+
+    crate::log_info!(
+        "checkpoint: loaded step {} from {} ({} experts over {} ranks)",
+        state.step,
+        dir.display(),
+        num_experts,
+        world
+    );
+    Ok((state, saved))
+}
+
+#[cfg(test)]
+pub(crate) fn test_state(experts: usize, world: usize, chunk_len_seed: u64) -> TrainState {
+    use crate::util::rng::Rng;
+    let dims = LayerDims { tokens: 16, d_model: 8, d_ffn: 16, experts, cap: 16 };
+    let mut rng = Rng::new(chunk_len_seed);
+    let cl = dims.chunk_len();
+    let mk = |rng: &mut Rng| -> Vec<f32> { (0..cl).map(|_| rng.normal() as f32).collect() };
+    let experts_v: Vec<ExpertState> = (0..experts)
+        .map(|_| ExpertState { chunk: mk(&mut rng), m: mk(&mut rng), v: mk(&mut rng), t: 3 })
+        .collect();
+    TrainState {
+        step: 7,
+        dims,
+        seed: chunk_len_seed,
+        data_shards: world,
+        owners: (0..experts).map(|e| e % world).collect(),
+        experts: experts_v,
+        gate_w: (0..dims.d_model * experts).map(|_| rng.normal() as f32).collect(),
+        predictor_window: 5,
+        predictor_history: (0..3).map(|_| rng.dirichlet(0.5, experts)).collect(),
+        rng_state: [1, 2, 3, 4],
+        mem_slots: 4,
+        overlap_degree: 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::assert_allclose;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("hecate-ckpt-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let topo = Topology::cluster_a(2, 2);
+        let state = test_state(10, 4, 42);
+        let info = save(&dir, &state, &topo).unwrap();
+        assert_eq!(info.files, 4 + 1 + 1, "4 rank blobs + global + manifest");
+
+        let (back, saved) = load(&dir).unwrap();
+        assert_eq!(saved, SavedTopo { nodes: 2, devices_per_node: 2 });
+        assert_eq!(back.step, state.step);
+        assert_eq!(back.seed, state.seed);
+        assert_eq!(back.owners, state.owners);
+        assert_eq!(back.rng_state, state.rng_state);
+        assert_eq!(back.predictor_window, state.predictor_window);
+        assert_eq!(back.predictor_history, state.predictor_history);
+        assert_eq!(back.mem_slots, state.mem_slots);
+        assert_eq!(back.overlap_degree, state.overlap_degree);
+        for (a, b) in back.experts.iter().zip(state.experts.iter()) {
+            assert_eq!(a, b, "expert state must be bit-identical");
+        }
+        assert_allclose(&back.gate_w, &state.gate_w, 0.0, 0.0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shrinking_resave_removes_stale_rank_files() {
+        let dir = tmpdir("shrink-resave");
+        // First save on 4 devices, then re-save the (re-owned) state on 2.
+        save(&dir, &test_state(8, 4, 21), &Topology::cluster_a(2, 2)).unwrap();
+        assert!(dir.join("rank-3.bin").exists());
+        save(&dir, &test_state(8, 2, 21), &Topology::cluster_a(1, 2)).unwrap();
+        assert!(dir.join("rank-1.bin").exists());
+        assert!(!dir.join("rank-2.bin").exists(), "stale rank file must be removed");
+        assert!(!dir.join("rank-3.bin").exists(), "stale rank file must be removed");
+        let (state, saved) = load(&dir).unwrap();
+        assert_eq!(saved.world(), 2);
+        assert_eq!(state.experts.len(), 8);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn tampered_rank_blob_rejected() {
+        let dir = tmpdir("tamper");
+        let topo = Topology::cluster_a(1, 2);
+        let state = test_state(4, 2, 7);
+        save(&dir, &state, &topo).unwrap();
+        let f = dir.join("rank-0.bin");
+        let mut bytes = std::fs::read(&f).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 1;
+        std::fs::write(&f, &bytes).unwrap();
+        let err = load(&dir).unwrap_err().to_string();
+        assert!(err.contains("checksum") || err.contains("corrupt"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_expert_detected() {
+        let dir = tmpdir("missing");
+        let topo = Topology::cluster_a(1, 2);
+        let state = test_state(4, 2, 9);
+        save(&dir, &state, &topo).unwrap();
+        // Rewrite rank 1's blob as empty (no experts) and fix the manifest
+        // checksum so only the completeness check can catch it.
+        let empty = shard::encode_rank(&state, 1, &[]);
+        std::fs::write(dir.join("rank-1.bin"), &empty).unwrap();
+        let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let mut doc = Json::parse(&manifest).unwrap();
+        if let Json::Obj(map) = &mut doc {
+            if let Some(Json::Arr(ranks)) = map.get_mut("ranks") {
+                if let Json::Obj(r1) = &mut ranks[1] {
+                    r1.insert(
+                        "fnv".into(),
+                        Json::Str(format!("{:#018x}", format::fnv1a64(&empty))),
+                    );
+                    r1.insert("bytes".into(), empty.len().into());
+                }
+            }
+        }
+        std::fs::write(dir.join("manifest.json"), doc.to_string_pretty()).unwrap();
+        let err = load(&dir).unwrap_err().to_string();
+        assert!(err.contains("missing from every rank shard"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn save_rejects_out_of_range_owner() {
+        let dir = tmpdir("badowner");
+        let topo = Topology::cluster_a(1, 2);
+        let mut state = test_state(4, 2, 11);
+        state.owners[2] = 9;
+        assert!(save(&dir, &state, &topo).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,143 @@
+//! Elastic resume planning: lay a restored shard set out on a (possibly
+//! different) topology.
+//!
+//! * Same world size → keep the saved owner map verbatim. Zero movement,
+//!   and the resumed run is **bit-identical** to the uninterrupted one
+//!   (same placement ⇒ same reduction orders).
+//! * Different world size → re-run the heterogeneous sharding planner
+//!   (Algorithm 2, [`crate::sharding`]) over the restored load-predictor
+//!   window, exactly what a fresh re-shard would do. FlexMoE/LAER-MoE make
+//!   the same observation from the placement side: expert state can be
+//!   re-laid-out across a changed device set because the durable state is
+//!   placement-free.
+
+use crate::placement::Placement;
+use crate::sharding;
+use crate::topology::{DeviceId, Topology};
+
+use super::TrainState;
+
+/// How a restored checkpoint maps onto the resume topology.
+#[derive(Debug, Clone)]
+pub struct ReshardPlan {
+    /// New owner partition: exactly one holder per expert.
+    pub shards: Placement,
+    /// Experts whose owner rank changed relative to the checkpoint.
+    pub moved_experts: Vec<usize>,
+    /// Bytes those moves carry (params + Adam m/v + step counter).
+    pub bytes_moved: usize,
+    /// True when the saved layout was reused verbatim.
+    pub kept_saved_layout: bool,
+}
+
+/// Bytes one expert's durable state occupies in host memory (f32 chunk +
+/// f32 m + f32 v + u32 t).
+pub fn expert_state_bytes(chunk_len: usize) -> usize {
+    chunk_len * 4 * 3 + 4
+}
+
+/// Plan the owner layout for resuming `state` on `topo`.
+pub fn plan(state: &TrainState, old_world: usize, topo: &Topology) -> anyhow::Result<ReshardPlan> {
+    let experts = state.experts.len();
+    let world = topo.num_devices();
+    anyhow::ensure!(world > 0, "resume topology has no devices");
+    anyhow::ensure!(experts > 0, "checkpoint holds no experts");
+    anyhow::ensure!(
+        state.owners.len() == experts,
+        "owner map covers {} experts, state has {experts}",
+        state.owners.len()
+    );
+
+    let (shards, kept) = if world == old_world {
+        (
+            Placement::from_pairs(
+                experts,
+                world,
+                state.owners.iter().enumerate().map(|(e, &r)| (e, DeviceId(r))),
+            ),
+            true,
+        )
+    } else {
+        // Re-run Algorithm 2 with the same load statistics the engine's
+        // next materialization will see (the restored sliding window).
+        let loads = if state.predictor_history.is_empty() {
+            vec![1.0 / experts as f64; experts]
+        } else {
+            let mut avg = vec![0.0f64; experts];
+            for row in &state.predictor_history {
+                for (a, v) in avg.iter_mut().zip(row.iter()) {
+                    *a += v;
+                }
+            }
+            let n = state.predictor_history.len() as f64;
+            for a in &mut avg {
+                *a /= n;
+            }
+            avg
+        };
+        let t = state.overlap_degree.min(experts);
+        let plan = sharding::heterogeneous(topo, &[loads], t);
+        (plan.layers.into_iter().next().expect("single-layer plan"), false)
+    };
+
+    anyhow::ensure!(shards.is_partition(), "reshard produced a non-partition layout");
+    let moved_experts: Vec<usize> = (0..experts)
+        .filter(|&e| {
+            let new_owner = shards.holders(e).next().expect("partition has a holder");
+            state.owners[e] != new_owner.0
+        })
+        .collect();
+    let bytes_moved = moved_experts.len() * expert_state_bytes(state.dims.chunk_len());
+    Ok(ReshardPlan { shards, moved_experts, bytes_moved, kept_saved_layout: kept })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_state;
+    use super::*;
+
+    #[test]
+    fn same_world_keeps_saved_layout() {
+        let state = test_state(8, 4, 3);
+        let topo = Topology::cluster_a(2, 2);
+        let p = plan(&state, 4, &topo).unwrap();
+        assert!(p.kept_saved_layout);
+        assert!(p.moved_experts.is_empty());
+        assert_eq!(p.bytes_moved, 0);
+        for (e, &o) in state.owners.iter().enumerate() {
+            assert!(p.shards.contains(e, DeviceId(o)));
+            assert_eq!(p.shards.replication(e), 1);
+        }
+    }
+
+    #[test]
+    fn shrink_and_grow_produce_valid_partitions() {
+        let state = test_state(16, 4, 11);
+        for (nodes, dpn) in [(1, 2), (2, 4), (2, 1)] {
+            let topo = Topology::cluster_a(nodes, dpn);
+            let p = plan(&state, 4, &topo).unwrap();
+            assert!(!p.kept_saved_layout);
+            assert!(p.shards.is_partition());
+            assert_eq!(p.shards.num_devices(), topo.num_devices());
+            // slot balance within one expert
+            let loads: Vec<usize> =
+                topo.all_devices().map(|d| p.shards.load_of(d)).collect();
+            let (mx, mn) = (loads.iter().max().unwrap(), loads.iter().min().unwrap());
+            assert!(mx - mn <= 1, "unbalanced slots {loads:?}");
+            assert_eq!(p.bytes_moved, p.moved_experts.len() * expert_state_bytes(state.dims.chunk_len()));
+        }
+    }
+
+    #[test]
+    fn shrink_moves_dead_ranks_experts() {
+        let state = test_state(8, 4, 5);
+        let topo = Topology::cluster_a(1, 2); // world 4 -> 2
+        let p = plan(&state, 4, &topo).unwrap();
+        // every expert owned by rank 2 or 3 must have moved
+        for (e, &o) in state.owners.iter().enumerate() {
+            if o >= 2 {
+                assert!(p.moved_experts.contains(&e), "expert {e} owned by dead rank {o}");
+            }
+        }
+    }
+}

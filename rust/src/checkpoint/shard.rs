@@ -1,0 +1,186 @@
+//! Blob schemas: the per-rank shard blob and the replicated global blob.
+//!
+//! Schema version 1 (field order is the contract; see `DESIGN.md`):
+//!
+//! ```text
+//! global.bin:  step u64 | seed u64 | data_shards u64 | dims 5×u64 |
+//!              gate_w f32s | predictor_window u64 | history_rows u64 |
+//!              rows×f64s | rng 4×u64 | mem_slots u64 | overlap_degree u64
+//! rank-r.bin:  rank u64 | num_experts u64 | per expert:
+//!              id u64 | t u32 | chunk f32s | m f32s | v f32s
+//! ```
+//!
+//! Both are wrapped in the [`super::format`] header/trailer.
+
+use crate::fssdp::LayerDims;
+
+use super::format::{Reader, Writer};
+use super::{ExpertState, TrainState};
+
+/// Encode the replicated (non-sharded) metadata of a checkpoint.
+pub fn encode_global(state: &TrainState) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u64(state.step);
+    w.put_u64(state.seed);
+    w.put_usize(state.data_shards);
+    w.put_usize(state.dims.tokens);
+    w.put_usize(state.dims.d_model);
+    w.put_usize(state.dims.d_ffn);
+    w.put_usize(state.dims.experts);
+    w.put_usize(state.dims.cap);
+    w.put_f32s(&state.gate_w);
+    w.put_usize(state.predictor_window);
+    w.put_usize(state.predictor_history.len());
+    for row in &state.predictor_history {
+        w.put_f64s(row);
+    }
+    for &s in &state.rng_state {
+        w.put_u64(s);
+    }
+    w.put_usize(state.mem_slots);
+    w.put_usize(state.overlap_degree);
+    w.finish()
+}
+
+/// Decode a [`encode_global`] blob. The returned state has empty
+/// `experts`/`owners` — the caller fills them from the rank shards.
+pub fn decode_global(bytes: &[u8]) -> anyhow::Result<TrainState> {
+    let mut r = Reader::open(bytes)?;
+    let step = r.take_u64()?;
+    let seed = r.take_u64()?;
+    let data_shards = r.take_usize()?;
+    let dims = LayerDims {
+        tokens: r.take_usize()?,
+        d_model: r.take_usize()?,
+        d_ffn: r.take_usize()?,
+        experts: r.take_usize()?,
+        cap: r.take_usize()?,
+    };
+    let gate_w = r.take_f32s()?;
+    anyhow::ensure!(
+        gate_w.len() == dims.d_model * dims.experts,
+        "global blob: gate_w has {} floats, dims imply {}",
+        gate_w.len(),
+        dims.d_model * dims.experts
+    );
+    let predictor_window = r.take_usize()?;
+    anyhow::ensure!(predictor_window >= 1, "global blob: predictor window 0");
+    let rows = r.take_usize()?;
+    let mut predictor_history = Vec::with_capacity(rows.min(1024));
+    for _ in 0..rows {
+        let row = r.take_f64s()?;
+        anyhow::ensure!(
+            row.len() == dims.experts,
+            "global blob: history row has {} entries, expected {}",
+            row.len(),
+            dims.experts
+        );
+        predictor_history.push(row);
+    }
+    let mut rng_state = [0u64; 4];
+    for s in &mut rng_state {
+        *s = r.take_u64()?;
+    }
+    let mem_slots = r.take_usize()?;
+    let overlap_degree = r.take_usize()?;
+    r.done()?;
+    Ok(TrainState {
+        step,
+        dims,
+        seed,
+        data_shards,
+        experts: Vec::new(),
+        owners: Vec::new(),
+        gate_w,
+        predictor_window,
+        predictor_history,
+        rng_state,
+        mem_slots,
+        overlap_degree,
+    })
+}
+
+/// One decoded rank shard.
+#[derive(Debug, Clone)]
+pub struct RankShard {
+    pub rank: usize,
+    /// `(expert_id, state)` pairs, in id order.
+    pub experts: Vec<(usize, ExpertState)>,
+}
+
+/// Encode rank `r`'s shard: the durable state of `expert_ids`.
+pub fn encode_rank(state: &TrainState, r: usize, expert_ids: &[usize]) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_usize(r);
+    w.put_usize(expert_ids.len());
+    for &e in expert_ids {
+        let st = &state.experts[e];
+        w.put_usize(e);
+        w.put_u32(st.t);
+        w.put_f32s(&st.chunk);
+        w.put_f32s(&st.m);
+        w.put_f32s(&st.v);
+    }
+    w.finish()
+}
+
+/// Decode a [`encode_rank`] blob, validating every buffer against the
+/// manifest's `chunk_len`.
+pub fn decode_rank(bytes: &[u8], chunk_len: usize) -> anyhow::Result<RankShard> {
+    let mut r = Reader::open(bytes)?;
+    let rank = r.take_usize()?;
+    let n = r.take_usize()?;
+    let mut experts = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        let e = r.take_usize()?;
+        let t = r.take_u32()?;
+        let chunk = r.take_f32s()?;
+        let m = r.take_f32s()?;
+        let v = r.take_f32s()?;
+        for (name, buf) in [("chunk", &chunk), ("m", &m), ("v", &v)] {
+            anyhow::ensure!(
+                buf.len() == chunk_len,
+                "rank {rank} expert {e}: {name} has {} floats, expected {chunk_len}",
+                buf.len()
+            );
+        }
+        experts.push((e, ExpertState { chunk, m, v, t }));
+    }
+    r.done()?;
+    Ok(RankShard { rank, experts })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_state;
+    use super::*;
+
+    #[test]
+    fn global_roundtrip() {
+        let state = test_state(6, 3, 5);
+        let bytes = encode_global(&state);
+        let back = decode_global(&bytes).unwrap();
+        assert_eq!(back.step, state.step);
+        assert_eq!(back.seed, state.seed);
+        assert_eq!(back.dims.chunk_len(), state.dims.chunk_len());
+        assert_eq!(back.gate_w, state.gate_w);
+        assert_eq!(back.predictor_history, state.predictor_history);
+        assert_eq!(back.rng_state, state.rng_state);
+        assert!(back.experts.is_empty());
+    }
+
+    #[test]
+    fn rank_roundtrip_and_validation() {
+        let state = test_state(6, 3, 5);
+        let ids = vec![1usize, 4];
+        let bytes = encode_rank(&state, 2, &ids);
+        let shard = decode_rank(&bytes, state.dims.chunk_len()).unwrap();
+        assert_eq!(shard.rank, 2);
+        assert_eq!(shard.experts.len(), 2);
+        assert_eq!(shard.experts[0].0, 1);
+        assert_eq!(shard.experts[0].1, state.experts[1]);
+        assert_eq!(shard.experts[1].1, state.experts[4]);
+        // wrong chunk_len rejected
+        assert!(decode_rank(&bytes, state.dims.chunk_len() + 1).is_err());
+    }
+}

@@ -1,14 +1,21 @@
 //! L3 coordinator CLI: subcommand dispatch for the `hecate` binary.
 //!
 //! ```text
-//! hecate repro   --figure 9|10|11|12|13|14|15a|15b | --table 1 | --claims | --all
-//! hecate simulate --cluster a|b --model gpt-moe-s --system hecate [--nodes 4 --dpn 8]
-//! hecate train   --model e2e --steps 200 [--artifacts DIR]   (runs PJRT)
-//! hecate fssdp   --devices 8 --iters 20                      (numeric engine)
+//! hecate repro     --figure 9|10|11|12|13|14|15a|15b | --table 1 | --claims | --all
+//! hecate simulate  --cluster a|b --model gpt-moe-s --system hecate [--nodes 4 --dpn 8]
+//!                  [--fail-step K --fail-device D --checkpoint-every N]   (fault injection)
+//! hecate train     --model e2e --steps 200 [--artifacts DIR]   (runs PJRT)
+//!                  [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR]
+//! hecate fssdp     --devices 8 --iters 20                      (numeric engine)
+//!                  [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR] [--reference]
+//! hecate checkpoint --dir DIR [--devices N --iters K]          (hermetic snapshot demo)
+//! hecate resume     --dir DIR [--devices M --iters K]          (elastic resume demo)
 //! ```
 
+use crate::checkpoint::faults::FaultSpec;
 use crate::config::{ClusterPreset, ModelConfig, SystemConfig, SystemKind, TrainConfig};
-use crate::sim::engine::simulate;
+use crate::fssdp::RunOpts;
+use crate::sim::engine::{simulate, simulate_with_faults};
 use crate::sim::report;
 use crate::util::cli::Args;
 
@@ -25,6 +32,8 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "simulate" => cmd_simulate(&args),
         "train" => cmd_train(&args),
         "fssdp" => cmd_fssdp(&args),
+        "checkpoint" => cmd_checkpoint(&args),
+        "resume" => cmd_resume(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -40,9 +49,14 @@ fn print_usage() {
     eprintln!(
         "hecate — FSSDP MoE training (paper reproduction)\n\
          USAGE:\n  hecate repro    [--figure N | --table 1 | --claims | --all] [--iters N]\n  \
-         hecate simulate --cluster a|b --model NAME --system NAME [--nodes N --dpn N --batch N]\n  \
-         hecate train    [--steps N] [--artifacts DIR] [--model tiny|e2e] [--log FILE]\n  \
-         hecate fssdp    [--devices N] [--iters N] [--artifacts DIR]"
+         hecate simulate --cluster a|b --model NAME --system NAME [--nodes N --dpn N --batch N]\n                  \
+         [--fail-step K --fail-device D --checkpoint-every N --detect-s S --disk-gbps G]\n  \
+         hecate train    [--steps N] [--artifacts DIR] [--model tiny|e2e] [--log FILE]\n                  \
+         [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR]\n  \
+         hecate fssdp    [--devices N] [--iters N] [--artifacts DIR] [--reference]\n                  \
+         [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR]\n  \
+         hecate checkpoint --dir DIR [--nodes N --devices N --iters K --seed S]\n  \
+         hecate resume     --dir DIR [--nodes N --devices M --iters K]"
     );
 }
 
@@ -109,6 +123,7 @@ fn cmd_repro(args: &Args) -> anyhow::Result<()> {
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&[
         "cluster", "model", "system", "nodes", "dpn", "batch", "iters", "seed", "experts",
+        "fail-step", "fail-device", "checkpoint-every", "detect-s", "disk-gbps",
     ])?;
     let cluster = ClusterPreset::parse(&args.str_or("cluster", "a"))?;
     let nodes = args.usize_or("nodes", 4)?;
@@ -125,7 +140,55 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     opts.iterations = args.usize_or("iters", opts.iterations)?;
     opts.seed = args.usize_or("seed", opts.seed as usize)? as u64;
 
-    let r = simulate(&topo, &model, &SystemConfig::new(system), &train, &opts);
+    let sys_cfg = SystemConfig::new(system);
+
+    // Fault-injection mode: kill a device, restart, replay from snapshot.
+    if args.has("fail-step") {
+        // Clamp once here so the headline numbers, the printed failure
+        // line, and the interval-sweep table all describe the same step.
+        let spec = FaultSpec {
+            fail_step: args
+                .usize_or("fail-step", 50)?
+                .min(opts.iterations.saturating_sub(1)),
+            fail_device: args.usize_or("fail-device", 0)?,
+            checkpoint_every: args.usize_or("checkpoint-every", 25)?,
+            detect_time: args.f64_or("detect-s", 5.0)?,
+            disk_bw: args.f64_or("disk-gbps", 2.0)? * 1e9,
+        };
+        let r = simulate_with_faults(&topo, &model, &sys_cfg, &train, &opts, &spec);
+        println!("system     : {} (fault injection)", r.sim.system);
+        println!("topology   : {}", topo.name);
+        println!(
+            "failure    : device {} at step {} (snapshot every {})",
+            spec.fail_device % topo.num_devices().max(1),
+            spec.fail_step,
+            if spec.checkpoint_every == 0 { "never".to_string() } else { spec.checkpoint_every.to_string() }
+        );
+        println!("iter time  : {:.2} ms", r.sim.iter_time * 1e3);
+        let rec = &r.recovery;
+        println!(
+            "snapshot   : {:.2} GB in {:.2} s ({:.2}% steady overhead)",
+            rec.checkpoint_bytes / 1e9,
+            rec.checkpoint_time,
+            100.0 * rec.steady_overhead / r.sim.iter_time.max(1e-12)
+        );
+        println!(
+            "MTTR       : {:.2} s = detect {:.2} + restore {:.2} + redistribute {:.2} + replay {:.2} ({} iters)",
+            rec.mttr, rec.detect, rec.restore_io, rec.redistribute, rec.replay, rec.replay_iters
+        );
+        println!(
+            "wall clock : {:.2} s vs ideal {:.2} s ({:.2}x)",
+            r.total_wall_clock,
+            r.ideal_wall_clock,
+            r.slowdown()
+        );
+        println!("\n== Recovery time vs snapshot interval ==");
+        let t = report::recovery_table(&topo, &model, r.sim.iter_time, &spec);
+        print!("{}", t.to_markdown());
+        return Ok(());
+    }
+
+    let r = simulate(&topo, &model, &sys_cfg, &train, &opts);
     println!("system     : {}", r.system);
     println!("topology   : {}", topo.name);
     println!("model      : {} ({} experts, batch {})", model.name, model.experts, batch);
@@ -149,22 +212,72 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    args.reject_unknown(&["steps", "artifacts", "model", "log", "lr", "seed"])?;
+    args.reject_unknown(&[
+        "steps", "artifacts", "model", "log", "lr", "seed", "checkpoint-every",
+        "checkpoint-dir", "resume",
+    ])?;
     let steps = args.usize_or("steps", 200)?;
     let dir = args.str_or("artifacts", "artifacts");
     let tag = args.str_or("model", "tiny");
     let log = args.get("log").map(|s| s.to_string());
-    crate::train::run_training(&dir, &tag, steps, log.as_deref())
+    let ckpt = crate::train::CkptOpts {
+        every: args.usize_or("checkpoint-every", 0)?,
+        dir: args.get("checkpoint-dir").map(|s| s.to_string()),
+        resume: args.get("resume").map(|s| s.to_string()),
+    };
+    crate::train::run_training_with(&dir, &tag, steps, log.as_deref(), &ckpt)
 }
 
 fn cmd_fssdp(args: &Args) -> anyhow::Result<()> {
-    args.reject_unknown(&["devices", "iters", "artifacts", "nodes", "seed"])?;
-    let devices = args.usize_or("devices", 8)?;
-    let nodes = args.usize_or("nodes", 2)?;
-    let iters = args.usize_or("iters", 10)?;
+    args.reject_unknown(&[
+        "devices", "iters", "artifacts", "nodes", "seed", "checkpoint-every",
+        "checkpoint-dir", "resume", "reference",
+    ])?;
+    let opts = RunOpts {
+        devices: args.usize_or("devices", 8)?,
+        nodes: args.usize_or("nodes", 2)?,
+        iters: args.usize_or("iters", 10)?,
+        seed: args.usize_or("seed", 42)? as u64,
+        checkpoint_every: args.usize_or("checkpoint-every", 0)?,
+        checkpoint_dir: args.get("checkpoint-dir").map(|s| s.to_string()),
+        resume: args.get("resume").map(|s| s.to_string()),
+        reference: args.bool_or("reference", false)?,
+    };
     let dir = args.str_or("artifacts", "artifacts");
-    let seed = args.usize_or("seed", 42)? as u64;
-    crate::fssdp::run_demo(&dir, nodes, devices, iters, seed)
+    crate::fssdp::run_demo_with(&dir, &opts)
+}
+
+/// Hermetic checkpoint demo: train the reference engine for `--iters`
+/// steps and write a sharded checkpoint to `--dir`. No artifacts needed.
+fn cmd_checkpoint(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["dir", "nodes", "devices", "iters", "seed"])?;
+    let dir = args.req("dir")?;
+    let opts = RunOpts {
+        devices: args.usize_or("devices", 4)?,
+        nodes: args.usize_or("nodes", 2)?,
+        iters: args.usize_or("iters", 4)?,
+        seed: args.usize_or("seed", 42)? as u64,
+        checkpoint_dir: Some(dir),
+        reference: true,
+        ..Default::default()
+    };
+    crate::fssdp::run_demo_with("artifacts", &opts)
+}
+
+/// Hermetic elastic-resume demo: restore `--dir` onto `--devices` devices
+/// (any count — the planner re-shards) and continue for `--iters` steps.
+fn cmd_resume(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["dir", "nodes", "devices", "iters"])?;
+    let dir = args.req("dir")?;
+    let opts = RunOpts {
+        devices: args.usize_or("devices", 2)?,
+        nodes: args.usize_or("nodes", 1)?,
+        iters: args.usize_or("iters", 4)?,
+        resume: Some(dir),
+        reference: true,
+        ..Default::default()
+    };
+    crate::fssdp::run_demo_with("artifacts", &opts)
 }
 
 #[cfg(test)]
@@ -198,5 +311,56 @@ mod tests {
         let argv: Vec<String> =
             ["repro", "--table", "1"].iter().map(|s| s.to_string()).collect();
         run(argv).unwrap();
+    }
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn simulate_fault_injection_smoke() {
+        run(argv(&[
+            "simulate", "--cluster", "a", "--model", "gpt-moe-s", "--system", "hecate",
+            "--nodes", "2", "--dpn", "2", "--iters", "8", "--experts", "8",
+            "--fail-step", "5", "--fail-device", "1", "--checkpoint-every", "2",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn checkpoint_then_elastic_resume_roundtrip() {
+        let dir = std::env::temp_dir()
+            .join(format!("hecate-coord-ckpt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let d = dir.to_str().unwrap().to_string();
+        // write a checkpoint on 4 devices…
+        run(argv(&[
+            "checkpoint", "--iters", "2", "--nodes", "2", "--devices", "4", "--dir", &d,
+        ]))
+        .unwrap();
+        assert!(dir.join("manifest.json").exists());
+        assert!(dir.join("rank-3.bin").exists());
+        // …resume on 2 (shrink) and then via the fssdp flag form on 8 (grow)
+        run(argv(&["resume", "--iters", "2", "--nodes", "1", "--devices", "2", "--dir", &d]))
+            .unwrap();
+        run(argv(&[
+            "fssdp", "--reference", "--iters", "1", "--nodes", "2", "--devices", "8",
+            "--resume", &d,
+        ]))
+        .unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_requires_dir() {
+        assert!(run(argv(&["checkpoint", "--iters", "1"])).is_err());
+        assert!(run(argv(&["resume", "--iters", "1"])).is_err());
+    }
+
+    #[test]
+    fn subcommands_reject_unknown_flags() {
+        assert!(run(argv(&["fssdp", "--bogus", "1"])).is_err());
+        assert!(run(argv(&["simulate", "--fail-step", "5", "--nope", "1"])).is_err());
+        assert!(run(argv(&["checkpoint", "--dir", "/tmp/x", "--nope", "1"])).is_err());
     }
 }

@@ -1,0 +1,484 @@
+//! Compute backends of the numeric FSSDP engine.
+//!
+//! The engine's math runs through three named entry points (`gate_fwd`,
+//! `expert_ffn_fwd`, `expert_ffn_bwd`). [`Compute`] abstracts where they
+//! execute:
+//!
+//! * [`Compute::Pjrt`] — the AOT-compiled HLO executables under PJRT
+//!   (requires `artifacts/`; the production path);
+//! * [`Compute::Reference`] — pure-Rust kernels mirroring the
+//!   `python/compile/kernels/ref.py` oracles (tanh-GeLU FFN, softmax +
+//!   GShard top-2 gate). Hermetic: no artifacts, no PJRT. This is what lets
+//!   the checkpoint/elastic-resume equivalence tests run everywhere.
+//!
+//! Both backends use the same calling convention (shape-checked
+//! [`HostTensor`] tuples), so the engine body is backend-agnostic.
+
+use crate::runtime::{HostTensor, Runtime};
+
+/// Where the engine's kernels execute.
+pub enum Compute {
+    /// Real HLO executables through the PJRT runtime.
+    Pjrt(Runtime),
+    /// In-process reference kernels (see [`Reference`]).
+    Reference(Reference),
+}
+
+impl Compute {
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            Compute::Pjrt(_) => "pjrt",
+            Compute::Reference(_) => "reference",
+        }
+    }
+
+    /// Execute a named entry point. Mirrors [`Runtime::execute`].
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[HostTensor],
+    ) -> anyhow::Result<Vec<HostTensor>> {
+        match self {
+            Compute::Pjrt(rt) => rt.execute(name, inputs),
+            Compute::Reference(r) => r.execute(name, inputs),
+        }
+    }
+}
+
+/// Pure-Rust reference kernels.
+///
+/// Semantics match `python/compile/kernels/ref.py`:
+/// `expert_ffn(x) = gelu(x @ w1 + b1) @ w2 + b2` with the tanh-approx GeLU,
+/// and `gate(x, wg) = top2(softmax(x @ wg))` with GShard weight
+/// normalization (ties toward the lower expert index).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Reference;
+
+const GELU_K: f32 = 0.797_884_6; // sqrt(2/pi)
+const GELU_C: f32 = 0.044_715;
+
+fn gelu(z: f32) -> f32 {
+    0.5 * z * (1.0 + (GELU_K * (z + GELU_C * z * z * z)).tanh())
+}
+
+fn gelu_grad(z: f32) -> f32 {
+    let u = GELU_K * (z + GELU_C * z * z * z);
+    let t = u.tanh();
+    let du = GELU_K * (1.0 + 3.0 * GELU_C * z * z);
+    0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * du
+}
+
+/// `a [n,k] @ b [k,m]`.
+fn matmul_nn(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        let orow = &mut out[i * m..(i + 1) * m];
+        for (p, &av) in a[i * k..(i + 1) * k].iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            for (o, &bv) in orow.iter_mut().zip(b[p * m..(p + 1) * m].iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// `a [n,k] @ bᵀ` with `b [m,k]`.
+fn matmul_nt(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..m {
+            let brow = &b[j * k..(j + 1) * k];
+            out[i * m + j] = arow.iter().zip(brow.iter()).map(|(x, y)| x * y).sum();
+        }
+    }
+    out
+}
+
+/// `aᵀ @ b` with `a [k,n]`, `b [k,m]`.
+fn matmul_tn(a: &[f32], b: &[f32], k: usize, n: usize, m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * m];
+    for p in 0..k {
+        let arow = &a[p * n..(p + 1) * n];
+        let brow = &b[p * m..(p + 1) * m];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            for (o, &bv) in out[i * m..(i + 1) * m].iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+fn shape2(t: &HostTensor, what: &str) -> anyhow::Result<(usize, usize)> {
+    let s = t.shape();
+    anyhow::ensure!(s.len() == 2, "{what}: expected rank-2 tensor, got shape {s:?}");
+    Ok((s[0], s[1]))
+}
+
+impl Reference {
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[HostTensor],
+    ) -> anyhow::Result<Vec<HostTensor>> {
+        match name {
+            "gate_fwd" => self.gate_fwd(inputs),
+            "expert_ffn_fwd" => self.ffn_fwd(inputs),
+            "expert_ffn_bwd" => self.ffn_bwd(inputs),
+            other => anyhow::bail!("reference backend has no entry `{other}`"),
+        }
+    }
+
+    /// logits → softmax → top-2, mirroring the HLO gate: returns
+    /// `(probs [T,E], weights [T,2], idx [T,2] i32)`.
+    fn gate_fwd(&self, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        anyhow::ensure!(inputs.len() == 2, "gate_fwd expects (x, wg)");
+        let (t, dm) = shape2(&inputs[0], "gate x")?;
+        let (dm2, e) = shape2(&inputs[1], "gate wg")?;
+        anyhow::ensure!(dm == dm2, "gate: x d_model {dm} != wg d_model {dm2}");
+        anyhow::ensure!(e >= 2, "gate needs at least 2 experts for top-2");
+        let x = inputs[0].as_f32()?;
+        let wg = inputs[1].as_f32()?;
+
+        let logits = matmul_nn(x, wg, t, dm, e);
+        let mut probs = vec![0.0f32; t * e];
+        let mut w2 = vec![0.0f32; t * 2];
+        let mut idx = vec![0i32; t * 2];
+        for row in 0..t {
+            let l = &logits[row * e..(row + 1) * e];
+            let max = l.iter().cloned().fold(f32::MIN, f32::max);
+            let p = &mut probs[row * e..(row + 1) * e];
+            let mut sum = 0.0f32;
+            for (pi, &li) in p.iter_mut().zip(l.iter()) {
+                *pi = (li - max).exp();
+                sum += *pi;
+            }
+            for pi in p.iter_mut() {
+                *pi /= sum;
+            }
+            // top-2 with ties toward the lower index (strict > scans).
+            let mut i1 = 0usize;
+            for (i, &pi) in p.iter().enumerate() {
+                if pi > p[i1] {
+                    i1 = i;
+                }
+            }
+            let mut i2 = usize::MAX;
+            for (i, &pi) in p.iter().enumerate() {
+                if i == i1 {
+                    continue;
+                }
+                if i2 == usize::MAX || pi > p[i2] {
+                    i2 = i;
+                }
+            }
+            let (p1, p2) = (p[i1], p[i2]);
+            let denom = p1 + p2;
+            w2[row * 2] = p1 / denom;
+            w2[row * 2 + 1] = p2 / denom;
+            idx[row * 2] = i1 as i32;
+            idx[row * 2 + 1] = i2 as i32;
+        }
+        Ok(vec![
+            HostTensor::f32(vec![t, e], probs),
+            HostTensor::f32(vec![t, 2], w2),
+            HostTensor::i32(vec![t, 2], idx),
+        ])
+    }
+
+    /// Returns the pre-activation `z = x@w1 + b1` and hidden `h = gelu(z)`.
+    fn ffn_hidden(
+        x: &[f32],
+        w1: &[f32],
+        b1: &[f32],
+        cap: usize,
+        dm: usize,
+        dff: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let mut z = matmul_nn(x, w1, cap, dm, dff);
+        for row in 0..cap {
+            for (zi, &bi) in z[row * dff..(row + 1) * dff].iter_mut().zip(b1.iter()) {
+                *zi += bi;
+            }
+        }
+        let h: Vec<f32> = z.iter().map(|&v| gelu(v)).collect();
+        (z, h)
+    }
+
+    fn ffn_check_shapes(
+        inputs: &[HostTensor],
+        want: usize,
+        what: &str,
+    ) -> anyhow::Result<(usize, usize, usize)> {
+        anyhow::ensure!(inputs.len() == want, "{what}: expected {want} inputs");
+        let (cap, dm) = shape2(&inputs[0], "ffn x")?;
+        let (dm2, dff) = shape2(&inputs[1], "ffn w1")?;
+        let (dff2, dm3) = shape2(&inputs[3], "ffn w2")?;
+        anyhow::ensure!(
+            dm == dm2 && dm == dm3 && dff == dff2,
+            "{what}: inconsistent dims (x [{cap},{dm}], w1 [{dm2},{dff}], w2 [{dff2},{dm3}])"
+        );
+        anyhow::ensure!(
+            inputs[2].shape() == [dff] && inputs[4].shape() == [dm],
+            "{what}: bias shapes {:?}/{:?} vs dff {dff}, d_model {dm}",
+            inputs[2].shape(),
+            inputs[4].shape()
+        );
+        Ok((cap, dm, dff))
+    }
+
+    /// `y = gelu(x@w1 + b1) @ w2 + b2`.
+    fn ffn_fwd(&self, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        let (cap, dm, dff) = Self::ffn_check_shapes(inputs, 5, "expert_ffn_fwd")?;
+        let x = inputs[0].as_f32()?;
+        let w1 = inputs[1].as_f32()?;
+        let b1 = inputs[2].as_f32()?;
+        let w2 = inputs[3].as_f32()?;
+        let b2 = inputs[4].as_f32()?;
+        let (_z, h) = Self::ffn_hidden(x, w1, b1, cap, dm, dff);
+        let mut y = matmul_nn(&h, w2, cap, dff, dm);
+        for row in 0..cap {
+            for (yi, &bi) in y[row * dm..(row + 1) * dm].iter_mut().zip(b2.iter()) {
+                *yi += bi;
+            }
+        }
+        Ok(vec![HostTensor::f32(vec![cap, dm], y)])
+    }
+
+    /// VJP of [`Reference::ffn_fwd`]: returns `(gx, gw1, gb1, gw2, gb2)`.
+    fn ffn_bwd(&self, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        let (cap, dm, dff) = Self::ffn_check_shapes(inputs, 6, "expert_ffn_bwd")?;
+        anyhow::ensure!(
+            inputs[5].shape() == [cap, dm],
+            "expert_ffn_bwd: gy shape {:?} vs [{cap},{dm}]",
+            inputs[5].shape()
+        );
+        let x = inputs[0].as_f32()?;
+        let w1 = inputs[1].as_f32()?;
+        let b1 = inputs[2].as_f32()?;
+        let w2 = inputs[3].as_f32()?;
+        let gy = inputs[5].as_f32()?;
+
+        let (z, h) = Self::ffn_hidden(x, w1, b1, cap, dm, dff);
+        // gb2[c] = Σ_rows gy ; gw2 = hᵀ @ gy ; gh = gy @ w2ᵀ
+        let mut gb2 = vec![0.0f32; dm];
+        for row in 0..cap {
+            for (g, &v) in gb2.iter_mut().zip(gy[row * dm..(row + 1) * dm].iter()) {
+                *g += v;
+            }
+        }
+        let gw2 = matmul_tn(&h, gy, cap, dff, dm);
+        let gh = matmul_nt(gy, w2, cap, dm, dff);
+        // gz = gh ⊙ gelu'(z)
+        let gz: Vec<f32> = gh.iter().zip(z.iter()).map(|(&g, &zv)| g * gelu_grad(zv)).collect();
+        let mut gb1 = vec![0.0f32; dff];
+        for row in 0..cap {
+            for (g, &v) in gb1.iter_mut().zip(gz[row * dff..(row + 1) * dff].iter()) {
+                *g += v;
+            }
+        }
+        let gw1 = matmul_tn(x, &gz, cap, dm, dff);
+        let gx = matmul_nt(&gz, w1, cap, dff, dm);
+        Ok(vec![
+            HostTensor::f32(vec![cap, dm], gx),
+            HostTensor::f32(vec![dm, dff], gw1),
+            HostTensor::f32(vec![dff], gb1),
+            HostTensor::f32(vec![dff, dm], gw2),
+            HostTensor::f32(vec![dm], gb2),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize, f: f32) -> Vec<f32> {
+        (0..n).map(|i| ((i as f32) * f).sin() * 0.1).collect()
+    }
+
+    #[test]
+    fn gate_produces_valid_top2() {
+        // Mirrors the PJRT integration test `gate_fwd_produces_valid_top2`.
+        let (t, dm, e) = (12, 8, 6);
+        let x = HostTensor::f32(vec![t, dm], (0..t * dm).map(|i| (i as f32 * 0.37).sin()).collect());
+        let wg = HostTensor::f32(
+            vec![dm, e],
+            (0..dm * e).map(|i| (i as f32 * 0.11).cos() * 0.3).collect(),
+        );
+        let out = Reference.execute("gate_fwd", &[x, wg]).unwrap();
+        assert_eq!(out.len(), 3);
+        let probs = out[0].as_f32().unwrap();
+        for row in probs.chunks(e) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row sum {s}");
+        }
+        let w = out[1].as_f32().unwrap();
+        let idx = out[2].as_i32().unwrap();
+        for (wpair, ipair) in w.chunks(2).zip(idx.chunks(2)) {
+            assert!((wpair[0] + wpair[1] - 1.0).abs() < 1e-4);
+            assert!(wpair[0] >= wpair[1], "first choice has the larger weight");
+            assert_ne!(ipair[0], ipair[1]);
+            assert!((0..e as i32).contains(&ipair[0]));
+            assert!((0..e as i32).contains(&ipair[1]));
+        }
+    }
+
+    #[test]
+    fn gate_tie_breaks_toward_lower_index() {
+        // Identical logits everywhere: top-2 must be experts (0, 1).
+        let x = HostTensor::f32(vec![2, 3], vec![1.0; 6]);
+        let wg = HostTensor::f32(vec![3, 4], vec![0.5; 12]);
+        let out = Reference.execute("gate_fwd", &[x, wg]).unwrap();
+        let idx = out[2].as_i32().unwrap();
+        assert_eq!(idx, &[0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn ffn_bwd_matches_finite_difference() {
+        // Mirrors the PJRT integration test, hermetically.
+        let (cap, dm, dff) = (4, 6, 10);
+        let x = HostTensor::f32(vec![cap, dm], mk(cap * dm, 0.13));
+        let w1 = HostTensor::f32(vec![dm, dff], mk(dm * dff, 0.07));
+        let b1 = HostTensor::f32(vec![dff], mk(dff, 0.19));
+        let w2 = HostTensor::f32(vec![dff, dm], mk(dff * dm, 0.05));
+        let b2 = HostTensor::f32(vec![dm], mk(dm, 0.23));
+        let gy = HostTensor::f32(vec![cap, dm], vec![1.0; cap * dm]);
+
+        let bwd = Reference
+            .execute(
+                "expert_ffn_bwd",
+                &[x.clone(), w1.clone(), b1.clone(), w2.clone(), b2.clone(), gy],
+            )
+            .unwrap();
+        assert_eq!(bwd.len(), 5);
+        // analytic: dL/db2 with gy=1 is cap (each row contributes 1)
+        for &g in bwd[4].as_f32().unwrap() {
+            assert!((g - cap as f32).abs() < 1e-3, "gb2 {g} vs {cap}");
+        }
+
+        // finite difference on every parameter tensor via L = Σ y
+        let run_loss = |w1v: &[f32], b1v: &[f32], w2v: &[f32]| -> f32 {
+            let y = Reference
+                .execute(
+                    "expert_ffn_fwd",
+                    &[
+                        x.clone(),
+                        HostTensor::f32(vec![dm, dff], w1v.to_vec()),
+                        HostTensor::f32(vec![dff], b1v.to_vec()),
+                        HostTensor::f32(vec![dff, dm], w2v.to_vec()),
+                        b2.clone(),
+                    ],
+                )
+                .unwrap();
+            y[0].as_f32().unwrap().iter().sum()
+        };
+        let (w1v, b1v, w2v) = (mk(dm * dff, 0.07), mk(dff, 0.19), mk(dff * dm, 0.05));
+        let eps = 1e-3f32;
+        let check = |analytic: f32, fd: f32, what: &str| {
+            assert!(
+                (fd - analytic).abs() < 2e-2 * analytic.abs().max(1.0),
+                "{what}: finite diff {fd} vs analytic {analytic}"
+            );
+        };
+        // one element of each of w1, b1, w2
+        for (tensor_i, elt) in [(1usize, 5usize), (2, 3), (3, 7)] {
+            let (mut a, mut b, mut c) = (w1v.clone(), b1v.clone(), w2v.clone());
+            let tgt: &mut Vec<f32> = match tensor_i {
+                1 => &mut a,
+                2 => &mut b,
+                _ => &mut c,
+            };
+            tgt[elt] += eps;
+            let lp = run_loss(&a, &b, &c);
+            let tgt: &mut Vec<f32> = match tensor_i {
+                1 => &mut a,
+                2 => &mut b,
+                _ => &mut c,
+            };
+            tgt[elt] -= 2.0 * eps;
+            let lm = run_loss(&a, &b, &c);
+            let fd = (lp - lm) / (2.0 * eps);
+            let analytic = bwd[tensor_i].as_f32().unwrap()[elt];
+            check(analytic, fd, &format!("tensor {tensor_i} elt {elt}"));
+        }
+    }
+
+    #[test]
+    fn gx_matches_finite_difference() {
+        let (cap, dm, dff) = (3, 4, 6);
+        let xv = mk(cap * dm, 0.31);
+        let w1 = HostTensor::f32(vec![dm, dff], mk(dm * dff, 0.07));
+        let b1 = HostTensor::f32(vec![dff], mk(dff, 0.19));
+        let w2 = HostTensor::f32(vec![dff, dm], mk(dff * dm, 0.05));
+        let b2 = HostTensor::f32(vec![dm], mk(dm, 0.23));
+        let gy = HostTensor::f32(vec![cap, dm], vec![1.0; cap * dm]);
+        let loss = |xv: &[f32]| -> f32 {
+            Reference
+                .execute(
+                    "expert_ffn_fwd",
+                    &[
+                        HostTensor::f32(vec![cap, dm], xv.to_vec()),
+                        w1.clone(),
+                        b1.clone(),
+                        w2.clone(),
+                        b2.clone(),
+                    ],
+                )
+                .unwrap()[0]
+                .as_f32()
+                .unwrap()
+                .iter()
+                .sum()
+        };
+        let bwd = Reference
+            .execute(
+                "expert_ffn_bwd",
+                &[
+                    HostTensor::f32(vec![cap, dm], xv.clone()),
+                    w1.clone(),
+                    b1.clone(),
+                    w2.clone(),
+                    b2.clone(),
+                    gy,
+                ],
+            )
+            .unwrap();
+        let gx = bwd[0].as_f32().unwrap();
+        let eps = 1e-3f32;
+        for elt in [0usize, 5, 11] {
+            let mut p = xv.clone();
+            p[elt] += eps;
+            let lp = loss(&p);
+            p[elt] -= 2.0 * eps;
+            let lm = loss(&p);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - gx[elt]).abs() < 2e-2 * gx[elt].abs().max(1.0),
+                "gx[{elt}]: fd {fd} vs analytic {}",
+                gx[elt]
+            );
+        }
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for z in [-3.0f32, -0.7, 0.0, 0.4, 2.5] {
+            let eps = 1e-3f32;
+            let fd = (gelu(z + eps) - gelu(z - eps)) / (2.0 * eps);
+            assert!((fd - gelu_grad(z)).abs() < 1e-3, "z={z}: {fd} vs {}", gelu_grad(z));
+        }
+    }
+
+    #[test]
+    fn unknown_entry_errors() {
+        assert!(Reference.execute("nope", &[]).is_err());
+    }
+}

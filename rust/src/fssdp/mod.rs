@@ -24,9 +24,11 @@
 //! freedom does not change the math.
 
 pub mod adam;
+pub mod compute;
 
 use std::collections::BTreeMap;
 
+use crate::checkpoint::{self, ExpertState, ReshardPlan, TrainState};
 use crate::collectives::exec::{run_spag, run_sprs, ClusterMem};
 use crate::collectives::sparse::{build_spag, build_sprs};
 use crate::dispatch::dispatch;
@@ -38,9 +40,11 @@ use crate::topology::{DeviceId, Topology};
 use crate::util::rng::Rng;
 
 use adam::{AdamCfg, AdamState};
+use compute::Compute;
 
-/// Static dimensions of the engine's MoE layer (from the artifact manifest).
-#[derive(Debug, Clone, Copy)]
+/// Static dimensions of the engine's MoE layer (from the artifact manifest,
+/// or chosen explicitly for the hermetic reference backend).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct LayerDims {
     pub tokens: usize,
     pub d_model: usize,
@@ -114,7 +118,9 @@ pub struct EngineStats {
 pub struct FssdpEngine {
     pub topo: Topology,
     pub dims: LayerDims,
-    rt: Runtime,
+    compute: Compute,
+    /// Engine construction seed (recorded in checkpoints).
+    seed: u64,
     /// Expert parameter chunks, placed per `shards`.
     params: ClusterMem,
     shards: Placement,
@@ -133,11 +139,21 @@ pub struct FssdpEngine {
 }
 
 impl FssdpEngine {
-    /// Build the engine: load artifacts, shard experts round-robin, init
-    /// parameters deterministically from `seed`.
+    /// Build the engine on the PJRT backend: load artifacts, shard experts
+    /// round-robin, init parameters deterministically from `seed`.
     pub fn new(artifact_dir: &str, topo: Topology, seed: u64) -> anyhow::Result<FssdpEngine> {
         let rt = Runtime::open(artifact_dir)?;
         let dims = LayerDims::from_runtime(&rt)?;
+        Ok(Self::init(Compute::Pjrt(rt), dims, topo, seed))
+    }
+
+    /// Build the engine on the hermetic pure-Rust reference backend (no
+    /// artifacts / PJRT required) — same math, explicit dimensions.
+    pub fn new_reference(dims: LayerDims, topo: Topology, seed: u64) -> FssdpEngine {
+        Self::init(Compute::Reference(compute::Reference), dims, topo, seed)
+    }
+
+    fn init(compute: Compute, dims: LayerDims, topo: Topology, seed: u64) -> FssdpEngine {
         let nd = topo.num_devices();
         let shards = Placement::round_robin(dims.experts, nd);
         let mut rng = Rng::new(seed);
@@ -160,10 +176,11 @@ impl FssdpEngine {
             .map(|_| (rng.normal() * gate_scale * 3.0) as f32)
             .collect();
         let predictor = LoadPredictor::new(dims.experts, 5);
-        Ok(FssdpEngine {
+        FssdpEngine {
             topo,
             dims,
-            rt,
+            compute,
+            seed,
             params,
             shards,
             opt,
@@ -173,12 +190,22 @@ impl FssdpEngine {
             mem_slots: 4,
             overlap_degree: 4,
             rng,
-        })
+        }
     }
 
     /// Owner device of expert `e`.
     pub fn owner(&self, e: usize) -> DeviceId {
         self.shards.holders(e).next().unwrap()
+    }
+
+    /// The current owner partition.
+    pub fn shards(&self) -> &Placement {
+        &self.shards
+    }
+
+    /// Which backend executes the kernels (`"pjrt"` / `"reference"`).
+    pub fn backend(&self) -> &'static str {
+        self.compute.backend_name()
     }
 
     /// Read back an expert's parameter chunk (from its owner).
@@ -232,7 +259,7 @@ impl FssdpEngine {
         for s in 0..sources {
             let x = self.batch(iter, s);
             let xt = HostTensor::f32(vec![dims.tokens, dims.d_model], x.clone());
-            let out = self.rt.execute("gate_fwd", &[xt, gate_wt.clone()])?;
+            let out = self.compute.execute("gate_fwd", &[xt, gate_wt.clone()])?;
             gate_w_out.push(out[1].as_f32()?.to_vec());
             gate_idx.push(out[2].as_i32()?.to_vec());
             batches.push(x);
@@ -325,7 +352,7 @@ impl FssdpEngine {
                     xin[row * dims.d_model..(row + 1) * dims.d_model].copy_from_slice(src);
                 }
                 let xt = HostTensor::f32(vec![dims.cap, dims.d_model], xin);
-                let y = self.rt.execute(
+                let y = self.compute.execute(
                     "expert_ffn_fwd",
                     &[xt.clone(), w1.clone(), b1.clone(), w2.clone(), b2.clone()],
                 )?;
@@ -341,7 +368,7 @@ impl FssdpEngine {
                     }
                 }
                 let gyt = HostTensor::f32(vec![dims.cap, dims.d_model], gy);
-                let out = self.rt.execute(
+                let out = self.compute.execute(
                     "expert_ffn_bwd",
                     &[xt, w1.clone(), b1.clone(), w2.clone(), b2.clone(), gyt],
                 )?;
@@ -382,9 +409,169 @@ impl FssdpEngine {
         let _ = &self.rng; // reserved for stochastic extensions
         Ok(stats)
     }
+
+    // ---- checkpointing (the durable state is exactly the shard set) ----
+
+    /// Capture the complete training state at a step boundary: every
+    /// expert's parameter chunk + Adam moments (read from their owners),
+    /// the gate weights, the load-predictor sliding window, the RNG stream,
+    /// and `step` (the next iteration to run). `data_shards` is the logical
+    /// data-shard count of the run (`sources` at the `step` call sites) —
+    /// it must survive elastic restarts unchanged.
+    pub fn snapshot(&self, step: u64, data_shards: usize) -> TrainState {
+        let experts: Vec<ExpertState> = (0..self.dims.experts)
+            .map(|e| {
+                let chunk = self.expert_chunk(e).clone();
+                let o = self.opt.get(&e).expect("every expert has optimizer state");
+                ExpertState { chunk, m: o.m.clone(), v: o.v.clone(), t: o.t }
+            })
+            .collect();
+        TrainState {
+            step,
+            dims: self.dims,
+            seed: self.seed,
+            data_shards,
+            owners: (0..self.dims.experts).map(|e| self.owner(e).0).collect(),
+            experts,
+            gate_w: self.gate_w.clone(),
+            predictor_window: self.predictor.window(),
+            predictor_history: self.predictor.history(),
+            rng_state: self.rng.state(),
+            mem_slots: self.mem_slots,
+            overlap_degree: self.overlap_degree,
+        }
+    }
+
+    /// Rebuild an engine from a restored [`TrainState`] on `topo`, which
+    /// may have a *different* device count than the `old_world` that wrote
+    /// the checkpoint (elastic resume). Same world size reuses the saved
+    /// owner layout (bit-identical resume); a different world size re-runs
+    /// the heterogeneous sharding planner over the restored load window —
+    /// FSSDP placement freedom guarantees the training math is unchanged.
+    pub fn resume_with(
+        compute: Compute,
+        topo: Topology,
+        state: &TrainState,
+        old_world: usize,
+    ) -> anyhow::Result<(FssdpEngine, ReshardPlan)> {
+        let dims = state.dims;
+        anyhow::ensure!(
+            state.experts.len() == dims.experts,
+            "state holds {} experts, dims say {}",
+            state.experts.len(),
+            dims.experts
+        );
+        let plan = checkpoint::reshard::plan(state, old_world, &topo)?;
+        let nd = topo.num_devices();
+        let mut params = ClusterMem::new(nd);
+        let mut opt = BTreeMap::new();
+        for (e, st) in state.experts.iter().enumerate() {
+            anyhow::ensure!(
+                st.chunk.len() == dims.chunk_len(),
+                "expert {e}: chunk has {} floats, dims imply {}",
+                st.chunk.len(),
+                dims.chunk_len()
+            );
+            let owner = plan.shards.holders(e).next().expect("partition has a holder");
+            params.dev_mut(owner).insert(e, st.chunk.clone());
+            opt.insert(e, AdamState { m: st.m.clone(), v: st.v.clone(), t: st.t });
+        }
+        anyhow::ensure!(
+            state.gate_w.len() == dims.d_model * dims.experts,
+            "gate_w has {} floats, dims imply {}",
+            state.gate_w.len(),
+            dims.d_model * dims.experts
+        );
+        let engine = FssdpEngine {
+            topo,
+            dims,
+            compute,
+            seed: state.seed,
+            params,
+            shards: plan.shards.clone(),
+            opt,
+            adam: AdamCfg::default(),
+            gate_w: state.gate_w.clone(),
+            predictor: LoadPredictor::restore(
+                dims.experts,
+                state.predictor_window,
+                state.predictor_history.clone(),
+            ),
+            mem_slots: state.mem_slots,
+            overlap_degree: state.overlap_degree,
+            rng: Rng::from_state(state.rng_state),
+        };
+        Ok((engine, plan))
+    }
+
+    /// [`FssdpEngine::resume_with`] on the reference backend (hermetic).
+    pub fn resume_reference(
+        topo: Topology,
+        state: &TrainState,
+        old_world: usize,
+    ) -> anyhow::Result<(FssdpEngine, ReshardPlan)> {
+        Self::resume_with(Compute::Reference(compute::Reference), topo, state, old_world)
+    }
+
+    /// [`FssdpEngine::resume_with`] on the PJRT backend. The artifact
+    /// dimensions must match the checkpoint's.
+    pub fn resume(
+        artifact_dir: &str,
+        topo: Topology,
+        state: &TrainState,
+        old_world: usize,
+    ) -> anyhow::Result<(FssdpEngine, ReshardPlan)> {
+        let rt = Runtime::open(artifact_dir)?;
+        let dims = LayerDims::from_runtime(&rt)?;
+        anyhow::ensure!(
+            dims == state.dims,
+            "artifact dims {dims:?} do not match checkpoint dims {:?}",
+            state.dims
+        );
+        Self::resume_with(Compute::Pjrt(rt), topo, state, old_world)
+    }
 }
 
-/// CLI driver: run the engine and print per-iteration stats.
+/// Options of the `hecate fssdp` / `hecate checkpoint` / `hecate resume`
+/// CLI flows.
+#[derive(Debug, Clone)]
+pub struct RunOpts {
+    pub nodes: usize,
+    pub devices: usize,
+    pub iters: usize,
+    pub seed: u64,
+    /// Snapshot every N iterations into `checkpoint_dir` (0 = off).
+    pub checkpoint_every: usize,
+    pub checkpoint_dir: Option<String>,
+    /// Resume from this checkpoint directory instead of a fresh init.
+    pub resume: Option<String>,
+    /// Use the hermetic reference backend instead of PJRT artifacts.
+    pub reference: bool,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts {
+            nodes: 2,
+            devices: 8,
+            iters: 10,
+            seed: 42,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            resume: None,
+            reference: false,
+        }
+    }
+}
+
+/// Reference-backend dimensions used when no artifacts are available
+/// (small enough for CLI demos and CI).
+pub fn reference_dims() -> LayerDims {
+    LayerDims { tokens: 16, d_model: 8, d_ffn: 16, experts: 8, cap: 16 }
+}
+
+/// CLI driver: run the engine and print per-iteration stats (legacy entry,
+/// no checkpointing).
 pub fn run_demo(
     artifact_dir: &str,
     nodes: usize,
@@ -392,25 +579,155 @@ pub fn run_demo(
     iters: usize,
     seed: u64,
 ) -> anyhow::Result<()> {
-    anyhow::ensure!(devices % nodes == 0, "devices must divide evenly into nodes");
-    let topo = Topology::cluster_a(nodes, devices / nodes);
-    println!("FSSDP numeric engine on {} ({} devices)", topo.name, devices);
-    let mut engine = FssdpEngine::new(artifact_dir, topo, seed)?;
+    run_demo_with(
+        artifact_dir,
+        &RunOpts { nodes, devices, iters, seed, ..Default::default() },
+    )
+}
+
+/// CLI driver with checkpoint/resume flows.
+pub fn run_demo_with(artifact_dir: &str, opts: &RunOpts) -> anyhow::Result<()> {
+    anyhow::ensure!(opts.nodes > 0 && opts.devices > 0, "need at least one node and device");
+    anyhow::ensure!(
+        opts.devices % opts.nodes == 0,
+        "devices must divide evenly into nodes"
+    );
+    let topo = Topology::cluster_a(opts.nodes, opts.devices / opts.nodes);
+    println!("FSSDP numeric engine on {} ({} devices)", topo.name, opts.devices);
+
+    anyhow::ensure!(
+        opts.checkpoint_every == 0 || opts.checkpoint_dir.is_some(),
+        "--checkpoint-every needs --checkpoint-dir"
+    );
+
+    // Fresh start or elastic resume.
+    let (mut engine, mut step, sources) = match &opts.resume {
+        None => {
+            let engine = if opts.reference {
+                FssdpEngine::new_reference(reference_dims(), topo, opts.seed)
+            } else {
+                FssdpEngine::new(artifact_dir, topo, opts.seed)?
+            };
+            (engine, 0u64, opts.devices)
+        }
+        Some(dir) => {
+            let (state, saved) = checkpoint::load(std::path::Path::new(dir))?;
+            // The PJRT arm goes through `resume`, which validates the
+            // artifact dims against the checkpoint before building.
+            let (engine, plan) = if opts.reference {
+                FssdpEngine::resume_reference(topo, &state, saved.world())?
+            } else {
+                FssdpEngine::resume(artifact_dir, topo, &state, saved.world())?
+            };
+            println!(
+                "resumed step {} from {dir}: {} -> {} devices, {} experts moved ({:.2} MB), {}",
+                state.step,
+                saved.world(),
+                opts.devices,
+                plan.moved_experts.len(),
+                plan.bytes_moved as f64 / 1e6,
+                if plan.kept_saved_layout { "layout kept" } else { "re-sharded (Algorithm 2)" },
+            );
+            (engine, state.step, state.data_shards)
+        }
+    };
+
     println!(
-        "layer: {} experts, d_model {}, d_ffn {}, {} tokens/source, cap {}",
+        "layer: {} experts, d_model {}, d_ffn {}, {} tokens/source, cap {} (backend: {})",
         engine.dims.experts,
         engine.dims.d_model,
         engine.dims.d_ffn,
         engine.dims.tokens,
-        engine.dims.cap
+        engine.dims.cap,
+        engine.backend()
     );
-    for iter in 0..iters {
-        let s = engine.step(iter as u64, devices)?;
+
+    let end = step + opts.iters as u64;
+    while step < end {
+        let s = engine.step(step, sources)?;
         println!(
-            "iter {iter:>3}  loss {:.5}  λ={:.2}  replicas {}  remote_tokens {}  straggler {:.2}",
+            "iter {step:>3}  loss {:.5}  λ={:.2}  replicas {}  remote_tokens {}  straggler {:.2}",
             s.loss, s.spag_sparsity, s.replicas, s.remote_tokens, s.straggler
         );
+        step += 1;
+        if opts.checkpoint_every > 0 && step % opts.checkpoint_every as u64 == 0 {
+            let dir = opts.checkpoint_dir.as_deref().expect("validated at entry");
+            let info = checkpoint::save(
+                std::path::Path::new(dir),
+                &engine.snapshot(step, sources),
+                &engine.topo,
+            )?;
+            println!(
+                "  checkpoint @ step {step}: {} files, {:.2} MB -> {dir}",
+                info.files,
+                info.total_bytes as f64 / 1e6
+            );
+        }
+    }
+    // Final snapshot when a checkpoint dir is configured.
+    if let Some(dir) = &opts.checkpoint_dir {
+        if opts.checkpoint_every == 0 || step % opts.checkpoint_every as u64 != 0 {
+            checkpoint::save(
+                std::path::Path::new(dir),
+                &engine.snapshot(step, sources),
+                &engine.topo,
+            )?;
+            println!("final checkpoint @ step {step} -> {dir}");
+        }
     }
     println!("done — parameters live on their shard owners (one global copy).");
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::max_rel_err;
+
+    #[test]
+    fn reference_engine_trains_and_matches_single_device() {
+        // Hermetic version of tests/fssdp_equivalence.rs: the reference
+        // backend across 4 devices equals the 1-device run on the same data.
+        let sources = 4;
+        let dims = reference_dims();
+        let run = |topo: Topology| -> Vec<Vec<f32>> {
+            let mut e = FssdpEngine::new_reference(dims, topo, 7);
+            for i in 0..3 {
+                e.step(i, sources).unwrap();
+            }
+            (0..e.dims.experts).map(|x| e.expert_chunk(x).clone()).collect()
+        };
+        let dist = run(Topology::cluster_a(2, 2));
+        let refr = run(Topology::flat(1, 1e9));
+        for (e, (d, r)) in dist.iter().zip(refr.iter()).enumerate() {
+            let err = max_rel_err(d, r);
+            assert!(err < 2e-3, "expert {e}: max rel err {err}");
+        }
+    }
+
+    #[test]
+    fn reference_engine_loss_decreases() {
+        let mut e = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(2, 2), 11);
+        let first = e.step(0, 4).unwrap().loss;
+        let mut last = first;
+        for i in 1..6 {
+            last = e.step(i, 4).unwrap().loss;
+        }
+        assert!(last < first, "loss {first} -> {last}");
+        assert_eq!(e.backend(), "reference");
+    }
+
+    #[test]
+    fn snapshot_captures_owner_layout() {
+        let mut e = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(2, 2), 5);
+        e.step(0, 4).unwrap();
+        let s = e.snapshot(1, 4);
+        assert_eq!(s.step, 1);
+        assert_eq!(s.data_shards, 4);
+        assert_eq!(s.experts.len(), e.dims.experts);
+        for (x, &o) in s.owners.iter().enumerate() {
+            assert_eq!(o, e.owner(x).0);
+            assert_eq!(s.experts[x].chunk, *e.expert_chunk(x));
+        }
+    }
 }

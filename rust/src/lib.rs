@@ -19,10 +19,28 @@
 //! Python never runs at training time: the Rust binary loads compiled
 //! artifacts through [`runtime`].
 //!
+//! Training state is durable: the [`checkpoint`] subsystem snapshots the
+//! complete FSSDP state (per-rank shard blobs + JSON manifest) and resumes
+//! it **elastically** — an N-device run restarts on M devices by re-running
+//! the sharding planner, with numerically identical training.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every paper table/figure to a module and bench target.
 
+// Style lints that conflict with the codebase's explicit-index numerical
+// style (CI runs `cargo clippy -D warnings`; correctness lints stay on).
+#![allow(
+    unknown_lints,
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::inherent_to_string_shadow_display,
+    clippy::manual_div_ceil,
+    clippy::new_without_default
+)]
+
 pub mod bench;
+pub mod checkpoint;
 pub mod collectives;
 pub mod config;
 pub mod coordinator;

@@ -50,6 +50,30 @@ impl LoadPredictor {
     pub fn observations(&self) -> usize {
         self.history.len()
     }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.experts
+    }
+
+    /// Snapshot the sliding window contents, oldest first (checkpointing).
+    pub fn history(&self) -> Vec<Vec<f64>> {
+        self.history.iter().cloned().collect()
+    }
+
+    /// Rebuild a predictor from a [`LoadPredictor::history`] snapshot.
+    /// Entries beyond `window` are dropped from the oldest side, mirroring
+    /// what repeated `observe` calls would have kept.
+    pub fn restore(experts: usize, window: usize, history: Vec<Vec<f64>>) -> LoadPredictor {
+        let mut p = LoadPredictor::new(experts, window);
+        for h in history {
+            p.observe(&h);
+        }
+        p
+    }
 }
 
 #[cfg(test)]
@@ -73,6 +97,19 @@ mod tests {
         p.observe(&[0.0, 1.0]); // evicts [1,0]
         assert_eq!(p.predict(), vec![0.0, 1.0]);
         assert_eq!(p.observations(), 2);
+    }
+
+    #[test]
+    fn history_snapshot_restores_predictions() {
+        let mut g = LoadGenerator::new(8, 0.3, 5);
+        let mut p = LoadPredictor::new(8, 3);
+        for _ in 0..7 {
+            p.observe(&g.step());
+        }
+        let r = LoadPredictor::restore(8, p.window(), p.history());
+        assert_eq!(r.observations(), p.observations());
+        assert_eq!(r.predict(), p.predict());
+        assert_eq!(r.num_experts(), 8);
     }
 
     #[test]

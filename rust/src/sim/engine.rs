@@ -17,6 +17,7 @@
 //! loaded device, and collective times come from the α–β models in
 //! [`crate::collectives`].
 
+use crate::checkpoint::faults::{recover, FaultSpec, RecoveryStats};
 use crate::collectives::dense;
 use crate::config::{ModelConfig, SystemConfig, TrainConfig};
 use crate::dispatch::dispatch;
@@ -225,6 +226,74 @@ pub fn simulate(
     }
 }
 
+/// Outcome of a fault-injected simulation run.
+#[derive(Debug, Clone)]
+pub struct FaultRunResult {
+    /// The fault-free steady state (iteration time, breakdown, memory).
+    pub sim: SimResult,
+    /// Recovery cost breakdown of the injected failure.
+    pub recovery: RecoveryStats,
+    /// Wall-clock of the whole timeline: `iterations` productive steps +
+    /// snapshot overhead + the failure's MTTR (replay included).
+    pub total_wall_clock: f64,
+    /// Wall-clock of the same timeline had nothing failed and nothing been
+    /// checkpointed (the lower bound).
+    pub ideal_wall_clock: f64,
+}
+
+impl FaultRunResult {
+    /// Effective slowdown of the faulty run vs the ideal one.
+    pub fn slowdown(&self) -> f64 {
+        self.total_wall_clock / self.ideal_wall_clock.max(1e-12)
+    }
+}
+
+/// Fault-injection mode: run the simulation, kill device
+/// `spec.fail_device` at step `spec.fail_step`, restart from the last
+/// snapshot, and replay. The numeric equivalence of replay is proven by
+/// `rust/tests/checkpoint_resume.rs`; here the *time* of the whole
+/// timeline is accounted:
+///
+/// ```text
+/// |-- productive steps (+ snapshot overhead every k) --| X |-- MTTR --|
+/// ```
+pub fn simulate_with_faults(
+    topo: &Topology,
+    model: &ModelConfig,
+    sys_cfg: &SystemConfig,
+    train: &TrainConfig,
+    opts: &SimOptions,
+    spec: &FaultSpec,
+) -> FaultRunResult {
+    let sim = simulate(topo, model, sys_cfg, train, opts);
+    let iter_time = sim.iter_time;
+    let spec = FaultSpec {
+        fail_step: spec.fail_step.min(opts.iterations.saturating_sub(1)),
+        fail_device: spec.fail_device % topo.num_devices().max(1),
+        ..*spec
+    };
+    let recovery = recover(topo, model, iter_time, &spec);
+
+    // Timeline: every iteration runs once productively; iterations since
+    // the last snapshot run again as replay (inside recovery.replay);
+    // snapshots before the failure (and after, until the horizon) each pay
+    // their write time.
+    let n = opts.iterations as f64;
+    let snapshots = if spec.checkpoint_every == 0 {
+        0.0
+    } else {
+        (opts.iterations / spec.checkpoint_every) as f64
+    };
+    let ideal = n * iter_time;
+    let total = ideal + snapshots * recovery.checkpoint_time + recovery.mttr;
+    FaultRunResult {
+        sim,
+        recovery,
+        total_wall_clock: total,
+        ideal_wall_clock: ideal,
+    }
+}
+
 /// Convenience: speedups of `systems` relative to the first entry (EP in
 /// the paper's figures).
 pub fn relative_speedups(results: &[SimResult]) -> Vec<f64> {
@@ -358,6 +427,25 @@ mod tests {
         assert!((smart - ep).abs() < 1e-6 * ep, "SmartMoE ≈ EP");
         assert!(rm < hec, "RM below Hecate");
         assert!(flex > hec, "FlexMoE above Hecate (replicated opt)");
+    }
+
+    #[test]
+    fn fault_injection_accounts_recovery() {
+        let (topo, model, train) = setup();
+        let cfg = SystemConfig::new(SystemKind::Hecate);
+        let spec = FaultSpec { fail_step: 13, checkpoint_every: 5, ..Default::default() };
+        let r = simulate_with_faults(&topo, &model, &cfg, &train, &quick_opts(), &spec);
+        assert_eq!(r.recovery.replay_iters, 13 % 5);
+        assert!(r.total_wall_clock > r.ideal_wall_clock);
+        assert!(r.slowdown() > 1.0);
+        assert!(r.recovery.mttr >= r.recovery.detect);
+
+        // No checkpointing: every step since 0 replays.
+        let none = FaultSpec { fail_step: 13, checkpoint_every: 0, ..Default::default() };
+        let r0 = simulate_with_faults(&topo, &model, &cfg, &train, &quick_opts(), &none);
+        assert_eq!(r0.recovery.replay_iters, 13);
+        assert!(r0.recovery.replay > r.recovery.replay);
+        assert_eq!(r0.recovery.restore_io, 0.0);
     }
 
     #[test]

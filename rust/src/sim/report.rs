@@ -2,10 +2,12 @@
 //! artifact (Table 1, Figures 3 and 9–15, plus the §1 claims) as a
 //! [`Table`], printed by `hecate repro` and recorded in EXPERIMENTS.md.
 
+use crate::checkpoint::faults::{recover, FaultSpec};
 use crate::config::{ClusterPreset, ModelConfig, SystemConfig, SystemKind, TrainConfig};
 use crate::loadsim::ModelLoadTrace;
 use crate::metrics::Table;
 use crate::sim::engine::{simulate, SimOptions, SimResult};
+use crate::topology::Topology;
 use crate::util::stats;
 
 fn fmt(x: f64) -> String {
@@ -254,6 +256,52 @@ pub fn figure15b(opts: &SimOptions) -> Table {
     t
 }
 
+/// Recovery-time / MTTR table for the fault-injection mode: each row
+/// sweeps the snapshot interval (0 = checkpointing disabled) for a device
+/// failure at `base.fail_step`. `iter_time` is the fault-free steady-state
+/// iteration time (the caller already simulated it — see
+/// `simulate_with_faults` — so no second simulation runs here).
+///
+/// Columns: interval, snapshot size/time, steady-state overhead (% of an
+/// iteration), then the MTTR breakdown (detect + restore + redistribute +
+/// replay) of the injected failure.
+pub fn recovery_table(
+    topo: &Topology,
+    model: &ModelConfig,
+    iter_time: f64,
+    base: &FaultSpec,
+) -> Table {
+    let mut t = Table::new(&[
+        "ckpt_every",
+        "ckpt_GB",
+        "ckpt_s",
+        "overhead_%",
+        "detect_s",
+        "restore_s",
+        "redistr_s",
+        "replay_iters",
+        "replay_s",
+        "MTTR_s",
+    ]);
+    for interval in [0usize, 10, 25, 50, 100] {
+        let spec = FaultSpec { checkpoint_every: interval, ..*base };
+        let r = recover(topo, model, iter_time, &spec);
+        t.row(vec![
+            if interval == 0 { "none".into() } else { interval.to_string() },
+            gb(r.checkpoint_bytes),
+            fmt(r.checkpoint_time),
+            fmt(100.0 * r.steady_overhead / iter_time.max(1e-12)),
+            fmt(r.detect),
+            fmt(r.restore_io),
+            fmt(r.redistribute),
+            r.replay_iters.to_string(),
+            fmt(r.replay),
+            fmt(r.mttr),
+        ]);
+    }
+    t
+}
+
 /// §1 claims: EP imbalance slowdown; FlexMoE reserve-vs-speedup; SmartMoE
 /// rearrangement-frequency tradeoff.
 pub fn claims(opts: &SimOptions) -> Vec<(String, Table)> {
@@ -378,6 +426,27 @@ mod tests {
             let s: f64 = r[3].parse().unwrap();
             assert!(full >= s * 0.98, "full Hecate {full} vs partial {s}");
         }
+    }
+
+    #[test]
+    fn recovery_table_shape_and_directions() {
+        let topo = ClusterPreset::A.build(2, 4);
+        let model = ModelConfig::preset("gpt-moe-s").unwrap().with_experts(16);
+        let spec = FaultSpec { fail_step: 57, ..Default::default() };
+        let t = recovery_table(&topo, &model, 0.1, &spec);
+        assert_eq!(t.rows.len(), 5);
+        assert_eq!(t.rows[0][0], "none");
+        // no-checkpoint row replays all 57 steps and pays zero overhead
+        assert_eq!(t.rows[0][7], "57");
+        assert_eq!(t.rows[0][3].parse::<f64>().unwrap(), 0.0);
+        // checkpointed rows replay fail_step % interval
+        for (row, interval) in t.rows[1..].iter().zip([10usize, 25, 50, 100]) {
+            assert_eq!(row[7].parse::<usize>().unwrap(), 57 % interval);
+            assert!(row[3].parse::<f64>().unwrap() >= 0.0);
+        }
+        // tighter cadence costs more steady-state overhead
+        let ov = |i: usize| t.rows[i][3].parse::<f64>().unwrap();
+        assert!(ov(1) >= ov(4), "every-10 {} vs every-100 {}", ov(1), ov(4));
     }
 
     #[test]

@@ -27,6 +27,20 @@ impl SyntheticCorpus {
         SyntheticCorpus { vocab, seq_len, successors, rng }
     }
 
+    /// Snapshot the stream position (checkpointing). The transition matrix
+    /// is derived from the construction seed, so `(seed, rng_state)` fully
+    /// determines the remaining token stream.
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Restore a stream position captured by [`SyntheticCorpus::rng_state`].
+    /// Must be called on a corpus built with the same `(vocab, seq_len,
+    /// seed)` as the one that was snapshotted.
+    pub fn set_rng_state(&mut self, s: [u64; 4]) {
+        self.rng = Rng::from_state(s);
+    }
+
     fn next_token(&mut self, cur: usize) -> usize {
         if self.rng.f64() < 0.85 {
             let opts = &self.successors[cur];
@@ -100,5 +114,18 @@ mod tests {
         let mut a = SyntheticCorpus::new(64, 8, 9);
         let mut b = SyntheticCorpus::new(64, 8, 9);
         assert_eq!(a.batch(2).0, b.batch(2).0);
+    }
+
+    #[test]
+    fn rng_state_resumes_stream() {
+        let mut a = SyntheticCorpus::new(64, 8, 9);
+        a.batch(3); // advance
+        let snap = a.rng_state();
+        let expect = a.batch(2);
+        let mut b = SyntheticCorpus::new(64, 8, 9);
+        b.set_rng_state(snap);
+        let got = b.batch(2);
+        assert_eq!(got.0, expect.0);
+        assert_eq!(got.1, expect.1);
     }
 }

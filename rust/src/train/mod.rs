@@ -7,15 +7,31 @@
 pub mod data;
 
 use std::io::Write as _;
+use std::path::Path;
 use std::time::Instant;
 
+use crate::checkpoint::format::{Reader, Writer};
 use crate::runtime::{HostTensor, Runtime};
 use crate::util::stats;
+
+/// Checkpoint/resume options of the e2e PJRT train loop.
+#[derive(Debug, Clone, Default)]
+pub struct CkptOpts {
+    /// Snapshot every N steps (0 = off).
+    pub every: usize,
+    /// Where snapshots land (required when `every > 0`).
+    pub dir: Option<String>,
+    /// Resume from this checkpoint directory.
+    pub resume: Option<String>,
+}
 
 /// Result of a training run.
 #[derive(Debug, Clone)]
 pub struct TrainReport {
+    /// Steps executed in this session (a resumed run reports only its tail).
     pub steps: usize,
+    /// Global step index of `losses[0]` (0 on a fresh run).
+    pub start_step: usize,
     pub losses: Vec<f32>,
     pub tokens_per_step: usize,
     pub mean_step_time: f64,
@@ -43,7 +59,21 @@ pub fn run_training(
     steps: usize,
     log_csv: Option<&str>,
 ) -> anyhow::Result<()> {
-    let report = train(dir, tag, steps, 42, |step, loss, nll, dt| {
+    run_training_with(dir, tag, steps, log_csv, &CkptOpts::default())
+}
+
+/// [`run_training`] with checkpoint/resume flows. `steps` is the *global*
+/// step target: resuming a checkpoint taken at step `k` runs `steps - k`
+/// more steps.
+pub fn run_training_with(
+    dir: &str,
+    tag: &str,
+    steps: usize,
+    log_csv: Option<&str>,
+    ckpt: &CkptOpts,
+) -> anyhow::Result<()> {
+    let resumed = ckpt.resume.is_some();
+    let report = train_with(dir, tag, steps, 42, ckpt, |step, loss, nll, dt| {
         if step < 5 || step % 10 == 0 {
             println!("step {step:>5}  loss {loss:.4}  nll {nll:.4}  {:.0} ms", dt * 1e3);
         }
@@ -59,12 +89,16 @@ pub fn run_training(
         let mut f = std::fs::File::create(path)?;
         writeln!(f, "step,loss")?;
         for (i, l) in report.losses.iter().enumerate() {
-            writeln!(f, "{i},{l}")?;
+            // global step ids, so a resumed tail lines up with the original
+            // run's curve instead of restarting at 0
+            writeln!(f, "{},{l}", report.start_step + i)?;
         }
         println!("loss curve -> {path}");
     }
+    // A resumed tail can be arbitrarily short — only gate the loss trend on
+    // full runs, where it is a meaningful sanity check.
     anyhow::ensure!(
-        report.last_loss() < report.first_loss(),
+        resumed || report.steps == 0 || report.last_loss() < report.first_loss(),
         "loss did not decrease: {} -> {}",
         report.first_loss(),
         report.last_loss()
@@ -78,8 +112,29 @@ pub fn train(
     tag: &str,
     steps: usize,
     seed: u64,
+    on_step: impl FnMut(usize, f32, f32, f64),
+) -> anyhow::Result<TrainReport> {
+    train_with(dir, tag, steps, seed, &CkptOpts::default(), on_step)
+}
+
+/// Core loop with checkpoint/resume. The durable state is the executable's
+/// state tuple (params + Adam m/v/t), the global step, the corpus seed and
+/// its RNG position — saved as one `train-state.bin` blob in the same
+/// version-byte-prefixed format as the FSSDP checkpoints.
+pub fn train_with(
+    dir: &str,
+    tag: &str,
+    steps: usize,
+    seed: u64,
+    ckpt: &CkptOpts,
     mut on_step: impl FnMut(usize, f32, f32, f64),
 ) -> anyhow::Result<TrainReport> {
+    // Fail fast: the snapshot destination is known-required before any
+    // (expensive) training step runs.
+    anyhow::ensure!(
+        ckpt.every == 0 || ckpt.dir.is_some(),
+        "--checkpoint-every needs --checkpoint-dir"
+    );
     let mut rt = Runtime::open(dir)?;
     let init_name = format!("{tag}_init");
     let step_name = format!("{tag}_train_step");
@@ -94,14 +149,43 @@ pub fn train(
     let batch = step_entry.extra_usize("batch").unwrap_or(1);
     let n_state = step_entry.inputs.len() - 2; // params+m+v+t, then tokens/targets
 
-    crate::log_info!("initializing `{tag}` params via PJRT");
-    let mut state = rt.execute(&init_name, &[HostTensor::scalar_i32(seed as i32)])?;
-    anyhow::ensure!(state.len() == n_state, "init outputs {} != state {}", state.len(), n_state);
+    let (mut state, mut gen, start_step) = match &ckpt.resume {
+        None => {
+            crate::log_info!("initializing `{tag}` params via PJRT");
+            let state = rt.execute(&init_name, &[HostTensor::scalar_i32(seed as i32)])?;
+            anyhow::ensure!(
+                state.len() == n_state,
+                "init outputs {} != state {}",
+                state.len(),
+                n_state
+            );
+            (state, data::SyntheticCorpus::new(vocab, seq_len, seed), 0usize)
+        }
+        Some(rdir) => {
+            let saved = load_train_state(Path::new(rdir))?;
+            anyhow::ensure!(
+                saved.vocab == vocab && saved.seq_len == seq_len && saved.batch == batch,
+                "checkpoint was taken for vocab {} / seq {} / batch {}, artifacts say {vocab}/{seq_len}/{batch}",
+                saved.vocab,
+                saved.seq_len,
+                saved.batch
+            );
+            anyhow::ensure!(
+                saved.state.len() == n_state,
+                "checkpoint holds {} state tensors, executable expects {n_state}",
+                saved.state.len()
+            );
+            let mut gen = data::SyntheticCorpus::new(vocab, seq_len, saved.seed);
+            gen.set_rng_state(saved.rng_state);
+            crate::log_info!("resuming `{tag}` at step {} from {rdir}", saved.step);
+            (saved.state, gen, saved.step)
+        }
+    };
 
-    let mut gen = data::SyntheticCorpus::new(vocab, seq_len, seed);
-    let mut losses = Vec::with_capacity(steps);
-    let mut times = Vec::with_capacity(steps);
-    for step in 0..steps {
+    let remaining = steps.saturating_sub(start_step);
+    let mut losses = Vec::with_capacity(remaining);
+    let mut times = Vec::with_capacity(remaining);
+    for step in start_step..steps {
         let (tokens, targets) = gen.batch(batch);
         let mut inputs = state;
         inputs.push(tokens);
@@ -117,11 +201,185 @@ pub fn train(
         losses.push(loss);
         times.push(dt);
         on_step(step, loss, nll, dt);
+        if ckpt.every > 0 && (step + 1) % ckpt.every == 0 {
+            let cdir = ckpt.dir.as_deref().expect("validated at entry");
+            let snap = TrainCkpt {
+                step: step + 1,
+                seed,
+                vocab,
+                seq_len,
+                batch,
+                rng_state: gen.rng_state(),
+                state,
+            };
+            save_train_state(Path::new(cdir), &snap)?;
+            state = snap.state;
+        }
+    }
+    // A configured checkpoint dir always ends with a snapshot of the final
+    // state (mirrors the fssdp flow), unless the loop just wrote one.
+    if let Some(cdir) = ckpt.dir.as_deref() {
+        if ckpt.every == 0 || steps % ckpt.every != 0 || remaining == 0 {
+            let snap = TrainCkpt {
+                // never move the step counter backwards (e.g. resuming a
+                // step-100 checkpoint with --steps 50 runs nothing)
+                step: steps.max(start_step),
+                seed,
+                vocab,
+                seq_len,
+                batch,
+                rng_state: gen.rng_state(),
+                state,
+            };
+            save_train_state(Path::new(cdir), &snap)?;
+        }
     }
     Ok(TrainReport {
-        steps,
+        steps: remaining,
+        start_step,
         losses,
         tokens_per_step: batch * seq_len,
         mean_step_time: stats::mean(&times),
     })
+}
+
+/// Durable state of the e2e train loop.
+pub struct TrainCkpt {
+    pub step: usize,
+    pub seed: u64,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub rng_state: [u64; 4],
+    pub state: Vec<HostTensor>,
+}
+
+const DTYPE_F32: u8 = 0;
+const DTYPE_I32: u8 = 1;
+
+/// Serialize the train state into `dir/train-state.bin`.
+pub fn save_train_state(dir: &Path, snap: &TrainCkpt) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut w = Writer::new();
+    w.put_usize(snap.step);
+    w.put_u64(snap.seed);
+    w.put_usize(snap.vocab);
+    w.put_usize(snap.seq_len);
+    w.put_usize(snap.batch);
+    for &s in &snap.rng_state {
+        w.put_u64(s);
+    }
+    w.put_usize(snap.state.len());
+    for t in &snap.state {
+        match t {
+            HostTensor::F32 { shape, data } => {
+                w.put_u8(DTYPE_F32);
+                w.put_usizes(shape);
+                w.put_f32s(data);
+            }
+            HostTensor::I32 { shape, data } => {
+                w.put_u8(DTYPE_I32);
+                w.put_usizes(shape);
+                w.put_i32s(data);
+            }
+        }
+    }
+    let bytes = w.finish();
+    std::fs::write(dir.join("train-state.bin"), &bytes)?;
+    crate::log_info!(
+        "train checkpoint: step {} -> {} ({:.2} MB)",
+        snap.step,
+        dir.display(),
+        bytes.len() as f64 / 1e6
+    );
+    Ok(())
+}
+
+/// Read a [`save_train_state`] blob from `dir`.
+pub fn load_train_state(dir: &Path) -> anyhow::Result<TrainCkpt> {
+    let path = dir.join("train-state.bin");
+    let bytes = std::fs::read(&path)
+        .map_err(|e| anyhow::anyhow!("cannot read train checkpoint {}: {e}", path.display()))?;
+    let mut r = Reader::open(&bytes)?;
+    let step = r.take_usize()?;
+    let seed = r.take_u64()?;
+    let vocab = r.take_usize()?;
+    let seq_len = r.take_usize()?;
+    let batch = r.take_usize()?;
+    let mut rng_state = [0u64; 4];
+    for s in &mut rng_state {
+        *s = r.take_u64()?;
+    }
+    let n = r.take_usize()?;
+    anyhow::ensure!(n < 1 << 20, "implausible tensor count {n}");
+    let mut state = Vec::with_capacity(n);
+    for i in 0..n {
+        let dtype = r.take_u8()?;
+        let shape = r.take_usizes()?;
+        let t = match dtype {
+            DTYPE_F32 => {
+                let data = r.take_f32s()?;
+                anyhow::ensure!(
+                    shape.iter().product::<usize>() == data.len(),
+                    "tensor {i}: shape {shape:?} vs {} floats",
+                    data.len()
+                );
+                HostTensor::F32 { shape, data }
+            }
+            DTYPE_I32 => {
+                let data = r.take_i32s()?;
+                anyhow::ensure!(
+                    shape.iter().product::<usize>() == data.len(),
+                    "tensor {i}: shape {shape:?} vs {} ints",
+                    data.len()
+                );
+                HostTensor::I32 { shape, data }
+            }
+            other => anyhow::bail!("tensor {i}: unknown dtype tag {other}"),
+        };
+        state.push(t);
+    }
+    r.done()?;
+    Ok(TrainCkpt { step, seed, vocab, seq_len, batch, rng_state, state })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn train_state_blob_roundtrip() {
+        let dir = std::env::temp_dir()
+            .join(format!("hecate-train-ckpt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let snap = TrainCkpt {
+            step: 17,
+            seed: 42,
+            vocab: 1024,
+            seq_len: 32,
+            batch: 2,
+            rng_state: [9, 8, 7, 6],
+            state: vec![
+                HostTensor::f32(vec![2, 3], vec![0.5, -1.5, 2.0, 0.0, -0.25, 3.5]),
+                HostTensor::i32(vec![3], vec![1, -2, 3]),
+                HostTensor::scalar_i32(5),
+            ],
+        };
+        save_train_state(&dir, &snap).unwrap();
+        let back = load_train_state(&dir).unwrap();
+        assert_eq!(back.step, 17);
+        assert_eq!(back.seed, 42);
+        assert_eq!((back.vocab, back.seq_len, back.batch), (1024, 32, 2));
+        assert_eq!(back.rng_state, [9, 8, 7, 6]);
+        assert_eq!(back.state, snap.state);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_train_state_errors_helpfully() {
+        let err = load_train_state(Path::new("/nonexistent-ckpt-dir"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("train checkpoint"), "{err}");
+    }
 }

@@ -153,4 +153,66 @@ mod tests {
         assert!(a.reject_unknown(&["good"]).is_err());
         assert!(a.reject_unknown(&["good", "bad"]).is_ok());
     }
+
+    #[test]
+    fn key_value_with_embedded_equals() {
+        // split happens at the FIRST `=`; the value keeps the rest intact.
+        let a = parse("--filter=name=hecate --url=http://host:8080/p?q=1");
+        assert_eq!(a.get("filter"), Some("name=hecate"));
+        assert_eq!(a.get("url"), Some("http://host:8080/p?q=1"));
+        // empty value after `=` stays empty (distinct from a bare flag)
+        let b = parse("--empty=");
+        assert_eq!(b.get("empty"), Some(""));
+        assert!(b.bool_or("empty", true).is_err(), "empty string is not a bool");
+    }
+
+    #[test]
+    fn bare_trailing_flag_maps_to_true() {
+        let a = parse("--steps 10 --verbose");
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 10);
+        assert_eq!(a.get("verbose"), Some("true"));
+        assert!(a.bool_or("verbose", false).unwrap());
+        // also when it is the only token
+        let b = parse("--dry-run");
+        assert!(b.bool_or("dry-run", false).unwrap());
+        assert!(b.positional.is_empty());
+    }
+
+    #[test]
+    fn negative_number_values_are_consumed() {
+        // "-0.5" starts with a single dash, so it is a value, not a flag.
+        let a = parse("--lr -0.5 --delta -3 --offset=-7");
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), -0.5);
+        assert_eq!(a.get("delta"), Some("-3"));
+        assert!(a.usize_or("delta", 0).is_err(), "negative is not a usize");
+        assert_eq!(a.f64_or("offset", 0.0).unwrap(), -7.0);
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn double_dash_token_is_never_a_value() {
+        // `--a --b` makes both bare flags; `--` alone is a bare flag with
+        // empty name (degenerate but must not panic or consume `x`).
+        let a = parse("--a --b x");
+        assert!(a.bool_or("a", false).unwrap());
+        assert_eq!(a.get("b"), Some("x"));
+        let b = parse("-- x");
+        assert_eq!(b.get(""), Some("x"));
+    }
+
+    #[test]
+    fn checkpoint_resume_subcommand_flags_parse() {
+        // The exact flag shapes the coordinator's checkpoint/resume flows use.
+        let a = parse("--dir /tmp/ckpt --devices 8 --iters 20 --checkpoint-every 5");
+        assert_eq!(a.req("dir").unwrap(), "/tmp/ckpt");
+        assert_eq!(a.usize_or("devices", 0).unwrap(), 8);
+        assert_eq!(a.usize_or("checkpoint-every", 0).unwrap(), 5);
+        assert!(a.reject_unknown(&["dir", "devices", "iters", "checkpoint-every"]).is_ok());
+        let b = parse("--resume=/data/run 1/ckpt --reference");
+        // `=` form keeps paths with spaces intact per token; the stray token
+        // becomes positional, and --reference stays a bare flag.
+        assert_eq!(b.get("resume"), Some("/data/run"));
+        assert_eq!(b.positional, vec!["1/ckpt"]);
+        assert!(b.bool_or("reference", false).unwrap());
+    }
 }

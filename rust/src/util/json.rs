@@ -21,12 +21,19 @@ pub enum Json {
 }
 
 /// Error produced while parsing JSON text.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParseError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl Json {
     /// Parse a JSON document from text.
@@ -159,6 +166,24 @@ impl Json {
         self.get(key)
             .ok_or_else(|| anyhow::anyhow!("missing required json field `{key}`"))
     }
+
+    /// Canonicalizing number constructor: finite values become
+    /// [`Json::Num`], non-finite values (which JSON cannot represent)
+    /// become [`Json::Null`]. Prefer this over `Json::Num(..)` directly.
+    pub fn num(n: f64) -> Json {
+        if n.is_finite() {
+            Json::Num(n)
+        } else {
+            Json::Null
+        }
+    }
+
+    /// Strict number constructor: errors on NaN/±Infinity instead of
+    /// degrading, for callers that must not lose the value silently.
+    pub fn finite(n: f64) -> anyhow::Result<Json> {
+        anyhow::ensure!(n.is_finite(), "non-finite number {n} cannot be represented in JSON");
+        Ok(Json::Num(n))
+    }
 }
 
 impl fmt::Display for Json {
@@ -174,8 +199,11 @@ impl From<&str> for Json {
 }
 
 impl From<f64> for Json {
+    /// Non-finite floats are canonicalized to `Json::Null`: JSON has no
+    /// NaN/Infinity, and silently emitting them would corrupt documents
+    /// (e.g. checkpoint manifests) for every other parser.
     fn from(n: f64) -> Self {
-        Json::Num(n)
+        Json::num(n)
     }
 }
 
@@ -525,6 +553,41 @@ mod tests {
         let v = obj([("a", 1usize.into()), ("b", vec![1.0f64, 2.0].into())]);
         assert_eq!(v.get("a").unwrap().as_usize(), Some(1));
         assert_eq!(v.get("b").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn non_finite_canonicalized() {
+        // From<f64> and Json::num degrade NaN/±Inf to null…
+        assert_eq!(Json::from(f64::NAN), Json::Null);
+        assert_eq!(Json::from(f64::INFINITY), Json::Null);
+        assert_eq!(Json::num(f64::NEG_INFINITY), Json::Null);
+        assert_eq!(Json::num(1.5), Json::Num(1.5));
+        // …and Json::finite rejects them outright.
+        assert!(Json::finite(f64::NAN).is_err());
+        assert!(Json::finite(f64::INFINITY).is_err());
+        assert_eq!(Json::finite(2.0).unwrap(), Json::Num(2.0));
+    }
+
+    #[test]
+    fn non_finite_serialization_stays_valid_json() {
+        // Even a directly constructed Num(NaN) must serialize to a document
+        // every JSON parser accepts (null), and round-trip through ours.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let doc = obj([("x", Json::Num(bad)), ("y", 3usize.into())]);
+            let text = doc.to_string();
+            let back = Json::parse(&text).expect("serialized text must stay parseable");
+            assert_eq!(back.get("x").unwrap(), &Json::Null);
+            assert_eq!(back.get("y").unwrap().as_usize(), Some(3));
+        }
+    }
+
+    #[test]
+    fn finite_numbers_roundtrip_exactly() {
+        for v in [0.0, -0.0, 0.1, -3.5e2, 1e-12, 9007199254740991.0, 1.25e15] {
+            let text = Json::Num(v).to_string();
+            let back = Json::parse(&text).unwrap();
+            assert_eq!(back.as_f64().unwrap(), v, "value {v} via `{text}`");
+        }
     }
 
     #[test]

@@ -1,0 +1,174 @@
+//! Integration: sharded checkpointing + elastic resume of the numeric
+//! FSSDP engine.
+//!
+//! Runs hermetically on the pure-Rust reference backend (no artifacts /
+//! PJRT needed):
+//!
+//! * save → restore at the **same** world size is **bit-identical** (the
+//!   saved owner layout is reused, so every reduction order matches);
+//! * an N=4 run checkpointed at step k and **elastically** resumed on M=2
+//!   and M=8 devices reaches the same final parameters as the
+//!   uninterrupted run, within the tolerance `tests/fssdp_equivalence.rs`
+//!   uses (2e-3) — FSSDP placement freedom never changes the math;
+//! * corruption and version mismatches are rejected at load time.
+
+use std::path::PathBuf;
+
+use hecate::checkpoint;
+use hecate::fssdp::{reference_dims, FssdpEngine};
+use hecate::testing::max_rel_err;
+use hecate::topology::Topology;
+
+/// Fixed logical data-shard count across every run in this file — elastic
+/// resume changes the device count, never the data stream.
+const SOURCES: usize = 4;
+const SEED: u64 = 7;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("hecate-it-ckpt-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn final_chunks(e: &FssdpEngine) -> Vec<Vec<f32>> {
+    (0..e.dims.experts).map(|x| e.expert_chunk(x).clone()).collect()
+}
+
+/// Uninterrupted reference run: `iters` steps on `topo`.
+fn uninterrupted(topo: Topology, iters: u64) -> Vec<Vec<f32>> {
+    let mut e = FssdpEngine::new_reference(reference_dims(), topo, SEED);
+    for i in 0..iters {
+        e.step(i, SOURCES).unwrap();
+    }
+    final_chunks(&e)
+}
+
+/// Run k1 steps on `topo_a`, checkpoint through disk, resume on `topo_b`,
+/// run k2 more. Returns the final chunks and the number of moved experts.
+fn interrupted(topo_a: Topology, topo_b: Topology, k1: u64, k2: u64, tag: &str) -> (Vec<Vec<f32>>, usize) {
+    let dir = tmpdir(tag);
+    let old_world = topo_a.num_devices();
+    let mut e = FssdpEngine::new_reference(reference_dims(), topo_a, SEED);
+    for i in 0..k1 {
+        e.step(i, SOURCES).unwrap();
+    }
+    checkpoint::save(&dir, &e.snapshot(k1, SOURCES), &e.topo).unwrap();
+    drop(e);
+
+    let (state, saved) = checkpoint::load(&dir).unwrap();
+    assert_eq!(saved.world(), old_world);
+    assert_eq!(state.step, k1);
+    assert_eq!(state.data_shards, SOURCES);
+    let (mut r, plan) = FssdpEngine::resume_reference(topo_b, &state, saved.world()).unwrap();
+    let mut step = state.step;
+    for _ in 0..k2 {
+        r.step(step, state.data_shards).unwrap();
+        step += 1;
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+    (final_chunks(&r), plan.moved_experts.len())
+}
+
+#[test]
+fn same_world_restore_is_bit_identical() {
+    let k1 = 2u64;
+    let k2 = 2u64;
+    let straight = uninterrupted(Topology::cluster_a(2, 2), k1 + k2);
+    let (resumed, moved) = interrupted(
+        Topology::cluster_a(2, 2),
+        Topology::cluster_a(2, 2),
+        k1,
+        k2,
+        "same-world",
+    );
+    assert_eq!(moved, 0, "same world size must reuse the saved layout");
+    for (e, (a, b)) in resumed.iter().zip(straight.iter()).enumerate() {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "expert {e}[{i}]: {x} vs {y} — same-world resume must be bit-identical"
+            );
+        }
+    }
+}
+
+#[test]
+fn elastic_resume_shrink_matches_uninterrupted() {
+    // N=4 checkpointed at step 2, resumed on M=2 — vs 4 uninterrupted steps.
+    let straight = uninterrupted(Topology::cluster_a(2, 2), 4);
+    let (resumed, moved) =
+        interrupted(Topology::cluster_a(2, 2), Topology::cluster_a(1, 2), 2, 2, "shrink");
+    assert!(moved > 0, "shrinking 4 -> 2 devices must move the dead ranks' experts");
+    for (e, (a, b)) in resumed.iter().zip(straight.iter()).enumerate() {
+        let err = max_rel_err(a, b);
+        assert!(err < 2e-3, "expert {e}: max rel err {err} after shrink resume");
+    }
+}
+
+#[test]
+fn elastic_resume_grow_matches_uninterrupted() {
+    // N=4 checkpointed at step 2, resumed on M=8 — vs 4 uninterrupted steps.
+    let straight = uninterrupted(Topology::cluster_a(2, 2), 4);
+    let (resumed, _) =
+        interrupted(Topology::cluster_a(2, 2), Topology::cluster_a(2, 4), 2, 2, "grow");
+    for (e, (a, b)) in resumed.iter().zip(straight.iter()).enumerate() {
+        let err = max_rel_err(a, b);
+        assert!(err < 2e-3, "expert {e}: max rel err {err} after grow resume");
+    }
+}
+
+#[test]
+fn elastic_resume_preserves_loss_trajectory() {
+    // The loss of the resumed run tracks the uninterrupted one closely.
+    let mut full = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(2, 2), SEED);
+    let mut losses_full = Vec::new();
+    for i in 0..4 {
+        losses_full.push(full.step(i, SOURCES).unwrap().loss);
+    }
+
+    let dir = tmpdir("loss-traj");
+    let mut head = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(2, 2), SEED);
+    for i in 0..2 {
+        head.step(i, SOURCES).unwrap();
+    }
+    checkpoint::save(&dir, &head.snapshot(2, SOURCES), &head.topo).unwrap();
+    let (state, saved) = checkpoint::load(&dir).unwrap();
+    let (mut tail, _) =
+        FssdpEngine::resume_reference(Topology::cluster_a(1, 2), &state, saved.world()).unwrap();
+    for (i, want) in losses_full.iter().enumerate().skip(2) {
+        let got = tail.step(i as u64, SOURCES).unwrap().loss;
+        let rel = (got - want).abs() / want.abs().max(1e-9);
+        assert!(rel < 1e-2, "step {i}: loss {got} vs {want} (rel {rel})");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn corrupted_checkpoint_is_rejected() {
+    let dir = tmpdir("corrupt");
+    let mut e = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(1, 2), SEED);
+    e.step(0, SOURCES).unwrap();
+    checkpoint::save(&dir, &e.snapshot(1, SOURCES), &e.topo).unwrap();
+
+    let f = dir.join("global.bin");
+    let mut bytes = std::fs::read(&f).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10;
+    std::fs::write(&f, &bytes).unwrap();
+    assert!(checkpoint::load(&dir).is_err(), "tampered global blob must not load");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn missing_rank_file_is_rejected() {
+    let dir = tmpdir("missing-rank");
+    let mut e = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(1, 2), SEED);
+    e.step(0, SOURCES).unwrap();
+    checkpoint::save(&dir, &e.snapshot(1, SOURCES), &e.topo).unwrap();
+    std::fs::remove_file(dir.join("rank-1.bin")).unwrap();
+    assert!(checkpoint::load(&dir).is_err());
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,306 @@
+//! API-compatible stub of the `xla-rs` bindings used by `hecate::runtime`.
+//!
+//! The offline build has no libpjrt / XLA shared library to link against, so
+//! this crate provides the small API surface the runtime layer uses:
+//!
+//! * [`Literal`] is **fully functional** — it is a plain host tensor
+//!   (f32/i32/tuple) and round-trips through `vec1`/`reshape`/`to_vec`, so
+//!   the `HostTensor` ↔ `Literal` conversion layer and its unit tests work
+//!   unchanged.
+//! * [`PjRtClient::cpu`] **reports unavailability** — paths that would
+//!   execute compiled HLO (the PJRT train loop, the artifact-gated
+//!   integration tests) error out with a clear message or self-skip, exactly
+//!   as they do on a machine without `artifacts/`.
+//!
+//! Swapping in the real `xla-rs` crate restores full functionality without
+//! any source change in `hecate`.
+
+use std::fmt;
+
+/// Stub error type: everything is a message.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str = "PJRT runtime unavailable: hecate was built against the bundled \
+     `xla` API stub (offline build, no libpjrt). Numeric paths that execute compiled HLO are \
+     disabled; artifact-gated tests self-skip.";
+
+/// Element types of array literals (subset of XLA's PrimitiveType).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+    C64,
+}
+
+/// Typed element storage of an array literal.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl LiteralData {
+    fn len(&self) -> usize {
+        match self {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+        }
+    }
+
+    fn ty(&self) -> ElementType {
+        match self {
+            LiteralData::F32(_) => ElementType::F32,
+            LiteralData::I32(_) => ElementType::S32,
+        }
+    }
+}
+
+/// Element types storable in a stub [`Literal`].
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> LiteralData;
+    fn unwrap(data: &LiteralData) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> LiteralData {
+        LiteralData::F32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<f32>> {
+        match data {
+            LiteralData::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> LiteralData {
+        LiteralData::I32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<i32>> {
+        match data {
+            LiteralData::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Shape of an array literal: dimensions + element type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Host literal: a dense array (f32/i32) or a tuple of literals.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    Array { dims: Vec<i64>, data: LiteralData },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal::Array { dims: vec![data.len() as i64], data: T::wrap(data.to_vec()) }
+    }
+
+    /// Tuple literal (what executables return with `return_tuple=True`).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal::Tuple(parts)
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match self {
+            Literal::Array { data, .. } => {
+                let want: i64 = dims.iter().product();
+                if want as usize != data.len() {
+                    return Err(Error::new(format!(
+                        "reshape: {} elements into shape {:?}",
+                        data.len(),
+                        dims
+                    )));
+                }
+                Ok(Literal::Array { dims: dims.to_vec(), data: data.clone() })
+            }
+            Literal::Tuple(_) => Err(Error::new("cannot reshape a tuple literal")),
+        }
+    }
+
+    /// Shape of an array literal (errors on tuples).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::Array { dims, data } => {
+                Ok(ArrayShape { dims: dims.clone(), ty: data.ty() })
+            }
+            Literal::Tuple(_) => Err(Error::new("array_shape of a tuple literal")),
+        }
+    }
+
+    /// Unpack a tuple literal into its parts (errors on arrays).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts),
+            Literal::Array { .. } => Err(Error::new("to_tuple of an array literal")),
+        }
+    }
+
+    /// Copy the elements out as `Vec<T>` (errors on dtype mismatch/tuples).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { data, .. } => T::unwrap(data)
+                .ok_or_else(|| Error::new(format!("to_vec: literal holds {:?}", data.ty()))),
+            Literal::Tuple(_) => Err(Error::new("to_vec of a tuple literal")),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: construction always fails — no parser linked).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+/// XLA computation handle (stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer returned by an execution (stub).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+/// Compiled executable (stub).
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+/// PJRT client (stub: creation reports unavailability).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::new(UNAVAILABLE))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let s = l.array_shape().unwrap();
+        assert_eq!(s.dims(), &[2, 2]);
+        assert_eq!(s.ty(), ElementType::F32);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_reshape() {
+        let l = Literal::vec1(&[5i32]).reshape(&[]).unwrap();
+        assert_eq!(l.array_shape().unwrap().dims(), &[] as &[i64]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![5]);
+    }
+
+    #[test]
+    fn bad_reshape_errors() {
+        assert!(Literal::vec1(&[1.0f32, 2.0]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn tuples() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1.0f32]), Literal::vec1(&[2i32])]);
+        let parts = t.clone().to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(t.array_shape().is_err());
+    }
+
+    #[test]
+    fn client_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("unavailable"));
+    }
+}
