@@ -1,0 +1,105 @@
+//! SPMD executor benchmarks: sequential vs per-rank concurrent execution
+//! of the sparse collectives, and the end-to-end FSSDP step on the
+//! `Executor::Sequential` vs `Executor::Spmd` seam — the acceptance bench
+//! for the parallel runtime (the SPMD rows should win on a multicore
+//! host; the collective-only rows mostly price the communicator, since
+//! buffer copies are memory-bound).
+//!
+//! `cargo bench --bench spmd [-- --quick] [filter]`
+
+use hecate::bench::Bench;
+use hecate::collectives::exec::{run_spag, run_sprs, ClusterMem};
+use hecate::collectives::sparse::{build_spag, build_sprs};
+use hecate::fssdp::{Executor, FssdpEngine, LayerDims};
+use hecate::placement::Placement;
+use hecate::spmd::comm;
+use hecate::spmd::exec::{run_spag_rank, run_sprs_rank};
+use hecate::topology::{DeviceId, Topology};
+use hecate::util::rng::Rng;
+
+fn materialized(pre: &Placement, extra: usize, seed: u64) -> Placement {
+    let mut rng = Rng::new(seed);
+    let mut post = pre.clone();
+    for _ in 0..extra {
+        post.add(rng.below(pre.num_chunks()), DeviceId(rng.below(pre.num_devices())));
+    }
+    post
+}
+
+fn main() {
+    let b = Bench::from_args();
+    let nd = 8;
+    let topo = Topology::cluster_a(2, 4);
+    let pre = Placement::round_robin(32, nd);
+    let post = materialized(&pre, 48, 1);
+    let spag = build_spag(&topo, &pre, &post).unwrap();
+    let sprs = build_sprs(&topo, &post, &pre).unwrap();
+
+    let chunk = 16_384;
+    let mut base = ClusterMem::new(nd);
+    let mut rng = Rng::new(2);
+    for c in 0..pre.num_chunks() {
+        let d = pre.holders(c).next().unwrap();
+        base.dev_mut(d).insert(c, (0..chunk).map(|_| rng.normal() as f32).collect());
+    }
+    let mut full = base.clone();
+    run_spag(&mut full, &spag).unwrap();
+
+    b.section("spAG execution: sequential loop vs 8 rank threads (32 chunks x 16k floats)");
+    b.run("spag_sequential", || {
+        let mut mem = base.clone();
+        run_spag(&mut mem, &spag).unwrap();
+    });
+    b.run("spag_8rank_threads", || {
+        let comms = comm::fabric(nd, None);
+        let stores = base.devices.clone();
+        std::thread::scope(|sc| {
+            for (me, (mut store, mut c)) in stores.into_iter().zip(comms).enumerate() {
+                let plan = &spag;
+                sc.spawn(move || run_spag_rank(&mut store, plan, me, 0, &mut c).unwrap());
+            }
+        });
+    });
+
+    b.section("spRS execution: sequential loop vs 8 rank threads");
+    b.run("sprs_sequential", || {
+        let mut mem = full.clone();
+        run_sprs(&mut mem, &sprs, &pre).unwrap();
+    });
+    b.run("sprs_8rank_threads", || {
+        let comms = comm::fabric(nd, None);
+        let stores = full.devices.clone();
+        std::thread::scope(|sc| {
+            for (me, (mut store, mut c)) in stores.into_iter().zip(comms).enumerate() {
+                let plan = &sprs;
+                let owners = &pre;
+                sc.spawn(move || {
+                    run_sprs_rank(&mut store, plan, owners, me, 0, &mut c).unwrap()
+                });
+            }
+        });
+    });
+
+    b.section("end-to-end FSSDP step, 8 devices (tokens 128, d_model 64, d_ffn 128, 16 experts)");
+    let dims = LayerDims { tokens: 128, d_model: 64, d_ffn: 128, experts: 16, cap: 32 };
+    let mut seq = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 4), 9);
+    let mut seq_iter = 0u64;
+    b.run("step_sequential_8dev", || {
+        seq.run_span(seq_iter, 1, nd).unwrap();
+        seq_iter += 1;
+    });
+    let mut par = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 4), 9);
+    par.executor = Executor::Spmd { threads: nd, overlap: true };
+    let mut par_iter = 0u64;
+    b.run("step_spmd_8threads", || {
+        par.run_span(par_iter, 1, nd).unwrap();
+        par_iter += 1;
+    });
+    let mut par_sync = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 4), 9);
+    par_sync.executor = Executor::Spmd { threads: nd, overlap: false };
+    let mut sync_iter = 0u64;
+    b.run("step_spmd_8threads_no_overlap", || {
+        par_sync.run_span(sync_iter, 1, nd).unwrap();
+        sync_iter += 1;
+    });
+}

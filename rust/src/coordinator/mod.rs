@@ -8,8 +8,10 @@
 //!                  [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR]
 //! hecate fssdp     --devices 8 --iters 20                      (numeric engine)
 //!                  [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR] [--reference]
+//!                  [--parallel [--threads N]]                  (SPMD executor)
 //! hecate checkpoint --dir DIR [--devices N --iters K]          (hermetic snapshot demo)
 //! hecate resume     --dir DIR [--devices M --iters K]          (elastic resume demo)
+//! hecate bench spmd [--iters N --quick]                        (thread-scaling sweep)
 //! ```
 
 use crate::checkpoint::faults::FaultSpec;
@@ -34,6 +36,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "fssdp" => cmd_fssdp(&args),
         "checkpoint" => cmd_checkpoint(&args),
         "resume" => cmd_resume(&args),
+        "bench" => cmd_bench(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -54,9 +57,11 @@ fn print_usage() {
          hecate train    [--steps N] [--artifacts DIR] [--model tiny|e2e] [--log FILE]\n                  \
          [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR]\n  \
          hecate fssdp    [--devices N] [--iters N] [--artifacts DIR] [--reference]\n                  \
-         [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR]\n  \
+         [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR]\n                  \
+         [--parallel [--threads N]]   (SPMD executor: one thread per rank)\n  \
          hecate checkpoint --dir DIR [--nodes N --devices N --iters K --seed S]\n  \
-         hecate resume     --dir DIR [--nodes N --devices M --iters K]"
+         hecate resume     --dir DIR [--nodes N --devices M --iters K]\n  \
+         hecate bench spmd [--iters N] [--quick]   (sequential vs SPMD wall clock)"
     );
 }
 
@@ -231,8 +236,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 fn cmd_fssdp(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&[
         "devices", "iters", "artifacts", "nodes", "seed", "checkpoint-every",
-        "checkpoint-dir", "resume", "reference",
+        "checkpoint-dir", "resume", "reference", "parallel", "threads",
     ])?;
+    let parallel = args.bool_or("parallel", false)?;
+    let threads = match args.get("threads") {
+        None => None,
+        Some(_) => Some(args.usize_or("threads", 0)?),
+    };
+    anyhow::ensure!(
+        threads.is_none() || parallel,
+        "--threads requires --parallel (the SPMD executor runs one thread per rank; \
+         without --parallel the engine is single-threaded)"
+    );
     let opts = RunOpts {
         devices: args.usize_or("devices", 8)?,
         nodes: args.usize_or("nodes", 2)?,
@@ -242,9 +257,34 @@ fn cmd_fssdp(args: &Args) -> anyhow::Result<()> {
         checkpoint_dir: args.get("checkpoint-dir").map(|s| s.to_string()),
         resume: args.get("resume").map(|s| s.to_string()),
         reference: args.bool_or("reference", false)?,
+        parallel,
+        threads,
     };
     let dir = args.str_or("artifacts", "artifacts");
     crate::fssdp::run_demo_with(&dir, &opts)
+}
+
+/// Measured-performance sweeps. `hecate bench spmd` runs the reference
+/// engine sequentially and on the SPMD executor across thread counts and
+/// prints modeled comm time next to measured wall clock per iteration.
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["iters", "quick", "target"])?;
+    let target = args
+        .get("target")
+        .map(|s| s.to_string())
+        .or_else(|| args.positional.first().cloned())
+        .unwrap_or_else(|| "spmd".to_string());
+    match target.as_str() {
+        "spmd" => {
+            let iters = args.usize_or("iters", 3)?;
+            let quick = args.bool_or("quick", false)?;
+            println!("== SPMD thread scaling: modeled comm vs measured wall clock ==");
+            let t = report::spmd_scaling(iters, quick)?;
+            print!("{}", t.to_markdown());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown bench target `{other}` (available: spmd)"),
+    }
 }
 
 /// Hermetic checkpoint demo: train the reference engine for `--iters`
@@ -362,5 +402,51 @@ mod tests {
         assert!(run(argv(&["fssdp", "--bogus", "1"])).is_err());
         assert!(run(argv(&["simulate", "--fail-step", "5", "--nope", "1"])).is_err());
         assert!(run(argv(&["checkpoint", "--dir", "/tmp/x", "--nope", "1"])).is_err());
+        assert!(run(argv(&["bench", "nope"])).is_err());
+        assert!(run(argv(&["bench", "spmd", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn threads_without_parallel_is_rejected() {
+        let err = run(argv(&["fssdp", "--reference", "--threads", "4", "--iters", "1"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--threads requires --parallel"), "{err}");
+    }
+
+    #[test]
+    fn threads_must_match_devices() {
+        let err = run(argv(&[
+            "fssdp", "--reference", "--parallel", "--devices", "4", "--threads", "3",
+            "--iters", "1",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("one OS thread per rank"), "{err}");
+    }
+
+    #[test]
+    fn parallel_requires_reference_backend() {
+        // --parallel without --reference would put PJRT handles on rank
+        // threads; it must fail fast (before any engine is built).
+        let err = run(argv(&["fssdp", "--parallel", "--devices", "4", "--iters", "1"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--reference"), "{err}");
+    }
+
+    #[test]
+    fn parallel_smoke_runs_and_matches_flagless_defaults() {
+        run(argv(&[
+            "fssdp", "--reference", "--parallel", "--devices", "4", "--nodes", "2",
+            "--iters", "2",
+        ]))
+        .unwrap();
+        // explicit matching thread count is also accepted
+        run(argv(&[
+            "fssdp", "--reference", "--parallel", "--devices", "4", "--nodes", "2",
+            "--threads", "4", "--iters", "1",
+        ]))
+        .unwrap();
     }
 }

@@ -30,10 +30,11 @@ use std::collections::BTreeMap;
 
 use crate::checkpoint::{self, ExpertState, ReshardPlan, TrainState};
 use crate::collectives::exec::{run_spag, run_sprs, ClusterMem};
-use crate::collectives::sparse::{build_spag, build_sprs};
+use crate::collectives::sparse::{build_spag, build_sprs, SparsePlan};
 use crate::dispatch::dispatch;
 use crate::loadsim::LoadPredictor;
 use crate::materialize::{sparse_materialize, MatConstraints};
+use crate::metrics::Metrics;
 use crate::placement::Placement;
 use crate::runtime::{HostTensor, Runtime};
 use crate::topology::{DeviceId, Topology};
@@ -41,6 +42,29 @@ use crate::util::rng::Rng;
 
 use adam::{AdamCfg, AdamState};
 use compute::Compute;
+
+/// How the engine executes an iteration span: the sequential oracle (one
+/// thread steps every simulated device in turn) or the SPMD runtime
+/// ([`crate::spmd`] — one OS thread per rank over an in-process
+/// communicator, with overlapped sparse collectives).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Executor {
+    /// Single-threaded reference execution ([`FssdpEngine::step`]).
+    Sequential,
+    /// One OS thread per rank. `threads` must equal the topology's device
+    /// count (SPMD = the program *is* the rank). `overlap` enables the
+    /// re-materialization overlap scheduler (§4.3); results are
+    /// bit-identical either way.
+    Spmd { threads: usize, overlap: bool },
+}
+
+impl Executor {
+    /// The SPMD executor sized for `topo` (one thread per device,
+    /// overlap scheduler on).
+    pub fn spmd_for(topo: &Topology) -> Executor {
+        Executor::Spmd { threads: topo.num_devices(), overlap: true }
+    }
+}
 
 /// Static dimensions of the engine's MoE layer (from the artifact manifest,
 /// or chosen explicitly for the hermetic reference backend).
@@ -100,6 +124,166 @@ fn accumulate_grad_chunk(acc: &mut [f32], parts: &[HostTensor]) -> anyhow::Resul
     Ok(())
 }
 
+/// Generate one logical data shard's token batch for iteration `iter`
+/// (deterministic in (iter, source) only — the FSSDP run, the 1-device
+/// reference, and every SPMD rank regenerate identical data locally, so
+/// token payloads never need to cross the wire).
+pub(crate) fn batch_for(dims: &LayerDims, iter: u64, source: usize) -> Vec<f32> {
+    let mut r = Rng::new(0xDA7A ^ (iter.wrapping_mul(0x9E3779B97F4A7C15)) ^ (source as u64) << 32);
+    // drift the token distribution over iterations so expert loads
+    // fluctuate (the Figure 3 dynamic the predictor must track)
+    let phase = iter as f64 * 0.05;
+    (0..dims.tokens * dims.d_model)
+        .map(|i| {
+            let base = r.normal() as f32;
+            let drift = ((i % dims.d_model) as f64 * 0.1 + phase).sin() as f32;
+            base + 0.8 * drift
+        })
+        .collect()
+}
+
+/// The deterministic control-plane decisions of one iteration: predicted
+/// placement (Algorithm 1) and the two compiled sparse collectives. Every
+/// SPMD rank computes this redundantly from replicated state and gets the
+/// same plan — the SPMD determinism contract (see DESIGN.md) hinges on it.
+#[derive(Debug, Clone)]
+pub(crate) struct IterPlan {
+    pub placement: Placement,
+    pub spag: SparsePlan,
+    pub sprs: SparsePlan,
+}
+
+pub(crate) fn build_iter_plan(
+    topo: &Topology,
+    shards: &Placement,
+    predicted: &[f64],
+    cons: MatConstraints,
+) -> anyhow::Result<IterPlan> {
+    let placement = sparse_materialize(topo, shards, predicted, cons);
+    let spag = build_spag(topo, shards, &placement)?;
+    let sprs = build_sprs(topo, &placement, shards)?;
+    Ok(IterPlan { placement, spag, sprs })
+}
+
+/// Realized load fractions from the gathered gate decisions (feeds the
+/// predictor for the next iteration).
+pub(crate) fn realized_loads(experts: usize, gate_idx: &[Vec<i32>]) -> Vec<f64> {
+    let mut load_counts = vec![0usize; experts];
+    for idx in gate_idx {
+        for &e in idx {
+            load_counts[e as usize] += 1;
+        }
+    }
+    let total: usize = load_counts.iter().sum();
+    load_counts.iter().map(|&c| c as f64 / total.max(1) as f64).collect()
+}
+
+/// `assignments[src_device][expert]` — sources map round-robin onto
+/// devices (all on device 0 in the 1-device reference).
+pub(crate) fn assignment_matrix(nd: usize, experts: usize, gate_idx: &[Vec<i32>]) -> Vec<Vec<usize>> {
+    let mut asg = vec![vec![0usize; experts]; nd];
+    for (s, idx) in gate_idx.iter().enumerate() {
+        let dev = s % nd;
+        for &e in idx {
+            asg[dev][e as usize] += 1;
+        }
+    }
+    asg
+}
+
+/// Physical token routing: per `(dst_device, expert)` → list of
+/// `(source, token_row, gate_weight)`. Routing must follow the dispatch
+/// plan: we re-derive each token's destination with the same rule
+/// (local → same-node → any; round-robin among candidates). Deterministic
+/// in its inputs, so SPMD ranks compute it redundantly and agree.
+pub(crate) type Routes = BTreeMap<(usize, usize), Vec<(usize, usize, f32)>>;
+
+pub(crate) fn routes_from_gates(
+    topo: &Topology,
+    placement: &Placement,
+    nd: usize,
+    experts: usize,
+    gate_idx: &[Vec<i32>],
+    gate_w_out: &[Vec<f32>],
+) -> Routes {
+    let mut routes: Routes = BTreeMap::new();
+    let mut cursors = vec![0usize; experts];
+    for (s, idx) in gate_idx.iter().enumerate() {
+        let src = DeviceId(s % nd);
+        for (t, pair) in idx.chunks(2).enumerate() {
+            for (slot, &e) in pair.iter().enumerate() {
+                let e = e as usize;
+                let w = gate_w_out[s][t * 2 + slot];
+                let dst = if placement.contains(e, src) {
+                    src
+                } else {
+                    let local = placement.holders_on_node(topo, e, topo.node_of(src));
+                    let cands: Vec<DeviceId> = if local.is_empty() {
+                        placement.holders(e).collect()
+                    } else {
+                        local
+                    };
+                    let d = cands[cursors[e] % cands.len()];
+                    cursors[e] += 1;
+                    d
+                };
+                routes.entry((dst.0, e)).or_default().push((s, t, w));
+            }
+        }
+    }
+    routes
+}
+
+/// Expert forward + combine + loss + backward for every token routed to
+/// one `(device, expert)` pair, accumulating parameter gradients into
+/// `acc` (capacity-tiled, group order — the accumulation order is part of
+/// the bit-exactness contract between executors). Returns the loss
+/// contribution.
+pub(crate) fn compute_expert_key(
+    compute: &mut Compute,
+    dims: &LayerDims,
+    chunk: &[f32],
+    toks: &[(usize, usize, f32)],
+    batches: &[Vec<f32>],
+    inv_t: f32,
+    acc: &mut [f32],
+) -> anyhow::Result<f64> {
+    let (w1, b1, w2, b2) = unpack_chunk(dims, chunk);
+    let mut loss = 0.0f64;
+    for group in toks.chunks(dims.cap) {
+        // pack token rows (zero-padded to cap)
+        let mut xin = vec![0.0f32; dims.cap * dims.d_model];
+        for (row, &(s, t, _w)) in group.iter().enumerate() {
+            let src = &batches[s][t * dims.d_model..(t + 1) * dims.d_model];
+            xin[row * dims.d_model..(row + 1) * dims.d_model].copy_from_slice(src);
+        }
+        let xt = HostTensor::f32(vec![dims.cap, dims.d_model], xin);
+        let y = compute.execute(
+            "expert_ffn_fwd",
+            &[xt.clone(), w1.clone(), b1.clone(), w2.clone(), b2.clone()],
+        )?;
+        let yv = y[0].as_f32()?;
+        // combine + loss + cotangent: target 0 ⇒ L = ½‖w·y‖²/T,
+        // gy_row = w²·y·(1/T) (chain through the combine weight)
+        let mut gy = vec![0.0f32; dims.cap * dims.d_model];
+        for (row, &(_s, _t, w)) in group.iter().enumerate() {
+            for c in 0..dims.d_model {
+                let o = w * yv[row * dims.d_model + c];
+                loss += 0.5 * (o as f64) * (o as f64) * inv_t as f64;
+                gy[row * dims.d_model + c] = w * o * inv_t;
+            }
+        }
+        let gyt = HostTensor::f32(vec![dims.cap, dims.d_model], gy);
+        let out = compute.execute(
+            "expert_ffn_bwd",
+            &[xt, w1.clone(), b1.clone(), w2.clone(), b2.clone(), gyt],
+        )?;
+        // out = (gx, gw1, gb1, gw2, gb2); gx unused (gate frozen)
+        accumulate_grad_chunk(acc, &out[1..5])?;
+    }
+    Ok(loss)
+}
+
 /// Per-iteration statistics of the engine.
 #[derive(Debug, Clone, Default)]
 pub struct EngineStats {
@@ -118,24 +302,29 @@ pub struct EngineStats {
 pub struct FssdpEngine {
     pub topo: Topology,
     pub dims: LayerDims,
-    compute: Compute,
+    /// Which executor [`FssdpEngine::run_span`] uses.
+    pub executor: Executor,
+    pub(crate) compute: Compute,
     /// Engine construction seed (recorded in checkpoints).
     seed: u64,
     /// Expert parameter chunks, placed per `shards`.
-    params: ClusterMem,
-    shards: Placement,
+    pub(crate) params: ClusterMem,
+    pub(crate) shards: Placement,
     /// Adam state on shard owners only (the single global copy).
-    opt: BTreeMap<usize, AdamState>,
-    adam: AdamCfg,
+    pub(crate) opt: BTreeMap<usize, AdamState>,
+    pub(crate) adam: AdamCfg,
     /// Gate weights, replicated on every device (dense DP part; frozen in
     /// the engine — the gate's drift is exogenous, from the data stream).
-    gate_w: Vec<f32>,
-    predictor: LoadPredictor,
+    pub(crate) gate_w: Vec<f32>,
+    pub(crate) predictor: LoadPredictor,
     /// Memory headroom per device for Algorithm 1, in expert slots.
     pub mem_slots: usize,
     /// Overlap degree for Algorithm 1.
     pub overlap_degree: usize,
     rng: Rng,
+    /// Per-rank metrics merged after the last SPMD span (None before the
+    /// first parallel run).
+    pub(crate) spmd_metrics: Option<Metrics>,
 }
 
 impl FssdpEngine {
@@ -179,6 +368,7 @@ impl FssdpEngine {
         FssdpEngine {
             topo,
             dims,
+            executor: Executor::Sequential,
             compute,
             seed,
             params,
@@ -190,6 +380,7 @@ impl FssdpEngine {
             mem_slots: 4,
             overlap_degree: 4,
             rng,
+            spmd_metrics: None,
         }
     }
 
@@ -213,23 +404,6 @@ impl FssdpEngine {
         self.params.dev(self.owner(e)).get(e).expect("owner holds its shard")
     }
 
-    /// Generate each device's token batch for iteration `iter`
-    /// (deterministic in (seed, iter, device) — the FSSDP run and the
-    /// 1-device reference see identical data).
-    fn batch(&self, iter: u64, source: usize) -> Vec<f32> {
-        let mut r = Rng::new(0xDA7A ^ (iter.wrapping_mul(0x9E3779B97F4A7C15)) ^ (source as u64) << 32);
-        // drift the token distribution over iterations so expert loads
-        // fluctuate (the Figure 3 dynamic the predictor must track)
-        let phase = iter as f64 * 0.05;
-        (0..self.dims.tokens * self.dims.d_model)
-            .map(|i| {
-                let base = r.normal() as f32;
-                let drift = ((i % self.dims.d_model) as f64 * 0.1 + phase).sin() as f32;
-                base + 0.8 * drift
-            })
-            .collect()
-    }
-
     /// Run one FSSDP training iteration over `sources` logical data shards
     /// (== devices in the distributed run; all mapped to device 0 in the
     /// reference run). Returns iteration statistics.
@@ -240,16 +414,16 @@ impl FssdpEngine {
 
         // ---- materialization phase: predict → Algorithm 1 → spAG ----
         let predicted = self.predictor.predict();
-        let placement = sparse_materialize(
+        let plan = build_iter_plan(
             &self.topo,
             &self.shards,
             &predicted,
             MatConstraints { overlap_degree: self.overlap_degree, mem_slots: self.mem_slots },
-        );
-        let spag = build_spag(&self.topo, &self.shards, &placement)?;
-        stats.spag_sparsity = spag.sparsity;
+        )?;
+        let placement = &plan.placement;
+        stats.spag_sparsity = plan.spag.sparsity;
         stats.replicas = placement.len() - self.shards.len();
-        run_spag(&mut self.params, &spag)?;
+        run_spag(&mut self.params, &plan.spag)?;
 
         // ---- gate (HLO) per source batch ----
         let gate_wt = HostTensor::f32(vec![dims.d_model, dims.experts], self.gate_w.clone());
@@ -257,7 +431,7 @@ impl FssdpEngine {
         let mut gate_w_out: Vec<Vec<f32>> = Vec::with_capacity(sources);
         let mut gate_idx: Vec<Vec<i32>> = Vec::with_capacity(sources);
         for s in 0..sources {
-            let x = self.batch(iter, s);
+            let x = batch_for(&dims, iter, s);
             let xt = HostTensor::f32(vec![dims.tokens, dims.d_model], x.clone());
             let out = self.compute.execute("gate_fwd", &[xt, gate_wt.clone()])?;
             gate_w_out.push(out[1].as_f32()?.to_vec());
@@ -266,65 +440,18 @@ impl FssdpEngine {
         }
 
         // realized loads feed the predictor for the NEXT iteration
-        let mut load_counts = vec![0usize; dims.experts];
-        for idx in &gate_idx {
-            for &e in idx {
-                load_counts[e as usize] += 1;
-            }
-        }
-        let total: usize = load_counts.iter().sum();
-        let realized: Vec<f64> =
-            load_counts.iter().map(|&c| c as f64 / total.max(1) as f64).collect();
+        let realized = realized_loads(dims.experts, &gate_idx);
 
         // ---- dispatch (L3) ----
-        // assignments[src_device][expert] — sources map round-robin onto
-        // devices (all on device 0 in the 1-device reference).
-        let mut asg = vec![vec![0usize; dims.experts]; nd];
-        for (s, idx) in gate_idx.iter().enumerate() {
-            let dev = s % nd;
-            for &e in idx {
-                asg[dev][e as usize] += 1;
-            }
-        }
-        let dplan = dispatch(&self.topo, &placement, &asg);
+        let asg = assignment_matrix(nd, dims.experts, &gate_idx);
+        let dplan = dispatch(&self.topo, placement, &asg);
         stats.remote_tokens = dplan.remote_tokens();
         stats.straggler = crate::util::stats::straggler_factor(
             &dplan.device_compute_tokens().iter().map(|&t| t as f64).collect::<Vec<_>>(),
         );
 
-        // Physical routing: per (dst_device, expert) → list of
-        // (source, token_row, slot (0|1), gate_weight). Routing must follow
-        // the dispatch plan: we re-derive each token's destination with the
-        // same rule (local → same-node → any; round-robin among candidates).
-        let mut routes: BTreeMap<(usize, usize), Vec<(usize, usize, f32)>> = BTreeMap::new();
-        let mut cursors = vec![0usize; dims.experts];
-        for (s, idx) in gate_idx.iter().enumerate() {
-            let src = DeviceId(s % nd);
-            for (t, pair) in idx.chunks(2).enumerate() {
-                for (slot, &e) in pair.iter().enumerate() {
-                    let e = e as usize;
-                    let w = gate_w_out[s][t * 2 + slot];
-                    let dst = if placement.contains(e, src) {
-                        src
-                    } else {
-                        let local = placement.holders_on_node(
-                            &self.topo,
-                            e,
-                            self.topo.node_of(src),
-                        );
-                        let cands: Vec<DeviceId> = if local.is_empty() {
-                            placement.holders(e).collect()
-                        } else {
-                            local
-                        };
-                        let d = cands[cursors[e] % cands.len()];
-                        cursors[e] += 1;
-                        d
-                    };
-                    routes.entry((dst.0, e)).or_default().push((s, t, w));
-                }
-            }
-        }
+        let routes =
+            routes_from_gates(&self.topo, placement, nd, dims.experts, &gate_idx, &gate_w_out);
 
         // ---- expert forward (HLO), combine, loss, backward (HLO) ----
         // grads cluster-mem mirrors the materialized placement with zeros
@@ -343,45 +470,14 @@ impl FssdpEngine {
                 .get(e)
                 .ok_or_else(|| anyhow::anyhow!("device {dev} lacks expert {e}"))?
                 .clone();
-            let (w1, b1, w2, b2) = unpack_chunk(&dims, &chunk);
-            for group in toks.chunks(dims.cap) {
-                // pack token rows (zero-padded to cap)
-                let mut xin = vec![0.0f32; dims.cap * dims.d_model];
-                for (row, &(s, t, _w)) in group.iter().enumerate() {
-                    let src = &batches[s][t * dims.d_model..(t + 1) * dims.d_model];
-                    xin[row * dims.d_model..(row + 1) * dims.d_model].copy_from_slice(src);
-                }
-                let xt = HostTensor::f32(vec![dims.cap, dims.d_model], xin);
-                let y = self.compute.execute(
-                    "expert_ffn_fwd",
-                    &[xt.clone(), w1.clone(), b1.clone(), w2.clone(), b2.clone()],
-                )?;
-                let yv = y[0].as_f32()?;
-                // combine + loss + cotangent: target 0 ⇒ L = ½‖w·y‖²/T,
-                // gy_row = w²·y·(1/T) (chain through the combine weight)
-                let mut gy = vec![0.0f32; dims.cap * dims.d_model];
-                for (row, &(_s, _t, w)) in group.iter().enumerate() {
-                    for c in 0..dims.d_model {
-                        let o = w * yv[row * dims.d_model + c];
-                        loss += 0.5 * (o as f64) * (o as f64) * inv_t as f64;
-                        gy[row * dims.d_model + c] = w * o * inv_t;
-                    }
-                }
-                let gyt = HostTensor::f32(vec![dims.cap, dims.d_model], gy);
-                let out = self.compute.execute(
-                    "expert_ffn_bwd",
-                    &[xt, w1.clone(), b1.clone(), w2.clone(), b2.clone(), gyt],
-                )?;
-                // out = (gx, gw1, gb1, gw2, gb2); gx unused (gate frozen)
-                let acc = grads.dev_mut(DeviceId(dev)).get_mut(e).unwrap();
-                accumulate_grad_chunk(acc, &out[1..5])?;
-            }
+            let acc = grads.dev_mut(DeviceId(dev)).get_mut(e).unwrap();
+            loss +=
+                compute_expert_key(&mut self.compute, &dims, &chunk, toks, &batches, inv_t, acc)?;
         }
         stats.loss = loss;
 
         // ---- spRS: reduce gradients to the shard owners ----
-        let sprs = build_sprs(&self.topo, &placement, &self.shards)?;
-        run_sprs(&mut grads, &sprs, &self.shards)?;
+        run_sprs(&mut grads, &plan.sprs, &self.shards)?;
 
         // ---- optimizer step on owners; release materialized replicas ----
         for e in 0..dims.experts {
@@ -408,6 +504,41 @@ impl FssdpEngine {
         self.predictor.observe(&realized);
         let _ = &self.rng; // reserved for stochastic extensions
         Ok(stats)
+    }
+
+    /// Run `iters` consecutive iterations starting at `start` on the
+    /// configured [`Executor`], returning per-iteration statistics.
+    ///
+    /// `Executor::Sequential` loops [`FssdpEngine::step`];
+    /// `Executor::Spmd` hands the whole span to the parallel runtime
+    /// ([`crate::spmd::run_span`]) — one OS thread per rank, state split
+    /// out per-rank at span entry and merged back at span exit, so
+    /// checkpointing, [`FssdpEngine::snapshot`], and `expert_chunk` work
+    /// identically under both executors.
+    pub fn run_span(
+        &mut self,
+        start: u64,
+        iters: usize,
+        sources: usize,
+    ) -> anyhow::Result<Vec<EngineStats>> {
+        match self.executor {
+            Executor::Sequential => {
+                let mut out = Vec::with_capacity(iters);
+                for k in 0..iters {
+                    out.push(self.step(start + k as u64, sources)?);
+                }
+                Ok(out)
+            }
+            Executor::Spmd { threads, overlap } => {
+                crate::spmd::run_span(self, start, iters, sources, threads, overlap)
+            }
+        }
+    }
+
+    /// Per-rank metrics merged over the most recent SPMD span (None if the
+    /// engine has only run sequentially).
+    pub fn spmd_metrics(&self) -> Option<&Metrics> {
+        self.spmd_metrics.as_ref()
     }
 
     // ---- checkpointing (the durable state is exactly the shard set) ----
@@ -485,6 +616,7 @@ impl FssdpEngine {
         let engine = FssdpEngine {
             topo,
             dims,
+            executor: Executor::Sequential,
             compute,
             seed: state.seed,
             params,
@@ -500,6 +632,7 @@ impl FssdpEngine {
             mem_slots: state.mem_slots,
             overlap_degree: state.overlap_degree,
             rng: Rng::from_state(state.rng_state),
+            spmd_metrics: None,
         };
         Ok((engine, plan))
     }
@@ -547,6 +680,11 @@ pub struct RunOpts {
     pub resume: Option<String>,
     /// Use the hermetic reference backend instead of PJRT artifacts.
     pub reference: bool,
+    /// Run on the SPMD executor (one OS thread per rank).
+    pub parallel: bool,
+    /// Optional explicit thread count; must equal `devices` when given
+    /// (SPMD runs exactly one thread per rank).
+    pub threads: Option<usize>,
 }
 
 impl Default for RunOpts {
@@ -560,6 +698,8 @@ impl Default for RunOpts {
             checkpoint_dir: None,
             resume: None,
             reference: false,
+            parallel: false,
+            threads: None,
         }
     }
 }
@@ -600,6 +740,24 @@ pub fn run_demo_with(artifact_dir: &str, opts: &RunOpts) -> anyhow::Result<()> {
         "--checkpoint-every needs --checkpoint-dir"
     );
 
+    // SPMD flag validation, before any engine is built: one thread per
+    // rank, and only the hermetic backend (PJRT client handles are
+    // single-threaded).
+    if opts.parallel {
+        let threads = opts.threads.unwrap_or(opts.devices);
+        anyhow::ensure!(
+            threads == opts.devices,
+            "--threads {} must equal --devices {}: the SPMD executor runs one OS thread per rank",
+            threads,
+            opts.devices
+        );
+        anyhow::ensure!(
+            opts.reference,
+            "--parallel requires the hermetic backend (add --reference): \
+             PJRT runtime handles cannot be shared across rank threads"
+        );
+    }
+
     // Fresh start or elastic resume.
     let (mut engine, mut step, sources) = match &opts.resume {
         None => {
@@ -632,24 +790,45 @@ pub fn run_demo_with(artifact_dir: &str, opts: &RunOpts) -> anyhow::Result<()> {
         }
     };
 
+    if opts.parallel {
+        engine.executor = Executor::spmd_for(&engine.topo);
+    }
+
     println!(
-        "layer: {} experts, d_model {}, d_ffn {}, {} tokens/source, cap {} (backend: {})",
+        "layer: {} experts, d_model {}, d_ffn {}, {} tokens/source, cap {} (backend: {}, {})",
         engine.dims.experts,
         engine.dims.d_model,
         engine.dims.d_ffn,
         engine.dims.tokens,
         engine.dims.cap,
-        engine.backend()
+        engine.backend(),
+        match engine.executor {
+            Executor::Sequential => "sequential".to_string(),
+            Executor::Spmd { threads, .. } => format!("spmd x{threads}"),
+        }
     );
 
+    // Spans run between checkpoint boundaries so both executors share one
+    // driver loop (the SPMD executor keeps its rank threads alive for the
+    // whole span and syncs state back at span exit).
     let end = step + opts.iters as u64;
     while step < end {
-        let s = engine.step(step, sources)?;
-        println!(
-            "iter {step:>3}  loss {:.5}  λ={:.2}  replicas {}  remote_tokens {}  straggler {:.2}",
-            s.loss, s.spag_sparsity, s.replicas, s.remote_tokens, s.straggler
-        );
-        step += 1;
+        let span = if opts.checkpoint_every > 0 {
+            let ce = opts.checkpoint_every as u64;
+            let next_ckpt = (step / ce + 1) * ce;
+            (end.min(next_ckpt) - step) as usize
+        } else {
+            (end - step) as usize
+        };
+        let stats = engine.run_span(step, span, sources)?;
+        for (k, s) in stats.iter().enumerate() {
+            let it = step + k as u64;
+            println!(
+                "iter {it:>3}  loss {:.5}  λ={:.2}  replicas {}  remote_tokens {}  straggler {:.2}",
+                s.loss, s.spag_sparsity, s.replicas, s.remote_tokens, s.straggler
+            );
+        }
+        step += span as u64;
         if opts.checkpoint_every > 0 && step % opts.checkpoint_every as u64 == 0 {
             let dir = opts.checkpoint_dir.as_deref().expect("validated at entry");
             let info = checkpoint::save(
@@ -663,6 +842,15 @@ pub fn run_demo_with(artifact_dir: &str, opts: &RunOpts) -> anyhow::Result<()> {
                 info.total_bytes as f64 / 1e6
             );
         }
+    }
+    if let Some(m) = engine.spmd_metrics() {
+        println!(
+            "spmd: compute {:?} | spag wait {:?} | gate+exchange {:?} | sprs {:?} (summed over ranks)",
+            m.timer("spmd.compute"),
+            m.timer("spmd.spag_wait"),
+            m.timer("spmd.gate"),
+            m.timer("spmd.sprs")
+        );
     }
     // Final snapshot when a checkpoint dir is configured.
     if let Some(dir) = &opts.checkpoint_dir {

@@ -24,6 +24,12 @@
 //! it **elastically** — an N-device run restarts on M devices by re-running
 //! the sharding planner, with numerically identical training.
 //!
+//! Execution is pluggable: the numeric engine runs either sequentially
+//! (the oracle) or on the [`spmd`] parallel executor — one OS thread per
+//! simulated rank over an in-process communicator, with overlapped sparse
+//! collectives — producing bit-identical expert parameters
+//! (`hecate fssdp --reference --parallel`).
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every paper table/figure to a module and bench target.
 
@@ -53,6 +59,7 @@ pub mod placement;
 pub mod runtime;
 pub mod sharding;
 pub mod sim;
+pub mod spmd;
 pub mod systems;
 pub mod testing;
 pub mod topology;

@@ -24,6 +24,25 @@ impl Metrics {
         self.counters.get(name).copied().unwrap_or(0.0)
     }
 
+    /// Accumulate an externally measured duration (for call sites where a
+    /// closure does not fit, e.g. `?`-heavy phases of the SPMD rank loop).
+    pub fn add_duration(&mut self, name: &str, d: Duration) {
+        *self.timers.entry(name.to_string()).or_default() += d;
+    }
+
+    /// Merge another metrics set into this one, summing counters and
+    /// timers. This is the multi-rank aggregation path: each SPMD rank
+    /// records into a local `Metrics` (no locks on the hot path) and the
+    /// executor merges them after the span.
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_default() += v;
+        }
+        for (k, v) in &other.timers {
+            *self.timers.entry(k.clone()).or_default() += *v;
+        }
+    }
+
     pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
         let t0 = Instant::now();
         let out = f();
@@ -129,6 +148,30 @@ mod tests {
         });
         assert_eq!(v, 42);
         assert!(m.timer("work") >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn merge_sums_counters_and_timers() {
+        let mut a = Metrics::new();
+        a.add("tokens", 10.0);
+        a.add("groups", 2.0);
+        a.add_duration("compute", Duration::from_millis(30));
+        let mut b = Metrics::new();
+        b.add("tokens", 5.0);
+        b.add("sends", 7.0);
+        b.add_duration("compute", Duration::from_millis(20));
+        b.add_duration("comm", Duration::from_millis(4));
+        a.merge(&b);
+        assert_eq!(a.counter("tokens"), 15.0);
+        assert_eq!(a.counter("groups"), 2.0);
+        assert_eq!(a.counter("sends"), 7.0);
+        assert_eq!(a.timer("compute"), Duration::from_millis(50));
+        assert_eq!(a.timer("comm"), Duration::from_millis(4));
+        // merge with empty is identity
+        let snapshot = a.clone();
+        a.merge(&Metrics::new());
+        assert_eq!(a.counter("tokens"), snapshot.counter("tokens"));
+        assert_eq!(a.timer("compute"), snapshot.timer("compute"));
     }
 
     #[test]

@@ -1,5 +1,13 @@
-//! Discrete-event per-iteration simulator (placeholder — filled by the
-//! systems/simulator milestone).
+//! Discrete-event per-iteration cluster simulator.
+//!
+//! * [`engine`] — prices one training iteration of a system/model/cluster
+//!   combination (compute, AllToAll, sparse collectives, rearrangement)
+//!   via the α–β topology model, including fault-injection replay
+//!   (`simulate_with_faults`).
+//! * [`report`] — figure/table drivers reproducing the paper's artifacts
+//!   (Table 1, Figures 3 and 9–15, §1 claims), the recovery/MTTR sweep,
+//!   and the SPMD thread-scaling sweep that pairs the modeled per-iteration
+//!   times with measured wall clock from the parallel executor.
 
 pub mod engine;
 pub mod report;

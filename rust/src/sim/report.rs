@@ -302,6 +302,63 @@ pub fn recovery_table(
     t
 }
 
+/// SPMD thread-scaling sweep (`hecate bench spmd`): the reference numeric
+/// engine run sequentially and on the SPMD executor at 1/2/4/8 ranks.
+/// The `modeled_comm_ms` column is the α–β bottleneck prediction (Eq. 1)
+/// for the first iteration's spAG+spRS; the `*_ms_per_iter` columns are
+/// **measured wall clock** on this host — the simulator's modeled times
+/// paired with physically executed ones, per the SPMD milestone.
+pub fn spmd_scaling(iters: usize, quick: bool) -> anyhow::Result<Table> {
+    use crate::fssdp::{build_iter_plan, Executor, FssdpEngine, LayerDims};
+    use crate::materialize::MatConstraints;
+    use std::time::Instant;
+
+    let dims = if quick {
+        crate::fssdp::reference_dims()
+    } else {
+        // big enough that expert compute dominates thread overhead
+        LayerDims { tokens: 128, d_model: 64, d_ffn: 128, experts: 16, cap: 32 }
+    };
+    let iters = iters.max(1);
+    let mut t = Table::new(&[
+        "threads", "modeled_comm_ms", "seq_ms_per_iter", "spmd_ms_per_iter", "speedup",
+    ]);
+    for &d in &[1usize, 2, 4, 8] {
+        let topo =
+            if d == 1 { Topology::flat(1, 150e9) } else { Topology::cluster_a(2, d / 2) };
+        let sources = d; // weak scaling: one logical data shard per rank
+        // modeled: first-iteration collectives under the cold-start
+        // (uniform) prediction, priced by the bottleneck analysis
+        let mut probe = FssdpEngine::new_reference(dims, topo.clone(), 11);
+        let uniform = vec![1.0 / dims.experts as f64; dims.experts];
+        let plan = build_iter_plan(
+            &topo,
+            probe.shards(),
+            &uniform,
+            MatConstraints { overlap_degree: probe.overlap_degree, mem_slots: probe.mem_slots },
+        )?;
+        let chunk_bytes = dims.chunk_len() as f64 * 4.0;
+        let modeled = plan.spag.time(&topo, chunk_bytes) + plan.sprs.time(&topo, chunk_bytes);
+        // measured: same workload, both executors
+        let t0 = Instant::now();
+        probe.run_span(0, iters, sources)?;
+        let seq = t0.elapsed().as_secs_f64() / iters as f64;
+        let mut par = FssdpEngine::new_reference(dims, topo, 11);
+        par.executor = Executor::Spmd { threads: d, overlap: true };
+        let t0 = Instant::now();
+        par.run_span(0, iters, sources)?;
+        let spmd = t0.elapsed().as_secs_f64() / iters as f64;
+        t.row(vec![
+            d.to_string(),
+            format!("{:.4}", modeled * 1e3),
+            ms(seq),
+            ms(spmd),
+            fmt(seq / spmd.max(1e-12)),
+        ]);
+    }
+    Ok(t)
+}
+
 /// §1 claims: EP imbalance slowdown; FlexMoE reserve-vs-speedup; SmartMoE
 /// rearrangement-frequency tradeoff.
 pub fn claims(opts: &SimOptions) -> Vec<(String, Table)> {
@@ -455,6 +512,16 @@ mod tests {
         assert_eq!(c.len(), 3);
         for (name, t) in &c {
             assert!(!t.rows.is_empty(), "{name}");
+        }
+    }
+
+    #[test]
+    fn spmd_scaling_smoke() {
+        let t = spmd_scaling(1, true).unwrap();
+        assert_eq!(t.header[1], "modeled_comm_ms");
+        assert_eq!(t.rows.len(), 4);
+        for row in &t.rows {
+            assert!(row[4].parse::<f64>().unwrap() > 0.0, "speedup column: {row:?}");
         }
     }
 }

@@ -1,0 +1,484 @@
+//! The in-process communicator: per-link mailboxes over `std::sync::mpsc`.
+//!
+//! Every pair of ranks is connected by a dedicated unbounded channel (the
+//! "link"), so sends never block and per-link FIFO order is guaranteed by
+//! the transport. On top of that the communicator provides MPI-style
+//! **tag matching**: a receive names `(source, Tag)` and consumes the
+//! first message on that link carrying the tag, stashing earlier arrivals
+//! with other tags for their own receives. Tags carry the iteration
+//! number, so ranks may run ahead (the overlap scheduler issues
+//! next-iteration spAG traffic while peers still compute) without any
+//! global barrier.
+//!
+//! Primitives:
+//! * [`RankComm::isend`] — nonblocking tagged send (never blocks; the
+//!   channel is unbounded).
+//! * [`RankComm::irecv`] / [`RankComm::wait`] / [`RankComm::try_wait`] —
+//!   nonblocking receive with a completion handle, blocking completion,
+//!   and polling completion.
+//! * [`RankComm::barrier`] — full-communicator barrier.
+//! * [`RankComm::allgather`] — each rank contributes one buffer, all
+//!   ranks receive all buffers (used for the gate-decision exchange).
+//!
+//! **Link pacing** (optional): with a [`Pacing`] config, each message is
+//! assigned a delivery instant from the α–β model of the topology,
+//! serialized on the contended resource — the sender's NVLink port /
+//! NIC and the receiver's — so bottleneck-link contention (Eq. 1) is
+//! physically reproduced in wall-clock time rather than only predicted.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::topology::Topology;
+
+/// Message classes multiplexed over one link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum MsgKind {
+    /// spAG parameter-chunk transfer (`a` = chunk, `b` = stage).
+    SpagChunk,
+    /// spRS gradient-chunk transfer (`a` = chunk, `b` = stage).
+    SprsChunk,
+    /// Gate-decision exchange (`a` = sending rank, `b` = 0).
+    Gate,
+    /// Free-form control/test traffic.
+    Ctrl,
+}
+
+/// Matching key of a message. Two messages on one link never share a tag
+/// within an iteration (the sparse plans contain at most one transfer per
+/// `(chunk, src, dst, stage)`), so matching is unambiguous.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Tag {
+    pub iter: u64,
+    pub kind: MsgKind,
+    /// Chunk id for collectives, sending rank for gate exchange.
+    pub a: usize,
+    /// Stage for collectives, 0 otherwise.
+    pub b: usize,
+}
+
+/// Completion handle of a posted receive.
+#[derive(Debug, Clone, Copy)]
+pub struct Recv {
+    pub src: usize,
+    pub tag: Tag,
+}
+
+struct Envelope {
+    tag: Tag,
+    data: Vec<f32>,
+    /// With pacing: the modeled delivery instant (the transfer is "on the
+    /// wire" until then).
+    ready_at: Option<Instant>,
+}
+
+/// α–β link pacing configuration (all times in seconds, bandwidth in
+/// bytes/s). `time_scale` maps modeled seconds to real seconds so that
+/// GPU-cluster bandwidths produce observable wall-clock effects.
+#[derive(Debug, Clone, Copy)]
+pub struct Pacing {
+    pub devices_per_node: usize,
+    pub intra_bw: f64,
+    pub inter_bw: f64,
+    pub intra_lat: f64,
+    pub inter_lat: f64,
+    pub time_scale: f64,
+}
+
+impl Pacing {
+    /// Derive pacing from a topology's α–β parameters.
+    pub fn from_topology(t: &Topology, time_scale: f64) -> Pacing {
+        Pacing {
+            devices_per_node: t.devices_per_node,
+            intra_bw: t.intra_bw,
+            inter_bw: t.inter_bw,
+            intra_lat: t.intra_lat,
+            inter_lat: t.inter_lat,
+            time_scale,
+        }
+    }
+
+    /// Uniform single-switch pacing (tests): every transfer of `bytes`
+    /// bytes occupies its src/dst ports for `secs_per_msg(bytes)` seconds.
+    pub fn uniform(n_bytes_per_sec: f64, lat: f64) -> Pacing {
+        Pacing {
+            devices_per_node: usize::MAX,
+            intra_bw: n_bytes_per_sec,
+            inter_bw: n_bytes_per_sec,
+            intra_lat: lat,
+            inter_lat: lat,
+            time_scale: 1.0,
+        }
+    }
+}
+
+/// Shared pacing clocks: per-device port and per-node NIC busy-until
+/// times, in modeled seconds since `epoch`.
+struct Clocks {
+    dev_out: Vec<f64>,
+    dev_in: Vec<f64>,
+    nic_out: Vec<f64>,
+    nic_in: Vec<f64>,
+}
+
+struct Pacer {
+    cfg: Pacing,
+    epoch: Instant,
+    clocks: Mutex<Clocks>,
+}
+
+impl Pacer {
+    fn new(cfg: Pacing, n: usize) -> Pacer {
+        let dpn = cfg.devices_per_node.max(1);
+        let nodes = if dpn >= n { 1 } else { (n + dpn - 1) / dpn };
+        Pacer {
+            cfg,
+            epoch: Instant::now(),
+            clocks: Mutex::new(Clocks {
+                dev_out: vec![0.0; n],
+                dev_in: vec![0.0; n],
+                nic_out: vec![0.0; nodes],
+                nic_in: vec![0.0; nodes],
+            }),
+        }
+    }
+
+    /// Reserve the contended resources for a `bytes`-byte transfer and
+    /// return its delivery instant: the transfer starts when both the
+    /// source's egress and the destination's ingress are free, and holds
+    /// both for its α–β duration (serialization on the bottleneck link).
+    fn schedule(&self, src: usize, dst: usize, bytes: f64) -> Instant {
+        let dpn = self.cfg.devices_per_node.max(1);
+        let same_node = src / dpn == dst / dpn;
+        let (bw, lat) = if same_node {
+            (self.cfg.intra_bw, self.cfg.intra_lat)
+        } else {
+            (self.cfg.inter_bw, self.cfg.inter_lat)
+        };
+        let dur = (lat + bytes / bw.max(1.0)) * self.cfg.time_scale;
+        let now = self.epoch.elapsed().as_secs_f64();
+        let mut c = self.clocks.lock().expect("pacer lock poisoned");
+        let fin = if same_node {
+            let start = now.max(c.dev_out[src]).max(c.dev_in[dst]);
+            let fin = start + dur;
+            c.dev_out[src] = fin;
+            c.dev_in[dst] = fin;
+            fin
+        } else {
+            let (sn, dn) = (src / dpn, dst / dpn);
+            let start = now.max(c.nic_out[sn]).max(c.nic_in[dn]);
+            let fin = start + dur;
+            c.nic_out[sn] = fin;
+            c.nic_in[dn] = fin;
+            fin
+        };
+        self.epoch + Duration::from_secs_f64(fin)
+    }
+}
+
+/// One rank's endpoint of the communicator.
+pub struct RankComm {
+    pub me: usize,
+    n: usize,
+    tx: Vec<Sender<Envelope>>,
+    rx: Vec<Receiver<Envelope>>,
+    /// Arrived-but-unmatched messages, per source link.
+    stash: Vec<VecDeque<Envelope>>,
+    barrier: Arc<Barrier>,
+    pacer: Option<Arc<Pacer>>,
+}
+
+/// Build the full n×n mailbox fabric; element `r` is rank `r`'s endpoint.
+pub fn fabric(n: usize, pacing: Option<Pacing>) -> Vec<RankComm> {
+    assert!(n > 0, "communicator needs at least one rank");
+    // Channel (src → dst): src holds the Sender, dst the Receiver.
+    // senders[src][dst] / receivers[dst][src] — the nested loops append
+    // exactly one entry per (src, dst) pair to each side, in index order.
+    let mut senders: Vec<Vec<Sender<Envelope>>> = (0..n).map(|_| Vec::with_capacity(n)).collect();
+    let mut receivers: Vec<Vec<Receiver<Envelope>>> =
+        (0..n).map(|_| Vec::with_capacity(n)).collect();
+    for src in 0..n {
+        for dst in 0..n {
+            let (tx, rx) = channel();
+            senders[src].push(tx); // appended at index dst
+            receivers[dst].push(rx); // appended at index src
+        }
+    }
+    let barrier = Arc::new(Barrier::new(n));
+    let pacer = pacing.map(|p| Arc::new(Pacer::new(p, n)));
+    let mut out = Vec::with_capacity(n);
+    for (me, (tx, rx)) in senders.into_iter().zip(receivers).enumerate() {
+        out.push(RankComm {
+            me,
+            n,
+            tx,
+            rx,
+            stash: (0..n).map(|_| VecDeque::new()).collect(),
+            barrier: Arc::clone(&barrier),
+            pacer: pacer.clone(),
+        });
+    }
+    out
+}
+
+fn deliver(env: Envelope) -> Vec<f32> {
+    if let Some(t) = env.ready_at {
+        let now = Instant::now();
+        if t > now {
+            std::thread::sleep(t - now);
+        }
+    }
+    env.data
+}
+
+impl RankComm {
+    /// Number of ranks in the communicator.
+    pub fn num_ranks(&self) -> usize {
+        self.n
+    }
+
+    /// Nonblocking tagged send. Never blocks (unbounded link); errors only
+    /// if the destination rank has died (its receiver was dropped).
+    pub fn isend(&self, dst: usize, tag: Tag, data: Vec<f32>) -> anyhow::Result<()> {
+        let ready_at =
+            self.pacer.as_ref().map(|p| p.schedule(self.me, dst, data.len() as f64 * 4.0));
+        self.tx[dst].send(Envelope { tag, data, ready_at }).map_err(|_| {
+            anyhow::anyhow!("rank {}: link to rank {dst} closed (peer rank died)", self.me)
+        })
+    }
+
+    /// Post a receive; complete it with [`RankComm::wait`] or
+    /// [`RankComm::try_wait`].
+    pub fn irecv(&self, src: usize, tag: Tag) -> Recv {
+        Recv { src, tag }
+    }
+
+    /// Blocking completion of a posted receive.
+    pub fn wait(&mut self, r: Recv) -> anyhow::Result<Vec<f32>> {
+        if let Some(i) = self.stash[r.src].iter().position(|e| e.tag == r.tag) {
+            let env = self.stash[r.src].remove(i).expect("index valid");
+            return Ok(deliver(env));
+        }
+        loop {
+            let env = self.rx[r.src].recv().map_err(|_| {
+                anyhow::anyhow!(
+                    "rank {}: link from rank {} closed while waiting for {:?}",
+                    self.me,
+                    r.src,
+                    r.tag
+                )
+            })?;
+            if env.tag == r.tag {
+                return Ok(deliver(env));
+            }
+            self.stash[r.src].push_back(env);
+        }
+    }
+
+    /// Polling completion: `Ok(None)` if the message has not arrived (or,
+    /// under pacing, is still on the wire). Errors if the link is closed
+    /// and the message can no longer arrive.
+    pub fn try_wait(&mut self, r: Recv) -> anyhow::Result<Option<Vec<f32>>> {
+        let mut closed = false;
+        loop {
+            match self.rx[r.src].try_recv() {
+                Ok(env) => self.stash[r.src].push_back(env),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    closed = true;
+                    break;
+                }
+            }
+        }
+        if let Some(i) = self.stash[r.src].iter().position(|e| e.tag == r.tag) {
+            if let Some(t) = self.stash[r.src][i].ready_at {
+                if t > Instant::now() {
+                    return Ok(None); // still on the wire
+                }
+            }
+            let env = self.stash[r.src].remove(i).expect("index valid");
+            return Ok(Some(env.data));
+        }
+        if closed {
+            anyhow::bail!(
+                "rank {}: link from rank {} closed; {:?} will never arrive",
+                self.me,
+                r.src,
+                r.tag
+            );
+        }
+        Ok(None)
+    }
+
+    /// Blocking tagged receive (`irecv` + `wait`).
+    pub fn recv(&mut self, src: usize, tag: Tag) -> anyhow::Result<Vec<f32>> {
+        let r = self.irecv(src, tag);
+        self.wait(r)
+    }
+
+    /// Full-communicator barrier.
+    pub fn barrier(&self) {
+        self.barrier.wait();
+    }
+
+    /// Each rank contributes one buffer; returns all ranks' buffers
+    /// indexed by rank. Tag disambiguation: `(iter, kind, sender, 0)`.
+    pub fn allgather(
+        &mut self,
+        iter: u64,
+        kind: MsgKind,
+        mine: Vec<f32>,
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        for dst in 0..self.n {
+            if dst != self.me {
+                self.isend(dst, Tag { iter, kind, a: self.me, b: 0 }, mine.clone())?;
+            }
+        }
+        let mut out: Vec<Vec<f32>> = Vec::with_capacity(self.n);
+        for src in 0..self.n {
+            if src == self.me {
+                out.push(mine.clone());
+            } else {
+                out.push(self.recv(src, Tag { iter, kind, a: src, b: 0 })?);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn tag(iter: u64, a: usize) -> Tag {
+        Tag { iter, kind: MsgKind::Ctrl, a, b: 0 }
+    }
+
+    #[test]
+    fn out_of_order_tag_matching() {
+        let mut comms = fabric(2, None);
+        let mut c1 = comms.remove(1);
+        let c0 = comms.remove(0);
+        let sender = thread::spawn(move || {
+            // sent B-first, received A-first
+            c0.isend(1, tag(0, 7), vec![7.0]).unwrap();
+            c0.isend(1, tag(0, 3), vec![3.0]).unwrap();
+            c0 // keep the link alive until the receiver is done
+        });
+        assert_eq!(c1.recv(0, tag(0, 3)).unwrap(), vec![3.0]);
+        assert_eq!(c1.recv(0, tag(0, 7)).unwrap(), vec![7.0]);
+        sender.join().unwrap();
+    }
+
+    #[test]
+    fn cross_iteration_runahead_is_stashed() {
+        let mut comms = fabric(2, None);
+        let mut c1 = comms.remove(1);
+        let c0 = comms.remove(0);
+        let sender = thread::spawn(move || {
+            c0.isend(1, tag(5, 0), vec![5.0]).unwrap(); // next iteration, early
+            c0.isend(1, tag(4, 0), vec![4.0]).unwrap();
+            c0
+        });
+        assert_eq!(c1.recv(0, tag(4, 0)).unwrap(), vec![4.0]);
+        assert_eq!(c1.recv(0, tag(5, 0)).unwrap(), vec![5.0]);
+        sender.join().unwrap();
+    }
+
+    #[test]
+    fn try_wait_polls_without_blocking() {
+        let mut comms = fabric(2, None);
+        let mut c1 = comms.remove(1);
+        let c0 = comms.remove(0);
+        let r = c1.irecv(0, tag(0, 1));
+        assert!(c1.try_wait(r).unwrap().is_none());
+        c0.isend(1, tag(0, 1), vec![1.5]).unwrap();
+        // the message is in flight on an unpaced link: it must arrive
+        let mut got = None;
+        for _ in 0..1000 {
+            got = c1.try_wait(r).unwrap();
+            if got.is_some() {
+                break;
+            }
+            thread::sleep(Duration::from_micros(50));
+        }
+        assert_eq!(got, Some(vec![1.5]));
+    }
+
+    #[test]
+    fn closed_link_errors_instead_of_hanging() {
+        let mut comms = fabric(2, None);
+        let mut c1 = comms.remove(1);
+        let c0 = comms.remove(0);
+        drop(c0); // rank 0 dies
+        assert!(c1.recv(0, tag(0, 0)).is_err());
+        let r = c1.irecv(0, tag(0, 0));
+        assert!(c1.try_wait(r).is_err());
+    }
+
+    #[test]
+    fn barrier_and_allgather() {
+        let n = 4;
+        let comms = fabric(n, None);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                thread::spawn(move || {
+                    c.barrier();
+                    let mine = vec![c.me as f32; c.me + 1];
+                    let all = c.allgather(9, MsgKind::Ctrl, mine).unwrap();
+                    c.barrier();
+                    all
+                })
+            })
+            .collect();
+        for h in handles {
+            let all = h.join().unwrap();
+            assert_eq!(all.len(), n);
+            for (r, buf) in all.iter().enumerate() {
+                assert_eq!(buf, &vec![r as f32; r + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn pacing_serializes_contended_link() {
+        // 1 kB at 10 kB/s = 100 ms per message. Two messages into the same
+        // destination port must serialize: the second completes ≥ ~200 ms
+        // after the first was scheduled.
+        let pacing = Pacing::uniform(10_000.0, 0.0);
+        let mut comms = fabric(3, Some(pacing));
+        let mut c2 = comms.remove(2);
+        let c1 = comms.remove(1);
+        let c0 = comms.remove(0);
+        let t0 = Instant::now();
+        c0.isend(2, tag(0, 0), vec![0.0; 250]).unwrap();
+        c1.isend(2, tag(0, 1), vec![0.0; 250]).unwrap();
+        c2.recv(0, tag(0, 0)).unwrap();
+        c2.recv(1, tag(0, 1)).unwrap();
+        let elapsed = t0.elapsed();
+        assert!(
+            elapsed >= Duration::from_millis(190),
+            "contended port did not serialize: {elapsed:?}"
+        );
+        drop((c0, c1));
+    }
+
+    #[test]
+    fn pacing_uncontended_is_single_transfer_time() {
+        let pacing = Pacing::uniform(10_000.0, 0.0);
+        let mut comms = fabric(2, Some(pacing));
+        let mut c1 = comms.remove(1);
+        let c0 = comms.remove(0);
+        let t0 = Instant::now();
+        c0.isend(1, tag(0, 0), vec![0.0; 250]).unwrap(); // 100 ms
+        c1.recv(0, tag(0, 0)).unwrap();
+        let elapsed = t0.elapsed();
+        assert!(elapsed >= Duration::from_millis(90), "pacing too fast: {elapsed:?}");
+        assert!(elapsed < Duration::from_millis(500), "pacing too slow: {elapsed:?}");
+        drop(c0);
+    }
+}

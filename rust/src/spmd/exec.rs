@@ -1,0 +1,405 @@
+//! Per-rank execution of the sparse collectives over the communicator.
+//!
+//! [`crate::collectives::exec`] applies a [`SparsePlan`] to all device
+//! memories in one sequential loop; this module is the SPMD port: every
+//! rank walks the *same* plan but only acts on transfers it sources
+//! (isend) or sinks (receive + insert/accumulate), staged exactly as the
+//! plan's `stage` field dictates.
+//!
+//! Determinism contract (bit-exactness vs the sequential executor):
+//!
+//! * **spAG** only copies buffers — any completion order is bit-identical.
+//! * **spRS** accumulates. The sequential executor applies a stage's
+//!   transfers in plan order; [`run_sprs_rank`] therefore completes a
+//!   rank's incoming reduces of each stage *in plan order*, which is the
+//!   same per-buffer floating-point order (transfers into one buffer are
+//!   totally ordered by (stage, plan index) in both executors).
+//!
+//! Deadlock freedom:
+//!
+//! * [`run_sprs_rank`] is stage-synchronous per rank: all stage-`s` sends
+//!   are issued (nonblocking) before any stage-`s` receive blocks, and
+//!   stage `s` receives depend only on stage-`s` sends, which every rank
+//!   issues after completing stage `s-1` — an acyclic stage DAG.
+//! * [`RankSpag`] (the overlapped spAG) never blocks on one message: it
+//!   polls all outstanding receives, forwarding fan-out sends as chunks
+//!   land, so a rank stalled on a late chunk still serves its own
+//!   forwarding duties. See `DESIGN.md` (SPMD executor).
+
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+use crate::collectives::exec::ChunkStore;
+use crate::collectives::sparse::{SparsePlan, Transfer};
+use crate::placement::{ChunkId, Placement};
+use crate::topology::DeviceId;
+
+use super::comm::{MsgKind, RankComm, Tag};
+
+/// Poll interval while waiting for in-flight spAG chunks.
+const POLL: Duration = Duration::from_micros(20);
+
+fn spag_tag(iter: u64, t: &Transfer) -> Tag {
+    Tag { iter, kind: MsgKind::SpagChunk, a: t.chunk, b: t.stage }
+}
+
+fn sprs_tag(iter: u64, t: &Transfer) -> Tag {
+    Tag { iter, kind: MsgKind::SprsChunk, a: t.chunk, b: t.stage }
+}
+
+/// One rank's in-flight SparseAllGather: issue sends up front, complete
+/// receives lazily (the overlap scheduler pulls chunks in the order expert
+/// compute needs them), forward fan-out transfers as their chunks arrive.
+pub struct RankSpag<'p> {
+    plan: &'p SparsePlan,
+    me: usize,
+    iter: u64,
+    /// Plan indices of transfers destined to this rank, not yet received.
+    pending_recv: Vec<usize>,
+    /// Plan indices of transfers sourced here whose chunk was not resident
+    /// at issue time (intra-node fan-out from a chunk we first receive).
+    pending_send: Vec<usize>,
+}
+
+impl<'p> RankSpag<'p> {
+    /// Register this rank's slice of the plan and immediately issue every
+    /// send whose source buffer is already resident. `pre_issued` lists
+    /// `(chunk, dst)` transfers the overlap scheduler already sent during
+    /// the previous iteration (eager re-materialization) — they are
+    /// skipped here, their data is already in flight.
+    pub fn begin(
+        plan: &'p SparsePlan,
+        me: usize,
+        iter: u64,
+        store: &ChunkStore,
+        comm: &RankComm,
+        pre_issued: &BTreeSet<(ChunkId, usize)>,
+    ) -> anyhow::Result<RankSpag<'p>> {
+        let mut s =
+            RankSpag { plan, me, iter, pending_recv: Vec::new(), pending_send: Vec::new() };
+        for (ti, t) in plan.transfers.iter().enumerate() {
+            anyhow::ensure!(!t.reduce, "spAG plan must not contain reduce transfers");
+            if t.dst.0 == me {
+                s.pending_recv.push(ti);
+            }
+            if t.src.0 == me {
+                if pre_issued.contains(&(t.chunk, t.dst.0)) {
+                    continue;
+                }
+                if let Some(buf) = store.get(t.chunk) {
+                    comm.isend(t.dst.0, spag_tag(iter, t), buf.clone())?;
+                } else {
+                    s.pending_send.push(ti);
+                }
+            }
+        }
+        Ok(s)
+    }
+
+    /// Outstanding receives (0 once fully materialized).
+    pub fn outstanding(&self) -> usize {
+        self.pending_recv.len()
+    }
+
+    /// Complete receives until `chunk` is resident (lazy materialization:
+    /// called right before expert compute needs the replica).
+    pub fn ensure(
+        &mut self,
+        store: &mut ChunkStore,
+        comm: &mut RankComm,
+        chunk: ChunkId,
+    ) -> anyhow::Result<()> {
+        self.progress(store, comm, Some(chunk))
+    }
+
+    /// Complete every outstanding receive and forwarding duty.
+    pub fn finish(&mut self, store: &mut ChunkStore, comm: &mut RankComm) -> anyhow::Result<()> {
+        self.progress(store, comm, None)
+    }
+
+    fn progress(
+        &mut self,
+        store: &mut ChunkStore,
+        comm: &mut RankComm,
+        want: Option<ChunkId>,
+    ) -> anyhow::Result<()> {
+        if let Some(c) = want {
+            let inbound =
+                self.pending_recv.iter().any(|&ti| self.plan.transfers[ti].chunk == c);
+            if !store.contains(c) && !inbound {
+                anyhow::bail!(
+                    "rank {}: chunk {c} neither resident nor inbound in the spAG plan",
+                    self.me
+                );
+            }
+        }
+        loop {
+            let done = match want {
+                Some(c) => store.contains(c),
+                None => self.pending_recv.is_empty(),
+            };
+            if done {
+                return Ok(());
+            }
+            // Poll every outstanding receive (never block on one message:
+            // forwarding duties for other chunks must stay serviceable).
+            let mut advanced = false;
+            let mut i = 0;
+            while i < self.pending_recv.len() {
+                let t = self.plan.transfers[self.pending_recv[i]];
+                let r = comm.irecv(t.src.0, spag_tag(self.iter, &t));
+                if let Some(buf) = comm.try_wait(r)? {
+                    store.insert(t.chunk, buf);
+                    self.pending_recv.remove(i);
+                    self.flush_sends(store, comm, t.chunk)?;
+                    advanced = true;
+                } else {
+                    i += 1;
+                }
+            }
+            if !advanced {
+                std::thread::sleep(POLL);
+            }
+        }
+    }
+
+    /// Issue deferred fan-out sends of a chunk that just became resident.
+    fn flush_sends(
+        &mut self,
+        store: &ChunkStore,
+        comm: &RankComm,
+        chunk: ChunkId,
+    ) -> anyhow::Result<()> {
+        let mut i = 0;
+        while i < self.pending_send.len() {
+            let t = self.plan.transfers[self.pending_send[i]];
+            if t.chunk == chunk {
+                let buf = store.get(chunk).expect("chunk just inserted").clone();
+                comm.isend(t.dst.0, spag_tag(self.iter, &t), buf)?;
+                self.pending_send.remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// This rank's slice of a SparseAllGather, start to finish (the
+/// non-overlapped path and the microbenchmarks).
+pub fn run_spag_rank(
+    store: &mut ChunkStore,
+    plan: &SparsePlan,
+    me: usize,
+    iter: u64,
+    comm: &mut RankComm,
+) -> anyhow::Result<()> {
+    let mut s = RankSpag::begin(plan, me, iter, store, comm, &BTreeSet::new())?;
+    s.finish(store, comm)
+}
+
+/// This rank's slice of a SparseReduceScatter: stage-synchronous sends and
+/// plan-ordered receive/accumulate, then release of non-owner replicas.
+/// Matches [`crate::collectives::exec::run_sprs`] bit-for-bit on the owner
+/// buffers (same per-buffer accumulation order).
+pub fn run_sprs_rank(
+    store: &mut ChunkStore,
+    plan: &SparsePlan,
+    owners: &Placement,
+    me: usize,
+    iter: u64,
+    comm: &mut RankComm,
+) -> anyhow::Result<()> {
+    for stage in 0..plan.num_stages {
+        // Sends first (nonblocking): they must read pre-stage state, and
+        // issuing before any receive of this stage keeps the stage DAG
+        // acyclic across ranks.
+        for t in plan.transfers.iter().filter(|t| t.stage == stage && t.src.0 == me) {
+            let buf = store
+                .get(t.chunk)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("spRS rank {me}: missing source chunk {}", t.chunk)
+                })?
+                .clone();
+            comm.isend(t.dst.0, sprs_tag(iter, t), buf)?;
+        }
+        // Receives in plan order — the sequential executor's accumulation
+        // order per destination buffer.
+        for t in plan.transfers.iter().filter(|t| t.stage == stage && t.dst.0 == me) {
+            let buf = comm.recv(t.src.0, sprs_tag(iter, t))?;
+            if t.reduce {
+                let acc = store.get_mut(t.chunk).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "spRS rank {me}: reduce destination lacks chunk {}",
+                        t.chunk
+                    )
+                })?;
+                anyhow::ensure!(acc.len() == buf.len(), "chunk size mismatch");
+                for (a, b) in acc.iter_mut().zip(buf.iter()) {
+                    *a += b;
+                }
+            } else {
+                store.insert(t.chunk, buf);
+            }
+        }
+    }
+    // Scatter: release replicas not owned per the post-condition.
+    let resident: Vec<ChunkId> = store.chunks().collect();
+    for c in resident {
+        if !owners.contains(c, DeviceId(me)) {
+            store.remove(c);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::exec::{run_spag, run_sprs, ClusterMem};
+    use crate::collectives::sparse::{build_spag, build_sprs};
+    use crate::spmd::comm::fabric;
+    use crate::topology::Topology;
+    use crate::util::rng::Rng;
+
+    fn fill(mem: &mut ClusterMem, p: &Placement, len: usize, rng: &mut Rng) {
+        for c in 0..p.num_chunks() {
+            for d in p.holders(c) {
+                let buf: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+                mem.dev_mut(d).insert(c, buf);
+            }
+        }
+    }
+
+    fn random_post(pre: &Placement, extra: usize, seed: u64) -> Placement {
+        let mut rng = Rng::new(seed);
+        let mut post = pre.clone();
+        for _ in 0..extra {
+            post.add(rng.below(pre.num_chunks()), DeviceId(rng.below(pre.num_devices())));
+        }
+        post
+    }
+
+    /// Run each rank's slice on its own OS thread; returns the stores.
+    fn run_ranks<F>(stores: Vec<ChunkStore>, f: F) -> Vec<ChunkStore>
+    where
+        F: Fn(usize, &mut ChunkStore, &mut RankComm) -> anyhow::Result<()> + Sync,
+    {
+        let n = stores.len();
+        let comms = fabric(n, None);
+        std::thread::scope(|sc| {
+            let mut handles = Vec::with_capacity(n);
+            for (me, (mut store, mut comm)) in
+                stores.into_iter().zip(comms.into_iter()).enumerate()
+            {
+                let f = &f;
+                handles.push(sc.spawn(move || {
+                    f(me, &mut store, &mut comm).unwrap();
+                    store
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn rank_spag_matches_sequential() {
+        let t = Topology::cluster_a(2, 4);
+        let pre = Placement::round_robin(8, 8);
+        let post = random_post(&pre, 14, 3);
+        let plan = build_spag(&t, &pre, &post).unwrap();
+
+        let mut mem = ClusterMem::new(8);
+        let mut rng = Rng::new(1);
+        fill(&mut mem, &pre, 16, &mut rng);
+
+        let mut seq = mem.clone();
+        run_spag(&mut seq, &plan).unwrap();
+
+        let stores = run_ranks(mem.devices.clone(), |me, store, comm| {
+            run_spag_rank(store, &plan, me, 0, comm)
+        });
+        for (d, (got, want)) in stores.iter().zip(seq.devices.iter()).enumerate() {
+            let gc: Vec<_> = got.chunks().collect();
+            let wc: Vec<_> = want.chunks().collect();
+            assert_eq!(gc, wc, "device {d} chunk set");
+            for c in gc {
+                assert_eq!(got.get(c).unwrap(), want.get(c).unwrap(), "device {d} chunk {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn rank_sprs_matches_sequential_bitwise() {
+        let t = Topology::cluster_a(2, 4);
+        let owners = Placement::round_robin(8, 8);
+        let materialized = random_post(&owners, 12, 7);
+        let plan = build_sprs(&t, &materialized, &owners).unwrap();
+
+        let mut grads = ClusterMem::new(8);
+        let mut rng = Rng::new(2);
+        fill(&mut grads, &materialized, 32, &mut rng);
+
+        let mut seq = grads.clone();
+        run_sprs(&mut seq, &plan, &owners).unwrap();
+
+        let stores = run_ranks(grads.devices.clone(), |me, store, comm| {
+            run_sprs_rank(store, &plan, &owners, me, 0, comm)
+        });
+        for c in 0..8 {
+            let owner = owners.holders(c).next().unwrap();
+            let got = stores[owner.0].get(c).unwrap();
+            let want = seq.dev(owner).get(c).unwrap();
+            assert_eq!(got, want, "owner sum of chunk {c} must be bit-identical");
+        }
+        // scatter: non-owners released
+        for (d, store) in stores.iter().enumerate() {
+            for c in store.chunks() {
+                assert!(owners.contains(c, DeviceId(d)), "device {d} kept chunk {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_ensure_pulls_chunks_on_demand() {
+        let t = Topology::cluster_a(2, 2);
+        let pre = Placement::round_robin(4, 4);
+        let mut post = pre.clone();
+        post.add(0, DeviceId(3)); // cross-node materialization
+        post.add(0, DeviceId(2)); // fan-out on node 1
+        post.add(1, DeviceId(2));
+        let plan = build_spag(&t, &pre, &post).unwrap();
+
+        let mut mem = ClusterMem::new(4);
+        let mut rng = Rng::new(9);
+        fill(&mut mem, &pre, 8, &mut rng);
+        let want0 = mem.dev(DeviceId(0)).get(0).unwrap().clone();
+        let want1 = mem.dev(DeviceId(1)).get(1).unwrap().clone();
+
+        let stores = run_ranks(mem.devices.clone(), |me, store, comm| {
+            let mut s = RankSpag::begin(&plan, me, 0, store, comm, &BTreeSet::new())?;
+            if me == 2 {
+                // pull in reverse plan order to exercise out-of-order ensure
+                s.ensure(store, comm, 1)?;
+                s.ensure(store, comm, 0)?;
+                assert_eq!(s.outstanding(), 0);
+            }
+            s.finish(store, comm)
+        });
+        assert_eq!(stores[2].get(0).unwrap(), &want0);
+        assert_eq!(stores[2].get(1).unwrap(), &want1);
+        assert_eq!(stores[3].get(0).unwrap(), &want0);
+    }
+
+    #[test]
+    fn ensure_unknown_chunk_errors() {
+        let t = Topology::flat(2, 1e9);
+        let pre = Placement::round_robin(2, 2);
+        let plan = build_spag(&t, &pre, &pre).unwrap(); // empty plan
+        let comms = fabric(1, None);
+        let mut comm = comms.into_iter().next().unwrap();
+        let mut store = ChunkStore::new();
+        let mut s = RankSpag::begin(&plan, 0, 0, &store, &comm, &BTreeSet::new()).unwrap();
+        assert!(s.ensure(&mut store, &mut comm, 1).is_err());
+    }
+}

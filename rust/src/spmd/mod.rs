@@ -1,0 +1,495 @@
+//! The SPMD parallel executor: run the numeric FSSDP engine with **one OS
+//! thread per simulated rank**, connected by an in-process communicator.
+//!
+//! The sequential engine ([`FssdpEngine::step`]) is the oracle: it walks
+//! all N device memories in one loop. This module executes the *same*
+//! iteration — the same plans, the same kernels, the same floating-point
+//! orders — as N true SPMD programs:
+//!
+//! * [`comm`] — per-link mailboxes over `std::sync::mpsc` with MPI-style
+//!   tag matching, barrier, nonblocking `isend`/`irecv` + completion
+//!   handles, and optional α–β link pacing.
+//! * [`exec`] — per-rank spAG/spRS execution ([`exec::run_spag_rank`],
+//!   [`exec::run_sprs_rank`]), staged exactly as the compiled
+//!   [`SparsePlan`](crate::collectives::sparse::SparsePlan) dictates.
+//! * [`sched`] — the overlap scheduler: lazy replica materialization
+//!   during expert compute plus eager issue of the *next* iteration's
+//!   spAG right after each owner's Adam update (§4.3 re-materialization
+//!   overlap), with iteration-tagged messages instead of barriers.
+//!
+//! ## Determinism contract
+//!
+//! The parallel executor produces **bit-identical** expert parameters to
+//! the sequential engine at the same seed because:
+//!
+//! 1. All control-plane state (predictor window, shard map, gate weights)
+//!    is replicated and updated deterministically from globally exchanged
+//!    gate decisions — every rank computes the same
+//!    [`IterPlan`](crate::fssdp) and route map redundantly.
+//! 2. Token batches are deterministic in `(iter, source)`, so ranks
+//!    regenerate remote tokens locally; only gate decisions and chunk
+//!    buffers cross the wire.
+//! 3. Every floating-point accumulation order is preserved: gradient
+//!    buffers accumulate per `(device, expert)` in route order, spRS
+//!    reduces in plan order per destination, Adam is per-expert local.
+//!    (The global *loss* stat is a cross-rank f64 sum and may differ in
+//!    the last ulps; parameters never do.)
+//!
+//! `rust/tests/spmd_equivalence.rs` locks the contract, including resume
+//! from a checkpoint written under the other executor.
+
+pub mod comm;
+pub mod exec;
+pub(crate) mod sched;
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::collectives::exec::{ChunkStore, ClusterMem};
+use crate::dispatch::dispatch;
+use crate::fssdp::adam::{AdamCfg, AdamState};
+use crate::fssdp::compute::{Compute, Reference};
+use crate::fssdp::{
+    assignment_matrix, batch_for, build_iter_plan, compute_expert_key, realized_loads,
+    routes_from_gates, EngineStats, FssdpEngine, LayerDims,
+};
+use crate::loadsim::LoadPredictor;
+use crate::materialize::MatConstraints;
+use crate::metrics::Metrics;
+use crate::placement::Placement;
+use crate::runtime::HostTensor;
+use crate::topology::{DeviceId, Topology};
+
+use comm::{MsgKind, RankComm};
+use exec::{run_sprs_rank, RankSpag};
+use sched::{order_resident_first, Overlap};
+
+/// Everything one rank thread owns or borrows for a span.
+struct RankCtx<'a> {
+    me: usize,
+    nd: usize,
+    sources: usize,
+    start: u64,
+    iters: usize,
+    dims: LayerDims,
+    topo: &'a Topology,
+    shards: &'a Placement,
+    gate_w: &'a [f32],
+    adam: AdamCfg,
+    cons: MatConstraints,
+    overlap: bool,
+    /// This rank's expert-parameter shard (plus transient replicas).
+    store: ChunkStore,
+    /// Adam states of the experts this rank owns.
+    opt: BTreeMap<usize, AdamState>,
+    /// Replicated predictor clone (deterministically identical on every
+    /// rank; rank 0's copy is synced back to the engine).
+    predictor: LoadPredictor,
+    comm: RankComm,
+}
+
+/// Global per-iteration stats, computed redundantly on rank 0 only.
+struct GlobalStats {
+    sparsity: f64,
+    replicas: usize,
+    remote_tokens: usize,
+    straggler: f64,
+}
+
+/// What a rank thread hands back at span exit.
+struct RankOut {
+    store: ChunkStore,
+    opt: BTreeMap<usize, AdamState>,
+    predictor: LoadPredictor,
+    metrics: Metrics,
+    /// Per-iteration partial loss (this rank's route groups).
+    loss: Vec<f64>,
+    /// Rank 0 only; empty elsewhere.
+    global: Vec<GlobalStats>,
+}
+
+/// Run `iters` iterations of the engine on one thread per rank and sync
+/// the (bit-identical) state back into `engine`. Called through
+/// [`FssdpEngine::run_span`] with `Executor::Spmd`.
+pub fn run_span(
+    engine: &mut FssdpEngine,
+    start: u64,
+    iters: usize,
+    sources: usize,
+    threads: usize,
+    overlap: bool,
+) -> anyhow::Result<Vec<EngineStats>> {
+    let nd = engine.topo.num_devices();
+    anyhow::ensure!(
+        threads == nd,
+        "SPMD executor runs one OS thread per rank: {threads} threads != {nd} devices"
+    );
+    anyhow::ensure!(
+        matches!(engine.compute, Compute::Reference(_)),
+        "SPMD executor requires the hermetic reference backend \
+         (PJRT client handles cannot be shared across rank threads)"
+    );
+    if iters == 0 {
+        return Ok(Vec::new());
+    }
+
+    // Split the engine state per rank: each thread owns its device's chunk
+    // store and the Adam states of the experts it owns; replicated state
+    // is cloned (gate weights are frozen, the predictor evolves
+    // deterministically and identically on every rank).
+    let topo = engine.topo.clone();
+    let shards = engine.shards.clone();
+    let gate_w = engine.gate_w.clone();
+    let dims = engine.dims;
+    let adam = engine.adam;
+    let cons = MatConstraints { overlap_degree: engine.overlap_degree, mem_slots: engine.mem_slots };
+    let predictor = engine.predictor.clone();
+
+    // Rank threads get *copies* of the device memories and optimizer
+    // states, not the originals: if any rank fails, the engine keeps its
+    // pre-span state intact (a span either commits whole or not at all).
+    // One parameter-set copy per span is noise next to a span of steps.
+    let stores: Vec<ChunkStore> = engine.params.devices.clone();
+    anyhow::ensure!(stores.len() == nd, "engine memory does not match the topology");
+    let mut opts: Vec<BTreeMap<usize, AdamState>> = (0..nd).map(|_| BTreeMap::new()).collect();
+    for (e, st) in &engine.opt {
+        let owner = shards.holders(*e).next().expect("every expert has an owner");
+        opts[owner.0].insert(*e, st.clone());
+    }
+    let comms = comm::fabric(nd, None);
+
+    let mut ctxs: Vec<RankCtx> = Vec::with_capacity(nd);
+    for (me, ((store, opt), comm)) in
+        stores.into_iter().zip(opts).zip(comms).enumerate()
+    {
+        ctxs.push(RankCtx {
+            me,
+            nd,
+            sources,
+            start,
+            iters,
+            dims,
+            topo: &topo,
+            shards: &shards,
+            gate_w: &gate_w,
+            adam,
+            cons,
+            overlap,
+            store,
+            opt,
+            predictor: predictor.clone(),
+            comm,
+        });
+    }
+
+    let results: Vec<std::thread::Result<anyhow::Result<RankOut>>> =
+        std::thread::scope(|sc| {
+            let mut handles = Vec::with_capacity(nd);
+            for ctx in ctxs {
+                handles.push(sc.spawn(move || rank_main(ctx)));
+            }
+            handles.into_iter().map(|h| h.join()).collect()
+        });
+
+    // Surface the most informative failure: a rank's own error beats the
+    // secondary "link closed" errors its death caused on its peers.
+    let mut outs: Vec<RankOut> = Vec::with_capacity(nd);
+    let mut primary: Option<anyhow::Error> = None;
+    let mut secondary: Option<anyhow::Error> = None;
+    for (r, res) in results.into_iter().enumerate() {
+        match res {
+            Err(payload) => {
+                if primary.is_none() {
+                    let msg = payload
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "non-string panic payload".to_string());
+                    primary = Some(anyhow::anyhow!("SPMD rank {r} panicked: {msg}"));
+                }
+            }
+            Ok(Err(e)) => {
+                if e.to_string().contains("closed") {
+                    if secondary.is_none() {
+                        secondary = Some(e);
+                    }
+                } else if primary.is_none() {
+                    primary = Some(e);
+                }
+            }
+            Ok(Ok(o)) => outs.push(o),
+        }
+    }
+    if let Some(e) = primary.or(secondary) {
+        return Err(e);
+    }
+    anyhow::ensure!(outs.len() == nd, "SPMD span lost rank outputs");
+
+    // Merge per-rank state back into the engine.
+    let mut stats = vec![EngineStats::default(); iters];
+    let mut devices: Vec<ChunkStore> = Vec::with_capacity(nd);
+    let mut opt_all: BTreeMap<usize, AdamState> = BTreeMap::new();
+    let mut merged = Metrics::new();
+    for (r, out) in outs.into_iter().enumerate() {
+        let RankOut { store, opt, predictor, metrics, loss, global } = out;
+        anyhow::ensure!(loss.len() == iters, "rank {r} returned {} loss entries", loss.len());
+        for (i, l) in loss.iter().enumerate() {
+            stats[i].loss += *l;
+        }
+        if r == 0 {
+            engine.predictor = predictor;
+            for (i, g) in global.iter().enumerate() {
+                stats[i].spag_sparsity = g.sparsity;
+                stats[i].replicas = g.replicas;
+                stats[i].remote_tokens = g.remote_tokens;
+                stats[i].straggler = g.straggler;
+            }
+        }
+        devices.push(store);
+        opt_all.extend(opt);
+        merged.merge(&metrics);
+    }
+    merged.add("spmd.ranks", nd as f64);
+    engine.params = ClusterMem { devices };
+    engine.opt = opt_all;
+    engine.spmd_metrics = Some(merged);
+    Ok(stats)
+}
+
+/// The rank program: the body of [`FssdpEngine::step`], restricted to one
+/// rank's slice of the work, with communicator exchanges where the
+/// sequential engine touches other devices' memory.
+fn rank_main(mut ctx: RankCtx) -> anyhow::Result<RankOut> {
+    let me = ctx.me;
+    let nd = ctx.nd;
+    let dims = ctx.dims;
+    let mut compute = Compute::Reference(Reference);
+    let mut ov = Overlap::new(ctx.overlap);
+    let mut metrics = Metrics::new();
+    let mut losses: Vec<f64> = Vec::with_capacity(ctx.iters);
+    let mut global: Vec<GlobalStats> = Vec::new();
+    let gate_wt = HostTensor::f32(vec![dims.d_model, dims.experts], ctx.gate_w.to_vec());
+
+    for k in 0..ctx.iters {
+        let iter = ctx.start + k as u64;
+        let last = k + 1 == ctx.iters;
+
+        // ---- plan (replicated): predict → Algorithm 1 → spAG/spRS ----
+        let t0 = Instant::now();
+        let plan = match ov.next_plan.take() {
+            Some(p) => p,
+            None => build_iter_plan(ctx.topo, ctx.shards, &ctx.predictor.predict(), ctx.cons)?,
+        };
+        metrics.add_duration("spmd.plan", t0.elapsed());
+
+        // ---- spAG: issue our sends now; completion is lazy (overlap) or
+        //      immediate (synchronous collectives) ----
+        let pre_issued = std::mem::take(&mut ov.pre_issued);
+        let mut spag =
+            RankSpag::begin(&plan.spag, me, iter, &ctx.store, &ctx.comm, &pre_issued)?;
+        if !ov.enabled {
+            let t0 = Instant::now();
+            spag.finish(&mut ctx.store, &mut ctx.comm)?;
+            metrics.add_duration("spmd.spag_wait", t0.elapsed());
+        }
+
+        // ---- gate our sources; exchange decisions with every rank ----
+        let t0 = Instant::now();
+        let mut batches: Vec<Vec<f32>> = Vec::with_capacity(ctx.sources);
+        for s in 0..ctx.sources {
+            batches.push(batch_for(&dims, iter, s));
+        }
+        let mut gate_idx: Vec<Vec<i32>> = vec![Vec::new(); ctx.sources];
+        let mut gate_w_out: Vec<Vec<f32>> = vec![Vec::new(); ctx.sources];
+        let mut payload: Vec<f32> = Vec::new();
+        for s in 0..ctx.sources {
+            if s % nd != me {
+                continue;
+            }
+            let xt = HostTensor::f32(vec![dims.tokens, dims.d_model], batches[s].clone());
+            let out = compute.execute("gate_fwd", &[xt, gate_wt.clone()])?;
+            let w = out[1].as_f32()?.to_vec();
+            let idx = out[2].as_i32()?.to_vec();
+            payload.push(s as f32);
+            payload.extend_from_slice(&w);
+            payload.extend(idx.iter().map(|&v| v as f32));
+            gate_w_out[s] = w;
+            gate_idx[s] = idx;
+        }
+        let gathered = ctx.comm.allgather(iter, MsgKind::Gate, payload)?;
+        let rec = 1 + 4 * dims.tokens; // source id + 2T weights + 2T indices
+        for (r, buf) in gathered.iter().enumerate() {
+            if r == me {
+                continue;
+            }
+            anyhow::ensure!(buf.len() % rec == 0, "gate payload misaligned from rank {r}");
+            for record in buf.chunks(rec) {
+                let s = record[0] as usize;
+                anyhow::ensure!(s < ctx.sources && s % nd == r, "bogus gate source {s}");
+                gate_w_out[s] = record[1..1 + 2 * dims.tokens].to_vec();
+                gate_idx[s] =
+                    record[1 + 2 * dims.tokens..].iter().map(|&v| v as i32).collect();
+            }
+        }
+        metrics.add_duration("spmd.gate", t0.elapsed());
+
+        // ---- predictor update; next iteration's plan is now knowable,
+        //      which is what makes eager re-materialization sound ----
+        let realized = realized_loads(dims.experts, &gate_idx);
+        ctx.predictor.observe(&realized);
+        if ov.enabled && !last {
+            let t0 = Instant::now();
+            ov.next_plan =
+                Some(build_iter_plan(ctx.topo, ctx.shards, &ctx.predictor.predict(), ctx.cons)?);
+            metrics.add_duration("spmd.plan", t0.elapsed());
+        }
+
+        // ---- routing (replicated) + rank-0 global stats ----
+        let routes =
+            routes_from_gates(ctx.topo, &plan.placement, nd, dims.experts, &gate_idx, &gate_w_out);
+        if me == 0 {
+            let asg = assignment_matrix(nd, dims.experts, &gate_idx);
+            let dplan = dispatch(ctx.topo, &plan.placement, &asg);
+            let toks: Vec<f64> =
+                dplan.device_compute_tokens().iter().map(|&t| t as f64).collect();
+            global.push(GlobalStats {
+                sparsity: plan.spag.sparsity,
+                replicas: plan.placement.len() - ctx.shards.len(),
+                remote_tokens: dplan.remote_tokens(),
+                straggler: crate::util::stats::straggler_factor(&toks),
+            });
+        }
+
+        // ---- expert compute on our route keys, shards-resident first;
+        //      replicas are pulled as compute reaches them ----
+        let mut grads = ChunkStore::new();
+        for e in 0..dims.experts {
+            if plan.placement.contains(e, DeviceId(me)) {
+                grads.insert(e, vec![0.0f32; dims.chunk_len()]);
+            }
+        }
+        let my_keys: Vec<usize> =
+            routes.keys().filter(|(d, _)| *d == me).map(|(_, e)| *e).collect();
+        let order = order_resident_first(&my_keys, &ctx.store);
+        let inv_t = 1.0f32 / (dims.tokens * ctx.sources) as f32;
+        let mut loss = 0.0f64;
+        for e in order {
+            if !ctx.store.contains(e) {
+                let t0 = Instant::now();
+                spag.ensure(&mut ctx.store, &mut ctx.comm, e)?;
+                metrics.add_duration("spmd.spag_wait", t0.elapsed());
+                metrics.add("spmd.lazy_chunks", 1.0);
+            }
+            let toks = routes.get(&(me, e)).expect("key from this map");
+            let chunk = ctx.store.get(e).expect("ensured above").clone();
+            let acc = grads.get_mut(e).expect("grads cover the placement");
+            let t0 = Instant::now();
+            loss += compute_expert_key(&mut compute, &dims, &chunk, toks, &batches, inv_t, acc)?;
+            metrics.add_duration("spmd.compute", t0.elapsed());
+            metrics.add("spmd.groups", toks.chunks(dims.cap).len() as f64);
+        }
+        losses.push(loss);
+
+        // Remaining receives + fan-out duties before the reduce phase.
+        let t0 = Instant::now();
+        spag.finish(&mut ctx.store, &mut ctx.comm)?;
+        metrics.add_duration("spmd.spag_wait", t0.elapsed());
+
+        // ---- spRS: reduce gradients to the shard owners ----
+        let t0 = Instant::now();
+        run_sprs_rank(&mut grads, &plan.sprs, ctx.shards, me, iter, &mut ctx.comm)?;
+        metrics.add_duration("spmd.sprs", t0.elapsed());
+
+        // ---- Adam on owned experts; eagerly re-materialize for i+1 ----
+        let t0 = Instant::now();
+        for e in 0..dims.experts {
+            if !ctx.shards.contains(e, DeviceId(me)) {
+                continue;
+            }
+            let g = grads
+                .get(e)
+                .ok_or_else(|| anyhow::anyhow!("owner {me} of expert {e} lost its gradient"))?
+                .clone();
+            let p = ctx.store.get_mut(e).expect("owner holds its shard");
+            let st = ctx.opt.get_mut(&e).expect("owner holds the optimizer state");
+            st.update(&ctx.adam, p, &g);
+            let sent = ov.eager_issue(e, me, iter + 1, &ctx.store, &ctx.comm)?;
+            metrics.add("spmd.eager_sends", sent as f64);
+        }
+        metrics.add_duration("spmd.adam", t0.elapsed());
+
+        // ---- re-materialization: drop non-shard replicas (§4) ----
+        let resident: Vec<usize> = ctx.store.chunks().collect();
+        for c in resident {
+            if !ctx.shards.contains(c, DeviceId(me)) {
+                ctx.store.remove(c);
+            }
+        }
+    }
+
+    Ok(RankOut {
+        store: ctx.store,
+        opt: ctx.opt,
+        predictor: ctx.predictor,
+        metrics,
+        loss: losses,
+        global,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fssdp::{reference_dims, Executor};
+
+    fn final_chunks(e: &FssdpEngine) -> Vec<Vec<f32>> {
+        (0..e.dims.experts).map(|x| e.expert_chunk(x).clone()).collect()
+    }
+
+    #[test]
+    fn spmd_span_matches_sequential_bitwise() {
+        let dims = reference_dims();
+        let sources = 4;
+        let mut seq = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 2), 21);
+        let seq_stats = seq.run_span(0, 3, sources).unwrap();
+
+        let mut par = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 2), 21);
+        par.executor = Executor::Spmd { threads: 4, overlap: true };
+        let par_stats = par.run_span(0, 3, sources).unwrap();
+
+        assert_eq!(final_chunks(&seq), final_chunks(&par), "parameters must be bit-identical");
+        for (s, p) in seq_stats.iter().zip(par_stats.iter()) {
+            assert!((s.loss - p.loss).abs() <= 1e-9 * s.loss.abs().max(1.0));
+            assert_eq!(s.replicas, p.replicas);
+            assert_eq!(s.remote_tokens, p.remote_tokens);
+        }
+        assert!(par.spmd_metrics().is_some());
+    }
+
+    #[test]
+    fn overlap_off_is_also_bitwise_identical() {
+        let dims = reference_dims();
+        let mut a = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 2), 5);
+        a.executor = Executor::Spmd { threads: 4, overlap: false };
+        a.run_span(0, 3, 4).unwrap();
+        let mut b = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 2), 5);
+        b.executor = Executor::Spmd { threads: 4, overlap: true };
+        b.run_span(0, 3, 4).unwrap();
+        assert_eq!(final_chunks(&a), final_chunks(&b));
+    }
+
+    #[test]
+    fn thread_count_must_match_devices() {
+        let mut e = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(2, 2), 1);
+        e.executor = Executor::Spmd { threads: 3, overlap: true };
+        let err = e.run_span(0, 1, 4).unwrap_err().to_string();
+        assert!(err.contains("one OS thread per rank"), "{err}");
+    }
+
+    #[test]
+    fn empty_span_is_a_noop() {
+        let mut e = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(2, 2), 1);
+        e.executor = Executor::spmd_for(&e.topo);
+        assert!(e.run_span(0, 0, 4).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,123 @@
+//! The overlap scheduler: hide re-materialization behind expert compute.
+//!
+//! Two mechanisms, both bit-exactness-preserving (§4.3 of the paper, the
+//! "re-materialization overlap"):
+//!
+//! 1. **Lazy completion** — spAG receives are not awaited up front. The
+//!    rank computes route groups for experts whose chunks are already
+//!    resident (its own shards) first, and completes a replica's transfer
+//!    only when compute first needs it ([`RankSpag::ensure`]); transfers
+//!    keep landing in the mailboxes while earlier groups run.
+//! 2. **Eager next-iteration issue** — after the gate exchange of
+//!    iteration `i`, every rank already knows iteration `i+1`'s placement
+//!    (the predictor is replicated deterministic state), so as soon as a
+//!    shard owner finishes an expert's Adam update it issues that chunk's
+//!    `i+1` spAG transfers, while other ranks are still in iteration `i`
+//!    compute. Receivers match on iteration-tagged mailboxes, so run-ahead
+//!    needs no barrier.
+//!
+//! Neither mechanism changes any floating-point order: per-buffer gradient
+//! accumulation order is fixed by the route map, and spAG only copies.
+
+use std::collections::BTreeSet;
+
+use crate::collectives::exec::ChunkStore;
+use crate::fssdp::IterPlan;
+use crate::placement::ChunkId;
+
+use super::comm::RankComm;
+
+/// Per-rank overlap state carried across iterations of a span.
+pub(crate) struct Overlap {
+    pub enabled: bool,
+    /// Iteration `i+1`'s plan, computed right after iteration `i`'s gate
+    /// exchange (None at span start, on the last iteration, or with
+    /// overlap disabled).
+    pub next_plan: Option<IterPlan>,
+    /// `(chunk, dst)` spAG transfers of the next iteration already sent
+    /// eagerly; [`RankSpag::begin`] skips them.
+    pub pre_issued: BTreeSet<(ChunkId, usize)>,
+}
+
+impl Overlap {
+    pub fn new(enabled: bool) -> Overlap {
+        Overlap { enabled, next_plan: None, pre_issued: BTreeSet::new() }
+    }
+
+    /// Eagerly issue the next iteration's spAG transfers sourced at this
+    /// rank for chunk `e` (called right after the owner's Adam update of
+    /// `e`, while peers still compute iteration `next_iter - 1`).
+    pub fn eager_issue(
+        &mut self,
+        e: ChunkId,
+        me: usize,
+        next_iter: u64,
+        store: &ChunkStore,
+        comm: &RankComm,
+    ) -> anyhow::Result<usize> {
+        let Some(next) = &self.next_plan else {
+            return Ok(0);
+        };
+        let mut sent = 0;
+        for t in next.spag.transfers.iter().filter(|t| t.src.0 == me && t.chunk == e) {
+            let Some(buf) = store.get(e) else {
+                continue; // not resident here (fan-out source) — deferred
+            };
+            comm.isend(
+                t.dst.0,
+                super::comm::Tag {
+                    iter: next_iter,
+                    kind: super::comm::MsgKind::SpagChunk,
+                    a: t.chunk,
+                    b: t.stage,
+                },
+                buf.clone(),
+            )?;
+            self.pre_issued.insert((t.chunk, t.dst.0));
+            sent += 1;
+        }
+        Ok(sent)
+    }
+}
+
+/// Compute order for this rank's route keys: experts whose parameters are
+/// already resident (own shards) first, materialized replicas after —
+/// stable by expert id within each class, so per-buffer accumulation
+/// order is untouched (one buffer per key).
+pub(crate) fn order_resident_first(keys: &[ChunkId], store: &ChunkStore) -> Vec<ChunkId> {
+    let mut resident: Vec<ChunkId> = Vec::with_capacity(keys.len());
+    let mut deferred: Vec<ChunkId> = Vec::new();
+    for &e in keys {
+        if store.contains(e) {
+            resident.push(e);
+        } else {
+            deferred.push(e);
+        }
+    }
+    resident.extend(deferred);
+    resident
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resident_first_is_stable() {
+        let mut store = ChunkStore::new();
+        store.insert(2, vec![0.0]);
+        store.insert(5, vec![0.0]);
+        let order = order_resident_first(&[1, 2, 3, 5, 7], &store);
+        assert_eq!(order, vec![2, 5, 1, 3, 7]);
+    }
+
+    #[test]
+    fn overlap_without_next_plan_is_a_noop() {
+        let comms = crate::spmd::comm::fabric(1, None);
+        let comm = comms.into_iter().next().unwrap();
+        let store = ChunkStore::new();
+        let mut ov = Overlap::new(true);
+        assert_eq!(ov.eager_issue(0, 0, 1, &store, &comm).unwrap(), 0);
+        assert!(ov.pre_issued.is_empty());
+    }
+}

@@ -1,0 +1,106 @@
+//! Integration: the SPMD parallel executor (one OS thread per rank, an
+//! in-process communicator, overlapped sparse collectives) produces final
+//! expert parameters **bit-identical** to the sequential engine at the
+//! same seed — on 2/4/8 threads, and across a checkpoint/resume boundary.
+//! Hermetic: reference backend, no artifacts or PJRT required.
+
+use hecate::fssdp::{reference_dims, Executor, FssdpEngine};
+use hecate::testing::max_rel_err;
+use hecate::topology::Topology;
+
+fn chunks(e: &FssdpEngine) -> Vec<Vec<f32>> {
+    (0..e.dims.experts).map(|x| e.expert_chunk(x).clone()).collect()
+}
+
+fn run(
+    topo: Topology,
+    executor: Executor,
+    iters: usize,
+    sources: usize,
+    seed: u64,
+) -> Vec<Vec<f32>> {
+    let mut e = FssdpEngine::new_reference(reference_dims(), topo, seed);
+    e.executor = executor;
+    e.run_span(0, iters, sources).unwrap();
+    chunks(&e)
+}
+
+#[test]
+fn parallel_matches_sequential_on_2_4_8_threads() {
+    for (nodes, dpn) in [(1usize, 2usize), (2, 2), (2, 4)] {
+        let d = nodes * dpn;
+        let seq = run(Topology::cluster_a(nodes, dpn), Executor::Sequential, 4, d, 13);
+        let par = run(
+            Topology::cluster_a(nodes, dpn),
+            Executor::Spmd { threads: d, overlap: true },
+            4,
+            d,
+            13,
+        );
+        assert_eq!(seq, par, "{d}-thread SPMD must be bit-identical to sequential");
+    }
+}
+
+#[test]
+fn parallel_matches_single_device_reference_within_tolerance() {
+    // The fssdp_equivalence guarantee carries over to the parallel
+    // executor: 8 distributed ranks vs the all-local 1-device oracle at
+    // the established 2e-3 tolerance (placement freedom, not bit-equality,
+    // is what differs here — reduction orders depend on the placement).
+    let par =
+        run(Topology::cluster_a(2, 4), Executor::Spmd { threads: 8, overlap: true }, 3, 4, 7);
+    let refr = run(Topology::flat(1, 1e9), Executor::Sequential, 3, 4, 7);
+    assert_eq!(par.len(), refr.len());
+    for (e, (d, r)) in par.iter().zip(refr.iter()).enumerate() {
+        let err = max_rel_err(d, r);
+        assert!(err < 2e-3, "expert {e}: max rel err {err}");
+    }
+}
+
+#[test]
+fn parallel_resume_from_checkpoint_is_bit_identical() {
+    let dims = reference_dims();
+    let sources = 4;
+    let spmd = Executor::Spmd { threads: 4, overlap: true };
+
+    // uninterrupted parallel run, 4 iterations
+    let mut full = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 2), 33);
+    full.executor = spmd;
+    full.run_span(0, 4, sources).unwrap();
+
+    // interrupted: 2 parallel iterations, checkpoint, restore, 2 more
+    let dir = std::env::temp_dir().join(format!("hecate-spmd-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut head = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 2), 33);
+    head.executor = spmd;
+    head.run_span(0, 2, sources).unwrap();
+    hecate::checkpoint::save(&dir, &head.snapshot(2, sources), &head.topo).unwrap();
+
+    let (state, saved) = hecate::checkpoint::load(&dir).unwrap();
+    assert_eq!(state.step, 2);
+    let (mut tail, plan) =
+        FssdpEngine::resume_reference(Topology::cluster_a(2, 2), &state, saved.world()).unwrap();
+    assert!(plan.kept_saved_layout, "same world size must reuse the saved layout");
+    tail.executor = spmd;
+    tail.run_span(state.step, 2, state.data_shards).unwrap();
+
+    assert_eq!(chunks(&full), chunks(&tail), "resumed parallel run must be bit-identical");
+    // …and the whole family collapses to the sequential trajectory
+    let seq = run(Topology::cluster_a(2, 2), Executor::Sequential, 4, sources, 33);
+    assert_eq!(chunks(&full), seq);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn parallel_loss_decreases() {
+    let mut e = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(2, 4), 11);
+    e.executor = Executor::spmd_for(&e.topo);
+    let stats = e.run_span(0, 6, 8).unwrap();
+    assert_eq!(stats.len(), 6);
+    assert!(
+        stats[5].loss < stats[0].loss,
+        "loss {} -> {}",
+        stats[0].loss,
+        stats[5].loss
+    );
+}
