@@ -5,35 +5,53 @@
 //! `cargo bench --bench checkpoint [-- --quick] [filter]`
 
 use hecate::bench::Bench;
-use hecate::checkpoint::{self, format, reshard, shard, ExpertState, TrainState};
+use hecate::checkpoint::{self, format, reshard, shard, ExpertState, LayerCkpt, TrainState};
 use hecate::fssdp::LayerDims;
 use hecate::topology::Topology;
 use hecate::util::rng::Rng;
 
-/// Build a synthetic TrainState: `experts` shards of `chunk_len` floats.
-fn state(experts: usize, d_model: usize, d_ffn: usize, world: usize) -> TrainState {
+/// Build a synthetic v2 TrainState: `layers` layers of `experts` shards of
+/// `chunk_len` floats each.
+fn state_layers(
+    experts: usize,
+    d_model: usize,
+    d_ffn: usize,
+    world: usize,
+    layers: usize,
+) -> TrainState {
     let dims = LayerDims { tokens: 64, d_model, d_ffn, experts, cap: 64 };
     let cl = dims.chunk_len();
     let mut rng = Rng::new(1);
-    let mut mk = || -> Vec<f32> { (0..cl).map(|_| rng.normal() as f32).collect() };
-    let experts_v: Vec<ExpertState> = (0..experts)
-        .map(|_| ExpertState { chunk: mk(), m: mk(), v: mk(), t: 5 })
-        .collect();
     let mut rng2 = Rng::new(2);
+    let layers_v: Vec<LayerCkpt> = (0..layers)
+        .map(|l| {
+            let mut mk = || -> Vec<f32> { (0..cl).map(|_| rng.normal() as f32).collect() };
+            LayerCkpt {
+                owners: (0..experts).map(|e| (e + l) % world).collect(),
+                experts: (0..experts)
+                    .map(|_| ExpertState { chunk: mk(), m: mk(), v: mk(), t: 5 })
+                    .collect(),
+                gate_w: (0..d_model * experts).map(|_| rng2.normal() as f32).collect(),
+                predictor_history: (0..5).map(|_| rng2.dirichlet(0.3, experts)).collect(),
+            }
+        })
+        .collect();
     TrainState {
         step: 100,
         dims,
         seed: 1,
         data_shards: world,
-        owners: (0..experts).map(|e| e % world).collect(),
-        experts: experts_v,
-        gate_w: (0..d_model * experts).map(|_| rng2.normal() as f32).collect(),
+        layers: layers_v,
         predictor_window: 5,
-        predictor_history: (0..5).map(|_| rng2.dirichlet(0.3, experts)).collect(),
         rng_state: [1, 2, 3, 4],
         mem_slots: 4,
         overlap_degree: 4,
+        reshard_every: 0,
     }
+}
+
+fn state(experts: usize, d_model: usize, d_ffn: usize, world: usize) -> TrainState {
+    state_layers(experts, d_model, d_ffn, world, 1)
 }
 
 fn mb(bytes: usize) -> f64 {
@@ -47,18 +65,19 @@ fn main() {
     for (experts, d_model) in [(8usize, 32usize), (32, 64), (64, 128)] {
         let world = 8;
         let st = state(experts, d_model, 2 * d_model, world);
-        let ids: Vec<usize> = (0..experts).filter(|e| e % world == 0).collect();
+        let ids: Vec<Vec<usize>> =
+            vec![(0..experts).filter(|e| e % world == 0).collect()];
         let blob = shard::encode_rank(&st, 0, &ids);
         println!(
             "  [e{experts} d{d_model}] rank blob {:.2} MB ({} experts/rank)",
             mb(blob.len()),
-            ids.len()
+            ids[0].len()
         );
         b.run_val(&format!("encode_rank_e{experts}_d{d_model}"), || {
             shard::encode_rank(&st, 0, &ids)
         });
         b.run_val(&format!("decode_rank_e{experts}_d{d_model}"), || {
-            shard::decode_rank(&blob, st.dims.chunk_len()).unwrap()
+            shard::decode_rank(&blob, st.dims.chunk_len(), 1).unwrap()
         });
         b.run_val(&format!("fnv1a64_e{experts}_d{d_model}"), || format::fnv1a64(&blob));
     }
@@ -69,6 +88,17 @@ fn main() {
     println!("  global blob {:.3} MB", mb(blob.len()));
     b.run_val("encode_global_e64", || shard::encode_global(&st));
     b.run_val("decode_global_e64", || shard::decode_global(&blob).unwrap());
+
+    b.section("multi-layer (v2) blobs: 12 layers x 64 experts");
+    let st12 = state_layers(64, 64, 128, 8, 12);
+    let ids12: Vec<Vec<usize>> =
+        (0..12).map(|l| (0..64usize).filter(|e| (e + l) % 8 == 0).collect()).collect();
+    let blob12 = shard::encode_rank(&st12, 0, &ids12);
+    println!("  12-layer rank blob {:.2} MB", mb(blob12.len()));
+    b.run_val("encode_rank_12layers", || shard::encode_rank(&st12, 0, &ids12));
+    b.run_val("decode_rank_12layers", || {
+        shard::decode_rank(&blob12, st12.dims.chunk_len(), 12).unwrap()
+    });
 
     b.section("full checkpoint save+load through the filesystem");
     let dir = std::env::temp_dir().join(format!("hecate-bench-ckpt-{}", std::process::id()));

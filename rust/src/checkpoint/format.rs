@@ -18,7 +18,13 @@
 pub const MAGIC: [u8; 4] = *b"HCKP";
 
 /// Current format version. Readers accept exactly this version.
-pub const VERSION: u8 = 1;
+///
+/// * v1 — single-layer payloads (one implicit MoE layer per blob).
+/// * v2 — multi-layer: the global blob carries a layer-count header and one
+///   section per layer (gate weights + predictor window); each rank blob
+///   carries one expert-shard section per layer. See `DESIGN.md §Checkpoint
+///   format v2`.
+pub const VERSION: u8 = 2;
 
 /// FNV-1a 64-bit hash, used as the integrity trailer of every blob.
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
@@ -128,6 +134,12 @@ impl<'a> Reader<'a> {
             "not a hecate checkpoint blob (bad magic)"
         );
         let version = bytes[MAGIC.len()];
+        anyhow::ensure!(
+            version != 1,
+            "checkpoint blob is format v1 (single-layer engine); this build reads v{VERSION} \
+             (multi-layer) and cannot migrate v1 blobs — re-create the checkpoint by \
+             re-running training, or load it with a pre-v2 build"
+        );
         anyhow::ensure!(
             version == VERSION,
             "unsupported checkpoint format version {version} (this build reads v{VERSION})"
@@ -301,6 +313,21 @@ mod tests {
         assert!(err.contains("version"), "{err}");
 
         assert!(Reader::open(b"HC").is_err());
+    }
+
+    #[test]
+    fn v1_blob_gets_migration_error() {
+        // A v1 (single-layer) blob must be rejected with a message that
+        // names the v1 → v2 format change, not a generic version error.
+        let mut w = Writer::new();
+        w.put_u64(7);
+        let mut v1 = w.finish();
+        v1[4] = 1;
+        let body_len = v1.len() - 8;
+        let sum = fnv1a64(&v1[..body_len]);
+        v1[body_len..].copy_from_slice(&sum.to_le_bytes());
+        let err = Reader::open(&v1).unwrap_err().to_string();
+        assert!(err.contains("v1") && err.contains("single-layer"), "{err}");
     }
 
     #[test]

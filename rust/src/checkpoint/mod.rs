@@ -2,28 +2,32 @@
 //!
 //! FSSDP's durable training state is *exactly the shard set*: expert
 //! parameter chunks and Adam moments live on their owner rank only (one
-//! global copy, §3.2), everything else (load-predictor window, RNG streams,
-//! step counter, gate weights) is small replicated metadata. A checkpoint
-//! is therefore:
+//! global copy, §3.2), everything else (load-predictor windows, RNG streams,
+//! step counter, gate weights) is small replicated metadata. The engine is
+//! multi-layer (format v2), so a checkpoint is:
 //!
 //! * one **manifest** (`manifest.json`, written through
 //!   [`crate::util::json`] — no serde in the offline registry),
-//! * one **global blob** (`global.bin`) with the replicated metadata,
-//! * one **shard blob per rank** (`rank-<r>.bin`) with the expert states
-//!   that rank owns.
+//! * one **global blob** (`global.bin`) with the replicated metadata: a
+//!   layer-count header plus one per-layer section (gate weights +
+//!   predictor window),
+//! * one **shard blob per rank** (`rank-<r>.bin`) with one per-layer
+//!   section holding the expert states that rank owns in that layer.
 //!
 //! All blobs use the version-byte-prefixed binary format of [`format`]
 //! (magic + version + FNV-64 integrity trailer; see `DESIGN.md §Checkpoint
-//! format`).
+//! format v2`). v1 (single-layer) blobs are rejected with a clear migration
+//! error.
 //!
 //! The headline capability is **elastic resume** ([`reshard`]): `load` +
 //! [`crate::fssdp::FssdpEngine::resume_reference`] accept a topology with a
 //! *different* device count than the one that wrote the checkpoint. The
 //! resharding planner re-runs the heterogeneous sharding algorithm
-//! ([`crate::sharding`]) over the restored load statistics to lay the
-//! chunks out on the new world — and because FSSDP placement freedom never
-//! changes the math, an N-device run resumes on M devices with numerically
-//! identical training (`rust/tests/checkpoint_resume.rs`).
+//! ([`crate::sharding`], jointly over all layers) over the restored load
+//! statistics to lay the chunks out on the new world — and because FSSDP
+//! placement freedom never changes the math, an N-device run resumes on M
+//! devices with numerically identical training
+//! (`rust/tests/checkpoint_resume.rs`).
 //!
 //! [`faults`] adds the failure model the simulator uses to report
 //! recovery-time/MTTR tables (`hecate simulate --fail-step …`).
@@ -50,16 +54,28 @@ pub struct ExpertState {
     pub t: u32,
 }
 
-/// Complete training state of the numeric FSSDP engine at a step boundary.
+/// Durable state of one MoE layer.
 ///
 /// `experts[e]` is the single global copy of expert `e`'s durable state;
 /// `owners[e]` records which rank held it when the snapshot was taken (used
 /// for zero-movement restore at the same world size, and for move
 /// accounting when resharding to a different world).
 #[derive(Debug, Clone)]
+pub struct LayerCkpt {
+    pub owners: Vec<usize>,
+    pub experts: Vec<ExpertState>,
+    /// This layer's gate weights (replicated dense DP state; frozen).
+    pub gate_w: Vec<f32>,
+    /// This layer's sliding-window load history, oldest first.
+    pub predictor_history: Vec<Vec<f64>>,
+}
+
+/// Complete training state of the numeric FSSDP engine at a step boundary.
+#[derive(Debug, Clone)]
 pub struct TrainState {
     /// Next iteration to run (iterations `0..step` are already applied).
     pub step: u64,
+    /// Per-layer dimensions (all MoE layers share one shape).
     pub dims: LayerDims,
     /// Engine construction seed (data streams are keyed on it).
     pub seed: u64,
@@ -67,15 +83,20 @@ pub struct TrainState {
     /// training job — elastic resume changes the *device* count, never the
     /// data stream.
     pub data_shards: usize,
-    pub experts: Vec<ExpertState>,
-    pub owners: Vec<usize>,
-    pub gate_w: Vec<f32>,
+    /// One entry per MoE layer, in layer order.
+    pub layers: Vec<LayerCkpt>,
     pub predictor_window: usize,
-    /// Sliding-window load history, oldest first.
-    pub predictor_history: Vec<Vec<f64>>,
     pub rng_state: [u64; 4],
     pub mem_slots: usize,
     pub overlap_degree: usize,
+    /// Algorithm 2 re-sharding interval of the run (0 = never).
+    pub reshard_every: usize,
+}
+
+impl TrainState {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
 }
 
 /// Topology recorded in a checkpoint manifest.
@@ -106,19 +127,31 @@ fn rank_file(r: usize) -> String {
 /// Write a checkpoint of `state` (taken on `topo`) into `dir`.
 ///
 /// Layout: `manifest.json` + `global.bin` + one `rank-<r>.bin` per device,
-/// each rank blob holding exactly the experts `state.owners` assigns to it.
-/// Ranks that own no expert still get an (empty) blob so the manifest's
-/// rank list always matches the world size.
+/// each rank blob holding, per layer, exactly the experts that layer's
+/// `owners` assigns to it. Ranks that own nothing still get an (empty) blob
+/// so the manifest's rank list always matches the world size.
 pub fn save(dir: &Path, state: &TrainState, topo: &Topology) -> anyhow::Result<CheckpointInfo> {
     let world = topo.num_devices();
-    anyhow::ensure!(
-        state.experts.len() == state.owners.len(),
-        "state has {} experts but {} owner entries",
-        state.experts.len(),
-        state.owners.len()
-    );
-    for (e, &o) in state.owners.iter().enumerate() {
-        anyhow::ensure!(o < world, "expert {e} owned by rank {o} outside world {world}");
+    anyhow::ensure!(!state.layers.is_empty(), "state holds no layers");
+    for (l, layer) in state.layers.iter().enumerate() {
+        anyhow::ensure!(
+            layer.experts.len() == layer.owners.len(),
+            "layer {l} has {} experts but {} owner entries",
+            layer.experts.len(),
+            layer.owners.len()
+        );
+        anyhow::ensure!(
+            layer.experts.len() == state.dims.experts,
+            "layer {l} holds {} experts, dims say {}",
+            layer.experts.len(),
+            state.dims.experts
+        );
+        for (e, &o) in layer.owners.iter().enumerate() {
+            anyhow::ensure!(
+                o < world,
+                "layer {l} expert {e} owned by rank {o} outside world {world}"
+            );
+        }
     }
     std::fs::create_dir_all(dir)?;
 
@@ -127,8 +160,14 @@ pub fn save(dir: &Path, state: &TrainState, topo: &Topology) -> anyhow::Result<C
     let mut rank_entries: Vec<Json> = Vec::with_capacity(world);
 
     for r in 0..world {
-        let expert_ids: Vec<usize> =
-            (0..state.experts.len()).filter(|&e| state.owners[e] == r).collect();
+        let expert_ids: Vec<Vec<usize>> = state
+            .layers
+            .iter()
+            .map(|layer| {
+                (0..layer.experts.len()).filter(|&e| layer.owners[e] == r).collect()
+            })
+            .collect();
+        let count: usize = expert_ids.iter().map(|ids| ids.len()).sum();
         let bytes = shard::encode_rank(state, r, &expert_ids);
         let sum = format::fnv1a64(&bytes);
         let name = rank_file(r);
@@ -138,7 +177,7 @@ pub fn save(dir: &Path, state: &TrainState, topo: &Topology) -> anyhow::Result<C
         rank_entries.push(obj([
             ("rank", r.into()),
             ("file", name.as_str().into()),
-            ("experts", expert_ids.into()),
+            ("expert_states", count.into()),
             ("bytes", bytes.len().into()),
             ("fnv", format!("{sum:#018x}").as_str().into()),
         ]));
@@ -166,7 +205,8 @@ pub fn save(dir: &Path, state: &TrainState, topo: &Topology) -> anyhow::Result<C
         ("world", world.into()),
         ("nodes", topo.nodes.into()),
         ("devices_per_node", topo.devices_per_node.into()),
-        ("experts", state.experts.len().into()),
+        ("layers", state.layers.len().into()),
+        ("experts", state.dims.experts.into()),
         ("chunk_len", state.dims.chunk_len().into()),
         ("global_file", "global.bin".into()),
         ("global_fnv", format!("{global_sum:#018x}").as_str().into()),
@@ -178,9 +218,10 @@ pub fn save(dir: &Path, state: &TrainState, topo: &Topology) -> anyhow::Result<C
     files += 1;
 
     crate::log_info!(
-        "checkpoint: step {} -> {} ({} files, {:.2} MB)",
+        "checkpoint: step {} -> {} ({} layers, {} files, {:.2} MB)",
         state.step,
         dir.display(),
+        state.layers.len(),
         files,
         total_bytes as f64 / 1e6
     );
@@ -204,7 +245,7 @@ fn req_usize(j: &Json, key: &str) -> anyhow::Result<usize> {
 
 /// Read a checkpoint written by [`save`]. Verifies the manifest schema,
 /// every blob's magic/version/checksum, and that the shard set is complete
-/// (every expert restored exactly once).
+/// (every layer's every expert restored exactly once).
 pub fn load(dir: &Path) -> anyhow::Result<(TrainState, SavedTopo)> {
     let manifest_path = dir.join("manifest.json");
     let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
@@ -216,6 +257,12 @@ pub fn load(dir: &Path) -> anyhow::Result<(TrainState, SavedTopo)> {
     let fmt = manifest.req("format")?.as_str().unwrap_or("");
     anyhow::ensure!(fmt == "hecate-checkpoint", "not a hecate checkpoint manifest (`{fmt}`)");
     let version = req_usize(&manifest, "version")?;
+    anyhow::ensure!(
+        version != 1,
+        "checkpoint manifest is format v1 (single-layer engine); this build reads v{} \
+         (multi-layer) — re-create the checkpoint, or load it with a pre-v2 build",
+        format::VERSION
+    );
     anyhow::ensure!(
         version == format::VERSION as usize,
         "unsupported checkpoint version {version} (this build reads v{})",
@@ -232,6 +279,7 @@ pub fn load(dir: &Path) -> anyhow::Result<(TrainState, SavedTopo)> {
         saved.nodes,
         saved.devices_per_node
     );
+    let num_layers = req_usize(&manifest, "layers")?;
     let num_experts = req_usize(&manifest, "experts")?;
     let chunk_len = req_usize(&manifest, "chunk_len")?;
 
@@ -243,6 +291,11 @@ pub fn load(dir: &Path) -> anyhow::Result<(TrainState, SavedTopo)> {
         "{global_name}: content does not match manifest checksum"
     );
     let mut state = shard::decode_global(&global_bytes)?;
+    anyhow::ensure!(
+        state.layers.len() == num_layers,
+        "global blob has {} layers, manifest says {num_layers}",
+        state.layers.len()
+    );
     anyhow::ensure!(
         state.dims.experts == num_experts,
         "global blob has {} experts, manifest says {num_experts}",
@@ -265,8 +318,9 @@ pub fn load(dir: &Path) -> anyhow::Result<(TrainState, SavedTopo)> {
         .ok_or_else(|| anyhow::anyhow!("manifest `ranks` must be an array"))?;
     anyhow::ensure!(ranks.len() == world, "manifest lists {} ranks, world is {world}", ranks.len());
 
-    let mut experts: Vec<Option<ExpertState>> = (0..num_experts).map(|_| None).collect();
-    let mut owners = vec![usize::MAX; num_experts];
+    let mut experts: Vec<Vec<Option<ExpertState>>> =
+        (0..num_layers).map(|_| (0..num_experts).map(|_| None).collect()).collect();
+    let mut owners = vec![vec![usize::MAX; num_experts]; num_layers];
     for entry in ranks {
         let r = req_usize(entry, "rank")?;
         anyhow::ensure!(r < world, "manifest rank {r} outside world {world}");
@@ -279,31 +333,39 @@ pub fn load(dir: &Path) -> anyhow::Result<(TrainState, SavedTopo)> {
             format::fnv1a64(&bytes) == parse_hex_fnv(entry, "fnv")?,
             "{file}: content does not match manifest checksum"
         );
-        let decoded = shard::decode_rank(&bytes, chunk_len)?;
+        let decoded = shard::decode_rank(&bytes, chunk_len, num_layers)?;
         anyhow::ensure!(decoded.rank == r, "{file}: blob is for rank {}, expected {r}", decoded.rank);
-        for (e, st) in decoded.experts {
-            anyhow::ensure!(e < num_experts, "{file}: expert id {e} out of range");
-            anyhow::ensure!(
-                experts[e].is_none(),
-                "expert {e} appears in multiple rank shards (ranks {} and {r})",
-                owners[e]
-            );
-            experts[e] = Some(st);
-            owners[e] = r;
+        for (l, layer) in decoded.layers.into_iter().enumerate() {
+            for (e, st) in layer {
+                anyhow::ensure!(e < num_experts, "{file}: layer {l} expert id {e} out of range");
+                anyhow::ensure!(
+                    experts[l][e].is_none(),
+                    "layer {l} expert {e} appears in multiple rank shards (ranks {} and {r})",
+                    owners[l][e]
+                );
+                experts[l][e] = Some(st);
+                owners[l][e] = r;
+            }
         }
     }
-    let mut restored = Vec::with_capacity(num_experts);
-    for (e, st) in experts.into_iter().enumerate() {
-        restored
-            .push(st.ok_or_else(|| anyhow::anyhow!("expert {e} missing from every rank shard"))?);
+    for (l, (layer_experts, layer_owners)) in
+        experts.into_iter().zip(owners.into_iter()).enumerate()
+    {
+        let mut restored = Vec::with_capacity(num_experts);
+        for (e, st) in layer_experts.into_iter().enumerate() {
+            restored.push(st.ok_or_else(|| {
+                anyhow::anyhow!("layer {l} expert {e} missing from every rank shard")
+            })?);
+        }
+        state.layers[l].experts = restored;
+        state.layers[l].owners = layer_owners;
     }
-    state.experts = restored;
-    state.owners = owners;
 
     crate::log_info!(
-        "checkpoint: loaded step {} from {} ({} experts over {} ranks)",
+        "checkpoint: loaded step {} from {} ({} layers x {} experts over {} ranks)",
         state.step,
         dir.display(),
+        num_layers,
         num_experts,
         world
     );
@@ -311,29 +373,49 @@ pub fn load(dir: &Path) -> anyhow::Result<(TrainState, SavedTopo)> {
 }
 
 #[cfg(test)]
-pub(crate) fn test_state(experts: usize, world: usize, chunk_len_seed: u64) -> TrainState {
+pub(crate) fn test_state_layers(
+    experts: usize,
+    world: usize,
+    num_layers: usize,
+    seed: u64,
+) -> TrainState {
     use crate::util::rng::Rng;
     let dims = LayerDims { tokens: 16, d_model: 8, d_ffn: 16, experts, cap: 16 };
-    let mut rng = Rng::new(chunk_len_seed);
+    let mut rng = Rng::new(seed);
     let cl = dims.chunk_len();
     let mk = |rng: &mut Rng| -> Vec<f32> { (0..cl).map(|_| rng.normal() as f32).collect() };
-    let experts_v: Vec<ExpertState> = (0..experts)
-        .map(|_| ExpertState { chunk: mk(&mut rng), m: mk(&mut rng), v: mk(&mut rng), t: 3 })
+    let layers: Vec<LayerCkpt> = (0..num_layers)
+        .map(|l| LayerCkpt {
+            owners: (0..experts).map(|e| (e + l) % world).collect(),
+            experts: (0..experts)
+                .map(|_| ExpertState {
+                    chunk: mk(&mut rng),
+                    m: mk(&mut rng),
+                    v: mk(&mut rng),
+                    t: 3,
+                })
+                .collect(),
+            gate_w: (0..dims.d_model * experts).map(|_| rng.normal() as f32).collect(),
+            predictor_history: (0..3).map(|_| rng.dirichlet(0.5, experts)).collect(),
+        })
         .collect();
     TrainState {
         step: 7,
         dims,
-        seed: chunk_len_seed,
+        seed,
         data_shards: world,
-        owners: (0..experts).map(|e| e % world).collect(),
-        experts: experts_v,
-        gate_w: (0..dims.d_model * experts).map(|_| rng.normal() as f32).collect(),
+        layers,
         predictor_window: 5,
-        predictor_history: (0..3).map(|_| rng.dirichlet(0.5, experts)).collect(),
         rng_state: [1, 2, 3, 4],
         mem_slots: 4,
         overlap_degree: 4,
+        reshard_every: 0,
     }
+}
+
+#[cfg(test)]
+pub(crate) fn test_state(experts: usize, world: usize, seed: u64) -> TrainState {
+    test_state_layers(experts, world, 1, seed)
 }
 
 #[cfg(test)]
@@ -353,7 +435,7 @@ mod tests {
     fn save_load_roundtrip() {
         let dir = tmpdir("roundtrip");
         let topo = Topology::cluster_a(2, 2);
-        let state = test_state(10, 4, 42);
+        let state = test_state_layers(10, 4, 3, 42);
         let info = save(&dir, &state, &topo).unwrap();
         assert_eq!(info.files, 4 + 1 + 1, "4 rank blobs + global + manifest");
 
@@ -361,16 +443,19 @@ mod tests {
         assert_eq!(saved, SavedTopo { nodes: 2, devices_per_node: 2 });
         assert_eq!(back.step, state.step);
         assert_eq!(back.seed, state.seed);
-        assert_eq!(back.owners, state.owners);
         assert_eq!(back.rng_state, state.rng_state);
         assert_eq!(back.predictor_window, state.predictor_window);
-        assert_eq!(back.predictor_history, state.predictor_history);
         assert_eq!(back.mem_slots, state.mem_slots);
         assert_eq!(back.overlap_degree, state.overlap_degree);
-        for (a, b) in back.experts.iter().zip(state.experts.iter()) {
-            assert_eq!(a, b, "expert state must be bit-identical");
+        assert_eq!(back.layers.len(), 3);
+        for (bl, sl) in back.layers.iter().zip(state.layers.iter()) {
+            assert_eq!(bl.owners, sl.owners);
+            assert_eq!(bl.predictor_history, sl.predictor_history);
+            for (a, b) in bl.experts.iter().zip(sl.experts.iter()) {
+                assert_eq!(a, b, "expert state must be bit-identical");
+            }
+            assert_allclose(&bl.gate_w, &sl.gate_w, 0.0, 0.0);
         }
-        assert_allclose(&back.gate_w, &state.gate_w, 0.0, 0.0);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -386,7 +471,7 @@ mod tests {
         assert!(!dir.join("rank-3.bin").exists(), "stale rank file must be removed");
         let (state, saved) = load(&dir).unwrap();
         assert_eq!(saved.world(), 2);
-        assert_eq!(state.experts.len(), 8);
+        assert_eq!(state.layers[0].experts.len(), 8);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -414,7 +499,7 @@ mod tests {
         save(&dir, &state, &topo).unwrap();
         // Rewrite rank 1's blob as empty (no experts) and fix the manifest
         // checksum so only the completeness check can catch it.
-        let empty = shard::encode_rank(&state, 1, &[]);
+        let empty = shard::encode_rank(&state, 1, &[Vec::new()]);
         std::fs::write(dir.join("rank-1.bin"), &empty).unwrap();
         let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
         let mut doc = Json::parse(&manifest).unwrap();
@@ -436,11 +521,28 @@ mod tests {
     }
 
     #[test]
+    fn v1_manifest_gets_migration_error() {
+        let dir = tmpdir("v1-manifest");
+        let topo = Topology::cluster_a(1, 2);
+        let state = test_state(4, 2, 13);
+        save(&dir, &state, &topo).unwrap();
+        let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let mut doc = Json::parse(&manifest).unwrap();
+        if let Json::Obj(map) = &mut doc {
+            map.insert("version".into(), 1usize.into());
+        }
+        std::fs::write(dir.join("manifest.json"), doc.to_string_pretty()).unwrap();
+        let err = load(&dir).unwrap_err().to_string();
+        assert!(err.contains("v1") && err.contains("single-layer"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
     fn save_rejects_out_of_range_owner() {
         let dir = tmpdir("badowner");
         let topo = Topology::cluster_a(1, 2);
         let mut state = test_state(4, 2, 11);
-        state.owners[2] = 9;
+        state.layers[0].owners[2] = 9;
         assert!(save(&dir, &state, &topo).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }

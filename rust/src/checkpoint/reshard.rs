@@ -1,16 +1,18 @@
-//! Elastic resume planning: lay a restored shard set out on a (possibly
-//! different) topology.
+//! Elastic resume planning: lay a restored multi-layer shard set out on a
+//! (possibly different) topology.
 //!
-//! * Same world size → keep the saved owner map verbatim. Zero movement,
+//! * Same world size → keep the saved owner maps verbatim. Zero movement,
 //!   and the resumed run is **bit-identical** to the uninterrupted one
-//!   (same placement ⇒ same reduction orders).
+//!   (same placements ⇒ same reduction orders).
 //! * Different world size → re-run the heterogeneous sharding planner
-//!   (Algorithm 2, [`crate::sharding`]) over the restored load-predictor
-//!   window, exactly what a fresh re-shard would do. FlexMoE/LAER-MoE make
+//!   (Algorithm 2, [`crate::sharding`]) **jointly over all layers** — the
+//!   unified-memory balance of §4.3 — using the restored load-predictor
+//!   windows, exactly what a fresh re-shard would do. FlexMoE/LAER-MoE make
 //!   the same observation from the placement side: expert state can be
 //!   re-laid-out across a changed device set because the durable state is
 //!   placement-free.
 
+use crate::loadsim::LoadPredictor;
 use crate::placement::Placement;
 use crate::sharding;
 use crate::topology::{DeviceId, Topology};
@@ -20,13 +22,13 @@ use super::TrainState;
 /// How a restored checkpoint maps onto the resume topology.
 #[derive(Debug, Clone)]
 pub struct ReshardPlan {
-    /// New owner partition: exactly one holder per expert.
-    pub shards: Placement,
-    /// Experts whose owner rank changed relative to the checkpoint.
-    pub moved_experts: Vec<usize>,
+    /// New owner partition per layer: exactly one holder per expert.
+    pub shards: Vec<Placement>,
+    /// `(layer, expert)` pairs whose owner rank changed vs the checkpoint.
+    pub moved_experts: Vec<(usize, usize)>,
     /// Bytes those moves carry (params + Adam m/v + step counter).
     pub bytes_moved: usize,
-    /// True when the saved layout was reused verbatim.
+    /// True when the saved layouts were reused verbatim.
     pub kept_saved_layout: bool,
 }
 
@@ -36,95 +38,117 @@ pub fn expert_state_bytes(chunk_len: usize) -> usize {
     chunk_len * 4 * 3 + 4
 }
 
-/// Plan the owner layout for resuming `state` on `topo`.
+/// Plan the owner layouts for resuming `state` on `topo`.
 pub fn plan(state: &TrainState, old_world: usize, topo: &Topology) -> anyhow::Result<ReshardPlan> {
-    let experts = state.experts.len();
+    let experts = state.dims.experts;
     let world = topo.num_devices();
     anyhow::ensure!(world > 0, "resume topology has no devices");
+    anyhow::ensure!(!state.layers.is_empty(), "checkpoint holds no layers");
     anyhow::ensure!(experts > 0, "checkpoint holds no experts");
-    anyhow::ensure!(
-        state.owners.len() == experts,
-        "owner map covers {} experts, state has {experts}",
-        state.owners.len()
-    );
+    for (l, layer) in state.layers.iter().enumerate() {
+        anyhow::ensure!(layer.experts.len() == experts, "layer {l} expert count mismatch");
+        anyhow::ensure!(
+            layer.owners.len() == experts,
+            "layer {l} owner map covers {} experts, state has {experts}",
+            layer.owners.len()
+        );
+    }
 
     let (shards, kept) = if world == old_world {
         (
-            Placement::from_pairs(
-                experts,
-                world,
-                state.owners.iter().enumerate().map(|(e, &r)| (e, DeviceId(r))),
-            ),
+            state
+                .layers
+                .iter()
+                .map(|layer| {
+                    Placement::from_pairs(
+                        experts,
+                        world,
+                        layer.owners.iter().enumerate().map(|(e, &r)| (e, DeviceId(r))),
+                    )
+                })
+                .collect::<Vec<Placement>>(),
             true,
         )
     } else {
-        // Re-run Algorithm 2 with the same load statistics the engine's
-        // next materialization will see (the restored sliding window).
-        let loads = if state.predictor_history.is_empty() {
-            vec![1.0 / experts as f64; experts]
-        } else {
-            let mut avg = vec![0.0f64; experts];
-            for row in &state.predictor_history {
-                for (a, v) in avg.iter_mut().zip(row.iter()) {
-                    *a += v;
-                }
-            }
-            let n = state.predictor_history.len() as f64;
-            for a in &mut avg {
-                *a /= n;
-            }
-            avg
-        };
+        // Re-run Algorithm 2 jointly over all layers with the same load
+        // statistics the engine's next materialization will see: restore
+        // each layer's predictor exactly as `resume_with` will and use its
+        // prediction (uniform on an empty window — the cold-start rule).
+        let loads: Vec<Vec<f64>> = state
+            .layers
+            .iter()
+            .map(|layer| {
+                LoadPredictor::restore(
+                    experts,
+                    state.predictor_window,
+                    layer.predictor_history.clone(),
+                )
+                .predict()
+            })
+            .collect();
         let t = state.overlap_degree.min(experts);
-        let plan = sharding::heterogeneous(topo, &[loads], t);
-        (plan.layers.into_iter().next().expect("single-layer plan"), false)
+        let plan = sharding::heterogeneous(topo, &loads, t);
+        (plan.layers, false)
     };
 
-    anyhow::ensure!(shards.is_partition(), "reshard produced a non-partition layout");
-    let moved_experts: Vec<usize> = (0..experts)
-        .filter(|&e| {
-            let new_owner = shards.holders(e).next().expect("partition has a holder");
-            state.owners[e] != new_owner.0
-        })
-        .collect();
+    let mut moved_experts = Vec::new();
+    for (l, (layer, new)) in state.layers.iter().zip(shards.iter()).enumerate() {
+        anyhow::ensure!(new.is_partition(), "reshard produced a non-partition layout (layer {l})");
+        for e in 0..experts {
+            let new_owner = new.holders(e).next().expect("partition has a holder");
+            if layer.owners[e] != new_owner.0 {
+                moved_experts.push((l, e));
+            }
+        }
+    }
     let bytes_moved = moved_experts.len() * expert_state_bytes(state.dims.chunk_len());
     Ok(ReshardPlan { shards, moved_experts, bytes_moved, kept_saved_layout: kept })
 }
 
 #[cfg(test)]
 mod tests {
-    use super::super::test_state;
+    use super::super::{test_state, test_state_layers};
     use super::*;
 
     #[test]
     fn same_world_keeps_saved_layout() {
-        let state = test_state(8, 4, 3);
+        let state = test_state_layers(8, 4, 3, 3);
         let topo = Topology::cluster_a(2, 2);
         let p = plan(&state, 4, &topo).unwrap();
         assert!(p.kept_saved_layout);
         assert!(p.moved_experts.is_empty());
         assert_eq!(p.bytes_moved, 0);
-        for (e, &o) in state.owners.iter().enumerate() {
-            assert!(p.shards.contains(e, DeviceId(o)));
-            assert_eq!(p.shards.replication(e), 1);
+        assert_eq!(p.shards.len(), 3);
+        for (l, layer) in state.layers.iter().enumerate() {
+            for (e, &o) in layer.owners.iter().enumerate() {
+                assert!(p.shards[l].contains(e, DeviceId(o)));
+                assert_eq!(p.shards[l].replication(e), 1);
+            }
         }
     }
 
     #[test]
     fn shrink_and_grow_produce_valid_partitions() {
-        let state = test_state(16, 4, 11);
+        let state = test_state_layers(16, 4, 2, 11);
         for (nodes, dpn) in [(1, 2), (2, 4), (2, 1)] {
             let topo = Topology::cluster_a(nodes, dpn);
             let p = plan(&state, 4, &topo).unwrap();
             assert!(!p.kept_saved_layout);
-            assert!(p.shards.is_partition());
-            assert_eq!(p.shards.num_devices(), topo.num_devices());
-            // slot balance within one expert
-            let loads: Vec<usize> =
-                topo.all_devices().map(|d| p.shards.load_of(d)).collect();
+            for shards in &p.shards {
+                assert!(shards.is_partition());
+                assert_eq!(shards.num_devices(), topo.num_devices());
+            }
+            // joint (all-layer) slot balance within one expert
+            let loads: Vec<usize> = topo
+                .all_devices()
+                .map(|d| p.shards.iter().map(|s| s.load_of(d)).sum())
+                .collect();
             let (mx, mn) = (loads.iter().max().unwrap(), loads.iter().min().unwrap());
             assert!(mx - mn <= 1, "unbalanced slots {loads:?}");
-            assert_eq!(p.bytes_moved, p.moved_experts.len() * expert_state_bytes(state.dims.chunk_len()));
+            assert_eq!(
+                p.bytes_moved,
+                p.moved_experts.len() * expert_state_bytes(state.dims.chunk_len())
+            );
         }
     }
 
@@ -134,9 +158,12 @@ mod tests {
         let topo = Topology::cluster_a(1, 2); // world 4 -> 2
         let p = plan(&state, 4, &topo).unwrap();
         // every expert owned by rank 2 or 3 must have moved
-        for (e, &o) in state.owners.iter().enumerate() {
+        for (e, &o) in state.layers[0].owners.iter().enumerate() {
             if o >= 2 {
-                assert!(p.moved_experts.contains(&e), "expert {e} owned by dead rank {o}");
+                assert!(
+                    p.moved_experts.contains(&(0, e)),
+                    "expert {e} owned by dead rank {o}"
+                );
             }
         }
     }

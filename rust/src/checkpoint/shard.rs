@@ -1,21 +1,25 @@
 //! Blob schemas: the per-rank shard blob and the replicated global blob.
 //!
-//! Schema version 1 (field order is the contract; see `DESIGN.md`):
+//! Schema version 2 (field order is the contract; see `DESIGN.md`). The
+//! engine is multi-layer, so both blobs carry a layer-count header and one
+//! section per layer:
 //!
 //! ```text
 //! global.bin:  step u64 | seed u64 | data_shards u64 | dims 5×u64 |
-//!              gate_w f32s | predictor_window u64 | history_rows u64 |
-//!              rows×f64s | rng 4×u64 | mem_slots u64 | overlap_degree u64
-//! rank-r.bin:  rank u64 | num_experts u64 | per expert:
-//!              id u64 | t u32 | chunk f32s | m f32s | v f32s
+//!              num_layers u64 | reshard_every u64 | predictor_window u64 |
+//!              rng 4×u64 | mem_slots u64 | overlap_degree u64 |
+//!              per layer: gate_w f32s | history_rows u64 | rows×f64s
+//! rank-r.bin:  rank u64 | num_layers u64 | per layer: num_experts u64 |
+//!              per expert: id u64 | t u32 | chunk f32s | m f32s | v f32s
 //! ```
 //!
-//! Both are wrapped in the [`super::format`] header/trailer.
+//! Both are wrapped in the [`super::format`] header/trailer; v1 blobs are
+//! rejected by [`super::format::Reader::open`] with a migration error.
 
 use crate::fssdp::LayerDims;
 
 use super::format::{Reader, Writer};
-use super::{ExpertState, TrainState};
+use super::{ExpertState, LayerCkpt, TrainState};
 
 /// Encode the replicated (non-sharded) metadata of a checkpoint.
 pub fn encode_global(state: &TrainState) -> Vec<u8> {
@@ -28,22 +32,27 @@ pub fn encode_global(state: &TrainState) -> Vec<u8> {
     w.put_usize(state.dims.d_ffn);
     w.put_usize(state.dims.experts);
     w.put_usize(state.dims.cap);
-    w.put_f32s(&state.gate_w);
+    w.put_usize(state.layers.len());
+    w.put_usize(state.reshard_every);
     w.put_usize(state.predictor_window);
-    w.put_usize(state.predictor_history.len());
-    for row in &state.predictor_history {
-        w.put_f64s(row);
-    }
     for &s in &state.rng_state {
         w.put_u64(s);
     }
     w.put_usize(state.mem_slots);
     w.put_usize(state.overlap_degree);
+    for layer in &state.layers {
+        w.put_f32s(&layer.gate_w);
+        w.put_usize(layer.predictor_history.len());
+        for row in &layer.predictor_history {
+            w.put_f64s(row);
+        }
+    }
     w.finish()
 }
 
 /// Decode a [`encode_global`] blob. The returned state has empty
-/// `experts`/`owners` — the caller fills them from the rank shards.
+/// `experts`/`owners` in every layer — the caller fills them from the rank
+/// shards.
 pub fn decode_global(bytes: &[u8]) -> anyhow::Result<TrainState> {
     let mut r = Reader::open(bytes)?;
     let step = r.take_u64()?;
@@ -56,47 +65,58 @@ pub fn decode_global(bytes: &[u8]) -> anyhow::Result<TrainState> {
         experts: r.take_usize()?,
         cap: r.take_usize()?,
     };
-    let gate_w = r.take_f32s()?;
-    anyhow::ensure!(
-        gate_w.len() == dims.d_model * dims.experts,
-        "global blob: gate_w has {} floats, dims imply {}",
-        gate_w.len(),
-        dims.d_model * dims.experts
-    );
+    let num_layers = r.take_usize()?;
+    anyhow::ensure!(num_layers >= 1, "global blob: zero layers");
+    anyhow::ensure!(num_layers <= 1 << 16, "global blob: implausible layer count {num_layers}");
+    let reshard_every = r.take_usize()?;
     let predictor_window = r.take_usize()?;
     anyhow::ensure!(predictor_window >= 1, "global blob: predictor window 0");
-    let rows = r.take_usize()?;
-    let mut predictor_history = Vec::with_capacity(rows.min(1024));
-    for _ in 0..rows {
-        let row = r.take_f64s()?;
-        anyhow::ensure!(
-            row.len() == dims.experts,
-            "global blob: history row has {} entries, expected {}",
-            row.len(),
-            dims.experts
-        );
-        predictor_history.push(row);
-    }
     let mut rng_state = [0u64; 4];
     for s in &mut rng_state {
         *s = r.take_u64()?;
     }
     let mem_slots = r.take_usize()?;
     let overlap_degree = r.take_usize()?;
+    let mut layers = Vec::with_capacity(num_layers);
+    for l in 0..num_layers {
+        let gate_w = r.take_f32s()?;
+        anyhow::ensure!(
+            gate_w.len() == dims.d_model * dims.experts,
+            "global blob layer {l}: gate_w has {} floats, dims imply {}",
+            gate_w.len(),
+            dims.d_model * dims.experts
+        );
+        let rows = r.take_usize()?;
+        let mut predictor_history = Vec::with_capacity(rows.min(1024));
+        for _ in 0..rows {
+            let row = r.take_f64s()?;
+            anyhow::ensure!(
+                row.len() == dims.experts,
+                "global blob layer {l}: history row has {} entries, expected {}",
+                row.len(),
+                dims.experts
+            );
+            predictor_history.push(row);
+        }
+        layers.push(LayerCkpt {
+            owners: Vec::new(),
+            experts: Vec::new(),
+            gate_w,
+            predictor_history,
+        });
+    }
     r.done()?;
     Ok(TrainState {
         step,
         dims,
         seed,
         data_shards,
-        experts: Vec::new(),
-        owners: Vec::new(),
-        gate_w,
+        layers,
         predictor_window,
-        predictor_history,
         rng_state,
         mem_slots,
         overlap_degree,
+        reshard_every,
     })
 }
 
@@ -104,83 +124,105 @@ pub fn decode_global(bytes: &[u8]) -> anyhow::Result<TrainState> {
 #[derive(Debug, Clone)]
 pub struct RankShard {
     pub rank: usize,
-    /// `(expert_id, state)` pairs, in id order.
-    pub experts: Vec<(usize, ExpertState)>,
+    /// Per layer: `(expert_id, state)` pairs, in id order.
+    pub layers: Vec<Vec<(usize, ExpertState)>>,
 }
 
-/// Encode rank `r`'s shard: the durable state of `expert_ids`.
-pub fn encode_rank(state: &TrainState, r: usize, expert_ids: &[usize]) -> Vec<u8> {
+/// Encode rank `r`'s shard: for every layer, the durable state of the
+/// experts in `expert_ids[layer]`.
+pub fn encode_rank(state: &TrainState, r: usize, expert_ids: &[Vec<usize>]) -> Vec<u8> {
+    assert_eq!(expert_ids.len(), state.layers.len(), "one id list per layer");
     let mut w = Writer::new();
     w.put_usize(r);
-    w.put_usize(expert_ids.len());
-    for &e in expert_ids {
-        let st = &state.experts[e];
-        w.put_usize(e);
-        w.put_u32(st.t);
-        w.put_f32s(&st.chunk);
-        w.put_f32s(&st.m);
-        w.put_f32s(&st.v);
+    w.put_usize(state.layers.len());
+    for (layer, ids) in state.layers.iter().zip(expert_ids.iter()) {
+        w.put_usize(ids.len());
+        for &e in ids {
+            let st = &layer.experts[e];
+            w.put_usize(e);
+            w.put_u32(st.t);
+            w.put_f32s(&st.chunk);
+            w.put_f32s(&st.m);
+            w.put_f32s(&st.v);
+        }
     }
     w.finish()
 }
 
 /// Decode a [`encode_rank`] blob, validating every buffer against the
-/// manifest's `chunk_len`.
-pub fn decode_rank(bytes: &[u8], chunk_len: usize) -> anyhow::Result<RankShard> {
+/// manifest's `chunk_len` and `layers`.
+pub fn decode_rank(bytes: &[u8], chunk_len: usize, num_layers: usize) -> anyhow::Result<RankShard> {
     let mut r = Reader::open(bytes)?;
     let rank = r.take_usize()?;
-    let n = r.take_usize()?;
-    let mut experts = Vec::with_capacity(n.min(1 << 20));
-    for _ in 0..n {
-        let e = r.take_usize()?;
-        let t = r.take_u32()?;
-        let chunk = r.take_f32s()?;
-        let m = r.take_f32s()?;
-        let v = r.take_f32s()?;
-        for (name, buf) in [("chunk", &chunk), ("m", &m), ("v", &v)] {
-            anyhow::ensure!(
-                buf.len() == chunk_len,
-                "rank {rank} expert {e}: {name} has {} floats, expected {chunk_len}",
-                buf.len()
-            );
+    let nl = r.take_usize()?;
+    anyhow::ensure!(
+        nl == num_layers,
+        "rank {rank}: blob holds {nl} layers, manifest says {num_layers}"
+    );
+    let mut layers = Vec::with_capacity(nl);
+    for l in 0..nl {
+        let n = r.take_usize()?;
+        let mut experts = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            let e = r.take_usize()?;
+            let t = r.take_u32()?;
+            let chunk = r.take_f32s()?;
+            let m = r.take_f32s()?;
+            let v = r.take_f32s()?;
+            for (name, buf) in [("chunk", &chunk), ("m", &m), ("v", &v)] {
+                anyhow::ensure!(
+                    buf.len() == chunk_len,
+                    "rank {rank} layer {l} expert {e}: {name} has {} floats, expected {chunk_len}",
+                    buf.len()
+                );
+            }
+            experts.push((e, ExpertState { chunk, m, v, t }));
         }
-        experts.push((e, ExpertState { chunk, m, v, t }));
+        layers.push(experts);
     }
     r.done()?;
-    Ok(RankShard { rank, experts })
+    Ok(RankShard { rank, layers })
 }
 
 #[cfg(test)]
 mod tests {
-    use super::super::test_state;
+    use super::super::test_state_layers;
     use super::*;
 
     #[test]
     fn global_roundtrip() {
-        let state = test_state(6, 3, 5);
+        let state = test_state_layers(6, 3, 3, 5);
         let bytes = encode_global(&state);
         let back = decode_global(&bytes).unwrap();
         assert_eq!(back.step, state.step);
         assert_eq!(back.seed, state.seed);
         assert_eq!(back.dims.chunk_len(), state.dims.chunk_len());
-        assert_eq!(back.gate_w, state.gate_w);
-        assert_eq!(back.predictor_history, state.predictor_history);
+        assert_eq!(back.layers.len(), 3);
+        assert_eq!(back.reshard_every, state.reshard_every);
+        for (a, b) in back.layers.iter().zip(state.layers.iter()) {
+            assert_eq!(a.gate_w, b.gate_w);
+            assert_eq!(a.predictor_history, b.predictor_history);
+            assert!(a.experts.is_empty());
+        }
         assert_eq!(back.rng_state, state.rng_state);
-        assert!(back.experts.is_empty());
     }
 
     #[test]
     fn rank_roundtrip_and_validation() {
-        let state = test_state(6, 3, 5);
-        let ids = vec![1usize, 4];
+        let state = test_state_layers(6, 3, 2, 5);
+        let ids = vec![vec![1usize, 4], vec![0usize]];
         let bytes = encode_rank(&state, 2, &ids);
-        let shard = decode_rank(&bytes, state.dims.chunk_len()).unwrap();
+        let shard = decode_rank(&bytes, state.dims.chunk_len(), 2).unwrap();
         assert_eq!(shard.rank, 2);
-        assert_eq!(shard.experts.len(), 2);
-        assert_eq!(shard.experts[0].0, 1);
-        assert_eq!(shard.experts[0].1, state.experts[1]);
-        assert_eq!(shard.experts[1].1, state.experts[4]);
+        assert_eq!(shard.layers.len(), 2);
+        assert_eq!(shard.layers[0].len(), 2);
+        assert_eq!(shard.layers[0][0].0, 1);
+        assert_eq!(shard.layers[0][0].1, state.layers[0].experts[1]);
+        assert_eq!(shard.layers[0][1].1, state.layers[0].experts[4]);
+        assert_eq!(shard.layers[1][0].1, state.layers[1].experts[0]);
         // wrong chunk_len rejected
-        assert!(decode_rank(&bytes, state.dims.chunk_len() + 1).is_err());
+        assert!(decode_rank(&bytes, state.dims.chunk_len() + 1, 2).is_err());
+        // wrong layer count rejected
+        assert!(decode_rank(&bytes, state.dims.chunk_len(), 3).is_err());
     }
 }

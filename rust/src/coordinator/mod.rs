@@ -2,16 +2,18 @@
 //!
 //! ```text
 //! hecate repro     --figure 9|10|11|12|13|14|15a|15b | --table 1 | --claims | --all
+//!                  [--numeric]                       (fig 11/15b: numeric-engine rows)
 //! hecate simulate  --cluster a|b --model gpt-moe-s --system hecate [--nodes 4 --dpn 8]
 //!                  [--fail-step K --fail-device D --checkpoint-every N]   (fault injection)
 //! hecate train     --model e2e --steps 200 [--artifacts DIR]   (runs PJRT)
 //!                  [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR]
 //! hecate fssdp     --devices 8 --iters 20                      (numeric engine)
+//!                  [--layers L] [--reshard-every K]            (multi-layer stack)
 //!                  [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR] [--reference]
 //!                  [--parallel [--threads N]]                  (SPMD executor)
 //! hecate checkpoint --dir DIR [--devices N --iters K]          (hermetic snapshot demo)
 //! hecate resume     --dir DIR [--devices M --iters K]          (elastic resume demo)
-//! hecate bench spmd [--iters N --quick]                        (thread-scaling sweep)
+//! hecate bench spmd [--iters N --quick]       (thread scaling + cross-layer overlap)
 //! ```
 
 use crate::checkpoint::faults::FaultSpec;
@@ -51,27 +53,29 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
 fn print_usage() {
     eprintln!(
         "hecate — FSSDP MoE training (paper reproduction)\n\
-         USAGE:\n  hecate repro    [--figure N | --table 1 | --claims | --all] [--iters N]\n  \
+         USAGE:\n  hecate repro    [--figure N | --table 1 | --claims | --all] [--iters N] [--numeric]\n  \
          hecate simulate --cluster a|b --model NAME --system NAME [--nodes N --dpn N --batch N]\n                  \
          [--fail-step K --fail-device D --checkpoint-every N --detect-s S --disk-gbps G]\n  \
          hecate train    [--steps N] [--artifacts DIR] [--model tiny|e2e] [--log FILE]\n                  \
          [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR]\n  \
          hecate fssdp    [--devices N] [--iters N] [--artifacts DIR] [--reference]\n                  \
+         [--layers L] [--reshard-every K]   (multi-layer MoE stack, Algorithm 2 cadence)\n                  \
          [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR]\n                  \
          [--parallel [--threads N]]   (SPMD executor: one thread per rank)\n  \
-         hecate checkpoint --dir DIR [--nodes N --devices N --iters K --seed S]\n  \
+         hecate checkpoint --dir DIR [--nodes N --devices N --layers L --iters K --seed S]\n  \
          hecate resume     --dir DIR [--nodes N --devices M --iters K]\n  \
-         hecate bench spmd [--iters N] [--quick]   (sequential vs SPMD wall clock)"
+         hecate bench spmd [--iters N] [--quick]   (thread scaling + cross-layer overlap)"
     );
 }
 
 fn cmd_repro(args: &Args) -> anyhow::Result<()> {
-    args.reject_unknown(&["figure", "table", "claims", "all", "iters"])?;
+    args.reject_unknown(&["figure", "table", "claims", "all", "iters", "numeric"])?;
     let mut opts = report::default_opts();
     opts.iterations = args.usize_or("iters", opts.iterations)?;
     let all = args.has("all");
-    let fig = args.str_or("figure", "");
-    let table = args.str_or("table", "");
+    let numeric = args.bool_or("numeric", false)?;
+    let fig = args.str_or("figure", "")?;
+    let table = args.str_or("table", "")?;
 
     if all || table == "1" {
         println!("\n== Table 1: model architectures ==");
@@ -95,6 +99,10 @@ fn cmd_repro(args: &Args) -> anyhow::Result<()> {
     if all || fig == "11" {
         println!("\n== Figure 11: layer-wise MoE speedup (GPT-MoE-S, Cluster B) ==");
         print!("{}", report::figure11(&opts).to_markdown());
+        if numeric || all {
+            println!("\n== Figure 11 (numeric engine): per-layer exposed materialization ==");
+            print!("{}", report::numeric_figure11(3, 3)?.to_markdown());
+        }
     }
     if all || fig == "12" {
         println!("\n== Figure 12: critical-path breakdown (BERT-MoE-Deep, Cluster B) ==");
@@ -115,6 +123,10 @@ fn cmd_repro(args: &Args) -> anyhow::Result<()> {
     if all || fig == "15b" || fig == "15" {
         println!("\n== Figure 15b: re-sharding interval sweep ==");
         print!("{}", report::figure15b(&opts).to_markdown());
+        if numeric || all {
+            println!("\n== Figure 15b (numeric engine): executed re-sharding interval sweep ==");
+            print!("{}", report::numeric_figure15b(3, 6)?.to_markdown());
+        }
     }
     if all || args.has("claims") {
         for (name, t) in report::claims(&opts) {
@@ -130,15 +142,15 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         "cluster", "model", "system", "nodes", "dpn", "batch", "iters", "seed", "experts",
         "fail-step", "fail-device", "checkpoint-every", "detect-s", "disk-gbps",
     ])?;
-    let cluster = ClusterPreset::parse(&args.str_or("cluster", "a"))?;
+    let cluster = ClusterPreset::parse(&args.str_or("cluster", "a")?)?;
     let nodes = args.usize_or("nodes", 4)?;
     let dpn = args.usize_or("dpn", 8)?;
     let topo = cluster.build(nodes, dpn);
-    let mut model = ModelConfig::preset(&args.str_or("model", "gpt-moe-s"))?;
-    if let Some(e) = args.get("experts") {
+    let mut model = ModelConfig::preset(&args.str_or("model", "gpt-moe-s")?)?;
+    if let Some(e) = args.str_opt("experts")? {
         model = model.with_experts(e.parse()?);
     }
-    let system = SystemKind::parse(&args.str_or("system", "hecate"))?;
+    let system = SystemKind::parse(&args.str_or("system", "hecate")?)?;
     let batch = args.usize_or("batch", report::paper_batch(&model))?;
     let train = TrainConfig { batch_per_device: batch, ..Default::default() };
     let mut opts = report::default_opts();
@@ -222,21 +234,21 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         "checkpoint-dir", "resume",
     ])?;
     let steps = args.usize_or("steps", 200)?;
-    let dir = args.str_or("artifacts", "artifacts");
-    let tag = args.str_or("model", "tiny");
-    let log = args.get("log").map(|s| s.to_string());
+    let dir = args.str_or("artifacts", "artifacts")?;
+    let tag = args.str_or("model", "tiny")?;
+    let log = args.str_opt("log")?;
     let ckpt = crate::train::CkptOpts {
         every: args.usize_or("checkpoint-every", 0)?,
-        dir: args.get("checkpoint-dir").map(|s| s.to_string()),
-        resume: args.get("resume").map(|s| s.to_string()),
+        dir: args.str_opt("checkpoint-dir")?,
+        resume: args.str_opt("resume")?,
     };
     crate::train::run_training_with(&dir, &tag, steps, log.as_deref(), &ckpt)
 }
 
 fn cmd_fssdp(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&[
-        "devices", "iters", "artifacts", "nodes", "seed", "checkpoint-every",
-        "checkpoint-dir", "resume", "reference", "parallel", "threads",
+        "devices", "iters", "artifacts", "nodes", "seed", "layers", "reshard-every",
+        "checkpoint-every", "checkpoint-dir", "resume", "reference", "parallel", "threads",
     ])?;
     let parallel = args.bool_or("parallel", false)?;
     let threads = match args.get("threads") {
@@ -253,25 +265,34 @@ fn cmd_fssdp(args: &Args) -> anyhow::Result<()> {
         nodes: args.usize_or("nodes", 2)?,
         iters: args.usize_or("iters", 10)?,
         seed: args.usize_or("seed", 42)? as u64,
+        layers: match args.get("layers") {
+            None => None,
+            Some(_) => Some(args.usize_or("layers", 1)?),
+        },
+        reshard_every: match args.get("reshard-every") {
+            None => None,
+            Some(_) => Some(args.usize_or("reshard-every", 0)?),
+        },
         checkpoint_every: args.usize_or("checkpoint-every", 0)?,
-        checkpoint_dir: args.get("checkpoint-dir").map(|s| s.to_string()),
-        resume: args.get("resume").map(|s| s.to_string()),
+        checkpoint_dir: args.str_opt("checkpoint-dir")?,
+        resume: args.str_opt("resume")?,
         reference: args.bool_or("reference", false)?,
         parallel,
         threads,
     };
-    let dir = args.str_or("artifacts", "artifacts");
+    let dir = args.str_or("artifacts", "artifacts")?;
     crate::fssdp::run_demo_with(&dir, &opts)
 }
 
 /// Measured-performance sweeps. `hecate bench spmd` runs the reference
-/// engine sequentially and on the SPMD executor across thread counts and
-/// prints modeled comm time next to measured wall clock per iteration.
+/// engine sequentially and on the SPMD executor across thread counts
+/// (modeled comm time next to measured wall clock), then sweeps the layer
+/// stack with the §4.3 cross-layer overlap scheduler on vs off under α–β
+/// link pacing.
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&["iters", "quick", "target"])?;
     let target = args
-        .get("target")
-        .map(|s| s.to_string())
+        .str_opt("target")?
         .or_else(|| args.positional.first().cloned())
         .unwrap_or_else(|| "spmd".to_string());
     match target.as_str() {
@@ -280,6 +301,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             let quick = args.bool_or("quick", false)?;
             println!("== SPMD thread scaling: modeled comm vs measured wall clock ==");
             let t = report::spmd_scaling(iters, quick)?;
+            print!("{}", t.to_markdown());
+            println!("\n== Cross-layer overlap (paced links): wall clock on vs off ==");
+            let t = report::spmd_overlap(iters, quick)?;
             print!("{}", t.to_markdown());
             Ok(())
         }
@@ -290,13 +314,17 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
 /// Hermetic checkpoint demo: train the reference engine for `--iters`
 /// steps and write a sharded checkpoint to `--dir`. No artifacts needed.
 fn cmd_checkpoint(args: &Args) -> anyhow::Result<()> {
-    args.reject_unknown(&["dir", "nodes", "devices", "iters", "seed"])?;
+    args.reject_unknown(&["dir", "nodes", "devices", "layers", "iters", "seed"])?;
     let dir = args.req("dir")?;
     let opts = RunOpts {
         devices: args.usize_or("devices", 4)?,
         nodes: args.usize_or("nodes", 2)?,
         iters: args.usize_or("iters", 4)?,
         seed: args.usize_or("seed", 42)? as u64,
+        layers: match args.get("layers") {
+            None => None,
+            Some(_) => Some(args.usize_or("layers", 1)?),
+        },
         checkpoint_dir: Some(dir),
         reference: true,
         ..Default::default()
@@ -305,7 +333,8 @@ fn cmd_checkpoint(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Hermetic elastic-resume demo: restore `--dir` onto `--devices` devices
-/// (any count — the planner re-shards) and continue for `--iters` steps.
+/// (any count — the planner re-shards jointly over all layers) and
+/// continue for `--iters` steps.
 fn cmd_resume(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&["dir", "nodes", "devices", "iters"])?;
     let dir = args.req("dir")?;
@@ -373,9 +402,10 @@ mod tests {
             .join(format!("hecate-coord-ckpt-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         let d = dir.to_str().unwrap().to_string();
-        // write a checkpoint on 4 devices…
+        // write a multi-layer checkpoint on 4 devices…
         run(argv(&[
-            "checkpoint", "--iters", "2", "--nodes", "2", "--devices", "4", "--dir", &d,
+            "checkpoint", "--iters", "2", "--nodes", "2", "--devices", "4", "--layers", "2",
+            "--dir", &d,
         ]))
         .unwrap();
         assert!(dir.join("manifest.json").exists());
@@ -404,6 +434,17 @@ mod tests {
         assert!(run(argv(&["checkpoint", "--dir", "/tmp/x", "--nope", "1"])).is_err());
         assert!(run(argv(&["bench", "nope"])).is_err());
         assert!(run(argv(&["bench", "spmd", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn trailing_value_flag_is_an_error_not_a_panic() {
+        // Regression for the CLI parser fix: a value-taking flag as the
+        // final token must produce a parse error end-to-end.
+        let err = run(argv(&["fssdp", "--reference", "--devices"])).unwrap_err().to_string();
+        assert!(err.contains("expects a value"), "{err}");
+        let err =
+            run(argv(&["fssdp", "--reference", "--checkpoint-dir"])).unwrap_err().to_string();
+        assert!(err.contains("expects a value"), "{err}");
     }
 
     #[test]
@@ -436,6 +477,17 @@ mod tests {
     }
 
     #[test]
+    fn zero_layers_is_rejected() {
+        let err = run(argv(&[
+            "fssdp", "--reference", "--devices", "4", "--nodes", "2", "--layers", "0",
+            "--iters", "1",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--layers"), "{err}");
+    }
+
+    #[test]
     fn parallel_smoke_runs_and_matches_flagless_defaults() {
         run(argv(&[
             "fssdp", "--reference", "--parallel", "--devices", "4", "--nodes", "2",
@@ -446,6 +498,17 @@ mod tests {
         run(argv(&[
             "fssdp", "--reference", "--parallel", "--devices", "4", "--nodes", "2",
             "--threads", "4", "--iters", "1",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn multilayer_parallel_smoke_with_resharding() {
+        // The CI smoke flow: 3 layers, SPMD executor, Algorithm 2 every 2
+        // iterations inside the numeric run.
+        run(argv(&[
+            "fssdp", "--reference", "--parallel", "--devices", "4", "--nodes", "2",
+            "--layers", "3", "--reshard-every", "2", "--iters", "3",
         ]))
         .unwrap();
     }

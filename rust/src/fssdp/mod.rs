@@ -1,34 +1,44 @@
-//! The numeric FSSDP engine: real FSSDP training of an MoE layer across N
-//! simulated devices inside one process.
+//! The numeric FSSDP engine: real FSSDP training of a stack of `L` MoE
+//! layers across N simulated devices inside one process.
 //!
 //! Everything the paper's Figure 5 shows actually happens here, with real
-//! numbers:
+//! numbers, once per layer per iteration:
 //!
-//! 1. **Sharding phase** — expert parameters + Adam states are partitioned
-//!    into per-expert chunks owned by distinct devices.
-//! 2. **Materialization phase** — each iteration the scheduler predicts
-//!    loads (sliding window, w=5), runs Algorithm 1, and executes
+//! 1. **Sharding phase** — every layer's expert parameters + Adam states
+//!    are partitioned into per-expert chunks owned by distinct devices;
+//!    `--reshard-every K` re-runs Algorithm 2 jointly over all layers
+//!    (unified memory space, §4.3 / Figure 8) at K-iteration boundaries.
+//! 2. **Materialization phase** — each iteration, per layer, the scheduler
+//!    predicts loads (sliding window, w=5), runs Algorithm 1, and executes
 //!    `spAG(P, P')` on the real parameter buffers
 //!    ([`crate::collectives::exec`]).
-//! 3. The **gate** runs as an AOT-compiled HLO executable per device
+//! 3. The **gate** runs per layer on that layer's input activations
 //!    (logits → softmax → Pallas top-2); the L3 **dispatcher** routes each
 //!    token to a materialized replica (topology-aware, §4.4).
 //! 4. **Expert compute** runs through the `expert_ffn_fwd`/`_bwd` HLO
-//!    executables (Pallas kernels under PJRT), capacity-tiled.
-//! 5. **Gradient reduction** executes `spRS(P', P)` on the real gradient
-//!    buffers; shard owners apply Adam.
+//!    executables (Pallas kernels under PJRT), capacity-tiled. Inner
+//!    layers *combine* (weight-sum the top-2 expert outputs) into the next
+//!    layer's activations — the non-MoE blocks between MoE layers stay the
+//!    synthetic pass-through of the seed engine. The loss sits on the last
+//!    layer's per-expert outputs (bit-identical to the seed single-layer
+//!    engine at `L = 1`), and the backward pass threads cotangents down
+//!    the stack.
+//! 5. **Gradient reduction** executes `spRS(P', P)` per layer on the real
+//!    gradient buffers; shard owners apply Adam.
 //!
-//! The equivalence test (`examples/fssdp_numeric`, `rust/tests/`) runs the
+//! The equivalence tests (`examples/fssdp_numeric`, `rust/tests/`) run the
 //! same workload on 1 device (all experts local — no collectives, no
-//! dispatch) and asserts the final parameters match: FSSDP's placement
-//! freedom does not change the math.
+//! dispatch) and assert the final parameters match: FSSDP's placement
+//! freedom does not change the math. `rust/tests/spmd_equivalence.rs`
+//! additionally locks `L = 1` to the seed engine's exact bit pattern and
+//! `L = 3` across executors.
 
 pub mod adam;
 pub mod compute;
 
 use std::collections::BTreeMap;
 
-use crate::checkpoint::{self, ExpertState, ReshardPlan, TrainState};
+use crate::checkpoint::{self, ExpertState, LayerCkpt, ReshardPlan, TrainState};
 use crate::collectives::exec::{run_spag, run_sprs, ClusterMem};
 use crate::collectives::sparse::{build_spag, build_sprs, SparsePlan};
 use crate::dispatch::dispatch;
@@ -37,6 +47,8 @@ use crate::materialize::{sparse_materialize, MatConstraints};
 use crate::metrics::Metrics;
 use crate::placement::Placement;
 use crate::runtime::{HostTensor, Runtime};
+use crate::sharding::{self, ShardingPlan};
+use crate::spmd::comm::Pacing;
 use crate::topology::{DeviceId, Topology};
 use crate::util::rng::Rng;
 
@@ -53,8 +65,10 @@ pub enum Executor {
     Sequential,
     /// One OS thread per rank. `threads` must equal the topology's device
     /// count (SPMD = the program *is* the rank). `overlap` enables the
-    /// re-materialization overlap scheduler (§4.3); results are
-    /// bit-identical either way.
+    /// re-materialization overlap scheduler, including the §4.3
+    /// cross-layer pipeline (issue layer `l+1`'s spAG while layer `l`
+    /// computes; finish layer `l+1`'s spRS while layer `l`'s backward
+    /// runs); results are bit-identical either way.
     Spmd { threads: usize, overlap: bool },
 }
 
@@ -66,8 +80,9 @@ impl Executor {
     }
 }
 
-/// Static dimensions of the engine's MoE layer (from the artifact manifest,
-/// or chosen explicitly for the hermetic reference backend).
+/// Static dimensions of one MoE layer (from the artifact manifest, or
+/// chosen explicitly for the hermetic reference backend). All layers of a
+/// stack share one shape.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct LayerDims {
     pub tokens: usize,
@@ -127,7 +142,7 @@ fn accumulate_grad_chunk(acc: &mut [f32], parts: &[HostTensor]) -> anyhow::Resul
 /// Generate one logical data shard's token batch for iteration `iter`
 /// (deterministic in (iter, source) only — the FSSDP run, the 1-device
 /// reference, and every SPMD rank regenerate identical data locally, so
-/// token payloads never need to cross the wire).
+/// layer-0 token payloads never need to cross the wire).
 pub(crate) fn batch_for(dims: &LayerDims, iter: u64, source: usize) -> Vec<f32> {
     let mut r = Rng::new(0xDA7A ^ (iter.wrapping_mul(0x9E3779B97F4A7C15)) ^ (source as u64) << 32);
     // drift the token distribution over iterations so expert loads
@@ -142,10 +157,11 @@ pub(crate) fn batch_for(dims: &LayerDims, iter: u64, source: usize) -> Vec<f32> 
         .collect()
 }
 
-/// The deterministic control-plane decisions of one iteration: predicted
-/// placement (Algorithm 1) and the two compiled sparse collectives. Every
-/// SPMD rank computes this redundantly from replicated state and gets the
-/// same plan — the SPMD determinism contract (see DESIGN.md) hinges on it.
+/// The deterministic control-plane decisions of one layer's iteration:
+/// predicted placement (Algorithm 1) and the two compiled sparse
+/// collectives. Every SPMD rank computes this redundantly from replicated
+/// state and gets the same plan — the SPMD determinism contract (see
+/// DESIGN.md) hinges on it.
 #[derive(Debug, Clone)]
 pub(crate) struct IterPlan {
     pub placement: Placement,
@@ -166,7 +182,7 @@ pub(crate) fn build_iter_plan(
 }
 
 /// Realized load fractions from the gathered gate decisions (feeds the
-/// predictor for the next iteration).
+/// layer's predictor for the next iteration).
 pub(crate) fn realized_loads(experts: usize, gate_idx: &[Vec<i32>]) -> Vec<f64> {
     let mut load_counts = vec![0usize; experts];
     for idx in gate_idx {
@@ -234,30 +250,76 @@ pub(crate) fn routes_from_gates(
     routes
 }
 
+/// Zero activation (or cotangent) buffers: one `tokens × d_model` row-major
+/// buffer per source.
+pub(crate) fn zero_acts(sources: usize, dims: &LayerDims) -> Vec<Vec<f32>> {
+    vec![vec![0.0f32; dims.tokens * dims.d_model]; sources]
+}
+
+/// Scatter per-token rows back into per-source buffers:
+/// `acc[s][t·dm + c] += rows[i·dm + c]` for the i-th routed token `(s, t)`.
+/// Iteration order (toks order, then column) is part of the bit-exactness
+/// contract — the sequential engine and every SPMD rank apply the same
+/// rows in the same order.
+pub(crate) fn scatter_rows(
+    dims: &LayerDims,
+    toks: &[(usize, usize, f32)],
+    rows: &[f32],
+    acc: &mut [Vec<f32>],
+) {
+    let dm = dims.d_model;
+    for (i, &(s, t, _w)) in toks.iter().enumerate() {
+        let dst = &mut acc[s][t * dm..(t + 1) * dm];
+        for (a, &r) in dst.iter_mut().zip(rows[i * dm..(i + 1) * dm].iter()) {
+            *a += r;
+        }
+    }
+}
+
+/// Pack the routed token rows of one capacity group into a zero-padded
+/// `cap × d_model` kernel input.
+fn pack_group_input(
+    dims: &LayerDims,
+    group: &[(usize, usize, f32)],
+    acts: &[Vec<f32>],
+) -> HostTensor {
+    let mut xin = vec![0.0f32; dims.cap * dims.d_model];
+    for (row, &(s, t, _w)) in group.iter().enumerate() {
+        let src = &acts[s][t * dims.d_model..(t + 1) * dims.d_model];
+        xin[row * dims.d_model..(row + 1) * dims.d_model].copy_from_slice(src);
+    }
+    HostTensor::f32(vec![dims.cap, dims.d_model], xin)
+}
+
 /// Expert forward + combine + loss + backward for every token routed to
-/// one `(device, expert)` pair, accumulating parameter gradients into
-/// `acc` (capacity-tiled, group order — the accumulation order is part of
-/// the bit-exactness contract between executors). Returns the loss
-/// contribution.
+/// one `(device, expert)` pair of the **last** layer, accumulating
+/// parameter gradients into `acc` (capacity-tiled, group order — the
+/// accumulation order is part of the bit-exactness contract between
+/// executors). Returns the loss contribution and the input cotangent rows
+/// (`toks.len() × d_model`, in toks order) for the layer below.
+///
+/// This is the seed engine's fused single-layer step body, verbatim —
+/// `L = 1` bit-identity hangs on it (locked by the module test
+/// `l1_step_matches_seed_oracle_bitwise`). `want_gx` gates the cotangent
+/// extraction: single-layer runs have no layer below, so they skip the
+/// per-group `gx` copy entirely (the returned vec is then empty).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn compute_expert_key(
     compute: &mut Compute,
     dims: &LayerDims,
     chunk: &[f32],
     toks: &[(usize, usize, f32)],
-    batches: &[Vec<f32>],
+    acts: &[Vec<f32>],
     inv_t: f32,
     acc: &mut [f32],
-) -> anyhow::Result<f64> {
+    want_gx: bool,
+) -> anyhow::Result<(f64, Vec<f32>)> {
     let (w1, b1, w2, b2) = unpack_chunk(dims, chunk);
     let mut loss = 0.0f64;
+    let mut gx_rows: Vec<f32> =
+        Vec::with_capacity(if want_gx { toks.len() * dims.d_model } else { 0 });
     for group in toks.chunks(dims.cap) {
-        // pack token rows (zero-padded to cap)
-        let mut xin = vec![0.0f32; dims.cap * dims.d_model];
-        for (row, &(s, t, _w)) in group.iter().enumerate() {
-            let src = &batches[s][t * dims.d_model..(t + 1) * dims.d_model];
-            xin[row * dims.d_model..(row + 1) * dims.d_model].copy_from_slice(src);
-        }
-        let xt = HostTensor::f32(vec![dims.cap, dims.d_model], xin);
+        let xt = pack_group_input(dims, group, acts);
         let y = compute.execute(
             "expert_ffn_fwd",
             &[xt.clone(), w1.clone(), b1.clone(), w2.clone(), b2.clone()],
@@ -278,24 +340,113 @@ pub(crate) fn compute_expert_key(
             "expert_ffn_bwd",
             &[xt, w1.clone(), b1.clone(), w2.clone(), b2.clone(), gyt],
         )?;
-        // out = (gx, gw1, gb1, gw2, gb2); gx unused (gate frozen)
+        // out = (gx, gw1, gb1, gw2, gb2); gx feeds the layer below (the
+        // gate itself stays frozen; single-layer runs discard it unsampled)
+        if want_gx {
+            let gx = out[0].as_f32()?;
+            gx_rows.extend_from_slice(&gx[..group.len() * dims.d_model]);
+        }
         accumulate_grad_chunk(acc, &out[1..5])?;
     }
-    Ok(loss)
+    Ok((loss, gx_rows))
 }
 
-/// Per-iteration statistics of the engine.
+/// Expert forward for one `(device, expert)` key of an **inner** layer:
+/// returns the combine contributions `w·y` per routed token
+/// (`toks.len() × d_model`, in toks order). The caller scatters them into
+/// the next layer's activations ([`scatter_rows`]).
+pub(crate) fn forward_expert_rows(
+    compute: &mut Compute,
+    dims: &LayerDims,
+    chunk: &[f32],
+    toks: &[(usize, usize, f32)],
+    acts: &[Vec<f32>],
+) -> anyhow::Result<Vec<f32>> {
+    let (w1, b1, w2, b2) = unpack_chunk(dims, chunk);
+    let mut rows: Vec<f32> = Vec::with_capacity(toks.len() * dims.d_model);
+    for group in toks.chunks(dims.cap) {
+        let xt = pack_group_input(dims, group, acts);
+        let y = compute.execute(
+            "expert_ffn_fwd",
+            &[xt, w1.clone(), b1.clone(), w2.clone(), b2.clone()],
+        )?;
+        let yv = y[0].as_f32()?;
+        for (row, &(_s, _t, w)) in group.iter().enumerate() {
+            for c in 0..dims.d_model {
+                rows.push(w * yv[row * dims.d_model + c]);
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Expert backward for one `(device, expert)` key of an **inner** layer:
+/// the cotangent of this layer's combine output is `g` (per source), so
+/// each routed token's expert-output cotangent is `w · g[s][t]`. Re-packs
+/// the forward input from `acts` (activations are kept, intermediates are
+/// recomputed by the kernel), accumulates parameter gradients into `acc`,
+/// and returns the input cotangent rows for the layer below.
+pub(crate) fn backward_expert_key(
+    compute: &mut Compute,
+    dims: &LayerDims,
+    chunk: &[f32],
+    toks: &[(usize, usize, f32)],
+    acts: &[Vec<f32>],
+    g: &[Vec<f32>],
+    acc: &mut [f32],
+) -> anyhow::Result<Vec<f32>> {
+    let (w1, b1, w2, b2) = unpack_chunk(dims, chunk);
+    let mut gx_rows: Vec<f32> = Vec::with_capacity(toks.len() * dims.d_model);
+    for group in toks.chunks(dims.cap) {
+        let xt = pack_group_input(dims, group, acts);
+        let mut gy = vec![0.0f32; dims.cap * dims.d_model];
+        for (row, &(s, t, w)) in group.iter().enumerate() {
+            let gsrc = &g[s][t * dims.d_model..(t + 1) * dims.d_model];
+            for (c, &gv) in gsrc.iter().enumerate() {
+                gy[row * dims.d_model + c] = w * gv;
+            }
+        }
+        let gyt = HostTensor::f32(vec![dims.cap, dims.d_model], gy);
+        let out = compute.execute(
+            "expert_ffn_bwd",
+            &[xt, w1.clone(), b1.clone(), w2.clone(), b2.clone(), gyt],
+        )?;
+        let gx = out[0].as_f32()?;
+        gx_rows.extend_from_slice(&gx[..group.len() * dims.d_model]);
+        accumulate_grad_chunk(acc, &out[1..5])?;
+    }
+    Ok(gx_rows)
+}
+
+/// Per-iteration statistics of the engine, aggregated over layers
+/// (sums for counts, means for ratios — at `L = 1` identical to the seed
+/// engine's single-layer stats).
 #[derive(Debug, Clone, Default)]
 pub struct EngineStats {
     pub loss: f64,
-    /// λ of the spAG this iteration.
+    /// Mean λ of the layers' spAGs this iteration.
     pub spag_sparsity: f64,
-    /// Materialized (chunk, device) pairs beyond the shards.
+    /// Materialized (chunk, device) pairs beyond the shards, all layers.
     pub replicas: usize,
-    /// Tokens that crossed devices.
+    /// Tokens that crossed devices, all layers.
     pub remote_tokens: usize,
-    /// Straggler factor of per-device expert tokens.
+    /// Mean straggler factor of per-device expert tokens over layers.
     pub straggler: f64,
+}
+
+/// Everything one MoE layer owns: its shard partition, parameter chunks,
+/// optimizer states, gate weights, and load predictor.
+pub(crate) struct LayerState {
+    /// Expert parameter chunks, placed per `shards` (plus transient
+    /// replicas mid-iteration).
+    pub(crate) params: ClusterMem,
+    pub(crate) shards: Placement,
+    /// Adam state on shard owners only (the single global copy).
+    pub(crate) opt: BTreeMap<usize, AdamState>,
+    /// Gate weights, replicated on every device (dense DP part; frozen in
+    /// the engine — the gate's drift is exogenous, from the data stream).
+    pub(crate) gate_w: Vec<f32>,
+    pub(crate) predictor: LoadPredictor,
 }
 
 /// The engine itself.
@@ -307,20 +458,25 @@ pub struct FssdpEngine {
     pub(crate) compute: Compute,
     /// Engine construction seed (recorded in checkpoints).
     seed: u64,
-    /// Expert parameter chunks, placed per `shards`.
-    pub(crate) params: ClusterMem,
-    pub(crate) shards: Placement,
-    /// Adam state on shard owners only (the single global copy).
-    pub(crate) opt: BTreeMap<usize, AdamState>,
+    /// The MoE layer stack, bottom (layer 0) to top.
+    pub(crate) layers: Vec<LayerState>,
     pub(crate) adam: AdamCfg,
-    /// Gate weights, replicated on every device (dense DP part; frozen in
-    /// the engine — the gate's drift is exogenous, from the data stream).
-    pub(crate) gate_w: Vec<f32>,
-    pub(crate) predictor: LoadPredictor,
     /// Memory headroom per device for Algorithm 1, in expert slots.
     pub mem_slots: usize,
-    /// Overlap degree for Algorithm 1.
+    /// Overlap degree for Algorithms 1 and 2.
     pub overlap_degree: usize,
+    /// Re-run Algorithm 2 (jointly over all layers) every K iterations
+    /// inside [`FssdpEngine::run_span`] (0 = never) — the executed
+    /// Figure 15b sweep.
+    pub reshard_every: usize,
+    /// Cumulative experts moved by in-run re-shards.
+    pub reshards_moved: usize,
+    /// Optional α–β link pacing for the SPMD communicator: transfers then
+    /// occupy wall-clock time proportional to the modeled link, so the
+    /// overlap scheduler's wins are physically measurable. Never affects
+    /// numerics (pacing delays delivery, it cannot reorder the per-buffer
+    /// accumulation orders).
+    pub pacing: Option<Pacing>,
     rng: Rng,
     /// Per-rank metrics merged after the last SPMD span (None before the
     /// first parallel run).
@@ -328,70 +484,131 @@ pub struct FssdpEngine {
 }
 
 impl FssdpEngine {
-    /// Build the engine on the PJRT backend: load artifacts, shard experts
-    /// round-robin, init parameters deterministically from `seed`.
+    /// Build a single-layer engine on the PJRT backend: load artifacts,
+    /// shard experts round-robin, init parameters deterministically from
+    /// `seed`.
     pub fn new(artifact_dir: &str, topo: Topology, seed: u64) -> anyhow::Result<FssdpEngine> {
+        Self::new_layers(artifact_dir, 1, topo, seed)
+    }
+
+    /// Build an `num_layers`-deep engine on the PJRT backend (the layers
+    /// share the artifact's kernels; shapes are identical per layer).
+    pub fn new_layers(
+        artifact_dir: &str,
+        num_layers: usize,
+        topo: Topology,
+        seed: u64,
+    ) -> anyhow::Result<FssdpEngine> {
         let rt = Runtime::open(artifact_dir)?;
         let dims = LayerDims::from_runtime(&rt)?;
-        Ok(Self::init(Compute::Pjrt(rt), dims, topo, seed))
+        Ok(Self::init(Compute::Pjrt(rt), dims, num_layers, topo, seed))
     }
 
-    /// Build the engine on the hermetic pure-Rust reference backend (no
-    /// artifacts / PJRT required) — same math, explicit dimensions.
+    /// Build a single-layer engine on the hermetic pure-Rust reference
+    /// backend (no artifacts / PJRT required) — same math, explicit
+    /// dimensions.
     pub fn new_reference(dims: LayerDims, topo: Topology, seed: u64) -> FssdpEngine {
-        Self::init(Compute::Reference(compute::Reference), dims, topo, seed)
+        Self::new_reference_layers(dims, 1, topo, seed)
     }
 
-    fn init(compute: Compute, dims: LayerDims, topo: Topology, seed: u64) -> FssdpEngine {
-        let nd = topo.num_devices();
-        let shards = Placement::round_robin(dims.experts, nd);
-        let mut rng = Rng::new(seed);
+    /// [`FssdpEngine::new_reference`] with an `num_layers`-deep MoE stack.
+    pub fn new_reference_layers(
+        dims: LayerDims,
+        num_layers: usize,
+        topo: Topology,
+        seed: u64,
+    ) -> FssdpEngine {
+        Self::init(Compute::Reference(compute::Reference), dims, num_layers, topo, seed)
+    }
 
-        // deterministic init: chunk e seeded on (seed, e) only, so the
-        // device count / placement cannot affect initial values.
-        let mut params = ClusterMem::new(nd);
-        let mut opt = BTreeMap::new();
-        for e in 0..dims.experts {
-            let mut er = Rng::new(seed ^ (0x9E37 + e as u64 * 0x1000193));
-            let scale = (dims.d_model as f64).powf(-0.5);
-            let chunk: Vec<f32> =
-                (0..dims.chunk_len()).map(|_| (er.normal() * scale) as f32).collect();
-            let owner = shards.holders(e).next().unwrap();
-            params.dev_mut(owner).insert(e, chunk);
-            opt.insert(e, AdamState::new(dims.chunk_len()));
-        }
+    fn init(
+        compute: Compute,
+        dims: LayerDims,
+        num_layers: usize,
+        topo: Topology,
+        seed: u64,
+    ) -> FssdpEngine {
+        assert!(num_layers >= 1, "engine needs at least one MoE layer");
+        let nd = topo.num_devices();
+        let mut rng = Rng::new(seed);
         let gate_scale = (dims.d_model as f64).powf(-0.5);
-        let gate_w: Vec<f32> = (0..dims.d_model * dims.experts)
-            .map(|_| (rng.normal() * gate_scale * 3.0) as f32)
-            .collect();
-        let predictor = LoadPredictor::new(dims.experts, 5);
+
+        let mut layers = Vec::with_capacity(num_layers);
+        for l in 0..num_layers {
+            let shards = Placement::round_robin(dims.experts, nd);
+            // deterministic init: chunk (l, e) seeded on (seed, l, e) only,
+            // so the device count / placement cannot affect initial values;
+            // the layer-0 formula is exactly the seed engine's (the l term
+            // vanishes), which is what keeps L=1 bit-identical to it.
+            let mut params = ClusterMem::new(nd);
+            let mut opt = BTreeMap::new();
+            for e in 0..dims.experts {
+                let mut er = Rng::new(
+                    seed ^ (0x9E37 + e as u64 * 0x1000193)
+                        ^ (l as u64).wrapping_mul(0xD1B54A32D192ED03),
+                );
+                let scale = (dims.d_model as f64).powf(-0.5);
+                let chunk: Vec<f32> =
+                    (0..dims.chunk_len()).map(|_| (er.normal() * scale) as f32).collect();
+                let owner = shards.holders(e).next().unwrap();
+                params.dev_mut(owner).insert(e, chunk);
+                opt.insert(e, AdamState::new(dims.chunk_len()));
+            }
+            // gate weights are drawn from the engine RNG stream in layer
+            // order — layer 0 first, so L=1 consumes exactly the seed
+            // engine's draws.
+            let gate_w: Vec<f32> = (0..dims.d_model * dims.experts)
+                .map(|_| (rng.normal() * gate_scale * 3.0) as f32)
+                .collect();
+            layers.push(LayerState {
+                params,
+                shards,
+                opt,
+                gate_w,
+                predictor: LoadPredictor::new(dims.experts, 5),
+            });
+        }
         FssdpEngine {
             topo,
             dims,
             executor: Executor::Sequential,
             compute,
             seed,
-            params,
-            shards,
-            opt,
+            layers,
             adam: AdamCfg::default(),
-            gate_w,
-            predictor,
             mem_slots: 4,
             overlap_degree: 4,
+            reshard_every: 0,
+            reshards_moved: 0,
+            pacing: None,
             rng,
             spmd_metrics: None,
         }
     }
 
-    /// Owner device of expert `e`.
-    pub fn owner(&self, e: usize) -> DeviceId {
-        self.shards.holders(e).next().unwrap()
+    /// Number of MoE layers in the stack.
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
     }
 
-    /// The current owner partition.
+    /// Owner device of expert `e` in layer `l`.
+    pub fn owner_at(&self, l: usize, e: usize) -> DeviceId {
+        self.layers[l].shards.holders(e).next().unwrap()
+    }
+
+    /// Owner device of layer 0's expert `e` (single-layer convenience).
+    pub fn owner(&self, e: usize) -> DeviceId {
+        self.owner_at(0, e)
+    }
+
+    /// The current owner partition of layer `l`.
+    pub fn shards_at(&self, l: usize) -> &Placement {
+        &self.layers[l].shards
+    }
+
+    /// Layer 0's owner partition (single-layer convenience).
     pub fn shards(&self) -> &Placement {
-        &self.shards
+        self.shards_at(0)
     }
 
     /// Which backend executes the kernels (`"pjrt"` / `"reference"`).
@@ -399,115 +616,292 @@ impl FssdpEngine {
         self.compute.backend_name()
     }
 
-    /// Read back an expert's parameter chunk (from its owner).
-    pub fn expert_chunk(&self, e: usize) -> &Vec<f32> {
-        self.params.dev(self.owner(e)).get(e).expect("owner holds its shard")
+    /// Read back an expert's parameter chunk in layer `l` (from its owner).
+    pub fn expert_chunk_at(&self, l: usize, e: usize) -> &Vec<f32> {
+        self.layers[l].params.dev(self.owner_at(l, e)).get(e).expect("owner holds its shard")
     }
 
-    /// Run one FSSDP training iteration over `sources` logical data shards
-    /// (== devices in the distributed run; all mapped to device 0 in the
-    /// reference run). Returns iteration statistics.
+    /// Layer 0's expert chunk (single-layer convenience).
+    pub fn expert_chunk(&self, e: usize) -> &Vec<f32> {
+        self.expert_chunk_at(0, e)
+    }
+
+    /// Run one FSSDP training iteration of the whole layer stack over
+    /// `sources` logical data shards (== devices in the distributed run;
+    /// all mapped to device 0 in the reference run). Returns iteration
+    /// statistics. This is the sequential oracle both executors must
+    /// reproduce bit-exactly.
     pub fn step(&mut self, iter: u64, sources: usize) -> anyhow::Result<EngineStats> {
         let nd = self.topo.num_devices();
         let dims = self.dims;
+        let nl = self.layers.len();
+        let cons = MatConstraints { overlap_degree: self.overlap_degree, mem_slots: self.mem_slots };
         let mut stats = EngineStats::default();
 
-        // ---- materialization phase: predict → Algorithm 1 → spAG ----
-        let predicted = self.predictor.predict();
-        let plan = build_iter_plan(
-            &self.topo,
-            &self.shards,
-            &predicted,
-            MatConstraints { overlap_degree: self.overlap_degree, mem_slots: self.mem_slots },
-        )?;
-        let placement = &plan.placement;
-        stats.spag_sparsity = plan.spag.sparsity;
-        stats.replicas = placement.len() - self.shards.len();
-        run_spag(&mut self.params, &plan.spag)?;
-
-        // ---- gate (HLO) per source batch ----
-        let gate_wt = HostTensor::f32(vec![dims.d_model, dims.experts], self.gate_w.clone());
-        let mut batches: Vec<Vec<f32>> = Vec::with_capacity(sources);
-        let mut gate_w_out: Vec<Vec<f32>> = Vec::with_capacity(sources);
-        let mut gate_idx: Vec<Vec<i32>> = Vec::with_capacity(sources);
-        for s in 0..sources {
-            let x = batch_for(&dims, iter, s);
-            let xt = HostTensor::f32(vec![dims.tokens, dims.d_model], x.clone());
-            let out = self.compute.execute("gate_fwd", &[xt, gate_wt.clone()])?;
-            gate_w_out.push(out[1].as_f32()?.to_vec());
-            gate_idx.push(out[2].as_i32()?.to_vec());
-            batches.push(x);
+        // All layers' plans are knowable up front: predictions use history
+        // through iteration `iter - 1` only.
+        let mut plans = Vec::with_capacity(nl);
+        for ls in &self.layers {
+            plans.push(build_iter_plan(&self.topo, &ls.shards, &ls.predictor.predict(), cons)?);
         }
 
-        // realized loads feed the predictor for the NEXT iteration
-        let realized = realized_loads(dims.experts, &gate_idx);
-
-        // ---- dispatch (L3) ----
-        let asg = assignment_matrix(nd, dims.experts, &gate_idx);
-        let dplan = dispatch(&self.topo, placement, &asg);
-        stats.remote_tokens = dplan.remote_tokens();
-        stats.straggler = crate::util::stats::straggler_factor(
-            &dplan.device_compute_tokens().iter().map(|&t| t as f64).collect::<Vec<_>>(),
-        );
-
-        let routes =
-            routes_from_gates(&self.topo, placement, nd, dims.experts, &gate_idx, &gate_w_out);
-
-        // ---- expert forward (HLO), combine, loss, backward (HLO) ----
-        // grads cluster-mem mirrors the materialized placement with zeros
-        let mut grads = ClusterMem::new(nd);
-        for e in 0..dims.experts {
-            for d in placement.holders(e) {
-                grads.dev_mut(d).insert(e, vec![0.0f32; dims.chunk_len()]);
-            }
-        }
-        let mut loss = 0.0f64;
+        // ---- forward sweep ----
+        let mut acts: Vec<Vec<f32>> = (0..sources).map(|s| batch_for(&dims, iter, s)).collect();
+        // inputs of the inner layers, kept for the backward re-pack
+        let mut acts_stack: Vec<Vec<Vec<f32>>> = Vec::with_capacity(nl.saturating_sub(1));
+        let mut all_routes: Vec<Routes> = Vec::with_capacity(nl);
+        let mut grads_stack: Vec<ClusterMem> = Vec::with_capacity(nl);
+        // cotangent of the current layer's input activations (backward)
+        let mut g: Vec<Vec<f32>> = Vec::new();
         let inv_t = 1.0f32 / (dims.tokens * sources) as f32;
-        for (&(dev, e), toks) in &routes {
-            let chunk = self
-                .params
-                .dev(DeviceId(dev))
-                .get(e)
-                .ok_or_else(|| anyhow::anyhow!("device {dev} lacks expert {e}"))?
-                .clone();
-            let acc = grads.dev_mut(DeviceId(dev)).get_mut(e).unwrap();
-            loss +=
-                compute_expert_key(&mut self.compute, &dims, &chunk, toks, &batches, inv_t, acc)?;
+        let mut loss = 0.0f64;
+
+        for l in 0..nl {
+            let last = l + 1 == nl;
+            let plan = &plans[l];
+            stats.spag_sparsity += plan.spag.sparsity;
+            stats.replicas += plan.placement.len() - self.layers[l].shards.len();
+
+            // materialization phase: Algorithm 1 plan → spAG on the buffers
+            run_spag(&mut self.layers[l].params, &plan.spag)?;
+
+            // gate per source on this layer's input activations
+            let gate_wt =
+                HostTensor::f32(vec![dims.d_model, dims.experts], self.layers[l].gate_w.clone());
+            let mut gate_w_out: Vec<Vec<f32>> = Vec::with_capacity(sources);
+            let mut gate_idx: Vec<Vec<i32>> = Vec::with_capacity(sources);
+            for x in acts.iter() {
+                let xt = HostTensor::f32(vec![dims.tokens, dims.d_model], x.clone());
+                let out = self.compute.execute("gate_fwd", &[xt, gate_wt.clone()])?;
+                gate_w_out.push(out[1].as_f32()?.to_vec());
+                gate_idx.push(out[2].as_i32()?.to_vec());
+            }
+            // realized loads feed this layer's predictor for the NEXT iter
+            let realized = realized_loads(dims.experts, &gate_idx);
+            self.layers[l].predictor.observe(&realized);
+
+            // dispatch (L3) stats
+            let asg = assignment_matrix(nd, dims.experts, &gate_idx);
+            let dplan = dispatch(&self.topo, &plan.placement, &asg);
+            stats.remote_tokens += dplan.remote_tokens();
+            stats.straggler += crate::util::stats::straggler_factor(
+                &dplan.device_compute_tokens().iter().map(|&t| t as f64).collect::<Vec<_>>(),
+            );
+
+            let routes =
+                routes_from_gates(&self.topo, &plan.placement, nd, dims.experts, &gate_idx, &gate_w_out);
+
+            // grads cluster-mem mirrors the materialized placement, zeroed
+            let mut grads = ClusterMem::new(nd);
+            for e in 0..dims.experts {
+                for d in plan.placement.holders(e) {
+                    grads.dev_mut(d).insert(e, vec![0.0f32; dims.chunk_len()]);
+                }
+            }
+
+            if last {
+                // fused fwd + loss + bwd (the seed single-layer body);
+                // gx seeds the backward sweep of the layers below
+                let mut gx_acc = if nl > 1 { zero_acts(sources, &dims) } else { Vec::new() };
+                for (&(dev, e), toks) in &routes {
+                    let chunk = self
+                        .layers[l]
+                        .params
+                        .dev(DeviceId(dev))
+                        .get(e)
+                        .ok_or_else(|| anyhow::anyhow!("device {dev} lacks expert {e}"))?
+                        .clone();
+                    let acc = grads.dev_mut(DeviceId(dev)).get_mut(e).unwrap();
+                    let (lo, gx) = compute_expert_key(
+                        &mut self.compute,
+                        &dims,
+                        &chunk,
+                        toks,
+                        &acts,
+                        inv_t,
+                        acc,
+                        nl > 1,
+                    )?;
+                    loss += lo;
+                    if nl > 1 {
+                        scatter_rows(&dims, toks, &gx, &mut gx_acc);
+                    }
+                }
+                g = gx_acc;
+            } else {
+                // inner layer: forward + combine into the next activations
+                let mut next = zero_acts(sources, &dims);
+                for (&(dev, e), toks) in &routes {
+                    let chunk = self
+                        .layers[l]
+                        .params
+                        .dev(DeviceId(dev))
+                        .get(e)
+                        .ok_or_else(|| anyhow::anyhow!("device {dev} lacks expert {e}"))?
+                        .clone();
+                    let rows = forward_expert_rows(&mut self.compute, &dims, &chunk, toks, &acts)?;
+                    scatter_rows(&dims, toks, &rows, &mut next);
+                }
+                acts_stack.push(std::mem::replace(&mut acts, next));
+            }
+            all_routes.push(routes);
+            grads_stack.push(grads);
         }
         stats.loss = loss;
+        stats.spag_sparsity /= nl as f64;
+        stats.straggler /= nl as f64;
 
-        // ---- spRS: reduce gradients to the shard owners ----
-        run_sprs(&mut grads, &plan.sprs, &self.shards)?;
+        // ---- backward sweep, top down: bwd compute (inner layers only;
+        // the last layer's grads are complete) → spRS → Adam → release ----
+        for l in (0..nl).rev() {
+            if l + 1 < nl {
+                let routes = &all_routes[l];
+                let mut g_prev = if l > 0 { zero_acts(sources, &dims) } else { Vec::new() };
+                for (&(dev, e), toks) in routes {
+                    let chunk = self
+                        .layers[l]
+                        .params
+                        .dev(DeviceId(dev))
+                        .get(e)
+                        .ok_or_else(|| anyhow::anyhow!("device {dev} lost expert {e} before bwd"))?
+                        .clone();
+                    let acc = grads_stack[l].dev_mut(DeviceId(dev)).get_mut(e).unwrap();
+                    let gx = backward_expert_key(
+                        &mut self.compute,
+                        &dims,
+                        &chunk,
+                        toks,
+                        &acts_stack[l],
+                        &g,
+                        acc,
+                    )?;
+                    if l > 0 {
+                        scatter_rows(&dims, toks, &gx, &mut g_prev);
+                    }
+                }
+                g = g_prev;
+            }
 
-        // ---- optimizer step on owners; release materialized replicas ----
-        for e in 0..dims.experts {
-            let owner = self.owner(e);
-            let g = grads
-                .dev(owner)
-                .get(e)
-                .ok_or_else(|| anyhow::anyhow!("owner of {e} lost its gradient"))?
-                .clone();
-            let p = self.params.dev_mut(owner).get_mut(e).unwrap();
-            self.opt.get_mut(&e).unwrap().update(&self.adam, p, &g);
-        }
-        // re-materialization: drop non-shard replicas (memory reuse, §4)
-        for d in 0..nd {
-            let dev = DeviceId(d);
-            let resident: Vec<usize> = self.params.dev(dev).chunks().collect();
-            for e in resident {
-                if !self.shards.contains(e, dev) {
-                    self.params.dev_mut(dev).remove(e);
+            // spRS: reduce this layer's gradients to the shard owners
+            run_sprs(&mut grads_stack[l], &plans[l].sprs, &self.layers[l].shards)?;
+
+            // optimizer step on owners; release materialized replicas
+            let layer = &mut self.layers[l];
+            for e in 0..dims.experts {
+                let owner = layer.shards.holders(e).next().unwrap();
+                let grad = grads_stack[l]
+                    .dev(owner)
+                    .get(e)
+                    .ok_or_else(|| anyhow::anyhow!("owner of {e} lost its gradient"))?
+                    .clone();
+                let p = layer.params.dev_mut(owner).get_mut(e).unwrap();
+                layer.opt.get_mut(&e).unwrap().update(&self.adam, p, &grad);
+            }
+            // re-materialization: drop non-shard replicas (memory reuse, §4)
+            for d in 0..nd {
+                let dev = DeviceId(d);
+                let resident: Vec<usize> = layer.params.dev(dev).chunks().collect();
+                for e in resident {
+                    if !layer.shards.contains(e, dev) {
+                        layer.params.dev_mut(dev).remove(e);
+                    }
                 }
             }
         }
 
-        self.predictor.observe(&realized);
         let _ = &self.rng; // reserved for stochastic extensions
         Ok(stats)
     }
 
+    /// Re-run Algorithm 2 jointly over all layers (sticky variant, seeded
+    /// from the current partition) using each layer's predictor window, and
+    /// migrate the owned chunks accordingly. Returns how many experts
+    /// moved. Runs between iteration spans only, so both executors see the
+    /// merged engine state — re-sharding is deterministic in (state, topo).
+    pub fn reshard_now(&mut self) -> usize {
+        let loads: Vec<Vec<f64>> = self.layers.iter().map(|ls| ls.predictor.predict()).collect();
+        let prev = ShardingPlan {
+            layers: self.layers.iter().map(|ls| ls.shards.clone()).collect(),
+        };
+        let plan = sharding::heterogeneous_sticky(
+            &self.topo,
+            &loads,
+            self.overlap_degree.min(self.dims.experts),
+            Some(&prev),
+        );
+        let mut moved = 0usize;
+        for (ls, new_shards) in self.layers.iter_mut().zip(plan.layers) {
+            for e in 0..self.dims.experts {
+                let old_owner = ls.shards.holders(e).next().expect("partition has a holder");
+                let new_owner = new_shards.holders(e).next().expect("partition has a holder");
+                if old_owner != new_owner {
+                    let chunk = ls
+                        .params
+                        .dev_mut(old_owner)
+                        .remove(e)
+                        .expect("old owner holds the chunk between spans");
+                    ls.params.dev_mut(new_owner).insert(e, chunk);
+                    moved += 1;
+                }
+            }
+            ls.shards = new_shards;
+        }
+        self.reshards_moved += moved;
+        moved
+    }
+
     /// Run `iters` consecutive iterations starting at `start` on the
     /// configured [`Executor`], returning per-iteration statistics.
+    ///
+    /// With `reshard_every = K > 0`, the span is split at absolute-step
+    /// multiples of K and [`FssdpEngine::reshard_now`] runs at each
+    /// boundary — Figure 15b executed rather than modeled. Boundaries are
+    /// functions of the absolute step, so span chunking (checkpoint
+    /// cadence, executor) never changes where re-shards happen.
+    pub fn run_span(
+        &mut self,
+        start: u64,
+        iters: usize,
+        sources: usize,
+    ) -> anyhow::Result<Vec<EngineStats>> {
+        if self.reshard_every == 0 {
+            return self.run_span_inner(start, iters, sources);
+        }
+        let k = self.reshard_every as u64;
+        let end = start + iters as u64;
+        let mut out = Vec::with_capacity(iters);
+        let mut step = start;
+        // The SPMD executor replaces `spmd_metrics` per sub-span; merge the
+        // sub-spans so callers see the whole span's timers.
+        let mut span_metrics: Option<Metrics> = None;
+        while step < end {
+            let next_boundary = (step / k + 1) * k;
+            let span = (end.min(next_boundary) - step) as usize;
+            out.extend(self.run_span_inner(step, span, sources)?);
+            if let Some(m) = self.spmd_metrics.take() {
+                match &mut span_metrics {
+                    Some(acc) => acc.merge(&m),
+                    None => span_metrics = Some(m),
+                }
+            }
+            step += span as u64;
+            if step % k == 0 {
+                let moved = self.reshard_now();
+                crate::log_info!("re-shard @ step {step}: {moved} experts moved (Algorithm 2)");
+            }
+        }
+        if let Some(acc) = &mut span_metrics {
+            // `merge` summed the per-sub-span `spmd.ranks` gauge; restore it
+            // to the actual rank count.
+            acc.set("spmd.ranks", self.topo.num_devices() as f64);
+        }
+        if span_metrics.is_some() {
+            self.spmd_metrics = span_metrics;
+        }
+        Ok(out)
+    }
+
+    /// One reshard-free span on the configured executor.
     ///
     /// `Executor::Sequential` loops [`FssdpEngine::step`];
     /// `Executor::Spmd` hands the whole span to the parallel runtime
@@ -515,7 +909,7 @@ impl FssdpEngine {
     /// out per-rank at span entry and merged back at span exit, so
     /// checkpointing, [`FssdpEngine::snapshot`], and `expert_chunk` work
     /// identically under both executors.
-    pub fn run_span(
+    fn run_span_inner(
         &mut self,
         start: u64,
         iters: usize,
@@ -541,20 +935,37 @@ impl FssdpEngine {
         self.spmd_metrics.as_ref()
     }
 
-    // ---- checkpointing (the durable state is exactly the shard set) ----
+    // ---- checkpointing (the durable state is exactly the shard sets) ----
 
     /// Capture the complete training state at a step boundary: every
-    /// expert's parameter chunk + Adam moments (read from their owners),
-    /// the gate weights, the load-predictor sliding window, the RNG stream,
-    /// and `step` (the next iteration to run). `data_shards` is the logical
-    /// data-shard count of the run (`sources` at the `step` call sites) —
-    /// it must survive elastic restarts unchanged.
+    /// layer's expert parameter chunks + Adam moments (read from their
+    /// owners), gate weights and load-predictor window, plus the RNG
+    /// stream and `step` (the next iteration to run). `data_shards` is the
+    /// logical data-shard count of the run (`sources` at the `step` call
+    /// sites) — it must survive elastic restarts unchanged.
     pub fn snapshot(&self, step: u64, data_shards: usize) -> TrainState {
-        let experts: Vec<ExpertState> = (0..self.dims.experts)
-            .map(|e| {
-                let chunk = self.expert_chunk(e).clone();
-                let o = self.opt.get(&e).expect("every expert has optimizer state");
-                ExpertState { chunk, m: o.m.clone(), v: o.v.clone(), t: o.t }
+        let layers: Vec<LayerCkpt> = self
+            .layers
+            .iter()
+            .map(|ls| {
+                let owners: Vec<usize> = (0..self.dims.experts)
+                    .map(|e| ls.shards.holders(e).next().unwrap().0)
+                    .collect();
+                let experts: Vec<ExpertState> = (0..self.dims.experts)
+                    .map(|e| {
+                        let owner = DeviceId(owners[e]);
+                        let chunk =
+                            ls.params.dev(owner).get(e).expect("owner holds its shard").clone();
+                        let o = ls.opt.get(&e).expect("every expert has optimizer state");
+                        ExpertState { chunk, m: o.m.clone(), v: o.v.clone(), t: o.t }
+                    })
+                    .collect();
+                LayerCkpt {
+                    owners,
+                    experts,
+                    gate_w: ls.gate_w.clone(),
+                    predictor_history: ls.predictor.history(),
+                }
             })
             .collect();
         TrainState {
@@ -562,23 +973,22 @@ impl FssdpEngine {
             dims: self.dims,
             seed: self.seed,
             data_shards,
-            owners: (0..self.dims.experts).map(|e| self.owner(e).0).collect(),
-            experts,
-            gate_w: self.gate_w.clone(),
-            predictor_window: self.predictor.window(),
-            predictor_history: self.predictor.history(),
+            layers,
+            predictor_window: self.layers[0].predictor.window(),
             rng_state: self.rng.state(),
             mem_slots: self.mem_slots,
             overlap_degree: self.overlap_degree,
+            reshard_every: self.reshard_every,
         }
     }
 
     /// Rebuild an engine from a restored [`TrainState`] on `topo`, which
     /// may have a *different* device count than the `old_world` that wrote
     /// the checkpoint (elastic resume). Same world size reuses the saved
-    /// owner layout (bit-identical resume); a different world size re-runs
-    /// the heterogeneous sharding planner over the restored load window —
-    /// FSSDP placement freedom guarantees the training math is unchanged.
+    /// owner layouts (bit-identical resume); a different world size re-runs
+    /// the heterogeneous sharding planner jointly over the restored load
+    /// windows — FSSDP placement freedom guarantees the training math is
+    /// unchanged.
     pub fn resume_with(
         compute: Compute,
         topo: Topology,
@@ -586,51 +996,62 @@ impl FssdpEngine {
         old_world: usize,
     ) -> anyhow::Result<(FssdpEngine, ReshardPlan)> {
         let dims = state.dims;
-        anyhow::ensure!(
-            state.experts.len() == dims.experts,
-            "state holds {} experts, dims say {}",
-            state.experts.len(),
-            dims.experts
-        );
+        anyhow::ensure!(!state.layers.is_empty(), "state holds no layers");
         let plan = checkpoint::reshard::plan(state, old_world, &topo)?;
         let nd = topo.num_devices();
-        let mut params = ClusterMem::new(nd);
-        let mut opt = BTreeMap::new();
-        for (e, st) in state.experts.iter().enumerate() {
+        let mut layers = Vec::with_capacity(state.layers.len());
+        for (l, lc) in state.layers.iter().enumerate() {
             anyhow::ensure!(
-                st.chunk.len() == dims.chunk_len(),
-                "expert {e}: chunk has {} floats, dims imply {}",
-                st.chunk.len(),
-                dims.chunk_len()
+                lc.experts.len() == dims.experts,
+                "layer {l} holds {} experts, dims say {}",
+                lc.experts.len(),
+                dims.experts
             );
-            let owner = plan.shards.holders(e).next().expect("partition has a holder");
-            params.dev_mut(owner).insert(e, st.chunk.clone());
-            opt.insert(e, AdamState { m: st.m.clone(), v: st.v.clone(), t: st.t });
+            anyhow::ensure!(
+                lc.gate_w.len() == dims.d_model * dims.experts,
+                "layer {l}: gate_w has {} floats, dims imply {}",
+                lc.gate_w.len(),
+                dims.d_model * dims.experts
+            );
+            let shards = plan.shards[l].clone();
+            let mut params = ClusterMem::new(nd);
+            let mut opt = BTreeMap::new();
+            for (e, st) in lc.experts.iter().enumerate() {
+                anyhow::ensure!(
+                    st.chunk.len() == dims.chunk_len(),
+                    "layer {l} expert {e}: chunk has {} floats, dims imply {}",
+                    st.chunk.len(),
+                    dims.chunk_len()
+                );
+                let owner = shards.holders(e).next().expect("partition has a holder");
+                params.dev_mut(owner).insert(e, st.chunk.clone());
+                opt.insert(e, AdamState { m: st.m.clone(), v: st.v.clone(), t: st.t });
+            }
+            layers.push(LayerState {
+                params,
+                shards,
+                opt,
+                gate_w: lc.gate_w.clone(),
+                predictor: LoadPredictor::restore(
+                    dims.experts,
+                    state.predictor_window,
+                    lc.predictor_history.clone(),
+                ),
+            });
         }
-        anyhow::ensure!(
-            state.gate_w.len() == dims.d_model * dims.experts,
-            "gate_w has {} floats, dims imply {}",
-            state.gate_w.len(),
-            dims.d_model * dims.experts
-        );
         let engine = FssdpEngine {
             topo,
             dims,
             executor: Executor::Sequential,
             compute,
             seed: state.seed,
-            params,
-            shards: plan.shards.clone(),
-            opt,
+            layers,
             adam: AdamCfg::default(),
-            gate_w: state.gate_w.clone(),
-            predictor: LoadPredictor::restore(
-                dims.experts,
-                state.predictor_window,
-                state.predictor_history.clone(),
-            ),
             mem_slots: state.mem_slots,
             overlap_degree: state.overlap_degree,
+            reshard_every: state.reshard_every,
+            reshards_moved: 0,
+            pacing: None,
             rng: Rng::from_state(state.rng_state),
             spmd_metrics: None,
         };
@@ -673,6 +1094,14 @@ pub struct RunOpts {
     pub devices: usize,
     pub iters: usize,
     pub seed: u64,
+    /// MoE layers in the stack. `None` = default (1 on a fresh start,
+    /// the checkpoint's count on resume); `Some(n)` is an explicit request
+    /// and must match the checkpoint when resuming.
+    pub layers: Option<usize>,
+    /// Re-run Algorithm 2 every K iterations. `Some(0)` explicitly
+    /// disables it (distinct from `None`, which keeps a resumed
+    /// checkpoint's cadence).
+    pub reshard_every: Option<usize>,
     /// Snapshot every N iterations into `checkpoint_dir` (0 = off).
     pub checkpoint_every: usize,
     pub checkpoint_dir: Option<String>,
@@ -694,6 +1123,8 @@ impl Default for RunOpts {
             devices: 8,
             iters: 10,
             seed: 42,
+            layers: None,
+            reshard_every: None,
             checkpoint_every: 0,
             checkpoint_dir: None,
             resume: None,
@@ -732,6 +1163,7 @@ pub fn run_demo_with(artifact_dir: &str, opts: &RunOpts) -> anyhow::Result<()> {
         opts.devices % opts.nodes == 0,
         "devices must divide evenly into nodes"
     );
+    anyhow::ensure!(opts.layers != Some(0), "--layers must be at least 1");
     let topo = Topology::cluster_a(opts.nodes, opts.devices / opts.nodes);
     println!("FSSDP numeric engine on {} ({} devices)", topo.name, opts.devices);
 
@@ -761,15 +1193,24 @@ pub fn run_demo_with(artifact_dir: &str, opts: &RunOpts) -> anyhow::Result<()> {
     // Fresh start or elastic resume.
     let (mut engine, mut step, sources) = match &opts.resume {
         None => {
+            let layers = opts.layers.unwrap_or(1);
             let engine = if opts.reference {
-                FssdpEngine::new_reference(reference_dims(), topo, opts.seed)
+                FssdpEngine::new_reference_layers(reference_dims(), layers, topo, opts.seed)
             } else {
-                FssdpEngine::new(artifact_dir, topo, opts.seed)?
+                FssdpEngine::new_layers(artifact_dir, layers, topo, opts.seed)?
             };
             (engine, 0u64, opts.devices)
         }
         Some(dir) => {
             let (state, saved) = checkpoint::load(std::path::Path::new(dir))?;
+            if let Some(l) = opts.layers {
+                anyhow::ensure!(
+                    l == state.num_layers(),
+                    "--layers {l} conflicts with the checkpoint's {} layers \
+                     (omit --layers when resuming)",
+                    state.num_layers()
+                );
+            }
             // The PJRT arm goes through `resume`, which validates the
             // artifact dims against the checkpoint before building.
             let (engine, plan) = if opts.reference {
@@ -778,10 +1219,11 @@ pub fn run_demo_with(artifact_dir: &str, opts: &RunOpts) -> anyhow::Result<()> {
                 FssdpEngine::resume(artifact_dir, topo, &state, saved.world())?
             };
             println!(
-                "resumed step {} from {dir}: {} -> {} devices, {} experts moved ({:.2} MB), {}",
+                "resumed step {} from {dir}: {} -> {} devices, {} layers, {} experts moved ({:.2} MB), {}",
                 state.step,
                 saved.world(),
                 opts.devices,
+                state.num_layers(),
                 plan.moved_experts.len(),
                 plan.bytes_moved as f64 / 1e6,
                 if plan.kept_saved_layout { "layout kept" } else { "re-sharded (Algorithm 2)" },
@@ -789,13 +1231,18 @@ pub fn run_demo_with(artifact_dir: &str, opts: &RunOpts) -> anyhow::Result<()> {
             (engine, state.step, state.data_shards)
         }
     };
+    if let Some(k) = opts.reshard_every {
+        engine.reshard_every = k;
+    }
 
     if opts.parallel {
         engine.executor = Executor::spmd_for(&engine.topo);
     }
 
     println!(
-        "layer: {} experts, d_model {}, d_ffn {}, {} tokens/source, cap {} (backend: {}, {})",
+        "stack: {} layer(s) x {} experts, d_model {}, d_ffn {}, {} tokens/source, cap {} \
+         (backend: {}, {}, reshard every {})",
+        engine.num_layers(),
         engine.dims.experts,
         engine.dims.d_model,
         engine.dims.d_ffn,
@@ -805,6 +1252,11 @@ pub fn run_demo_with(artifact_dir: &str, opts: &RunOpts) -> anyhow::Result<()> {
         match engine.executor {
             Executor::Sequential => "sequential".to_string(),
             Executor::Spmd { threads, .. } => format!("spmd x{threads}"),
+        },
+        if engine.reshard_every == 0 {
+            "never".to_string()
+        } else {
+            engine.reshard_every.to_string()
         }
     );
 
@@ -843,12 +1295,16 @@ pub fn run_demo_with(artifact_dir: &str, opts: &RunOpts) -> anyhow::Result<()> {
             );
         }
     }
+    if engine.reshard_every > 0 {
+        println!("re-shards moved {} expert(s) in total", engine.reshards_moved);
+    }
     if let Some(m) = engine.spmd_metrics() {
         println!(
-            "spmd: compute {:?} | spag wait {:?} | gate+exchange {:?} | sprs {:?} (summed over ranks)",
+            "spmd: compute {:?} | spag wait {:?} | gate+exchange {:?} | combine {:?} | sprs {:?} (summed over ranks)",
             m.timer("spmd.compute"),
             m.timer("spmd.spag_wait"),
             m.timer("spmd.gate"),
+            m.timer("spmd.combine"),
             m.timer("spmd.sprs")
         );
     }
@@ -894,6 +1350,34 @@ mod tests {
     }
 
     #[test]
+    fn multilayer_engine_matches_single_device_reference() {
+        // Placement freedom carries through the layer stack: an L=2
+        // distributed run equals the all-local 1-device run on the same
+        // data within the established tolerance.
+        let sources = 4;
+        let dims = reference_dims();
+        let run = |topo: Topology| -> Vec<Vec<f32>> {
+            let mut e = FssdpEngine::new_reference_layers(dims, 2, topo, 7);
+            for i in 0..3 {
+                e.step(i, sources).unwrap();
+            }
+            let mut out = Vec::new();
+            for l in 0..2 {
+                for x in 0..e.dims.experts {
+                    out.push(e.expert_chunk_at(l, x).clone());
+                }
+            }
+            out
+        };
+        let dist = run(Topology::cluster_a(2, 2));
+        let refr = run(Topology::flat(1, 1e9));
+        for (i, (d, r)) in dist.iter().zip(refr.iter()).enumerate() {
+            let err = max_rel_err(d, r);
+            assert!(err < 2e-3, "chunk {i}: max rel err {err}");
+        }
+    }
+
+    #[test]
     fn reference_engine_loss_decreases() {
         let mut e = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(2, 2), 11);
         let first = e.step(0, 4).unwrap().loss;
@@ -906,16 +1390,159 @@ mod tests {
     }
 
     #[test]
+    fn multilayer_loss_decreases_and_gradients_reach_layer0() {
+        let mut e =
+            FssdpEngine::new_reference_layers(reference_dims(), 3, Topology::cluster_a(2, 2), 11);
+        let before: Vec<Vec<f32>> =
+            (0..e.dims.experts).map(|x| e.expert_chunk_at(0, x).clone()).collect();
+        let first = e.step(0, 4).unwrap().loss;
+        let mut last = first;
+        for i in 1..6 {
+            last = e.step(i, 4).unwrap().loss;
+        }
+        assert!(last < first, "loss {first} -> {last}");
+        // the backward pass must actually reach layer 0's parameters
+        let after: Vec<Vec<f32>> =
+            (0..e.dims.experts).map(|x| e.expert_chunk_at(0, x).clone()).collect();
+        assert_ne!(before, after, "layer-0 parameters must move under training");
+    }
+
+    /// Transcription of the seed (pre-multi-layer) engine's `step` body,
+    /// operating on layer 0 of a 1-layer engine: spAG → gate → routes →
+    /// fused fwd/loss/bwd per key → spRS → Adam → release → observe. Kept
+    /// as the oracle for the L=1 bit-identity lock below.
+    fn seed_oracle_step(e: &mut FssdpEngine, iter: u64, sources: usize) -> f64 {
+        let nd = e.topo.num_devices();
+        let dims = e.dims;
+        let cons = MatConstraints { overlap_degree: e.overlap_degree, mem_slots: e.mem_slots };
+        let predicted = e.layers[0].predictor.predict();
+        let plan = build_iter_plan(&e.topo, &e.layers[0].shards, &predicted, cons).unwrap();
+        run_spag(&mut e.layers[0].params, &plan.spag).unwrap();
+
+        let gate_wt =
+            HostTensor::f32(vec![dims.d_model, dims.experts], e.layers[0].gate_w.clone());
+        let mut batches: Vec<Vec<f32>> = Vec::with_capacity(sources);
+        let mut gate_w_out: Vec<Vec<f32>> = Vec::with_capacity(sources);
+        let mut gate_idx: Vec<Vec<i32>> = Vec::with_capacity(sources);
+        for s in 0..sources {
+            let x = batch_for(&dims, iter, s);
+            let xt = HostTensor::f32(vec![dims.tokens, dims.d_model], x.clone());
+            let out = e.compute.execute("gate_fwd", &[xt, gate_wt.clone()]).unwrap();
+            gate_w_out.push(out[1].as_f32().unwrap().to_vec());
+            gate_idx.push(out[2].as_i32().unwrap().to_vec());
+            batches.push(x);
+        }
+        let realized = realized_loads(dims.experts, &gate_idx);
+        let routes = routes_from_gates(
+            &e.topo,
+            &plan.placement,
+            nd,
+            dims.experts,
+            &gate_idx,
+            &gate_w_out,
+        );
+        let mut grads = ClusterMem::new(nd);
+        for x in 0..dims.experts {
+            for d in plan.placement.holders(x) {
+                grads.dev_mut(d).insert(x, vec![0.0f32; dims.chunk_len()]);
+            }
+        }
+        let mut loss = 0.0f64;
+        let inv_t = 1.0f32 / (dims.tokens * sources) as f32;
+        for (&(dev, x), toks) in &routes {
+            let chunk = e.layers[0].params.dev(DeviceId(dev)).get(x).unwrap().clone();
+            let acc = grads.dev_mut(DeviceId(dev)).get_mut(x).unwrap();
+            let (lo, _gx) =
+                compute_expert_key(&mut e.compute, &dims, &chunk, toks, &batches, inv_t, acc, false)
+                    .unwrap();
+            loss += lo;
+        }
+        run_sprs(&mut grads, &plan.sprs, &e.layers[0].shards).unwrap();
+        let layer = &mut e.layers[0];
+        for x in 0..dims.experts {
+            let owner = layer.shards.holders(x).next().unwrap();
+            let grad = grads.dev(owner).get(x).unwrap().clone();
+            let p = layer.params.dev_mut(owner).get_mut(x).unwrap();
+            layer.opt.get_mut(&x).unwrap().update(&e.adam, p, &grad);
+        }
+        for d in 0..nd {
+            let dev = DeviceId(d);
+            let resident: Vec<usize> = layer.params.dev(dev).chunks().collect();
+            for x in resident {
+                if !layer.shards.contains(x, dev) {
+                    layer.params.dev_mut(dev).remove(x);
+                }
+            }
+        }
+        layer.predictor.observe(&realized);
+        loss
+    }
+
+    #[test]
+    fn l1_step_matches_seed_oracle_bitwise() {
+        // The L=1 multi-layer engine must remain bit-identical to the seed
+        // single-layer engine (transcribed above) — parameters, Adam
+        // moments, and loss.
+        let dims = reference_dims();
+        let sources = 4;
+        let mut a = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 2), 13);
+        let mut b = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 2), 13);
+        for i in 0..3 {
+            let sa = a.step(i, sources).unwrap();
+            let lb = seed_oracle_step(&mut b, i, sources);
+            assert_eq!(sa.loss.to_bits(), lb.to_bits(), "iter {i}: loss must be bit-identical");
+        }
+        for e in 0..dims.experts {
+            assert_eq!(a.expert_chunk(e), b.expert_chunk(e), "expert {e} params");
+            let (oa, ob) = (&a.layers[0].opt[&e], &b.layers[0].opt[&e]);
+            assert_eq!(oa.m, ob.m, "expert {e} Adam m");
+            assert_eq!(oa.v, ob.v, "expert {e} Adam v");
+            assert_eq!(oa.t, ob.t, "expert {e} Adam t");
+        }
+        assert_eq!(
+            a.layers[0].predictor.history(),
+            b.layers[0].predictor.history(),
+            "predictor windows must agree"
+        );
+    }
+
+    #[test]
+    fn reshard_every_keeps_partitions_and_training_health() {
+        let dims = reference_dims();
+        let mut e = FssdpEngine::new_reference_layers(dims, 3, Topology::cluster_a(2, 2), 9);
+        e.reshard_every = 2;
+        let stats = e.run_span(0, 6, 4).unwrap();
+        assert_eq!(stats.len(), 6);
+        assert!(stats[5].loss < stats[0].loss, "loss must still decrease across re-shards");
+        for l in 0..3 {
+            assert!(e.layers[l].shards.is_partition(), "layer {l} must stay a partition");
+            for x in 0..dims.experts {
+                // owner really holds the chunk after migrations
+                let _ = e.expert_chunk_at(l, x);
+            }
+        }
+        // joint slot balance across layers (Figure 8's invariant)
+        let plan = ShardingPlan {
+            layers: e.layers.iter().map(|ls| ls.shards.clone()).collect(),
+        };
+        assert_eq!(plan.slot_imbalance(4), 0, "3*8 experts over 4 devices");
+    }
+
+    #[test]
     fn snapshot_captures_owner_layout() {
-        let mut e = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(2, 2), 5);
+        let mut e =
+            FssdpEngine::new_reference_layers(reference_dims(), 2, Topology::cluster_a(2, 2), 5);
         e.step(0, 4).unwrap();
         let s = e.snapshot(1, 4);
         assert_eq!(s.step, 1);
         assert_eq!(s.data_shards, 4);
-        assert_eq!(s.experts.len(), e.dims.experts);
-        for (x, &o) in s.owners.iter().enumerate() {
-            assert_eq!(o, e.owner(x).0);
-            assert_eq!(s.experts[x].chunk, *e.expert_chunk(x));
+        assert_eq!(s.num_layers(), 2);
+        for (l, layer) in s.layers.iter().enumerate() {
+            assert_eq!(layer.experts.len(), e.dims.experts);
+            for (x, &o) in layer.owners.iter().enumerate() {
+                assert_eq!(o, e.owner_at(l, x).0);
+                assert_eq!(layer.experts[x].chunk, *e.expert_chunk_at(l, x));
+            }
         }
     }
 }

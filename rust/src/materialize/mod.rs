@@ -37,9 +37,15 @@ pub fn overlap_degree(t_non_moe: f64, bw: f64, expert_bytes: f64) -> usize {
 }
 
 /// Indices of the top-`t` experts by load, descending.
+///
+/// Uses `f64::total_cmp`, never `partial_cmp(..).unwrap()`: a degenerate
+/// predictor window (all-zero history normalized 0/0) can surface NaN
+/// loads, and a planner panic mid-training is far worse than a NaN expert
+/// sorting deterministically (total order puts NaN above +inf, so it is
+/// simply treated as hottest).
 pub fn top_by_load(loads: &[f64], t: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..loads.len()).collect();
-    idx.sort_by(|&a, &b| loads[b].partial_cmp(&loads[a]).unwrap().then(a.cmp(&b)));
+    idx.sort_by(|&a, &b| loads[b].total_cmp(&loads[a]).then(a.cmp(&b)));
     idx.truncate(t);
     idx
 }
@@ -267,6 +273,38 @@ mod tests {
         let nodes: std::collections::BTreeSet<usize> =
             plan.holders(0).map(|d| topo.node_of(d).0).collect();
         assert!(nodes.len() >= 3, "expert 0 replicas on nodes {nodes:?}");
+    }
+
+    #[test]
+    fn nan_loads_do_not_panic_and_stay_deterministic() {
+        // Regression: a degenerate predictor window (0/0 normalization) can
+        // hand the planner NaN loads; sorting must not panic.
+        let loads = vec![0.1, f64::NAN, 0.3, 0.0, f64::NAN, 0.2];
+        let top = top_by_load(&loads, 3);
+        assert_eq!(top.len(), 3);
+        // total_cmp puts NaN above every finite value; ties by index.
+        assert_eq!(top, vec![1, 4, 2]);
+        // ...and Algorithm 1 still produces a valid spAG target.
+        let topo = Topology::cluster_a(2, 2);
+        let shards = Placement::round_robin(6, 4);
+        let plan = sparse_materialize(
+            &topo,
+            &shards,
+            &loads,
+            MatConstraints { overlap_degree: 3, mem_slots: 2 },
+        );
+        assert!(shards.is_subset_of(&plan));
+        crate::placement::validate_spag(&shards, &plan).unwrap();
+        // an all-NaN row is the worst case of the degenerate window
+        let all_nan = vec![f64::NAN; 6];
+        assert_eq!(top_by_load(&all_nan, 2), vec![0, 1]);
+        let plan2 = sparse_materialize(
+            &topo,
+            &shards,
+            &all_nan,
+            MatConstraints { overlap_degree: 4, mem_slots: 1 },
+        );
+        assert!(shards.is_subset_of(&plan2));
     }
 
     #[test]

@@ -24,6 +24,11 @@ impl Metrics {
         self.counters.get(name).copied().unwrap_or(0.0)
     }
 
+    /// Overwrite a counter (gauges that must not sum under [`Metrics::merge`]).
+    pub fn set(&mut self, name: &str, v: f64) {
+        self.counters.insert(name.to_string(), v);
+    }
+
     /// Accumulate an externally measured duration (for call sites where a
     /// closure does not fit, e.g. `?`-heavy phases of the SPMD rank loop).
     pub fn add_duration(&mut self, name: &str, d: Duration) {

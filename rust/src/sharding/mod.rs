@@ -51,6 +51,11 @@ pub fn homogeneous(num_layers: usize, experts: usize, num_devices: usize) -> Sha
 /// * `loads[l][e]` — load distribution `F^g` across all MoE layers;
 /// * `t` — overlap degree (top-`t` experts per layer are "overlappable" and
 ///   placed last, since sparse materialization will replicate them anyway).
+///
+/// All load comparisons use `f64::total_cmp`: a degenerate predictor window
+/// (all-zero history → 0/0 normalization) can yield NaN loads, and the
+/// planner must degrade to a deterministic (if arbitrary) placement rather
+/// than panic mid-training.
 pub fn heterogeneous(topo: &Topology, loads: &[Vec<f64>], t: usize) -> ShardingPlan {
     heterogeneous_sticky(topo, loads, t, None)
 }
@@ -107,12 +112,12 @@ pub fn heterogeneous_sticky(
                 .fold(0.0, f64::max)
         })
         .collect();
-    layer_order.sort_by(|&a, &b| layer_max[b].partial_cmp(&layer_max[a]).unwrap());
+    layer_order.sort_by(|&a, &b| layer_max[b].total_cmp(&layer_max[a]));
 
     for &l in &layer_order {
         let mut under: Vec<usize> =
             (0..experts).filter(|e| !overlappable[l].contains(e)).collect();
-        under.sort_by(|&a, &b| loads[l][b].partial_cmp(&loads[l][a]).unwrap());
+        under.sort_by(|&a, &b| loads[l][b].total_cmp(&loads[l][a]));
         for e in under {
             // line 10: least-loaded node; tie -> fewer available slots.
             let node = topo
@@ -121,7 +126,7 @@ pub fn heterogeneous_sticky(
                 .min_by(|&a, &b| {
                     let la = node_load[l][a.0];
                     let lb = node_load[l][b.0];
-                    la.partial_cmp(&lb).unwrap().then_with(|| {
+                    la.total_cmp(&lb).then_with(|| {
                         let sa: usize = topo.devices_on(a).map(|d| slots[d.0]).sum();
                         let sb: usize = topo.devices_on(b).map(|d| slots[d.0]).sum();
                         sa.cmp(&sb)
@@ -134,8 +139,7 @@ pub fn heterogeneous_sticky(
                 .filter(|d| slots[d.0] > 0)
                 .min_by(|a, b| {
                     dev_load[l][a.0]
-                        .partial_cmp(&dev_load[l][b.0])
-                        .unwrap()
+                        .total_cmp(&dev_load[l][b.0])
                         .then(slots[a.0].cmp(&slots[b.0]))
                 })
                 .unwrap();
@@ -167,7 +171,7 @@ pub fn heterogeneous_sticky(
     // (zero movement on re-shard), falling back to least-loaded.
     for l in 0..num_layers {
         let mut over = overlappable[l].clone();
-        over.sort_by(|&a, &b| loads[l][b].partial_cmp(&loads[l][a]).unwrap());
+        over.sort_by(|&a, &b| loads[l][b].total_cmp(&loads[l][a]));
         for e in over {
             let prev_dev = prev
                 .and_then(|p| p.layers.get(l))
@@ -178,8 +182,7 @@ pub fn heterogeneous_sticky(
                     .filter(|d| slots[d.0] > 0)
                     .min_by(|a, b| {
                         dev_load[l][a.0]
-                            .partial_cmp(&dev_load[l][b.0])
-                            .unwrap()
+                            .total_cmp(&dev_load[l][b.0])
                             .then(a.0.cmp(&b.0))
                     })
                     .expect("slot arithmetic violated")
@@ -350,6 +353,31 @@ mod tests {
             assert!(p.is_partition());
         }
         assert!(sticky.slot_imbalance(topo.num_devices()) <= 1);
+    }
+
+    #[test]
+    fn nan_load_rows_do_not_panic_the_planner() {
+        // Regression: NaN in any layer's load row (degenerate predictor
+        // window) must not panic any of the planner's sorts; the result is
+        // still a balanced partition.
+        let topo = Topology::cluster_a(2, 2);
+        let mut rng = Rng::new(17);
+        let mut loads = gen_loads(&mut rng, 3, 8);
+        loads[1][2] = f64::NAN;
+        loads[1][5] = f64::NAN;
+        let plan = heterogeneous(&topo, &loads, 2);
+        for p in &plan.layers {
+            assert!(p.is_partition());
+        }
+        assert_eq!(plan.slot_imbalance(4), 0, "3*8 divisible by 4");
+
+        // worst case: one layer entirely NaN, plus sticky re-shard over it
+        loads[2] = vec![f64::NAN; 8];
+        let plan2 = heterogeneous_sticky(&topo, &loads, 2, Some(&plan));
+        for p in &plan2.layers {
+            assert!(p.is_partition());
+        }
+        assert_eq!(plan2.slot_imbalance(4), 0);
     }
 
     #[test]

@@ -42,18 +42,27 @@ pub enum MsgKind {
     SprsChunk,
     /// Gate-decision exchange (`a` = sending rank, `b` = 0).
     Gate,
+    /// Inter-layer combine exchange: each rank broadcasts its routed
+    /// tokens' weighted expert outputs (`a` = sending rank, `b` = 0).
+    Combine,
+    /// Inter-layer input-cotangent exchange during backward
+    /// (`a` = sending rank, `b` = 0).
+    GradX,
     /// Free-form control/test traffic.
     Ctrl,
 }
 
 /// Matching key of a message. Two messages on one link never share a tag
 /// within an iteration (the sparse plans contain at most one transfer per
-/// `(chunk, src, dst, stage)`), so matching is unambiguous.
+/// `(layer, chunk, src, dst, stage)`), so matching is unambiguous.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub struct Tag {
     pub iter: u64,
     pub kind: MsgKind,
-    /// Chunk id for collectives, sending rank for gate exchange.
+    /// MoE layer the message belongs to (chunk ids repeat across layers,
+    /// so layer is part of the matching key).
+    pub layer: usize,
+    /// Chunk id for collectives, sending rank for gate/combine exchanges.
     pub a: usize,
     /// Stage for collectives, 0 otherwise.
     pub b: usize,
@@ -324,16 +333,17 @@ impl RankComm {
     }
 
     /// Each rank contributes one buffer; returns all ranks' buffers
-    /// indexed by rank. Tag disambiguation: `(iter, kind, sender, 0)`.
+    /// indexed by rank. Tag disambiguation: `(iter, kind, layer, sender, 0)`.
     pub fn allgather(
         &mut self,
         iter: u64,
         kind: MsgKind,
+        layer: usize,
         mine: Vec<f32>,
     ) -> anyhow::Result<Vec<Vec<f32>>> {
         for dst in 0..self.n {
             if dst != self.me {
-                self.isend(dst, Tag { iter, kind, a: self.me, b: 0 }, mine.clone())?;
+                self.isend(dst, Tag { iter, kind, layer, a: self.me, b: 0 }, mine.clone())?;
             }
         }
         let mut out: Vec<Vec<f32>> = Vec::with_capacity(self.n);
@@ -341,7 +351,7 @@ impl RankComm {
             if src == self.me {
                 out.push(mine.clone());
             } else {
-                out.push(self.recv(src, Tag { iter, kind, a: src, b: 0 })?);
+                out.push(self.recv(src, Tag { iter, kind, layer, a: src, b: 0 })?);
             }
         }
         Ok(out)
@@ -354,7 +364,7 @@ mod tests {
     use std::thread;
 
     fn tag(iter: u64, a: usize) -> Tag {
-        Tag { iter, kind: MsgKind::Ctrl, a, b: 0 }
+        Tag { iter, kind: MsgKind::Ctrl, layer: 0, a, b: 0 }
     }
 
     #[test]
@@ -385,6 +395,24 @@ mod tests {
         });
         assert_eq!(c1.recv(0, tag(4, 0)).unwrap(), vec![4.0]);
         assert_eq!(c1.recv(0, tag(5, 0)).unwrap(), vec![5.0]);
+        sender.join().unwrap();
+    }
+
+    #[test]
+    fn layers_disambiguate_same_chunk_and_stage() {
+        // Two layers' spAG transfers of the same chunk id must not match
+        // each other's receives.
+        let mut comms = fabric(2, None);
+        let mut c1 = comms.remove(1);
+        let c0 = comms.remove(0);
+        let mk = |layer: usize| Tag { iter: 0, kind: MsgKind::SpagChunk, layer, a: 3, b: 0 };
+        let sender = thread::spawn(move || {
+            c0.isend(1, mk(1), vec![1.0]).unwrap();
+            c0.isend(1, mk(0), vec![0.0]).unwrap();
+            c0
+        });
+        assert_eq!(c1.recv(0, mk(0)).unwrap(), vec![0.0]);
+        assert_eq!(c1.recv(0, mk(1)).unwrap(), vec![1.0]);
         sender.join().unwrap();
     }
 
@@ -429,7 +457,7 @@ mod tests {
                 thread::spawn(move || {
                     c.barrier();
                     let mine = vec![c.me as f32; c.me + 1];
-                    let all = c.allgather(9, MsgKind::Ctrl, mine).unwrap();
+                    let all = c.allgather(9, MsgKind::Ctrl, 0, mine).unwrap();
                     c.barrier();
                     all
                 })

@@ -4,23 +4,33 @@
 //! memories in one sequential loop; this module is the SPMD port: every
 //! rank walks the *same* plan but only acts on transfers it sources
 //! (isend) or sinks (receive + insert/accumulate), staged exactly as the
-//! plan's `stage` field dictates.
+//! plan's `stage` field dictates. Every tag carries the MoE layer, so a
+//! multi-layer iteration's collectives (and run-ahead into the next
+//! iteration) never cross-match.
 //!
 //! Determinism contract (bit-exactness vs the sequential executor):
 //!
 //! * **spAG** only copies buffers — any completion order is bit-identical.
 //! * **spRS** accumulates. The sequential executor applies a stage's
-//!   transfers in plan order; [`run_sprs_rank`] therefore completes a
-//!   rank's incoming reduces of each stage *in plan order*, which is the
-//!   same per-buffer floating-point order (transfers into one buffer are
-//!   totally ordered by (stage, plan index) in both executors).
+//!   transfers in plan order; [`RankSprs`] therefore completes a rank's
+//!   incoming reduces of each stage *in plan order*, which is the same
+//!   per-buffer floating-point order (transfers into one buffer are
+//!   totally ordered by (stage, plan index) in both executors). Splitting
+//!   [`RankSprs::begin`] (stage-0 sends) from [`RankSprs::finish`]
+//!   (everything else) moves no receive and reorders no accumulation — it
+//!   only lets the sends' flight time overlap the next layer's backward
+//!   compute (§4.3 cross-layer pipeline).
 //!
 //! Deadlock freedom:
 //!
-//! * [`run_sprs_rank`] is stage-synchronous per rank: all stage-`s` sends
-//!   are issued (nonblocking) before any stage-`s` receive blocks, and
-//!   stage `s` receives depend only on stage-`s` sends, which every rank
-//!   issues after completing stage `s-1` — an acyclic stage DAG.
+//! * [`RankSprs`] is stage-synchronous per rank: all stage-`s` sends are
+//!   issued (nonblocking) before any stage-`s` receive blocks, and stage
+//!   `s` receives depend only on stage-`s` sends, which every rank issues
+//!   after completing stage `s-1` — an acyclic stage DAG. With the split
+//!   begin/finish, stage-0 sends happen at `begin` and stages ≥ 1 inside
+//!   `finish`; every rank reaches its `finish` without waiting on a peer's
+//!   `finish` (the interleaved work is compute plus allgathers whose sends
+//!   precede any blocking spRS receive in program order).
 //! * [`RankSpag`] (the overlapped spAG) never blocks on one message: it
 //!   polls all outstanding receives, forwarding fan-out sends as chunks
 //!   land, so a rank stalled on a late chunk still serves its own
@@ -39,12 +49,12 @@ use super::comm::{MsgKind, RankComm, Tag};
 /// Poll interval while waiting for in-flight spAG chunks.
 const POLL: Duration = Duration::from_micros(20);
 
-fn spag_tag(iter: u64, t: &Transfer) -> Tag {
-    Tag { iter, kind: MsgKind::SpagChunk, a: t.chunk, b: t.stage }
+fn spag_tag(iter: u64, layer: usize, t: &Transfer) -> Tag {
+    Tag { iter, kind: MsgKind::SpagChunk, layer, a: t.chunk, b: t.stage }
 }
 
-fn sprs_tag(iter: u64, t: &Transfer) -> Tag {
-    Tag { iter, kind: MsgKind::SprsChunk, a: t.chunk, b: t.stage }
+fn sprs_tag(iter: u64, layer: usize, t: &Transfer) -> Tag {
+    Tag { iter, kind: MsgKind::SprsChunk, layer, a: t.chunk, b: t.stage }
 }
 
 /// One rank's in-flight SparseAllGather: issue sends up front, complete
@@ -54,6 +64,7 @@ pub struct RankSpag<'p> {
     plan: &'p SparsePlan,
     me: usize,
     iter: u64,
+    layer: usize,
     /// Plan indices of transfers destined to this rank, not yet received.
     pending_recv: Vec<usize>,
     /// Plan indices of transfers sourced here whose chunk was not resident
@@ -71,12 +82,19 @@ impl<'p> RankSpag<'p> {
         plan: &'p SparsePlan,
         me: usize,
         iter: u64,
+        layer: usize,
         store: &ChunkStore,
         comm: &RankComm,
         pre_issued: &BTreeSet<(ChunkId, usize)>,
     ) -> anyhow::Result<RankSpag<'p>> {
-        let mut s =
-            RankSpag { plan, me, iter, pending_recv: Vec::new(), pending_send: Vec::new() };
+        let mut s = RankSpag {
+            plan,
+            me,
+            iter,
+            layer,
+            pending_recv: Vec::new(),
+            pending_send: Vec::new(),
+        };
         for (ti, t) in plan.transfers.iter().enumerate() {
             anyhow::ensure!(!t.reduce, "spAG plan must not contain reduce transfers");
             if t.dst.0 == me {
@@ -87,7 +105,7 @@ impl<'p> RankSpag<'p> {
                     continue;
                 }
                 if let Some(buf) = store.get(t.chunk) {
-                    comm.isend(t.dst.0, spag_tag(iter, t), buf.clone())?;
+                    comm.isend(t.dst.0, spag_tag(iter, layer, t), buf.clone())?;
                 } else {
                     s.pending_send.push(ti);
                 }
@@ -128,8 +146,9 @@ impl<'p> RankSpag<'p> {
                 self.pending_recv.iter().any(|&ti| self.plan.transfers[ti].chunk == c);
             if !store.contains(c) && !inbound {
                 anyhow::bail!(
-                    "rank {}: chunk {c} neither resident nor inbound in the spAG plan",
-                    self.me
+                    "rank {}: chunk {c} neither resident nor inbound in the layer-{} spAG plan",
+                    self.me,
+                    self.layer
                 );
             }
         }
@@ -147,7 +166,7 @@ impl<'p> RankSpag<'p> {
             let mut i = 0;
             while i < self.pending_recv.len() {
                 let t = self.plan.transfers[self.pending_recv[i]];
-                let r = comm.irecv(t.src.0, spag_tag(self.iter, &t));
+                let r = comm.irecv(t.src.0, spag_tag(self.iter, self.layer, &t));
                 if let Some(buf) = comm.try_wait(r)? {
                     store.insert(t.chunk, buf);
                     self.pending_recv.remove(i);
@@ -175,7 +194,7 @@ impl<'p> RankSpag<'p> {
             let t = self.plan.transfers[self.pending_send[i]];
             if t.chunk == chunk {
                 let buf = store.get(chunk).expect("chunk just inserted").clone();
-                comm.isend(t.dst.0, spag_tag(self.iter, &t), buf)?;
+                comm.isend(t.dst.0, spag_tag(self.iter, self.layer, &t), buf)?;
                 self.pending_send.remove(i);
             } else {
                 i += 1;
@@ -192,65 +211,128 @@ pub fn run_spag_rank(
     plan: &SparsePlan,
     me: usize,
     iter: u64,
+    layer: usize,
     comm: &mut RankComm,
 ) -> anyhow::Result<()> {
-    let mut s = RankSpag::begin(plan, me, iter, store, comm, &BTreeSet::new())?;
+    let mut s = RankSpag::begin(plan, me, iter, layer, store, comm, &BTreeSet::new())?;
     s.finish(store, comm)
 }
 
-/// This rank's slice of a SparseReduceScatter: stage-synchronous sends and
-/// plan-ordered receive/accumulate, then release of non-owner replicas.
-/// Matches [`crate::collectives::exec::run_sprs`] bit-for-bit on the owner
-/// buffers (same per-buffer accumulation order).
+/// One rank's in-flight SparseReduceScatter, split so its wire time can
+/// hide under the next layer's backward compute: [`RankSprs::begin`]
+/// issues this rank's stage-0 sends (reading the final gradient buffers),
+/// [`RankSprs::finish`] runs the remaining stage loop (receives in plan
+/// order, later-stage sends) and the owner scatter.
+pub struct RankSprs<'p> {
+    plan: &'p SparsePlan,
+    owners: &'p Placement,
+    me: usize,
+    iter: u64,
+    layer: usize,
+}
+
+impl<'p> RankSprs<'p> {
+    fn issue_stage_sends(
+        &self,
+        stage: usize,
+        store: &ChunkStore,
+        comm: &RankComm,
+    ) -> anyhow::Result<()> {
+        for t in self.plan.transfers.iter().filter(|t| t.stage == stage && t.src.0 == self.me) {
+            let buf = store
+                .get(t.chunk)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "spRS rank {} layer {}: missing source chunk {}",
+                        self.me,
+                        self.layer,
+                        t.chunk
+                    )
+                })?
+                .clone();
+            comm.isend(t.dst.0, sprs_tag(self.iter, self.layer, t), buf)?;
+        }
+        Ok(())
+    }
+
+    /// Register the plan and issue this rank's stage-0 sends. The gradient
+    /// buffers must be final — `finish` assumes stage-0 payloads already
+    /// carry the pre-reduce state.
+    pub fn begin(
+        plan: &'p SparsePlan,
+        owners: &'p Placement,
+        me: usize,
+        iter: u64,
+        layer: usize,
+        store: &ChunkStore,
+        comm: &RankComm,
+    ) -> anyhow::Result<RankSprs<'p>> {
+        let s = RankSprs { plan, owners, me, iter, layer };
+        if plan.num_stages > 0 {
+            s.issue_stage_sends(0, store, comm)?;
+        }
+        Ok(s)
+    }
+
+    /// Run the remaining stage loop: per stage, receives in **plan order**
+    /// (the sequential executor's per-buffer accumulation order), then the
+    /// next stage's sends; finally release replicas not owned per the
+    /// post-condition (the "scatter").
+    pub fn finish(self, store: &mut ChunkStore, comm: &mut RankComm) -> anyhow::Result<()> {
+        for stage in 0..self.plan.num_stages {
+            if stage > 0 {
+                // Sends read post-(stage-1) state; issuing before any
+                // receive of this stage keeps the stage DAG acyclic.
+                self.issue_stage_sends(stage, store, comm)?;
+            }
+            for t in
+                self.plan.transfers.iter().filter(|t| t.stage == stage && t.dst.0 == self.me)
+            {
+                let buf = comm.recv(t.src.0, sprs_tag(self.iter, self.layer, t))?;
+                if t.reduce {
+                    let acc = store.get_mut(t.chunk).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "spRS rank {} layer {}: reduce destination lacks chunk {}",
+                            self.me,
+                            self.layer,
+                            t.chunk
+                        )
+                    })?;
+                    anyhow::ensure!(acc.len() == buf.len(), "chunk size mismatch");
+                    for (a, b) in acc.iter_mut().zip(buf.iter()) {
+                        *a += b;
+                    }
+                } else {
+                    store.insert(t.chunk, buf);
+                }
+            }
+        }
+        // Scatter: release replicas not owned per the post-condition.
+        let resident: Vec<ChunkId> = store.chunks().collect();
+        for c in resident {
+            if !self.owners.contains(c, DeviceId(self.me)) {
+                store.remove(c);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// This rank's slice of a SparseReduceScatter, start to finish: stage-
+/// synchronous sends and plan-ordered receive/accumulate, then release of
+/// non-owner replicas. Matches [`crate::collectives::exec::run_sprs`]
+/// bit-for-bit on the owner buffers (same per-buffer accumulation order).
 pub fn run_sprs_rank(
     store: &mut ChunkStore,
     plan: &SparsePlan,
     owners: &Placement,
     me: usize,
     iter: u64,
+    layer: usize,
     comm: &mut RankComm,
 ) -> anyhow::Result<()> {
-    for stage in 0..plan.num_stages {
-        // Sends first (nonblocking): they must read pre-stage state, and
-        // issuing before any receive of this stage keeps the stage DAG
-        // acyclic across ranks.
-        for t in plan.transfers.iter().filter(|t| t.stage == stage && t.src.0 == me) {
-            let buf = store
-                .get(t.chunk)
-                .ok_or_else(|| {
-                    anyhow::anyhow!("spRS rank {me}: missing source chunk {}", t.chunk)
-                })?
-                .clone();
-            comm.isend(t.dst.0, sprs_tag(iter, t), buf)?;
-        }
-        // Receives in plan order — the sequential executor's accumulation
-        // order per destination buffer.
-        for t in plan.transfers.iter().filter(|t| t.stage == stage && t.dst.0 == me) {
-            let buf = comm.recv(t.src.0, sprs_tag(iter, t))?;
-            if t.reduce {
-                let acc = store.get_mut(t.chunk).ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "spRS rank {me}: reduce destination lacks chunk {}",
-                        t.chunk
-                    )
-                })?;
-                anyhow::ensure!(acc.len() == buf.len(), "chunk size mismatch");
-                for (a, b) in acc.iter_mut().zip(buf.iter()) {
-                    *a += b;
-                }
-            } else {
-                store.insert(t.chunk, buf);
-            }
-        }
-    }
-    // Scatter: release replicas not owned per the post-condition.
-    let resident: Vec<ChunkId> = store.chunks().collect();
-    for c in resident {
-        if !owners.contains(c, DeviceId(me)) {
-            store.remove(c);
-        }
-    }
-    Ok(())
+    let s = RankSprs::begin(plan, owners, me, iter, layer, store, comm)?;
+    s.finish(store, comm)
 }
 
 #[cfg(test)]
@@ -317,7 +399,7 @@ mod tests {
         run_spag(&mut seq, &plan).unwrap();
 
         let stores = run_ranks(mem.devices.clone(), |me, store, comm| {
-            run_spag_rank(store, &plan, me, 0, comm)
+            run_spag_rank(store, &plan, me, 0, 0, comm)
         });
         for (d, (got, want)) in stores.iter().zip(seq.devices.iter()).enumerate() {
             let gc: Vec<_> = got.chunks().collect();
@@ -344,7 +426,7 @@ mod tests {
         run_sprs(&mut seq, &plan, &owners).unwrap();
 
         let stores = run_ranks(grads.devices.clone(), |me, store, comm| {
-            run_sprs_rank(store, &plan, &owners, me, 0, comm)
+            run_sprs_rank(store, &plan, &owners, me, 0, 0, comm)
         });
         for c in 0..8 {
             let owner = owners.holders(c).next().unwrap();
@@ -357,6 +439,36 @@ mod tests {
             for c in store.chunks() {
                 assert!(owners.contains(c, DeviceId(d)), "device {d} kept chunk {c}");
             }
+        }
+    }
+
+    #[test]
+    fn split_sprs_begin_finish_matches_sequential_bitwise() {
+        // The cross-layer pipeline's begin/finish split must leave owner
+        // sums bit-identical to the one-shot path.
+        let t = Topology::cluster_a(2, 2);
+        let owners = Placement::round_robin(8, 4);
+        let materialized = random_post(&owners, 10, 5);
+        let plan = build_sprs(&t, &materialized, &owners).unwrap();
+
+        let mut grads = ClusterMem::new(4);
+        let mut rng = Rng::new(6);
+        fill(&mut grads, &materialized, 16, &mut rng);
+        let mut seq = grads.clone();
+        run_sprs(&mut seq, &plan, &owners).unwrap();
+
+        let stores = run_ranks(grads.devices.clone(), |me, store, comm| {
+            let s = RankSprs::begin(&plan, &owners, me, 4, 2, store, comm)?;
+            // unrelated work happens here in the real pipeline
+            s.finish(store, comm)
+        });
+        for c in 0..8 {
+            let owner = owners.holders(c).next().unwrap();
+            assert_eq!(
+                stores[owner.0].get(c).unwrap(),
+                seq.dev(owner).get(c).unwrap(),
+                "owner sum of chunk {c}"
+            );
         }
     }
 
@@ -377,7 +489,7 @@ mod tests {
         let want1 = mem.dev(DeviceId(1)).get(1).unwrap().clone();
 
         let stores = run_ranks(mem.devices.clone(), |me, store, comm| {
-            let mut s = RankSpag::begin(&plan, me, 0, store, comm, &BTreeSet::new())?;
+            let mut s = RankSpag::begin(&plan, me, 0, 0, store, comm, &BTreeSet::new())?;
             if me == 2 {
                 // pull in reverse plan order to exercise out-of-order ensure
                 s.ensure(store, comm, 1)?;
@@ -399,7 +511,7 @@ mod tests {
         let comms = fabric(1, None);
         let mut comm = comms.into_iter().next().unwrap();
         let mut store = ChunkStore::new();
-        let mut s = RankSpag::begin(&plan, 0, 0, &store, &comm, &BTreeSet::new()).unwrap();
+        let mut s = RankSpag::begin(&plan, 0, 0, 0, &store, &comm, &BTreeSet::new()).unwrap();
         assert!(s.ensure(&mut store, &mut comm, 1).is_err());
     }
 }

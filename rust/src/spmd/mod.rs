@@ -2,41 +2,54 @@
 //! thread per simulated rank**, connected by an in-process communicator.
 //!
 //! The sequential engine ([`FssdpEngine::step`]) is the oracle: it walks
-//! all N device memories in one loop. This module executes the *same*
-//! iteration — the same plans, the same kernels, the same floating-point
-//! orders — as N true SPMD programs:
+//! all N device memories in one loop, layer by layer. This module executes
+//! the *same* iteration — the same plans, the same kernels, the same
+//! floating-point orders — as N true SPMD programs:
 //!
 //! * [`comm`] — per-link mailboxes over `std::sync::mpsc` with MPI-style
-//!   tag matching, barrier, nonblocking `isend`/`irecv` + completion
-//!   handles, and optional α–β link pacing.
-//! * [`exec`] — per-rank spAG/spRS execution ([`exec::run_spag_rank`],
-//!   [`exec::run_sprs_rank`]), staged exactly as the compiled
+//!   tag matching (tags carry iteration **and layer**), barrier,
+//!   nonblocking `isend`/`irecv` + completion handles, and optional α–β
+//!   link pacing.
+//! * [`exec`] — per-rank spAG/spRS execution ([`exec::RankSpag`],
+//!   [`exec::RankSprs`]), staged exactly as the compiled
 //!   [`SparsePlan`](crate::collectives::sparse::SparsePlan) dictates.
 //! * [`sched`] — the overlap scheduler: lazy replica materialization
-//!   during expert compute plus eager issue of the *next* iteration's
-//!   spAG right after each owner's Adam update (§4.3 re-materialization
-//!   overlap), with iteration-tagged messages instead of barriers.
+//!   during expert compute, the §4.3 **cross-layer pipeline** (layer
+//!   `l+1`'s spAG issued while layer `l` computes; layer `l+1`'s spRS
+//!   finished under layer `l`'s backward), and eager issue of the *next*
+//!   iteration's spAG right after each owner's Adam update, with
+//!   (iteration, layer)-tagged messages instead of barriers.
+//!
+//! Layer boundaries add two data-plane exchanges the single-layer engine
+//! never needed: after an inner layer's expert compute, every rank
+//! broadcasts its routed tokens' **combine contributions** (`w·y` rows) so
+//! all ranks assemble the next layer's activations identically, and during
+//! backward the **input cotangents** (`gx` rows) flow the same way. Both
+//! are assembled in the sequential engine's exact `(device, expert)` scan
+//! order, so every f32 add lands in the same order on every rank.
 //!
 //! ## Determinism contract
 //!
 //! The parallel executor produces **bit-identical** expert parameters to
 //! the sequential engine at the same seed because:
 //!
-//! 1. All control-plane state (predictor window, shard map, gate weights)
-//!    is replicated and updated deterministically from globally exchanged
-//!    gate decisions — every rank computes the same
-//!    [`IterPlan`](crate::fssdp) and route map redundantly.
-//! 2. Token batches are deterministic in `(iter, source)`, so ranks
-//!    regenerate remote tokens locally; only gate decisions and chunk
-//!    buffers cross the wire.
+//! 1. All control-plane state (predictor windows, shard maps, gate
+//!    weights) is replicated and updated deterministically from globally
+//!    exchanged gate decisions — every rank computes the same per-layer
+//!    [`IterPlan`](crate::fssdp) and route maps redundantly.
+//! 2. Layer-0 token batches are deterministic in `(iter, source)`, and
+//!    deeper activations are assembled from broadcast combine rows in a
+//!    fixed order — every rank holds identical activations at every layer.
 //! 3. Every floating-point accumulation order is preserved: gradient
 //!    buffers accumulate per `(device, expert)` in route order, spRS
-//!    reduces in plan order per destination, Adam is per-expert local.
+//!    reduces in plan order per destination, Adam is per-expert local,
+//!    combine/cotangent scatters run in `(device, expert)` order.
 //!    (The global *loss* stat is a cross-rank f64 sum and may differ in
 //!    the last ulps; parameters never do.)
 //!
-//! `rust/tests/spmd_equivalence.rs` locks the contract, including resume
-//! from a checkpoint written under the other executor.
+//! `rust/tests/spmd_equivalence.rs` locks the contract at L=1 (including
+//! bit-identity to the seed engine) and L=3, plus resume from a checkpoint
+//! written under the other executor.
 
 pub mod comm;
 pub mod exec;
@@ -50,8 +63,9 @@ use crate::dispatch::dispatch;
 use crate::fssdp::adam::{AdamCfg, AdamState};
 use crate::fssdp::compute::{Compute, Reference};
 use crate::fssdp::{
-    assignment_matrix, batch_for, build_iter_plan, compute_expert_key, realized_loads,
-    routes_from_gates, EngineStats, FssdpEngine, LayerDims,
+    assignment_matrix, backward_expert_key, batch_for, build_iter_plan, compute_expert_key,
+    forward_expert_rows, realized_loads, routes_from_gates, scatter_rows, zero_acts,
+    EngineStats, FssdpEngine, IterPlan, LayerDims, Routes,
 };
 use crate::loadsim::LoadPredictor;
 use crate::materialize::MatConstraints;
@@ -61,8 +75,20 @@ use crate::runtime::HostTensor;
 use crate::topology::{DeviceId, Topology};
 
 use comm::{MsgKind, RankComm};
-use exec::{run_sprs_rank, RankSpag};
+use exec::{RankSpag, RankSprs};
 use sched::{order_resident_first, Overlap};
+
+/// One layer's slice of a rank's state for a span.
+struct RankLayerState {
+    /// This rank's expert-parameter shard of the layer (plus transient
+    /// replicas).
+    store: ChunkStore,
+    /// Adam states of the layer's experts this rank owns.
+    opt: BTreeMap<usize, AdamState>,
+    /// Replicated predictor clone (deterministically identical on every
+    /// rank; rank 0's copy is synced back to the engine).
+    predictor: LoadPredictor,
+}
 
 /// Everything one rank thread owns or borrows for a span.
 struct RankCtx<'a> {
@@ -73,22 +99,19 @@ struct RankCtx<'a> {
     iters: usize,
     dims: LayerDims,
     topo: &'a Topology,
-    shards: &'a Placement,
-    gate_w: &'a [f32],
+    /// Per-layer owner partitions (replicated).
+    shards: &'a [Placement],
+    /// Per-layer gate weights (replicated, frozen).
+    gate_w: &'a [Vec<f32>],
     adam: AdamCfg,
     cons: MatConstraints,
     overlap: bool,
-    /// This rank's expert-parameter shard (plus transient replicas).
-    store: ChunkStore,
-    /// Adam states of the experts this rank owns.
-    opt: BTreeMap<usize, AdamState>,
-    /// Replicated predictor clone (deterministically identical on every
-    /// rank; rank 0's copy is synced back to the engine).
-    predictor: LoadPredictor,
+    layers: Vec<RankLayerState>,
     comm: RankComm,
 }
 
-/// Global per-iteration stats, computed redundantly on rank 0 only.
+/// Global per-iteration stats, computed redundantly on rank 0 only,
+/// aggregated over layers exactly like the sequential engine's.
 struct GlobalStats {
     sparsity: f64,
     replicas: usize,
@@ -98,11 +121,9 @@ struct GlobalStats {
 
 /// What a rank thread hands back at span exit.
 struct RankOut {
-    store: ChunkStore,
-    opt: BTreeMap<usize, AdamState>,
-    predictor: LoadPredictor,
+    layers: Vec<RankLayerState>,
     metrics: Metrics,
-    /// Per-iteration partial loss (this rank's route groups).
+    /// Per-iteration partial loss (this rank's route groups, last layer).
     loss: Vec<f64>,
     /// Rank 0 only; empty elsewhere.
     global: Vec<GlobalStats>,
@@ -132,36 +153,46 @@ pub fn run_span(
     if iters == 0 {
         return Ok(Vec::new());
     }
+    let nl = engine.layers.len();
 
-    // Split the engine state per rank: each thread owns its device's chunk
-    // store and the Adam states of the experts it owns; replicated state
-    // is cloned (gate weights are frozen, the predictor evolves
-    // deterministically and identically on every rank).
+    // Split the engine state per rank and per layer: each thread owns its
+    // device's chunk stores and the Adam states of the experts it owns;
+    // replicated state is cloned (gate weights are frozen, the predictors
+    // evolve deterministically and identically on every rank).
     let topo = engine.topo.clone();
-    let shards = engine.shards.clone();
-    let gate_w = engine.gate_w.clone();
+    let shards_v: Vec<Placement> = engine.layers.iter().map(|ls| ls.shards.clone()).collect();
+    let gate_w_v: Vec<Vec<f32>> = engine.layers.iter().map(|ls| ls.gate_w.clone()).collect();
     let dims = engine.dims;
     let adam = engine.adam;
     let cons = MatConstraints { overlap_degree: engine.overlap_degree, mem_slots: engine.mem_slots };
-    let predictor = engine.predictor.clone();
 
     // Rank threads get *copies* of the device memories and optimizer
     // states, not the originals: if any rank fails, the engine keeps its
     // pre-span state intact (a span either commits whole or not at all).
     // One parameter-set copy per span is noise next to a span of steps.
-    let stores: Vec<ChunkStore> = engine.params.devices.clone();
-    anyhow::ensure!(stores.len() == nd, "engine memory does not match the topology");
-    let mut opts: Vec<BTreeMap<usize, AdamState>> = (0..nd).map(|_| BTreeMap::new()).collect();
-    for (e, st) in &engine.opt {
-        let owner = shards.holders(*e).next().expect("every expert has an owner");
-        opts[owner.0].insert(*e, st.clone());
+    let mut rank_layers: Vec<Vec<RankLayerState>> =
+        (0..nd).map(|_| Vec::with_capacity(nl)).collect();
+    for ls in &engine.layers {
+        anyhow::ensure!(
+            ls.params.devices.len() == nd,
+            "engine memory does not match the topology"
+        );
+        for (r, ranks) in rank_layers.iter_mut().enumerate() {
+            let store = ls.params.devices[r].clone();
+            let mut opt = BTreeMap::new();
+            for (e, st) in &ls.opt {
+                let owner = ls.shards.holders(*e).next().expect("every expert has an owner");
+                if owner.0 == r {
+                    opt.insert(*e, st.clone());
+                }
+            }
+            ranks.push(RankLayerState { store, opt, predictor: ls.predictor.clone() });
+        }
     }
-    let comms = comm::fabric(nd, None);
+    let comms = comm::fabric(nd, engine.pacing);
 
     let mut ctxs: Vec<RankCtx> = Vec::with_capacity(nd);
-    for (me, ((store, opt), comm)) in
-        stores.into_iter().zip(opts).zip(comms).enumerate()
-    {
+    for (me, (layers, comm)) in rank_layers.into_iter().zip(comms).enumerate() {
         ctxs.push(RankCtx {
             me,
             nd,
@@ -170,14 +201,12 @@ pub fn run_span(
             iters,
             dims,
             topo: &topo,
-            shards: &shards,
-            gate_w: &gate_w,
+            shards: &shards_v,
+            gate_w: &gate_w_v,
             adam,
             cons,
             overlap,
-            store,
-            opt,
-            predictor: predictor.clone(),
+            layers,
             comm,
         });
     }
@@ -225,19 +254,19 @@ pub fn run_span(
     }
     anyhow::ensure!(outs.len() == nd, "SPMD span lost rank outputs");
 
-    // Merge per-rank state back into the engine.
+    // Merge per-rank state back into the engine, layer by layer.
     let mut stats = vec![EngineStats::default(); iters];
-    let mut devices: Vec<ChunkStore> = Vec::with_capacity(nd);
-    let mut opt_all: BTreeMap<usize, AdamState> = BTreeMap::new();
+    let mut devices_by_layer: Vec<Vec<ChunkStore>> =
+        (0..nl).map(|_| Vec::with_capacity(nd)).collect();
+    let mut opt_by_layer: Vec<BTreeMap<usize, AdamState>> = (0..nl).map(|_| BTreeMap::new()).collect();
     let mut merged = Metrics::new();
     for (r, out) in outs.into_iter().enumerate() {
-        let RankOut { store, opt, predictor, metrics, loss, global } = out;
+        let RankOut { layers, metrics, loss, global } = out;
         anyhow::ensure!(loss.len() == iters, "rank {r} returned {} loss entries", loss.len());
         for (i, l) in loss.iter().enumerate() {
             stats[i].loss += *l;
         }
         if r == 0 {
-            engine.predictor = predictor;
             for (i, g) in global.iter().enumerate() {
                 stats[i].spag_sparsity = g.sparsity;
                 stats[i].replicas = g.replicas;
@@ -245,206 +274,531 @@ pub fn run_span(
                 stats[i].straggler = g.straggler;
             }
         }
-        devices.push(store);
-        opt_all.extend(opt);
+        anyhow::ensure!(layers.len() == nl, "rank {r} returned {} layers", layers.len());
+        for (l, rls) in layers.into_iter().enumerate() {
+            let RankLayerState { store, opt, predictor } = rls;
+            if r == 0 {
+                engine.layers[l].predictor = predictor;
+            }
+            devices_by_layer[l].push(store);
+            opt_by_layer[l].extend(opt);
+        }
         merged.merge(&metrics);
     }
     merged.add("spmd.ranks", nd as f64);
-    engine.params = ClusterMem { devices };
-    engine.opt = opt_all;
+    for (l, (devices, opt)) in devices_by_layer.into_iter().zip(opt_by_layer).enumerate() {
+        engine.layers[l].params = ClusterMem { devices };
+        engine.layers[l].opt = opt;
+    }
     engine.spmd_metrics = Some(merged);
     Ok(stats)
+}
+
+/// All-to-all row exchange at a layer boundary: every rank broadcasts its
+/// computed rows (combine contributions `w·y` on forward, input cotangents
+/// `gx` on backward) for its route keys, flattened in expert order; every
+/// rank then assembles the full per-source buffers by scanning `routes` in
+/// the sequential engine's `(device, expert)` order — so each f32 add
+/// happens in the same order on every rank, bit-identical to the
+/// sequential scatter.
+#[allow(clippy::too_many_arguments)]
+fn exchange_rows(
+    comm: &mut RankComm,
+    iter: u64,
+    kind: MsgKind,
+    layer: usize,
+    routes: &Routes,
+    mine: &BTreeMap<usize, Vec<f32>>,
+    nd: usize,
+    sources: usize,
+    dims: &LayerDims,
+) -> anyhow::Result<Vec<Vec<f32>>> {
+    let mut payload: Vec<f32> = Vec::new();
+    for rows in mine.values() {
+        payload.extend_from_slice(rows);
+    }
+    let gathered = comm.allgather(iter, kind, layer, payload)?;
+    let mut out = zero_acts(sources, dims);
+    for (dev, buf) in gathered.iter().enumerate() {
+        if dev >= nd {
+            break;
+        }
+        let mut off = 0;
+        for (&(d, e), toks) in routes.iter() {
+            if d != dev {
+                continue;
+            }
+            let n = toks.len() * dims.d_model;
+            anyhow::ensure!(
+                off + n <= buf.len(),
+                "row payload from rank {dev} truncated (layer {layer}, expert {e})"
+            );
+            scatter_rows(dims, toks, &buf[off..off + n], &mut out);
+            off += n;
+        }
+        anyhow::ensure!(
+            off == buf.len(),
+            "row payload from rank {dev} misaligned (layer {layer}): {} trailing floats",
+            buf.len() - off
+        );
+    }
+    Ok(out)
+}
+
+/// Finish one layer's spRS, apply Adam on owned experts, eagerly issue the
+/// next iteration's spAG for each updated chunk, and release non-shard
+/// replicas — the per-layer tail of the backward sweep, shared by the
+/// pipelined and synchronous schedules.
+#[allow(clippy::too_many_arguments)]
+fn settle_layer(
+    sprs: RankSprs<'_>,
+    l: usize,
+    me: usize,
+    iter: u64,
+    experts: usize,
+    adam: &AdamCfg,
+    owners: &Placement,
+    grads: &mut ChunkStore,
+    layer: &mut RankLayerState,
+    ov: &mut Overlap,
+    comm: &mut RankComm,
+    metrics: &mut Metrics,
+) -> anyhow::Result<()> {
+    let t0 = Instant::now();
+    sprs.finish(grads, comm)?;
+    metrics.add_duration("spmd.sprs", t0.elapsed());
+
+    let t0 = Instant::now();
+    for e in 0..experts {
+        if !owners.contains(e, DeviceId(me)) {
+            continue;
+        }
+        let grad = grads
+            .get(e)
+            .ok_or_else(|| {
+                anyhow::anyhow!("owner {me} of expert {e} lost its gradient (layer {l})")
+            })?
+            .clone();
+        let p = layer.store.get_mut(e).expect("owner holds its shard");
+        let st = layer.opt.get_mut(&e).expect("owner holds the optimizer state");
+        st.update(adam, p, &grad);
+        let sent = ov.eager_issue(l, e, me, iter + 1, &layer.store, comm)?;
+        metrics.add("spmd.eager_sends", sent as f64);
+    }
+    metrics.add_duration("spmd.adam", t0.elapsed());
+
+    // re-materialization: drop non-shard replicas (§4)
+    let resident: Vec<usize> = layer.store.chunks().collect();
+    for c in resident {
+        if !owners.contains(c, DeviceId(me)) {
+            layer.store.remove(c);
+        }
+    }
+    Ok(())
 }
 
 /// The rank program: the body of [`FssdpEngine::step`], restricted to one
 /// rank's slice of the work, with communicator exchanges where the
 /// sequential engine touches other devices' memory.
-fn rank_main(mut ctx: RankCtx) -> anyhow::Result<RankOut> {
-    let me = ctx.me;
-    let nd = ctx.nd;
-    let dims = ctx.dims;
+fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
+    let RankCtx {
+        me,
+        nd,
+        sources,
+        start,
+        iters,
+        dims,
+        topo,
+        shards,
+        gate_w,
+        adam,
+        cons,
+        overlap,
+        mut layers,
+        mut comm,
+    } = ctx;
+    let nl = layers.len();
     let mut compute = Compute::Reference(Reference);
-    let mut ov = Overlap::new(ctx.overlap);
+    let mut ov = Overlap::new(overlap);
     let mut metrics = Metrics::new();
-    let mut losses: Vec<f64> = Vec::with_capacity(ctx.iters);
+    let mut losses: Vec<f64> = Vec::with_capacity(iters);
     let mut global: Vec<GlobalStats> = Vec::new();
-    let gate_wt = HostTensor::f32(vec![dims.d_model, dims.experts], ctx.gate_w.to_vec());
 
-    for k in 0..ctx.iters {
-        let iter = ctx.start + k as u64;
-        let last = k + 1 == ctx.iters;
+    for k in 0..iters {
+        let iter = start + k as u64;
+        let last_iter = k + 1 == iters;
 
-        // ---- plan (replicated): predict → Algorithm 1 → spAG/spRS ----
+        // ---- plans (replicated): per layer, predict → Algorithm 1 ----
         let t0 = Instant::now();
-        let plan = match ov.next_plan.take() {
+        let plans: Vec<IterPlan> = match ov.next_plans.take() {
             Some(p) => p,
-            None => build_iter_plan(ctx.topo, ctx.shards, &ctx.predictor.predict(), ctx.cons)?,
+            None => {
+                let mut v = Vec::with_capacity(nl);
+                for (l, ls) in layers.iter().enumerate() {
+                    v.push(build_iter_plan(topo, &shards[l], &ls.predictor.predict(), cons)?);
+                }
+                v
+            }
         };
         metrics.add_duration("spmd.plan", t0.elapsed());
 
-        // ---- spAG: issue our sends now; completion is lazy (overlap) or
-        //      immediate (synchronous collectives) ----
-        let pre_issued = std::mem::take(&mut ov.pre_issued);
-        let mut spag =
-            RankSpag::begin(&plan.spag, me, iter, &ctx.store, &ctx.comm, &pre_issued)?;
-        if !ov.enabled {
+        let mut spags: Vec<Option<RankSpag>> = (0..nl).map(|_| None).collect();
+        let mut acts: Vec<Vec<f32>> =
+            (0..sources).map(|s| batch_for(&dims, iter, s)).collect();
+        let mut acts_stack: Vec<Vec<Vec<f32>>> = Vec::with_capacity(nl.saturating_sub(1));
+        let mut all_routes: Vec<Routes> = Vec::with_capacity(nl);
+        let mut grads_stack: Vec<ChunkStore> = Vec::with_capacity(nl);
+        let mut g: Vec<Vec<f32>> = Vec::new();
+        let inv_t = 1.0f32 / (dims.tokens * sources) as f32;
+        let mut loss = 0.0f64;
+        let mut gs = GlobalStats { sparsity: 0.0, replicas: 0, remote_tokens: 0, straggler: 0.0 };
+
+        // ---- forward sweep ----
+        for l in 0..nl {
+            let last_layer = l + 1 == nl;
+
+            // spAG: the pipeline may have begun this layer already (one
+            // layer ahead); otherwise issue our sends now
+            if spags[l].is_none() {
+                let pre = ov.take_pre_issued(l);
+                spags[l] = Some(RankSpag::begin(
+                    &plans[l].spag,
+                    me,
+                    iter,
+                    l,
+                    &layers[l].store,
+                    &comm,
+                    &pre,
+                )?);
+            }
+            if !ov.enabled {
+                // synchronous collectives: materialize before the gate
+                let t0 = Instant::now();
+                spags[l].as_mut().expect("begun above").finish(&mut layers[l].store, &mut comm)?;
+                let d = t0.elapsed();
+                metrics.add_duration("spmd.spag_wait", d);
+                metrics.add_duration(&format!("spmd.spag_wait.l{l}"), d);
+            }
+
+            // ---- gate our sources on this layer's input; exchange ----
             let t0 = Instant::now();
-            spag.finish(&mut ctx.store, &mut ctx.comm)?;
-            metrics.add_duration("spmd.spag_wait", t0.elapsed());
+            let gate_wt =
+                HostTensor::f32(vec![dims.d_model, dims.experts], gate_w[l].clone());
+            let mut gate_idx: Vec<Vec<i32>> = vec![Vec::new(); sources];
+            let mut gate_w_out: Vec<Vec<f32>> = vec![Vec::new(); sources];
+            let mut payload: Vec<f32> = Vec::new();
+            for (s, x) in acts.iter().enumerate() {
+                if s % nd != me {
+                    continue;
+                }
+                let xt = HostTensor::f32(vec![dims.tokens, dims.d_model], x.clone());
+                let out = compute.execute("gate_fwd", &[xt, gate_wt.clone()])?;
+                let w = out[1].as_f32()?.to_vec();
+                let idx = out[2].as_i32()?.to_vec();
+                payload.push(s as f32);
+                payload.extend_from_slice(&w);
+                payload.extend(idx.iter().map(|&v| v as f32));
+                gate_w_out[s] = w;
+                gate_idx[s] = idx;
+            }
+            let gathered = comm.allgather(iter, MsgKind::Gate, l, payload)?;
+            let rec = 1 + 4 * dims.tokens; // source id + 2T weights + 2T indices
+            for (r, buf) in gathered.iter().enumerate() {
+                if r == me {
+                    continue;
+                }
+                anyhow::ensure!(
+                    buf.len() % rec == 0,
+                    "gate payload misaligned from rank {r} (layer {l})"
+                );
+                for record in buf.chunks(rec) {
+                    let s = record[0] as usize;
+                    anyhow::ensure!(s < sources && s % nd == r, "bogus gate source {s}");
+                    gate_w_out[s] = record[1..1 + 2 * dims.tokens].to_vec();
+                    gate_idx[s] =
+                        record[1 + 2 * dims.tokens..].iter().map(|&v| v as i32).collect();
+                }
+            }
+            metrics.add_duration("spmd.gate", t0.elapsed());
+
+            // predictor update (replicated, feeds next iteration's plan)
+            let realized = realized_loads(dims.experts, &gate_idx);
+            layers[l].predictor.observe(&realized);
+
+            // ---- §4.3 cross-layer pipeline: issue layer l+1's spAG
+            //      sends now, so its materialization hides under this
+            //      layer's expert compute ----
+            if ov.enabled && !last_layer && spags[l + 1].is_none() {
+                let pre = ov.take_pre_issued(l + 1);
+                spags[l + 1] = Some(RankSpag::begin(
+                    &plans[l + 1].spag,
+                    me,
+                    iter,
+                    l + 1,
+                    &layers[l + 1].store,
+                    &comm,
+                    &pre,
+                )?);
+            }
+
+            // ---- routing (replicated) + rank-0 global stats ----
+            let routes = routes_from_gates(
+                topo,
+                &plans[l].placement,
+                nd,
+                dims.experts,
+                &gate_idx,
+                &gate_w_out,
+            );
+            if me == 0 {
+                let asg = assignment_matrix(nd, dims.experts, &gate_idx);
+                let dplan = dispatch(topo, &plans[l].placement, &asg);
+                let toks: Vec<f64> =
+                    dplan.device_compute_tokens().iter().map(|&t| t as f64).collect();
+                gs.sparsity += plans[l].spag.sparsity;
+                gs.replicas += plans[l].placement.len() - shards[l].len();
+                gs.remote_tokens += dplan.remote_tokens();
+                gs.straggler += crate::util::stats::straggler_factor(&toks);
+            }
+
+            // ---- expert compute on our route keys, shards-resident
+            //      first; replicas are pulled as compute reaches them ----
+            let mut grads = ChunkStore::new();
+            for e in 0..dims.experts {
+                if plans[l].placement.contains(e, DeviceId(me)) {
+                    grads.insert(e, vec![0.0f32; dims.chunk_len()]);
+                }
+            }
+            let my_keys: Vec<usize> =
+                routes.keys().filter(|(d, _)| *d == me).map(|(_, e)| *e).collect();
+            let order = order_resident_first(&my_keys, &layers[l].store);
+            let mut out_rows: BTreeMap<usize, Vec<f32>> = BTreeMap::new();
+            for e in order {
+                if !layers[l].store.contains(e) {
+                    let t0 = Instant::now();
+                    spags[l].as_mut().expect("begun").ensure(&mut layers[l].store, &mut comm, e)?;
+                    let d = t0.elapsed();
+                    metrics.add_duration("spmd.spag_wait", d);
+                    metrics.add_duration(&format!("spmd.spag_wait.l{l}"), d);
+                    metrics.add("spmd.lazy_chunks", 1.0);
+                }
+                let toks = routes.get(&(me, e)).expect("key from this map");
+                let chunk = layers[l].store.get(e).expect("ensured above").clone();
+                let t0 = Instant::now();
+                if last_layer {
+                    let acc = grads.get_mut(e).expect("grads cover the placement");
+                    let (lo, gx) = compute_expert_key(
+                        &mut compute,
+                        &dims,
+                        &chunk,
+                        toks,
+                        &acts,
+                        inv_t,
+                        acc,
+                        nl > 1,
+                    )?;
+                    loss += lo;
+                    if nl > 1 {
+                        out_rows.insert(e, gx);
+                    }
+                } else {
+                    let rows = forward_expert_rows(&mut compute, &dims, &chunk, toks, &acts)?;
+                    out_rows.insert(e, rows);
+                }
+                let d = t0.elapsed();
+                metrics.add_duration("spmd.compute", d);
+                metrics.add_duration(&format!("spmd.compute.l{l}"), d);
+                metrics.add("spmd.groups", toks.chunks(dims.cap).len() as f64);
+            }
+
+            // Remaining receives + fan-out duties before the next phase.
+            let t0 = Instant::now();
+            spags[l].as_mut().expect("begun").finish(&mut layers[l].store, &mut comm)?;
+            let d = t0.elapsed();
+            metrics.add_duration("spmd.spag_wait", d);
+            metrics.add_duration(&format!("spmd.spag_wait.l{l}"), d);
+
+            // ---- layer boundary: combine (fwd) / seed cotangent (bwd) ----
+            if !last_layer {
+                let t0 = Instant::now();
+                let next = exchange_rows(
+                    &mut comm,
+                    iter,
+                    MsgKind::Combine,
+                    l,
+                    &routes,
+                    &out_rows,
+                    nd,
+                    sources,
+                    &dims,
+                )?;
+                metrics.add_duration("spmd.combine", t0.elapsed());
+                acts_stack.push(std::mem::replace(&mut acts, next));
+            } else if nl > 1 {
+                let t0 = Instant::now();
+                g = exchange_rows(
+                    &mut comm,
+                    iter,
+                    MsgKind::GradX,
+                    l,
+                    &routes,
+                    &out_rows,
+                    nd,
+                    sources,
+                    &dims,
+                )?;
+                metrics.add_duration("spmd.combine", t0.elapsed());
+            }
+            all_routes.push(routes);
+            grads_stack.push(grads);
+        }
+        losses.push(loss);
+        if me == 0 {
+            gs.sparsity /= nl as f64;
+            gs.straggler /= nl as f64;
+            global.push(gs);
         }
 
-        // ---- gate our sources; exchange decisions with every rank ----
-        let t0 = Instant::now();
-        let mut batches: Vec<Vec<f32>> = Vec::with_capacity(ctx.sources);
-        for s in 0..ctx.sources {
-            batches.push(batch_for(&dims, iter, s));
-        }
-        let mut gate_idx: Vec<Vec<i32>> = vec![Vec::new(); ctx.sources];
-        let mut gate_w_out: Vec<Vec<f32>> = vec![Vec::new(); ctx.sources];
-        let mut payload: Vec<f32> = Vec::new();
-        for s in 0..ctx.sources {
-            if s % nd != me {
-                continue;
-            }
-            let xt = HostTensor::f32(vec![dims.tokens, dims.d_model], batches[s].clone());
-            let out = compute.execute("gate_fwd", &[xt, gate_wt.clone()])?;
-            let w = out[1].as_f32()?.to_vec();
-            let idx = out[2].as_i32()?.to_vec();
-            payload.push(s as f32);
-            payload.extend_from_slice(&w);
-            payload.extend(idx.iter().map(|&v| v as f32));
-            gate_w_out[s] = w;
-            gate_idx[s] = idx;
-        }
-        let gathered = ctx.comm.allgather(iter, MsgKind::Gate, payload)?;
-        let rec = 1 + 4 * dims.tokens; // source id + 2T weights + 2T indices
-        for (r, buf) in gathered.iter().enumerate() {
-            if r == me {
-                continue;
-            }
-            anyhow::ensure!(buf.len() % rec == 0, "gate payload misaligned from rank {r}");
-            for record in buf.chunks(rec) {
-                let s = record[0] as usize;
-                anyhow::ensure!(s < ctx.sources && s % nd == r, "bogus gate source {s}");
-                gate_w_out[s] = record[1..1 + 2 * dims.tokens].to_vec();
-                gate_idx[s] =
-                    record[1 + 2 * dims.tokens..].iter().map(|&v| v as i32).collect();
-            }
-        }
-        metrics.add_duration("spmd.gate", t0.elapsed());
-
-        // ---- predictor update; next iteration's plan is now knowable,
-        //      which is what makes eager re-materialization sound ----
-        let realized = realized_loads(dims.experts, &gate_idx);
-        ctx.predictor.observe(&realized);
-        if ov.enabled && !last {
+        // ---- next iteration's plans are now knowable (all layers'
+        //      predictors observed), which is what makes the eager
+        //      re-materialization mechanisms sound ----
+        if ov.enabled && !last_iter {
             let t0 = Instant::now();
-            ov.next_plan =
-                Some(build_iter_plan(ctx.topo, ctx.shards, &ctx.predictor.predict(), ctx.cons)?);
+            let mut nexts = Vec::with_capacity(nl);
+            for (l, ls) in layers.iter().enumerate() {
+                nexts.push(build_iter_plan(topo, &shards[l], &ls.predictor.predict(), cons)?);
+            }
+            ov.next_plans = Some(nexts);
             metrics.add_duration("spmd.plan", t0.elapsed());
         }
 
-        // ---- routing (replicated) + rank-0 global stats ----
-        let routes =
-            routes_from_gates(ctx.topo, &plan.placement, nd, dims.experts, &gate_idx, &gate_w_out);
-        if me == 0 {
-            let asg = assignment_matrix(nd, dims.experts, &gate_idx);
-            let dplan = dispatch(ctx.topo, &plan.placement, &asg);
-            let toks: Vec<f64> =
-                dplan.device_compute_tokens().iter().map(|&t| t as f64).collect();
-            global.push(GlobalStats {
-                sparsity: plan.spag.sparsity,
-                replicas: plan.placement.len() - ctx.shards.len(),
-                remote_tokens: dplan.remote_tokens(),
-                straggler: crate::util::stats::straggler_factor(&toks),
-            });
-        }
-
-        // ---- expert compute on our route keys, shards-resident first;
-        //      replicas are pulled as compute reaches them ----
-        let mut grads = ChunkStore::new();
-        for e in 0..dims.experts {
-            if plan.placement.contains(e, DeviceId(me)) {
-                grads.insert(e, vec![0.0f32; dims.chunk_len()]);
+        // ---- backward sweep: bwd compute (inner layers) with the spRS
+        //      of the layer above pipelined underneath (§4.3) ----
+        let mut sprss: Vec<Option<RankSprs>> = (0..nl).map(|_| None).collect();
+        for l in (0..nl).rev() {
+            if l + 1 < nl {
+                let routes = &all_routes[l];
+                let my_keys: Vec<usize> =
+                    routes.keys().filter(|(d, _)| *d == me).map(|(_, e)| *e).collect();
+                let mut gx_rows: BTreeMap<usize, Vec<f32>> = BTreeMap::new();
+                for e in my_keys {
+                    let toks = routes.get(&(me, e)).expect("key from this map");
+                    let chunk =
+                        layers[l].store.get(e).expect("replicas live until their bwd").clone();
+                    let acc = grads_stack[l].get_mut(e).expect("grads cover the placement");
+                    let t0 = Instant::now();
+                    let gx = backward_expert_key(
+                        &mut compute,
+                        &dims,
+                        &chunk,
+                        toks,
+                        &acts_stack[l],
+                        &g,
+                        acc,
+                    )?;
+                    let d = t0.elapsed();
+                    metrics.add_duration("spmd.compute", d);
+                    metrics.add_duration(&format!("spmd.compute.l{l}"), d);
+                    if l > 0 {
+                        gx_rows.insert(e, gx);
+                    }
+                }
+                if l > 0 {
+                    let t0 = Instant::now();
+                    g = exchange_rows(
+                        &mut comm,
+                        iter,
+                        MsgKind::GradX,
+                        l,
+                        routes,
+                        &gx_rows,
+                        nd,
+                        sources,
+                        &dims,
+                    )?;
+                    metrics.add_duration("spmd.combine", t0.elapsed());
+                }
             }
-        }
-        let my_keys: Vec<usize> =
-            routes.keys().filter(|(d, _)| *d == me).map(|(_, e)| *e).collect();
-        let order = order_resident_first(&my_keys, &ctx.store);
-        let inv_t = 1.0f32 / (dims.tokens * ctx.sources) as f32;
-        let mut loss = 0.0f64;
-        for e in order {
-            if !ctx.store.contains(e) {
-                let t0 = Instant::now();
-                spag.ensure(&mut ctx.store, &mut ctx.comm, e)?;
-                metrics.add_duration("spmd.spag_wait", t0.elapsed());
-                metrics.add("spmd.lazy_chunks", 1.0);
-            }
-            let toks = routes.get(&(me, e)).expect("key from this map");
-            let chunk = ctx.store.get(e).expect("ensured above").clone();
-            let acc = grads.get_mut(e).expect("grads cover the placement");
+            // this layer's grads are final: issue its spRS stage-0 sends
             let t0 = Instant::now();
-            loss += compute_expert_key(&mut compute, &dims, &chunk, toks, &batches, inv_t, acc)?;
-            metrics.add_duration("spmd.compute", t0.elapsed());
-            metrics.add("spmd.groups", toks.chunks(dims.cap).len() as f64);
-        }
-        losses.push(loss);
+            sprss[l] = Some(RankSprs::begin(
+                &plans[l].sprs,
+                &shards[l],
+                me,
+                iter,
+                l,
+                &grads_stack[l],
+                &comm,
+            )?);
+            metrics.add_duration("spmd.sprs", t0.elapsed());
 
-        // Remaining receives + fan-out duties before the reduce phase.
-        let t0 = Instant::now();
-        spag.finish(&mut ctx.store, &mut ctx.comm)?;
-        metrics.add_duration("spmd.spag_wait", t0.elapsed());
-
-        // ---- spRS: reduce gradients to the shard owners ----
-        let t0 = Instant::now();
-        run_sprs_rank(&mut grads, &plan.sprs, ctx.shards, me, iter, &mut ctx.comm)?;
-        metrics.add_duration("spmd.sprs", t0.elapsed());
-
-        // ---- Adam on owned experts; eagerly re-materialize for i+1 ----
-        let t0 = Instant::now();
-        for e in 0..dims.experts {
-            if !ctx.shards.contains(e, DeviceId(me)) {
-                continue;
+            if ov.enabled {
+                // pipelined: the layer ABOVE settles now — its spRS flew
+                // while this layer's backward computed
+                if l + 1 < nl {
+                    let sp = sprss[l + 1].take().expect("begun one step earlier");
+                    settle_layer(
+                        sp,
+                        l + 1,
+                        me,
+                        iter,
+                        dims.experts,
+                        &adam,
+                        &shards[l + 1],
+                        &mut grads_stack[l + 1],
+                        &mut layers[l + 1],
+                        &mut ov,
+                        &mut comm,
+                        &mut metrics,
+                    )?;
+                }
+            } else {
+                // synchronous: settle this layer immediately
+                let sp = sprss[l].take().expect("just begun");
+                settle_layer(
+                    sp,
+                    l,
+                    me,
+                    iter,
+                    dims.experts,
+                    &adam,
+                    &shards[l],
+                    &mut grads_stack[l],
+                    &mut layers[l],
+                    &mut ov,
+                    &mut comm,
+                    &mut metrics,
+                )?;
             }
-            let g = grads
-                .get(e)
-                .ok_or_else(|| anyhow::anyhow!("owner {me} of expert {e} lost its gradient"))?
-                .clone();
-            let p = ctx.store.get_mut(e).expect("owner holds its shard");
-            let st = ctx.opt.get_mut(&e).expect("owner holds the optimizer state");
-            st.update(&ctx.adam, p, &g);
-            let sent = ov.eager_issue(e, me, iter + 1, &ctx.store, &ctx.comm)?;
-            metrics.add("spmd.eager_sends", sent as f64);
         }
-        metrics.add_duration("spmd.adam", t0.elapsed());
-
-        // ---- re-materialization: drop non-shard replicas (§4) ----
-        let resident: Vec<usize> = ctx.store.chunks().collect();
-        for c in resident {
-            if !ctx.shards.contains(c, DeviceId(me)) {
-                ctx.store.remove(c);
-            }
+        if ov.enabled {
+            let sp = sprss[0].take().expect("begun in the loop");
+            settle_layer(
+                sp,
+                0,
+                me,
+                iter,
+                dims.experts,
+                &adam,
+                &shards[0],
+                &mut grads_stack[0],
+                &mut layers[0],
+                &mut ov,
+                &mut comm,
+                &mut metrics,
+            )?;
         }
     }
 
-    Ok(RankOut {
-        store: ctx.store,
-        opt: ctx.opt,
-        predictor: ctx.predictor,
-        metrics,
-        loss: losses,
-        global,
-    })
+    Ok(RankOut { layers, metrics, loss: losses, global })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::fssdp::{reference_dims, Executor};
+    use crate::testing::all_chunks as final_chunks;
 
-    fn final_chunks(e: &FssdpEngine) -> Vec<Vec<f32>> {
-        (0..e.dims.experts).map(|x| e.expert_chunk(x).clone()).collect()
-    }
 
     #[test]
     fn spmd_span_matches_sequential_bitwise() {
@@ -467,12 +821,30 @@ mod tests {
     }
 
     #[test]
+    fn multilayer_spmd_span_matches_sequential_bitwise() {
+        let dims = reference_dims();
+        let sources = 4;
+        let mut seq = FssdpEngine::new_reference_layers(dims, 2, Topology::cluster_a(2, 2), 23);
+        let seq_stats = seq.run_span(0, 2, sources).unwrap();
+
+        let mut par = FssdpEngine::new_reference_layers(dims, 2, Topology::cluster_a(2, 2), 23);
+        par.executor = Executor::Spmd { threads: 4, overlap: true };
+        let par_stats = par.run_span(0, 2, sources).unwrap();
+
+        assert_eq!(final_chunks(&seq), final_chunks(&par), "2-layer SPMD must be bit-identical");
+        for (s, p) in seq_stats.iter().zip(par_stats.iter()) {
+            assert!((s.loss - p.loss).abs() <= 1e-9 * s.loss.abs().max(1.0));
+            assert_eq!(s.replicas, p.replicas);
+        }
+    }
+
+    #[test]
     fn overlap_off_is_also_bitwise_identical() {
         let dims = reference_dims();
-        let mut a = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 2), 5);
+        let mut a = FssdpEngine::new_reference_layers(dims, 2, Topology::cluster_a(2, 2), 5);
         a.executor = Executor::Spmd { threads: 4, overlap: false };
         a.run_span(0, 3, 4).unwrap();
-        let mut b = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 2), 5);
+        let mut b = FssdpEngine::new_reference_layers(dims, 2, Topology::cluster_a(2, 2), 5);
         b.executor = Executor::Spmd { threads: 4, overlap: true };
         b.run_span(0, 3, 4).unwrap();
         assert_eq!(final_chunks(&a), final_chunks(&b));

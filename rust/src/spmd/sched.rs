@@ -1,23 +1,32 @@
-//! The overlap scheduler: hide re-materialization behind expert compute.
+//! The overlap scheduler: hide re-materialization behind expert compute,
+//! within an iteration and across the layer stack (§4.3).
 //!
-//! Two mechanisms, both bit-exactness-preserving (§4.3 of the paper, the
-//! "re-materialization overlap"):
+//! Three mechanisms, all bit-exactness-preserving:
 //!
 //! 1. **Lazy completion** — spAG receives are not awaited up front. The
 //!    rank computes route groups for experts whose chunks are already
 //!    resident (its own shards) first, and completes a replica's transfer
 //!    only when compute first needs it ([`RankSpag::ensure`]); transfers
 //!    keep landing in the mailboxes while earlier groups run.
-//! 2. **Eager next-iteration issue** — after the gate exchange of
-//!    iteration `i`, every rank already knows iteration `i+1`'s placement
-//!    (the predictor is replicated deterministic state), so as soon as a
-//!    shard owner finishes an expert's Adam update it issues that chunk's
-//!    `i+1` spAG transfers, while other ranks are still in iteration `i`
-//!    compute. Receivers match on iteration-tagged mailboxes, so run-ahead
-//!    needs no barrier.
+//! 2. **Cross-layer pipelining** — with all layers' plans knowable at
+//!    iteration start (the predictors are replicated deterministic state),
+//!    layer `l+1`'s spAG sends are issued *before* layer `l`'s expert
+//!    compute, so the next layer's materialization rides under the current
+//!    layer's compute; symmetrically, layer `l+1`'s spRS is begun right
+//!    after its gradients finalize and *finished* only after layer `l`'s
+//!    backward compute ([`crate::spmd::exec::RankSprs`] begin/finish).
+//! 3. **Eager next-iteration issue** — after the gate exchange of
+//!    iteration `i`, every rank already knows iteration `i+1`'s placements,
+//!    so as soon as a shard owner finishes an expert's Adam update it
+//!    issues that chunk's `i+1` spAG transfers, while other ranks are
+//!    still in iteration `i`. Receivers match on (iteration, layer)-tagged
+//!    mailboxes, so run-ahead needs no barrier.
 //!
-//! Neither mechanism changes any floating-point order: per-buffer gradient
-//! accumulation order is fixed by the route map, and spAG only copies.
+//! None of the mechanisms changes any floating-point order: per-buffer
+//! gradient accumulation order is fixed by the route map, spAG only
+//! copies, and spRS receives stay in plan order.
+//!
+//! [`RankSpag`]: crate::spmd::exec::RankSpag
 
 use std::collections::BTreeSet;
 
@@ -30,36 +39,57 @@ use super::comm::RankComm;
 /// Per-rank overlap state carried across iterations of a span.
 pub(crate) struct Overlap {
     pub enabled: bool,
-    /// Iteration `i+1`'s plan, computed right after iteration `i`'s gate
-    /// exchange (None at span start, on the last iteration, or with
-    /// overlap disabled).
-    pub next_plan: Option<IterPlan>,
-    /// `(chunk, dst)` spAG transfers of the next iteration already sent
-    /// eagerly; [`RankSpag::begin`] skips them.
-    pub pre_issued: BTreeSet<(ChunkId, usize)>,
+    /// Iteration `i+1`'s plans, one per layer, computed right after
+    /// iteration `i`'s gate exchanges (None at span start, on the last
+    /// iteration, or with overlap disabled).
+    pub next_plans: Option<Vec<IterPlan>>,
+    /// `(layer, chunk, dst)` spAG transfers of the next iteration already
+    /// sent eagerly; [`RankSpag::begin`] skips them.
+    ///
+    /// [`RankSpag::begin`]: crate::spmd::exec::RankSpag::begin
+    pub pre_issued: BTreeSet<(usize, ChunkId, usize)>,
 }
 
 impl Overlap {
     pub fn new(enabled: bool) -> Overlap {
-        Overlap { enabled, next_plan: None, pre_issued: BTreeSet::new() }
+        Overlap { enabled, next_plans: None, pre_issued: BTreeSet::new() }
     }
 
-    /// Eagerly issue the next iteration's spAG transfers sourced at this
-    /// rank for chunk `e` (called right after the owner's Adam update of
-    /// `e`, while peers still compute iteration `next_iter - 1`).
+    /// Drain the pre-issued set of one layer into the `(chunk, dst)` form
+    /// [`crate::spmd::exec::RankSpag::begin`] consumes.
+    pub fn take_pre_issued(&mut self, layer: usize) -> BTreeSet<(ChunkId, usize)> {
+        let mut out = BTreeSet::new();
+        let keys: Vec<(usize, ChunkId, usize)> = self
+            .pre_issued
+            .iter()
+            .filter(|(l, _, _)| *l == layer)
+            .copied()
+            .collect();
+        for k in keys {
+            self.pre_issued.remove(&k);
+            out.insert((k.1, k.2));
+        }
+        out
+    }
+
+    /// Eagerly issue the next iteration's spAG transfers of `layer`
+    /// sourced at this rank for chunk `e` (called right after the owner's
+    /// Adam update of `e`, while peers still compute iteration
+    /// `next_iter - 1`).
     pub fn eager_issue(
         &mut self,
+        layer: usize,
         e: ChunkId,
         me: usize,
         next_iter: u64,
         store: &ChunkStore,
         comm: &RankComm,
     ) -> anyhow::Result<usize> {
-        let Some(next) = &self.next_plan else {
+        let Some(next) = &self.next_plans else {
             return Ok(0);
         };
         let mut sent = 0;
-        for t in next.spag.transfers.iter().filter(|t| t.src.0 == me && t.chunk == e) {
+        for t in next[layer].spag.transfers.iter().filter(|t| t.src.0 == me && t.chunk == e) {
             let Some(buf) = store.get(e) else {
                 continue; // not resident here (fan-out source) — deferred
             };
@@ -68,12 +98,13 @@ impl Overlap {
                 super::comm::Tag {
                     iter: next_iter,
                     kind: super::comm::MsgKind::SpagChunk,
+                    layer,
                     a: t.chunk,
                     b: t.stage,
                 },
                 buf.clone(),
             )?;
-            self.pre_issued.insert((t.chunk, t.dst.0));
+            self.pre_issued.insert((layer, t.chunk, t.dst.0));
             sent += 1;
         }
         Ok(sent)
@@ -112,12 +143,26 @@ mod tests {
     }
 
     #[test]
-    fn overlap_without_next_plan_is_a_noop() {
+    fn overlap_without_next_plans_is_a_noop() {
         let comms = crate::spmd::comm::fabric(1, None);
         let comm = comms.into_iter().next().unwrap();
         let store = ChunkStore::new();
         let mut ov = Overlap::new(true);
-        assert_eq!(ov.eager_issue(0, 0, 1, &store, &comm).unwrap(), 0);
+        assert_eq!(ov.eager_issue(0, 0, 0, 1, &store, &comm).unwrap(), 0);
+        assert!(ov.pre_issued.is_empty());
+    }
+
+    #[test]
+    fn pre_issued_drains_per_layer() {
+        let mut ov = Overlap::new(true);
+        ov.pre_issued.insert((0, 3, 1));
+        ov.pre_issued.insert((1, 3, 1));
+        ov.pre_issued.insert((1, 5, 2));
+        let l1: BTreeSet<(ChunkId, usize)> = ov.take_pre_issued(1);
+        assert_eq!(l1.len(), 2);
+        assert!(l1.contains(&(3, 1)) && l1.contains(&(5, 2)));
+        assert_eq!(ov.pre_issued.len(), 1, "layer 0's entry stays");
+        assert!(ov.take_pre_issued(0).contains(&(3, 1)));
         assert!(ov.pre_issued.is_empty());
     }
 }

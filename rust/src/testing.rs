@@ -83,6 +83,19 @@ pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) {
     }
 }
 
+/// Flatten every layer's expert parameter chunks of an engine, layer-major
+/// — the shared shape for bit-identity comparisons across executors,
+/// checkpoints, and elastic resumes.
+pub fn all_chunks(e: &crate::fssdp::FssdpEngine) -> Vec<Vec<f32>> {
+    let mut out = Vec::new();
+    for l in 0..e.num_layers() {
+        for x in 0..e.dims.experts {
+            out.push(e.expert_chunk_at(l, x).clone());
+        }
+    }
+    out
+}
+
 /// Relative max-abs error between two slices (0 when equal).
 pub fn max_rel_err(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len());

@@ -2,13 +2,18 @@
 //! `clap`). Supports `--flag`, `--key value`, `--key=value`, and positional
 //! arguments, with typed accessors and a generated usage string.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Parsed arguments for one (sub)command.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     /// `--key value` / `--key=value` pairs. A bare `--flag` maps to "true".
     opts: BTreeMap<String, String>,
+    /// Keys that were given as *bare* flags (no `=value` and no following
+    /// value token). Boolean accessors accept them; value accessors reject
+    /// them — `hecate fssdp --devices` (value flag as the final token) must
+    /// be a parse error, not a silent `--devices true`.
+    bare: BTreeSet<String>,
     /// Positional arguments in order.
     pub positional: Vec<String>,
 }
@@ -18,7 +23,9 @@ impl Args {
     ///
     /// A token starting with `--` either contains `=` (split there) or, if
     /// the next token does not start with `--`, consumes it as the value;
-    /// otherwise it is a boolean flag.
+    /// otherwise it is a boolean flag. Which keys take values is only known
+    /// to the typed accessors, so a bare flag is *recorded* here and
+    /// rejected there when a value is required.
     pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
         let toks: Vec<String> = raw.into_iter().collect();
         let mut args = Args::default();
@@ -27,11 +34,14 @@ impl Args {
             let t = &toks[i];
             if let Some(body) = t.strip_prefix("--") {
                 if let Some((k, v)) = body.split_once('=') {
+                    args.bare.remove(k);
                     args.opts.insert(k.to_string(), v.to_string());
                 } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    args.bare.remove(body);
                     args.opts.insert(body.to_string(), toks[i + 1].clone());
                     i += 1;
                 } else {
+                    args.bare.insert(body.to_string());
                     args.opts.insert(body.to_string(), "true".to_string());
                 }
             } else {
@@ -46,15 +56,39 @@ impl Args {
         self.opts.contains_key(key)
     }
 
+    /// True when the key was given as a bare `--flag` (no value token).
+    pub fn is_bare(&self, key: &str) -> bool {
+        self.bare.contains(key)
+    }
+
     pub fn get(&self, key: &str) -> Option<&str> {
         self.opts.get(key).map(|s| s.as_str())
     }
 
-    pub fn str_or(&self, key: &str, default: &str) -> String {
-        self.get(key).unwrap_or(default).to_string()
+    fn missing_value(&self, key: &str) -> anyhow::Error {
+        anyhow::anyhow!(
+            "--{key} expects a value but none was given (it appeared as a bare flag \
+             at the end of the arguments or before another --flag)"
+        )
+    }
+
+    /// Like [`Args::get`] for value-taking string options: errors when the
+    /// key was given as a bare flag instead of silently yielding "true".
+    pub fn str_opt(&self, key: &str) -> anyhow::Result<Option<String>> {
+        if self.is_bare(key) {
+            return Err(self.missing_value(key));
+        }
+        Ok(self.get(key).map(|s| s.to_string()))
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> anyhow::Result<String> {
+        Ok(self.str_opt(key)?.unwrap_or_else(|| default.to_string()))
     }
 
     pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        if self.is_bare(key) {
+            return Err(self.missing_value(key));
+        }
         match self.get(key) {
             None => Ok(default),
             Some(v) => v
@@ -64,6 +98,9 @@ impl Args {
     }
 
     pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        if self.is_bare(key) {
+            return Err(self.missing_value(key));
+        }
         match self.get(key) {
             None => Ok(default),
             Some(v) => v
@@ -83,6 +120,9 @@ impl Args {
 
     /// Required string option.
     pub fn req(&self, key: &str) -> anyhow::Result<String> {
+        if self.is_bare(key) {
+            return Err(self.missing_value(key));
+        }
         self.get(key)
             .map(|s| s.to_string())
             .ok_or_else(|| anyhow::anyhow!("missing required option --{key}"))
@@ -198,6 +238,40 @@ mod tests {
         assert_eq!(a.get("b"), Some("x"));
         let b = parse("-- x");
         assert_eq!(b.get(""), Some("x"));
+    }
+
+    #[test]
+    fn trailing_value_flag_is_a_parse_error_not_a_panic() {
+        // Regression: `hecate fssdp --devices` (a value-taking flag as the
+        // final token) must produce a parse error from the typed accessors
+        // rather than panicking or silently acting as `--devices true`.
+        let a = parse("--devices");
+        assert!(a.is_bare("devices"));
+        let err = a.usize_or("devices", 8).unwrap_err().to_string();
+        assert!(err.contains("expects a value"), "{err}");
+        assert!(a.f64_or("devices", 1.0).is_err());
+        assert!(a.req("devices").is_err());
+        assert!(a.str_or("devices", "x").is_err());
+        assert!(a.str_opt("devices").is_err());
+        // ...same when the bare flag precedes another --flag
+        let b = parse("--checkpoint-dir --reference");
+        assert!(b.str_opt("checkpoint-dir").is_err());
+        assert!(b.bool_or("reference", false).unwrap());
+        // a bare flag used as a bool is still fine
+        assert!(a.bool_or("devices", false).unwrap());
+        // and an explicit value clears bareness
+        let c = parse("--devices --devices=4");
+        assert!(!c.is_bare("devices"));
+        assert_eq!(c.usize_or("devices", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn str_accessors_pass_real_values_through() {
+        let a = parse("--dir /tmp/x --mode fast");
+        assert_eq!(a.str_or("dir", "d").unwrap(), "/tmp/x");
+        assert_eq!(a.str_or("missing", "d").unwrap(), "d");
+        assert_eq!(a.str_opt("mode").unwrap(), Some("fast".to_string()));
+        assert_eq!(a.str_opt("missing").unwrap(), None);
     }
 
     #[test]

@@ -1,22 +1,25 @@
-//! Integration: sharded checkpointing + elastic resume of the numeric
-//! FSSDP engine.
+//! Integration: sharded checkpointing (format v2, multi-layer) + elastic
+//! resume of the numeric FSSDP engine.
 //!
 //! Runs hermetically on the pure-Rust reference backend (no artifacts /
 //! PJRT needed):
 //!
 //! * save → restore at the **same** world size is **bit-identical** (the
-//!   saved owner layout is reused, so every reduction order matches);
+//!   saved owner layouts are reused, so every reduction order matches) —
+//!   at L=1 and L=3;
 //! * an N=4 run checkpointed at step k and **elastically** resumed on M=2
 //!   and M=8 devices reaches the same final parameters as the
 //!   uninterrupted run, within the tolerance `tests/fssdp_equivalence.rs`
-//!   uses (2e-3) — FSSDP placement freedom never changes the math;
-//! * corruption and version mismatches are rejected at load time.
+//!   uses (2e-3) — FSSDP placement freedom never changes the math, and at
+//!   L>1 the planner re-shards all layers jointly;
+//! * corruption, v1-format blobs, and version mismatches are rejected at
+//!   load time.
 
 use std::path::PathBuf;
 
 use hecate::checkpoint;
 use hecate::fssdp::{reference_dims, FssdpEngine};
-use hecate::testing::max_rel_err;
+use hecate::testing::{all_chunks as final_chunks, max_rel_err};
 use hecate::topology::Topology;
 
 /// Fixed logical data-shard count across every run in this file — elastic
@@ -31,13 +34,9 @@ fn tmpdir(tag: &str) -> PathBuf {
     d
 }
 
-fn final_chunks(e: &FssdpEngine) -> Vec<Vec<f32>> {
-    (0..e.dims.experts).map(|x| e.expert_chunk(x).clone()).collect()
-}
-
-/// Uninterrupted reference run: `iters` steps on `topo`.
-fn uninterrupted(topo: Topology, iters: u64) -> Vec<Vec<f32>> {
-    let mut e = FssdpEngine::new_reference(reference_dims(), topo, SEED);
+/// Uninterrupted reference run: `iters` steps of an `layers`-deep stack.
+fn uninterrupted(layers: usize, topo: Topology, iters: u64) -> Vec<Vec<f32>> {
+    let mut e = FssdpEngine::new_reference_layers(reference_dims(), layers, topo, SEED);
     for i in 0..iters {
         e.step(i, SOURCES).unwrap();
     }
@@ -46,10 +45,17 @@ fn uninterrupted(topo: Topology, iters: u64) -> Vec<Vec<f32>> {
 
 /// Run k1 steps on `topo_a`, checkpoint through disk, resume on `topo_b`,
 /// run k2 more. Returns the final chunks and the number of moved experts.
-fn interrupted(topo_a: Topology, topo_b: Topology, k1: u64, k2: u64, tag: &str) -> (Vec<Vec<f32>>, usize) {
+fn interrupted(
+    layers: usize,
+    topo_a: Topology,
+    topo_b: Topology,
+    k1: u64,
+    k2: u64,
+    tag: &str,
+) -> (Vec<Vec<f32>>, usize) {
     let dir = tmpdir(tag);
     let old_world = topo_a.num_devices();
-    let mut e = FssdpEngine::new_reference(reference_dims(), topo_a, SEED);
+    let mut e = FssdpEngine::new_reference_layers(reference_dims(), layers, topo_a, SEED);
     for i in 0..k1 {
         e.step(i, SOURCES).unwrap();
     }
@@ -60,6 +66,7 @@ fn interrupted(topo_a: Topology, topo_b: Topology, k1: u64, k2: u64, tag: &str) 
     assert_eq!(saved.world(), old_world);
     assert_eq!(state.step, k1);
     assert_eq!(state.data_shards, SOURCES);
+    assert_eq!(state.num_layers(), layers);
     let (mut r, plan) = FssdpEngine::resume_reference(topo_b, &state, saved.world()).unwrap();
     let mut step = state.step;
     for _ in 0..k2 {
@@ -74,8 +81,9 @@ fn interrupted(topo_a: Topology, topo_b: Topology, k1: u64, k2: u64, tag: &str) 
 fn same_world_restore_is_bit_identical() {
     let k1 = 2u64;
     let k2 = 2u64;
-    let straight = uninterrupted(Topology::cluster_a(2, 2), k1 + k2);
+    let straight = uninterrupted(1, Topology::cluster_a(2, 2), k1 + k2);
     let (resumed, moved) = interrupted(
+        1,
         Topology::cluster_a(2, 2),
         Topology::cluster_a(2, 2),
         k1,
@@ -96,11 +104,32 @@ fn same_world_restore_is_bit_identical() {
 }
 
 #[test]
+fn multilayer_same_world_restore_is_bit_identical() {
+    // Checkpoint v2 round-trip: an L=3 stack through disk at the same
+    // world size is bit-identical to the uninterrupted run.
+    let straight = uninterrupted(3, Topology::cluster_a(2, 2), 4);
+    let (resumed, moved) = interrupted(
+        3,
+        Topology::cluster_a(2, 2),
+        Topology::cluster_a(2, 2),
+        2,
+        2,
+        "ml-same-world",
+    );
+    assert_eq!(moved, 0, "same world size must reuse every layer's saved layout");
+    for (e, (a, b)) in resumed.iter().zip(straight.iter()).enumerate() {
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "chunk {e}[{i}] must be bit-identical");
+        }
+    }
+}
+
+#[test]
 fn elastic_resume_shrink_matches_uninterrupted() {
     // N=4 checkpointed at step 2, resumed on M=2 — vs 4 uninterrupted steps.
-    let straight = uninterrupted(Topology::cluster_a(2, 2), 4);
+    let straight = uninterrupted(1, Topology::cluster_a(2, 2), 4);
     let (resumed, moved) =
-        interrupted(Topology::cluster_a(2, 2), Topology::cluster_a(1, 2), 2, 2, "shrink");
+        interrupted(1, Topology::cluster_a(2, 2), Topology::cluster_a(1, 2), 2, 2, "shrink");
     assert!(moved > 0, "shrinking 4 -> 2 devices must move the dead ranks' experts");
     for (e, (a, b)) in resumed.iter().zip(straight.iter()).enumerate() {
         let err = max_rel_err(a, b);
@@ -109,11 +138,24 @@ fn elastic_resume_shrink_matches_uninterrupted() {
 }
 
 #[test]
+fn multilayer_elastic_resume_shrink_matches_uninterrupted() {
+    // Checkpoint v2 elastic: L=3, N=4 → M=2, within the 2e-3 tolerance.
+    let straight = uninterrupted(3, Topology::cluster_a(2, 2), 4);
+    let (resumed, moved) =
+        interrupted(3, Topology::cluster_a(2, 2), Topology::cluster_a(1, 2), 2, 2, "ml-shrink");
+    assert!(moved > 0, "shrinking must move the dead ranks' experts in some layer");
+    for (e, (a, b)) in resumed.iter().zip(straight.iter()).enumerate() {
+        let err = max_rel_err(a, b);
+        assert!(err < 2e-3, "chunk {e}: max rel err {err} after L=3 shrink resume");
+    }
+}
+
+#[test]
 fn elastic_resume_grow_matches_uninterrupted() {
     // N=4 checkpointed at step 2, resumed on M=8 — vs 4 uninterrupted steps.
-    let straight = uninterrupted(Topology::cluster_a(2, 2), 4);
+    let straight = uninterrupted(1, Topology::cluster_a(2, 2), 4);
     let (resumed, _) =
-        interrupted(Topology::cluster_a(2, 2), Topology::cluster_a(2, 4), 2, 2, "grow");
+        interrupted(1, Topology::cluster_a(2, 2), Topology::cluster_a(2, 4), 2, 2, "grow");
     for (e, (a, b)) in resumed.iter().zip(straight.iter()).enumerate() {
         let err = max_rel_err(a, b);
         assert!(err < 2e-3, "expert {e}: max rel err {err} after grow resume");
@@ -147,6 +189,24 @@ fn elastic_resume_preserves_loss_trajectory() {
 }
 
 #[test]
+fn reshard_every_survives_checkpoint_roundtrip() {
+    // The Algorithm 2 cadence is part of the durable run config (format
+    // v2): resume restores it without re-specifying the flag.
+    let dir = tmpdir("reshard-cfg");
+    let mut e =
+        FssdpEngine::new_reference_layers(reference_dims(), 2, Topology::cluster_a(2, 2), SEED);
+    e.reshard_every = 4;
+    e.run_span(0, 2, SOURCES).unwrap();
+    checkpoint::save(&dir, &e.snapshot(2, SOURCES), &e.topo).unwrap();
+    let (state, saved) = checkpoint::load(&dir).unwrap();
+    assert_eq!(state.reshard_every, 4);
+    let (tail, _) =
+        FssdpEngine::resume_reference(Topology::cluster_a(2, 2), &state, saved.world()).unwrap();
+    assert_eq!(tail.reshard_every, 4);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn corrupted_checkpoint_is_rejected() {
     let dir = tmpdir("corrupt");
     let mut e = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(1, 2), SEED);
@@ -159,6 +219,45 @@ fn corrupted_checkpoint_is_rejected() {
     bytes[mid] ^= 0x10;
     std::fs::write(&f, &bytes).unwrap();
     assert!(checkpoint::load(&dir).is_err(), "tampered global blob must not load");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn v1_blob_is_rejected_with_migration_error() {
+    // A global blob carrying the v1 version byte — re-sealed, with the
+    // manifest checksum updated to match, so the blob's own version check
+    // is what fires — must fail with the single-layer migration message.
+    use hecate::checkpoint::format::fnv1a64;
+    use hecate::util::json::Json;
+
+    let dir = tmpdir("v1-blob");
+    let mut e = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(1, 2), SEED);
+    e.step(0, SOURCES).unwrap();
+    checkpoint::save(&dir, &e.snapshot(1, SOURCES), &e.topo).unwrap();
+
+    let f = dir.join("global.bin");
+    let mut bytes = std::fs::read(&f).unwrap();
+    bytes[4] = 1; // version byte, after the 4-byte magic
+    let body_len = bytes.len() - 8;
+    let sum = fnv1a64(&bytes[..body_len]);
+    bytes[body_len..].copy_from_slice(&sum.to_le_bytes());
+    std::fs::write(&f, &bytes).unwrap();
+
+    let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let mut doc = Json::parse(&manifest).unwrap();
+    if let Json::Obj(map) = &mut doc {
+        map.insert(
+            "global_fnv".into(),
+            Json::Str(format!("{:#018x}", fnv1a64(&std::fs::read(&f).unwrap()))),
+        );
+    }
+    std::fs::write(dir.join("manifest.json"), doc.to_string_pretty()).unwrap();
+
+    let err = checkpoint::load(&dir).unwrap_err().to_string();
+    assert!(
+        err.contains("v1") && err.contains("single-layer"),
+        "v1 blob must get the migration error: {err}"
+    );
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

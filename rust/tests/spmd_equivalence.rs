@@ -1,15 +1,26 @@
 //! Integration: the SPMD parallel executor (one OS thread per rank, an
-//! in-process communicator, overlapped sparse collectives) produces final
-//! expert parameters **bit-identical** to the sequential engine at the
-//! same seed — on 2/4/8 threads, and across a checkpoint/resume boundary.
-//! Hermetic: reference backend, no artifacts or PJRT required.
+//! in-process communicator, overlapped sparse collectives with the §4.3
+//! cross-layer pipeline) produces final expert parameters **bit-identical**
+//! to the sequential engine at the same seed — on 2/4/8 threads, at L=1 and
+//! L=3, and across a checkpoint/resume boundary. Hermetic: reference
+//! backend, no artifacts or PJRT required.
 
 use hecate::fssdp::{reference_dims, Executor, FssdpEngine};
-use hecate::testing::max_rel_err;
+use hecate::testing::{all_chunks as chunks, max_rel_err};
 use hecate::topology::Topology;
 
-fn chunks(e: &FssdpEngine) -> Vec<Vec<f32>> {
-    (0..e.dims.experts).map(|x| e.expert_chunk(x).clone()).collect()
+fn run_layers(
+    layers: usize,
+    topo: Topology,
+    executor: Executor,
+    iters: usize,
+    sources: usize,
+    seed: u64,
+) -> Vec<Vec<f32>> {
+    let mut e = FssdpEngine::new_reference_layers(reference_dims(), layers, topo, seed);
+    e.executor = executor;
+    e.run_span(0, iters, sources).unwrap();
+    chunks(&e)
 }
 
 fn run(
@@ -19,10 +30,7 @@ fn run(
     sources: usize,
     seed: u64,
 ) -> Vec<Vec<f32>> {
-    let mut e = FssdpEngine::new_reference(reference_dims(), topo, seed);
-    e.executor = executor;
-    e.run_span(0, iters, sources).unwrap();
-    chunks(&e)
+    run_layers(1, topo, executor, iters, sources, seed)
 }
 
 #[test]
@@ -39,6 +47,58 @@ fn parallel_matches_sequential_on_2_4_8_threads() {
         );
         assert_eq!(seq, par, "{d}-thread SPMD must be bit-identical to sequential");
     }
+}
+
+#[test]
+fn l3_parallel_matches_sequential_on_2_4_8_threads() {
+    // The multi-layer lock: 3 MoE layers, cross-layer pipelined overlap
+    // on, must be bit-identical to the sequential oracle on every thread
+    // count.
+    for (nodes, dpn) in [(1usize, 2usize), (2, 2), (2, 4)] {
+        let d = nodes * dpn;
+        let seq = run_layers(3, Topology::cluster_a(nodes, dpn), Executor::Sequential, 3, d, 17);
+        let par = run_layers(
+            3,
+            Topology::cluster_a(nodes, dpn),
+            Executor::Spmd { threads: d, overlap: true },
+            3,
+            d,
+            17,
+        );
+        assert_eq!(seq, par, "L=3 {d}-thread SPMD must be bit-identical to sequential");
+    }
+}
+
+#[test]
+fn l1_multilayer_engine_matches_seed_trajectory_across_executors() {
+    // The seed-behavior lock, executor edition: an L=1 engine must produce
+    // one single trajectory regardless of executor or overlap mode (the
+    // in-module test `fssdp::tests::l1_step_matches_seed_oracle_bitwise`
+    // pins that trajectory to the seed engine's transcribed step body).
+    let seq = run(Topology::cluster_a(2, 2), Executor::Sequential, 4, 4, 29);
+    for overlap in [false, true] {
+        let par =
+            run(Topology::cluster_a(2, 2), Executor::Spmd { threads: 4, overlap }, 4, 4, 29);
+        assert_eq!(seq, par, "L=1 SPMD (overlap={overlap}) must match the seed trajectory");
+    }
+}
+
+#[test]
+fn l3_parallel_with_resharding_matches_sequential() {
+    // Algorithm 2 re-runs inside the numeric span (--reshard-every); the
+    // re-shard happens on merged engine state, so both executors must stay
+    // bit-identical through chunk migrations.
+    let mk = |executor: Executor| -> Vec<Vec<f32>> {
+        let mut e =
+            FssdpEngine::new_reference_layers(reference_dims(), 3, Topology::cluster_a(2, 2), 31);
+        e.reshard_every = 2;
+        e.executor = executor;
+        e.run_span(0, 5, 4).unwrap();
+        chunks(&e)
+    };
+    let seq = mk(Executor::Sequential);
+    let par = mk(Executor::Spmd { threads: 4, overlap: true });
+    assert_eq!(seq, par, "re-sharded L=3 run must be bit-identical across executors");
 }
 
 #[test]
@@ -61,23 +121,25 @@ fn parallel_matches_single_device_reference_within_tolerance() {
 fn parallel_resume_from_checkpoint_is_bit_identical() {
     let dims = reference_dims();
     let sources = 4;
+    let layers = 3;
     let spmd = Executor::Spmd { threads: 4, overlap: true };
 
     // uninterrupted parallel run, 4 iterations
-    let mut full = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 2), 33);
+    let mut full = FssdpEngine::new_reference_layers(dims, layers, Topology::cluster_a(2, 2), 33);
     full.executor = spmd;
     full.run_span(0, 4, sources).unwrap();
 
     // interrupted: 2 parallel iterations, checkpoint, restore, 2 more
     let dir = std::env::temp_dir().join(format!("hecate-spmd-ckpt-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
-    let mut head = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 2), 33);
+    let mut head = FssdpEngine::new_reference_layers(dims, layers, Topology::cluster_a(2, 2), 33);
     head.executor = spmd;
     head.run_span(0, 2, sources).unwrap();
     hecate::checkpoint::save(&dir, &head.snapshot(2, sources), &head.topo).unwrap();
 
     let (state, saved) = hecate::checkpoint::load(&dir).unwrap();
     assert_eq!(state.step, 2);
+    assert_eq!(state.num_layers(), layers);
     let (mut tail, plan) =
         FssdpEngine::resume_reference(Topology::cluster_a(2, 2), &state, saved.world()).unwrap();
     assert!(plan.kept_saved_layout, "same world size must reuse the saved layout");
@@ -86,14 +148,15 @@ fn parallel_resume_from_checkpoint_is_bit_identical() {
 
     assert_eq!(chunks(&full), chunks(&tail), "resumed parallel run must be bit-identical");
     // …and the whole family collapses to the sequential trajectory
-    let seq = run(Topology::cluster_a(2, 2), Executor::Sequential, 4, sources, 33);
+    let seq = run_layers(layers, Topology::cluster_a(2, 2), Executor::Sequential, 4, sources, 33);
     assert_eq!(chunks(&full), seq);
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]
 fn parallel_loss_decreases() {
-    let mut e = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(2, 4), 11);
+    let mut e =
+        FssdpEngine::new_reference_layers(reference_dims(), 2, Topology::cluster_a(2, 4), 11);
     e.executor = Executor::spmd_for(&e.topo);
     let stats = e.run_span(0, 6, 8).unwrap();
     assert_eq!(stats.len(), 6);
