@@ -1,24 +1,34 @@
 //! Numeric FSSDP demonstration: real FSSDP training of an MoE layer across
 //! 8 simulated devices (2 nodes × 4), then the 1-device reference on the
 //! same data, asserting the trained parameters match — the paper's §3
-//! guarantee that placement freedom never changes the math.
+//! guarantee that placement freedom never changes the math. Both runs go
+//! through the unified `Session` API (PJRT backend).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example fssdp_numeric
 //! ```
 
-use hecate::fssdp::FssdpEngine;
+use hecate::fssdp::{Session, SessionConfig};
 use hecate::testing::max_rel_err;
 use hecate::topology::Topology;
 
 fn main() -> anyhow::Result<()> {
-    let iters = 6u64;
+    let iters = 6;
     let sources = 8;
+    let session = |topo: Topology| -> anyhow::Result<Session> {
+        Session::fresh(
+            SessionConfig::builder()
+                .pjrt("artifacts")
+                .topology(topo)
+                .seed(77)
+                .data_shards(sources)
+                .build()?,
+        )
+    };
 
     println!("=== distributed run: 2 nodes x 4 devices ===");
-    let mut dist = FssdpEngine::new("artifacts", Topology::cluster_a(2, 4), 77)?;
-    for i in 0..iters {
-        let s = dist.step(i, sources)?;
+    let mut dist = session(Topology::cluster_a(2, 4))?;
+    for (i, s) in dist.run(iters)?.iter().enumerate() {
         println!(
             "iter {i}  loss {:.5}  λ={:.2}  replicas {}  remote_tokens {}  straggler {:.2}",
             s.loss, s.spag_sparsity, s.replicas, s.remote_tokens, s.straggler
@@ -26,16 +36,16 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("\n=== reference run: 1 device, same data ===");
-    let mut reference = FssdpEngine::new("artifacts", Topology::flat(1, 1e9), 77)?;
-    for i in 0..iters {
-        let s = reference.step(i, sources)?;
+    let mut reference = session(Topology::flat(1, 1e9))?;
+    for (i, s) in reference.run(iters)?.iter().enumerate() {
         println!("iter {i}  loss {:.5}", s.loss);
     }
 
     println!("\n=== parameter equivalence ===");
     let mut worst = 0.0f32;
-    for e in 0..dist.dims.experts {
-        let err = max_rel_err(dist.expert_chunk(e), reference.expert_chunk(e));
+    for e in 0..dist.engine().dims.experts {
+        let err =
+            max_rel_err(dist.engine().expert_chunk(e), reference.engine().expert_chunk(e));
         worst = worst.max(err);
         println!("expert {e}: max rel err {err:.2e}");
     }

@@ -6,7 +6,7 @@
 
 use hecate::bench::Bench;
 use hecate::checkpoint::{self, format, reshard, shard, ExpertState, LayerCkpt, TrainState};
-use hecate::fssdp::LayerDims;
+use hecate::fssdp::{LayerDims, Session, SessionConfig};
 use hecate::topology::Topology;
 use hecate::util::rng::Rng;
 
@@ -121,4 +121,22 @@ fn main() {
             reshard::plan(&st, 8, &target).unwrap()
         });
     }
+
+    b.section("end-to-end Session checkpoint/resume (reference engine, 2 layers)");
+    let sdir = std::env::temp_dir().join(format!("hecate-bench-session-{}", std::process::id()));
+    let cfg = || {
+        SessionConfig::builder()
+            .reference()
+            .topology(Topology::cluster_a(2, 2))
+            .layers(2)
+            .seed(5)
+            .build()
+            .unwrap()
+    };
+    let mut trained = Session::fresh(cfg()).unwrap();
+    trained.run(2).unwrap();
+    b.run_val("session_checkpoint_to", || trained.checkpoint_to(&sdir).unwrap());
+    trained.checkpoint_to(&sdir).unwrap();
+    b.run_val("session_resume_same_world", || Session::resume(cfg(), &sdir).unwrap());
+    let _ = std::fs::remove_dir_all(&sdir);
 }

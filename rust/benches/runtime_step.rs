@@ -5,7 +5,7 @@
 //! `cargo bench --bench runtime_step [-- --quick] [filter]`
 
 use hecate::bench::Bench;
-use hecate::fssdp::FssdpEngine;
+use hecate::fssdp::{Session, SessionConfig};
 use hecate::runtime::{HostTensor, Runtime};
 use hecate::topology::Topology;
 
@@ -40,11 +40,18 @@ fn main() {
     b.run_val("expert_ffn_bwd_hlo", || rt.execute("expert_ffn_bwd", &bwd_args).unwrap());
 
     b.section("numeric FSSDP engine");
-    let mut engine = FssdpEngine::new("artifacts", Topology::cluster_a(2, 4), 5).unwrap();
-    let mut iter = 0u64;
+    let mut engine = Session::fresh(
+        SessionConfig::builder()
+            .pjrt("artifacts")
+            .topology(Topology::cluster_a(2, 4))
+            .seed(5)
+            .data_shards(8)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
     b.run("fssdp_full_iteration_8dev", || {
-        engine.step(iter, 8).unwrap();
-        iter += 1;
+        engine.run(1).unwrap();
     });
 
     b.section("tiny train step (full model fwd+bwd+Adam)");

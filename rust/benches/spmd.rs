@@ -10,12 +10,38 @@
 use hecate::bench::Bench;
 use hecate::collectives::exec::{run_spag, run_sprs, ClusterMem};
 use hecate::collectives::sparse::{build_spag, build_sprs};
-use hecate::fssdp::{Executor, FssdpEngine, LayerDims};
+use hecate::fssdp::{LayerDims, Session, SessionConfig};
 use hecate::placement::Placement;
 use hecate::spmd::comm::{self, Pacing};
 use hecate::spmd::exec::{run_spag_rank, run_sprs_rank};
 use hecate::topology::{DeviceId, Topology};
 use hecate::util::rng::Rng;
+
+/// A reference-backend session on `topo`; `spmd = Some((threads, overlap))`
+/// selects the parallel executor.
+fn session(
+    dims: LayerDims,
+    layers: usize,
+    topo: Topology,
+    spmd: Option<(usize, bool)>,
+    sources: usize,
+    pacing: Option<Pacing>,
+) -> Session {
+    let mut b = SessionConfig::builder()
+        .reference()
+        .dims(dims)
+        .topology(topo)
+        .layers(layers)
+        .seed(9)
+        .data_shards(sources);
+    if let Some((threads, overlap)) = spmd {
+        b = b.parallel(true).threads(threads).overlap(overlap);
+    }
+    if let Some(p) = pacing {
+        b = b.pacing(p);
+    }
+    Session::fresh(b.build().unwrap()).unwrap()
+}
 
 fn materialized(pre: &Placement, extra: usize, seed: u64) -> Placement {
     let mut rng = Rng::new(seed);
@@ -82,25 +108,19 @@ fn main() {
 
     b.section("end-to-end FSSDP step, 8 devices (tokens 128, d_model 64, d_ffn 128, 16 experts)");
     let dims = LayerDims { tokens: 128, d_model: 64, d_ffn: 128, experts: 16, cap: 32 };
-    let mut seq = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 4), 9);
-    let mut seq_iter = 0u64;
+    // Sessions track the absolute step internally, so each closure call
+    // runs the next iteration of a continuing trajectory.
+    let mut seq = session(dims, 1, Topology::cluster_a(2, 4), None, nd, None);
     b.run("step_sequential_8dev", || {
-        seq.run_span(seq_iter, 1, nd).unwrap();
-        seq_iter += 1;
+        seq.run(1).unwrap();
     });
-    let mut par = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 4), 9);
-    par.executor = Executor::Spmd { threads: nd, overlap: true };
-    let mut par_iter = 0u64;
+    let mut par = session(dims, 1, Topology::cluster_a(2, 4), Some((nd, true)), nd, None);
     b.run("step_spmd_8threads", || {
-        par.run_span(par_iter, 1, nd).unwrap();
-        par_iter += 1;
+        par.run(1).unwrap();
     });
-    let mut par_sync = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 4), 9);
-    par_sync.executor = Executor::Spmd { threads: nd, overlap: false };
-    let mut sync_iter = 0u64;
+    let mut par_sync = session(dims, 1, Topology::cluster_a(2, 4), Some((nd, false)), nd, None);
     b.run("step_spmd_8threads_no_overlap", || {
-        par_sync.run_span(sync_iter, 1, nd).unwrap();
-        sync_iter += 1;
+        par_sync.run(1).unwrap();
     });
 
     b.section(
@@ -113,15 +133,12 @@ fn main() {
     // physically on the clock, and hiding it is measurable
     let pacing = Pacing::uniform(chunk_bytes / 200e-6, 20e-6);
     for overlap in [false, true] {
-        let mut e = FssdpEngine::new_reference_layers(mdims, 3, Topology::cluster_a(2, 2), 9);
-        e.pacing = Some(pacing);
-        e.executor = Executor::Spmd { threads: 4, overlap };
-        let mut it = 0u64;
+        let mut s =
+            session(mdims, 3, Topology::cluster_a(2, 2), Some((4, overlap)), 4, Some(pacing));
         b.run(
             if overlap { "step_3layers_crosslayer_overlap_on" } else { "step_3layers_crosslayer_overlap_off" },
             || {
-                e.run_span(it, 1, 4).unwrap();
-                it += 1;
+                s.run(1).unwrap();
             },
         );
     }

@@ -14,13 +14,14 @@
 //! * one **shard blob per rank** (`rank-<r>.bin`) with one per-layer
 //!   section holding the expert states that rank owns in that layer.
 //!
-//! All blobs use the version-byte-prefixed binary format of [`format`]
+//! All blobs use the version-byte-prefixed binary format of
+//! [`format`](crate::checkpoint::format)
 //! (magic + version + FNV-64 integrity trailer; see `DESIGN.md §Checkpoint
 //! format v2`). v1 (single-layer) blobs are rejected with a clear migration
 //! error.
 //!
-//! The headline capability is **elastic resume** ([`reshard`]): `load` +
-//! [`crate::fssdp::FssdpEngine::resume_reference`] accept a topology with a
+//! The headline capability is **elastic resume** ([`reshard`]):
+//! [`crate::fssdp::Session::resume`] accepts a topology with a
 //! *different* device count than the one that wrote the checkpoint. The
 //! resharding planner re-runs the heterogeneous sharding algorithm
 //! ([`crate::sharding`], jointly over all layers) over the restored load

@@ -29,12 +29,17 @@ impl ChunkStore {
         self.bufs.insert(c, data);
     }
 
-    pub fn get(&self, c: ChunkId) -> Option<&Vec<f32>> {
-        self.bufs.get(&c)
+    /// Borrow a chunk's buffer. Returns a slice, not the owning `Vec` —
+    /// chunk buffers never resize in place, and slices keep callers from
+    /// depending on the container type.
+    pub fn get(&self, c: ChunkId) -> Option<&[f32]> {
+        self.bufs.get(&c).map(|b| b.as_slice())
     }
 
-    pub fn get_mut(&mut self, c: ChunkId) -> Option<&mut Vec<f32>> {
-        self.bufs.get_mut(&c)
+    /// Mutably borrow a chunk's buffer (fixed length — accumulate/update
+    /// in place; replace wholesale via [`ChunkStore::insert`]).
+    pub fn get_mut(&mut self, c: ChunkId) -> Option<&mut [f32]> {
+        self.bufs.get_mut(&c).map(|b| b.as_mut_slice())
     }
 
     pub fn remove(&mut self, c: ChunkId) -> Option<Vec<f32>> {
@@ -107,7 +112,7 @@ pub fn run_spag(mem: &mut ClusterMem, plan: &SparsePlan) -> anyhow::Result<()> {
                 .ok_or_else(|| {
                     anyhow::anyhow!("spAG: device {} lacks chunk {}", t.src.0, t.chunk)
                 })?
-                .clone();
+                .to_vec();
             payloads.push((t.chunk, t.dst, buf));
         }
         for (chunk, dst, buf) in payloads {
@@ -136,7 +141,7 @@ pub fn run_sprs(
                 .ok_or_else(|| {
                     anyhow::anyhow!("spRS: device {} lacks chunk {}", t.src.0, t.chunk)
                 })?
-                .clone();
+                .to_vec();
             payloads.push((t.chunk, t.dst, t.reduce, buf));
         }
         for (chunk, dst, reduce, buf) in payloads {
@@ -186,7 +191,7 @@ pub fn run_dense_allreduce(mem: &mut ClusterMem, placement: &Placement) -> anyho
                 .get(c)
                 .ok_or_else(|| anyhow::anyhow!("allreduce: missing chunk {c} on {}", h.0))?;
             match &mut sum {
-                None => sum = Some(buf.clone()),
+                None => sum = Some(buf.to_vec()),
                 Some(s) => {
                     for (a, b) in s.iter_mut().zip(buf.iter()) {
                         *a += b;
@@ -232,7 +237,7 @@ mod tests {
         let mut mem = ClusterMem::new(8);
         let mut rng = Rng::new(1);
         fill(&mut mem, &pre, 16, &mut rng);
-        let owner_buf = mem.dev(DeviceId(0)).get(0).unwrap().clone();
+        let owner_buf = mem.dev(DeviceId(0)).get(0).unwrap().to_vec();
 
         run_spag(&mut mem, &plan).unwrap();
         assert_eq!(mem.placement(8), post);
@@ -295,7 +300,7 @@ mod tests {
                 let originals: Vec<Vec<f32>> = (0..pre.num_chunks())
                     .map(|c| {
                         let d = pre.holders(c).next().unwrap();
-                        mem.dev(d).get(c).unwrap().clone()
+                        mem.dev(d).get(c).unwrap().to_vec()
                     })
                     .collect();
                 let ag = build_spag(t, pre, post).map_err(|e| e.to_string())?;

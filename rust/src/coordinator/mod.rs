@@ -10,15 +10,23 @@
 //! hecate fssdp     --devices 8 --iters 20                      (numeric engine)
 //!                  [--layers L] [--reshard-every K]            (multi-layer stack)
 //!                  [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR] [--reference]
-//!                  [--parallel [--threads N]]                  (SPMD executor)
+//!                  [--parallel [--threads N]] [--pacing a,b]   (SPMD executor)
 //! hecate checkpoint --dir DIR [--devices N --iters K]          (hermetic snapshot demo)
 //! hecate resume     --dir DIR [--devices M --iters K]          (elastic resume demo)
 //! hecate bench spmd [--iters N --quick]       (thread scaling + cross-layer overlap)
 //! ```
+//!
+//! The `fssdp`/`checkpoint`/`resume` subcommands are thin shells over the
+//! library's [`Session`] API: flags map onto a
+//! [`SessionConfig`](crate::fssdp::SessionConfig) builder (one shared
+//! validation path — the CLI has no checks of its own), and the console
+//! output is a [`PrintObserver`] attached to the run.
+
+use std::path::Path;
 
 use crate::checkpoint::faults::FaultSpec;
 use crate::config::{ClusterPreset, ModelConfig, SystemConfig, SystemKind, TrainConfig};
-use crate::fssdp::RunOpts;
+use crate::fssdp::{self, Executor, PrintObserver, Session, SessionConfig};
 use crate::sim::engine::{simulate, simulate_with_faults};
 use crate::sim::report;
 use crate::util::cli::Args;
@@ -61,7 +69,8 @@ fn print_usage() {
          hecate fssdp    [--devices N] [--iters N] [--artifacts DIR] [--reference]\n                  \
          [--layers L] [--reshard-every K]   (multi-layer MoE stack, Algorithm 2 cadence)\n                  \
          [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR]\n                  \
-         [--parallel [--threads N]]   (SPMD executor: one thread per rank)\n  \
+         [--parallel [--threads N]]   (SPMD executor: one thread per rank)\n                  \
+         [--pacing ALPHA,BETA]   (SPMD α–β link pacing: latency s, s/byte)\n  \
          hecate checkpoint --dir DIR [--nodes N --devices N --layers L --iters K --seed S]\n  \
          hecate resume     --dir DIR [--nodes N --devices M --iters K]\n  \
          hecate bench spmd [--iters N] [--quick]   (thread scaling + cross-layer overlap)"
@@ -249,39 +258,113 @@ fn cmd_fssdp(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&[
         "devices", "iters", "artifacts", "nodes", "seed", "layers", "reshard-every",
         "checkpoint-every", "checkpoint-dir", "resume", "reference", "parallel", "threads",
+        "pacing",
     ])?;
-    let parallel = args.bool_or("parallel", false)?;
-    let threads = match args.get("threads") {
-        None => None,
-        Some(_) => Some(args.usize_or("threads", 0)?),
+    let mut b = SessionConfig::builder()
+        .cluster(args.usize_or("nodes", 2)?, args.usize_or("devices", 8)?)
+        .seed(args.usize_or("seed", 42)? as u64)
+        .parallel(args.bool_or("parallel", false)?)
+        .checkpoint_every(args.usize_or("checkpoint-every", 0)?);
+    b = if args.bool_or("reference", false)? {
+        b.reference()
+    } else {
+        b.pjrt(&args.str_or("artifacts", "artifacts")?)
     };
-    anyhow::ensure!(
-        threads.is_none() || parallel,
-        "--threads requires --parallel (the SPMD executor runs one thread per rank; \
-         without --parallel the engine is single-threaded)"
+    if args.has("threads") {
+        b = b.threads(args.usize_or("threads", 0)?);
+    }
+    if args.has("layers") {
+        b = b.layers(args.usize_or("layers", 1)?);
+    }
+    if args.has("reshard-every") {
+        b = b.reshard_every(args.usize_or("reshard-every", 0)?);
+    }
+    if let Some(p) = args.str_opt("pacing")? {
+        b = b.pacing(fssdp::parse_pacing(&p)?);
+    }
+    if let Some(d) = args.str_opt("checkpoint-dir")? {
+        b = b.checkpoint_dir(d);
+    }
+    run_fssdp_session(b.build()?, args.str_opt("resume")?, args.usize_or("iters", 10)?)
+}
+
+/// Shared driver of the `fssdp`/`checkpoint`/`resume` subcommands: enter a
+/// [`Session`] (fresh or resumed), attach the console observer, run, and
+/// print the run summary.
+fn run_fssdp_session(
+    cfg: SessionConfig,
+    resume: Option<String>,
+    iters: usize,
+) -> anyhow::Result<()> {
+    println!(
+        "FSSDP numeric engine on {} ({} devices)",
+        cfg.topology().name,
+        cfg.topology().num_devices()
     );
-    let opts = RunOpts {
-        devices: args.usize_or("devices", 8)?,
-        nodes: args.usize_or("nodes", 2)?,
-        iters: args.usize_or("iters", 10)?,
-        seed: args.usize_or("seed", 42)? as u64,
-        layers: match args.get("layers") {
-            None => None,
-            Some(_) => Some(args.usize_or("layers", 1)?),
-        },
-        reshard_every: match args.get("reshard-every") {
-            None => None,
-            Some(_) => Some(args.usize_or("reshard-every", 0)?),
-        },
-        checkpoint_every: args.usize_or("checkpoint-every", 0)?,
-        checkpoint_dir: args.str_opt("checkpoint-dir")?,
-        resume: args.str_opt("resume")?,
-        reference: args.bool_or("reference", false)?,
-        parallel,
-        threads,
+    let mut session = match &resume {
+        None => Session::fresh(cfg)?,
+        Some(dir) => {
+            let s = Session::resume(cfg, Path::new(dir))?;
+            let r = s.resume_report().expect("resumed sessions carry a report");
+            println!(
+                "resumed step {} from {dir}: {} -> {} devices, {} layers, {} experts moved \
+                 ({:.2} MB), {}",
+                r.step,
+                r.old_world,
+                r.new_world,
+                r.layers,
+                r.moved_experts,
+                r.bytes_moved as f64 / 1e6,
+                if r.kept_saved_layout { "layout kept" } else { "re-sharded (Algorithm 2)" },
+            );
+            s
+        }
     };
-    let dir = args.str_or("artifacts", "artifacts")?;
-    crate::fssdp::run_demo_with(&dir, &opts)
+    let e = session.engine();
+    println!(
+        "stack: {} layer(s) x {} experts, d_model {}, d_ffn {}, {} tokens/source, cap {} \
+         (backend: {}, {}, reshard every {})",
+        e.num_layers(),
+        e.dims.experts,
+        e.dims.d_model,
+        e.dims.d_ffn,
+        e.dims.tokens,
+        e.dims.cap,
+        e.backend(),
+        match session.executor() {
+            Executor::Sequential => "sequential".to_string(),
+            Executor::Spmd { threads, .. } => format!("spmd x{threads}"),
+        },
+        if session.reshard_every() == 0 {
+            "never".to_string()
+        } else {
+            session.reshard_every().to_string()
+        }
+    );
+
+    let mut console = PrintObserver;
+    session.run_observed(iters, &mut [&mut console])?;
+    if session.reshards_moved() > 0 {
+        println!("re-shards moved {} expert(s) in total", session.reshards_moved());
+    }
+    if let Some(m) = session.spmd_metrics() {
+        println!(
+            "spmd: compute {:?} | spag wait {:?} | gate+exchange {:?} | combine {:?} | sprs {:?} (summed over ranks)",
+            m.timer("spmd.compute"),
+            m.timer("spmd.spag_wait"),
+            m.timer("spmd.gate"),
+            m.timer("spmd.combine"),
+            m.timer("spmd.sprs")
+        );
+    }
+    // Final snapshot when a checkpoint dir is configured and the boundary
+    // loop has not just written one — printed with the legacy "final
+    // checkpoint" marker rather than the periodic observer line.
+    if let Some(info) = session.finish(&mut [])? {
+        println!("final checkpoint @ step {} -> {}", session.step(), info.dir.display());
+    }
+    println!("done — parameters live on their shard owners (one global copy).");
+    Ok(())
 }
 
 /// Measured-performance sweeps. `hecate bench spmd` runs the reference
@@ -315,21 +398,15 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
 /// steps and write a sharded checkpoint to `--dir`. No artifacts needed.
 fn cmd_checkpoint(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&["dir", "nodes", "devices", "layers", "iters", "seed"])?;
-    let dir = args.req("dir")?;
-    let opts = RunOpts {
-        devices: args.usize_or("devices", 4)?,
-        nodes: args.usize_or("nodes", 2)?,
-        iters: args.usize_or("iters", 4)?,
-        seed: args.usize_or("seed", 42)? as u64,
-        layers: match args.get("layers") {
-            None => None,
-            Some(_) => Some(args.usize_or("layers", 1)?),
-        },
-        checkpoint_dir: Some(dir),
-        reference: true,
-        ..Default::default()
-    };
-    crate::fssdp::run_demo_with("artifacts", &opts)
+    let mut b = SessionConfig::builder()
+        .reference()
+        .cluster(args.usize_or("nodes", 2)?, args.usize_or("devices", 4)?)
+        .seed(args.usize_or("seed", 42)? as u64)
+        .checkpoint_dir(args.req("dir")?);
+    if args.has("layers") {
+        b = b.layers(args.usize_or("layers", 1)?);
+    }
+    run_fssdp_session(b.build()?, None, args.usize_or("iters", 4)?)
 }
 
 /// Hermetic elastic-resume demo: restore `--dir` onto `--devices` devices
@@ -338,15 +415,11 @@ fn cmd_checkpoint(args: &Args) -> anyhow::Result<()> {
 fn cmd_resume(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&["dir", "nodes", "devices", "iters"])?;
     let dir = args.req("dir")?;
-    let opts = RunOpts {
-        devices: args.usize_or("devices", 2)?,
-        nodes: args.usize_or("nodes", 1)?,
-        iters: args.usize_or("iters", 4)?,
-        resume: Some(dir),
-        reference: true,
-        ..Default::default()
-    };
-    crate::fssdp::run_demo_with("artifacts", &opts)
+    let cfg = SessionConfig::builder()
+        .reference()
+        .cluster(args.usize_or("nodes", 1)?, args.usize_or("devices", 2)?)
+        .build()?;
+    run_fssdp_session(cfg, Some(dir), args.usize_or("iters", 4)?)
 }
 
 #[cfg(test)]
@@ -500,6 +573,26 @@ mod tests {
             "--threads", "4", "--iters", "1",
         ]))
         .unwrap();
+    }
+
+    #[test]
+    fn pacing_flag_parses_and_runs() {
+        // α–β link pacing wired through the config: a paced 1-iteration
+        // SPMD run (tiny α/β so the smoke stays fast).
+        run(argv(&[
+            "fssdp", "--reference", "--parallel", "--devices", "4", "--nodes", "2",
+            "--iters", "1", "--pacing", "1e-6,1e-12",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn bad_pacing_is_a_parse_error() {
+        let err = run(argv(&["fssdp", "--reference", "--iters", "1", "--pacing", "fast"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--pacing expects"), "{err}");
+        assert!(err.contains("got `fast`"), "{err}");
     }
 
     #[test]

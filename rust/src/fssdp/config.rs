@@ -1,0 +1,560 @@
+//! Typed, validated configuration of a training [`Session`].
+//!
+//! Every knob the engine exposes — backend, layer-stack shape, topology,
+//! executor, α–β link pacing, re-shard cadence, checkpoint cadence, and the
+//! Algorithm 1 budgets — funnels through one [`SessionConfig`] builder.
+//! [`SessionConfigBuilder::build`] is the single validation point shared by
+//! the `hecate` CLI and library callers: every misconfiguration maps to a
+//! typed [`ConfigError`] whose `Display` is the exact message CLI users see
+//! (asserted by the regression tests below), replacing the `ensure!`
+//! checks formerly scattered across `run_demo_with` and the coordinator.
+//!
+//! [`Session`]: crate::fssdp::Session
+
+use std::fmt;
+use std::path::PathBuf;
+
+use crate::spmd::comm::Pacing;
+use crate::topology::Topology;
+
+use super::{reference_dims, Executor, LayerDims};
+
+/// Which compute backend executes the kernels.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT-compiled HLO artifacts through the PJRT runtime.
+    Pjrt {
+        /// Directory holding `manifest.json` and the compiled executables.
+        artifact_dir: String,
+    },
+    /// The hermetic pure-Rust reference kernels (no artifacts required;
+    /// the only backend the SPMD executor accepts — PJRT client handles
+    /// cannot be shared across rank threads).
+    Reference,
+}
+
+/// A misconfigured [`SessionConfig`]. The `Display` strings are the
+/// contract with CLI users: `tests` below pin them verbatim.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ConfigError {
+    /// Zero nodes or devices.
+    NoDevices,
+    /// `devices % nodes != 0`.
+    UnevenDevices,
+    /// `layers == 0`.
+    ZeroLayers,
+    /// Zero logical data shards.
+    ZeroDataShards,
+    /// A checkpoint cadence without a destination directory.
+    CheckpointEveryWithoutDir,
+    /// An explicit thread count on the sequential executor.
+    ThreadsWithoutParallel,
+    /// α–β link pacing on the sequential executor (nothing consumes it).
+    PacingWithoutParallel,
+    /// SPMD thread count differs from the device count.
+    ThreadCountMismatch { threads: usize, devices: usize },
+    /// The SPMD executor on the PJRT backend.
+    ParallelNeedsReference,
+    /// An unparseable `--pacing` value.
+    BadPacing { given: String },
+    /// Resume with an explicit layer count that contradicts the checkpoint.
+    LayerCountMismatch { requested: usize, checkpoint: usize },
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::NoDevices => write!(f, "need at least one node and device"),
+            ConfigError::UnevenDevices => {
+                write!(f, "devices must divide evenly into nodes")
+            }
+            ConfigError::ZeroLayers => write!(f, "--layers must be at least 1"),
+            ConfigError::ZeroDataShards => {
+                write!(f, "data_shards must be at least 1")
+            }
+            ConfigError::CheckpointEveryWithoutDir => {
+                write!(f, "--checkpoint-every needs --checkpoint-dir")
+            }
+            ConfigError::ThreadsWithoutParallel => write!(
+                f,
+                "--threads requires --parallel (the SPMD executor runs one thread per rank; \
+                 without --parallel the engine is single-threaded)"
+            ),
+            ConfigError::PacingWithoutParallel => write!(
+                f,
+                "--pacing requires --parallel (link pacing paces the SPMD communicator; \
+                 the sequential engine has no wire time to pace)"
+            ),
+            ConfigError::ThreadCountMismatch { threads, devices } => write!(
+                f,
+                "--threads {threads} must equal --devices {devices}: the SPMD executor runs \
+                 one OS thread per rank"
+            ),
+            ConfigError::ParallelNeedsReference => write!(
+                f,
+                "--parallel requires the hermetic backend (add --reference): \
+                 PJRT runtime handles cannot be shared across rank threads"
+            ),
+            ConfigError::BadPacing { given } => write!(
+                f,
+                "--pacing expects `alpha,beta` (link latency in seconds, seconds per byte; \
+                 e.g. `2e-5,1e-9`), got `{given}`"
+            ),
+            ConfigError::LayerCountMismatch { requested, checkpoint } => write!(
+                f,
+                "--layers {requested} conflicts with the checkpoint's {checkpoint} layers \
+                 (omit --layers when resuming)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Parse the CLI's `--pacing alpha,beta` value into a uniform α–β
+/// [`Pacing`]: `alpha` is the per-message link latency in seconds, `beta`
+/// the inverse bandwidth in seconds per byte (a transfer of `n` bytes
+/// occupies its ports for `alpha + n·beta` seconds of wall clock).
+pub fn parse_pacing(s: &str) -> Result<Pacing, ConfigError> {
+    let err = || ConfigError::BadPacing { given: s.to_string() };
+    let (a, b) = s.split_once(',').ok_or_else(err)?;
+    let alpha: f64 = a.trim().parse().map_err(|_| err())?;
+    let beta: f64 = b.trim().parse().map_err(|_| err())?;
+    if !alpha.is_finite() || !beta.is_finite() || alpha < 0.0 || beta <= 0.0 {
+        return Err(err());
+    }
+    Ok(Pacing::uniform(1.0 / beta, alpha))
+}
+
+/// Validated session configuration — the only way to obtain one is
+/// [`SessionConfig::builder`] + [`SessionConfigBuilder::build`], so holding
+/// a `SessionConfig` is proof the invariants hold.
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    pub(crate) backend: Backend,
+    pub(crate) dims: LayerDims,
+    pub(crate) topo: Topology,
+    /// `None` = default (1 fresh; the checkpoint's count on resume);
+    /// `Some(n)` is an explicit request and must match on resume.
+    pub(crate) layers: Option<usize>,
+    pub(crate) seed: u64,
+    /// Logical data shards. `None` = one per device on a fresh start; the
+    /// checkpoint's count on resume (it must survive restarts unchanged).
+    pub(crate) data_shards: Option<usize>,
+    pub(crate) executor: Executor,
+    pub(crate) pacing: Option<Pacing>,
+    /// `Some(0)` explicitly disables in-run re-sharding (distinct from
+    /// `None`, which keeps a resumed checkpoint's cadence).
+    pub(crate) reshard_every: Option<usize>,
+    pub(crate) checkpoint_every: usize,
+    pub(crate) checkpoint_dir: Option<PathBuf>,
+    pub(crate) mem_slots: Option<usize>,
+    pub(crate) overlap_degree: Option<usize>,
+}
+
+impl SessionConfig {
+    /// Start building a configuration (reference backend, 2 nodes × 4
+    /// devices, 1 layer, seed 42, sequential executor).
+    pub fn builder() -> SessionConfigBuilder {
+        SessionConfigBuilder::default()
+    }
+
+    /// The resolved simulated cluster.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// The resolved executor.
+    pub fn executor(&self) -> Executor {
+        self.executor
+    }
+
+    /// Checkpoint destination, when configured.
+    pub fn checkpoint_dir(&self) -> Option<&std::path::Path> {
+        self.checkpoint_dir.as_deref()
+    }
+
+    /// Snapshot cadence in iterations (0 = off).
+    pub fn checkpoint_every(&self) -> usize {
+        self.checkpoint_every
+    }
+}
+
+/// Builder for [`SessionConfig`]; all validation happens in
+/// [`SessionConfigBuilder::build`].
+#[derive(Debug, Clone)]
+pub struct SessionConfigBuilder {
+    backend: Backend,
+    dims: LayerDims,
+    topology: Option<Topology>,
+    nodes: usize,
+    devices: usize,
+    layers: Option<usize>,
+    seed: u64,
+    data_shards: Option<usize>,
+    parallel: bool,
+    threads: Option<usize>,
+    overlap: bool,
+    pacing: Option<Pacing>,
+    reshard_every: Option<usize>,
+    checkpoint_every: usize,
+    checkpoint_dir: Option<PathBuf>,
+    mem_slots: Option<usize>,
+    overlap_degree: Option<usize>,
+}
+
+impl Default for SessionConfigBuilder {
+    fn default() -> Self {
+        SessionConfigBuilder {
+            backend: Backend::Reference,
+            dims: reference_dims(),
+            topology: None,
+            nodes: 2,
+            devices: 8,
+            layers: None,
+            seed: 42,
+            data_shards: None,
+            parallel: false,
+            threads: None,
+            overlap: true,
+            pacing: None,
+            reshard_every: None,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            mem_slots: None,
+            overlap_degree: None,
+        }
+    }
+}
+
+impl SessionConfigBuilder {
+    /// Select the compute backend explicitly.
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.backend = b;
+        self
+    }
+
+    /// The hermetic pure-Rust reference backend (the default).
+    pub fn reference(self) -> Self {
+        self.backend(Backend::Reference)
+    }
+
+    /// The PJRT backend, loading artifacts from `artifact_dir`. Layer
+    /// dimensions then come from the artifact manifest, not [`Self::dims`].
+    pub fn pjrt(self, artifact_dir: &str) -> Self {
+        self.backend(Backend::Pjrt { artifact_dir: artifact_dir.to_string() })
+    }
+
+    /// Layer dimensions of the reference backend (ignored under PJRT,
+    /// where the artifacts dictate them). Default: [`reference_dims`].
+    pub fn dims(mut self, d: LayerDims) -> Self {
+        self.dims = d;
+        self
+    }
+
+    /// Use this exact topology (libraries/tests). Overrides
+    /// [`Self::cluster`].
+    pub fn topology(mut self, t: Topology) -> Self {
+        self.topology = Some(t);
+        self
+    }
+
+    /// Build a Cluster-A topology of `devices` split evenly over `nodes`
+    /// (the CLI path; validated at [`Self::build`]).
+    pub fn cluster(mut self, nodes: usize, devices: usize) -> Self {
+        self.nodes = nodes;
+        self.devices = devices;
+        self.topology = None;
+        self
+    }
+
+    /// MoE layers in the stack. Fresh default is 1; on resume the
+    /// checkpoint's count wins and an explicit value must match it.
+    pub fn layers(mut self, l: usize) -> Self {
+        self.layers = Some(l);
+        self
+    }
+
+    /// Engine construction seed (recorded in checkpoints).
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Logical data-shard count (default: one per device; on resume the
+    /// checkpoint's count always wins — elasticity changes the device
+    /// count, never the data stream).
+    pub fn data_shards(mut self, s: usize) -> Self {
+        self.data_shards = Some(s);
+        self
+    }
+
+    /// Run on the SPMD executor (one OS thread per rank).
+    pub fn parallel(mut self, on: bool) -> Self {
+        self.parallel = on;
+        self
+    }
+
+    /// Explicit SPMD thread count; must equal the device count.
+    pub fn threads(mut self, t: usize) -> Self {
+        self.threads = Some(t);
+        self
+    }
+
+    /// Toggle the SPMD overlap scheduler (§4.3 cross-layer pipeline);
+    /// default on. Results are bit-identical either way.
+    pub fn overlap(mut self, on: bool) -> Self {
+        self.overlap = on;
+        self
+    }
+
+    /// α–β link pacing for the SPMD communicator (see [`parse_pacing`] for
+    /// the CLI form). Requires [`Self::parallel`] — nothing consumes
+    /// pacing on the sequential executor. Never affects numerics.
+    pub fn pacing(mut self, p: Pacing) -> Self {
+        self.pacing = Some(p);
+        self
+    }
+
+    /// Re-run Algorithm 2 jointly over all layers every `k` iterations
+    /// (0 disables; unset keeps a resumed checkpoint's cadence).
+    pub fn reshard_every(mut self, k: usize) -> Self {
+        self.reshard_every = Some(k);
+        self
+    }
+
+    /// Snapshot every `n` iterations (0 = off; requires
+    /// [`Self::checkpoint_dir`]).
+    pub fn checkpoint_every(mut self, n: usize) -> Self {
+        self.checkpoint_every = n;
+        self
+    }
+
+    /// Where snapshots land. Setting a directory without a cadence still
+    /// writes one final snapshot at [`Session::finish`].
+    ///
+    /// [`Session::finish`]: crate::fssdp::Session::finish
+    pub fn checkpoint_dir(mut self, d: impl Into<PathBuf>) -> Self {
+        self.checkpoint_dir = Some(d.into());
+        self
+    }
+
+    /// Memory headroom per device for Algorithm 1, in expert slots
+    /// (default 4; on resume the checkpoint's value wins unless set).
+    pub fn mem_slots(mut self, n: usize) -> Self {
+        self.mem_slots = Some(n);
+        self
+    }
+
+    /// Overlap degree for Algorithms 1 and 2 (default 4; on resume the
+    /// checkpoint's value wins unless set).
+    pub fn overlap_degree(mut self, n: usize) -> Self {
+        self.overlap_degree = Some(n);
+        self
+    }
+
+    /// Validate and freeze the configuration. Validation order matches the
+    /// legacy CLI so the first error reported is unchanged.
+    pub fn build(self) -> Result<SessionConfig, ConfigError> {
+        if self.threads.is_some() && !self.parallel {
+            return Err(ConfigError::ThreadsWithoutParallel);
+        }
+        if self.pacing.is_some() && !self.parallel {
+            return Err(ConfigError::PacingWithoutParallel);
+        }
+        let topo = match self.topology {
+            Some(t) => t,
+            None => {
+                if self.nodes == 0 || self.devices == 0 {
+                    return Err(ConfigError::NoDevices);
+                }
+                if self.devices % self.nodes != 0 {
+                    return Err(ConfigError::UnevenDevices);
+                }
+                Topology::cluster_a(self.nodes, self.devices / self.nodes)
+            }
+        };
+        let devices = topo.num_devices();
+        if devices == 0 {
+            return Err(ConfigError::NoDevices);
+        }
+        if self.layers == Some(0) {
+            return Err(ConfigError::ZeroLayers);
+        }
+        if self.data_shards == Some(0) {
+            return Err(ConfigError::ZeroDataShards);
+        }
+        if self.checkpoint_every > 0 && self.checkpoint_dir.is_none() {
+            return Err(ConfigError::CheckpointEveryWithoutDir);
+        }
+        let executor = if self.parallel {
+            let threads = self.threads.unwrap_or(devices);
+            if threads != devices {
+                return Err(ConfigError::ThreadCountMismatch { threads, devices });
+            }
+            if self.backend != Backend::Reference {
+                return Err(ConfigError::ParallelNeedsReference);
+            }
+            Executor::Spmd { threads, overlap: self.overlap }
+        } else {
+            Executor::Sequential
+        };
+        Ok(SessionConfig {
+            backend: self.backend,
+            dims: self.dims,
+            topo,
+            layers: self.layers,
+            seed: self.seed,
+            data_shards: self.data_shards,
+            executor,
+            pacing: self.pacing,
+            reshard_every: self.reshard_every,
+            checkpoint_every: self.checkpoint_every,
+            checkpoint_dir: self.checkpoint_dir,
+            mem_slots: self.mem_slots,
+            overlap_degree: self.overlap_degree,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> SessionConfigBuilder {
+        SessionConfig::builder().reference()
+    }
+
+    // ---- exact error strings: the contract with today's CLI users ----
+
+    #[test]
+    fn zero_devices_error_string() {
+        let err = base().cluster(0, 8).build().unwrap_err();
+        assert_eq!(err.to_string(), "need at least one node and device");
+        let err = base().cluster(2, 0).build().unwrap_err();
+        assert_eq!(err.to_string(), "need at least one node and device");
+    }
+
+    #[test]
+    fn uneven_devices_error_string() {
+        let err = base().cluster(3, 8).build().unwrap_err();
+        assert_eq!(err.to_string(), "devices must divide evenly into nodes");
+    }
+
+    #[test]
+    fn zero_layers_error_string() {
+        let err = base().cluster(2, 4).layers(0).build().unwrap_err();
+        assert_eq!(err, ConfigError::ZeroLayers);
+        assert_eq!(err.to_string(), "--layers must be at least 1");
+    }
+
+    #[test]
+    fn checkpoint_every_without_dir_error_string() {
+        let err = base().cluster(2, 4).checkpoint_every(5).build().unwrap_err();
+        assert_eq!(err, ConfigError::CheckpointEveryWithoutDir);
+        assert_eq!(err.to_string(), "--checkpoint-every needs --checkpoint-dir");
+    }
+
+    #[test]
+    fn threads_without_parallel_error_string() {
+        let err = base().cluster(2, 4).threads(4).build().unwrap_err();
+        assert_eq!(err, ConfigError::ThreadsWithoutParallel);
+        assert_eq!(
+            err.to_string(),
+            "--threads requires --parallel (the SPMD executor runs one thread per rank; \
+             without --parallel the engine is single-threaded)"
+        );
+    }
+
+    #[test]
+    fn thread_mismatch_error_string() {
+        let err = base().cluster(2, 4).parallel(true).threads(3).build().unwrap_err();
+        assert_eq!(err, ConfigError::ThreadCountMismatch { threads: 3, devices: 4 });
+        assert_eq!(
+            err.to_string(),
+            "--threads 3 must equal --devices 4: the SPMD executor runs one OS thread per rank"
+        );
+    }
+
+    #[test]
+    fn parallel_on_pjrt_error_string() {
+        let err =
+            SessionConfig::builder().pjrt("artifacts").cluster(2, 4).parallel(true).build();
+        assert_eq!(err.clone().unwrap_err(), ConfigError::ParallelNeedsReference);
+        assert_eq!(
+            err.unwrap_err().to_string(),
+            "--parallel requires the hermetic backend (add --reference): \
+             PJRT runtime handles cannot be shared across rank threads"
+        );
+    }
+
+    #[test]
+    fn layer_mismatch_error_string() {
+        let err = ConfigError::LayerCountMismatch { requested: 2, checkpoint: 3 };
+        assert_eq!(
+            err.to_string(),
+            "--layers 2 conflicts with the checkpoint's 3 layers (omit --layers when resuming)"
+        );
+    }
+
+    // ---- builder misconfigurations reachable only via CLI before ----
+
+    #[test]
+    fn zero_data_shards_is_rejected() {
+        let err = base().cluster(2, 4).data_shards(0).build().unwrap_err();
+        assert_eq!(err, ConfigError::ZeroDataShards);
+    }
+
+    #[test]
+    fn pacing_without_parallel_is_rejected() {
+        // pacing is only consumed by the SPMD communicator — accepting it
+        // on the sequential executor would silently produce unpaced
+        // timings the user believes are α–β modeled.
+        let p = parse_pacing("2e-5,1e-9").unwrap();
+        let err = base().cluster(2, 4).pacing(p).build().unwrap_err();
+        assert_eq!(err, ConfigError::PacingWithoutParallel);
+        assert!(err.to_string().contains("--pacing requires --parallel"), "{err}");
+        assert!(base().cluster(2, 4).parallel(true).pacing(p).build().is_ok());
+    }
+
+    #[test]
+    fn threads_default_to_device_count() {
+        let cfg = base().cluster(2, 4).parallel(true).build().unwrap();
+        assert_eq!(cfg.executor(), Executor::Spmd { threads: 4, overlap: true });
+    }
+
+    #[test]
+    fn explicit_topology_skips_cluster_validation() {
+        // an uneven `.cluster()` is overridden by a later `.topology()`
+        let cfg = base()
+            .cluster(3, 8)
+            .topology(Topology::flat(1, 1e9))
+            .build()
+            .unwrap();
+        assert_eq!(cfg.topology().num_devices(), 1);
+    }
+
+    #[test]
+    fn overlap_toggle_reaches_the_executor() {
+        let cfg = base().cluster(1, 2).parallel(true).overlap(false).build().unwrap();
+        assert_eq!(cfg.executor(), Executor::Spmd { threads: 2, overlap: false });
+    }
+
+    // ---- pacing parse ----
+
+    #[test]
+    fn pacing_parses_alpha_beta() {
+        let p = parse_pacing("2e-5,1e-9").unwrap();
+        assert!((p.intra_lat - 2e-5).abs() < 1e-12);
+        assert!((p.intra_bw - 1e9).abs() / 1e9 < 1e-9);
+    }
+
+    #[test]
+    fn pacing_parse_errors_are_typed_and_name_the_value() {
+        for bad in ["nope", "1,", ",2", "1;2", "1,2,3", "-1e-5,1e-9", "1e-5,0", "nan,1e-9"] {
+            let err = parse_pacing(bad).unwrap_err();
+            assert_eq!(err, ConfigError::BadPacing { given: bad.to_string() }, "{bad}");
+            assert!(err.to_string().contains(&format!("got `{bad}`")), "{err}");
+        }
+    }
+}

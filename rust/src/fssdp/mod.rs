@@ -32,9 +32,25 @@
 //! freedom does not change the math. `rust/tests/spmd_equivalence.rs`
 //! additionally locks `L = 1` to the seed engine's exact bit pattern and
 //! `L = 3` across executors.
+//!
+//! ## Public API
+//!
+//! The engine is configured and driven through the [`session`] facade:
+//! build a validated [`SessionConfig`] ([`config`]), enter through
+//! [`Session::fresh`] or [`Session::resume`], and observe progress through
+//! [`StepObserver`] hooks. [`FssdpEngine`] itself is constructed only
+//! inside this module; callers reach it read-only via
+//! [`Session::engine`].
 
 pub mod adam;
 pub mod compute;
+pub mod config;
+pub mod session;
+
+pub use config::{parse_pacing, Backend, ConfigError, SessionConfig, SessionConfigBuilder};
+pub use session::{
+    PrintObserver, ResumeReport, Session, SpanCtx, StatsCollector, StepObserver,
+};
 
 use std::collections::BTreeMap;
 
@@ -449,12 +465,14 @@ pub(crate) struct LayerState {
     pub(crate) predictor: LoadPredictor,
 }
 
-/// The engine itself.
+/// The engine itself. Constructed only through the [`Session`] facade (or
+/// crate-internally); the tuning fields below are crate-private and set
+/// from a validated [`SessionConfig`].
 pub struct FssdpEngine {
     pub topo: Topology,
     pub dims: LayerDims,
     /// Which executor [`FssdpEngine::run_span`] uses.
-    pub executor: Executor,
+    pub(crate) executor: Executor,
     pub(crate) compute: Compute,
     /// Engine construction seed (recorded in checkpoints).
     seed: u64,
@@ -462,21 +480,24 @@ pub struct FssdpEngine {
     pub(crate) layers: Vec<LayerState>,
     pub(crate) adam: AdamCfg,
     /// Memory headroom per device for Algorithm 1, in expert slots.
-    pub mem_slots: usize,
+    pub(crate) mem_slots: usize,
     /// Overlap degree for Algorithms 1 and 2.
-    pub overlap_degree: usize,
+    pub(crate) overlap_degree: usize,
     /// Re-run Algorithm 2 (jointly over all layers) every K iterations
     /// inside [`FssdpEngine::run_span`] (0 = never) — the executed
     /// Figure 15b sweep.
-    pub reshard_every: usize,
+    pub(crate) reshard_every: usize,
     /// Cumulative experts moved by in-run re-shards.
-    pub reshards_moved: usize,
+    pub(crate) reshards_moved: usize,
+    /// `(boundary_step, moved)` per in-run re-shard of the current span
+    /// (drained by [`Session`] to fire [`StepObserver::on_reshard`]).
+    pub(crate) reshard_events: Vec<(u64, usize)>,
     /// Optional α–β link pacing for the SPMD communicator: transfers then
     /// occupy wall-clock time proportional to the modeled link, so the
     /// overlap scheduler's wins are physically measurable. Never affects
     /// numerics (pacing delays delivery, it cannot reorder the per-buffer
     /// accumulation orders).
-    pub pacing: Option<Pacing>,
+    pub(crate) pacing: Option<Pacing>,
     rng: Rng,
     /// Per-rank metrics merged after the last SPMD span (None before the
     /// first parallel run).
@@ -484,16 +505,11 @@ pub struct FssdpEngine {
 }
 
 impl FssdpEngine {
-    /// Build a single-layer engine on the PJRT backend: load artifacts,
-    /// shard experts round-robin, init parameters deterministically from
-    /// `seed`.
-    pub fn new(artifact_dir: &str, topo: Topology, seed: u64) -> anyhow::Result<FssdpEngine> {
-        Self::new_layers(artifact_dir, 1, topo, seed)
-    }
-
-    /// Build an `num_layers`-deep engine on the PJRT backend (the layers
-    /// share the artifact's kernels; shapes are identical per layer).
-    pub fn new_layers(
+    /// Build an `num_layers`-deep engine on the PJRT backend: load
+    /// artifacts, shard experts round-robin, init parameters
+    /// deterministically from `seed`. (Crate-internal; the public entry is
+    /// [`Session::fresh`].)
+    pub(crate) fn new_layers(
         artifact_dir: &str,
         num_layers: usize,
         topo: Topology,
@@ -504,15 +520,10 @@ impl FssdpEngine {
         Ok(Self::init(Compute::Pjrt(rt), dims, num_layers, topo, seed))
     }
 
-    /// Build a single-layer engine on the hermetic pure-Rust reference
-    /// backend (no artifacts / PJRT required) — same math, explicit
-    /// dimensions.
-    pub fn new_reference(dims: LayerDims, topo: Topology, seed: u64) -> FssdpEngine {
-        Self::new_reference_layers(dims, 1, topo, seed)
-    }
-
-    /// [`FssdpEngine::new_reference`] with an `num_layers`-deep MoE stack.
-    pub fn new_reference_layers(
+    /// Build an `num_layers`-deep engine on the hermetic pure-Rust
+    /// reference backend (no artifacts / PJRT required) — same math,
+    /// explicit dimensions.
+    pub(crate) fn new_reference_layers(
         dims: LayerDims,
         num_layers: usize,
         topo: Topology,
@@ -580,6 +591,7 @@ impl FssdpEngine {
             overlap_degree: 4,
             reshard_every: 0,
             reshards_moved: 0,
+            reshard_events: Vec::new(),
             pacing: None,
             rng,
             spmd_metrics: None,
@@ -617,13 +629,28 @@ impl FssdpEngine {
     }
 
     /// Read back an expert's parameter chunk in layer `l` (from its owner).
-    pub fn expert_chunk_at(&self, l: usize, e: usize) -> &Vec<f32> {
+    pub fn expert_chunk_at(&self, l: usize, e: usize) -> &[f32] {
         self.layers[l].params.dev(self.owner_at(l, e)).get(e).expect("owner holds its shard")
     }
 
     /// Layer 0's expert chunk (single-layer convenience).
-    pub fn expert_chunk(&self, e: usize) -> &Vec<f32> {
+    pub fn expert_chunk(&self, e: usize) -> &[f32] {
         self.expert_chunk_at(0, e)
+    }
+
+    /// Which executor [`FssdpEngine::run_span`] uses.
+    pub fn executor(&self) -> Executor {
+        self.executor
+    }
+
+    /// The Algorithm 2 cadence in effect (0 = never).
+    pub fn reshard_every(&self) -> usize {
+        self.reshard_every
+    }
+
+    /// Cumulative experts moved by in-run re-shards.
+    pub fn reshards_moved(&self) -> usize {
+        self.reshards_moved
     }
 
     /// Run one FSSDP training iteration of the whole layer stack over
@@ -710,7 +737,7 @@ impl FssdpEngine {
                         .dev(DeviceId(dev))
                         .get(e)
                         .ok_or_else(|| anyhow::anyhow!("device {dev} lacks expert {e}"))?
-                        .clone();
+                        .to_vec();
                     let acc = grads.dev_mut(DeviceId(dev)).get_mut(e).unwrap();
                     let (lo, gx) = compute_expert_key(
                         &mut self.compute,
@@ -738,7 +765,7 @@ impl FssdpEngine {
                         .dev(DeviceId(dev))
                         .get(e)
                         .ok_or_else(|| anyhow::anyhow!("device {dev} lacks expert {e}"))?
-                        .clone();
+                        .to_vec();
                     let rows = forward_expert_rows(&mut self.compute, &dims, &chunk, toks, &acts)?;
                     scatter_rows(&dims, toks, &rows, &mut next);
                 }
@@ -764,7 +791,7 @@ impl FssdpEngine {
                         .dev(DeviceId(dev))
                         .get(e)
                         .ok_or_else(|| anyhow::anyhow!("device {dev} lost expert {e} before bwd"))?
-                        .clone();
+                        .to_vec();
                     let acc = grads_stack[l].dev_mut(DeviceId(dev)).get_mut(e).unwrap();
                     let gx = backward_expert_key(
                         &mut self.compute,
@@ -793,7 +820,7 @@ impl FssdpEngine {
                     .dev(owner)
                     .get(e)
                     .ok_or_else(|| anyhow::anyhow!("owner of {e} lost its gradient"))?
-                    .clone();
+                    .to_vec();
                 let p = layer.params.dev_mut(owner).get_mut(e).unwrap();
                 layer.opt.get_mut(&e).unwrap().update(&self.adam, p, &grad);
             }
@@ -864,6 +891,7 @@ impl FssdpEngine {
         iters: usize,
         sources: usize,
     ) -> anyhow::Result<Vec<EngineStats>> {
+        self.reshard_events.clear();
         if self.reshard_every == 0 {
             return self.run_span_inner(start, iters, sources);
         }
@@ -887,6 +915,7 @@ impl FssdpEngine {
             step += span as u64;
             if step % k == 0 {
                 let moved = self.reshard_now();
+                self.reshard_events.push((step, moved));
                 crate::log_info!("re-shard @ step {step}: {moved} experts moved (Algorithm 2)");
             }
         }
@@ -935,6 +964,13 @@ impl FssdpEngine {
         self.spmd_metrics.as_ref()
     }
 
+    /// Drain the `(boundary_step, moved)` re-shard events of the most
+    /// recent [`FssdpEngine::run_span`] (the [`Session`] fires
+    /// [`StepObserver::on_reshard`] from them).
+    pub(crate) fn take_reshard_events(&mut self) -> Vec<(u64, usize)> {
+        std::mem::take(&mut self.reshard_events)
+    }
+
     // ---- checkpointing (the durable state is exactly the shard sets) ----
 
     /// Capture the complete training state at a step boundary: every
@@ -955,7 +991,7 @@ impl FssdpEngine {
                     .map(|e| {
                         let owner = DeviceId(owners[e]);
                         let chunk =
-                            ls.params.dev(owner).get(e).expect("owner holds its shard").clone();
+                            ls.params.dev(owner).get(e).expect("owner holds its shard").to_vec();
                         let o = ls.opt.get(&e).expect("every expert has optimizer state");
                         ExpertState { chunk, m: o.m.clone(), v: o.v.clone(), t: o.t }
                     })
@@ -989,7 +1025,7 @@ impl FssdpEngine {
     /// the heterogeneous sharding planner jointly over the restored load
     /// windows — FSSDP placement freedom guarantees the training math is
     /// unchanged.
-    pub fn resume_with(
+    pub(crate) fn resume_with(
         compute: Compute,
         topo: Topology,
         state: &TrainState,
@@ -1051,6 +1087,7 @@ impl FssdpEngine {
             overlap_degree: state.overlap_degree,
             reshard_every: state.reshard_every,
             reshards_moved: 0,
+            reshard_events: Vec::new(),
             pacing: None,
             rng: Rng::from_state(state.rng_state),
             spmd_metrics: None,
@@ -1059,7 +1096,7 @@ impl FssdpEngine {
     }
 
     /// [`FssdpEngine::resume_with`] on the reference backend (hermetic).
-    pub fn resume_reference(
+    pub(crate) fn resume_reference(
         topo: Topology,
         state: &TrainState,
         old_world: usize,
@@ -1069,7 +1106,7 @@ impl FssdpEngine {
 
     /// [`FssdpEngine::resume_with`] on the PJRT backend. The artifact
     /// dimensions must match the checkpoint's.
-    pub fn resume(
+    pub(crate) fn resume(
         artifact_dir: &str,
         topo: Topology,
         state: &TrainState,
@@ -1086,241 +1123,10 @@ impl FssdpEngine {
     }
 }
 
-/// Options of the `hecate fssdp` / `hecate checkpoint` / `hecate resume`
-/// CLI flows.
-#[derive(Debug, Clone)]
-pub struct RunOpts {
-    pub nodes: usize,
-    pub devices: usize,
-    pub iters: usize,
-    pub seed: u64,
-    /// MoE layers in the stack. `None` = default (1 on a fresh start,
-    /// the checkpoint's count on resume); `Some(n)` is an explicit request
-    /// and must match the checkpoint when resuming.
-    pub layers: Option<usize>,
-    /// Re-run Algorithm 2 every K iterations. `Some(0)` explicitly
-    /// disables it (distinct from `None`, which keeps a resumed
-    /// checkpoint's cadence).
-    pub reshard_every: Option<usize>,
-    /// Snapshot every N iterations into `checkpoint_dir` (0 = off).
-    pub checkpoint_every: usize,
-    pub checkpoint_dir: Option<String>,
-    /// Resume from this checkpoint directory instead of a fresh init.
-    pub resume: Option<String>,
-    /// Use the hermetic reference backend instead of PJRT artifacts.
-    pub reference: bool,
-    /// Run on the SPMD executor (one OS thread per rank).
-    pub parallel: bool,
-    /// Optional explicit thread count; must equal `devices` when given
-    /// (SPMD runs exactly one thread per rank).
-    pub threads: Option<usize>,
-}
-
-impl Default for RunOpts {
-    fn default() -> Self {
-        RunOpts {
-            nodes: 2,
-            devices: 8,
-            iters: 10,
-            seed: 42,
-            layers: None,
-            reshard_every: None,
-            checkpoint_every: 0,
-            checkpoint_dir: None,
-            resume: None,
-            reference: false,
-            parallel: false,
-            threads: None,
-        }
-    }
-}
-
 /// Reference-backend dimensions used when no artifacts are available
 /// (small enough for CLI demos and CI).
 pub fn reference_dims() -> LayerDims {
     LayerDims { tokens: 16, d_model: 8, d_ffn: 16, experts: 8, cap: 16 }
-}
-
-/// CLI driver: run the engine and print per-iteration stats (legacy entry,
-/// no checkpointing).
-pub fn run_demo(
-    artifact_dir: &str,
-    nodes: usize,
-    devices: usize,
-    iters: usize,
-    seed: u64,
-) -> anyhow::Result<()> {
-    run_demo_with(
-        artifact_dir,
-        &RunOpts { nodes, devices, iters, seed, ..Default::default() },
-    )
-}
-
-/// CLI driver with checkpoint/resume flows.
-pub fn run_demo_with(artifact_dir: &str, opts: &RunOpts) -> anyhow::Result<()> {
-    anyhow::ensure!(opts.nodes > 0 && opts.devices > 0, "need at least one node and device");
-    anyhow::ensure!(
-        opts.devices % opts.nodes == 0,
-        "devices must divide evenly into nodes"
-    );
-    anyhow::ensure!(opts.layers != Some(0), "--layers must be at least 1");
-    let topo = Topology::cluster_a(opts.nodes, opts.devices / opts.nodes);
-    println!("FSSDP numeric engine on {} ({} devices)", topo.name, opts.devices);
-
-    anyhow::ensure!(
-        opts.checkpoint_every == 0 || opts.checkpoint_dir.is_some(),
-        "--checkpoint-every needs --checkpoint-dir"
-    );
-
-    // SPMD flag validation, before any engine is built: one thread per
-    // rank, and only the hermetic backend (PJRT client handles are
-    // single-threaded).
-    if opts.parallel {
-        let threads = opts.threads.unwrap_or(opts.devices);
-        anyhow::ensure!(
-            threads == opts.devices,
-            "--threads {} must equal --devices {}: the SPMD executor runs one OS thread per rank",
-            threads,
-            opts.devices
-        );
-        anyhow::ensure!(
-            opts.reference,
-            "--parallel requires the hermetic backend (add --reference): \
-             PJRT runtime handles cannot be shared across rank threads"
-        );
-    }
-
-    // Fresh start or elastic resume.
-    let (mut engine, mut step, sources) = match &opts.resume {
-        None => {
-            let layers = opts.layers.unwrap_or(1);
-            let engine = if opts.reference {
-                FssdpEngine::new_reference_layers(reference_dims(), layers, topo, opts.seed)
-            } else {
-                FssdpEngine::new_layers(artifact_dir, layers, topo, opts.seed)?
-            };
-            (engine, 0u64, opts.devices)
-        }
-        Some(dir) => {
-            let (state, saved) = checkpoint::load(std::path::Path::new(dir))?;
-            if let Some(l) = opts.layers {
-                anyhow::ensure!(
-                    l == state.num_layers(),
-                    "--layers {l} conflicts with the checkpoint's {} layers \
-                     (omit --layers when resuming)",
-                    state.num_layers()
-                );
-            }
-            // The PJRT arm goes through `resume`, which validates the
-            // artifact dims against the checkpoint before building.
-            let (engine, plan) = if opts.reference {
-                FssdpEngine::resume_reference(topo, &state, saved.world())?
-            } else {
-                FssdpEngine::resume(artifact_dir, topo, &state, saved.world())?
-            };
-            println!(
-                "resumed step {} from {dir}: {} -> {} devices, {} layers, {} experts moved ({:.2} MB), {}",
-                state.step,
-                saved.world(),
-                opts.devices,
-                state.num_layers(),
-                plan.moved_experts.len(),
-                plan.bytes_moved as f64 / 1e6,
-                if plan.kept_saved_layout { "layout kept" } else { "re-sharded (Algorithm 2)" },
-            );
-            (engine, state.step, state.data_shards)
-        }
-    };
-    if let Some(k) = opts.reshard_every {
-        engine.reshard_every = k;
-    }
-
-    if opts.parallel {
-        engine.executor = Executor::spmd_for(&engine.topo);
-    }
-
-    println!(
-        "stack: {} layer(s) x {} experts, d_model {}, d_ffn {}, {} tokens/source, cap {} \
-         (backend: {}, {}, reshard every {})",
-        engine.num_layers(),
-        engine.dims.experts,
-        engine.dims.d_model,
-        engine.dims.d_ffn,
-        engine.dims.tokens,
-        engine.dims.cap,
-        engine.backend(),
-        match engine.executor {
-            Executor::Sequential => "sequential".to_string(),
-            Executor::Spmd { threads, .. } => format!("spmd x{threads}"),
-        },
-        if engine.reshard_every == 0 {
-            "never".to_string()
-        } else {
-            engine.reshard_every.to_string()
-        }
-    );
-
-    // Spans run between checkpoint boundaries so both executors share one
-    // driver loop (the SPMD executor keeps its rank threads alive for the
-    // whole span and syncs state back at span exit).
-    let end = step + opts.iters as u64;
-    while step < end {
-        let span = if opts.checkpoint_every > 0 {
-            let ce = opts.checkpoint_every as u64;
-            let next_ckpt = (step / ce + 1) * ce;
-            (end.min(next_ckpt) - step) as usize
-        } else {
-            (end - step) as usize
-        };
-        let stats = engine.run_span(step, span, sources)?;
-        for (k, s) in stats.iter().enumerate() {
-            let it = step + k as u64;
-            println!(
-                "iter {it:>3}  loss {:.5}  λ={:.2}  replicas {}  remote_tokens {}  straggler {:.2}",
-                s.loss, s.spag_sparsity, s.replicas, s.remote_tokens, s.straggler
-            );
-        }
-        step += span as u64;
-        if opts.checkpoint_every > 0 && step % opts.checkpoint_every as u64 == 0 {
-            let dir = opts.checkpoint_dir.as_deref().expect("validated at entry");
-            let info = checkpoint::save(
-                std::path::Path::new(dir),
-                &engine.snapshot(step, sources),
-                &engine.topo,
-            )?;
-            println!(
-                "  checkpoint @ step {step}: {} files, {:.2} MB -> {dir}",
-                info.files,
-                info.total_bytes as f64 / 1e6
-            );
-        }
-    }
-    if engine.reshard_every > 0 {
-        println!("re-shards moved {} expert(s) in total", engine.reshards_moved);
-    }
-    if let Some(m) = engine.spmd_metrics() {
-        println!(
-            "spmd: compute {:?} | spag wait {:?} | gate+exchange {:?} | combine {:?} | sprs {:?} (summed over ranks)",
-            m.timer("spmd.compute"),
-            m.timer("spmd.spag_wait"),
-            m.timer("spmd.gate"),
-            m.timer("spmd.combine"),
-            m.timer("spmd.sprs")
-        );
-    }
-    // Final snapshot when a checkpoint dir is configured.
-    if let Some(dir) = &opts.checkpoint_dir {
-        if opts.checkpoint_every == 0 || step % opts.checkpoint_every as u64 != 0 {
-            checkpoint::save(
-                std::path::Path::new(dir),
-                &engine.snapshot(step, sources),
-                &engine.topo,
-            )?;
-            println!("final checkpoint @ step {step} -> {dir}");
-        }
-    }
-    println!("done — parameters live on their shard owners (one global copy).");
-    Ok(())
 }
 
 #[cfg(test)]
@@ -1335,11 +1141,11 @@ mod tests {
         let sources = 4;
         let dims = reference_dims();
         let run = |topo: Topology| -> Vec<Vec<f32>> {
-            let mut e = FssdpEngine::new_reference(dims, topo, 7);
+            let mut e = FssdpEngine::new_reference_layers(dims, topo, 7);
             for i in 0..3 {
                 e.step(i, sources).unwrap();
             }
-            (0..e.dims.experts).map(|x| e.expert_chunk(x).clone()).collect()
+            (0..e.dims.experts).map(|x| e.expert_chunk(x).to_vec()).collect()
         };
         let dist = run(Topology::cluster_a(2, 2));
         let refr = run(Topology::flat(1, 1e9));
@@ -1364,7 +1170,7 @@ mod tests {
             let mut out = Vec::new();
             for l in 0..2 {
                 for x in 0..e.dims.experts {
-                    out.push(e.expert_chunk_at(l, x).clone());
+                    out.push(e.expert_chunk_at(l, x).to_vec());
                 }
             }
             out
@@ -1379,7 +1185,8 @@ mod tests {
 
     #[test]
     fn reference_engine_loss_decreases() {
-        let mut e = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(2, 2), 11);
+        let mut e =
+            FssdpEngine::new_reference_layers(reference_dims(), 1, Topology::cluster_a(2, 2), 11);
         let first = e.step(0, 4).unwrap().loss;
         let mut last = first;
         for i in 1..6 {
@@ -1394,7 +1201,7 @@ mod tests {
         let mut e =
             FssdpEngine::new_reference_layers(reference_dims(), 3, Topology::cluster_a(2, 2), 11);
         let before: Vec<Vec<f32>> =
-            (0..e.dims.experts).map(|x| e.expert_chunk_at(0, x).clone()).collect();
+            (0..e.dims.experts).map(|x| e.expert_chunk_at(0, x).to_vec()).collect();
         let first = e.step(0, 4).unwrap().loss;
         let mut last = first;
         for i in 1..6 {
@@ -1403,7 +1210,7 @@ mod tests {
         assert!(last < first, "loss {first} -> {last}");
         // the backward pass must actually reach layer 0's parameters
         let after: Vec<Vec<f32>> =
-            (0..e.dims.experts).map(|x| e.expert_chunk_at(0, x).clone()).collect();
+            (0..e.dims.experts).map(|x| e.expert_chunk_at(0, x).to_vec()).collect();
         assert_ne!(before, after, "layer-0 parameters must move under training");
     }
 
@@ -1450,7 +1257,7 @@ mod tests {
         let mut loss = 0.0f64;
         let inv_t = 1.0f32 / (dims.tokens * sources) as f32;
         for (&(dev, x), toks) in &routes {
-            let chunk = e.layers[0].params.dev(DeviceId(dev)).get(x).unwrap().clone();
+            let chunk = e.layers[0].params.dev(DeviceId(dev)).get(x).unwrap().to_vec();
             let acc = grads.dev_mut(DeviceId(dev)).get_mut(x).unwrap();
             let (lo, _gx) =
                 compute_expert_key(&mut e.compute, &dims, &chunk, toks, &batches, inv_t, acc, false)
@@ -1461,7 +1268,7 @@ mod tests {
         let layer = &mut e.layers[0];
         for x in 0..dims.experts {
             let owner = layer.shards.holders(x).next().unwrap();
-            let grad = grads.dev(owner).get(x).unwrap().clone();
+            let grad = grads.dev(owner).get(x).unwrap().to_vec();
             let p = layer.params.dev_mut(owner).get_mut(x).unwrap();
             layer.opt.get_mut(&x).unwrap().update(&e.adam, p, &grad);
         }
@@ -1485,8 +1292,8 @@ mod tests {
         // moments, and loss.
         let dims = reference_dims();
         let sources = 4;
-        let mut a = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 2), 13);
-        let mut b = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 2), 13);
+        let mut a = FssdpEngine::new_reference_layers(dims, 1, Topology::cluster_a(2, 2), 13);
+        let mut b = FssdpEngine::new_reference_layers(dims, 1, Topology::cluster_a(2, 2), 13);
         for i in 0..3 {
             let sa = a.step(i, sources).unwrap();
             let lb = seed_oracle_step(&mut b, i, sources);
@@ -1541,7 +1348,7 @@ mod tests {
             assert_eq!(layer.experts.len(), e.dims.experts);
             for (x, &o) in layer.owners.iter().enumerate() {
                 assert_eq!(o, e.owner_at(l, x).0);
-                assert_eq!(layer.experts[x].chunk, *e.expert_chunk_at(l, x));
+                assert_eq!(layer.experts[x].chunk.as_slice(), e.expert_chunk_at(l, x));
             }
         }
     }

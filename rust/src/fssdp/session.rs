@@ -1,0 +1,583 @@
+//! The unified training API: one [`Session`] facade over the numeric FSSDP
+//! engine, entered through [`Session::fresh`] (new run) or
+//! [`Session::resume`] (elastic restart from a checkpoint directory), and
+//! driven through [`StepObserver`] hooks so checkpoint printing, metrics
+//! reporting, and stats collection compose instead of living inside one
+//! monolithic CLI driver.
+//!
+//! A session owns the engine, the absolute step cursor, and the logical
+//! data-shard count, and enforces the span discipline the executors need:
+//! [`Session::run`] splits work at checkpoint boundaries, the engine splits
+//! further at re-shard boundaries, and observer hooks fire in
+//! absolute-step order. The engine itself is reachable read-only via
+//! [`Session::engine`] — its tuning fields are crate-private, so the
+//! validated [`SessionConfig`] is the only way to configure execution.
+//!
+//! ```
+//! use hecate::fssdp::{Session, SessionConfig};
+//! use hecate::topology::Topology;
+//!
+//! let cfg = SessionConfig::builder()
+//!     .reference()                        // hermetic pure-Rust kernels
+//!     .topology(Topology::cluster_a(2, 2))
+//!     .layers(2)                          // a 2-layer MoE stack
+//!     .seed(7)
+//!     .build()
+//!     .unwrap();
+//! let mut session = Session::fresh(cfg).unwrap();
+//! let stats = session.run(2).unwrap();    // two training iterations
+//! assert_eq!(stats.len(), 2);
+//! assert_eq!(session.step(), 2);
+//! let chunk = session.engine().expert_chunk(0); // read-only access
+//! assert!(!chunk.is_empty());
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::checkpoint::{self, CheckpointInfo, TrainState};
+use crate::metrics::Metrics;
+use crate::topology::Topology;
+
+use super::config::{Backend, ConfigError, SessionConfig};
+use super::{EngineStats, Executor, FssdpEngine};
+
+/// Hooks fired by [`Session::run_observed`] as a run progresses. All
+/// methods default to no-ops; implement the ones you need and pass several
+/// observers to compose behaviors (printing, collection, custom
+/// checkpoint reactions).
+pub trait StepObserver {
+    /// One training iteration finished. `step` is the absolute iteration
+    /// index that just ran.
+    fn on_step(&mut self, step: u64, stats: &EngineStats) {
+        let _ = (step, stats);
+    }
+
+    /// Algorithm 2 re-ran at absolute-step boundary `step` and migrated
+    /// `moved` experts.
+    fn on_reshard(&mut self, step: u64, moved: usize) {
+        let _ = (step, moved);
+    }
+
+    /// The session wrote a checkpoint at absolute step `step`.
+    fn on_checkpoint(&mut self, step: u64, info: &CheckpointInfo) {
+        let _ = (step, info);
+    }
+
+    /// An executor span committed (engine state is merged and
+    /// snapshot-safe); `ctx` gives read access to the engine and the
+    /// span's statistics.
+    fn on_span_end(&mut self, ctx: &SpanCtx<'_>) {
+        let _ = ctx;
+    }
+}
+
+/// Read-only view handed to [`StepObserver::on_span_end`]: the merged
+/// engine state right after a span commits.
+pub struct SpanCtx<'a> {
+    engine: &'a FssdpEngine,
+    step: u64,
+    data_shards: usize,
+    stats: &'a [EngineStats],
+}
+
+impl SpanCtx<'_> {
+    /// Absolute step after the span (== the next iteration to run).
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// Per-iteration statistics of the span just committed.
+    pub fn stats(&self) -> &[EngineStats] {
+        self.stats
+    }
+
+    /// The engine, read-only.
+    pub fn engine(&self) -> &FssdpEngine {
+        self.engine
+    }
+
+    /// Capture the complete training state at this boundary (what
+    /// [`checkpoint::save`] persists).
+    pub fn snapshot(&self) -> TrainState {
+        self.engine.snapshot(self.step, self.data_shards)
+    }
+
+    /// Per-rank metrics of the span, when it ran on the SPMD executor.
+    pub fn spmd_metrics(&self) -> Option<&Metrics> {
+        self.engine.spmd_metrics()
+    }
+}
+
+/// What [`Session::resume`] restored: the checkpointed position plus the
+/// elastic reshard plan's summary.
+#[derive(Debug, Clone)]
+pub struct ResumeReport {
+    /// First iteration the resumed session will run.
+    pub step: u64,
+    /// Device count that wrote the checkpoint.
+    pub old_world: usize,
+    /// Device count of this session's topology.
+    pub new_world: usize,
+    /// Layers in the restored stack.
+    pub layers: usize,
+    /// Logical data shards (restored; elasticity never changes them).
+    pub data_shards: usize,
+    /// `(layer, expert)` moves the elastic plan performed.
+    pub moved_experts: usize,
+    /// Bytes those moves carried (params + Adam state).
+    pub bytes_moved: usize,
+    /// True when the saved owner layout was reused verbatim (same world
+    /// size — the resumed run is bit-identical to the uninterrupted one).
+    pub kept_saved_layout: bool,
+}
+
+/// A training run: the engine plus its absolute step cursor, data-shard
+/// count, and checkpoint cadence. See the module docs for an end-to-end
+/// example.
+pub struct Session {
+    engine: FssdpEngine,
+    step: u64,
+    data_shards: usize,
+    checkpoint_every: usize,
+    checkpoint_dir: Option<PathBuf>,
+    last_saved_step: Option<u64>,
+    resume: Option<ResumeReport>,
+}
+
+impl Session {
+    /// Start a fresh run from `cfg` (step 0, deterministic init from the
+    /// config seed).
+    pub fn fresh(cfg: SessionConfig) -> anyhow::Result<Session> {
+        let layers = cfg.layers.unwrap_or(1);
+        let mut engine = match &cfg.backend {
+            Backend::Reference => {
+                FssdpEngine::new_reference_layers(cfg.dims, layers, cfg.topo.clone(), cfg.seed)
+            }
+            Backend::Pjrt { artifact_dir } => {
+                FssdpEngine::new_layers(artifact_dir, layers, cfg.topo.clone(), cfg.seed)?
+            }
+        };
+        if let Some(k) = cfg.reshard_every {
+            engine.reshard_every = k;
+        }
+        Self::apply_tuning(&mut engine, &cfg);
+        let data_shards = cfg.data_shards.unwrap_or_else(|| cfg.topo.num_devices());
+        Ok(Session {
+            engine,
+            step: 0,
+            data_shards,
+            checkpoint_every: cfg.checkpoint_every,
+            checkpoint_dir: cfg.checkpoint_dir,
+            last_saved_step: None,
+            resume: None,
+        })
+    }
+
+    /// Resume the run checkpointed in `dir` onto `cfg`'s topology, which
+    /// may have a different device count (elastic resume; the planner
+    /// re-shards all layers jointly). Durable run state — step, layer
+    /// count, data shards, re-shard cadence, Algorithm 1 budgets — comes
+    /// from the checkpoint; config values explicitly set override the
+    /// tunables, and an explicit layer count must match the checkpoint.
+    pub fn resume(cfg: SessionConfig, dir: &Path) -> anyhow::Result<Session> {
+        let (state, saved) = checkpoint::load(dir)?;
+        if let Some(l) = cfg.layers {
+            if l != state.num_layers() {
+                return Err(ConfigError::LayerCountMismatch {
+                    requested: l,
+                    checkpoint: state.num_layers(),
+                }
+                .into());
+            }
+        }
+        let (mut engine, plan) = match &cfg.backend {
+            Backend::Reference => {
+                FssdpEngine::resume_reference(cfg.topo.clone(), &state, saved.world())?
+            }
+            // The PJRT arm validates the artifact dims against the
+            // checkpoint before building anything expensive.
+            Backend::Pjrt { artifact_dir } => {
+                FssdpEngine::resume(artifact_dir, cfg.topo.clone(), &state, saved.world())?
+            }
+        };
+        if let Some(k) = cfg.reshard_every {
+            engine.reshard_every = k;
+        }
+        Self::apply_tuning(&mut engine, &cfg);
+        let report = ResumeReport {
+            step: state.step,
+            old_world: saved.world(),
+            new_world: cfg.topo.num_devices(),
+            layers: state.num_layers(),
+            data_shards: state.data_shards,
+            moved_experts: plan.moved_experts.len(),
+            bytes_moved: plan.bytes_moved,
+            kept_saved_layout: plan.kept_saved_layout,
+        };
+        // A resume dir that doubles as the checkpoint destination already
+        // holds this step's snapshot; any *other* destination still needs
+        // its final snapshot even if no iterations run.
+        let resumed_into_destination = cfg.checkpoint_dir.as_deref() == Some(dir);
+        Ok(Session {
+            engine,
+            step: state.step,
+            data_shards: state.data_shards,
+            checkpoint_every: cfg.checkpoint_every,
+            checkpoint_dir: cfg.checkpoint_dir,
+            last_saved_step: if resumed_into_destination { Some(state.step) } else { None },
+            resume: Some(report),
+        })
+    }
+
+    /// Tunables shared by both entry points (the engine's fields are
+    /// crate-private; this is their single write site outside resume).
+    fn apply_tuning(engine: &mut FssdpEngine, cfg: &SessionConfig) {
+        engine.executor = cfg.executor;
+        engine.pacing = cfg.pacing;
+        if let Some(m) = cfg.mem_slots {
+            engine.mem_slots = m;
+        }
+        if let Some(o) = cfg.overlap_degree {
+            engine.overlap_degree = o;
+        }
+    }
+
+    /// Run `iters` iterations from the current step (no observers).
+    pub fn run(&mut self, iters: usize) -> anyhow::Result<Vec<EngineStats>> {
+        self.run_observed(iters, &mut [])
+    }
+
+    /// Run `iters` iterations, firing [`StepObserver`] hooks as work
+    /// progresses. Spans split at checkpoint boundaries (the engine splits
+    /// further at re-shard boundaries); periodic snapshots land in the
+    /// configured checkpoint directory and fire
+    /// [`StepObserver::on_checkpoint`].
+    pub fn run_observed(
+        &mut self,
+        iters: usize,
+        observers: &mut [&mut dyn StepObserver],
+    ) -> anyhow::Result<Vec<EngineStats>> {
+        let end = self.step + iters as u64;
+        let mut all = Vec::with_capacity(iters);
+        while self.step < end {
+            let span = if self.checkpoint_every > 0 {
+                let ce = self.checkpoint_every as u64;
+                let next_ckpt = (self.step / ce + 1) * ce;
+                (end.min(next_ckpt) - self.step) as usize
+            } else {
+                (end - self.step) as usize
+            };
+            let start = self.step;
+            let stats = self.engine.run_span(start, span, self.data_shards)?;
+            let reshards = self.engine.take_reshard_events();
+            let mut ri = 0;
+            for (k, s) in stats.iter().enumerate() {
+                let it = start + k as u64;
+                for o in observers.iter_mut() {
+                    o.on_step(it, s);
+                }
+                while ri < reshards.len() && reshards[ri].0 == it + 1 {
+                    for o in observers.iter_mut() {
+                        o.on_reshard(reshards[ri].0, reshards[ri].1);
+                    }
+                    ri += 1;
+                }
+            }
+            self.step += span as u64;
+            if self.checkpoint_every > 0 && self.step % self.checkpoint_every as u64 == 0 {
+                let dir = self
+                    .checkpoint_dir
+                    .clone()
+                    .expect("validated at SessionConfig::build: cadence implies a dir");
+                let info = self.checkpoint_to(&dir)?;
+                for o in observers.iter_mut() {
+                    o.on_checkpoint(self.step, &info);
+                }
+            }
+            let ctx = SpanCtx {
+                engine: &self.engine,
+                step: self.step,
+                data_shards: self.data_shards,
+                stats: &stats,
+            };
+            for o in observers.iter_mut() {
+                o.on_span_end(&ctx);
+            }
+            all.extend(stats);
+        }
+        Ok(all)
+    }
+
+    /// End-of-run bookkeeping: when a checkpoint directory is configured
+    /// and the current step has not just been snapshotted, write one final
+    /// checkpoint (firing [`StepObserver::on_checkpoint`]). Returns the
+    /// save info when a snapshot was written.
+    pub fn finish(
+        &mut self,
+        observers: &mut [&mut dyn StepObserver],
+    ) -> anyhow::Result<Option<CheckpointInfo>> {
+        let Some(dir) = self.checkpoint_dir.clone() else {
+            return Ok(None);
+        };
+        if self.last_saved_step == Some(self.step) {
+            return Ok(None);
+        }
+        let info = self.checkpoint_to(&dir)?;
+        for o in observers.iter_mut() {
+            o.on_checkpoint(self.step, &info);
+        }
+        Ok(Some(info))
+    }
+
+    /// Write a checkpoint of the current state into `dir` (independent of
+    /// the configured cadence/directory).
+    pub fn checkpoint_to(&mut self, dir: &Path) -> anyhow::Result<CheckpointInfo> {
+        let info = checkpoint::save(dir, &self.snapshot(), &self.engine.topo)?;
+        if self.checkpoint_dir.as_deref() == Some(dir) {
+            self.last_saved_step = Some(self.step);
+        }
+        Ok(info)
+    }
+
+    /// Capture the complete training state at the current step boundary.
+    pub fn snapshot(&self) -> TrainState {
+        self.engine.snapshot(self.step, self.data_shards)
+    }
+
+    /// The engine, read-only (dims, backend, expert chunks, shard maps).
+    pub fn engine(&self) -> &FssdpEngine {
+        &self.engine
+    }
+
+    /// Next iteration to run (0 on a fresh session; the checkpointed step
+    /// right after a resume).
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// Logical data shards this run streams.
+    pub fn data_shards(&self) -> usize {
+        self.data_shards
+    }
+
+    /// The executor this session runs on.
+    pub fn executor(&self) -> Executor {
+        self.engine.executor()
+    }
+
+    /// The Algorithm 2 cadence in effect (0 = never).
+    pub fn reshard_every(&self) -> usize {
+        self.engine.reshard_every()
+    }
+
+    /// Experts migrated by in-run re-shards so far.
+    pub fn reshards_moved(&self) -> usize {
+        self.engine.reshards_moved()
+    }
+
+    /// Per-rank metrics merged over the most recent SPMD span.
+    pub fn spmd_metrics(&self) -> Option<&Metrics> {
+        self.engine.spmd_metrics()
+    }
+
+    /// The elastic-resume summary (None on fresh sessions).
+    pub fn resume_report(&self) -> Option<&ResumeReport> {
+        self.resume.as_ref()
+    }
+
+    /// The simulated cluster.
+    pub fn topology(&self) -> &Topology {
+        &self.engine.topo
+    }
+}
+
+/// Observer printing the classic per-iteration stat line and checkpoint
+/// confirmations — the `hecate fssdp` console output, now composable.
+#[derive(Debug, Default)]
+pub struct PrintObserver;
+
+impl StepObserver for PrintObserver {
+    fn on_step(&mut self, step: u64, s: &EngineStats) {
+        println!(
+            "iter {step:>3}  loss {:.5}  λ={:.2}  replicas {}  remote_tokens {}  straggler {:.2}",
+            s.loss, s.spag_sparsity, s.replicas, s.remote_tokens, s.straggler
+        );
+    }
+
+    fn on_checkpoint(&mut self, step: u64, info: &CheckpointInfo) {
+        println!(
+            "  checkpoint @ step {step}: {} files, {:.2} MB -> {}",
+            info.files,
+            info.total_bytes as f64 / 1e6,
+            info.dir.display()
+        );
+    }
+}
+
+/// Observer accumulating everything a run reports — per-iteration stats,
+/// re-shard and checkpoint events — for later analysis when the
+/// return value of [`Session::run`] (per-iteration stats only) is not
+/// enough.
+#[derive(Debug, Default)]
+pub struct StatsCollector {
+    /// `(step, stats)` per iteration, in order.
+    pub steps: Vec<(u64, EngineStats)>,
+    /// `(boundary_step, moved_experts)` per in-run re-shard.
+    pub reshards: Vec<(u64, usize)>,
+    /// Steps at which checkpoints were written.
+    pub checkpoints: Vec<u64>,
+}
+
+impl StepObserver for StatsCollector {
+    fn on_step(&mut self, step: u64, stats: &EngineStats) {
+        self.steps.push((step, stats.clone()));
+    }
+
+    fn on_reshard(&mut self, step: u64, moved: usize) {
+        self.reshards.push((step, moved));
+    }
+
+    fn on_checkpoint(&mut self, step: u64, _info: &CheckpointInfo) {
+        self.checkpoints.push(step);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fssdp::reference_dims;
+    use crate::testing::all_chunks;
+
+    fn cfg() -> crate::fssdp::SessionConfigBuilder {
+        SessionConfig::builder().reference().topology(Topology::cluster_a(2, 2)).seed(13)
+    }
+
+    #[test]
+    fn fresh_session_matches_direct_engine_trajectory_bitwise() {
+        // The facade must not perturb the math: Session::fresh + run ==
+        // the crate-private constructor + run_span at the same seed.
+        let mut s = Session::fresh(cfg().data_shards(4).build().unwrap()).unwrap();
+        s.run(3).unwrap();
+        let mut e =
+            FssdpEngine::new_reference_layers(reference_dims(), 1, Topology::cluster_a(2, 2), 13);
+        e.run_span(0, 3, 4).unwrap();
+        assert_eq!(all_chunks(s.engine()), all_chunks(&e));
+        assert_eq!(s.step(), 3);
+    }
+
+    #[test]
+    fn observers_see_every_step_reshard_and_checkpoint() {
+        let dir = std::env::temp_dir().join(format!("hecate-session-obs-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = Session::fresh(
+            cfg()
+                .layers(2)
+                .data_shards(4)
+                .reshard_every(2)
+                .checkpoint_every(3)
+                .checkpoint_dir(&dir)
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
+        let mut col = StatsCollector::default();
+        let stats = s.run_observed(6, &mut [&mut col]).unwrap();
+        assert_eq!(stats.len(), 6);
+        assert_eq!(col.steps.len(), 6);
+        assert_eq!(
+            col.steps.iter().map(|(i, _)| *i).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3, 4, 5]
+        );
+        // re-shards at absolute boundaries 2, 4, 6; checkpoints at 3, 6
+        assert_eq!(col.reshards.iter().map(|(i, _)| *i).collect::<Vec<_>>(), vec![2, 4, 6]);
+        assert_eq!(col.checkpoints, vec![3, 6]);
+        // the boundary snapshot already covered step 6 — finish is a no-op
+        assert!(s.finish(&mut [&mut col]).unwrap().is_none());
+        assert_eq!(col.checkpoints, vec![3, 6]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn finish_writes_a_final_snapshot_off_cadence() {
+        let dir =
+            std::env::temp_dir().join(format!("hecate-session-fin-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s =
+            Session::fresh(cfg().data_shards(4).checkpoint_dir(&dir).build().unwrap()).unwrap();
+        s.run(2).unwrap();
+        let info = s.finish(&mut []).unwrap().expect("no cadence: final snapshot required");
+        assert!(info.files >= 2);
+        assert!(dir.join("manifest.json").exists());
+        // a second finish at the same step is a no-op
+        assert!(s.finish(&mut []).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn resume_restores_step_shards_and_cadence() {
+        let dir =
+            std::env::temp_dir().join(format!("hecate-session-res-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = Session::fresh(
+            cfg().layers(2).data_shards(4).reshard_every(4).build().unwrap(),
+        )
+        .unwrap();
+        s.run(2).unwrap();
+        s.checkpoint_to(&dir).unwrap();
+
+        let r = Session::resume(cfg().build().unwrap(), &dir).unwrap();
+        assert_eq!(r.step(), 2);
+        assert_eq!(r.data_shards(), 4);
+        assert_eq!(r.reshard_every(), 4, "cadence is durable run config");
+        let rep = r.resume_report().unwrap();
+        assert!(rep.kept_saved_layout);
+        assert_eq!(rep.old_world, 4);
+        assert_eq!(rep.new_world, 4);
+        assert_eq!(rep.layers, 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn finish_after_resume_writes_to_a_fresh_destination() {
+        // Resume from A with checkpoint destination B and run nothing: B
+        // must still receive the final snapshot (A's copy does not make
+        // the state durable in B).
+        let a = std::env::temp_dir().join(format!("hecate-session-rsa-{}", std::process::id()));
+        let b = std::env::temp_dir().join(format!("hecate-session-rsb-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&a);
+        let _ = std::fs::remove_dir_all(&b);
+        let mut s = Session::fresh(cfg().data_shards(4).build().unwrap()).unwrap();
+        s.run(1).unwrap();
+        s.checkpoint_to(&a).unwrap();
+
+        let mut r = Session::resume(cfg().checkpoint_dir(&b).build().unwrap(), &a).unwrap();
+        assert!(r.finish(&mut []).unwrap().is_some(), "fresh destination needs a snapshot");
+        assert!(b.join("manifest.json").exists());
+
+        // …but resuming with the destination set to the resume dir itself
+        // skips the redundant rewrite of the snapshot just read.
+        let mut same = Session::resume(cfg().checkpoint_dir(&a).build().unwrap(), &a).unwrap();
+        assert!(same.finish(&mut []).unwrap().is_none());
+        std::fs::remove_dir_all(&a).unwrap();
+        std::fs::remove_dir_all(&b).unwrap();
+    }
+
+    #[test]
+    fn resume_rejects_conflicting_layer_count() {
+        let dir =
+            std::env::temp_dir().join(format!("hecate-session-lay-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = Session::fresh(cfg().layers(3).data_shards(4).build().unwrap()).unwrap();
+        s.run(1).unwrap();
+        s.checkpoint_to(&dir).unwrap();
+        let err = match Session::resume(cfg().layers(2).build().unwrap(), &dir) {
+            Ok(_) => panic!("layer mismatch must be rejected"),
+            Err(e) => e.to_string(),
+        };
+        assert_eq!(
+            err,
+            "--layers 2 conflicts with the checkpoint's 3 layers (omit --layers when resuming)"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -309,7 +309,7 @@ pub fn recovery_table(
 /// **measured wall clock** on this host — the simulator's modeled times
 /// paired with physically executed ones, per the SPMD milestone.
 pub fn spmd_scaling(iters: usize, quick: bool) -> anyhow::Result<Table> {
-    use crate::fssdp::{build_iter_plan, Executor, FssdpEngine, LayerDims};
+    use crate::fssdp::{build_iter_plan, LayerDims, Session, SessionConfig};
     use crate::materialize::MatConstraints;
     use std::time::Instant;
 
@@ -326,27 +326,41 @@ pub fn spmd_scaling(iters: usize, quick: bool) -> anyhow::Result<Table> {
     for &d in &[1usize, 2, 4, 8] {
         let topo =
             if d == 1 { Topology::flat(1, 150e9) } else { Topology::cluster_a(2, d / 2) };
-        let sources = d; // weak scaling: one logical data shard per rank
+        // weak scaling: one logical data shard per rank
+        let session = |parallel: bool| -> anyhow::Result<Session> {
+            let mut b = SessionConfig::builder()
+                .reference()
+                .dims(dims)
+                .topology(topo.clone())
+                .seed(11)
+                .data_shards(d);
+            if parallel {
+                b = b.parallel(true).threads(d);
+            }
+            Session::fresh(b.build()?)
+        };
         // modeled: first-iteration collectives under the cold-start
         // (uniform) prediction, priced by the bottleneck analysis
-        let mut probe = FssdpEngine::new_reference(dims, topo.clone(), 11);
+        let mut probe = session(false)?;
         let uniform = vec![1.0 / dims.experts as f64; dims.experts];
         let plan = build_iter_plan(
             &topo,
-            probe.shards(),
+            probe.engine().shards(),
             &uniform,
-            MatConstraints { overlap_degree: probe.overlap_degree, mem_slots: probe.mem_slots },
+            MatConstraints {
+                overlap_degree: probe.engine().overlap_degree,
+                mem_slots: probe.engine().mem_slots,
+            },
         )?;
         let chunk_bytes = dims.chunk_len() as f64 * 4.0;
         let modeled = plan.spag.time(&topo, chunk_bytes) + plan.sprs.time(&topo, chunk_bytes);
         // measured: same workload, both executors
         let t0 = Instant::now();
-        probe.run_span(0, iters, sources)?;
+        probe.run(iters)?;
         let seq = t0.elapsed().as_secs_f64() / iters as f64;
-        let mut par = FssdpEngine::new_reference(dims, topo, 11);
-        par.executor = Executor::Spmd { threads: d, overlap: true };
+        let mut par = session(true)?;
         let t0 = Instant::now();
-        par.run_span(0, iters, sources)?;
+        par.run(iters)?;
         let spmd = t0.elapsed().as_secs_f64() / iters as f64;
         t.row(vec![
             d.to_string(),
@@ -366,20 +380,29 @@ pub fn spmd_scaling(iters: usize, quick: bool) -> anyhow::Result<Table> {
 /// pipeline removed — the executed counterpart of the simulator's
 /// layer-wise speedup bars.
 pub fn numeric_figure11(layers: usize, iters: usize) -> anyhow::Result<Table> {
-    use crate::fssdp::{reference_dims, Executor, FssdpEngine};
+    use crate::fssdp::{reference_dims, Session, SessionConfig};
     use crate::spmd::comm::Pacing;
 
     let dims = reference_dims();
     let chunk_bytes = dims.chunk_len() as f64 * 4.0;
     // pace links so one chunk transfer costs ~0.3 ms of wall clock
     let pacing = Pacing::uniform(chunk_bytes / 300e-6, 20e-6);
-    let run = |overlap: bool| -> anyhow::Result<FssdpEngine> {
-        let mut e =
-            FssdpEngine::new_reference_layers(dims, layers, Topology::cluster_a(2, 2), 11);
-        e.pacing = Some(pacing);
-        e.executor = Executor::Spmd { threads: 4, overlap };
-        e.run_span(0, iters.max(1), 4)?;
-        Ok(e)
+    let run = |overlap: bool| -> anyhow::Result<Session> {
+        let cfg = SessionConfig::builder()
+            .reference()
+            .dims(dims)
+            .topology(Topology::cluster_a(2, 2))
+            .layers(layers)
+            .seed(11)
+            .data_shards(4)
+            .parallel(true)
+            .threads(4)
+            .overlap(overlap)
+            .pacing(pacing)
+            .build()?;
+        let mut s = Session::fresh(cfg)?;
+        s.run(iters.max(1))?;
+        Ok(s)
     };
     let off = run(false)?;
     let on = run(true)?;
@@ -402,25 +425,31 @@ pub fn numeric_figure11(layers: usize, iters: usize) -> anyhow::Result<Table> {
 /// executed rather than modeled — Algorithm 2 actually re-runs inside the
 /// run every K iterations, chunks migrate, and the loss keeps training.
 pub fn numeric_figure15b(layers: usize, iters: usize) -> anyhow::Result<Table> {
-    use crate::fssdp::{reference_dims, Executor, FssdpEngine};
+    use crate::fssdp::{reference_dims, Session, SessionConfig};
     use std::time::Instant;
 
     let dims = reference_dims();
     let mut t =
         Table::new(&["reshard_every", "wall_ms_per_iter", "final_loss", "experts_moved"]);
     for &k in &[0usize, 2, 4, 8] {
-        let mut e =
-            FssdpEngine::new_reference_layers(dims, layers, Topology::cluster_a(2, 2), 11);
-        e.reshard_every = k;
-        e.executor = Executor::Sequential;
+        let cfg = SessionConfig::builder()
+            .reference()
+            .dims(dims)
+            .topology(Topology::cluster_a(2, 2))
+            .layers(layers)
+            .seed(11)
+            .data_shards(4)
+            .reshard_every(k)
+            .build()?;
+        let mut s = Session::fresh(cfg)?;
         let t0 = Instant::now();
-        let stats = e.run_span(0, iters, 4)?;
+        let stats = s.run(iters)?;
         let wall = t0.elapsed().as_secs_f64() / iters.max(1) as f64;
         t.row(vec![
             if k == 0 { "never".into() } else { k.to_string() },
             ms(wall),
-            format!("{:.5}", stats.last().map(|s| s.loss).unwrap_or(0.0)),
-            e.reshards_moved.to_string(),
+            format!("{:.5}", stats.last().map(|st| st.loss).unwrap_or(0.0)),
+            s.reshards_moved().to_string(),
         ]);
     }
     Ok(t)
@@ -432,7 +461,7 @@ pub fn numeric_figure15b(layers: usize, iters: usize) -> anyhow::Result<Table> {
 /// layer `l+1`'s spRS under layer `l`'s backward, so the on-column should
 /// win wall clock on any host.
 pub fn spmd_overlap(iters: usize, quick: bool) -> anyhow::Result<Table> {
-    use crate::fssdp::{reference_dims, Executor, FssdpEngine, LayerDims};
+    use crate::fssdp::{reference_dims, LayerDims, Session, SessionConfig};
     use crate::spmd::comm::Pacing;
     use std::time::Instant;
 
@@ -449,12 +478,21 @@ pub fn spmd_overlap(iters: usize, quick: bool) -> anyhow::Result<Table> {
     ]);
     for &nl in &[1usize, 2, 3] {
         let run = |overlap: bool| -> anyhow::Result<f64> {
-            let mut e =
-                FssdpEngine::new_reference_layers(dims, nl, Topology::cluster_a(2, 2), 11);
-            e.pacing = Some(pacing);
-            e.executor = Executor::Spmd { threads: 4, overlap };
+            let cfg = SessionConfig::builder()
+                .reference()
+                .dims(dims)
+                .topology(Topology::cluster_a(2, 2))
+                .layers(nl)
+                .seed(11)
+                .data_shards(4)
+                .parallel(true)
+                .threads(4)
+                .overlap(overlap)
+                .pacing(pacing)
+                .build()?;
+            let mut s = Session::fresh(cfg)?;
             let t0 = Instant::now();
-            e.run_span(0, iters, 4)?;
+            s.run(iters)?;
             Ok(t0.elapsed().as_secs_f64() / iters as f64)
         };
         let off = run(false)?;

@@ -105,7 +105,7 @@ impl<'p> RankSpag<'p> {
                     continue;
                 }
                 if let Some(buf) = store.get(t.chunk) {
-                    comm.isend(t.dst.0, spag_tag(iter, layer, t), buf.clone())?;
+                    comm.isend(t.dst.0, spag_tag(iter, layer, t), buf.to_vec())?;
                 } else {
                     s.pending_send.push(ti);
                 }
@@ -193,7 +193,7 @@ impl<'p> RankSpag<'p> {
         while i < self.pending_send.len() {
             let t = self.plan.transfers[self.pending_send[i]];
             if t.chunk == chunk {
-                let buf = store.get(chunk).expect("chunk just inserted").clone();
+                let buf = store.get(chunk).expect("chunk just inserted").to_vec();
                 comm.isend(t.dst.0, spag_tag(self.iter, self.layer, &t), buf)?;
                 self.pending_send.remove(i);
             } else {
@@ -249,7 +249,7 @@ impl<'p> RankSprs<'p> {
                         t.chunk
                     )
                 })?
-                .clone();
+                .to_vec();
             comm.isend(t.dst.0, sprs_tag(self.iter, self.layer, t), buf)?;
         }
         Ok(())
@@ -485,8 +485,8 @@ mod tests {
         let mut mem = ClusterMem::new(4);
         let mut rng = Rng::new(9);
         fill(&mut mem, &pre, 8, &mut rng);
-        let want0 = mem.dev(DeviceId(0)).get(0).unwrap().clone();
-        let want1 = mem.dev(DeviceId(1)).get(1).unwrap().clone();
+        let want0 = mem.dev(DeviceId(0)).get(0).unwrap().to_vec();
+        let want1 = mem.dev(DeviceId(1)).get(1).unwrap().to_vec();
 
         let stores = run_ranks(mem.devices.clone(), |me, store, comm| {
             let mut s = RankSpag::begin(&plan, me, 0, 0, store, comm, &BTreeSet::new())?;
@@ -498,9 +498,9 @@ mod tests {
             }
             s.finish(store, comm)
         });
-        assert_eq!(stores[2].get(0).unwrap(), &want0);
-        assert_eq!(stores[2].get(1).unwrap(), &want1);
-        assert_eq!(stores[3].get(0).unwrap(), &want0);
+        assert_eq!(stores[2].get(0).unwrap(), want0.as_slice());
+        assert_eq!(stores[2].get(1).unwrap(), want1.as_slice());
+        assert_eq!(stores[3].get(0).unwrap(), want0.as_slice());
     }
 
     #[test]

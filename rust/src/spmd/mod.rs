@@ -13,7 +13,8 @@
 //! * [`exec`] — per-rank spAG/spRS execution ([`exec::RankSpag`],
 //!   [`exec::RankSprs`]), staged exactly as the compiled
 //!   [`SparsePlan`](crate::collectives::sparse::SparsePlan) dictates.
-//! * [`sched`] — the overlap scheduler: lazy replica materialization
+//! * `sched` (crate-private) — the overlap scheduler: lazy replica
+//!   materialization
 //!   during expert compute, the §4.3 **cross-layer pipeline** (layer
 //!   `l+1`'s spAG issued while layer `l` computes; layer `l+1`'s spRS
 //!   finished under layer `l`'s backward), and eager issue of the *next*
@@ -378,7 +379,7 @@ fn settle_layer(
             .ok_or_else(|| {
                 anyhow::anyhow!("owner {me} of expert {e} lost its gradient (layer {l})")
             })?
-            .clone();
+            .to_vec();
         let p = layer.store.get_mut(e).expect("owner holds its shard");
         let st = layer.opt.get_mut(&e).expect("owner holds the optimizer state");
         st.update(adam, p, &grad);
@@ -583,7 +584,7 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
                     metrics.add("spmd.lazy_chunks", 1.0);
                 }
                 let toks = routes.get(&(me, e)).expect("key from this map");
-                let chunk = layers[l].store.get(e).expect("ensured above").clone();
+                let chunk = layers[l].store.get(e).expect("ensured above").to_vec();
                 let t0 = Instant::now();
                 if last_layer {
                     let acc = grads.get_mut(e).expect("grads cover the placement");
@@ -684,7 +685,7 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
                 for e in my_keys {
                     let toks = routes.get(&(me, e)).expect("key from this map");
                     let chunk =
-                        layers[l].store.get(e).expect("replicas live until their bwd").clone();
+                        layers[l].store.get(e).expect("replicas live until their bwd").to_vec();
                     let acc = grads_stack[l].get_mut(e).expect("grads cover the placement");
                     let t0 = Instant::now();
                     let gx = backward_expert_key(
@@ -804,10 +805,10 @@ mod tests {
     fn spmd_span_matches_sequential_bitwise() {
         let dims = reference_dims();
         let sources = 4;
-        let mut seq = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 2), 21);
+        let mut seq = FssdpEngine::new_reference_layers(dims, 1, Topology::cluster_a(2, 2), 21);
         let seq_stats = seq.run_span(0, 3, sources).unwrap();
 
-        let mut par = FssdpEngine::new_reference(dims, Topology::cluster_a(2, 2), 21);
+        let mut par = FssdpEngine::new_reference_layers(dims, 1, Topology::cluster_a(2, 2), 21);
         par.executor = Executor::Spmd { threads: 4, overlap: true };
         let par_stats = par.run_span(0, 3, sources).unwrap();
 
@@ -852,7 +853,8 @@ mod tests {
 
     #[test]
     fn thread_count_must_match_devices() {
-        let mut e = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(2, 2), 1);
+        let mut e =
+            FssdpEngine::new_reference_layers(reference_dims(), 1, Topology::cluster_a(2, 2), 1);
         e.executor = Executor::Spmd { threads: 3, overlap: true };
         let err = e.run_span(0, 1, 4).unwrap_err().to_string();
         assert!(err.contains("one OS thread per rank"), "{err}");
@@ -860,7 +862,8 @@ mod tests {
 
     #[test]
     fn empty_span_is_a_noop() {
-        let mut e = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(2, 2), 1);
+        let mut e =
+            FssdpEngine::new_reference_layers(reference_dims(), 1, Topology::cluster_a(2, 2), 1);
         e.executor = Executor::spmd_for(&e.topo);
         assert!(e.run_span(0, 0, 4).unwrap().is_empty());
     }

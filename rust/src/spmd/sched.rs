@@ -102,7 +102,7 @@ impl Overlap {
                     a: t.chunk,
                     b: t.stage,
                 },
-                buf.clone(),
+                buf.to_vec(),
             )?;
             self.pre_issued.insert((layer, t.chunk, t.dst.0));
             sent += 1;

@@ -90,7 +90,7 @@ pub fn all_chunks(e: &crate::fssdp::FssdpEngine) -> Vec<Vec<f32>> {
     let mut out = Vec::new();
     for l in 0..e.num_layers() {
         for x in 0..e.dims.experts {
-            out.push(e.expert_chunk_at(l, x).clone());
+            out.push(e.expert_chunk_at(l, x).to_vec());
         }
     }
     out

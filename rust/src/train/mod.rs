@@ -25,6 +25,18 @@ pub struct CkptOpts {
     pub resume: Option<String>,
 }
 
+impl CkptOpts {
+    /// Shared cadence/destination validation — the same typed error (and
+    /// exact message) the FSSDP session config produces for this
+    /// misconfiguration.
+    pub fn validate(&self) -> Result<(), crate::fssdp::ConfigError> {
+        if self.every > 0 && self.dir.is_none() {
+            return Err(crate::fssdp::ConfigError::CheckpointEveryWithoutDir);
+        }
+        Ok(())
+    }
+}
+
 /// Result of a training run.
 #[derive(Debug, Clone)]
 pub struct TrainReport {
@@ -130,11 +142,9 @@ pub fn train_with(
     mut on_step: impl FnMut(usize, f32, f32, f64),
 ) -> anyhow::Result<TrainReport> {
     // Fail fast: the snapshot destination is known-required before any
-    // (expensive) training step runs.
-    anyhow::ensure!(
-        ckpt.every == 0 || ckpt.dir.is_some(),
-        "--checkpoint-every needs --checkpoint-dir"
-    );
+    // (expensive) training step runs. One validation path with the FSSDP
+    // session config, so the error message cannot drift.
+    ckpt.validate()?;
     let mut rt = Runtime::open(dir)?;
     let init_name = format!("{tag}_init");
     let step_name = format!("{tag}_train_step");
@@ -373,6 +383,13 @@ mod tests {
         assert_eq!(back.rng_state, [9, 8, 7, 6]);
         assert_eq!(back.state, snap.state);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_cadence_without_dir_keeps_the_cli_error_string() {
+        let err = CkptOpts { every: 5, dir: None, resume: None }.validate().unwrap_err();
+        assert_eq!(err.to_string(), "--checkpoint-every needs --checkpoint-dir");
+        assert!(CkptOpts::default().validate().is_ok());
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Integration: sharded checkpointing (format v2, multi-layer) + elastic
-//! resume of the numeric FSSDP engine.
+//! resume of the numeric FSSDP engine, through the public `Session` API.
 //!
 //! Runs hermetically on the pure-Rust reference backend (no artifacts /
 //! PJRT needed):
@@ -18,7 +18,7 @@
 use std::path::PathBuf;
 
 use hecate::checkpoint;
-use hecate::fssdp::{reference_dims, FssdpEngine};
+use hecate::fssdp::{Session, SessionConfig, SessionConfigBuilder};
 use hecate::testing::{all_chunks as final_chunks, max_rel_err};
 use hecate::topology::Topology;
 
@@ -34,13 +34,24 @@ fn tmpdir(tag: &str) -> PathBuf {
     d
 }
 
-/// Uninterrupted reference run: `iters` steps of an `layers`-deep stack.
-fn uninterrupted(layers: usize, topo: Topology, iters: u64) -> Vec<Vec<f32>> {
-    let mut e = FssdpEngine::new_reference_layers(reference_dims(), layers, topo, SEED);
-    for i in 0..iters {
-        e.step(i, SOURCES).unwrap();
-    }
-    final_chunks(&e)
+fn cfg(layers: usize, topo: Topology) -> SessionConfigBuilder {
+    SessionConfig::builder()
+        .reference()
+        .topology(topo)
+        .layers(layers)
+        .seed(SEED)
+        .data_shards(SOURCES)
+}
+
+fn fresh(layers: usize, topo: Topology) -> Session {
+    Session::fresh(cfg(layers, topo).build().unwrap()).unwrap()
+}
+
+/// Uninterrupted reference run: `iters` steps of a `layers`-deep stack.
+fn uninterrupted(layers: usize, topo: Topology, iters: usize) -> Vec<Vec<f32>> {
+    let mut s = fresh(layers, topo);
+    s.run(iters).unwrap();
+    final_chunks(s.engine())
 }
 
 /// Run k1 steps on `topo_a`, checkpoint through disk, resume on `topo_b`,
@@ -49,38 +60,41 @@ fn interrupted(
     layers: usize,
     topo_a: Topology,
     topo_b: Topology,
-    k1: u64,
-    k2: u64,
+    k1: usize,
+    k2: usize,
     tag: &str,
 ) -> (Vec<Vec<f32>>, usize) {
     let dir = tmpdir(tag);
     let old_world = topo_a.num_devices();
-    let mut e = FssdpEngine::new_reference_layers(reference_dims(), layers, topo_a, SEED);
-    for i in 0..k1 {
-        e.step(i, SOURCES).unwrap();
-    }
-    checkpoint::save(&dir, &e.snapshot(k1, SOURCES), &e.topo).unwrap();
-    drop(e);
+    let mut s = fresh(layers, topo_a);
+    s.run(k1).unwrap();
+    s.checkpoint_to(&dir).unwrap();
+    drop(s);
 
     let (state, saved) = checkpoint::load(&dir).unwrap();
     assert_eq!(saved.world(), old_world);
-    assert_eq!(state.step, k1);
+    assert_eq!(state.step, k1 as u64);
     assert_eq!(state.data_shards, SOURCES);
     assert_eq!(state.num_layers(), layers);
-    let (mut r, plan) = FssdpEngine::resume_reference(topo_b, &state, saved.world()).unwrap();
-    let mut step = state.step;
-    for _ in 0..k2 {
-        r.step(step, state.data_shards).unwrap();
-        step += 1;
-    }
+    // The resume config names only the new topology; step, layer count and
+    // data shards come from the checkpoint.
+    let mut r = Session::resume(
+        SessionConfig::builder().reference().topology(topo_b).build().unwrap(),
+        &dir,
+    )
+    .unwrap();
+    assert_eq!(r.step(), k1 as u64);
+    assert_eq!(r.data_shards(), SOURCES);
+    let moved = r.resume_report().unwrap().moved_experts;
+    r.run(k2).unwrap();
     std::fs::remove_dir_all(&dir).unwrap();
-    (final_chunks(&r), plan.moved_experts.len())
+    (final_chunks(r.engine()), moved)
 }
 
 #[test]
 fn same_world_restore_is_bit_identical() {
-    let k1 = 2u64;
-    let k2 = 2u64;
+    let k1 = 2;
+    let k2 = 2;
     let straight = uninterrupted(1, Topology::cluster_a(2, 2), k1 + k2);
     let (resumed, moved) = interrupted(
         1,
@@ -165,23 +179,20 @@ fn elastic_resume_grow_matches_uninterrupted() {
 #[test]
 fn elastic_resume_preserves_loss_trajectory() {
     // The loss of the resumed run tracks the uninterrupted one closely.
-    let mut full = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(2, 2), SEED);
-    let mut losses_full = Vec::new();
-    for i in 0..4 {
-        losses_full.push(full.step(i, SOURCES).unwrap().loss);
-    }
+    let mut full = fresh(1, Topology::cluster_a(2, 2));
+    let losses_full: Vec<f64> = full.run(4).unwrap().iter().map(|s| s.loss).collect();
 
     let dir = tmpdir("loss-traj");
-    let mut head = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(2, 2), SEED);
-    for i in 0..2 {
-        head.step(i, SOURCES).unwrap();
-    }
-    checkpoint::save(&dir, &head.snapshot(2, SOURCES), &head.topo).unwrap();
-    let (state, saved) = checkpoint::load(&dir).unwrap();
-    let (mut tail, _) =
-        FssdpEngine::resume_reference(Topology::cluster_a(1, 2), &state, saved.world()).unwrap();
+    let mut head = fresh(1, Topology::cluster_a(2, 2));
+    head.run(2).unwrap();
+    head.checkpoint_to(&dir).unwrap();
+    let mut tail = Session::resume(
+        SessionConfig::builder().reference().topology(Topology::cluster_a(1, 2)).build().unwrap(),
+        &dir,
+    )
+    .unwrap();
     for (i, want) in losses_full.iter().enumerate().skip(2) {
-        let got = tail.step(i as u64, SOURCES).unwrap().loss;
+        let got = tail.run(1).unwrap()[0].loss;
         let rel = (got - want).abs() / want.abs().max(1e-9);
         assert!(rel < 1e-2, "step {i}: loss {got} vs {want} (rel {rel})");
     }
@@ -193,25 +204,28 @@ fn reshard_every_survives_checkpoint_roundtrip() {
     // The Algorithm 2 cadence is part of the durable run config (format
     // v2): resume restores it without re-specifying the flag.
     let dir = tmpdir("reshard-cfg");
-    let mut e =
-        FssdpEngine::new_reference_layers(reference_dims(), 2, Topology::cluster_a(2, 2), SEED);
-    e.reshard_every = 4;
-    e.run_span(0, 2, SOURCES).unwrap();
-    checkpoint::save(&dir, &e.snapshot(2, SOURCES), &e.topo).unwrap();
-    let (state, saved) = checkpoint::load(&dir).unwrap();
+    let mut s =
+        Session::fresh(cfg(2, Topology::cluster_a(2, 2)).reshard_every(4).build().unwrap())
+            .unwrap();
+    s.run(2).unwrap();
+    s.checkpoint_to(&dir).unwrap();
+    let (state, _) = checkpoint::load(&dir).unwrap();
     assert_eq!(state.reshard_every, 4);
-    let (tail, _) =
-        FssdpEngine::resume_reference(Topology::cluster_a(2, 2), &state, saved.world()).unwrap();
-    assert_eq!(tail.reshard_every, 4);
+    let tail = Session::resume(
+        SessionConfig::builder().reference().topology(Topology::cluster_a(2, 2)).build().unwrap(),
+        &dir,
+    )
+    .unwrap();
+    assert_eq!(tail.reshard_every(), 4);
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]
 fn corrupted_checkpoint_is_rejected() {
     let dir = tmpdir("corrupt");
-    let mut e = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(1, 2), SEED);
-    e.step(0, SOURCES).unwrap();
-    checkpoint::save(&dir, &e.snapshot(1, SOURCES), &e.topo).unwrap();
+    let mut s = fresh(1, Topology::cluster_a(1, 2));
+    s.run(1).unwrap();
+    s.checkpoint_to(&dir).unwrap();
 
     let f = dir.join("global.bin");
     let mut bytes = std::fs::read(&f).unwrap();
@@ -231,9 +245,9 @@ fn v1_blob_is_rejected_with_migration_error() {
     use hecate::util::json::Json;
 
     let dir = tmpdir("v1-blob");
-    let mut e = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(1, 2), SEED);
-    e.step(0, SOURCES).unwrap();
-    checkpoint::save(&dir, &e.snapshot(1, SOURCES), &e.topo).unwrap();
+    let mut s = fresh(1, Topology::cluster_a(1, 2));
+    s.run(1).unwrap();
+    s.checkpoint_to(&dir).unwrap();
 
     let f = dir.join("global.bin");
     let mut bytes = std::fs::read(&f).unwrap();
@@ -264,9 +278,9 @@ fn v1_blob_is_rejected_with_migration_error() {
 #[test]
 fn missing_rank_file_is_rejected() {
     let dir = tmpdir("missing-rank");
-    let mut e = FssdpEngine::new_reference(reference_dims(), Topology::cluster_a(1, 2), SEED);
-    e.step(0, SOURCES).unwrap();
-    checkpoint::save(&dir, &e.snapshot(1, SOURCES), &e.topo).unwrap();
+    let mut s = fresh(1, Topology::cluster_a(1, 2));
+    s.run(1).unwrap();
+    s.checkpoint_to(&dir).unwrap();
     std::fs::remove_file(dir.join("rank-1.bin")).unwrap();
     assert!(checkpoint::load(&dir).is_err());
     std::fs::remove_dir_all(&dir).unwrap();

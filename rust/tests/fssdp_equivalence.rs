@@ -4,8 +4,9 @@
 //! proof of §3: FSSDP's placement freedom does not change the math.
 //!
 //! Requires `artifacts/` (run `make artifacts`); tests self-skip otherwise.
+//! Runs go through the public `Session` API on the PJRT backend.
 
-use hecate::fssdp::FssdpEngine;
+use hecate::fssdp::{Session, SessionConfig};
 use hecate::testing::max_rel_err;
 use hecate::topology::Topology;
 
@@ -18,12 +19,24 @@ fn artifacts() -> Option<&'static str> {
     }
 }
 
-fn train(topo: Topology, sources: usize, iters: u64, seed: u64) -> Vec<Vec<f32>> {
-    let mut engine = FssdpEngine::new(artifacts().unwrap(), topo, seed).unwrap();
-    for i in 0..iters {
-        engine.step(i, sources).unwrap();
-    }
-    (0..engine.dims.experts).map(|e| engine.expert_chunk(e).clone()).collect()
+fn session(topo: Topology, sources: usize, seed: u64) -> Session {
+    Session::fresh(
+        SessionConfig::builder()
+            .pjrt(artifacts().unwrap())
+            .topology(topo)
+            .seed(seed)
+            .data_shards(sources)
+            .build()
+            .unwrap(),
+    )
+    .unwrap()
+}
+
+fn train(topo: Topology, sources: usize, iters: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut s = session(topo, sources, seed);
+    s.run(iters).unwrap();
+    let e = s.engine();
+    (0..e.dims.experts).map(|x| e.expert_chunk(x).to_vec()).collect()
 }
 
 #[test]
@@ -46,12 +59,9 @@ fn fssdp_loss_decreases() {
     if artifacts().is_none() {
         return;
     }
-    let mut engine = FssdpEngine::new("artifacts", Topology::cluster_a(2, 4), 11).unwrap();
-    let first = engine.step(0, 8).unwrap().loss;
-    let mut last = first;
-    for i in 1..6 {
-        last = engine.step(i, 8).unwrap().loss;
-    }
+    let mut s = session(Topology::cluster_a(2, 4), 8, 11);
+    let losses: Vec<f64> = s.run(6).unwrap().iter().map(|st| st.loss).collect();
+    let (first, last) = (losses[0], losses[5]);
     assert!(last < first * 0.9, "loss {first} -> {last}");
 }
 

@@ -3,48 +3,63 @@
 //! cross-layer pipeline) produces final expert parameters **bit-identical**
 //! to the sequential engine at the same seed — on 2/4/8 threads, at L=1 and
 //! L=3, and across a checkpoint/resume boundary. Hermetic: reference
-//! backend, no artifacts or PJRT required.
+//! backend, no artifacts or PJRT required. All runs go through the public
+//! `Session` API (the engine constructors are crate-private).
 
-use hecate::fssdp::{reference_dims, Executor, FssdpEngine};
-use hecate::testing::{all_chunks as chunks, max_rel_err};
+use hecate::fssdp::{Session, SessionConfig, SessionConfigBuilder};
+use hecate::testing::{all_chunks, max_rel_err};
 use hecate::topology::Topology;
+
+/// Builder for an L-layer reference session; `spmd = Some((threads,
+/// overlap))` selects the parallel executor.
+fn cfg(
+    layers: usize,
+    topo: Topology,
+    spmd: Option<(usize, bool)>,
+    sources: usize,
+    seed: u64,
+) -> SessionConfigBuilder {
+    let mut b = SessionConfig::builder()
+        .reference()
+        .topology(topo)
+        .layers(layers)
+        .seed(seed)
+        .data_shards(sources);
+    if let Some((threads, overlap)) = spmd {
+        b = b.parallel(true).threads(threads).overlap(overlap);
+    }
+    b
+}
 
 fn run_layers(
     layers: usize,
     topo: Topology,
-    executor: Executor,
+    spmd: Option<(usize, bool)>,
     iters: usize,
     sources: usize,
     seed: u64,
 ) -> Vec<Vec<f32>> {
-    let mut e = FssdpEngine::new_reference_layers(reference_dims(), layers, topo, seed);
-    e.executor = executor;
-    e.run_span(0, iters, sources).unwrap();
-    chunks(&e)
+    let mut s = Session::fresh(cfg(layers, topo, spmd, sources, seed).build().unwrap()).unwrap();
+    s.run(iters).unwrap();
+    all_chunks(s.engine())
 }
 
 fn run(
     topo: Topology,
-    executor: Executor,
+    spmd: Option<(usize, bool)>,
     iters: usize,
     sources: usize,
     seed: u64,
 ) -> Vec<Vec<f32>> {
-    run_layers(1, topo, executor, iters, sources, seed)
+    run_layers(1, topo, spmd, iters, sources, seed)
 }
 
 #[test]
 fn parallel_matches_sequential_on_2_4_8_threads() {
     for (nodes, dpn) in [(1usize, 2usize), (2, 2), (2, 4)] {
         let d = nodes * dpn;
-        let seq = run(Topology::cluster_a(nodes, dpn), Executor::Sequential, 4, d, 13);
-        let par = run(
-            Topology::cluster_a(nodes, dpn),
-            Executor::Spmd { threads: d, overlap: true },
-            4,
-            d,
-            13,
-        );
+        let seq = run(Topology::cluster_a(nodes, dpn), None, 4, d, 13);
+        let par = run(Topology::cluster_a(nodes, dpn), Some((d, true)), 4, d, 13);
         assert_eq!(seq, par, "{d}-thread SPMD must be bit-identical to sequential");
     }
 }
@@ -56,15 +71,8 @@ fn l3_parallel_matches_sequential_on_2_4_8_threads() {
     // count.
     for (nodes, dpn) in [(1usize, 2usize), (2, 2), (2, 4)] {
         let d = nodes * dpn;
-        let seq = run_layers(3, Topology::cluster_a(nodes, dpn), Executor::Sequential, 3, d, 17);
-        let par = run_layers(
-            3,
-            Topology::cluster_a(nodes, dpn),
-            Executor::Spmd { threads: d, overlap: true },
-            3,
-            d,
-            17,
-        );
+        let seq = run_layers(3, Topology::cluster_a(nodes, dpn), None, 3, d, 17);
+        let par = run_layers(3, Topology::cluster_a(nodes, dpn), Some((d, true)), 3, d, 17);
         assert_eq!(seq, par, "L=3 {d}-thread SPMD must be bit-identical to sequential");
     }
 }
@@ -75,10 +83,9 @@ fn l1_multilayer_engine_matches_seed_trajectory_across_executors() {
     // one single trajectory regardless of executor or overlap mode (the
     // in-module test `fssdp::tests::l1_step_matches_seed_oracle_bitwise`
     // pins that trajectory to the seed engine's transcribed step body).
-    let seq = run(Topology::cluster_a(2, 2), Executor::Sequential, 4, 4, 29);
+    let seq = run(Topology::cluster_a(2, 2), None, 4, 4, 29);
     for overlap in [false, true] {
-        let par =
-            run(Topology::cluster_a(2, 2), Executor::Spmd { threads: 4, overlap }, 4, 4, 29);
+        let par = run(Topology::cluster_a(2, 2), Some((4, overlap)), 4, 4, 29);
         assert_eq!(seq, par, "L=1 SPMD (overlap={overlap}) must match the seed trajectory");
     }
 }
@@ -88,16 +95,16 @@ fn l3_parallel_with_resharding_matches_sequential() {
     // Algorithm 2 re-runs inside the numeric span (--reshard-every); the
     // re-shard happens on merged engine state, so both executors must stay
     // bit-identical through chunk migrations.
-    let mk = |executor: Executor| -> Vec<Vec<f32>> {
-        let mut e =
-            FssdpEngine::new_reference_layers(reference_dims(), 3, Topology::cluster_a(2, 2), 31);
-        e.reshard_every = 2;
-        e.executor = executor;
-        e.run_span(0, 5, 4).unwrap();
-        chunks(&e)
+    let mk = |spmd: Option<(usize, bool)>| -> Vec<Vec<f32>> {
+        let mut s = Session::fresh(
+            cfg(3, Topology::cluster_a(2, 2), spmd, 4, 31).reshard_every(2).build().unwrap(),
+        )
+        .unwrap();
+        s.run(5).unwrap();
+        all_chunks(s.engine())
     };
-    let seq = mk(Executor::Sequential);
-    let par = mk(Executor::Spmd { threads: 4, overlap: true });
+    let seq = mk(None);
+    let par = mk(Some((4, true)));
     assert_eq!(seq, par, "re-sharded L=3 run must be bit-identical across executors");
 }
 
@@ -107,9 +114,8 @@ fn parallel_matches_single_device_reference_within_tolerance() {
     // executor: 8 distributed ranks vs the all-local 1-device oracle at
     // the established 2e-3 tolerance (placement freedom, not bit-equality,
     // is what differs here — reduction orders depend on the placement).
-    let par =
-        run(Topology::cluster_a(2, 4), Executor::Spmd { threads: 8, overlap: true }, 3, 4, 7);
-    let refr = run(Topology::flat(1, 1e9), Executor::Sequential, 3, 4, 7);
+    let par = run(Topology::cluster_a(2, 4), Some((8, true)), 3, 4, 7);
+    let refr = run(Topology::flat(1, 1e9), None, 3, 4, 7);
     assert_eq!(par.len(), refr.len());
     for (e, (d, r)) in par.iter().zip(refr.iter()).enumerate() {
         let err = max_rel_err(d, r);
@@ -119,46 +125,56 @@ fn parallel_matches_single_device_reference_within_tolerance() {
 
 #[test]
 fn parallel_resume_from_checkpoint_is_bit_identical() {
-    let dims = reference_dims();
     let sources = 4;
     let layers = 3;
-    let spmd = Executor::Spmd { threads: 4, overlap: true };
+    let spmd = Some((4usize, true));
 
     // uninterrupted parallel run, 4 iterations
-    let mut full = FssdpEngine::new_reference_layers(dims, layers, Topology::cluster_a(2, 2), 33);
-    full.executor = spmd;
-    full.run_span(0, 4, sources).unwrap();
+    let mut full =
+        Session::fresh(cfg(layers, Topology::cluster_a(2, 2), spmd, sources, 33).build().unwrap())
+            .unwrap();
+    full.run(4).unwrap();
 
     // interrupted: 2 parallel iterations, checkpoint, restore, 2 more
     let dir = std::env::temp_dir().join(format!("hecate-spmd-ckpt-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
-    let mut head = FssdpEngine::new_reference_layers(dims, layers, Topology::cluster_a(2, 2), 33);
-    head.executor = spmd;
-    head.run_span(0, 2, sources).unwrap();
-    hecate::checkpoint::save(&dir, &head.snapshot(2, sources), &head.topo).unwrap();
+    let mut head =
+        Session::fresh(cfg(layers, Topology::cluster_a(2, 2), spmd, sources, 33).build().unwrap())
+            .unwrap();
+    head.run(2).unwrap();
+    head.checkpoint_to(&dir).unwrap();
 
-    let (state, saved) = hecate::checkpoint::load(&dir).unwrap();
+    let (state, _) = hecate::checkpoint::load(&dir).unwrap();
     assert_eq!(state.step, 2);
     assert_eq!(state.num_layers(), layers);
-    let (mut tail, plan) =
-        FssdpEngine::resume_reference(Topology::cluster_a(2, 2), &state, saved.world()).unwrap();
-    assert!(plan.kept_saved_layout, "same world size must reuse the saved layout");
-    tail.executor = spmd;
-    tail.run_span(state.step, 2, state.data_shards).unwrap();
+    let mut tail = Session::resume(
+        cfg(layers, Topology::cluster_a(2, 2), spmd, sources, 33).build().unwrap(),
+        &dir,
+    )
+    .unwrap();
+    let report = tail.resume_report().unwrap().clone();
+    assert!(report.kept_saved_layout, "same world size must reuse the saved layout");
+    assert_eq!(tail.step(), 2);
+    assert_eq!(tail.data_shards(), sources);
+    tail.run(2).unwrap();
 
-    assert_eq!(chunks(&full), chunks(&tail), "resumed parallel run must be bit-identical");
+    assert_eq!(
+        all_chunks(full.engine()),
+        all_chunks(tail.engine()),
+        "resumed parallel run must be bit-identical"
+    );
     // …and the whole family collapses to the sequential trajectory
-    let seq = run_layers(layers, Topology::cluster_a(2, 2), Executor::Sequential, 4, sources, 33);
-    assert_eq!(chunks(&full), seq);
+    let seq = run_layers(layers, Topology::cluster_a(2, 2), None, 4, sources, 33);
+    assert_eq!(all_chunks(full.engine()), seq);
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]
 fn parallel_loss_decreases() {
-    let mut e =
-        FssdpEngine::new_reference_layers(reference_dims(), 2, Topology::cluster_a(2, 4), 11);
-    e.executor = Executor::spmd_for(&e.topo);
-    let stats = e.run_span(0, 6, 8).unwrap();
+    let mut s =
+        Session::fresh(cfg(2, Topology::cluster_a(2, 4), Some((8, true)), 8, 11).build().unwrap())
+            .unwrap();
+    let stats = s.run(6).unwrap();
     assert_eq!(stats.len(), 6);
     assert!(
         stats[5].loss < stats[0].loss,
