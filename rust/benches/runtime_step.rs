@@ -1,20 +1,53 @@
-//! End-to-end runtime benchmarks: PJRT executable invocation latency (the
-//! L3↔L2 boundary) and one full numeric-FSSDP engine iteration. Skipped
-//! gracefully when `artifacts/` is absent.
+//! End-to-end runtime benchmarks: the hermetic reference-backend training
+//! step (8 devices × 3 layers — the zero-copy hot path's acceptance
+//! benchmark, in-line and threaded expert loops), then PJRT executable
+//! invocation latency (the L3↔L2 boundary) and one full numeric-FSSDP
+//! engine iteration. The PJRT sections are skipped gracefully when
+//! `artifacts/` is absent; the reference section always runs.
 //!
 //! `cargo bench --bench runtime_step [-- --quick] [filter]`
 
 use hecate::bench::Bench;
-use hecate::fssdp::{Session, SessionConfig};
+use hecate::fssdp::{LayerDims, Session, SessionConfig};
 use hecate::runtime::{HostTensor, Runtime};
 use hecate::topology::Topology;
 
 fn main() {
+    let b = Bench::from_args();
+
+    // ---- hermetic: the reference-backend step (no artifacts needed) ----
+    b.section("reference engine step (8 devices x 3 layers, hermetic)");
+    let dims = LayerDims { tokens: 64, d_model: 48, d_ffn: 96, experts: 8, cap: 32 };
+    let reference_session = |threads: usize| {
+        Session::fresh(
+            SessionConfig::builder()
+                .reference()
+                .dims(dims)
+                .topology(Topology::cluster_a(2, 4))
+                .layers(3)
+                .seed(5)
+                .data_shards(8)
+                .compute_threads(threads)
+                .build()
+                .unwrap(),
+        )
+        .unwrap()
+    };
+    let mut seq = reference_session(1);
+    seq.run(1).unwrap(); // warm the workspace and pool
+    b.run("reference_step_8dev_3layer", || {
+        seq.run(1).unwrap();
+    });
+    let mut thr = reference_session(4);
+    thr.run(1).unwrap();
+    b.run("reference_step_8dev_3layer_threads4", || {
+        thr.run(1).unwrap();
+    });
+
     if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("artifacts/ missing — run `make artifacts` first; skipping");
+        eprintln!("artifacts/ missing — run `make artifacts` first; skipping PJRT sections");
         return;
     }
-    let b = Bench::from_args();
 
     b.section("PJRT executable invocation");
     let mut rt = Runtime::open("artifacts").unwrap();

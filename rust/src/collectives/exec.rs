@@ -14,6 +14,73 @@ use crate::topology::DeviceId;
 
 use super::sparse::SparsePlan;
 
+/// A free-list of `Vec<f32>` buffers: the allocation-reuse backbone of the
+/// hot path. Gradient accumulators, spAG/spRS staging copies, and released
+/// replica buffers all cycle through one pool, so a steady-state training
+/// iteration performs no fresh chunk-buffer allocations (buffers share one
+/// length per engine, so any recycled buffer fits any request).
+///
+/// `allocated`/`reused` are the workspace regression counters: after
+/// warmup, `allocated` must stay flat across iterations (locked by
+/// `fssdp::tests::workspace_allocations_stay_flat_across_a_span`).
+#[derive(Debug, Clone, Default)]
+pub struct BufferPool {
+    free: Vec<Vec<f32>>,
+    /// Fresh heap allocations served (free list was empty).
+    pub allocated: u64,
+    /// Requests served from the free list.
+    pub reused: u64,
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool::default()
+    }
+
+    /// A zeroed buffer of `len` floats, recycled when possible.
+    pub fn take_zeroed(&mut self, len: usize) -> Vec<f32> {
+        match self.free.pop() {
+            Some(mut b) => {
+                self.reused += 1;
+                b.clear();
+                b.resize(len, 0.0);
+                b
+            }
+            None => {
+                self.allocated += 1;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// A copy of `src`, recycled when possible (no intermediate zeroing).
+    pub fn take_copy(&mut self, src: &[f32]) -> Vec<f32> {
+        match self.free.pop() {
+            Some(mut b) => {
+                self.reused += 1;
+                b.clear();
+                b.extend_from_slice(src);
+                b
+            }
+            None => {
+                self.allocated += 1;
+                src.to_vec()
+            }
+        }
+    }
+
+    /// Return a buffer to the free list.
+    pub fn put(&mut self, mut b: Vec<f32>) {
+        b.clear();
+        self.free.push(b);
+    }
+
+    /// Buffers currently idle on the free list.
+    pub fn idle(&self) -> usize {
+        self.free.len()
+    }
+}
+
 /// Per-device chunk buffers.
 #[derive(Debug, Clone, Default)]
 pub struct ChunkStore {
@@ -52,6 +119,20 @@ impl ChunkStore {
 
     pub fn chunks(&self) -> impl Iterator<Item = ChunkId> + '_ {
         self.bufs.keys().copied()
+    }
+
+    /// Remove every chunk for which `keep` returns false, recycling the
+    /// removed buffers through `pool` — the allocation-free form of the
+    /// collect-then-remove release loops.
+    pub fn retain_chunks(&mut self, mut keep: impl FnMut(ChunkId) -> bool, pool: &mut BufferPool) {
+        self.bufs.retain(|&c, buf| {
+            if keep(c) {
+                true
+            } else {
+                pool.put(std::mem::take(buf));
+                false
+            }
+        });
     }
 
     /// Total floats resident (for memory accounting).
@@ -99,52 +180,60 @@ impl ClusterMem {
 
 /// Execute a SparseAllGather plan: copy chunk buffers along the staged
 /// transfers. Errors if a source buffer is missing (plan/state mismatch).
-pub fn run_spag(mem: &mut ClusterMem, plan: &SparsePlan) -> anyhow::Result<()> {
+/// Staging copies draw from (and the caller's later releases refill)
+/// `pool`, so a steady-state iteration allocates nothing here.
+pub fn run_spag_pooled(
+    mem: &mut ClusterMem,
+    plan: &SparsePlan,
+    pool: &mut BufferPool,
+) -> anyhow::Result<()> {
+    let mut payloads: Vec<(ChunkId, DeviceId, Vec<f32>)> = Vec::new();
     for stage in 0..plan.num_stages {
         // Collect the payloads first so intra-stage transfers all read the
         // pre-stage state (stages are the dependency barrier).
-        let mut payloads: Vec<(ChunkId, DeviceId, Vec<f32>)> = Vec::new();
+        payloads.clear();
         for t in plan.transfers.iter().filter(|t| t.stage == stage) {
             anyhow::ensure!(!t.reduce, "spAG plan must not contain reduce transfers");
-            let buf = mem
-                .dev(t.src)
-                .get(t.chunk)
-                .ok_or_else(|| {
-                    anyhow::anyhow!("spAG: device {} lacks chunk {}", t.src.0, t.chunk)
-                })?
-                .to_vec();
-            payloads.push((t.chunk, t.dst, buf));
+            let src = mem.dev(t.src).get(t.chunk).ok_or_else(|| {
+                anyhow::anyhow!("spAG: device {} lacks chunk {}", t.src.0, t.chunk)
+            })?;
+            payloads.push((t.chunk, t.dst, pool.take_copy(src)));
         }
-        for (chunk, dst, buf) in payloads {
+        for (chunk, dst, buf) in payloads.drain(..) {
             mem.dev_mut(dst).insert(chunk, buf);
         }
     }
     Ok(())
 }
 
+/// [`run_spag_pooled`] with a throwaway pool (cold paths and tests).
+pub fn run_spag(mem: &mut ClusterMem, plan: &SparsePlan) -> anyhow::Result<()> {
+    run_spag_pooled(mem, plan, &mut BufferPool::new())
+}
+
 /// Execute a SparseReduceScatter plan: accumulate gradient buffers along the
 /// staged transfers, then drop non-owner replicas (the "scatter").
 ///
 /// `owners` is the post-condition placement; after the call only owner
-/// devices retain each chunk, holding the sum of all replicas.
-pub fn run_sprs(
+/// devices retain each chunk, holding the sum of all replicas. Staging
+/// copies, consumed reduce payloads, and scattered replica buffers all
+/// cycle through `pool`.
+pub fn run_sprs_pooled(
     mem: &mut ClusterMem,
     plan: &SparsePlan,
     owners: &Placement,
+    pool: &mut BufferPool,
 ) -> anyhow::Result<()> {
+    let mut payloads: Vec<(ChunkId, DeviceId, bool, Vec<f32>)> = Vec::new();
     for stage in 0..plan.num_stages {
-        let mut payloads: Vec<(ChunkId, DeviceId, bool, Vec<f32>)> = Vec::new();
+        payloads.clear();
         for t in plan.transfers.iter().filter(|t| t.stage == stage) {
-            let buf = mem
-                .dev(t.src)
-                .get(t.chunk)
-                .ok_or_else(|| {
-                    anyhow::anyhow!("spRS: device {} lacks chunk {}", t.src.0, t.chunk)
-                })?
-                .to_vec();
-            payloads.push((t.chunk, t.dst, t.reduce, buf));
+            let src = mem.dev(t.src).get(t.chunk).ok_or_else(|| {
+                anyhow::anyhow!("spRS: device {} lacks chunk {}", t.src.0, t.chunk)
+            })?;
+            payloads.push((t.chunk, t.dst, t.reduce, pool.take_copy(src)));
         }
-        for (chunk, dst, reduce, buf) in payloads {
+        for (chunk, dst, reduce, buf) in payloads.drain(..) {
             let store = mem.dev_mut(dst);
             match (reduce, store.get_mut(chunk)) {
                 (true, Some(acc)) => {
@@ -152,6 +241,7 @@ pub fn run_sprs(
                     for (a, b) in acc.iter_mut().zip(buf.iter()) {
                         *a += b;
                     }
+                    pool.put(buf);
                 }
                 (true, None) => anyhow::bail!(
                     "spRS: reduce destination {} lacks chunk {}",
@@ -165,14 +255,18 @@ pub fn run_sprs(
     // Scatter: release replicas not owned per the post-condition.
     for d in 0..mem.devices.len() {
         let dev = DeviceId(d);
-        let resident: Vec<ChunkId> = mem.dev(dev).chunks().collect();
-        for c in resident {
-            if !owners.contains(c, dev) {
-                mem.dev_mut(dev).remove(c);
-            }
-        }
+        mem.devices[d].retain_chunks(|c| owners.contains(c, dev), pool);
     }
     Ok(())
+}
+
+/// [`run_sprs_pooled`] with a throwaway pool (cold paths and tests).
+pub fn run_sprs(
+    mem: &mut ClusterMem,
+    plan: &SparsePlan,
+    owners: &Placement,
+) -> anyhow::Result<()> {
+    run_sprs_pooled(mem, plan, owners, &mut BufferPool::new())
 }
 
 /// Reference implementation: dense AllReduce of each chunk across its
@@ -340,5 +434,76 @@ mod tests {
         mem.dev_mut(DeviceId(0)).insert(0, vec![0.0; 100]);
         mem.dev_mut(DeviceId(1)).insert(1, vec![0.0; 50]);
         assert_eq!(mem.total_bytes(), 600);
+    }
+
+    #[test]
+    fn buffer_pool_recycles_and_counts() {
+        let mut pool = BufferPool::new();
+        let a = pool.take_zeroed(8);
+        assert_eq!(a, vec![0.0; 8]);
+        assert_eq!((pool.allocated, pool.reused), (1, 0));
+        pool.put(a);
+        assert_eq!(pool.idle(), 1);
+        let b = pool.take_copy(&[1.0, 2.0, 3.0]);
+        assert_eq!(b, vec![1.0, 2.0, 3.0]);
+        assert_eq!((pool.allocated, pool.reused), (1, 1));
+        pool.put(b);
+        // a recycled buffer must come back fully zeroed regardless of its
+        // previous contents
+        let c = pool.take_zeroed(5);
+        assert_eq!(c, vec![0.0; 5]);
+        assert_eq!((pool.allocated, pool.reused), (1, 2));
+    }
+
+    #[test]
+    fn retain_chunks_releases_into_the_pool() {
+        let mut store = ChunkStore::new();
+        store.insert(0, vec![1.0; 4]);
+        store.insert(1, vec![2.0; 4]);
+        store.insert(2, vec![3.0; 4]);
+        let mut pool = BufferPool::new();
+        store.retain_chunks(|c| c == 1, &mut pool);
+        assert_eq!(store.chunks().collect::<Vec<_>>(), vec![1]);
+        assert_eq!(pool.idle(), 2, "released buffers land on the free list");
+    }
+
+    #[test]
+    fn pooled_collectives_match_the_plain_ones() {
+        // Same traffic, same sums — the pool only changes where buffers
+        // come from, never what they hold.
+        let t = Topology::cluster_a(2, 2);
+        let owners = Placement::round_robin(8, 4);
+        let mut materialized = owners.clone();
+        let mut rng = Rng::new(12);
+        for _ in 0..10 {
+            materialized.add(rng.below(8), DeviceId(rng.below(4)));
+        }
+        let spag = build_spag(&t, &owners, &materialized).unwrap();
+        let sprs = build_sprs(&t, &materialized, &owners).unwrap();
+
+        let mut plain = ClusterMem::new(4);
+        fill(&mut plain, &owners, 16, &mut rng);
+        let mut pooled = plain.clone();
+        let mut pool = BufferPool::new();
+        // warm the pool with mismatched-length garbage: recycled buffers
+        // must be indistinguishable from fresh ones
+        pool.put(vec![9.0; 3]);
+        pool.put(vec![9.0; 40]);
+
+        run_spag(&mut plain, &spag).unwrap();
+        run_sprs(&mut plain, &sprs, &owners).unwrap();
+        run_spag_pooled(&mut pooled, &spag, &mut pool).unwrap();
+        run_sprs_pooled(&mut pooled, &sprs, &owners, &mut pool).unwrap();
+
+        for c in 0..8 {
+            let owner = owners.holders(c).next().unwrap();
+            assert_eq!(
+                pooled.dev(owner).get(c).unwrap(),
+                plain.dev(owner).get(c).unwrap(),
+                "chunk {c} owner sum"
+            );
+        }
+        assert_eq!(pooled.placement(8), owners);
+        assert!(pool.reused > 0, "the pool must actually recycle");
     }
 }

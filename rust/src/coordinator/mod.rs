@@ -11,9 +11,11 @@
 //!                  [--layers L] [--reshard-every K]            (multi-layer stack)
 //!                  [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR] [--reference]
 //!                  [--parallel [--threads N]] [--pacing a,b]   (SPMD executor)
+//!                  [--compute-threads T]       (sequential executor: threaded expert loops)
 //! hecate checkpoint --dir DIR [--devices N --iters K]          (hermetic snapshot demo)
 //! hecate resume     --dir DIR [--devices M --iters K]          (elastic resume demo)
 //! hecate bench spmd [--iters N --quick]       (thread scaling + cross-layer overlap)
+//! hecate bench step [--iters N --quick --json --compute-threads T]  (per-phase step times)
 //! ```
 //!
 //! The `fssdp`/`checkpoint`/`resume` subcommands are thin shells over the
@@ -70,10 +72,13 @@ fn print_usage() {
          [--layers L] [--reshard-every K]   (multi-layer MoE stack, Algorithm 2 cadence)\n                  \
          [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR]\n                  \
          [--parallel [--threads N]]   (SPMD executor: one thread per rank)\n                  \
-         [--pacing ALPHA,BETA]   (SPMD α–β link pacing: latency s, s/byte)\n  \
+         [--pacing ALPHA,BETA]   (SPMD α–β link pacing: latency s, s/byte)\n                  \
+         [--compute-threads T]   (sequential executor: threaded expert loops, bit-identical)\n  \
          hecate checkpoint --dir DIR [--nodes N --devices N --layers L --iters K --seed S]\n  \
          hecate resume     --dir DIR [--nodes N --devices M --iters K]\n  \
-         hecate bench spmd [--iters N] [--quick]   (thread scaling + cross-layer overlap)"
+         hecate bench spmd [--iters N] [--quick]   (thread scaling + cross-layer overlap)\n  \
+         hecate bench step [--iters N] [--quick] [--json] [--compute-threads T]\n                  \
+         (per-phase runtime-step times; --json writes BENCH_runtime_step.json)"
     );
 }
 
@@ -258,7 +263,7 @@ fn cmd_fssdp(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&[
         "devices", "iters", "artifacts", "nodes", "seed", "layers", "reshard-every",
         "checkpoint-every", "checkpoint-dir", "resume", "reference", "parallel", "threads",
-        "pacing",
+        "pacing", "compute-threads",
     ])?;
     let mut b = SessionConfig::builder()
         .cluster(args.usize_or("nodes", 2)?, args.usize_or("devices", 8)?)
@@ -272,6 +277,9 @@ fn cmd_fssdp(args: &Args) -> anyhow::Result<()> {
     };
     if args.has("threads") {
         b = b.threads(args.usize_or("threads", 0)?);
+    }
+    if args.has("compute-threads") {
+        b = b.compute_threads(args.usize_or("compute-threads", 1)?);
     }
     if args.has("layers") {
         b = b.layers(args.usize_or("layers", 1)?);
@@ -373,13 +381,15 @@ fn run_fssdp_session(
 /// stack with the §4.3 cross-layer overlap scheduler on vs off under α–β
 /// link pacing.
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
-    args.reject_unknown(&["iters", "quick", "target"])?;
     let target = args
         .str_opt("target")?
         .or_else(|| args.positional.first().cloned())
         .unwrap_or_else(|| "spmd".to_string());
     match target.as_str() {
         "spmd" => {
+            // per-target allow-list: step-only flags must error here, not
+            // silently no-op
+            args.reject_unknown(&["iters", "quick", "target"])?;
             let iters = args.usize_or("iters", 3)?;
             let quick = args.bool_or("quick", false)?;
             println!("== SPMD thread scaling: modeled comm vs measured wall clock ==");
@@ -390,7 +400,18 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             print!("{}", t.to_markdown());
             Ok(())
         }
-        other => anyhow::bail!("unknown bench target `{other}` (available: spmd)"),
+        "step" => {
+            args.reject_unknown(&["iters", "quick", "target", "json", "compute-threads"])?;
+            let iters = args.usize_or("iters", 8)?;
+            let quick = args.bool_or("quick", false)?;
+            let threads = args.usize_or("compute-threads", 4)?;
+            let json = args.bool_or("json", false)?;
+            println!("== Runtime step (reference backend, 8 devices x 3 layers): per-phase ==");
+            let t = report::bench_step(iters, quick, threads, json)?;
+            print!("{}", t.to_markdown());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown bench target `{other}` (available: spmd, step)"),
     }
 }
 
@@ -507,6 +528,9 @@ mod tests {
         assert!(run(argv(&["checkpoint", "--dir", "/tmp/x", "--nope", "1"])).is_err());
         assert!(run(argv(&["bench", "nope"])).is_err());
         assert!(run(argv(&["bench", "spmd", "--bogus", "1"])).is_err());
+        // step-only flags must not silently no-op on the spmd target
+        assert!(run(argv(&["bench", "spmd", "--json"])).is_err());
+        assert!(run(argv(&["bench", "spmd", "--compute-threads", "2"])).is_err());
     }
 
     #[test]
@@ -526,6 +550,30 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("--threads requires --parallel"), "{err}");
+    }
+
+    #[test]
+    fn compute_threads_smoke_and_validation() {
+        // threaded expert loops through the CLI, sequential executor
+        run(argv(&[
+            "fssdp", "--reference", "--devices", "4", "--nodes", "2", "--layers", "2",
+            "--compute-threads", "2", "--iters", "2",
+        ]))
+        .unwrap();
+        let err = run(argv(&[
+            "fssdp", "--reference", "--devices", "4", "--compute-threads", "0", "--iters", "1",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--compute-threads must be at least 1"), "{err}");
+    }
+
+    #[test]
+    fn bench_step_quick_smoke() {
+        // no --json: must not write files from the test run
+        run(argv(&["bench", "step", "--quick", "--iters", "1", "--compute-threads", "2"]))
+            .unwrap();
+        assert!(run(argv(&["bench", "step", "--bogus", "1"])).is_err());
     }
 
     #[test]

@@ -11,10 +11,33 @@
 //!   GShard top-2 gate). Hermetic: no artifacts, no PJRT. This is what lets
 //!   the checkpoint/elastic-resume equivalence tests run everywhere.
 //!
-//! Both backends use the same calling convention (shape-checked
-//! [`HostTensor`] tuples), so the engine body is backend-agnostic.
+//! Two calling conventions coexist:
+//!
+//! * the shape-checked [`HostTensor`] tuples of [`Compute::execute`] — the
+//!   PJRT wire format, kept for the integration tests and any caller that
+//!   wants owned tensors;
+//! * the zero-copy `*_into` entry points ([`Compute::gate_fwd_into`],
+//!   [`Compute::ffn_fwd_into`], [`Compute::ffn_bwd_into`]) the engine hot
+//!   path uses: inputs are borrowed slices/[`TensorView`]s (expert
+//!   parameters arrive as an [`ExpertParams`] view split straight out of
+//!   the packed chunk), outputs land in caller-provided buffers, and all
+//!   intermediates live in a reusable [`KernelScratch`]. On the reference
+//!   backend this path performs **zero** heap allocations in steady state;
+//!   on PJRT it falls back to building `HostTensor`s (the runtime owns its
+//!   buffers anyway).
+//!
+//! The matmul kernels are blocked over rows/columns for cache locality,
+//! but the k-accumulation order of every output element is exactly the
+//! naive kernels' order (ascending `p`, zero-skip unchanged), so results
+//! are **bitwise identical** to the pre-blocking implementation — the
+//! oracle tests below lock this.
 
-use crate::runtime::{HostTensor, Runtime};
+use crate::runtime::{HostTensor, Runtime, TensorView, TensorViewMut};
+
+/// Row-tile edge of the blocked matmuls.
+const BLOCK_ROWS: usize = 16;
+/// Column-tile edge of the blocked matmuls.
+const BLOCK_COLS: usize = 128;
 
 /// Where the engine's kernels execute.
 pub enum Compute {
@@ -22,6 +45,55 @@ pub enum Compute {
     Pjrt(Runtime),
     /// In-process reference kernels (see [`Reference`]).
     Reference(Reference),
+}
+
+/// Borrowed views of one expert's packed parameter chunk
+/// (`w1 ++ b1 ++ w2 ++ b2`, split without copying).
+#[derive(Debug, Clone, Copy)]
+pub struct ExpertParams<'a> {
+    /// `d_model × d_ffn`.
+    pub w1: &'a [f32],
+    /// `d_ffn`.
+    pub b1: &'a [f32],
+    /// `d_ffn × d_model`.
+    pub w2: &'a [f32],
+    /// `d_model`.
+    pub b2: &'a [f32],
+}
+
+/// Caller-provided output buffers of [`Compute::ffn_bwd_into`].
+#[derive(Debug)]
+pub struct FfnGrads<'a> {
+    /// `cap × d_model` — input cotangent.
+    pub gx: &'a mut [f32],
+    /// `d_model × d_ffn`.
+    pub gw1: &'a mut [f32],
+    /// `d_ffn`.
+    pub gb1: &'a mut [f32],
+    /// `d_ffn × d_model`.
+    pub gw2: &'a mut [f32],
+    /// `d_model`.
+    pub gb2: &'a mut [f32],
+}
+
+/// Reusable intermediate buffers of the reference kernels (pre-activation,
+/// hidden, their cotangents, gate logits/probs). One scratch per execution
+/// context (engine workspace, SPMD rank, worker thread); buffers grow to
+/// the layer shape once and are reused for every subsequent call.
+#[derive(Debug, Default)]
+pub struct KernelScratch {
+    z: Vec<f32>,
+    h: Vec<f32>,
+    gh: Vec<f32>,
+    gz: Vec<f32>,
+    logits: Vec<f32>,
+    probs: Vec<f32>,
+}
+
+fn sized(buf: &mut Vec<f32>, len: usize) {
+    if buf.len() != len {
+        buf.resize(len, 0.0);
+    }
 }
 
 impl Compute {
@@ -41,6 +113,120 @@ impl Compute {
         match self {
             Compute::Pjrt(rt) => rt.execute(name, inputs),
             Compute::Reference(r) => r.execute(name, inputs),
+        }
+    }
+
+    /// Gate forward without intermediate tensors: `x [t,dm]` and
+    /// `wg [dm,e]` are borrowed slices; the top-2 weights/indices land in
+    /// `w2`/`idx` (resized to `t × 2`). Softmax probabilities stay in
+    /// `scr.probs` for callers that need them.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gate_fwd_into(
+        &mut self,
+        x: &[f32],
+        wg: &[f32],
+        t: usize,
+        dm: usize,
+        e: usize,
+        scr: &mut KernelScratch,
+        w2: &mut Vec<f32>,
+        idx: &mut Vec<i32>,
+    ) -> anyhow::Result<()> {
+        match self {
+            Compute::Reference(r) => r.gate_fwd_into(x, wg, t, dm, e, scr, w2, idx),
+            Compute::Pjrt(rt) => {
+                let out = rt.execute(
+                    "gate_fwd",
+                    &[
+                        HostTensor::f32(vec![t, dm], x.to_vec()),
+                        HostTensor::f32(vec![dm, e], wg.to_vec()),
+                    ],
+                )?;
+                // keep the contract: probabilities land in scr.probs on
+                // every backend
+                scr.probs.clear();
+                scr.probs.extend_from_slice(out[0].as_f32()?);
+                w2.clear();
+                w2.extend_from_slice(out[1].as_f32()?);
+                idx.clear();
+                idx.extend_from_slice(out[2].as_i32()?);
+                Ok(())
+            }
+        }
+    }
+
+    /// Expert FFN forward into the caller's `y` (`cap × dm`). `x` is the
+    /// packed capacity-group input; parameters are borrowed chunk views.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ffn_fwd_into(
+        &mut self,
+        p: &ExpertParams<'_>,
+        x: &[f32],
+        cap: usize,
+        dm: usize,
+        dff: usize,
+        scr: &mut KernelScratch,
+        y: &mut [f32],
+    ) -> anyhow::Result<()> {
+        match self {
+            Compute::Reference(r) => {
+                r.ffn_fwd_into(p, x, cap, dm, dff, scr, y);
+                Ok(())
+            }
+            Compute::Pjrt(rt) => {
+                let out = rt.execute(
+                    "expert_ffn_fwd",
+                    &[
+                        HostTensor::f32(vec![cap, dm], x.to_vec()),
+                        HostTensor::f32(vec![dm, dff], p.w1.to_vec()),
+                        HostTensor::f32(vec![dff], p.b1.to_vec()),
+                        HostTensor::f32(vec![dff, dm], p.w2.to_vec()),
+                        HostTensor::f32(vec![dm], p.b2.to_vec()),
+                    ],
+                )?;
+                y.copy_from_slice(out[0].as_f32()?);
+                Ok(())
+            }
+        }
+    }
+
+    /// Expert FFN VJP into the caller's [`FfnGrads`] buffers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ffn_bwd_into(
+        &mut self,
+        p: &ExpertParams<'_>,
+        x: &[f32],
+        gy: &[f32],
+        cap: usize,
+        dm: usize,
+        dff: usize,
+        scr: &mut KernelScratch,
+        out: FfnGrads<'_>,
+    ) -> anyhow::Result<()> {
+        match self {
+            Compute::Reference(r) => {
+                r.ffn_bwd_into(p, x, gy, cap, dm, dff, scr, out);
+                Ok(())
+            }
+            Compute::Pjrt(rt) => {
+                let res = rt.execute(
+                    "expert_ffn_bwd",
+                    &[
+                        HostTensor::f32(vec![cap, dm], x.to_vec()),
+                        HostTensor::f32(vec![dm, dff], p.w1.to_vec()),
+                        HostTensor::f32(vec![dff], p.b1.to_vec()),
+                        HostTensor::f32(vec![dff, dm], p.w2.to_vec()),
+                        HostTensor::f32(vec![dm], p.b2.to_vec()),
+                        HostTensor::f32(vec![cap, dm], gy.to_vec()),
+                    ],
+                )?;
+                out.gx.copy_from_slice(res[0].as_f32()?);
+                out.gw1.copy_from_slice(res[1].as_f32()?);
+                out.gb1.copy_from_slice(res[2].as_f32()?);
+                out.gw2.copy_from_slice(res[3].as_f32()?);
+                out.gb2.copy_from_slice(res[4].as_f32()?);
+                Ok(())
+            }
         }
     }
 }
@@ -68,52 +254,79 @@ fn gelu_grad(z: f32) -> f32 {
     0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * du
 }
 
-/// `a [n,k] @ b [k,m]`.
-fn matmul_nn(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; n * m];
-    for i in 0..n {
-        let orow = &mut out[i * m..(i + 1) * m];
-        for (p, &av) in a[i * k..(i + 1) * k].iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            for (o, &bv) in orow.iter_mut().zip(b[p * m..(p + 1) * m].iter()) {
-                *o += av * bv;
+/// `a [n,k] @ b [k,m]` into `out [n,m]`, blocked over rows and columns.
+/// Each output element accumulates over ascending `p` with the zero-skip
+/// of the naive kernel — bitwise identical to it.
+pub fn matmul_nn(a: TensorView<'_>, b: TensorView<'_>, out: &mut [f32]) {
+    let (n, k, m) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(b.rows(), k, "matmul_nn: inner dims {} vs {}", k, b.rows());
+    assert_eq!(out.len(), n * m, "matmul_nn: out len {} vs {n}x{m}", out.len());
+    out.fill(0.0);
+    let (av, bv) = (a.data(), b.data());
+    for i0 in (0..n).step_by(BLOCK_ROWS) {
+        let i1 = (i0 + BLOCK_ROWS).min(n);
+        for j0 in (0..m).step_by(BLOCK_COLS) {
+            let j1 = (j0 + BLOCK_COLS).min(m);
+            for i in i0..i1 {
+                let orow = &mut out[i * m + j0..i * m + j1];
+                for (p, &x) in av[i * k..(i + 1) * k].iter().enumerate() {
+                    if x == 0.0 {
+                        continue;
+                    }
+                    let brow = &bv[p * m + j0..p * m + j1];
+                    for (o, &y) in orow.iter_mut().zip(brow.iter()) {
+                        *o += x * y;
+                    }
+                }
             }
         }
     }
-    out
 }
 
-/// `a [n,k] @ bᵀ` with `b [m,k]`.
-fn matmul_nt(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; n * m];
-    for i in 0..n {
-        let arow = &a[i * k..(i + 1) * k];
-        for j in 0..m {
-            let brow = &b[j * k..(j + 1) * k];
-            out[i * m + j] = arow.iter().zip(brow.iter()).map(|(x, y)| x * y).sum();
+/// `a [n,k] @ bᵀ` with `b [m,k]`, into `out [n,m]`. Dot products keep the
+/// ascending-k summation order of the naive kernel.
+pub fn matmul_nt(a: TensorView<'_>, b: TensorView<'_>, out: &mut [f32]) {
+    let (n, k, m) = (a.rows(), a.cols(), b.rows());
+    assert_eq!(b.cols(), k, "matmul_nt: inner dims {} vs {}", k, b.cols());
+    assert_eq!(out.len(), n * m, "matmul_nt: out len {} vs {n}x{m}", out.len());
+    for i0 in (0..n).step_by(BLOCK_ROWS) {
+        let i1 = (i0 + BLOCK_ROWS).min(n);
+        for j0 in (0..m).step_by(BLOCK_ROWS) {
+            let j1 = (j0 + BLOCK_ROWS).min(m);
+            for i in i0..i1 {
+                let arow = a.row(i);
+                for j in j0..j1 {
+                    let brow = b.row(j);
+                    out[i * m + j] = arow.iter().zip(brow.iter()).map(|(x, y)| x * y).sum();
+                }
+            }
         }
     }
-    out
 }
 
-/// `aᵀ @ b` with `a [k,n]`, `b [k,m]`.
-fn matmul_tn(a: &[f32], b: &[f32], k: usize, n: usize, m: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; n * m];
-    for p in 0..k {
-        let arow = &a[p * n..(p + 1) * n];
-        let brow = &b[p * m..(p + 1) * m];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            for (o, &bv) in out[i * m..(i + 1) * m].iter_mut().zip(brow.iter()) {
-                *o += av * bv;
+/// `aᵀ @ b` with `a [k,n]`, `b [k,m]`, into `out [n,m]`. Row-blocked;
+/// per-element accumulation stays in ascending `p` with the zero-skip.
+pub fn matmul_tn(a: TensorView<'_>, b: TensorView<'_>, out: &mut [f32]) {
+    let (k, n, m) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(b.rows(), k, "matmul_tn: inner dims {} vs {}", k, b.rows());
+    assert_eq!(out.len(), n * m, "matmul_tn: out len {} vs {n}x{m}", out.len());
+    out.fill(0.0);
+    for i0 in (0..n).step_by(BLOCK_ROWS) {
+        let i1 = (i0 + BLOCK_ROWS).min(n);
+        for p in 0..k {
+            let arow = a.row(p);
+            let brow = b.row(p);
+            for i in i0..i1 {
+                let x = arow[i];
+                if x == 0.0 {
+                    continue;
+                }
+                for (o, &y) in out[i * m..(i + 1) * m].iter_mut().zip(brow.iter()) {
+                    *o += x * y;
+                }
             }
         }
     }
-    out
 }
 
 fn shape2(t: &HostTensor, what: &str) -> anyhow::Result<(usize, usize)> {
@@ -136,25 +349,35 @@ impl Reference {
         }
     }
 
-    /// logits → softmax → top-2, mirroring the HLO gate: returns
-    /// `(probs [T,E], weights [T,2], idx [T,2] i32)`.
-    fn gate_fwd(&self, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
-        anyhow::ensure!(inputs.len() == 2, "gate_fwd expects (x, wg)");
-        let (t, dm) = shape2(&inputs[0], "gate x")?;
-        let (dm2, e) = shape2(&inputs[1], "gate wg")?;
-        anyhow::ensure!(dm == dm2, "gate: x d_model {dm} != wg d_model {dm2}");
+    /// The zero-copy gate kernel: logits → softmax → top-2, writing the
+    /// normalized weights into `w2` and expert indices into `idx` (both
+    /// resized to `t × 2`); the softmax probabilities stay in `scr.probs`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gate_fwd_into(
+        &self,
+        x: &[f32],
+        wg: &[f32],
+        t: usize,
+        dm: usize,
+        e: usize,
+        scr: &mut KernelScratch,
+        w2: &mut Vec<f32>,
+        idx: &mut Vec<i32>,
+    ) -> anyhow::Result<()> {
         anyhow::ensure!(e >= 2, "gate needs at least 2 experts for top-2");
-        let x = inputs[0].as_f32()?;
-        let wg = inputs[1].as_f32()?;
-
-        let logits = matmul_nn(x, wg, t, dm, e);
-        let mut probs = vec![0.0f32; t * e];
-        let mut w2 = vec![0.0f32; t * 2];
-        let mut idx = vec![0i32; t * 2];
+        assert_eq!(x.len(), t * dm, "gate x len");
+        assert_eq!(wg.len(), dm * e, "gate wg len");
+        sized(&mut scr.logits, t * e);
+        sized(&mut scr.probs, t * e);
+        matmul_nn(TensorView::new(t, dm, x), TensorView::new(dm, e, wg), &mut scr.logits);
+        w2.clear();
+        w2.resize(t * 2, 0.0);
+        idx.clear();
+        idx.resize(t * 2, 0);
         for row in 0..t {
-            let l = &logits[row * e..(row + 1) * e];
+            let l = &scr.logits[row * e..(row + 1) * e];
             let max = l.iter().cloned().fold(f32::MIN, f32::max);
-            let p = &mut probs[row * e..(row + 1) * e];
+            let p = &mut scr.probs[row * e..(row + 1) * e];
             let mut sum = 0.0f32;
             for (pi, &li) in p.iter_mut().zip(l.iter()) {
                 *pi = (li - max).exp();
@@ -186,30 +409,114 @@ impl Reference {
             idx[row * 2] = i1 as i32;
             idx[row * 2 + 1] = i2 as i32;
         }
-        Ok(vec![
-            HostTensor::f32(vec![t, e], probs),
-            HostTensor::f32(vec![t, 2], w2),
-            HostTensor::i32(vec![t, 2], idx),
-        ])
+        Ok(())
     }
 
-    /// Returns the pre-activation `z = x@w1 + b1` and hidden `h = gelu(z)`.
-    fn ffn_hidden(
+    /// `y = gelu(x@w1 + b1) @ w2 + b2` into the caller's `y` (`cap × dm`),
+    /// intermediates in `scr`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ffn_fwd_into(
+        &self,
+        p: &ExpertParams<'_>,
         x: &[f32],
-        w1: &[f32],
-        b1: &[f32],
         cap: usize,
         dm: usize,
         dff: usize,
-    ) -> (Vec<f32>, Vec<f32>) {
-        let mut z = matmul_nn(x, w1, cap, dm, dff);
+        scr: &mut KernelScratch,
+        y: &mut [f32],
+    ) {
+        assert_eq!(x.len(), cap * dm, "ffn x len");
+        assert_eq!(y.len(), cap * dm, "ffn y len");
+        sized(&mut scr.z, cap * dff);
+        sized(&mut scr.h, cap * dff);
+        matmul_nn(TensorView::new(cap, dm, x), TensorView::new(dm, dff, p.w1), &mut scr.z);
         for row in 0..cap {
-            for (zi, &bi) in z[row * dff..(row + 1) * dff].iter_mut().zip(b1.iter()) {
+            for (zi, &bi) in scr.z[row * dff..(row + 1) * dff].iter_mut().zip(p.b1.iter()) {
                 *zi += bi;
             }
         }
-        let h: Vec<f32> = z.iter().map(|&v| gelu(v)).collect();
-        (z, h)
+        for (hv, &zv) in scr.h.iter_mut().zip(scr.z.iter()) {
+            *hv = gelu(zv);
+        }
+        matmul_nn(TensorView::new(cap, dff, &scr.h), TensorView::new(dff, dm, p.w2), y);
+        let mut yv = TensorViewMut::new(cap, dm, y);
+        for row in 0..cap {
+            for (yi, &bi) in yv.row_mut(row).iter_mut().zip(p.b2.iter()) {
+                *yi += bi;
+            }
+        }
+    }
+
+    /// VJP of [`Reference::ffn_fwd_into`]: recomputes `z`/`h` from the
+    /// kept activations and writes all five gradients into `out`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ffn_bwd_into(
+        &self,
+        p: &ExpertParams<'_>,
+        x: &[f32],
+        gy: &[f32],
+        cap: usize,
+        dm: usize,
+        dff: usize,
+        scr: &mut KernelScratch,
+        out: FfnGrads<'_>,
+    ) {
+        assert_eq!(gy.len(), cap * dm, "ffn gy len");
+        // recompute z and h (activations kept, intermediates recomputed)
+        sized(&mut scr.z, cap * dff);
+        sized(&mut scr.h, cap * dff);
+        matmul_nn(TensorView::new(cap, dm, x), TensorView::new(dm, dff, p.w1), &mut scr.z);
+        for row in 0..cap {
+            for (zi, &bi) in scr.z[row * dff..(row + 1) * dff].iter_mut().zip(p.b1.iter()) {
+                *zi += bi;
+            }
+        }
+        for (hv, &zv) in scr.h.iter_mut().zip(scr.z.iter()) {
+            *hv = gelu(zv);
+        }
+        // gb2[c] = Σ_rows gy ; gw2 = hᵀ @ gy ; gh = gy @ w2ᵀ
+        out.gb2.fill(0.0);
+        for row in 0..cap {
+            for (g, &v) in out.gb2.iter_mut().zip(gy[row * dm..(row + 1) * dm].iter()) {
+                *g += v;
+            }
+        }
+        matmul_tn(TensorView::new(cap, dff, &scr.h), TensorView::new(cap, dm, gy), out.gw2);
+        sized(&mut scr.gh, cap * dff);
+        matmul_nt(TensorView::new(cap, dm, gy), TensorView::new(dff, dm, p.w2), &mut scr.gh);
+        // gz = gh ⊙ gelu'(z)
+        sized(&mut scr.gz, cap * dff);
+        for ((gzv, &ghv), &zv) in scr.gz.iter_mut().zip(scr.gh.iter()).zip(scr.z.iter()) {
+            *gzv = ghv * gelu_grad(zv);
+        }
+        out.gb1.fill(0.0);
+        for row in 0..cap {
+            for (g, &v) in out.gb1.iter_mut().zip(scr.gz[row * dff..(row + 1) * dff].iter()) {
+                *g += v;
+            }
+        }
+        matmul_tn(TensorView::new(cap, dm, x), TensorView::new(cap, dff, &scr.gz), out.gw1);
+        matmul_nt(TensorView::new(cap, dff, &scr.gz), TensorView::new(dm, dff, p.w1), out.gx);
+    }
+
+    /// logits → softmax → top-2, mirroring the HLO gate: returns
+    /// `(probs [T,E], weights [T,2], idx [T,2] i32)`.
+    fn gate_fwd(&self, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        anyhow::ensure!(inputs.len() == 2, "gate_fwd expects (x, wg)");
+        let (t, dm) = shape2(&inputs[0], "gate x")?;
+        let (dm2, e) = shape2(&inputs[1], "gate wg")?;
+        anyhow::ensure!(dm == dm2, "gate: x d_model {dm} != wg d_model {dm2}");
+        let x = inputs[0].as_f32()?;
+        let wg = inputs[1].as_f32()?;
+        let mut scr = KernelScratch::default();
+        let mut w2 = Vec::new();
+        let mut idx = Vec::new();
+        self.gate_fwd_into(x, wg, t, dm, e, &mut scr, &mut w2, &mut idx)?;
+        Ok(vec![
+            HostTensor::f32(vec![t, e], scr.probs),
+            HostTensor::f32(vec![t, 2], w2),
+            HostTensor::i32(vec![t, 2], idx),
+        ])
     }
 
     fn ffn_check_shapes(
@@ -234,21 +541,23 @@ impl Reference {
         Ok((cap, dm, dff))
     }
 
+    fn params_of<'a>(inputs: &'a [HostTensor]) -> anyhow::Result<ExpertParams<'a>> {
+        Ok(ExpertParams {
+            w1: inputs[1].as_f32()?,
+            b1: inputs[2].as_f32()?,
+            w2: inputs[3].as_f32()?,
+            b2: inputs[4].as_f32()?,
+        })
+    }
+
     /// `y = gelu(x@w1 + b1) @ w2 + b2`.
     fn ffn_fwd(&self, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
         let (cap, dm, dff) = Self::ffn_check_shapes(inputs, 5, "expert_ffn_fwd")?;
         let x = inputs[0].as_f32()?;
-        let w1 = inputs[1].as_f32()?;
-        let b1 = inputs[2].as_f32()?;
-        let w2 = inputs[3].as_f32()?;
-        let b2 = inputs[4].as_f32()?;
-        let (_z, h) = Self::ffn_hidden(x, w1, b1, cap, dm, dff);
-        let mut y = matmul_nn(&h, w2, cap, dff, dm);
-        for row in 0..cap {
-            for (yi, &bi) in y[row * dm..(row + 1) * dm].iter_mut().zip(b2.iter()) {
-                *yi += bi;
-            }
-        }
+        let p = Self::params_of(inputs)?;
+        let mut scr = KernelScratch::default();
+        let mut y = vec![0.0f32; cap * dm];
+        self.ffn_fwd_into(&p, x, cap, dm, dff, &mut scr, &mut y);
         Ok(vec![HostTensor::f32(vec![cap, dm], y)])
     }
 
@@ -261,31 +570,30 @@ impl Reference {
             inputs[5].shape()
         );
         let x = inputs[0].as_f32()?;
-        let w1 = inputs[1].as_f32()?;
-        let b1 = inputs[2].as_f32()?;
-        let w2 = inputs[3].as_f32()?;
+        let p = Self::params_of(inputs)?;
         let gy = inputs[5].as_f32()?;
-
-        let (z, h) = Self::ffn_hidden(x, w1, b1, cap, dm, dff);
-        // gb2[c] = Σ_rows gy ; gw2 = hᵀ @ gy ; gh = gy @ w2ᵀ
-        let mut gb2 = vec![0.0f32; dm];
-        for row in 0..cap {
-            for (g, &v) in gb2.iter_mut().zip(gy[row * dm..(row + 1) * dm].iter()) {
-                *g += v;
-            }
-        }
-        let gw2 = matmul_tn(&h, gy, cap, dff, dm);
-        let gh = matmul_nt(gy, w2, cap, dm, dff);
-        // gz = gh ⊙ gelu'(z)
-        let gz: Vec<f32> = gh.iter().zip(z.iter()).map(|(&g, &zv)| g * gelu_grad(zv)).collect();
+        let mut scr = KernelScratch::default();
+        let mut gx = vec![0.0f32; cap * dm];
+        let mut gw1 = vec![0.0f32; dm * dff];
         let mut gb1 = vec![0.0f32; dff];
-        for row in 0..cap {
-            for (g, &v) in gb1.iter_mut().zip(gz[row * dff..(row + 1) * dff].iter()) {
-                *g += v;
-            }
-        }
-        let gw1 = matmul_tn(x, &gz, cap, dm, dff);
-        let gx = matmul_nt(&gz, w1, cap, dff, dm);
+        let mut gw2 = vec![0.0f32; dff * dm];
+        let mut gb2 = vec![0.0f32; dm];
+        self.ffn_bwd_into(
+            &p,
+            x,
+            gy,
+            cap,
+            dm,
+            dff,
+            &mut scr,
+            FfnGrads {
+                gx: &mut gx,
+                gw1: &mut gw1,
+                gb1: &mut gb1,
+                gw2: &mut gw2,
+                gb2: &mut gb2,
+            },
+        );
         Ok(vec![
             HostTensor::f32(vec![cap, dm], gx),
             HostTensor::f32(vec![dm, dff], gw1),
@@ -302,6 +610,195 @@ mod tests {
 
     fn mk(n: usize, f: f32) -> Vec<f32> {
         (0..n).map(|i| ((i as f32) * f).sin() * 0.1).collect()
+    }
+
+    // ---- the pre-blocking kernels, transcribed verbatim: the bitwise
+    //      oracles of the blocked implementations ----
+
+    fn naive_nn(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n * m];
+        for i in 0..n {
+            let orow = &mut out[i * m..(i + 1) * m];
+            for (p, &av) in a[i * k..(i + 1) * k].iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                for (o, &bv) in orow.iter_mut().zip(b[p * m..(p + 1) * m].iter()) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
+    }
+
+    fn naive_nt(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n * m];
+        for i in 0..n {
+            let arow = &a[i * k..(i + 1) * k];
+            for j in 0..m {
+                let brow = &b[j * k..(j + 1) * k];
+                out[i * m + j] = arow.iter().zip(brow.iter()).map(|(x, y)| x * y).sum();
+            }
+        }
+        out
+    }
+
+    fn naive_tn(a: &[f32], b: &[f32], k: usize, n: usize, m: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n * m];
+        for p in 0..k {
+            let arow = &a[p * n..(p + 1) * n];
+            let brow = &b[p * m..(p + 1) * m];
+            for (i, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                for (o, &bv) in out[i * m..(i + 1) * m].iter_mut().zip(brow.iter()) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Shapes chosen to cross the block edges, stay inside one block, hit
+    /// single-row/column extremes, and the empty (`cap = 0`) case.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (3, 5, 2),
+        (0, 4, 7),
+        (1, 7, 5),
+        (16, 16, 16),
+        (17, 23, 9),
+        (33, 129, 130),
+    ];
+
+    #[test]
+    fn blocked_nn_matches_naive_bitwise() {
+        for &(n, k, m) in SHAPES {
+            let a = mk(n * k, 0.13);
+            let b = mk(k * m, 0.07);
+            // dirty output buffer: the kernel must fully overwrite it
+            let mut out = vec![7.0f32; n * m];
+            matmul_nn(TensorView::new(n, k, &a), TensorView::new(k, m, &b), &mut out);
+            let want = naive_nn(&a, &b, n, k, m);
+            assert_eq!(out, want, "nn {n}x{k}x{m} must be bitwise identical");
+        }
+    }
+
+    #[test]
+    fn blocked_nt_matches_naive_bitwise() {
+        for &(n, k, m) in SHAPES {
+            let a = mk(n * k, 0.19);
+            let b = mk(m * k, 0.05);
+            let mut out = vec![7.0f32; n * m];
+            matmul_nt(TensorView::new(n, k, &a), TensorView::new(m, k, &b), &mut out);
+            let want = naive_nt(&a, &b, n, k, m);
+            assert_eq!(out, want, "nt {n}x{k}x{m} must be bitwise identical");
+        }
+    }
+
+    #[test]
+    fn blocked_tn_matches_naive_bitwise() {
+        for &(n, k, m) in SHAPES {
+            let a = mk(k * n, 0.23);
+            let b = mk(k * m, 0.11);
+            let mut out = vec![7.0f32; n * m];
+            matmul_tn(TensorView::new(k, n, &a), TensorView::new(k, m, &b), &mut out);
+            let want = naive_tn(&a, &b, k, n, m);
+            assert_eq!(out, want, "tn {n}x{k}x{m} must be bitwise identical");
+        }
+    }
+
+    #[test]
+    fn blocked_kernels_preserve_zero_skip_on_sparse_rows() {
+        // zero-heavy inputs exercise the `av == 0.0` skip paths
+        let (n, k, m) = (19, 33, 21);
+        let mut a = mk(n * k, 0.31);
+        for v in a.iter_mut().step_by(3) {
+            *v = 0.0;
+        }
+        let b = mk(k * m, 0.17);
+        let mut out = vec![0.0f32; n * m];
+        matmul_nn(TensorView::new(n, k, &a), TensorView::new(k, m, &b), &mut out);
+        assert_eq!(out, naive_nn(&a, &b, n, k, m));
+        let mut out = vec![0.0f32; n * m];
+        matmul_tn(TensorView::new(k, n, &a[..k * n]), TensorView::new(k, m, &b), &mut out);
+        assert_eq!(out, naive_tn(&a[..k * n], &b, k, n, m));
+    }
+
+    #[test]
+    fn into_kernels_match_the_host_tensor_path_bitwise() {
+        // The engine's zero-copy path and the HostTensor convention must
+        // produce identical bits (scratch reuse included: run twice).
+        let (cap, dm, dff) = (6, 10, 14);
+        let x = mk(cap * dm, 0.13);
+        let chunk: Vec<f32> = [mk(dm * dff, 0.07), mk(dff, 0.19), mk(dff * dm, 0.05), mk(dm, 0.23)]
+            .concat();
+        let p = ExpertParams {
+            w1: &chunk[..dm * dff],
+            b1: &chunk[dm * dff..dm * dff + dff],
+            w2: &chunk[dm * dff + dff..dm * dff + dff + dff * dm],
+            b2: &chunk[dm * dff + dff + dff * dm..],
+        };
+        let gy = mk(cap * dm, 0.29);
+        let mut scr = KernelScratch::default();
+        let mut y = vec![0.0f32; cap * dm];
+        for _ in 0..2 {
+            Reference.ffn_fwd_into(&p, &x, cap, dm, dff, &mut scr, &mut y);
+        }
+        let via_tensors = Reference
+            .execute(
+                "expert_ffn_fwd",
+                &[
+                    HostTensor::f32(vec![cap, dm], x.clone()),
+                    HostTensor::f32(vec![dm, dff], p.w1.to_vec()),
+                    HostTensor::f32(vec![dff], p.b1.to_vec()),
+                    HostTensor::f32(vec![dff, dm], p.w2.to_vec()),
+                    HostTensor::f32(vec![dm], p.b2.to_vec()),
+                ],
+            )
+            .unwrap();
+        assert_eq!(y.as_slice(), via_tensors[0].as_f32().unwrap());
+
+        let mut gx = vec![0.0f32; cap * dm];
+        let mut gw1 = vec![0.0f32; dm * dff];
+        let mut gb1 = vec![0.0f32; dff];
+        let mut gw2 = vec![0.0f32; dff * dm];
+        let mut gb2 = vec![0.0f32; dm];
+        Reference.ffn_bwd_into(
+            &p,
+            &x,
+            &gy,
+            cap,
+            dm,
+            dff,
+            &mut scr,
+            FfnGrads {
+                gx: &mut gx,
+                gw1: &mut gw1,
+                gb1: &mut gb1,
+                gw2: &mut gw2,
+                gb2: &mut gb2,
+            },
+        );
+        let bwd = Reference
+            .execute(
+                "expert_ffn_bwd",
+                &[
+                    HostTensor::f32(vec![cap, dm], x.clone()),
+                    HostTensor::f32(vec![dm, dff], p.w1.to_vec()),
+                    HostTensor::f32(vec![dff], p.b1.to_vec()),
+                    HostTensor::f32(vec![dff, dm], p.w2.to_vec()),
+                    HostTensor::f32(vec![dm], p.b2.to_vec()),
+                    HostTensor::f32(vec![cap, dm], gy.clone()),
+                ],
+            )
+            .unwrap();
+        assert_eq!(gx.as_slice(), bwd[0].as_f32().unwrap());
+        assert_eq!(gw1.as_slice(), bwd[1].as_f32().unwrap());
+        assert_eq!(gb1.as_slice(), bwd[2].as_f32().unwrap());
+        assert_eq!(gw2.as_slice(), bwd[3].as_f32().unwrap());
+        assert_eq!(gb2.as_slice(), bwd[4].as_f32().unwrap());
     }
 
     #[test]

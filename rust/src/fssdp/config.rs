@@ -59,6 +59,8 @@ pub enum ConfigError {
     BadPacing { given: String },
     /// Resume with an explicit layer count that contradicts the checkpoint.
     LayerCountMismatch { requested: usize, checkpoint: usize },
+    /// `compute_threads == 0`.
+    ZeroComputeThreads,
 }
 
 impl fmt::Display for ConfigError {
@@ -105,6 +107,9 @@ impl fmt::Display for ConfigError {
                 "--layers {requested} conflicts with the checkpoint's {checkpoint} layers \
                  (omit --layers when resuming)"
             ),
+            ConfigError::ZeroComputeThreads => {
+                write!(f, "--compute-threads must be at least 1")
+            }
         }
     }
 }
@@ -150,6 +155,7 @@ pub struct SessionConfig {
     pub(crate) checkpoint_dir: Option<PathBuf>,
     pub(crate) mem_slots: Option<usize>,
     pub(crate) overlap_degree: Option<usize>,
+    pub(crate) compute_threads: usize,
 }
 
 impl SessionConfig {
@@ -201,6 +207,7 @@ pub struct SessionConfigBuilder {
     checkpoint_dir: Option<PathBuf>,
     mem_slots: Option<usize>,
     overlap_degree: Option<usize>,
+    compute_threads: usize,
 }
 
 impl Default for SessionConfigBuilder {
@@ -223,6 +230,7 @@ impl Default for SessionConfigBuilder {
             checkpoint_dir: None,
             mem_slots: None,
             overlap_degree: None,
+            compute_threads: 1,
         }
     }
 }
@@ -353,6 +361,18 @@ impl SessionConfigBuilder {
         self
     }
 
+    /// Worker threads for the **sequential** executor's expert loops
+    /// (default 1 = in-line). Takes effect on the reference backend only —
+    /// PJRT runtime handles cannot be shared across threads, so PJRT
+    /// engines always run the in-line loop; SPMD ranks likewise keep the
+    /// single-threaded kernels (one OS thread per rank is the whole
+    /// parallelism budget there). Results are bit-identical for any value:
+    /// per-key work is independent and merges in route order.
+    pub fn compute_threads(mut self, n: usize) -> Self {
+        self.compute_threads = n;
+        self
+    }
+
     /// Validate and freeze the configuration. Validation order matches the
     /// legacy CLI so the first error reported is unchanged.
     pub fn build(self) -> Result<SessionConfig, ConfigError> {
@@ -387,6 +407,9 @@ impl SessionConfigBuilder {
         if self.checkpoint_every > 0 && self.checkpoint_dir.is_none() {
             return Err(ConfigError::CheckpointEveryWithoutDir);
         }
+        if self.compute_threads == 0 {
+            return Err(ConfigError::ZeroComputeThreads);
+        }
         let executor = if self.parallel {
             let threads = self.threads.unwrap_or(devices);
             if threads != devices {
@@ -413,6 +436,7 @@ impl SessionConfigBuilder {
             checkpoint_dir: self.checkpoint_dir,
             mem_slots: self.mem_slots,
             overlap_degree: self.overlap_degree,
+            compute_threads: self.compute_threads,
         })
     }
 }
@@ -515,6 +539,15 @@ mod tests {
         assert_eq!(err, ConfigError::PacingWithoutParallel);
         assert!(err.to_string().contains("--pacing requires --parallel"), "{err}");
         assert!(base().cluster(2, 4).parallel(true).pacing(p).build().is_ok());
+    }
+
+    #[test]
+    fn zero_compute_threads_is_rejected() {
+        let err = base().cluster(2, 4).compute_threads(0).build().unwrap_err();
+        assert_eq!(err, ConfigError::ZeroComputeThreads);
+        assert_eq!(err.to_string(), "--compute-threads must be at least 1");
+        let cfg = base().cluster(2, 4).compute_threads(4).build().unwrap();
+        assert_eq!(cfg.compute_threads, 4);
     }
 
     #[test]

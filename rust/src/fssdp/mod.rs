@@ -53,23 +53,24 @@ pub use session::{
 };
 
 use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
 
 use crate::checkpoint::{self, ExpertState, LayerCkpt, ReshardPlan, TrainState};
-use crate::collectives::exec::{run_spag, run_sprs, ClusterMem};
+use crate::collectives::exec::{run_spag_pooled, run_sprs_pooled, BufferPool, ClusterMem};
 use crate::collectives::sparse::{build_spag, build_sprs, SparsePlan};
 use crate::dispatch::dispatch;
 use crate::loadsim::LoadPredictor;
 use crate::materialize::{sparse_materialize, MatConstraints};
 use crate::metrics::Metrics;
 use crate::placement::Placement;
-use crate::runtime::{HostTensor, Runtime};
+use crate::runtime::Runtime;
 use crate::sharding::{self, ShardingPlan};
 use crate::spmd::comm::Pacing;
 use crate::topology::{DeviceId, Topology};
 use crate::util::rng::Rng;
 
 use adam::{AdamCfg, AdamState};
-use compute::Compute;
+use compute::{Compute, ExpertParams, FfnGrads, KernelScratch, Reference};
 
 /// How the engine executes an iteration span: the sequential oracle (one
 /// thread steps every simulated device in turn) or the SPMD runtime
@@ -127,32 +128,172 @@ impl LayerDims {
     }
 }
 
-/// Unpack a chunk into (w1, b1, w2, b2) host tensors.
-fn unpack_chunk(dims: &LayerDims, chunk: &[f32]) -> (HostTensor, HostTensor, HostTensor, HostTensor) {
+/// Split a packed chunk into borrowed `(w1, b1, w2, b2)` views — a pure
+/// view-splitter over the chunk slice: the kernels read the chunk storage
+/// directly, no copies.
+fn unpack_chunk<'a>(dims: &LayerDims, chunk: &'a [f32]) -> ExpertParams<'a> {
     let (dm, dff) = (dims.d_model, dims.d_ffn);
-    let mut off = 0;
-    let w1 = HostTensor::f32(vec![dm, dff], chunk[off..off + dm * dff].to_vec());
-    off += dm * dff;
-    let b1 = HostTensor::f32(vec![dff], chunk[off..off + dff].to_vec());
-    off += dff;
-    let w2 = HostTensor::f32(vec![dff, dm], chunk[off..off + dff * dm].to_vec());
-    off += dff * dm;
-    let b2 = HostTensor::f32(vec![dm], chunk[off..off + dm].to_vec());
-    (w1, b1, w2, b2)
+    debug_assert_eq!(chunk.len(), dims.chunk_len(), "chunk length");
+    let (w1, rest) = chunk.split_at(dm * dff);
+    let (b1, rest) = rest.split_at(dff);
+    let (w2, b2) = rest.split_at(dff * dm);
+    ExpertParams { w1, b1, w2, b2 }
 }
 
-/// Pack (gw1, gb1, gw2, gb2) into a gradient chunk, accumulating.
-fn accumulate_grad_chunk(acc: &mut [f32], parts: &[HostTensor]) -> anyhow::Result<()> {
+/// Accumulate `(gw1, gb1, gw2, gb2)` slices into a packed gradient chunk
+/// (same element order as the packed layout).
+fn accumulate_grad_parts(acc: &mut [f32], parts: &[&[f32]]) -> anyhow::Result<()> {
     let mut off = 0;
-    for p in parts {
-        let data = p.as_f32()?;
-        for (a, &g) in acc[off..off + data.len()].iter_mut().zip(data.iter()) {
+    for part in parts {
+        for (a, &g) in acc[off..off + part.len()].iter_mut().zip(part.iter()) {
             *a += g;
         }
-        off += data.len();
+        off += part.len();
     }
     anyhow::ensure!(off == acc.len(), "grad pack length mismatch");
     Ok(())
+}
+
+/// Reusable per-key kernel buffers: packed group input, combine/cotangent
+/// staging, forward output, and the five backward gradient parts, plus the
+/// kernel-internal [`KernelScratch`]. One per execution context (the
+/// engine's [`StepWorkspace`], each SPMD rank, each worker thread).
+#[derive(Debug, Default)]
+pub(crate) struct KeyScratch {
+    xin: Vec<f32>,
+    gy: Vec<f32>,
+    y: Vec<f32>,
+    gx: Vec<f32>,
+    gw1: Vec<f32>,
+    gb1: Vec<f32>,
+    gw2: Vec<f32>,
+    gb2: Vec<f32>,
+    pub(crate) kernel: KernelScratch,
+}
+
+impl KeyScratch {
+    fn ensure(&mut self, dims: &LayerDims) {
+        let (cap, dm, dff) = (dims.cap, dims.d_model, dims.d_ffn);
+        for buf in [&mut self.xin, &mut self.gy, &mut self.y, &mut self.gx] {
+            if buf.len() != cap * dm {
+                buf.resize(cap * dm, 0.0);
+            }
+        }
+        if self.gw1.len() != dm * dff {
+            self.gw1.resize(dm * dff, 0.0);
+        }
+        if self.gb1.len() != dff {
+            self.gb1.resize(dff, 0.0);
+        }
+        if self.gw2.len() != dff * dm {
+            self.gw2.resize(dff * dm, 0.0);
+        }
+        if self.gb2.len() != dm {
+            self.gb2.resize(dm, 0.0);
+        }
+    }
+}
+
+/// Workspace allocation counters (see [`FssdpEngine::workspace_stats`]):
+/// after warmup, `pool_allocated` stays flat while `pool_reused` grows —
+/// the steady-state iteration allocates nothing.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkspaceStats {
+    /// Fresh heap allocations the workspace pool served.
+    pub pool_allocated: u64,
+    /// Requests served from the free list.
+    pub pool_reused: u64,
+}
+
+/// Per-phase wall-clock of the sequential engine's steps, accumulated
+/// until [`FssdpEngine::take_phases`] drains it (the `hecate bench step`
+/// JSON artifact is built from this).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepPhases {
+    /// spAG execution (Algorithm 1's materialization traffic).
+    pub materialize: Duration,
+    /// Gate forward across sources (incl. the decisions' bookkeeping).
+    pub gate: Duration,
+    /// Expert forward sweeps — includes the fused last-layer fwd+loss+bwd.
+    pub expert_fwd: Duration,
+    /// Inner-layer backward sweeps.
+    pub expert_bwd: Duration,
+    /// spRS execution.
+    pub sprs: Duration,
+    /// Adam updates + replica release.
+    pub adam: Duration,
+    /// Steps accumulated.
+    pub steps: u64,
+}
+
+impl StepPhases {
+    /// Sum of all phase durations.
+    pub fn total(&self) -> Duration {
+        self.materialize + self.gate + self.expert_fwd + self.expert_bwd + self.sprs + self.adam
+    }
+}
+
+/// The engine's reusable per-span scratch: every buffer a training
+/// iteration needs — activation/cotangent buffers per layer, gate output
+/// staging, per-key kernel scratch, and the chunk-length [`BufferPool`]
+/// the gradient stores and collective staging copies cycle through.
+/// Allocated lazily on first use and reused across iterations, layers, and
+/// spans; never part of the training state (checkpoints ignore it).
+#[derive(Debug, Default)]
+pub(crate) struct StepWorkspace {
+    pub(crate) pool: BufferPool,
+    key: KeyScratch,
+    /// Per-key cotangent/combine rows staging (toks order).
+    rows: Vec<f32>,
+    /// `acts_stack[l][source]` — layer `l`'s input activations.
+    acts_stack: Vec<Vec<Vec<f32>>>,
+    /// Cotangent of the current layer's input (backward sweep).
+    g: Vec<Vec<f32>>,
+    /// Cotangent being assembled for the layer below.
+    g_prev: Vec<Vec<f32>>,
+    /// Per-source gate outputs (top-2 weights / expert indices).
+    gate_w_out: Vec<Vec<f32>>,
+    gate_idx: Vec<Vec<i32>>,
+}
+
+fn resize_bufs(v: &mut Vec<Vec<f32>>, count: usize, len: usize) {
+    v.resize_with(count, Vec::new);
+    for b in v.iter_mut() {
+        if b.len() != len {
+            b.resize(len, 0.0);
+        }
+    }
+}
+
+impl StepWorkspace {
+    fn ensure_shape(&mut self, nl: usize, sources: usize, dims: &LayerDims) {
+        let n = dims.tokens * dims.d_model;
+        if self.acts_stack.len() != nl {
+            self.acts_stack.resize_with(nl, Vec::new);
+        }
+        for layer in &mut self.acts_stack {
+            resize_bufs(layer, sources, n);
+        }
+        resize_bufs(&mut self.g, sources, n);
+        resize_bufs(&mut self.g_prev, sources, n);
+        self.gate_w_out.resize_with(sources, Vec::new);
+        self.gate_idx.resize_with(sources, Vec::new);
+    }
+}
+
+/// Zero right-sized activation/cotangent buffers in place.
+fn zero_bufs(bufs: &mut [Vec<f32>]) {
+    for b in bufs {
+        b.fill(0.0);
+    }
+}
+
+/// Recycle every buffer of a gradient `ClusterMem` into the pool
+/// (iteration teardown — the next iteration re-takes them zeroed).
+fn drain_cluster_into_pool(mem: &mut ClusterMem, pool: &mut BufferPool) {
+    for store in &mut mem.devices {
+        store.retain_chunks(|_| false, pool);
+    }
 }
 
 /// Generate one logical data shard's token batch for iteration `iter`
@@ -160,17 +301,25 @@ fn accumulate_grad_chunk(acc: &mut [f32], parts: &[HostTensor]) -> anyhow::Resul
 /// reference, and every SPMD rank regenerate identical data locally, so
 /// layer-0 token payloads never need to cross the wire).
 pub(crate) fn batch_for(dims: &LayerDims, iter: u64, source: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    batch_into(dims, iter, source, &mut out);
+    out
+}
+
+/// [`batch_for`] into a reused buffer (same values, no allocation once the
+/// buffer's capacity is warm).
+pub(crate) fn batch_into(dims: &LayerDims, iter: u64, source: usize, out: &mut Vec<f32>) {
     let mut r = Rng::new(0xDA7A ^ (iter.wrapping_mul(0x9E3779B97F4A7C15)) ^ (source as u64) << 32);
     // drift the token distribution over iterations so expert loads
     // fluctuate (the Figure 3 dynamic the predictor must track)
     let phase = iter as f64 * 0.05;
-    (0..dims.tokens * dims.d_model)
-        .map(|i| {
-            let base = r.normal() as f32;
-            let drift = ((i % dims.d_model) as f64 * 0.1 + phase).sin() as f32;
-            base + 0.8 * drift
-        })
-        .collect()
+    out.clear();
+    out.reserve(dims.tokens * dims.d_model);
+    for i in 0..dims.tokens * dims.d_model {
+        let base = r.normal() as f32;
+        let drift = ((i % dims.d_model) as f64 * 0.1 + phase).sin() as f32;
+        out.push(base + 0.8 * drift);
+    }
 }
 
 /// The deterministic control-plane decisions of one layer's iteration:
@@ -293,18 +442,19 @@ pub(crate) fn scatter_rows(
 }
 
 /// Pack the routed token rows of one capacity group into a zero-padded
-/// `cap × d_model` kernel input.
+/// `cap × d_model` kernel input (caller-provided buffer, fully
+/// overwritten).
 fn pack_group_input(
     dims: &LayerDims,
     group: &[(usize, usize, f32)],
     acts: &[Vec<f32>],
-) -> HostTensor {
-    let mut xin = vec![0.0f32; dims.cap * dims.d_model];
+    xin: &mut [f32],
+) {
+    xin.fill(0.0);
     for (row, &(s, t, _w)) in group.iter().enumerate() {
         let src = &acts[s][t * dims.d_model..(t + 1) * dims.d_model];
         xin[row * dims.d_model..(row + 1) * dims.d_model].copy_from_slice(src);
     }
-    HostTensor::f32(vec![dims.cap, dims.d_model], xin)
 }
 
 /// Expert forward + combine + loss + backward for every token routed to
@@ -318,7 +468,10 @@ fn pack_group_input(
 /// `L = 1` bit-identity hangs on it (locked by the module test
 /// `l1_step_matches_seed_oracle_bitwise`). `want_gx` gates the cotangent
 /// extraction: single-layer runs have no layer below, so they skip the
-/// per-group `gx` copy entirely (the returned vec is then empty).
+/// per-group `gx` copy entirely (`rows_out` is then left empty).
+///
+/// Zero-copy: the chunk is read through borrowed views, all intermediates
+/// live in `scr`, and the cotangent rows land in the reused `rows_out`.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn compute_expert_key(
     compute: &mut Compute,
@@ -329,46 +482,61 @@ pub(crate) fn compute_expert_key(
     inv_t: f32,
     acc: &mut [f32],
     want_gx: bool,
-) -> anyhow::Result<(f64, Vec<f32>)> {
-    let (w1, b1, w2, b2) = unpack_chunk(dims, chunk);
+    scr: &mut KeyScratch,
+    rows_out: &mut Vec<f32>,
+) -> anyhow::Result<f64> {
+    let p = unpack_chunk(dims, chunk);
+    scr.ensure(dims);
+    rows_out.clear();
+    if want_gx {
+        rows_out.reserve(toks.len() * dims.d_model);
+    }
+    let (cap, dm, dff) = (dims.cap, dims.d_model, dims.d_ffn);
     let mut loss = 0.0f64;
-    let mut gx_rows: Vec<f32> =
-        Vec::with_capacity(if want_gx { toks.len() * dims.d_model } else { 0 });
-    for group in toks.chunks(dims.cap) {
-        let xt = pack_group_input(dims, group, acts);
-        let y = compute.execute(
-            "expert_ffn_fwd",
-            &[xt.clone(), w1.clone(), b1.clone(), w2.clone(), b2.clone()],
-        )?;
-        let yv = y[0].as_f32()?;
+    for group in toks.chunks(cap) {
+        pack_group_input(dims, group, acts, &mut scr.xin);
+        compute.ffn_fwd_into(&p, &scr.xin, cap, dm, dff, &mut scr.kernel, &mut scr.y)?;
         // combine + loss + cotangent: target 0 ⇒ L = ½‖w·y‖²/T,
         // gy_row = w²·y·(1/T) (chain through the combine weight)
-        let mut gy = vec![0.0f32; dims.cap * dims.d_model];
+        scr.gy.fill(0.0);
         for (row, &(_s, _t, w)) in group.iter().enumerate() {
-            for c in 0..dims.d_model {
-                let o = w * yv[row * dims.d_model + c];
+            for c in 0..dm {
+                let o = w * scr.y[row * dm + c];
                 loss += 0.5 * (o as f64) * (o as f64) * inv_t as f64;
-                gy[row * dims.d_model + c] = w * o * inv_t;
+                scr.gy[row * dm + c] = w * o * inv_t;
             }
         }
-        let gyt = HostTensor::f32(vec![dims.cap, dims.d_model], gy);
-        let out = compute.execute(
-            "expert_ffn_bwd",
-            &[xt, w1.clone(), b1.clone(), w2.clone(), b2.clone(), gyt],
+        compute.ffn_bwd_into(
+            &p,
+            &scr.xin,
+            &scr.gy,
+            cap,
+            dm,
+            dff,
+            &mut scr.kernel,
+            FfnGrads {
+                gx: &mut scr.gx,
+                gw1: &mut scr.gw1,
+                gb1: &mut scr.gb1,
+                gw2: &mut scr.gw2,
+                gb2: &mut scr.gb2,
+            },
         )?;
-        // out = (gx, gw1, gb1, gw2, gb2); gx feeds the layer below (the
-        // gate itself stays frozen; single-layer runs discard it unsampled)
+        // gx feeds the layer below (the gate itself stays frozen;
+        // single-layer runs discard it unsampled)
         if want_gx {
-            let gx = out[0].as_f32()?;
-            gx_rows.extend_from_slice(&gx[..group.len() * dims.d_model]);
+            rows_out.extend_from_slice(&scr.gx[..group.len() * dm]);
         }
-        accumulate_grad_chunk(acc, &out[1..5])?;
+        accumulate_grad_parts(
+            acc,
+            &[scr.gw1.as_slice(), scr.gb1.as_slice(), scr.gw2.as_slice(), scr.gb2.as_slice()],
+        )?;
     }
-    Ok((loss, gx_rows))
+    Ok(loss)
 }
 
 /// Expert forward for one `(device, expert)` key of an **inner** layer:
-/// returns the combine contributions `w·y` per routed token
+/// writes the combine contributions `w·y` per routed token into `rows_out`
 /// (`toks.len() × d_model`, in toks order). The caller scatters them into
 /// the next layer's activations ([`scatter_rows`]).
 pub(crate) fn forward_expert_rows(
@@ -377,23 +545,24 @@ pub(crate) fn forward_expert_rows(
     chunk: &[f32],
     toks: &[(usize, usize, f32)],
     acts: &[Vec<f32>],
-) -> anyhow::Result<Vec<f32>> {
-    let (w1, b1, w2, b2) = unpack_chunk(dims, chunk);
-    let mut rows: Vec<f32> = Vec::with_capacity(toks.len() * dims.d_model);
-    for group in toks.chunks(dims.cap) {
-        let xt = pack_group_input(dims, group, acts);
-        let y = compute.execute(
-            "expert_ffn_fwd",
-            &[xt, w1.clone(), b1.clone(), w2.clone(), b2.clone()],
-        )?;
-        let yv = y[0].as_f32()?;
+    scr: &mut KeyScratch,
+    rows_out: &mut Vec<f32>,
+) -> anyhow::Result<()> {
+    let p = unpack_chunk(dims, chunk);
+    scr.ensure(dims);
+    rows_out.clear();
+    rows_out.reserve(toks.len() * dims.d_model);
+    let (cap, dm, dff) = (dims.cap, dims.d_model, dims.d_ffn);
+    for group in toks.chunks(cap) {
+        pack_group_input(dims, group, acts, &mut scr.xin);
+        compute.ffn_fwd_into(&p, &scr.xin, cap, dm, dff, &mut scr.kernel, &mut scr.y)?;
         for (row, &(_s, _t, w)) in group.iter().enumerate() {
-            for c in 0..dims.d_model {
-                rows.push(w * yv[row * dims.d_model + c]);
+            for c in 0..dm {
+                rows_out.push(w * scr.y[row * dm + c]);
             }
         }
     }
-    Ok(rows)
+    Ok(())
 }
 
 /// Expert backward for one `(device, expert)` key of an **inner** layer:
@@ -401,7 +570,9 @@ pub(crate) fn forward_expert_rows(
 /// each routed token's expert-output cotangent is `w · g[s][t]`. Re-packs
 /// the forward input from `acts` (activations are kept, intermediates are
 /// recomputed by the kernel), accumulates parameter gradients into `acc`,
-/// and returns the input cotangent rows for the layer below.
+/// and writes the input cotangent rows for the layer below into
+/// `rows_out`.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn backward_expert_key(
     compute: &mut Compute,
     dims: &LayerDims,
@@ -410,28 +581,174 @@ pub(crate) fn backward_expert_key(
     acts: &[Vec<f32>],
     g: &[Vec<f32>],
     acc: &mut [f32],
-) -> anyhow::Result<Vec<f32>> {
-    let (w1, b1, w2, b2) = unpack_chunk(dims, chunk);
-    let mut gx_rows: Vec<f32> = Vec::with_capacity(toks.len() * dims.d_model);
-    for group in toks.chunks(dims.cap) {
-        let xt = pack_group_input(dims, group, acts);
-        let mut gy = vec![0.0f32; dims.cap * dims.d_model];
+    scr: &mut KeyScratch,
+    rows_out: &mut Vec<f32>,
+) -> anyhow::Result<()> {
+    let p = unpack_chunk(dims, chunk);
+    scr.ensure(dims);
+    rows_out.clear();
+    rows_out.reserve(toks.len() * dims.d_model);
+    let (cap, dm, dff) = (dims.cap, dims.d_model, dims.d_ffn);
+    for group in toks.chunks(cap) {
+        pack_group_input(dims, group, acts, &mut scr.xin);
+        scr.gy.fill(0.0);
         for (row, &(s, t, w)) in group.iter().enumerate() {
-            let gsrc = &g[s][t * dims.d_model..(t + 1) * dims.d_model];
+            let gsrc = &g[s][t * dm..(t + 1) * dm];
             for (c, &gv) in gsrc.iter().enumerate() {
-                gy[row * dims.d_model + c] = w * gv;
+                scr.gy[row * dm + c] = w * gv;
             }
         }
-        let gyt = HostTensor::f32(vec![dims.cap, dims.d_model], gy);
-        let out = compute.execute(
-            "expert_ffn_bwd",
-            &[xt, w1.clone(), b1.clone(), w2.clone(), b2.clone(), gyt],
+        compute.ffn_bwd_into(
+            &p,
+            &scr.xin,
+            &scr.gy,
+            cap,
+            dm,
+            dff,
+            &mut scr.kernel,
+            FfnGrads {
+                gx: &mut scr.gx,
+                gw1: &mut scr.gw1,
+                gb1: &mut scr.gb1,
+                gw2: &mut scr.gw2,
+                gb2: &mut scr.gb2,
+            },
         )?;
-        let gx = out[0].as_f32()?;
-        gx_rows.extend_from_slice(&gx[..group.len() * dims.d_model]);
-        accumulate_grad_chunk(acc, &out[1..5])?;
+        rows_out.extend_from_slice(&scr.gx[..group.len() * dm]);
+        accumulate_grad_parts(
+            acc,
+            &[scr.gw1.as_slice(), scr.gb1.as_slice(), scr.gw2.as_slice(), scr.gb2.as_slice()],
+        )?;
     }
-    Ok(gx_rows)
+    Ok(())
+}
+
+/// One expert key's outputs from a worker thread, merged on the main
+/// thread in deterministic route order.
+struct KeyOut {
+    loss: f64,
+    grad: Vec<f32>,
+    rows: Vec<f32>,
+}
+
+type KeyOuts = Vec<((usize, usize), KeyOut)>;
+
+/// What the workers of [`expert_keys_threaded`] compute per route key.
+#[derive(Clone, Copy)]
+enum KeyMode<'a> {
+    /// Last layer: fused fwd + loss + bwd ([`compute_expert_key`]).
+    FusedLast { inv_t: f32, want_gx: bool },
+    /// Inner-layer forward ([`forward_expert_rows`]).
+    Forward,
+    /// Inner-layer backward ([`backward_expert_key`]); `g` is the combine
+    /// output's cotangent per source.
+    Backward { g: &'a [Vec<f32>] },
+}
+
+/// Split one layer's route keys across scoped worker threads (reference
+/// backend only — each worker owns a stateless kernel set and its own
+/// scratch). Outputs come back **in route order** and the caller merges
+/// them in that order, so every floating-point operation lands exactly
+/// where the single-threaded loop would put it:
+///
+/// * keys are independent (one gradient buffer per `(device, expert)`
+///   key), so per-key work parallelizes freely;
+/// * each key's gradient accumulates into a zeroed per-key buffer in
+///   capacity-group order — the identical add sequence the in-place loop
+///   performs — and is installed verbatim into the zeroed gradient store;
+/// * loss sums and cotangent scatters happen on the main thread in route
+///   order.
+///
+/// Bit-identity to the single-threaded loop is locked by the module test
+/// `threaded_expert_loop_is_bit_identical`.
+fn expert_keys_threaded(
+    threads: usize,
+    dims: &LayerDims,
+    params: &ClusterMem,
+    routes: &Routes,
+    acts: &[Vec<f32>],
+    mode: KeyMode<'_>,
+) -> anyhow::Result<KeyOuts> {
+    let keys: Vec<(usize, usize)> = routes.keys().copied().collect();
+    if keys.is_empty() {
+        return Ok(Vec::new());
+    }
+    let nt = threads.min(keys.len()).max(1);
+    let per = (keys.len() + nt - 1) / nt;
+    let chunk_len = dims.chunk_len();
+    let results: Vec<anyhow::Result<KeyOuts>> = std::thread::scope(|sc| {
+        let handles: Vec<_> = keys
+            .chunks(per)
+            .map(|slice| {
+                sc.spawn(move || -> anyhow::Result<KeyOuts> {
+                    let mut compute = Compute::Reference(Reference);
+                    let mut scr = KeyScratch::default();
+                    let mut outs: KeyOuts = Vec::with_capacity(slice.len());
+                    for &(dev, e) in slice {
+                        let toks = routes.get(&(dev, e)).expect("key from this map");
+                        let chunk = params
+                            .dev(DeviceId(dev))
+                            .get(e)
+                            .ok_or_else(|| anyhow::anyhow!("device {dev} lacks expert {e}"))?;
+                        let mut rows = Vec::new();
+                        let (loss, grad) = match mode {
+                            KeyMode::FusedLast { inv_t, want_gx } => {
+                                let mut acc = vec![0.0f32; chunk_len];
+                                let lo = compute_expert_key(
+                                    &mut compute,
+                                    dims,
+                                    chunk,
+                                    toks,
+                                    acts,
+                                    inv_t,
+                                    &mut acc,
+                                    want_gx,
+                                    &mut scr,
+                                    &mut rows,
+                                )?;
+                                (lo, acc)
+                            }
+                            KeyMode::Forward => {
+                                forward_expert_rows(
+                                    &mut compute,
+                                    dims,
+                                    chunk,
+                                    toks,
+                                    acts,
+                                    &mut scr,
+                                    &mut rows,
+                                )?;
+                                (0.0, Vec::new())
+                            }
+                            KeyMode::Backward { g } => {
+                                let mut acc = vec![0.0f32; chunk_len];
+                                backward_expert_key(
+                                    &mut compute,
+                                    dims,
+                                    chunk,
+                                    toks,
+                                    acts,
+                                    g,
+                                    &mut acc,
+                                    &mut scr,
+                                    &mut rows,
+                                )?;
+                                (0.0, acc)
+                            }
+                        };
+                        outs.push(((dev, e), KeyOut { loss, grad, rows }));
+                    }
+                    Ok(outs)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("expert worker panicked")).collect()
+    });
+    let mut out: KeyOuts = Vec::with_capacity(keys.len());
+    for r in results {
+        out.extend(r?);
+    }
+    Ok(out)
 }
 
 /// Per-iteration statistics of the engine, aggregated over layers
@@ -448,6 +765,10 @@ pub struct EngineStats {
     pub remote_tokens: usize,
     /// Mean straggler factor of per-device expert tokens over layers.
     pub straggler: f64,
+    /// Fresh workspace-pool allocations during this iteration (0 in steady
+    /// state once the pool is warm; sequential executor only — the SPMD
+    /// ranks report theirs through `spmd.ws_allocs` in the span metrics).
+    pub ws_allocs: u64,
 }
 
 /// Everything one MoE layer owns: its shard partition, parameter chunks,
@@ -498,6 +819,15 @@ pub struct FssdpEngine {
     /// numerics (pacing delays delivery, it cannot reorder the per-buffer
     /// accumulation orders).
     pub(crate) pacing: Option<Pacing>,
+    /// Worker threads for the sequential executor's expert loops
+    /// (reference backend only; 1 = in-line). SPMD ranks always use the
+    /// single-threaded kernels — one OS thread per rank is the whole
+    /// parallelism budget there.
+    pub(crate) compute_threads: usize,
+    /// Reusable per-span scratch (never part of the training state).
+    pub(crate) workspace: StepWorkspace,
+    /// Accumulated per-phase timings of sequential steps.
+    pub(crate) phases: StepPhases,
     rng: Rng,
     /// Per-rank metrics merged after the last SPMD span (None before the
     /// first parallel run).
@@ -593,6 +923,9 @@ impl FssdpEngine {
             reshards_moved: 0,
             reshard_events: Vec::new(),
             pacing: None,
+            compute_threads: 1,
+            workspace: StepWorkspace::default(),
+            phases: StepPhases::default(),
             rng,
             spmd_metrics: None,
         }
@@ -653,16 +986,59 @@ impl FssdpEngine {
         self.reshards_moved
     }
 
+    /// Worker threads of the sequential executor's expert loops.
+    pub fn compute_threads(&self) -> usize {
+        self.compute_threads
+    }
+
+    /// Per-phase wall-clock accumulated by sequential steps since
+    /// construction or the last [`FssdpEngine::take_phases`].
+    pub fn phases(&self) -> StepPhases {
+        self.phases
+    }
+
+    /// Drain the accumulated phase timings (bench drivers sample around a
+    /// timed window).
+    pub fn take_phases(&mut self) -> StepPhases {
+        std::mem::take(&mut self.phases)
+    }
+
+    /// Workspace allocation counters — the steady-state zero-allocation
+    /// claim, measurable.
+    pub fn workspace_stats(&self) -> WorkspaceStats {
+        WorkspaceStats {
+            pool_allocated: self.workspace.pool.allocated,
+            pool_reused: self.workspace.pool.reused,
+        }
+    }
+
     /// Run one FSSDP training iteration of the whole layer stack over
     /// `sources` logical data shards (== devices in the distributed run;
     /// all mapped to device 0 in the reference run). Returns iteration
     /// statistics. This is the sequential oracle both executors must
     /// reproduce bit-exactly.
+    ///
+    /// Zero-copy discipline: every tensor/chunk buffer the iteration
+    /// needs comes out of the engine's reusable step workspace
+    /// (activations, gate outputs, kernel scratch, gradient stores via
+    /// the buffer pool), so a warm in-line (`compute_threads == 1`)
+    /// iteration allocates no f32 buffers — `EngineStats::ws_allocs`
+    /// measures the pool misses. Control-plane maps (plans, route tables)
+    /// still allocate per iteration; they are small and off the numeric
+    /// path. With `compute_threads > 1` on the reference backend the
+    /// per-key expert loops run on scoped worker threads, trading per-key
+    /// output buffers and thread spawns (not pool-counted) for
+    /// parallelism; results merge in route order, keeping every
+    /// floating-point accumulation order — and therefore every bit —
+    /// identical.
     pub fn step(&mut self, iter: u64, sources: usize) -> anyhow::Result<EngineStats> {
         let nd = self.topo.num_devices();
         let dims = self.dims;
         let nl = self.layers.len();
         let cons = MatConstraints { overlap_degree: self.overlap_degree, mem_slots: self.mem_slots };
+        let adam = self.adam;
+        let threads = self.compute_threads;
+        let use_threads = threads > 1 && matches!(self.compute, Compute::Reference(_));
         let mut stats = EngineStats::default();
 
         // All layers' plans are knowable up front: predictions use history
@@ -672,14 +1048,20 @@ impl FssdpEngine {
             plans.push(build_iter_plan(&self.topo, &ls.shards, &ls.predictor.predict(), cons)?);
         }
 
+        // Split the engine into disjoint field borrows: the expert loops
+        // read the parameter stores while the compute backend and the
+        // workspace are borrowed mutably — disjoint by field.
+        let FssdpEngine { topo, layers, compute, workspace: ws, phases, .. } = self;
+        let topo: &Topology = topo;
+        ws.ensure_shape(nl, sources, &dims);
+        let pool_allocs0 = ws.pool.allocated;
+
         // ---- forward sweep ----
-        let mut acts: Vec<Vec<f32>> = (0..sources).map(|s| batch_for(&dims, iter, s)).collect();
-        // inputs of the inner layers, kept for the backward re-pack
-        let mut acts_stack: Vec<Vec<Vec<f32>>> = Vec::with_capacity(nl.saturating_sub(1));
+        for s in 0..sources {
+            batch_into(&dims, iter, s, &mut ws.acts_stack[0][s]);
+        }
         let mut all_routes: Vec<Routes> = Vec::with_capacity(nl);
         let mut grads_stack: Vec<ClusterMem> = Vec::with_capacity(nl);
-        // cotangent of the current layer's input activations (backward)
-        let mut g: Vec<Vec<f32>> = Vec::new();
         let inv_t = 1.0f32 / (dims.tokens * sources) as f32;
         let mut loss = 0.0f64;
 
@@ -687,90 +1069,158 @@ impl FssdpEngine {
             let last = l + 1 == nl;
             let plan = &plans[l];
             stats.spag_sparsity += plan.spag.sparsity;
-            stats.replicas += plan.placement.len() - self.layers[l].shards.len();
+            stats.replicas += plan.placement.len() - layers[l].shards.len();
 
             // materialization phase: Algorithm 1 plan → spAG on the buffers
-            run_spag(&mut self.layers[l].params, &plan.spag)?;
+            let t0 = Instant::now();
+            run_spag_pooled(&mut layers[l].params, &plan.spag, &mut ws.pool)?;
+            phases.materialize += t0.elapsed();
 
-            // gate per source on this layer's input activations
-            let gate_wt =
-                HostTensor::f32(vec![dims.d_model, dims.experts], self.layers[l].gate_w.clone());
-            let mut gate_w_out: Vec<Vec<f32>> = Vec::with_capacity(sources);
-            let mut gate_idx: Vec<Vec<i32>> = Vec::with_capacity(sources);
-            for x in acts.iter() {
-                let xt = HostTensor::f32(vec![dims.tokens, dims.d_model], x.clone());
-                let out = self.compute.execute("gate_fwd", &[xt, gate_wt.clone()])?;
-                gate_w_out.push(out[1].as_f32()?.to_vec());
-                gate_idx.push(out[2].as_i32()?.to_vec());
+            // gate per source on this layer's input activations (borrowed
+            // weights and activations, reused output buffers)
+            let t0 = Instant::now();
+            for s in 0..sources {
+                compute.gate_fwd_into(
+                    &ws.acts_stack[l][s],
+                    &layers[l].gate_w,
+                    dims.tokens,
+                    dims.d_model,
+                    dims.experts,
+                    &mut ws.key.kernel,
+                    &mut ws.gate_w_out[s],
+                    &mut ws.gate_idx[s],
+                )?;
             }
             // realized loads feed this layer's predictor for the NEXT iter
-            let realized = realized_loads(dims.experts, &gate_idx);
-            self.layers[l].predictor.observe(&realized);
+            let realized = realized_loads(dims.experts, &ws.gate_idx);
+            layers[l].predictor.observe(&realized);
+            phases.gate += t0.elapsed();
 
             // dispatch (L3) stats
-            let asg = assignment_matrix(nd, dims.experts, &gate_idx);
-            let dplan = dispatch(&self.topo, &plan.placement, &asg);
+            let asg = assignment_matrix(nd, dims.experts, &ws.gate_idx);
+            let dplan = dispatch(topo, &plan.placement, &asg);
             stats.remote_tokens += dplan.remote_tokens();
             stats.straggler += crate::util::stats::straggler_factor(
                 &dplan.device_compute_tokens().iter().map(|&t| t as f64).collect::<Vec<_>>(),
             );
 
-            let routes =
-                routes_from_gates(&self.topo, &plan.placement, nd, dims.experts, &gate_idx, &gate_w_out);
+            let routes = routes_from_gates(
+                topo,
+                &plan.placement,
+                nd,
+                dims.experts,
+                &ws.gate_idx,
+                &ws.gate_w_out,
+            );
 
             // grads cluster-mem mirrors the materialized placement, zeroed
+            // buffers drawn from the workspace pool
             let mut grads = ClusterMem::new(nd);
             for e in 0..dims.experts {
                 for d in plan.placement.holders(e) {
-                    grads.dev_mut(d).insert(e, vec![0.0f32; dims.chunk_len()]);
+                    grads.dev_mut(d).insert(e, ws.pool.take_zeroed(dims.chunk_len()));
                 }
             }
 
+            let t0 = Instant::now();
             if last {
                 // fused fwd + loss + bwd (the seed single-layer body);
                 // gx seeds the backward sweep of the layers below
-                let mut gx_acc = if nl > 1 { zero_acts(sources, &dims) } else { Vec::new() };
-                for (&(dev, e), toks) in &routes {
-                    let chunk = self
-                        .layers[l]
-                        .params
-                        .dev(DeviceId(dev))
-                        .get(e)
-                        .ok_or_else(|| anyhow::anyhow!("device {dev} lacks expert {e}"))?
-                        .to_vec();
-                    let acc = grads.dev_mut(DeviceId(dev)).get_mut(e).unwrap();
-                    let (lo, gx) = compute_expert_key(
-                        &mut self.compute,
+                let want_gx = nl > 1;
+                if want_gx {
+                    zero_bufs(&mut ws.g);
+                }
+                if use_threads {
+                    let outs = expert_keys_threaded(
+                        threads,
                         &dims,
-                        &chunk,
-                        toks,
-                        &acts,
-                        inv_t,
-                        acc,
-                        nl > 1,
+                        &layers[l].params,
+                        &routes,
+                        &ws.acts_stack[l],
+                        KeyMode::FusedLast { inv_t, want_gx },
                     )?;
-                    loss += lo;
-                    if nl > 1 {
-                        scatter_rows(&dims, toks, &gx, &mut gx_acc);
+                    for ((dev, e), out) in outs {
+                        loss += out.loss;
+                        let acc = grads
+                            .dev_mut(DeviceId(dev))
+                            .get_mut(e)
+                            .expect("grads cover the placement");
+                        acc.copy_from_slice(&out.grad);
+                        if want_gx {
+                            let toks = routes.get(&(dev, e)).expect("key from this map");
+                            scatter_rows(&dims, toks, &out.rows, &mut ws.g);
+                        }
+                    }
+                } else {
+                    for (&(dev, e), toks) in &routes {
+                        let chunk = layers[l]
+                            .params
+                            .dev(DeviceId(dev))
+                            .get(e)
+                            .ok_or_else(|| anyhow::anyhow!("device {dev} lacks expert {e}"))?;
+                        let acc = grads
+                            .dev_mut(DeviceId(dev))
+                            .get_mut(e)
+                            .expect("grads cover the placement");
+                        let lo = compute_expert_key(
+                            compute,
+                            &dims,
+                            chunk,
+                            toks,
+                            &ws.acts_stack[l],
+                            inv_t,
+                            acc,
+                            want_gx,
+                            &mut ws.key,
+                            &mut ws.rows,
+                        )?;
+                        loss += lo;
+                        if want_gx {
+                            scatter_rows(&dims, toks, &ws.rows, &mut ws.g);
+                        }
                     }
                 }
-                g = gx_acc;
             } else {
-                // inner layer: forward + combine into the next activations
-                let mut next = zero_acts(sources, &dims);
-                for (&(dev, e), toks) in &routes {
-                    let chunk = self
-                        .layers[l]
-                        .params
-                        .dev(DeviceId(dev))
-                        .get(e)
-                        .ok_or_else(|| anyhow::anyhow!("device {dev} lacks expert {e}"))?
-                        .to_vec();
-                    let rows = forward_expert_rows(&mut self.compute, &dims, &chunk, toks, &acts)?;
-                    scatter_rows(&dims, toks, &rows, &mut next);
+                // inner layer: forward + combine into the next layer's
+                // input activations (disjoint halves of the acts stack)
+                let (lo_acts, hi_acts) = ws.acts_stack.split_at_mut(l + 1);
+                let acts = &lo_acts[l];
+                let next = &mut hi_acts[0];
+                zero_bufs(next);
+                if use_threads {
+                    let outs = expert_keys_threaded(
+                        threads,
+                        &dims,
+                        &layers[l].params,
+                        &routes,
+                        acts,
+                        KeyMode::Forward,
+                    )?;
+                    for ((dev, e), out) in outs {
+                        let toks = routes.get(&(dev, e)).expect("key from this map");
+                        scatter_rows(&dims, toks, &out.rows, next);
+                    }
+                } else {
+                    for (&(dev, e), toks) in &routes {
+                        let chunk = layers[l]
+                            .params
+                            .dev(DeviceId(dev))
+                            .get(e)
+                            .ok_or_else(|| anyhow::anyhow!("device {dev} lacks expert {e}"))?;
+                        forward_expert_rows(
+                            compute,
+                            &dims,
+                            chunk,
+                            toks,
+                            acts,
+                            &mut ws.key,
+                            &mut ws.rows,
+                        )?;
+                        scatter_rows(&dims, toks, &ws.rows, next);
+                    }
                 }
-                acts_stack.push(std::mem::replace(&mut acts, next));
             }
+            phases.expert_fwd += t0.elapsed();
             all_routes.push(routes);
             grads_stack.push(grads);
         }
@@ -782,61 +1232,100 @@ impl FssdpEngine {
         // the last layer's grads are complete) → spRS → Adam → release ----
         for l in (0..nl).rev() {
             if l + 1 < nl {
+                let t0 = Instant::now();
                 let routes = &all_routes[l];
-                let mut g_prev = if l > 0 { zero_acts(sources, &dims) } else { Vec::new() };
-                for (&(dev, e), toks) in routes {
-                    let chunk = self
-                        .layers[l]
-                        .params
-                        .dev(DeviceId(dev))
-                        .get(e)
-                        .ok_or_else(|| anyhow::anyhow!("device {dev} lost expert {e} before bwd"))?
-                        .to_vec();
-                    let acc = grads_stack[l].dev_mut(DeviceId(dev)).get_mut(e).unwrap();
-                    let gx = backward_expert_key(
-                        &mut self.compute,
+                if l > 0 {
+                    zero_bufs(&mut ws.g_prev);
+                }
+                if use_threads {
+                    let outs = expert_keys_threaded(
+                        threads,
                         &dims,
-                        &chunk,
-                        toks,
-                        &acts_stack[l],
-                        &g,
-                        acc,
+                        &layers[l].params,
+                        routes,
+                        &ws.acts_stack[l],
+                        KeyMode::Backward { g: &ws.g },
                     )?;
-                    if l > 0 {
-                        scatter_rows(&dims, toks, &gx, &mut g_prev);
+                    for ((dev, e), out) in outs {
+                        let acc = grads_stack[l]
+                            .dev_mut(DeviceId(dev))
+                            .get_mut(e)
+                            .expect("grads cover the placement");
+                        acc.copy_from_slice(&out.grad);
+                        if l > 0 {
+                            let toks = routes.get(&(dev, e)).expect("key from this map");
+                            scatter_rows(&dims, toks, &out.rows, &mut ws.g_prev);
+                        }
+                    }
+                } else {
+                    for (&(dev, e), toks) in routes {
+                        let chunk = layers[l]
+                            .params
+                            .dev(DeviceId(dev))
+                            .get(e)
+                            .ok_or_else(|| {
+                                anyhow::anyhow!("device {dev} lost expert {e} before bwd")
+                            })?;
+                        let acc = grads_stack[l]
+                            .dev_mut(DeviceId(dev))
+                            .get_mut(e)
+                            .expect("grads cover the placement");
+                        backward_expert_key(
+                            compute,
+                            &dims,
+                            chunk,
+                            toks,
+                            &ws.acts_stack[l],
+                            &ws.g,
+                            acc,
+                            &mut ws.key,
+                            &mut ws.rows,
+                        )?;
+                        if l > 0 {
+                            scatter_rows(&dims, toks, &ws.rows, &mut ws.g_prev);
+                        }
                     }
                 }
-                g = g_prev;
+                if l > 0 {
+                    std::mem::swap(&mut ws.g, &mut ws.g_prev);
+                }
+                phases.expert_bwd += t0.elapsed();
             }
 
             // spRS: reduce this layer's gradients to the shard owners
-            run_sprs(&mut grads_stack[l], &plans[l].sprs, &self.layers[l].shards)?;
+            let t0 = Instant::now();
+            run_sprs_pooled(&mut grads_stack[l], &plans[l].sprs, &layers[l].shards, &mut ws.pool)?;
+            phases.sprs += t0.elapsed();
 
             // optimizer step on owners; release materialized replicas
-            let layer = &mut self.layers[l];
+            let t0 = Instant::now();
+            let layer = &mut layers[l];
             for e in 0..dims.experts {
-                let owner = layer.shards.holders(e).next().unwrap();
+                let owner = layer.shards.holders(e).next().expect("partition has a holder");
                 let grad = grads_stack[l]
                     .dev(owner)
                     .get(e)
-                    .ok_or_else(|| anyhow::anyhow!("owner of {e} lost its gradient"))?
-                    .to_vec();
-                let p = layer.params.dev_mut(owner).get_mut(e).unwrap();
-                layer.opt.get_mut(&e).unwrap().update(&self.adam, p, &grad);
+                    .ok_or_else(|| anyhow::anyhow!("owner of {e} lost its gradient"))?;
+                let p = layer.params.dev_mut(owner).get_mut(e).expect("owner holds its shard");
+                layer
+                    .opt
+                    .get_mut(&e)
+                    .expect("every expert has optimizer state")
+                    .update(&adam, p, grad);
             }
-            // re-materialization: drop non-shard replicas (memory reuse, §4)
+            // re-materialization: drop non-shard replicas (memory reuse,
+            // §4), recycling their buffers for the next iteration
             for d in 0..nd {
                 let dev = DeviceId(d);
-                let resident: Vec<usize> = layer.params.dev(dev).chunks().collect();
-                for e in resident {
-                    if !layer.shards.contains(e, dev) {
-                        layer.params.dev_mut(dev).remove(e);
-                    }
-                }
+                let shards = &layer.shards;
+                layer.params.dev_mut(dev).retain_chunks(|c| shards.contains(c, dev), &mut ws.pool);
             }
+            // this layer's gradient buffers go back to the pool too
+            drain_cluster_into_pool(&mut grads_stack[l], &mut ws.pool);
+            phases.adam += t0.elapsed();
         }
-
-        let _ = &self.rng; // reserved for stochastic extensions
+        phases.steps += 1;
+        stats.ws_allocs = ws.pool.allocated - pool_allocs0;
         Ok(stats)
     }
 
@@ -1089,6 +1578,9 @@ impl FssdpEngine {
             reshards_moved: 0,
             reshard_events: Vec::new(),
             pacing: None,
+            compute_threads: 1,
+            workspace: StepWorkspace::default(),
+            phases: StepPhases::default(),
             rng: Rng::from_state(state.rng_state),
             spmd_metrics: None,
         };
@@ -1132,7 +1624,9 @@ pub fn reference_dims() -> LayerDims {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::testing::max_rel_err;
+    use crate::collectives::exec::{run_spag, run_sprs};
+    use crate::runtime::HostTensor;
+    use crate::testing::{all_chunks, max_rel_err};
 
     #[test]
     fn reference_engine_trains_and_matches_single_device() {
@@ -1141,7 +1635,7 @@ mod tests {
         let sources = 4;
         let dims = reference_dims();
         let run = |topo: Topology| -> Vec<Vec<f32>> {
-            let mut e = FssdpEngine::new_reference_layers(dims, topo, 7);
+            let mut e = FssdpEngine::new_reference_layers(dims, 1, topo, 7);
             for i in 0..3 {
                 e.step(i, sources).unwrap();
             }
@@ -1256,12 +1750,24 @@ mod tests {
         }
         let mut loss = 0.0f64;
         let inv_t = 1.0f32 / (dims.tokens * sources) as f32;
+        let mut scr = KeyScratch::default();
+        let mut rows = Vec::new();
         for (&(dev, x), toks) in &routes {
             let chunk = e.layers[0].params.dev(DeviceId(dev)).get(x).unwrap().to_vec();
             let acc = grads.dev_mut(DeviceId(dev)).get_mut(x).unwrap();
-            let (lo, _gx) =
-                compute_expert_key(&mut e.compute, &dims, &chunk, toks, &batches, inv_t, acc, false)
-                    .unwrap();
+            let lo = compute_expert_key(
+                &mut e.compute,
+                &dims,
+                &chunk,
+                toks,
+                &batches,
+                inv_t,
+                acc,
+                false,
+                &mut scr,
+                &mut rows,
+            )
+            .unwrap();
             loss += lo;
         }
         run_sprs(&mut grads, &plan.sprs, &e.layers[0].shards).unwrap();
@@ -1351,5 +1857,79 @@ mod tests {
                 assert_eq!(layer.experts[x].chunk.as_slice(), e.expert_chunk_at(l, x));
             }
         }
+    }
+
+    #[test]
+    fn threaded_expert_loop_is_bit_identical() {
+        // The scoped-thread split of the expert loops merges results in
+        // route order — parameters, Adam moments, and loss must be
+        // bit-identical to the in-line loop for any thread count.
+        let dims = reference_dims();
+        let run = |threads: usize| {
+            let mut e = FssdpEngine::new_reference_layers(dims, 3, Topology::cluster_a(2, 2), 17);
+            e.compute_threads = threads;
+            let stats: Vec<EngineStats> =
+                (0..3).map(|i| e.step(i, 4).unwrap()).collect();
+            let opt_bits: Vec<Vec<f32>> = (0..3)
+                .flat_map(|l| {
+                    (0..dims.experts).map(move |x| (l, x)).collect::<Vec<_>>()
+                })
+                .map(|(l, x)| e.layers[l].opt[&x].m.clone())
+                .collect();
+            (all_chunks(&e), opt_bits, stats)
+        };
+        let (c1, m1, s1) = run(1);
+        for threads in [2, 4, 7] {
+            let (ct, mt, st) = run(threads);
+            assert_eq!(c1, ct, "params must be bit-identical at {threads} threads");
+            assert_eq!(m1, mt, "Adam moments must be bit-identical at {threads} threads");
+            for (a, b) in s1.iter().zip(st.iter()) {
+                assert_eq!(
+                    a.loss.to_bits(),
+                    b.loss.to_bits(),
+                    "loss must be bit-identical at {threads} threads"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_allocations_stay_flat_across_a_span() {
+        // 1 device: the placement is constant, so after the first
+        // iteration every buffer request must be served from the pool —
+        // the regression lock on per-iteration allocation discipline.
+        let mut e =
+            FssdpEngine::new_reference_layers(reference_dims(), 2, Topology::flat(1, 1e9), 3);
+        let stats = e.run_span(0, 10, 4).unwrap();
+        assert!(stats[0].ws_allocs > 0, "first iteration must populate the pool");
+        for (i, s) in stats.iter().enumerate().skip(1) {
+            assert_eq!(s.ws_allocs, 0, "iteration {i} allocated {} fresh buffers", s.ws_allocs);
+        }
+        let ws = e.workspace_stats();
+        assert!(
+            ws.pool_reused > ws.pool_allocated,
+            "steady state must reuse: {ws:?}"
+        );
+
+        // multi-device: placements evolve with the load predictions, but
+        // the pool still absorbs the steady state — total fresh
+        // allocations stay bounded by the high-water mark while reuse
+        // keeps growing.
+        let mut e =
+            FssdpEngine::new_reference_layers(reference_dims(), 2, Topology::cluster_a(2, 2), 3);
+        e.run_span(0, 10, 4).unwrap();
+        let ws = e.workspace_stats();
+        assert!(ws.pool_reused > 2 * ws.pool_allocated, "cluster run must mostly reuse: {ws:?}");
+    }
+
+    #[test]
+    fn step_phase_timers_accumulate_and_drain() {
+        let mut e =
+            FssdpEngine::new_reference_layers(reference_dims(), 2, Topology::cluster_a(2, 2), 5);
+        e.run_span(0, 2, 4).unwrap();
+        let p = e.take_phases();
+        assert_eq!(p.steps, 2);
+        assert!(p.total() > Duration::ZERO, "phases must record wall clock");
+        assert_eq!(e.phases().steps, 0, "take_phases resets the accumulator");
     }
 }

@@ -39,7 +39,7 @@ use crate::metrics::Metrics;
 use crate::topology::Topology;
 
 use super::config::{Backend, ConfigError, SessionConfig};
-use super::{EngineStats, Executor, FssdpEngine};
+use super::{EngineStats, Executor, FssdpEngine, WorkspaceStats};
 
 /// Hooks fired by [`Session::run_observed`] as a run progresses. All
 /// methods default to no-ops; implement the ones you need and pass several
@@ -105,6 +105,12 @@ impl SpanCtx<'_> {
     /// Per-rank metrics of the span, when it ran on the SPMD executor.
     pub fn spmd_metrics(&self) -> Option<&Metrics> {
         self.engine.spmd_metrics()
+    }
+
+    /// Workspace allocation counters at this boundary (cumulative; flat
+    /// deltas across spans mean the hot path allocated nothing).
+    pub fn workspace_stats(&self) -> WorkspaceStats {
+        self.engine.workspace_stats()
     }
 }
 
@@ -234,6 +240,7 @@ impl Session {
     fn apply_tuning(engine: &mut FssdpEngine, cfg: &SessionConfig) {
         engine.executor = cfg.executor;
         engine.pacing = cfg.pacing;
+        engine.compute_threads = cfg.compute_threads;
         if let Some(m) = cfg.mem_slots {
             engine.mem_slots = m;
         }
@@ -420,12 +427,17 @@ impl StepObserver for PrintObserver {
 /// enough.
 #[derive(Debug, Default)]
 pub struct StatsCollector {
-    /// `(step, stats)` per iteration, in order.
+    /// `(step, stats)` per iteration, in order (each [`EngineStats`]
+    /// carries that iteration's fresh workspace allocations in
+    /// `ws_allocs`).
     pub steps: Vec<(u64, EngineStats)>,
     /// `(boundary_step, moved_experts)` per in-run re-shard.
     pub reshards: Vec<(u64, usize)>,
     /// Steps at which checkpoints were written.
     pub checkpoints: Vec<u64>,
+    /// `(boundary_step, counters)` per committed span — the cumulative
+    /// workspace pool counters at each span end.
+    pub workspace: Vec<(u64, WorkspaceStats)>,
 }
 
 impl StepObserver for StatsCollector {
@@ -439,6 +451,10 @@ impl StepObserver for StatsCollector {
 
     fn on_checkpoint(&mut self, step: u64, _info: &CheckpointInfo) {
         self.checkpoints.push(step);
+    }
+
+    fn on_span_end(&mut self, ctx: &SpanCtx<'_>) {
+        self.workspace.push((ctx.step(), ctx.workspace_stats()));
     }
 }
 
@@ -560,6 +576,39 @@ mod tests {
         assert!(same.finish(&mut []).unwrap().is_none());
         std::fs::remove_dir_all(&a).unwrap();
         std::fs::remove_dir_all(&b).unwrap();
+    }
+
+    #[test]
+    fn compute_threads_reach_the_engine_and_stay_bitwise() {
+        let mut a = Session::fresh(cfg().layers(2).data_shards(4).build().unwrap()).unwrap();
+        let mut b = Session::fresh(
+            cfg().layers(2).data_shards(4).compute_threads(3).build().unwrap(),
+        )
+        .unwrap();
+        assert_eq!(a.engine().compute_threads(), 1);
+        assert_eq!(b.engine().compute_threads(), 3);
+        a.run(2).unwrap();
+        b.run(2).unwrap();
+        assert_eq!(
+            all_chunks(a.engine()),
+            all_chunks(b.engine()),
+            "threaded expert loops must not change a single bit"
+        );
+    }
+
+    #[test]
+    fn collector_surfaces_workspace_counters() {
+        let mut s = Session::fresh(cfg().data_shards(4).build().unwrap()).unwrap();
+        let mut col = StatsCollector::default();
+        s.run_observed(3, &mut [&mut col]).unwrap();
+        assert_eq!(col.workspace.len(), 1, "one span, one counter snapshot");
+        let (step, ws) = col.workspace[0];
+        assert_eq!(step, 3);
+        assert!(ws.pool_allocated > 0, "the pool served the gradient buffers");
+        assert!(
+            col.steps.iter().any(|(_, st)| st.ws_allocs > 0),
+            "per-iteration allocation counts flow through on_step"
+        );
     }
 
     #[test]

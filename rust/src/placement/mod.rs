@@ -111,9 +111,17 @@ impl Placement {
         self.holders[c].binary_search(&d).is_ok()
     }
 
-    /// Chunks held by device `d`.
+    /// Chunks held by device `d`, without materializing a `Vec` — the hot
+    /// loops (per-rank gradient-buffer setup, release scans) iterate this
+    /// once per layer per iteration.
+    pub fn chunks_on_iter(&self, d: DeviceId) -> impl Iterator<Item = ChunkId> + '_ {
+        (0..self.num_chunks()).filter(move |&c| self.contains(c, d))
+    }
+
+    /// Chunks held by device `d`, collected (cold paths; prefer
+    /// [`Placement::chunks_on_iter`] in loops).
     pub fn chunks_on(&self, d: DeviceId) -> Vec<ChunkId> {
-        (0..self.num_chunks()).filter(|&c| self.contains(c, d)).collect()
+        self.chunks_on_iter(d).collect()
     }
 
     /// Number of chunks held by device `d` (its memory slots in use).
@@ -336,6 +344,17 @@ mod tests {
                 validate_sprs(post, base).map_err(|e| e.to_string())
             },
         );
+    }
+
+    #[test]
+    fn chunks_on_iter_matches_collected_form() {
+        let mut p = Placement::round_robin(10, 4);
+        p.add(7, DeviceId(1));
+        for d in 0..4 {
+            let dev = DeviceId(d);
+            assert_eq!(p.chunks_on_iter(dev).collect::<Vec<_>>(), p.chunks_on(dev));
+        }
+        assert_eq!(p.chunks_on_iter(DeviceId(1)).collect::<Vec<_>>(), vec![1, 5, 7, 9]);
     }
 
     #[test]

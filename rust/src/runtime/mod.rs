@@ -9,7 +9,7 @@
 
 pub mod tensor;
 
-pub use tensor::HostTensor;
+pub use tensor::{HostTensor, TensorView, TensorViewMut};
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

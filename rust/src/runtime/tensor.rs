@@ -1,5 +1,94 @@
 //! Host tensors: the CPU-side data the coordinator moves between the
-//! collectives (f32 buffers) and PJRT executables (Literals).
+//! collectives (f32 buffers) and PJRT executables (Literals), plus the
+//! borrowed [`TensorView`]/[`TensorViewMut`] types the zero-copy hot path
+//! is built on — shape metadata over a `[f32]` someone else owns, so the
+//! reference kernels can read parameter chunks and write activations
+//! without a single intermediate allocation.
+
+/// Borrowed row-major 2-D f32 tensor (vectors are `1 × n`). The shape is
+/// metadata only — no data is owned, cloned, or moved; a view is two
+/// `usize`s and a slice pointer.
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'a> {
+    rows: usize,
+    cols: usize,
+    data: &'a [f32],
+}
+
+impl<'a> TensorView<'a> {
+    /// View `data` as a `rows × cols` matrix. Panics on a shape/len
+    /// mismatch — a view never guesses.
+    pub fn new(rows: usize, cols: usize, data: &'a [f32]) -> TensorView<'a> {
+        assert_eq!(rows * cols, data.len(), "view shape {rows}x{cols} vs len {}", data.len());
+        TensorView { rows, cols, data }
+    }
+
+    /// View a slice as a row vector (`1 × n`).
+    pub fn vector(data: &'a [f32]) -> TensorView<'a> {
+        TensorView { rows: 1, cols: data.len(), data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The whole backing slice, row-major.
+    pub fn data(&self) -> &'a [f32] {
+        self.data
+    }
+
+    /// One row as a slice.
+    pub fn row(&self, r: usize) -> &'a [f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// Mutable counterpart of [`TensorView`]: shape metadata over a caller-
+/// provided output slice the kernels write into.
+#[derive(Debug)]
+pub struct TensorViewMut<'a> {
+    rows: usize,
+    cols: usize,
+    data: &'a mut [f32],
+}
+
+impl<'a> TensorViewMut<'a> {
+    /// View `data` as a mutable `rows × cols` matrix. Panics on a
+    /// shape/len mismatch.
+    pub fn new(rows: usize, cols: usize, data: &'a mut [f32]) -> TensorViewMut<'a> {
+        assert_eq!(rows * cols, data.len(), "view shape {rows}x{cols} vs len {}", data.len());
+        TensorViewMut { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut *self.data
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Reborrow as an immutable view.
+    pub fn as_view(&self) -> TensorView<'_> {
+        TensorView { rows: self.rows, cols: self.cols, data: &*self.data }
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+}
 
 /// Dense host tensor (f32 or i32), row-major.
 #[derive(Debug, Clone, PartialEq)]
@@ -68,6 +157,17 @@ impl HostTensor {
         match self {
             HostTensor::I32 { data, .. } => Ok(data),
             HostTensor::F32 { .. } => anyhow::bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Borrow a rank-1 or rank-2 f32 tensor as a [`TensorView`]
+    /// (rank-1 becomes a `1 × n` row vector).
+    pub fn view2(&self) -> anyhow::Result<TensorView<'_>> {
+        let data = self.as_f32()?;
+        match self.shape() {
+            [r, c] => Ok(TensorView::new(*r, *c, data)),
+            [n] => Ok(TensorView::new(1, *n, data)),
+            other => anyhow::bail!("view2: expected rank 1 or 2, got shape {other:?}"),
         }
     }
 
@@ -141,5 +241,47 @@ mod tests {
         let t = HostTensor::scalar_i32(5);
         let back = HostTensor::from_literal(t.to_literal().unwrap()).unwrap();
         assert_eq!(back.as_i32().unwrap(), &[5]);
+    }
+
+    #[test]
+    fn views_are_shape_metadata_over_the_same_slice() {
+        let data: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let v = TensorView::new(2, 3, &data);
+        assert_eq!(v.rows(), 2);
+        assert_eq!(v.cols(), 3);
+        assert_eq!(v.row(1), &[3.0, 4.0, 5.0]);
+        // same memory, not a copy
+        assert_eq!(v.data().as_ptr(), data.as_ptr());
+        let rv = TensorView::vector(&data);
+        assert_eq!((rv.rows(), rv.cols()), (1, 6));
+    }
+
+    #[test]
+    fn mut_views_write_through_to_the_owner() {
+        let mut data = vec![0.0f32; 4];
+        {
+            let mut v = TensorViewMut::new(2, 2, &mut data);
+            v.row_mut(1).copy_from_slice(&[7.0, 8.0]);
+            assert_eq!(v.as_view().row(1), &[7.0, 8.0]);
+            v.fill(1.0);
+        }
+        assert_eq!(data, vec![1.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "view shape")]
+    fn view_shape_mismatch_panics() {
+        TensorView::new(2, 4, &[0.0; 6]);
+    }
+
+    #[test]
+    fn host_tensor_view2() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        let v = t.view2().unwrap();
+        assert_eq!((v.rows(), v.cols()), (2, 3));
+        let r1 = HostTensor::f32(vec![4], vec![0.0; 4]);
+        assert_eq!(r1.view2().unwrap().rows(), 1);
+        assert!(HostTensor::scalar_f32(1.0).view2().is_err());
+        assert!(HostTensor::i32(vec![2], vec![1, 2]).view2().is_err());
     }
 }

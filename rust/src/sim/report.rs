@@ -4,6 +4,7 @@
 
 use crate::checkpoint::faults::{recover, FaultSpec};
 use crate::config::{ClusterPreset, ModelConfig, SystemConfig, SystemKind, TrainConfig};
+use crate::fssdp::StepPhases;
 use crate::loadsim::ModelLoadTrace;
 use crate::metrics::Table;
 use crate::sim::engine::{simulate, SimOptions, SimResult};
@@ -498,6 +499,174 @@ pub fn spmd_overlap(iters: usize, quick: bool) -> anyhow::Result<Table> {
         let off = run(false)?;
         let on = run(true)?;
         t.row(vec![nl.to_string(), ms(off), ms(on), fmt(off / on.max(1e-12))]);
+    }
+    Ok(t)
+}
+
+/// Per-phase deltas between two cumulative [`StepPhases`] samples
+/// (monotone accumulation, so `b >= a` component-wise).
+fn phase_delta(a: StepPhases, b: StepPhases) -> StepPhases {
+    StepPhases {
+        materialize: b.materialize - a.materialize,
+        gate: b.gate - a.gate,
+        expert_fwd: b.expert_fwd - a.expert_fwd,
+        expert_bwd: b.expert_bwd - a.expert_bwd,
+        sprs: b.sprs - a.sprs,
+        adam: b.adam - a.adam,
+        steps: b.steps - a.steps,
+    }
+}
+
+/// `hecate bench step`: the reference-backend 8-device, 3-layer training
+/// step timed end-to-end and per phase (materialize/spAG, gate, expert
+/// fwd, expert bwd, spRS, Adam+release) — the zero-copy hot path's
+/// acceptance benchmark. Measures the in-line expert loop and, when
+/// `compute_threads > 1`, the scoped-thread split next to it (bit-identical
+/// results, different wall clock). With `write_json`, writes
+/// `BENCH_runtime_step.json` in the working directory so CI can track the
+/// perf trajectory as an artifact; an existing `baseline` entry in that
+/// file is preserved so before/after stays visible across runs.
+pub fn bench_step(
+    iters: usize,
+    quick: bool,
+    compute_threads: usize,
+    write_json: bool,
+) -> anyhow::Result<Table> {
+    use crate::fssdp::{reference_dims, LayerDims, Session, SessionConfig, WorkspaceStats};
+    use crate::util::json::{obj, Json};
+    use std::time::Instant;
+
+    let dims = if quick {
+        reference_dims()
+    } else {
+        // big enough that expert compute and buffer traffic both matter
+        LayerDims { tokens: 64, d_model: 48, d_ffn: 96, experts: 8, cap: 32 }
+    };
+    let iters = iters.max(1);
+    let layers = 3usize;
+
+    let measure = |threads: usize| -> anyhow::Result<(f64, StepPhases, WorkspaceStats)> {
+        let mut s = Session::fresh(
+            SessionConfig::builder()
+                .reference()
+                .dims(dims)
+                .topology(Topology::cluster_a(2, 4))
+                .layers(layers)
+                .seed(5)
+                .data_shards(8)
+                .compute_threads(threads)
+                .build()?,
+        )?;
+        s.run(2)?; // warm the workspace, pool, and predictors
+        let p0 = s.engine().phases();
+        let t0 = Instant::now();
+        s.run(iters)?;
+        let wall = t0.elapsed().as_secs_f64() / iters as f64;
+        let phases = phase_delta(p0, s.engine().phases());
+        Ok((wall, phases, s.engine().workspace_stats()))
+    };
+
+    let per_iter = |d: std::time::Duration| d.as_secs_f64() / iters as f64;
+    let mut t = Table::new(&[
+        "variant",
+        "step_ms",
+        "materialize_ms",
+        "gate_ms",
+        "expert_fwd_ms",
+        "expert_bwd_ms",
+        "sprs_ms",
+        "adam_ms",
+    ]);
+    let (seq_wall, seq_phases, seq_ws) = measure(1)?;
+    t.row(vec![
+        "sequential".into(),
+        ms(seq_wall),
+        ms(per_iter(seq_phases.materialize)),
+        ms(per_iter(seq_phases.gate)),
+        ms(per_iter(seq_phases.expert_fwd)),
+        ms(per_iter(seq_phases.expert_bwd)),
+        ms(per_iter(seq_phases.sprs)),
+        ms(per_iter(seq_phases.adam)),
+    ]);
+    let mut thr: Option<(f64, StepPhases)> = None;
+    if compute_threads > 1 {
+        let (w, p, _) = measure(compute_threads)?;
+        t.row(vec![
+            format!("threads={compute_threads}"),
+            ms(w),
+            ms(per_iter(p.materialize)),
+            ms(per_iter(p.gate)),
+            ms(per_iter(p.expert_fwd)),
+            ms(per_iter(p.expert_bwd)),
+            ms(per_iter(p.sprs)),
+            ms(per_iter(p.adam)),
+        ]);
+        thr = Some((w, p));
+    }
+
+    if write_json {
+        let path = "BENCH_runtime_step.json";
+        // keep a committed/previous baseline entry visible across runs
+        let baseline = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|j| j.get("baseline").cloned())
+            .unwrap_or(Json::Null);
+        let phases_json = |p: &StepPhases| {
+            obj([
+                ("materialize", Json::num(per_iter(p.materialize) * 1e3)),
+                ("gate", Json::num(per_iter(p.gate) * 1e3)),
+                ("expert_fwd", Json::num(per_iter(p.expert_fwd) * 1e3)),
+                ("expert_bwd", Json::num(per_iter(p.expert_bwd) * 1e3)),
+                ("sprs", Json::num(per_iter(p.sprs) * 1e3)),
+                ("adam", Json::num(per_iter(p.adam) * 1e3)),
+            ])
+        };
+        let doc = obj([
+            ("bench", Json::Str("runtime_step".into())),
+            (
+                "config",
+                obj([
+                    ("devices", Json::num(8.0)),
+                    ("layers", Json::num(layers as f64)),
+                    ("tokens", Json::num(dims.tokens as f64)),
+                    ("d_model", Json::num(dims.d_model as f64)),
+                    ("d_ffn", Json::num(dims.d_ffn as f64)),
+                    ("experts", Json::num(dims.experts as f64)),
+                    ("cap", Json::num(dims.cap as f64)),
+                    ("iters", Json::num(iters as f64)),
+                    ("quick", Json::Bool(quick)),
+                ]),
+            ),
+            ("baseline", baseline),
+            (
+                "current",
+                obj([
+                    ("step_ms", Json::num(seq_wall * 1e3)),
+                    (
+                        "step_ms_threaded",
+                        thr.as_ref().map(|(w, _)| Json::num(w * 1e3)).unwrap_or(Json::Null),
+                    ),
+                    ("phases_ms", phases_json(&seq_phases)),
+                    (
+                        "workspace",
+                        obj([
+                            ("pool_allocated", Json::num(seq_ws.pool_allocated as f64)),
+                            ("pool_reused", Json::num(seq_ws.pool_reused as f64)),
+                        ]),
+                    ),
+                ]),
+            ),
+            (
+                "note",
+                Json::Str(
+                    "per-iteration milliseconds; regenerate with `hecate bench step --json`"
+                        .into(),
+                ),
+            ),
+        ]);
+        std::fs::write(path, doc.to_string_pretty())?;
+        println!("wrote {path}");
     }
     Ok(t)
 }

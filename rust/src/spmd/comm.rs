@@ -26,6 +26,7 @@
 //! NIC and the receiver's — so bottleneck-link contention (Eq. 1) is
 //! physically reproduced in wall-clock time rather than only predicted.
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Barrier, Mutex};
@@ -187,6 +188,20 @@ impl Pacer {
     }
 }
 
+/// Free-list of message payload buffers, per rank endpoint. Senders draw
+/// staging copies from it ([`RankComm::isend_slice`]) and receivers return
+/// consumed payloads ([`RankComm::recycle`]); since every rank both sends
+/// and receives each iteration, the lists reach a steady state and message
+/// traffic stops allocating. Interior mutability (`RefCell`) because sends
+/// happen under shared borrows of the endpoint; a `RankComm` is owned by
+/// exactly one rank thread, so there is no contention.
+#[derive(Debug, Default)]
+struct PayloadPool {
+    free: Vec<Vec<f32>>,
+    hits: u64,
+    misses: u64,
+}
+
 /// One rank's endpoint of the communicator.
 pub struct RankComm {
     pub me: usize,
@@ -197,6 +212,7 @@ pub struct RankComm {
     stash: Vec<VecDeque<Envelope>>,
     barrier: Arc<Barrier>,
     pacer: Option<Arc<Pacer>>,
+    pool: RefCell<PayloadPool>,
 }
 
 /// Build the full n×n mailbox fabric; element `r` is rank `r`'s endpoint.
@@ -227,6 +243,7 @@ pub fn fabric(n: usize, pacing: Option<Pacing>) -> Vec<RankComm> {
             stash: (0..n).map(|_| VecDeque::new()).collect(),
             barrier: Arc::clone(&barrier),
             pacer: pacer.clone(),
+            pool: RefCell::new(PayloadPool::default()),
         });
     }
     out
@@ -256,6 +273,44 @@ impl RankComm {
         self.tx[dst].send(Envelope { tag, data, ready_at }).map_err(|_| {
             anyhow::anyhow!("rank {}: link to rank {dst} closed (peer rank died)", self.me)
         })
+    }
+
+    /// [`RankComm::isend`] from a borrowed slice: the wire copy is staged
+    /// in a recycled payload buffer instead of a fresh allocation.
+    pub fn isend_slice(&self, dst: usize, tag: Tag, data: &[f32]) -> anyhow::Result<()> {
+        self.isend(dst, tag, self.payload_from(data))
+    }
+
+    /// Copy `data` into a buffer from the free list (fresh allocation only
+    /// when the list is empty).
+    fn payload_from(&self, data: &[f32]) -> Vec<f32> {
+        let mut p = self.pool.borrow_mut();
+        match p.free.pop() {
+            Some(mut b) => {
+                p.hits += 1;
+                b.clear();
+                b.extend_from_slice(data);
+                b
+            }
+            None => {
+                p.misses += 1;
+                data.to_vec()
+            }
+        }
+    }
+
+    /// Return a consumed message payload to the free list. Buffers that
+    /// crossed threads recycle into the *receiver's* list — fine, since
+    /// every rank both sends and receives, the lists self-balance.
+    pub fn recycle(&self, mut buf: Vec<f32>) {
+        buf.clear();
+        self.pool.borrow_mut().free.push(buf);
+    }
+
+    /// `(recycled, fresh)` payload-buffer counts of this endpoint.
+    pub fn payload_pool_stats(&self) -> (u64, u64) {
+        let p = self.pool.borrow();
+        (p.hits, p.misses)
     }
 
     /// Post a receive; complete it with [`RankComm::wait`] or
@@ -334,22 +389,24 @@ impl RankComm {
 
     /// Each rank contributes one buffer; returns all ranks' buffers
     /// indexed by rank. Tag disambiguation: `(iter, kind, layer, sender, 0)`.
+    /// Wire copies stage through the payload free list; callers should
+    /// [`RankComm::recycle`] the returned buffers once consumed.
     pub fn allgather(
         &mut self,
         iter: u64,
         kind: MsgKind,
         layer: usize,
-        mine: Vec<f32>,
+        mine: &[f32],
     ) -> anyhow::Result<Vec<Vec<f32>>> {
         for dst in 0..self.n {
             if dst != self.me {
-                self.isend(dst, Tag { iter, kind, layer, a: self.me, b: 0 }, mine.clone())?;
+                self.isend_slice(dst, Tag { iter, kind, layer, a: self.me, b: 0 }, mine)?;
             }
         }
         let mut out: Vec<Vec<f32>> = Vec::with_capacity(self.n);
         for src in 0..self.n {
             if src == self.me {
-                out.push(mine.clone());
+                out.push(self.payload_from(mine));
             } else {
                 out.push(self.recv(src, Tag { iter, kind, layer, a: src, b: 0 })?);
             }
@@ -457,7 +514,7 @@ mod tests {
                 thread::spawn(move || {
                     c.barrier();
                     let mine = vec![c.me as f32; c.me + 1];
-                    let all = c.allgather(9, MsgKind::Ctrl, 0, mine).unwrap();
+                    let all = c.allgather(9, MsgKind::Ctrl, 0, &mine).unwrap();
                     c.barrier();
                     all
                 })
@@ -470,6 +527,26 @@ mod tests {
                 assert_eq!(buf, &vec![r as f32; r + 1]);
             }
         }
+    }
+
+    #[test]
+    fn payload_pool_recycles_across_send_and_receive() {
+        let mut comms = fabric(2, None);
+        let mut c1 = comms.remove(1);
+        let c0 = comms.remove(0);
+        // first send allocates (miss), the recycled receive feeds the next
+        c0.isend_slice(1, tag(0, 0), &[1.0, 2.0]).unwrap();
+        let buf = c1.recv(0, tag(0, 0)).unwrap();
+        assert_eq!(buf, vec![1.0, 2.0]);
+        c1.recycle(buf);
+        c1.isend_slice(0, tag(0, 1), &[3.0]).unwrap();
+        let (hits, misses) = c1.payload_pool_stats();
+        assert_eq!((hits, misses), (1, 0), "recycled buffer must be reused");
+        let (_, m0) = c0.payload_pool_stats();
+        assert_eq!(m0, 1, "first send allocates once");
+        // payload correctness is untouched by recycling
+        let mut c0 = c0;
+        assert_eq!(c0.recv(1, tag(0, 1)).unwrap(), vec![3.0]);
     }
 
     #[test]

@@ -105,7 +105,7 @@ impl<'p> RankSpag<'p> {
                     continue;
                 }
                 if let Some(buf) = store.get(t.chunk) {
-                    comm.isend(t.dst.0, spag_tag(iter, layer, t), buf.to_vec())?;
+                    comm.isend_slice(t.dst.0, spag_tag(iter, layer, t), buf)?;
                 } else {
                     s.pending_send.push(ti);
                 }
@@ -193,8 +193,8 @@ impl<'p> RankSpag<'p> {
         while i < self.pending_send.len() {
             let t = self.plan.transfers[self.pending_send[i]];
             if t.chunk == chunk {
-                let buf = store.get(chunk).expect("chunk just inserted").to_vec();
-                comm.isend(t.dst.0, spag_tag(self.iter, self.layer, &t), buf)?;
+                let buf = store.get(chunk).expect("chunk just inserted");
+                comm.isend_slice(t.dst.0, spag_tag(self.iter, self.layer, &t), buf)?;
                 self.pending_send.remove(i);
             } else {
                 i += 1;
@@ -239,18 +239,15 @@ impl<'p> RankSprs<'p> {
         comm: &RankComm,
     ) -> anyhow::Result<()> {
         for t in self.plan.transfers.iter().filter(|t| t.stage == stage && t.src.0 == self.me) {
-            let buf = store
-                .get(t.chunk)
-                .ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "spRS rank {} layer {}: missing source chunk {}",
-                        self.me,
-                        self.layer,
-                        t.chunk
-                    )
-                })?
-                .to_vec();
-            comm.isend(t.dst.0, sprs_tag(self.iter, self.layer, t), buf)?;
+            let buf = store.get(t.chunk).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "spRS rank {} layer {}: missing source chunk {}",
+                    self.me,
+                    self.layer,
+                    t.chunk
+                )
+            })?;
+            comm.isend_slice(t.dst.0, sprs_tag(self.iter, self.layer, t), buf)?;
         }
         Ok(())
     }
@@ -302,16 +299,20 @@ impl<'p> RankSprs<'p> {
                     for (a, b) in acc.iter_mut().zip(buf.iter()) {
                         *a += b;
                     }
+                    comm.recycle(buf);
                 } else {
                     store.insert(t.chunk, buf);
                 }
             }
         }
-        // Scatter: release replicas not owned per the post-condition.
+        // Scatter: release replicas not owned per the post-condition,
+        // recycling the buffers into the payload free list.
         let resident: Vec<ChunkId> = store.chunks().collect();
         for c in resident {
             if !self.owners.contains(c, DeviceId(self.me)) {
-                store.remove(c);
+                if let Some(buf) = store.remove(c) {
+                    comm.recycle(buf);
+                }
             }
         }
         Ok(())

@@ -59,20 +59,19 @@ pub(crate) mod sched;
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use crate::collectives::exec::{ChunkStore, ClusterMem};
+use crate::collectives::exec::{BufferPool, ChunkStore, ClusterMem};
 use crate::dispatch::dispatch;
 use crate::fssdp::adam::{AdamCfg, AdamState};
 use crate::fssdp::compute::{Compute, Reference};
 use crate::fssdp::{
     assignment_matrix, backward_expert_key, batch_for, build_iter_plan, compute_expert_key,
     forward_expert_rows, realized_loads, routes_from_gates, scatter_rows, zero_acts,
-    EngineStats, FssdpEngine, IterPlan, LayerDims, Routes,
+    EngineStats, FssdpEngine, IterPlan, KeyScratch, LayerDims, Routes,
 };
 use crate::loadsim::LoadPredictor;
 use crate::materialize::MatConstraints;
 use crate::metrics::Metrics;
 use crate::placement::Placement;
-use crate::runtime::HostTensor;
 use crate::topology::{DeviceId, Topology};
 
 use comm::{MsgKind, RankComm};
@@ -318,7 +317,7 @@ fn exchange_rows(
     for rows in mine.values() {
         payload.extend_from_slice(rows);
     }
-    let gathered = comm.allgather(iter, kind, layer, payload)?;
+    let gathered = comm.allgather(iter, kind, layer, &payload)?;
     let mut out = zero_acts(sources, dims);
     for (dev, buf) in gathered.iter().enumerate() {
         if dev >= nd {
@@ -343,6 +342,9 @@ fn exchange_rows(
             buf.len() - off
         );
     }
+    for buf in gathered {
+        comm.recycle(buf);
+    }
     Ok(out)
 }
 
@@ -363,6 +365,7 @@ fn settle_layer(
     layer: &mut RankLayerState,
     ov: &mut Overlap,
     comm: &mut RankComm,
+    pool: &mut BufferPool,
     metrics: &mut Metrics,
 ) -> anyhow::Result<()> {
     let t0 = Instant::now();
@@ -370,31 +373,22 @@ fn settle_layer(
     metrics.add_duration("spmd.sprs", t0.elapsed());
 
     let t0 = Instant::now();
-    for e in 0..experts {
-        if !owners.contains(e, DeviceId(me)) {
-            continue;
-        }
-        let grad = grads
-            .get(e)
-            .ok_or_else(|| {
-                anyhow::anyhow!("owner {me} of expert {e} lost its gradient (layer {l})")
-            })?
-            .to_vec();
+    debug_assert_eq!(owners.num_chunks(), experts);
+    for e in owners.chunks_on_iter(DeviceId(me)) {
+        let grad = grads.get(e).ok_or_else(|| {
+            anyhow::anyhow!("owner {me} of expert {e} lost its gradient (layer {l})")
+        })?;
         let p = layer.store.get_mut(e).expect("owner holds its shard");
         let st = layer.opt.get_mut(&e).expect("owner holds the optimizer state");
-        st.update(adam, p, &grad);
+        st.update(adam, p, grad);
         let sent = ov.eager_issue(l, e, me, iter + 1, &layer.store, comm)?;
         metrics.add("spmd.eager_sends", sent as f64);
     }
     metrics.add_duration("spmd.adam", t0.elapsed());
 
-    // re-materialization: drop non-shard replicas (§4)
-    let resident: Vec<usize> = layer.store.chunks().collect();
-    for c in resident {
-        if !owners.contains(c, DeviceId(me)) {
-            layer.store.remove(c);
-        }
-    }
+    // re-materialization: drop non-shard replicas (§4), recycling their
+    // buffers through the rank's pool
+    layer.store.retain_chunks(|c| owners.contains(c, DeviceId(me)), pool);
     Ok(())
 }
 
@@ -424,6 +418,12 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
     let mut metrics = Metrics::new();
     let mut losses: Vec<f64> = Vec::with_capacity(iters);
     let mut global: Vec<GlobalStats> = Vec::new();
+    // Per-rank workspace, reused across the span's iterations and layers:
+    // kernel scratch for the gate/expert kernels and a buffer pool the
+    // gradient stores and released replicas cycle through.
+    let mut scr = KeyScratch::default();
+    let mut pool = BufferPool::new();
+    let mut gate_payload: Vec<f32> = Vec::new();
 
     for k in 0..iters {
         let iter = start + k as u64;
@@ -483,26 +483,32 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
 
             // ---- gate our sources on this layer's input; exchange ----
             let t0 = Instant::now();
-            let gate_wt =
-                HostTensor::f32(vec![dims.d_model, dims.experts], gate_w[l].clone());
             let mut gate_idx: Vec<Vec<i32>> = vec![Vec::new(); sources];
             let mut gate_w_out: Vec<Vec<f32>> = vec![Vec::new(); sources];
-            let mut payload: Vec<f32> = Vec::new();
+            gate_payload.clear();
             for (s, x) in acts.iter().enumerate() {
                 if s % nd != me {
                     continue;
                 }
-                let xt = HostTensor::f32(vec![dims.tokens, dims.d_model], x.clone());
-                let out = compute.execute("gate_fwd", &[xt, gate_wt.clone()])?;
-                let w = out[1].as_f32()?.to_vec();
-                let idx = out[2].as_i32()?.to_vec();
-                payload.push(s as f32);
-                payload.extend_from_slice(&w);
-                payload.extend(idx.iter().map(|&v| v as f32));
+                let mut w = Vec::new();
+                let mut idx = Vec::new();
+                compute.gate_fwd_into(
+                    x,
+                    &gate_w[l],
+                    dims.tokens,
+                    dims.d_model,
+                    dims.experts,
+                    &mut scr.kernel,
+                    &mut w,
+                    &mut idx,
+                )?;
+                gate_payload.push(s as f32);
+                gate_payload.extend_from_slice(&w);
+                gate_payload.extend(idx.iter().map(|&v| v as f32));
                 gate_w_out[s] = w;
                 gate_idx[s] = idx;
             }
-            let gathered = comm.allgather(iter, MsgKind::Gate, l, payload)?;
+            let gathered = comm.allgather(iter, MsgKind::Gate, l, &gate_payload)?;
             let rec = 1 + 4 * dims.tokens; // source id + 2T weights + 2T indices
             for (r, buf) in gathered.iter().enumerate() {
                 if r == me {
@@ -519,6 +525,9 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
                     gate_idx[s] =
                         record[1 + 2 * dims.tokens..].iter().map(|&v| v as i32).collect();
                 }
+            }
+            for buf in gathered {
+                comm.recycle(buf);
             }
             metrics.add_duration("spmd.gate", t0.elapsed());
 
@@ -565,10 +574,8 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
             // ---- expert compute on our route keys, shards-resident
             //      first; replicas are pulled as compute reaches them ----
             let mut grads = ChunkStore::new();
-            for e in 0..dims.experts {
-                if plans[l].placement.contains(e, DeviceId(me)) {
-                    grads.insert(e, vec![0.0f32; dims.chunk_len()]);
-                }
+            for e in plans[l].placement.chunks_on_iter(DeviceId(me)) {
+                grads.insert(e, pool.take_zeroed(dims.chunk_len()));
             }
             let my_keys: Vec<usize> =
                 routes.keys().filter(|(d, _)| *d == me).map(|(_, e)| *e).collect();
@@ -584,26 +591,38 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
                     metrics.add("spmd.lazy_chunks", 1.0);
                 }
                 let toks = routes.get(&(me, e)).expect("key from this map");
-                let chunk = layers[l].store.get(e).expect("ensured above").to_vec();
+                let chunk = layers[l].store.get(e).expect("ensured above");
                 let t0 = Instant::now();
                 if last_layer {
                     let acc = grads.get_mut(e).expect("grads cover the placement");
-                    let (lo, gx) = compute_expert_key(
+                    let mut gx = Vec::new();
+                    let lo = compute_expert_key(
                         &mut compute,
                         &dims,
-                        &chunk,
+                        chunk,
                         toks,
                         &acts,
                         inv_t,
                         acc,
                         nl > 1,
+                        &mut scr,
+                        &mut gx,
                     )?;
                     loss += lo;
                     if nl > 1 {
                         out_rows.insert(e, gx);
                     }
                 } else {
-                    let rows = forward_expert_rows(&mut compute, &dims, &chunk, toks, &acts)?;
+                    let mut rows = Vec::new();
+                    forward_expert_rows(
+                        &mut compute,
+                        &dims,
+                        chunk,
+                        toks,
+                        &acts,
+                        &mut scr,
+                        &mut rows,
+                    )?;
                     out_rows.insert(e, rows);
                 }
                 let d = t0.elapsed();
@@ -685,17 +704,20 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
                 for e in my_keys {
                     let toks = routes.get(&(me, e)).expect("key from this map");
                     let chunk =
-                        layers[l].store.get(e).expect("replicas live until their bwd").to_vec();
+                        layers[l].store.get(e).expect("replicas live until their bwd");
                     let acc = grads_stack[l].get_mut(e).expect("grads cover the placement");
                     let t0 = Instant::now();
-                    let gx = backward_expert_key(
+                    let mut gx = Vec::new();
+                    backward_expert_key(
                         &mut compute,
                         &dims,
-                        &chunk,
+                        chunk,
                         toks,
                         &acts_stack[l],
                         &g,
                         acc,
+                        &mut scr,
+                        &mut gx,
                     )?;
                     let d = t0.elapsed();
                     metrics.add_duration("spmd.compute", d);
@@ -750,6 +772,7 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
                         &mut layers[l + 1],
                         &mut ov,
                         &mut comm,
+                        &mut pool,
                         &mut metrics,
                     )?;
                 }
@@ -768,6 +791,7 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
                     &mut layers[l],
                     &mut ov,
                     &mut comm,
+                    &mut pool,
                     &mut metrics,
                 )?;
             }
@@ -786,10 +810,24 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
                 &mut layers[0],
                 &mut ov,
                 &mut comm,
+                &mut pool,
                 &mut metrics,
             )?;
         }
+        // iteration teardown: this iteration's gradient buffers go back to
+        // the rank's pool for the next iteration's stores
+        for grads in grads_stack.iter_mut() {
+            grads.retain_chunks(|_| false, &mut pool);
+        }
     }
+
+    // workspace counters: fresh pool allocations and payload recycling of
+    // this rank's span (summed across ranks by the metrics merge)
+    metrics.add("spmd.ws_allocs", pool.allocated as f64);
+    metrics.add("spmd.ws_reused", pool.reused as f64);
+    let (hits, misses) = comm.payload_pool_stats();
+    metrics.add("spmd.payload_reused", hits as f64);
+    metrics.add("spmd.payload_alloc", misses as f64);
 
     Ok(RankOut { layers, metrics, loss: losses, global })
 }

@@ -93,7 +93,7 @@ impl Overlap {
             let Some(buf) = store.get(e) else {
                 continue; // not resident here (fan-out source) — deferred
             };
-            comm.isend(
+            comm.isend_slice(
                 t.dst.0,
                 super::comm::Tag {
                     iter: next_iter,
@@ -102,7 +102,7 @@ impl Overlap {
                     a: t.chunk,
                     b: t.stage,
                 },
-                buf.to_vec(),
+                buf,
             )?;
             self.pre_issued.insert((layer, t.chunk, t.dst.0));
             sent += 1;
