@@ -8,8 +8,10 @@
 //! the end-to-end FSSDP training numerics run on.
 
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 use crate::placement::{ChunkId, Placement};
+use crate::telemetry::{Phase as TracePhase, TraceRecorder};
 use crate::topology::DeviceId;
 
 use super::sparse::SparsePlan;
@@ -187,6 +189,23 @@ pub fn run_spag_pooled(
     plan: &SparsePlan,
     pool: &mut BufferPool,
 ) -> anyhow::Result<()> {
+    run_spag_traced(mem, plan, pool, None, 0, 0)
+}
+
+/// [`run_spag_pooled`] with the telemetry seam: when a recorder is passed,
+/// the whole collective is recorded as one `spag_issue` span tagged
+/// `(iter, layer)`, `detail` = chunk copies executed. `None` costs one
+/// branch — nothing is allocated or timed into the recorder.
+pub fn run_spag_traced(
+    mem: &mut ClusterMem,
+    plan: &SparsePlan,
+    pool: &mut BufferPool,
+    tracer: Option<&mut TraceRecorder>,
+    iter: usize,
+    layer: usize,
+) -> anyhow::Result<()> {
+    let t0 = Instant::now();
+    let mut copies = 0u64;
     let mut payloads: Vec<(ChunkId, DeviceId, Vec<f32>)> = Vec::new();
     for stage in 0..plan.num_stages {
         // Collect the payloads first so intra-stage transfers all read the
@@ -199,9 +218,13 @@ pub fn run_spag_pooled(
             })?;
             payloads.push((t.chunk, t.dst, pool.take_copy(src)));
         }
+        copies += payloads.len() as u64;
         for (chunk, dst, buf) in payloads.drain(..) {
             mem.dev_mut(dst).insert(chunk, buf);
         }
+    }
+    if let Some(tr) = tracer {
+        tr.span_from(TracePhase::SpagIssue, iter, layer, t0, copies);
     }
     Ok(())
 }
@@ -224,6 +247,23 @@ pub fn run_sprs_pooled(
     owners: &Placement,
     pool: &mut BufferPool,
 ) -> anyhow::Result<()> {
+    run_sprs_traced(mem, plan, owners, pool, None, 0, 0)
+}
+
+/// [`run_sprs_pooled`] with the telemetry seam: when a recorder is passed,
+/// the whole collective is recorded as one `sprs_issue` span tagged
+/// `(iter, layer)`, `detail` = transfers executed (copies + reduces).
+pub fn run_sprs_traced(
+    mem: &mut ClusterMem,
+    plan: &SparsePlan,
+    owners: &Placement,
+    pool: &mut BufferPool,
+    tracer: Option<&mut TraceRecorder>,
+    iter: usize,
+    layer: usize,
+) -> anyhow::Result<()> {
+    let t0 = Instant::now();
+    let mut moved = 0u64;
     let mut payloads: Vec<(ChunkId, DeviceId, bool, Vec<f32>)> = Vec::new();
     for stage in 0..plan.num_stages {
         payloads.clear();
@@ -233,6 +273,7 @@ pub fn run_sprs_pooled(
             })?;
             payloads.push((t.chunk, t.dst, t.reduce, pool.take_copy(src)));
         }
+        moved += payloads.len() as u64;
         for (chunk, dst, reduce, buf) in payloads.drain(..) {
             let store = mem.dev_mut(dst);
             match (reduce, store.get_mut(chunk)) {
@@ -256,6 +297,9 @@ pub fn run_sprs_pooled(
     for d in 0..mem.devices.len() {
         let dev = DeviceId(d);
         mem.devices[d].retain_chunks(|c| owners.contains(c, dev), pool);
+    }
+    if let Some(tr) = tracer {
+        tr.span_from(TracePhase::SprsIssue, iter, layer, t0, moved);
     }
     Ok(())
 }
@@ -505,5 +549,45 @@ mod tests {
         }
         assert_eq!(pooled.placement(8), owners);
         assert!(pool.reused > 0, "the pool must actually recycle");
+    }
+
+    #[test]
+    fn traced_collectives_record_spans_and_match_untraced() {
+        let t = Topology::cluster_a(2, 2);
+        let owners = Placement::round_robin(8, 4);
+        let mut materialized = owners.clone();
+        let mut rng = Rng::new(21);
+        for _ in 0..6 {
+            materialized.add(rng.below(8), DeviceId(rng.below(4)));
+        }
+        let spag = build_spag(&t, &owners, &materialized).unwrap();
+        let sprs = build_sprs(&t, &materialized, &owners).unwrap();
+
+        let mut plain = ClusterMem::new(4);
+        fill(&mut plain, &owners, 16, &mut rng);
+        let mut traced = plain.clone();
+        let mut pool = BufferPool::new();
+        let mut tr = TraceRecorder::new(0);
+
+        run_spag(&mut plain, &spag).unwrap();
+        run_sprs(&mut plain, &sprs, &owners).unwrap();
+        run_spag_traced(&mut traced, &spag, &mut pool, Some(&mut tr), 3, 1).unwrap();
+        run_sprs_traced(&mut traced, &sprs, &owners, &mut pool, Some(&mut tr), 3, 1).unwrap();
+
+        for c in 0..8 {
+            let owner = owners.holders(c).next().unwrap();
+            assert_eq!(
+                traced.dev(owner).get(c).unwrap(),
+                plain.dev(owner).get(c).unwrap(),
+                "chunk {c}: tracing must not change the numbers"
+            );
+        }
+        let ev = tr.events();
+        assert_eq!(ev.len(), 2, "one span per collective");
+        assert_eq!(ev[0].phase, TracePhase::SpagIssue);
+        assert_eq!(ev[1].phase, TracePhase::SprsIssue);
+        assert!(ev.iter().all(|e| e.iter == 3 && e.layer == 1));
+        assert_eq!(ev[0].detail, spag.transfers.len() as u64);
+        assert_eq!(ev[1].detail, sprs.transfers.len() as u64);
     }
 }

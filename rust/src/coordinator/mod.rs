@@ -12,10 +12,13 @@
 //!                  [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR] [--reference]
 //!                  [--parallel [--threads N]] [--pacing a,b]   (SPMD executor)
 //!                  [--compute-threads T]       (sequential executor: threaded expert loops)
+//!                  [--trace-out DIR]           (per-rank Chrome trace + JSONL events)
 //! hecate checkpoint --dir DIR [--devices N --iters K]          (hermetic snapshot demo)
 //! hecate resume     --dir DIR [--devices M --iters K]          (elastic resume demo)
+//! hecate trace analyze DIR                    (critical path / overlap / stragglers)
 //! hecate bench spmd [--iters N --quick]       (thread scaling + cross-layer overlap)
 //! hecate bench step [--iters N --quick --json --compute-threads T]  (per-phase step times)
+//!                  [--check [--gate-tol F]]   (CI perf gate vs committed baseline)
 //! ```
 //!
 //! The `fssdp`/`checkpoint`/`resume` subcommands are thin shells over the
@@ -48,6 +51,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "fssdp" => cmd_fssdp(&args),
         "checkpoint" => cmd_checkpoint(&args),
         "resume" => cmd_resume(&args),
+        "trace" => cmd_trace(&args),
         "bench" => cmd_bench(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -73,12 +77,15 @@ fn print_usage() {
          [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR]\n                  \
          [--parallel [--threads N]]   (SPMD executor: one thread per rank)\n                  \
          [--pacing ALPHA,BETA]   (SPMD α–β link pacing: latency s, s/byte)\n                  \
-         [--compute-threads T]   (sequential executor: threaded expert loops, bit-identical)\n  \
+         [--compute-threads T]   (sequential executor: threaded expert loops, bit-identical)\n                  \
+         [--trace-out DIR]   (write per-rank Chrome trace + JSONL events to DIR)\n  \
          hecate checkpoint --dir DIR [--nodes N --devices N --layers L --iters K --seed S]\n  \
          hecate resume     --dir DIR [--nodes N --devices M --iters K]\n  \
+         hecate trace analyze DIR   (critical path, overlap efficiency, straggler report)\n  \
          hecate bench spmd [--iters N] [--quick]   (thread scaling + cross-layer overlap)\n  \
          hecate bench step [--iters N] [--quick] [--json] [--compute-threads T]\n                  \
-         (per-phase runtime-step times; --json writes BENCH_runtime_step.json)"
+         [--check [--gate-tol F]]   (per-phase step times; --json writes\n                  \
+         BENCH_runtime_step.json; --check gates on the committed baseline)"
     );
 }
 
@@ -263,7 +270,7 @@ fn cmd_fssdp(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&[
         "devices", "iters", "artifacts", "nodes", "seed", "layers", "reshard-every",
         "checkpoint-every", "checkpoint-dir", "resume", "reference", "parallel", "threads",
-        "pacing", "compute-threads",
+        "pacing", "compute-threads", "trace-out",
     ])?;
     let mut b = SessionConfig::builder()
         .cluster(args.usize_or("nodes", 2)?, args.usize_or("devices", 8)?)
@@ -293,6 +300,9 @@ fn cmd_fssdp(args: &Args) -> anyhow::Result<()> {
     if let Some(d) = args.str_opt("checkpoint-dir")? {
         b = b.checkpoint_dir(d);
     }
+    if let Some(d) = args.str_opt("trace-out")? {
+        b = b.trace_out(d);
+    }
     run_fssdp_session(b.build()?, args.str_opt("resume")?, args.usize_or("iters", 10)?)
 }
 
@@ -304,6 +314,7 @@ fn run_fssdp_session(
     resume: Option<String>,
     iters: usize,
 ) -> anyhow::Result<()> {
+    let trace_dir = cfg.telemetry().trace_dir.clone();
     println!(
         "FSSDP numeric engine on {} ({} devices)",
         cfg.topology().name,
@@ -351,7 +362,24 @@ fn run_fssdp_session(
     );
 
     let mut console = PrintObserver;
-    session.run_observed(iters, &mut [&mut console])?;
+    match trace_dir.as_deref() {
+        Some(dir) => {
+            let mut writer = crate::telemetry::TraceWriter::new(dir);
+            session.run_observed(iters, &mut [&mut console, &mut writer])?;
+            println!(
+                "trace: {} events -> {dir}/{{{}, {}}} (load {}/{} in Perfetto / \
+                 chrome://tracing; `hecate trace analyze {dir}` for the report)",
+                writer.exported(),
+                crate::telemetry::CHROME_TRACE_FILE,
+                crate::telemetry::EVENTS_FILE,
+                dir,
+                crate::telemetry::CHROME_TRACE_FILE,
+            );
+        }
+        None => {
+            session.run_observed(iters, &mut [&mut console])?;
+        }
+    }
     if session.reshards_moved() > 0 {
         println!("re-shards moved {} expert(s) in total", session.reshards_moved());
     }
@@ -401,13 +429,23 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             Ok(())
         }
         "step" => {
-            args.reject_unknown(&["iters", "quick", "target", "json", "compute-threads"])?;
+            args.reject_unknown(&[
+                "iters", "quick", "target", "json", "compute-threads", "check", "gate-tol",
+            ])?;
             let iters = args.usize_or("iters", 8)?;
             let quick = args.bool_or("quick", false)?;
             let threads = args.usize_or("compute-threads", 4)?;
             let json = args.bool_or("json", false)?;
+            let check = if args.bool_or("check", false)? {
+                Some(args.f64_or("gate-tol", 0.25)?)
+            } else {
+                None
+            };
+            if args.has("gate-tol") && check.is_none() {
+                anyhow::bail!("--gate-tol requires --check");
+            }
             println!("== Runtime step (reference backend, 8 devices x 3 layers): per-phase ==");
-            let t = report::bench_step(iters, quick, threads, json)?;
+            let t = report::bench_step(iters, quick, threads, json, check)?;
             print!("{}", t.to_markdown());
             Ok(())
         }
@@ -441,6 +479,32 @@ fn cmd_resume(args: &Args) -> anyhow::Result<()> {
         .cluster(args.usize_or("nodes", 1)?, args.usize_or("devices", 2)?)
         .build()?;
     run_fssdp_session(cfg, Some(dir), args.usize_or("iters", 4)?)
+}
+
+/// `hecate trace analyze DIR`: offline report over a `--trace-out`
+/// directory — per-step critical path, §4.3 overlap efficiency, and the
+/// per-rank straggler table.
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["dir"])?;
+    let action = args.positional.first().cloned().unwrap_or_default();
+    anyhow::ensure!(
+        action == "analyze",
+        "unknown trace action `{action}` (usage: hecate trace analyze DIR)"
+    );
+    let dir = args
+        .str_opt("dir")?
+        .or_else(|| args.positional.get(1).cloned())
+        .ok_or_else(|| {
+            anyhow::anyhow!("trace analyze expects a directory (--trace-out of a previous run)")
+        })?;
+    let a = crate::telemetry::analyze::analyze_dir(Path::new(&dir))?;
+    println!("== Trace analysis: {dir} ==");
+    println!("\n-- per-step critical path --");
+    print!("{}", a.steps_table().to_markdown());
+    println!("\n-- per-rank straggler report --");
+    print!("{}", a.straggler_table().to_markdown());
+    println!("\n{}", a.summary());
+    Ok(())
 }
 
 #[cfg(test)]
@@ -574,6 +638,49 @@ mod tests {
         run(argv(&["bench", "step", "--quick", "--iters", "1", "--compute-threads", "2"]))
             .unwrap();
         assert!(run(argv(&["bench", "step", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn bench_step_check_is_a_bootstrap_pass_without_baseline() {
+        // the committed BENCH_runtime_step.json has a null baseline, so
+        // the gate must pass (bootstrap) rather than fail the build; no
+        // --json, so nothing is written
+        run(argv(&[
+            "bench", "step", "--quick", "--iters", "1", "--compute-threads", "1", "--check",
+        ]))
+        .unwrap();
+        // --gate-tol only makes sense under --check
+        let err = run(argv(&["bench", "step", "--quick", "--gate-tol", "0.5"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--gate-tol requires --check"), "{err}");
+    }
+
+    #[test]
+    fn trace_out_writes_chrome_trace_and_analyze_reads_it() {
+        let dir = std::env::temp_dir()
+            .join(format!("hecate-coord-trace-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let d = dir.to_str().unwrap().to_string();
+        run(argv(&[
+            "fssdp", "--reference", "--parallel", "--devices", "4", "--nodes", "2",
+            "--layers", "2", "--iters", "2", "--trace-out", &d,
+        ]))
+        .unwrap();
+        let chrome = dir.join(crate::telemetry::CHROME_TRACE_FILE);
+        assert!(chrome.exists(), "missing {}", chrome.display());
+        assert!(dir.join(crate::telemetry::EVENTS_FILE).exists());
+        let text = std::fs::read_to_string(&chrome).unwrap();
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        assert!(!doc.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+        // both argument spellings of the analyzer work on the result
+        run(argv(&["trace", "analyze", &d])).unwrap();
+        run(argv(&["trace", "analyze", "--dir", &d])).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+        // a missing directory is a clear error, as is a bogus action
+        assert!(run(argv(&["trace", "analyze", &d])).is_err());
+        assert!(run(argv(&["trace", "export", &d])).is_err());
+        assert!(run(argv(&["trace"])).is_err());
     }
 
     #[test]

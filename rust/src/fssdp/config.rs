@@ -15,6 +15,7 @@ use std::fmt;
 use std::path::PathBuf;
 
 use crate::spmd::comm::Pacing;
+use crate::telemetry::TelemetryConfig;
 use crate::topology::Topology;
 
 use super::{reference_dims, Executor, LayerDims};
@@ -61,6 +62,8 @@ pub enum ConfigError {
     LayerCountMismatch { requested: usize, checkpoint: usize },
     /// `compute_threads == 0`.
     ZeroComputeThreads,
+    /// `--trace-out` with an empty/blank directory path.
+    TraceOutEmpty,
 }
 
 impl fmt::Display for ConfigError {
@@ -110,6 +113,9 @@ impl fmt::Display for ConfigError {
             ConfigError::ZeroComputeThreads => {
                 write!(f, "--compute-threads must be at least 1")
             }
+            ConfigError::TraceOutEmpty => {
+                write!(f, "--trace-out expects a non-empty directory path")
+            }
         }
     }
 }
@@ -156,6 +162,7 @@ pub struct SessionConfig {
     pub(crate) mem_slots: Option<usize>,
     pub(crate) overlap_degree: Option<usize>,
     pub(crate) compute_threads: usize,
+    pub(crate) telemetry: TelemetryConfig,
 }
 
 impl SessionConfig {
@@ -184,6 +191,11 @@ impl SessionConfig {
     pub fn checkpoint_every(&self) -> usize {
         self.checkpoint_every
     }
+
+    /// The telemetry configuration (tracing off by default).
+    pub fn telemetry(&self) -> &TelemetryConfig {
+        &self.telemetry
+    }
 }
 
 /// Builder for [`SessionConfig`]; all validation happens in
@@ -208,6 +220,7 @@ pub struct SessionConfigBuilder {
     mem_slots: Option<usize>,
     overlap_degree: Option<usize>,
     compute_threads: usize,
+    telemetry: TelemetryConfig,
 }
 
 impl Default for SessionConfigBuilder {
@@ -231,6 +244,7 @@ impl Default for SessionConfigBuilder {
             mem_slots: None,
             overlap_degree: None,
             compute_threads: 1,
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -373,6 +387,24 @@ impl SessionConfigBuilder {
         self
     }
 
+    /// Enable telemetry without file export: spans accumulate in memory
+    /// and are readable via `Session::trace_events`. Tracing is
+    /// observational only — traced runs stay bit-identical to untraced
+    /// ones on every executor.
+    pub fn trace(mut self, on: bool) -> Self {
+        self.telemetry.enabled = on;
+        self
+    }
+
+    /// Enable telemetry and export the trace into `dir` (`--trace-out`):
+    /// a Chrome-trace timeline plus a JSONL event stream, written at every
+    /// span boundary. Implies [`Self::trace`]`(true)`.
+    pub fn trace_out(mut self, dir: impl Into<String>) -> Self {
+        self.telemetry.enabled = true;
+        self.telemetry.trace_dir = Some(dir.into());
+        self
+    }
+
     /// Validate and freeze the configuration. Validation order matches the
     /// legacy CLI so the first error reported is unchanged.
     pub fn build(self) -> Result<SessionConfig, ConfigError> {
@@ -410,6 +442,11 @@ impl SessionConfigBuilder {
         if self.compute_threads == 0 {
             return Err(ConfigError::ZeroComputeThreads);
         }
+        if let Some(d) = &self.telemetry.trace_dir {
+            if d.trim().is_empty() {
+                return Err(ConfigError::TraceOutEmpty);
+            }
+        }
         let executor = if self.parallel {
             let threads = self.threads.unwrap_or(devices);
             if threads != devices {
@@ -437,6 +474,7 @@ impl SessionConfigBuilder {
             mem_slots: self.mem_slots,
             overlap_degree: self.overlap_degree,
             compute_threads: self.compute_threads,
+            telemetry: self.telemetry,
         })
     }
 }
@@ -571,6 +609,25 @@ mod tests {
     fn overlap_toggle_reaches_the_executor() {
         let cfg = base().cluster(1, 2).parallel(true).overlap(false).build().unwrap();
         assert_eq!(cfg.executor(), Executor::Spmd { threads: 2, overlap: false });
+    }
+
+    #[test]
+    fn empty_trace_out_error_string() {
+        let err = base().cluster(2, 4).trace_out("   ").build().unwrap_err();
+        assert_eq!(err, ConfigError::TraceOutEmpty);
+        assert_eq!(err.to_string(), "--trace-out expects a non-empty directory path");
+    }
+
+    #[test]
+    fn telemetry_flags_reach_the_config() {
+        let cfg = base().cluster(2, 4).build().unwrap();
+        assert!(!cfg.telemetry().enabled, "tracing is off by default");
+        let cfg = base().cluster(2, 4).trace(true).build().unwrap();
+        assert!(cfg.telemetry().enabled);
+        assert_eq!(cfg.telemetry().trace_dir, None);
+        let cfg = base().cluster(2, 4).trace_out("/tmp/trace").build().unwrap();
+        assert!(cfg.telemetry().enabled, "trace_out implies enabled");
+        assert_eq!(cfg.telemetry().trace_dir.as_deref(), Some("/tmp/trace"));
     }
 
     // ---- pacing parse ----

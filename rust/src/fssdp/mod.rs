@@ -56,7 +56,7 @@ use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use crate::checkpoint::{self, ExpertState, LayerCkpt, ReshardPlan, TrainState};
-use crate::collectives::exec::{run_spag_pooled, run_sprs_pooled, BufferPool, ClusterMem};
+use crate::collectives::exec::{run_spag_traced, run_sprs_traced, BufferPool, ClusterMem};
 use crate::collectives::sparse::{build_spag, build_sprs, SparsePlan};
 use crate::dispatch::dispatch;
 use crate::loadsim::LoadPredictor;
@@ -66,6 +66,7 @@ use crate::placement::Placement;
 use crate::runtime::Runtime;
 use crate::sharding::{self, ShardingPlan};
 use crate::spmd::comm::Pacing;
+use crate::telemetry::Phase as TracePhase;
 use crate::topology::{DeviceId, Topology};
 use crate::util::rng::Rng;
 
@@ -832,6 +833,10 @@ pub struct FssdpEngine {
     /// Per-rank metrics merged after the last SPMD span (None before the
     /// first parallel run).
     pub(crate) spmd_metrics: Option<Metrics>,
+    /// Telemetry recorder (rank 0 / sequential timeline). `None` when
+    /// tracing is disabled — every instrumentation site is then a single
+    /// branch on this option, allocating nothing.
+    pub(crate) tracer: Option<crate::telemetry::TraceRecorder>,
 }
 
 impl FssdpEngine {
@@ -928,6 +933,7 @@ impl FssdpEngine {
             phases: StepPhases::default(),
             rng,
             spmd_metrics: None,
+            tracer: None,
         }
     }
 
@@ -1051,7 +1057,7 @@ impl FssdpEngine {
         // Split the engine into disjoint field borrows: the expert loops
         // read the parameter stores while the compute backend and the
         // workspace are borrowed mutably — disjoint by field.
-        let FssdpEngine { topo, layers, compute, workspace: ws, phases, .. } = self;
+        let FssdpEngine { topo, layers, compute, workspace: ws, phases, tracer, .. } = self;
         let topo: &Topology = topo;
         ws.ensure_shape(nl, sources, &dims);
         let pool_allocs0 = ws.pool.allocated;
@@ -1073,8 +1079,18 @@ impl FssdpEngine {
 
             // materialization phase: Algorithm 1 plan → spAG on the buffers
             let t0 = Instant::now();
-            run_spag_pooled(&mut layers[l].params, &plan.spag, &mut ws.pool)?;
+            run_spag_traced(
+                &mut layers[l].params,
+                &plan.spag,
+                &mut ws.pool,
+                tracer.as_mut(),
+                iter as usize,
+                l,
+            )?;
             phases.materialize += t0.elapsed();
+            if let Some(tr) = tracer {
+                tr.span_from(TracePhase::Materialize, iter as usize, l, t0, 0);
+            }
 
             // gate per source on this layer's input activations (borrowed
             // weights and activations, reused output buffers)
@@ -1095,6 +1111,9 @@ impl FssdpEngine {
             let realized = realized_loads(dims.experts, &ws.gate_idx);
             layers[l].predictor.observe(&realized);
             phases.gate += t0.elapsed();
+            if let Some(tr) = tracer {
+                tr.span_from(TracePhase::Gate, iter as usize, l, t0, 0);
+            }
 
             // dispatch (L3) stats
             let asg = assignment_matrix(nd, dims.experts, &ws.gate_idx);
@@ -1221,6 +1240,10 @@ impl FssdpEngine {
                 }
             }
             phases.expert_fwd += t0.elapsed();
+            if let Some(tr) = tracer {
+                let rows: u64 = routes.values().map(|t| t.len() as u64).sum();
+                tr.span_from(TracePhase::ExpertFwd, iter as usize, l, t0, rows);
+            }
             all_routes.push(routes);
             grads_stack.push(grads);
         }
@@ -1290,12 +1313,26 @@ impl FssdpEngine {
                     std::mem::swap(&mut ws.g, &mut ws.g_prev);
                 }
                 phases.expert_bwd += t0.elapsed();
+                if let Some(tr) = tracer {
+                    tr.span_from(TracePhase::ExpertBwd, iter as usize, l, t0, 0);
+                }
             }
 
             // spRS: reduce this layer's gradients to the shard owners
             let t0 = Instant::now();
-            run_sprs_pooled(&mut grads_stack[l], &plans[l].sprs, &layers[l].shards, &mut ws.pool)?;
+            run_sprs_traced(
+                &mut grads_stack[l],
+                &plans[l].sprs,
+                &layers[l].shards,
+                &mut ws.pool,
+                tracer.as_mut(),
+                iter as usize,
+                l,
+            )?;
             phases.sprs += t0.elapsed();
+            if let Some(tr) = tracer {
+                tr.span_from(TracePhase::SprsWait, iter as usize, l, t0, 0);
+            }
 
             // optimizer step on owners; release materialized replicas
             let t0 = Instant::now();
@@ -1323,6 +1360,9 @@ impl FssdpEngine {
             // this layer's gradient buffers go back to the pool too
             drain_cluster_into_pool(&mut grads_stack[l], &mut ws.pool);
             phases.adam += t0.elapsed();
+            if let Some(tr) = tracer {
+                tr.span_from(TracePhase::Adam, iter as usize, l, t0, 0);
+            }
         }
         phases.steps += 1;
         stats.ws_allocs = ws.pool.allocated - pool_allocs0;
@@ -1403,9 +1443,18 @@ impl FssdpEngine {
             }
             step += span as u64;
             if step % k == 0 {
+                let t0 = Instant::now();
                 let moved = self.reshard_now();
+                if let Some(tr) = &mut self.tracer {
+                    tr.span_from(TracePhase::Reshard, step as usize, 0, t0, moved as u64);
+                }
                 self.reshard_events.push((step, moved));
-                crate::log_info!("re-shard @ step {step}: {moved} experts moved (Algorithm 2)");
+                crate::log_kv!(
+                    crate::util::logging::Level::Info,
+                    "reshard",
+                    step = step,
+                    moved = moved
+                );
             }
         }
         if let Some(acc) = &mut span_metrics {
@@ -1451,6 +1500,12 @@ impl FssdpEngine {
     /// engine has only run sequentially).
     pub fn spmd_metrics(&self) -> Option<&Metrics> {
         self.spmd_metrics.as_ref()
+    }
+
+    /// Telemetry events recorded so far, merged across ranks (None when
+    /// tracing is disabled).
+    pub fn trace_events(&self) -> Option<&[crate::telemetry::Event]> {
+        self.tracer.as_ref().map(|t| t.events())
     }
 
     /// Drain the `(boundary_step, moved)` re-shard events of the most
@@ -1583,6 +1638,7 @@ impl FssdpEngine {
             phases: StepPhases::default(),
             rng: Rng::from_state(state.rng_state),
             spmd_metrics: None,
+            tracer: None,
         };
         Ok((engine, plan))
     }
@@ -1920,6 +1976,32 @@ mod tests {
         e.run_span(0, 10, 4).unwrap();
         let ws = e.workspace_stats();
         assert!(ws.pool_reused > 2 * ws.pool_allocated, "cluster run must mostly reuse: {ws:?}");
+    }
+
+    #[test]
+    fn tracing_off_by_default_and_on_keeps_allocations_flat() {
+        // Telemetry defaults off: no recorder, no events, no overhead.
+        let mut e =
+            FssdpEngine::new_reference_layers(reference_dims(), 2, Topology::flat(1, 1e9), 3);
+        e.run_span(0, 3, 4).unwrap();
+        assert!(e.trace_events().is_none(), "tracing must be off unless requested");
+
+        // With a recorder installed, the numeric hot path still serves
+        // every buffer from the pool after warm-up — trace events live in
+        // the recorder's own vec, outside the workspace accounting.
+        let mut e =
+            FssdpEngine::new_reference_layers(reference_dims(), 2, Topology::flat(1, 1e9), 3);
+        e.tracer = Some(crate::telemetry::TraceRecorder::new(0));
+        let stats = e.run_span(0, 10, 4).unwrap();
+        for (i, s) in stats.iter().enumerate().skip(1) {
+            assert_eq!(s.ws_allocs, 0, "traced iteration {i} allocated {} buffers", s.ws_allocs);
+        }
+        let events = e.trace_events().expect("recorder installed");
+        // 2 layers × 10 iters: spag_issue/materialize/gate/expert_fwd +
+        // sprs_issue/sprs_wait/adam per layer, expert_bwd on the inner
+        // layer only — 15 spans per iteration.
+        assert_eq!(events.len(), 10 * (2 * 7 + 1), "sequential span event count");
+        assert!(events.iter().all(|ev| ev.rank == 0), "sequential events carry rank 0");
     }
 
     #[test]

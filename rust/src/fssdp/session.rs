@@ -112,6 +112,12 @@ impl SpanCtx<'_> {
     pub fn workspace_stats(&self) -> WorkspaceStats {
         self.engine.workspace_stats()
     }
+
+    /// All trace events recorded so far (cumulative across spans), when
+    /// telemetry is enabled. `None` when tracing is off.
+    pub fn trace_events(&self) -> Option<&[crate::telemetry::Event]> {
+        self.engine.trace_events()
+    }
 }
 
 /// What [`Session::resume`] restored: the checkpointed position plus the
@@ -247,6 +253,14 @@ impl Session {
         if let Some(o) = cfg.overlap_degree {
             engine.overlap_degree = o;
         }
+        // Telemetry off (the default) keeps the recorder absent: every
+        // instrumentation site reduces to one `Option` branch and the hot
+        // path allocates nothing extra.
+        engine.tracer = if cfg.telemetry.enabled {
+            Some(crate::telemetry::TraceRecorder::new(0))
+        } else {
+            None
+        };
     }
 
     /// Run `iters` iterations from the current step (no observers).
@@ -385,6 +399,12 @@ impl Session {
     /// Per-rank metrics merged over the most recent SPMD span.
     pub fn spmd_metrics(&self) -> Option<&Metrics> {
         self.engine.spmd_metrics()
+    }
+
+    /// All trace events recorded so far (cumulative), when telemetry is
+    /// enabled via the config. `None` with tracing off.
+    pub fn trace_events(&self) -> Option<&[crate::telemetry::Event]> {
+        self.engine.trace_events()
     }
 
     /// The elastic-resume summary (None on fresh sessions).

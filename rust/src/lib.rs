@@ -61,6 +61,7 @@ pub mod sharding;
 pub mod sim;
 pub mod spmd;
 pub mod systems;
+pub mod telemetry;
 pub mod testing;
 pub mod topology;
 pub mod train;

@@ -323,6 +323,7 @@ pub fn spmd_scaling(iters: usize, quick: bool) -> anyhow::Result<Table> {
     let iters = iters.max(1);
     let mut t = Table::new(&[
         "threads", "modeled_comm_ms", "seq_ms_per_iter", "spmd_ms_per_iter", "speedup",
+        "straggler_skew",
     ]);
     for &d in &[1usize, 2, 4, 8] {
         let topo =
@@ -336,7 +337,9 @@ pub fn spmd_scaling(iters: usize, quick: bool) -> anyhow::Result<Table> {
                 .seed(11)
                 .data_shards(d);
             if parallel {
-                b = b.parallel(true).threads(d);
+                // trace the SPMD run so the table can report realized
+                // per-rank compute skew next to the wall clock
+                b = b.parallel(true).threads(d).trace(true);
             }
             Session::fresh(b.build()?)
         };
@@ -363,12 +366,15 @@ pub fn spmd_scaling(iters: usize, quick: bool) -> anyhow::Result<Table> {
         let t0 = Instant::now();
         par.run(iters)?;
         let spmd = t0.elapsed().as_secs_f64() / iters as f64;
+        let skew =
+            crate::telemetry::analyze::analyze(par.trace_events().unwrap_or(&[])).max_skew();
         t.row(vec![
             d.to_string(),
             format!("{:.4}", modeled * 1e3),
             ms(seq),
             ms(spmd),
             fmt(seq / spmd.max(1e-12)),
+            format!("{skew:.2}"),
         ]);
     }
     Ok(t)
@@ -476,9 +482,13 @@ pub fn spmd_overlap(iters: usize, quick: bool) -> anyhow::Result<Table> {
     let pacing = Pacing::uniform(chunk_bytes / 400e-6, 20e-6);
     let mut t = Table::new(&[
         "layers", "overlap_off_ms_per_iter", "overlap_on_ms_per_iter", "speedup",
+        "overlap_eff_off_%", "overlap_eff_on_%",
     ]);
+    let pct = |eff: Option<f64>| eff.map(|p| format!("{p:.1}")).unwrap_or_else(|| "n/a".into());
     for &nl in &[1usize, 2, 3] {
-        let run = |overlap: bool| -> anyhow::Result<f64> {
+        // traced runs: the §4.3 overlap efficiency (fraction of paced wire
+        // time hidden under compute) lands next to the wall clock
+        let run = |overlap: bool| -> anyhow::Result<(f64, Option<f64>)> {
             let cfg = SessionConfig::builder()
                 .reference()
                 .dims(dims)
@@ -490,15 +500,26 @@ pub fn spmd_overlap(iters: usize, quick: bool) -> anyhow::Result<Table> {
                 .threads(4)
                 .overlap(overlap)
                 .pacing(pacing)
+                .trace(true)
                 .build()?;
             let mut s = Session::fresh(cfg)?;
             let t0 = Instant::now();
             s.run(iters)?;
-            Ok(t0.elapsed().as_secs_f64() / iters as f64)
+            let wall = t0.elapsed().as_secs_f64() / iters as f64;
+            let eff =
+                crate::telemetry::analyze::analyze(s.trace_events().unwrap_or(&[])).overlap_pct();
+            Ok((wall, eff))
         };
-        let off = run(false)?;
-        let on = run(true)?;
-        t.row(vec![nl.to_string(), ms(off), ms(on), fmt(off / on.max(1e-12))]);
+        let (off, eff_off) = run(false)?;
+        let (on, eff_on) = run(true)?;
+        t.row(vec![
+            nl.to_string(),
+            ms(off),
+            ms(on),
+            fmt(off / on.max(1e-12)),
+            pct(eff_off),
+            pct(eff_on),
+        ]);
     }
     Ok(t)
 }
@@ -525,12 +546,16 @@ fn phase_delta(a: StepPhases, b: StepPhases) -> StepPhases {
 /// results, different wall clock). With `write_json`, writes
 /// `BENCH_runtime_step.json` in the working directory so CI can track the
 /// perf trajectory as an artifact; an existing `baseline` entry in that
-/// file is preserved so before/after stays visible across runs.
+/// file is preserved so before/after stays visible across runs. With
+/// `check = Some(tolerance)`, the freshly measured sequential step time is
+/// run through [`perf_gate`] against that committed baseline and the call
+/// fails on a regression beyond the tolerance.
 pub fn bench_step(
     iters: usize,
     quick: bool,
     compute_threads: usize,
     write_json: bool,
+    check: Option<f64>,
 ) -> anyhow::Result<Table> {
     use crate::fssdp::{reference_dims, LayerDims, Session, SessionConfig, WorkspaceStats};
     use crate::util::json::{obj, Json};
@@ -604,14 +629,16 @@ pub fn bench_step(
         thr = Some((w, p));
     }
 
+    let path = "BENCH_runtime_step.json";
+    // keep a committed/previous baseline entry visible across runs — it is
+    // also what the perf gate compares against
+    let baseline = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .and_then(|j| j.get("baseline").cloned())
+        .unwrap_or(Json::Null);
+
     if write_json {
-        let path = "BENCH_runtime_step.json";
-        // keep a committed/previous baseline entry visible across runs
-        let baseline = std::fs::read_to_string(path)
-            .ok()
-            .and_then(|text| Json::parse(&text).ok())
-            .and_then(|j| j.get("baseline").cloned())
-            .unwrap_or(Json::Null);
         let phases_json = |p: &StepPhases| {
             obj([
                 ("materialize", Json::num(per_iter(p.materialize) * 1e3)),
@@ -638,7 +665,7 @@ pub fn bench_step(
                     ("quick", Json::Bool(quick)),
                 ]),
             ),
-            ("baseline", baseline),
+            ("baseline", baseline.clone()),
             (
                 "current",
                 obj([
@@ -660,15 +687,62 @@ pub fn bench_step(
             (
                 "note",
                 Json::Str(
-                    "per-iteration milliseconds; regenerate with `hecate bench step --json`"
+                    "per-iteration milliseconds; regenerate with `hecate bench step --json`; \
+                     `bench step --check` gates CI on baseline.step_ms (bootstrap-pass while \
+                     it is null — fill it from a toolchain host's current.step_ms to arm the \
+                     gate, default tolerance 25%, override with --gate-tol)"
                         .into(),
                 ),
             ),
         ]);
         std::fs::write(path, doc.to_string_pretty())?;
-        println!("wrote {path}");
+        crate::log_info!("wrote {path}");
+    }
+    if let Some(tolerance) = check {
+        println!("{}", perf_gate(&baseline, seq_wall * 1e3, tolerance)?);
     }
     Ok(t)
+}
+
+/// The CI perf gate: compare a freshly measured per-iteration step time
+/// (ms) against the committed `baseline.step_ms` of
+/// `BENCH_runtime_step.json`. A null/absent baseline is a **bootstrap
+/// pass** — the gate arms itself once a baseline is committed — and a
+/// regression beyond `tolerance` (fractional, e.g. 0.25 = +25%) is an
+/// error, which `hecate bench step --check` turns into a non-zero exit.
+pub fn perf_gate(
+    baseline: &crate::util::json::Json,
+    current_step_ms: f64,
+    tolerance: f64,
+) -> anyhow::Result<String> {
+    use crate::util::json::Json;
+    anyhow::ensure!(
+        tolerance >= 0.0 && tolerance.is_finite(),
+        "perf gate tolerance must be a non-negative fraction, got {tolerance}"
+    );
+    let base_ms = match baseline {
+        Json::Null => None,
+        j => j.get("step_ms").and_then(Json::as_f64),
+    };
+    let Some(base_ms) = base_ms else {
+        return Ok(format!(
+            "perf gate: no baseline step_ms recorded — bootstrap pass at {current_step_ms:.3} \
+             ms (commit a baseline in BENCH_runtime_step.json to arm the gate)"
+        ));
+    };
+    anyhow::ensure!(base_ms > 0.0, "perf gate baseline step_ms must be positive, got {base_ms}");
+    let limit = base_ms * (1.0 + tolerance);
+    anyhow::ensure!(
+        current_step_ms <= limit,
+        "perf gate FAILED: step {current_step_ms:.3} ms exceeds baseline {base_ms:.3} ms + \
+         {:.0}% tolerance (limit {limit:.3} ms)",
+        tolerance * 100.0
+    );
+    Ok(format!(
+        "perf gate OK: step {current_step_ms:.3} ms vs baseline {base_ms:.3} ms (limit \
+         {limit:.3} ms at {:.0}% tolerance)",
+        tolerance * 100.0
+    ))
 }
 
 /// §1 claims: EP imbalance slowdown; FlexMoE reserve-vs-speedup; SmartMoE
@@ -831,9 +905,11 @@ mod tests {
     fn spmd_scaling_smoke() {
         let t = spmd_scaling(1, true).unwrap();
         assert_eq!(t.header[1], "modeled_comm_ms");
+        assert_eq!(t.header[5], "straggler_skew");
         assert_eq!(t.rows.len(), 4);
         for row in &t.rows {
             assert!(row[4].parse::<f64>().unwrap() > 0.0, "speedup column: {row:?}");
+            assert!(row[5].parse::<f64>().unwrap() >= 1.0, "skew column: {row:?}");
         }
     }
 
@@ -841,9 +917,35 @@ mod tests {
     fn spmd_overlap_smoke() {
         let t = spmd_overlap(1, true).unwrap();
         assert_eq!(t.rows.len(), 3);
+        assert_eq!(t.header[5], "overlap_eff_on_%");
         for row in &t.rows {
             assert!(row[3].parse::<f64>().unwrap() > 0.0, "speedup column: {row:?}");
+            // paced links → wire time is recorded, so the efficiency
+            // columns must be defined percentages, not "n/a"
+            for eff in &row[4..6] {
+                let v = eff.parse::<f64>().unwrap();
+                assert!((0.0..=100.0).contains(&v), "efficiency column: {row:?}");
+            }
         }
+    }
+
+    #[test]
+    fn perf_gate_known_answers() {
+        use crate::util::json::{obj, Json};
+        // bootstrap: no baseline recorded yet
+        let msg = perf_gate(&Json::Null, 12.0, 0.25).unwrap();
+        assert!(msg.contains("bootstrap pass"), "{msg}");
+        // within tolerance passes, beyond it fails
+        let base = obj([("step_ms", Json::num(10.0))]);
+        assert!(perf_gate(&base, 12.4, 0.25).unwrap().contains("perf gate OK"));
+        let err = perf_gate(&base, 12.6, 0.25).unwrap_err().to_string();
+        assert!(err.contains("perf gate FAILED"), "{err}");
+        assert!(err.contains("limit 12.500"), "{err}");
+        // malformed baselines are bootstrap (missing key) or hard errors
+        let msg = perf_gate(&obj([("other", Json::num(1.0))]), 5.0, 0.25).unwrap();
+        assert!(msg.contains("bootstrap pass"), "{msg}");
+        assert!(perf_gate(&obj([("step_ms", Json::num(0.0))]), 5.0, 0.25).is_err());
+        assert!(perf_gate(&base, 5.0, -1.0).is_err(), "negative tolerance rejected");
     }
 
     #[test]

@@ -32,6 +32,7 @@ use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::telemetry::{Phase as TracePhase, TraceRecorder};
 use crate::topology::Topology;
 
 /// Message classes multiplexed over one link.
@@ -82,6 +83,9 @@ struct Envelope {
     /// With pacing: the modeled delivery instant (the transfer is "on the
     /// wire" until then).
     ready_at: Option<Instant>,
+    /// Modeled in-flight time (queueing + transfer) in µs, 0 unpaced.
+    /// Carried on the wire so the receiver can attribute it in the trace.
+    wire_us: u64,
 }
 
 /// α–β link pacing configuration (all times in seconds, bandwidth in
@@ -213,6 +217,10 @@ pub struct RankComm {
     barrier: Arc<Barrier>,
     pacer: Option<Arc<Pacer>>,
     pool: RefCell<PayloadPool>,
+    /// Per-rank telemetry recorder (None when tracing is off). `RefCell`
+    /// because sends happen under shared borrows; the endpoint is owned by
+    /// one rank thread, so there is no contention.
+    tracer: RefCell<Option<TraceRecorder>>,
 }
 
 /// Build the full n×n mailbox fabric; element `r` is rank `r`'s endpoint.
@@ -244,19 +252,10 @@ pub fn fabric(n: usize, pacing: Option<Pacing>) -> Vec<RankComm> {
             barrier: Arc::clone(&barrier),
             pacer: pacer.clone(),
             pool: RefCell::new(PayloadPool::default()),
+            tracer: RefCell::new(None),
         });
     }
     out
-}
-
-fn deliver(env: Envelope) -> Vec<f32> {
-    if let Some(t) = env.ready_at {
-        let now = Instant::now();
-        if t > now {
-            std::thread::sleep(t - now);
-        }
-    }
-    env.data
 }
 
 impl RankComm {
@@ -265,12 +264,94 @@ impl RankComm {
         self.n
     }
 
+    /// Install this rank's telemetry recorder (the SPMD runtime does this
+    /// at span entry when tracing is on).
+    pub fn set_tracer(&self, tr: TraceRecorder) {
+        *self.tracer.borrow_mut() = Some(tr);
+    }
+
+    /// Remove and return the recorder (span exit; events are merged into
+    /// the engine's timeline).
+    pub fn take_tracer(&self) -> Option<TraceRecorder> {
+        self.tracer.borrow_mut().take()
+    }
+
+    /// Record a rank-level span through the endpoint's recorder — the one
+    /// telemetry seam for the rank loop, the overlapped-collective drivers,
+    /// and the scheduler (all of which already hold `&RankComm`). One
+    /// branch when tracing is off.
+    pub fn trace_span(
+        &self,
+        phase: TracePhase,
+        iter: u64,
+        layer: usize,
+        start: Instant,
+        detail: u64,
+    ) {
+        if let Some(tr) = self.tracer.borrow_mut().as_mut() {
+            tr.span_from(phase, iter as usize, layer, start, detail);
+        }
+    }
+
+    /// Record a send on the comm row (`dur` 0: sends are nonblocking).
+    fn trace_send(&self, tag: Tag, bytes: u64) {
+        if let Some(tr) = self.tracer.borrow_mut().as_mut() {
+            let phase = match tag.kind {
+                MsgKind::SpagChunk | MsgKind::SprsChunk => TracePhase::SendChunk,
+                _ => TracePhase::SendRow,
+            };
+            tr.event_at(phase, tag.iter as usize, tag.layer, Instant::now(), Duration::ZERO, bytes);
+        }
+    }
+
+    /// Record a completed delivery: the span covers the message's modeled
+    /// in-flight window (ending now), so the comm row shows wire occupancy.
+    fn trace_delivery(&self, tag: Tag, bytes: u64, wire_us: u64) {
+        if let Some(tr) = self.tracer.borrow_mut().as_mut() {
+            let phase = match tag.kind {
+                MsgKind::SpagChunk | MsgKind::SprsChunk => TracePhase::RecvChunk,
+                _ => TracePhase::RecvRow,
+            };
+            let dur = Duration::from_micros(wire_us);
+            let now = Instant::now();
+            let start = now.checked_sub(dur).unwrap_or(now);
+            tr.event_at(phase, tag.iter as usize, tag.layer, start, dur, bytes);
+        }
+    }
+
+    /// Complete a matched envelope: under pacing, physically sleep until
+    /// the modeled delivery instant (recorded as `pacing_wait`).
+    fn deliver(&self, env: Envelope) -> Vec<f32> {
+        if let Some(t) = env.ready_at {
+            let now = Instant::now();
+            if t > now {
+                let pause = t - now;
+                std::thread::sleep(pause);
+                if let Some(tr) = self.tracer.borrow_mut().as_mut() {
+                    tr.event_at(
+                        TracePhase::PacingWait,
+                        env.tag.iter as usize,
+                        env.tag.layer,
+                        now,
+                        pause,
+                        0,
+                    );
+                }
+            }
+        }
+        self.trace_delivery(env.tag, env.data.len() as u64 * 4, env.wire_us);
+        env.data
+    }
+
     /// Nonblocking tagged send. Never blocks (unbounded link); errors only
     /// if the destination rank has died (its receiver was dropped).
     pub fn isend(&self, dst: usize, tag: Tag, data: Vec<f32>) -> anyhow::Result<()> {
         let ready_at =
             self.pacer.as_ref().map(|p| p.schedule(self.me, dst, data.len() as f64 * 4.0));
-        self.tx[dst].send(Envelope { tag, data, ready_at }).map_err(|_| {
+        let wire_us = ready_at
+            .map_or(0, |t| t.saturating_duration_since(Instant::now()).as_micros() as u64);
+        self.trace_send(tag, data.len() as u64 * 4);
+        self.tx[dst].send(Envelope { tag, data, ready_at, wire_us }).map_err(|_| {
             anyhow::anyhow!("rank {}: link to rank {dst} closed (peer rank died)", self.me)
         })
     }
@@ -323,7 +404,7 @@ impl RankComm {
     pub fn wait(&mut self, r: Recv) -> anyhow::Result<Vec<f32>> {
         if let Some(i) = self.stash[r.src].iter().position(|e| e.tag == r.tag) {
             let env = self.stash[r.src].remove(i).expect("index valid");
-            return Ok(deliver(env));
+            return Ok(self.deliver(env));
         }
         loop {
             let env = self.rx[r.src].recv().map_err(|_| {
@@ -335,7 +416,7 @@ impl RankComm {
                 )
             })?;
             if env.tag == r.tag {
-                return Ok(deliver(env));
+                return Ok(self.deliver(env));
             }
             self.stash[r.src].push_back(env);
         }
@@ -363,6 +444,7 @@ impl RankComm {
                 }
             }
             let env = self.stash[r.src].remove(i).expect("index valid");
+            self.trace_delivery(env.tag, env.data.len() as u64 * 4, env.wire_us);
             return Ok(Some(env.data));
         }
         if closed {
@@ -570,6 +652,36 @@ mod tests {
             "contended port did not serialize: {elapsed:?}"
         );
         drop((c0, c1));
+    }
+
+    #[test]
+    fn tracer_records_sends_deliveries_and_pacing() {
+        // 1 kB at 10 kB/s: ~100 ms on the wire. The sender logs a
+        // send_chunk, the receiver a pacing_wait (it blocked) and a
+        // recv_chunk whose duration is the modeled wire time.
+        let pacing = Pacing::uniform(10_000.0, 0.0);
+        let mut comms = fabric(2, Some(pacing));
+        let mut c1 = comms.remove(1);
+        let c0 = comms.remove(0);
+        let epoch = Instant::now();
+        c0.set_tracer(TraceRecorder::with_epoch(epoch, 0));
+        c1.set_tracer(TraceRecorder::with_epoch(epoch, 1));
+        let t = Tag { iter: 2, kind: MsgKind::SpagChunk, layer: 1, a: 0, b: 0 };
+        c0.isend(1, t, vec![0.0; 250]).unwrap();
+        assert_eq!(c1.recv(0, t).unwrap().len(), 250);
+
+        let send = c0.take_tracer().unwrap();
+        assert_eq!(send.events().len(), 1);
+        assert_eq!(send.events()[0].phase, TracePhase::SendChunk);
+        assert_eq!(send.events()[0].detail, 1000, "detail carries bytes");
+
+        let recv = c1.take_tracer().unwrap();
+        let phases: Vec<TracePhase> = recv.events().iter().map(|e| e.phase).collect();
+        assert!(phases.contains(&TracePhase::PacingWait), "{phases:?}");
+        let rc = recv.events().iter().find(|e| e.phase == TracePhase::RecvChunk).unwrap();
+        assert!(rc.dur_us >= 90_000.0, "recv span must carry wire time: {}", rc.dur_us);
+        assert_eq!((rc.iter, rc.layer, rc.rank), (2, 1, 1), "tag threads through");
+        drop(c0);
     }
 
     #[test]

@@ -37,11 +37,12 @@
 //!   forwarding duties. See `DESIGN.md` (SPMD executor).
 
 use std::collections::BTreeSet;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::collectives::exec::ChunkStore;
 use crate::collectives::sparse::{SparsePlan, Transfer};
 use crate::placement::{ChunkId, Placement};
+use crate::telemetry::Phase as TracePhase;
 use crate::topology::DeviceId;
 
 use super::comm::{MsgKind, RankComm, Tag};
@@ -87,6 +88,7 @@ impl<'p> RankSpag<'p> {
         comm: &RankComm,
         pre_issued: &BTreeSet<(ChunkId, usize)>,
     ) -> anyhow::Result<RankSpag<'p>> {
+        let t0 = Instant::now();
         let mut s = RankSpag {
             plan,
             me,
@@ -95,6 +97,7 @@ impl<'p> RankSpag<'p> {
             pending_recv: Vec::new(),
             pending_send: Vec::new(),
         };
+        let mut issued = 0u64;
         for (ti, t) in plan.transfers.iter().enumerate() {
             anyhow::ensure!(!t.reduce, "spAG plan must not contain reduce transfers");
             if t.dst.0 == me {
@@ -106,11 +109,13 @@ impl<'p> RankSpag<'p> {
                 }
                 if let Some(buf) = store.get(t.chunk) {
                     comm.isend_slice(t.dst.0, spag_tag(iter, layer, t), buf)?;
+                    issued += 1;
                 } else {
                     s.pending_send.push(ti);
                 }
             }
         }
+        comm.trace_span(TracePhase::SpagIssue, iter, layer, t0, issued);
         Ok(s)
     }
 
@@ -237,7 +242,8 @@ impl<'p> RankSprs<'p> {
         stage: usize,
         store: &ChunkStore,
         comm: &RankComm,
-    ) -> anyhow::Result<()> {
+    ) -> anyhow::Result<u64> {
+        let mut sent = 0u64;
         for t in self.plan.transfers.iter().filter(|t| t.stage == stage && t.src.0 == self.me) {
             let buf = store.get(t.chunk).ok_or_else(|| {
                 anyhow::anyhow!(
@@ -248,8 +254,9 @@ impl<'p> RankSprs<'p> {
                 )
             })?;
             comm.isend_slice(t.dst.0, sprs_tag(self.iter, self.layer, t), buf)?;
+            sent += 1;
         }
-        Ok(())
+        Ok(sent)
     }
 
     /// Register the plan and issue this rank's stage-0 sends. The gradient
@@ -264,9 +271,11 @@ impl<'p> RankSprs<'p> {
         store: &ChunkStore,
         comm: &RankComm,
     ) -> anyhow::Result<RankSprs<'p>> {
+        let t0 = Instant::now();
         let s = RankSprs { plan, owners, me, iter, layer };
         if plan.num_stages > 0 {
-            s.issue_stage_sends(0, store, comm)?;
+            let sent = s.issue_stage_sends(0, store, comm)?;
+            comm.trace_span(TracePhase::SprsIssue, iter, layer, t0, sent);
         }
         Ok(s)
     }

@@ -72,6 +72,7 @@ use crate::loadsim::LoadPredictor;
 use crate::materialize::MatConstraints;
 use crate::metrics::Metrics;
 use crate::placement::Placement;
+use crate::telemetry::{Phase as TracePhase, TraceRecorder};
 use crate::topology::{DeviceId, Topology};
 
 use comm::{MsgKind, RankComm};
@@ -127,6 +128,8 @@ struct RankOut {
     loss: Vec<f64>,
     /// Rank 0 only; empty elsewhere.
     global: Vec<GlobalStats>,
+    /// This rank's telemetry timeline (None when tracing is off).
+    tracer: Option<TraceRecorder>,
 }
 
 /// Run `iters` iterations of the engine on one thread per rank and sync
@@ -190,6 +193,14 @@ pub fn run_span(
         }
     }
     let comms = comm::fabric(nd, engine.pacing);
+    // Tracing on: give every rank endpoint a recorder sharing the engine
+    // recorder's epoch, so all ranks' timestamps are directly comparable.
+    if let Some(tr) = &engine.tracer {
+        let epoch = tr.epoch();
+        for (r, c) in comms.iter().enumerate() {
+            c.set_tracer(TraceRecorder::with_epoch(epoch, r));
+        }
+    }
 
     let mut ctxs: Vec<RankCtx> = Vec::with_capacity(nd);
     for (me, (layers, comm)) in rank_layers.into_iter().zip(comms).enumerate() {
@@ -261,7 +272,12 @@ pub fn run_span(
     let mut opt_by_layer: Vec<BTreeMap<usize, AdamState>> = (0..nl).map(|_| BTreeMap::new()).collect();
     let mut merged = Metrics::new();
     for (r, out) in outs.into_iter().enumerate() {
-        let RankOut { layers, metrics, loss, global } = out;
+        let RankOut { layers, metrics, loss, global, tracer } = out;
+        if let Some(rank_tl) = tracer {
+            if let Some(main) = &mut engine.tracer {
+                main.absorb(rank_tl);
+            }
+        }
         anyhow::ensure!(loss.len() == iters, "rank {r} returned {} loss entries", loss.len());
         for (i, l) in loss.iter().enumerate() {
             stats[i].loss += *l;
@@ -371,6 +387,7 @@ fn settle_layer(
     let t0 = Instant::now();
     sprs.finish(grads, comm)?;
     metrics.add_duration("spmd.sprs", t0.elapsed());
+    comm.trace_span(TracePhase::SprsWait, iter, l, t0, 0);
 
     let t0 = Instant::now();
     debug_assert_eq!(owners.num_chunks(), experts);
@@ -385,6 +402,7 @@ fn settle_layer(
         metrics.add("spmd.eager_sends", sent as f64);
     }
     metrics.add_duration("spmd.adam", t0.elapsed());
+    comm.trace_span(TracePhase::Adam, iter, l, t0, 0);
 
     // re-materialization: drop non-shard replicas (§4), recycling their
     // buffers through the rank's pool
@@ -442,6 +460,7 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
             }
         };
         metrics.add_duration("spmd.plan", t0.elapsed());
+        comm.trace_span(TracePhase::Plan, iter, 0, t0, 0);
 
         let mut spags: Vec<Option<RankSpag>> = (0..nl).map(|_| None).collect();
         let mut acts: Vec<Vec<f32>> =
@@ -479,6 +498,7 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
                 let d = t0.elapsed();
                 metrics.add_duration("spmd.spag_wait", d);
                 metrics.add_duration(&format!("spmd.spag_wait.l{l}"), d);
+                comm.trace_span(TracePhase::SpagWait, iter, l, t0, 0);
             }
 
             // ---- gate our sources on this layer's input; exchange ----
@@ -530,6 +550,7 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
                 comm.recycle(buf);
             }
             metrics.add_duration("spmd.gate", t0.elapsed());
+            comm.trace_span(TracePhase::Gate, iter, l, t0, 0);
 
             // predictor update (replicated, feeds next iteration's plan)
             let realized = realized_loads(dims.experts, &gate_idx);
@@ -589,6 +610,7 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
                     metrics.add_duration("spmd.spag_wait", d);
                     metrics.add_duration(&format!("spmd.spag_wait.l{l}"), d);
                     metrics.add("spmd.lazy_chunks", 1.0);
+                    comm.trace_span(TracePhase::SpagWait, iter, l, t0, 1);
                 }
                 let toks = routes.get(&(me, e)).expect("key from this map");
                 let chunk = layers[l].store.get(e).expect("ensured above");
@@ -629,6 +651,7 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
                 metrics.add_duration("spmd.compute", d);
                 metrics.add_duration(&format!("spmd.compute.l{l}"), d);
                 metrics.add("spmd.groups", toks.chunks(dims.cap).len() as f64);
+                comm.trace_span(TracePhase::ExpertFwd, iter, l, t0, toks.len() as u64);
             }
 
             // Remaining receives + fan-out duties before the next phase.
@@ -637,6 +660,7 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
             let d = t0.elapsed();
             metrics.add_duration("spmd.spag_wait", d);
             metrics.add_duration(&format!("spmd.spag_wait.l{l}"), d);
+            comm.trace_span(TracePhase::SpagWait, iter, l, t0, 0);
 
             // ---- layer boundary: combine (fwd) / seed cotangent (bwd) ----
             if !last_layer {
@@ -653,6 +677,7 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
                     &dims,
                 )?;
                 metrics.add_duration("spmd.combine", t0.elapsed());
+                comm.trace_span(TracePhase::Combine, iter, l, t0, 0);
                 acts_stack.push(std::mem::replace(&mut acts, next));
             } else if nl > 1 {
                 let t0 = Instant::now();
@@ -668,6 +693,7 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
                     &dims,
                 )?;
                 metrics.add_duration("spmd.combine", t0.elapsed());
+                comm.trace_span(TracePhase::Combine, iter, l, t0, 0);
             }
             all_routes.push(routes);
             grads_stack.push(grads);
@@ -690,6 +716,7 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
             }
             ov.next_plans = Some(nexts);
             metrics.add_duration("spmd.plan", t0.elapsed());
+            comm.trace_span(TracePhase::Plan, iter, 0, t0, 0);
         }
 
         // ---- backward sweep: bwd compute (inner layers) with the spRS
@@ -722,6 +749,7 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
                     let d = t0.elapsed();
                     metrics.add_duration("spmd.compute", d);
                     metrics.add_duration(&format!("spmd.compute.l{l}"), d);
+                    comm.trace_span(TracePhase::ExpertBwd, iter, l, t0, toks.len() as u64);
                     if l > 0 {
                         gx_rows.insert(e, gx);
                     }
@@ -740,6 +768,7 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
                         &dims,
                     )?;
                     metrics.add_duration("spmd.combine", t0.elapsed());
+                    comm.trace_span(TracePhase::Combine, iter, l, t0, 0);
                 }
             }
             // this layer's grads are final: issue its spRS stage-0 sends
@@ -829,7 +858,7 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
     metrics.add("spmd.payload_reused", hits as f64);
     metrics.add("spmd.payload_alloc", misses as f64);
 
-    Ok(RankOut { layers, metrics, loss: losses, global })
+    Ok(RankOut { layers, metrics, loss: losses, global, tracer: comm.take_tracer() })
 }
 
 #[cfg(test)]
@@ -887,6 +916,49 @@ mod tests {
         b.executor = Executor::Spmd { threads: 4, overlap: true };
         b.run_span(0, 3, 4).unwrap();
         assert_eq!(final_chunks(&a), final_chunks(&b));
+    }
+
+    #[test]
+    fn traced_spmd_span_is_bitwise_identical_and_covers_every_rank() {
+        let dims = reference_dims();
+        let mut plain = FssdpEngine::new_reference_layers(dims, 2, Topology::cluster_a(2, 2), 9);
+        plain.executor = Executor::Spmd { threads: 4, overlap: true };
+        plain.run_span(0, 3, 4).unwrap();
+
+        let mut traced = FssdpEngine::new_reference_layers(dims, 2, Topology::cluster_a(2, 2), 9);
+        traced.executor = Executor::Spmd { threads: 4, overlap: true };
+        traced.tracer = Some(TraceRecorder::new(0));
+        traced.run_span(0, 3, 4).unwrap();
+
+        assert_eq!(
+            final_chunks(&plain),
+            final_chunks(&traced),
+            "tracing is observational: traced run must stay bit-identical"
+        );
+        let events = traced.trace_events().expect("recorder installed");
+        for r in 0..4u32 {
+            assert!(events.iter().any(|e| e.rank == r), "no events from rank {r}");
+        }
+        for want in [
+            TracePhase::Gate,
+            TracePhase::ExpertFwd,
+            TracePhase::ExpertBwd,
+            TracePhase::SpagIssue,
+            TracePhase::SprsIssue,
+            TracePhase::SendChunk,
+            TracePhase::Adam,
+        ] {
+            assert!(events.iter().any(|e| e.phase == want), "missing phase {want:?}");
+        }
+        / per-rank timelines are pushed in span-end order
+        for r in 0..4u32 {
+            let mut last = f64::NEG_INFINITY;
+            for e in events.iter().filter(|e| e.rank == r) {
+                let end = e.ts_us + e.dur_us;
+                assert!(end >= last, "rank {r} end times must be non-decreasing");
+                last = end;
+            }
+        }
     }
 
     #[test]

@@ -29,10 +29,12 @@
 //! [`RankSpag`]: crate::spmd::exec::RankSpag
 
 use std::collections::BTreeSet;
+use std::time::Instant;
 
 use crate::collectives::exec::ChunkStore;
 use crate::fssdp::IterPlan;
 use crate::placement::ChunkId;
+use crate::telemetry::Phase as TracePhase;
 
 use super::comm::RankComm;
 
@@ -88,6 +90,7 @@ impl Overlap {
         let Some(next) = &self.next_plans else {
             return Ok(0);
         };
+        let t0 = Instant::now();
         let mut sent = 0;
         for t in next[layer].spag.transfers.iter().filter(|t| t.src.0 == me && t.chunk == e) {
             let Some(buf) = store.get(e) else {
@@ -106,6 +109,10 @@ impl Overlap {
             )?;
             self.pre_issued.insert((layer, t.chunk, t.dst.0));
             sent += 1;
+        }
+        if sent > 0 {
+            // run-ahead spAG issue, tagged with the iteration it serves
+            comm.trace_span(TracePhase::SpagIssue, next_iter, layer, t0, sent as u64);
         }
         Ok(sent)
     }

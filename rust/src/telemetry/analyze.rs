@@ -1,0 +1,402 @@
+//! Offline trace analysis: per-step critical path, §4.3 overlap
+//! efficiency, and the per-rank straggler report.
+//!
+//! Definitions (pinned by the synthetic-trace tests below):
+//!
+//! - **busy time** of a rank = Σ durations of its on-thread spans
+//!   ([`Kind::Compute`] + [`Kind::CommWait`]); wire-level [`Kind::Comm`]
+//!   events are bookkeeping and excluded.
+//! - **critical path** of a step = the rank with the largest busy time in
+//!   that iteration; the step's wall time is `max(end) − min(start)` over
+//!   all of the iteration's events.
+//! - **overlap efficiency** = `1 − exposed / wire`, clamped to `[0, 1]`:
+//!   `wire` is the total modeled in-flight time of delivered expert-chunk
+//!   payloads ([`Phase::RecvChunk`] durations — the α–β pacing estimate),
+//!   `exposed` is the time ranks actually sat blocked on the sparse
+//!   collectives ([`Phase::SpagWait`] + [`Phase::SprsWait`] +
+//!   [`Phase::Materialize`]). This is the §4.3 number: the fraction of
+//!   communication hidden under compute. Unpaced runs have `wire = 0`
+//!   (in-process channels deliver instantly) and report `None`.
+//! - **straggler report** — per rank: compute, wait, idle
+//!   (`span − compute − wait`, clamped at 0), token rows processed
+//!   ([`Phase::ExpertFwd`] `detail`), and skew = compute ÷ median
+//!   compute across ranks (realized-load imbalance shows up here).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use super::{Event, Kind, Phase, EVENTS_FILE};
+use crate::metrics::Table;
+use crate::util::json::Json;
+
+/// Critical-path summary of one training step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepReport {
+    pub iter: u32,
+    /// `max(end) − min(start)` over the step's events, µs.
+    pub wall_us: f64,
+    /// Rank with the largest busy time this step.
+    pub critical_rank: u32,
+    /// That rank's busy time, µs.
+    pub critical_busy_us: f64,
+    /// The phase the critical rank spent most time in.
+    pub top_phase: Phase,
+}
+
+/// Straggler accounting for one rank over the whole trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankReport {
+    pub rank: u32,
+    pub compute_us: f64,
+    pub wait_us: f64,
+    /// Span time not covered by recorded on-thread phases.
+    pub idle_us: f64,
+    /// Token rows pushed through expert FFN forward.
+    pub tokens: u64,
+    /// compute ÷ median compute across ranks (1.0 = perfectly balanced).
+    pub skew: f64,
+}
+
+/// Full analysis of a recorded trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Analysis {
+    pub steps: Vec<StepReport>,
+    pub ranks: Vec<RankReport>,
+    /// Total modeled in-flight time of expert-chunk deliveries, µs.
+    pub wire_us: f64,
+    /// Total time ranks sat blocked on the sparse collectives, µs.
+    pub exposed_us: f64,
+    /// §4.3 fraction of comm hidden under compute; `None` when no wire
+    /// time was observed (unpaced run — nothing to hide).
+    pub overlap_efficiency: Option<f64>,
+    pub max_idle_us: f64,
+    pub median_idle_us: f64,
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(f64::total_cmp);
+    xs[xs.len() / 2]
+}
+
+/// Analyze a recorded event stream (order-insensitive).
+pub fn analyze(events: &[Event]) -> Analysis {
+    // ---- per-rank accounting ----
+    #[derive(Default, Clone)]
+    struct RankAcc {
+        compute: f64,
+        wait: f64,
+        tokens: u64,
+        first: f64,
+        last: f64,
+        seen: bool,
+    }
+    let mut per_rank: BTreeMap<u32, RankAcc> = BTreeMap::new();
+    let mut wire_us = 0.0;
+    let mut exposed_us = 0.0;
+    for e in events {
+        if e.phase == Phase::RecvChunk {
+            wire_us += e.dur_us;
+        }
+        if matches!(e.phase, Phase::SpagWait | Phase::SprsWait | Phase::Materialize) {
+            exposed_us += e.dur_us;
+        }
+        if e.phase.kind() == Kind::Comm {
+            continue; // wire bookkeeping: not on-thread time
+        }
+        let acc = per_rank.entry(e.rank).or_default();
+        match e.phase.kind() {
+            Kind::Compute => acc.compute += e.dur_us,
+            Kind::CommWait => acc.wait += e.dur_us,
+            Kind::Comm => unreachable!(),
+        }
+        if e.phase == Phase::ExpertFwd {
+            acc.tokens += e.detail;
+        }
+        let end = e.ts_us + e.dur_us;
+        if !acc.seen {
+            (acc.first, acc.last, acc.seen) = (e.ts_us, end, true);
+        } else {
+            acc.first = acc.first.min(e.ts_us);
+            acc.last = acc.last.max(end);
+        }
+    }
+    let med_compute = median(per_rank.values().map(|a| a.compute).collect());
+    let ranks: Vec<RankReport> = per_rank
+        .iter()
+        .map(|(&rank, a)| RankReport {
+            rank,
+            compute_us: a.compute,
+            wait_us: a.wait,
+            idle_us: ((a.last - a.first) - a.compute - a.wait).max(0.0),
+            tokens: a.tokens,
+            skew: if med_compute > 0.0 { a.compute / med_compute } else { 1.0 },
+        })
+        .collect();
+    let idles: Vec<f64> = ranks.iter().map(|r| r.idle_us).collect();
+    let max_idle_us = idles.iter().cloned().fold(0.0, f64::max);
+    let median_idle_us = median(idles);
+
+    // ---- per-step critical path ----
+    let iters: BTreeSet<u32> = events.iter().map(|e| e.iter).collect();
+    let mut steps = Vec::new();
+    for it in iters {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        // busy time and per-phase sums, per rank, this iteration only
+        let mut busy: BTreeMap<u32, f64> = BTreeMap::new();
+        let mut by_phase: BTreeMap<(u32, Phase), f64> = BTreeMap::new();
+        for e in events.iter().filter(|e| e.iter == it) {
+            lo = lo.min(e.ts_us);
+            hi = hi.max(e.ts_us + e.dur_us);
+            if e.phase.kind() != Kind::Comm {
+                *busy.entry(e.rank).or_default() += e.dur_us;
+                *by_phase.entry((e.rank, e.phase)).or_default() += e.dur_us;
+            }
+        }
+        let Some((&critical_rank, &critical_busy_us)) =
+            busy.iter().max_by(|a, b| a.1.total_cmp(b.1))
+        else {
+            continue; // iteration with only comm events — nothing to rank
+        };
+        let top_phase = by_phase
+            .iter()
+            .filter(|((r, _), _)| *r == critical_rank)
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|((_, p), _)| *p)
+            .unwrap_or(Phase::Plan);
+        steps.push(StepReport {
+            iter: it,
+            wall_us: (hi - lo).max(0.0),
+            critical_rank,
+            critical_busy_us,
+            top_phase,
+        });
+    }
+
+    let overlap_efficiency =
+        if wire_us > 0.0 { Some((1.0 - exposed_us / wire_us).clamp(0.0, 1.0)) } else { None };
+    Analysis {
+        steps,
+        ranks,
+        wire_us,
+        exposed_us,
+        overlap_efficiency,
+        max_idle_us,
+        median_idle_us,
+    }
+}
+
+/// Load the JSONL event stream from a `--trace-out` directory.
+pub fn load_events(dir: &Path) -> anyhow::Result<Vec<Event>> {
+    let path = dir.join(EVENTS_FILE);
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        anyhow::anyhow!(
+            "cannot read {} ({e}) — run `hecate fssdp --trace-out {}` first",
+            path.display(),
+            dir.display()
+        )
+    })?;
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("{}:{}: {e}", path.display(), i + 1))?;
+        events.push(Event::from_json(&j)?);
+    }
+    Ok(events)
+}
+
+/// [`load_events`] + [`analyze`].
+pub fn analyze_dir(dir: &Path) -> anyhow::Result<Analysis> {
+    Ok(analyze(&load_events(dir)?))
+}
+
+impl Analysis {
+    /// Overlap efficiency as a percentage, when defined.
+    pub fn overlap_pct(&self) -> Option<f64> {
+        self.overlap_efficiency.map(|f| f * 100.0)
+    }
+
+    /// Largest compute skew across ranks (straggler factor).
+    pub fn max_skew(&self) -> f64 {
+        self.ranks.iter().map(|r| r.skew).fold(1.0, f64::max)
+    }
+
+    /// Per-step critical-path table.
+    pub fn steps_table(&self) -> Table {
+        let mut t = Table::new(&[
+            "iter", "wall_ms", "critical_rank", "critical_busy_ms", "top_phase",
+        ]);
+        for s in &self.steps {
+            t.row(vec![
+                s.iter.to_string(),
+                format!("{:.3}", s.wall_us / 1e3),
+                s.critical_rank.to_string(),
+                format!("{:.3}", s.critical_busy_us / 1e3),
+                s.top_phase.as_str().to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// Per-rank straggler table.
+    pub fn straggler_table(&self) -> Table {
+        let mut t =
+            Table::new(&["rank", "compute_ms", "wait_ms", "idle_ms", "tokens", "skew"]);
+        for r in &self.ranks {
+            t.row(vec![
+                r.rank.to_string(),
+                format!("{:.3}", r.compute_us / 1e3),
+                format!("{:.3}", r.wait_us / 1e3),
+                format!("{:.3}", r.idle_us / 1e3),
+                r.tokens.to_string(),
+                format!("{:.2}", r.skew),
+            ]);
+        }
+        t
+    }
+
+    /// One-line headline: overlap efficiency + idle spread.
+    pub fn summary(&self) -> String {
+        let overlap = match self.overlap_pct() {
+            Some(p) => format!(
+                "overlap efficiency {p:.1}% (wire {:.3} ms, exposed {:.3} ms)",
+                self.wire_us / 1e3,
+                self.exposed_us / 1e3
+            ),
+            None => "overlap efficiency n/a (no paced wire time recorded)".to_string(),
+        };
+        format!(
+            "{overlap}; idle max {:.3} ms / median {:.3} ms; max skew {:.2}",
+            self.max_idle_us / 1e3,
+            self.median_idle_us / 1e3,
+            self.max_skew()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(phase: Phase, iter: u32, rank: u32, ts: f64, dur: f64, detail: u64) -> Event {
+        Event { phase, iter, layer: 0, rank, ts_us: ts, dur_us: dur, detail }
+    }
+
+    #[test]
+    fn empty_trace_is_fine() {
+        let a = analyze(&[]);
+        assert!(a.steps.is_empty() && a.ranks.is_empty());
+        assert_eq!(a.overlap_efficiency, None);
+        assert_eq!(a.max_skew(), 1.0);
+    }
+
+    #[test]
+    fn overlap_efficiency_known_answer() {
+        // 400 µs of wire time, 100 µs exposed (40 spAG + 60 spRS) → 75 %
+        // of the communication was hidden under compute.
+        let events = vec![
+            ev(Phase::RecvChunk, 0, 0, 0.0, 100.0, 1024),
+            ev(Phase::RecvChunk, 0, 0, 50.0, 300.0, 1024),
+            ev(Phase::SpagWait, 0, 0, 10.0, 40.0, 0),
+            ev(Phase::SprsWait, 0, 0, 200.0, 60.0, 0),
+            ev(Phase::ExpertFwd, 0, 0, 60.0, 120.0, 64),
+        ];
+        let a = analyze(&events);
+        assert_eq!(a.wire_us, 400.0);
+        assert_eq!(a.exposed_us, 100.0);
+        assert!((a.overlap_efficiency.unwrap() - 0.75).abs() < 1e-12);
+        // exposed > wire clamps at 0 instead of going negative
+        let worst = analyze(&[
+            ev(Phase::RecvChunk, 0, 0, 0.0, 10.0, 1024),
+            ev(Phase::SpagWait, 0, 0, 0.0, 50.0, 0),
+        ]);
+        assert_eq!(worst.overlap_efficiency, Some(0.0));
+    }
+
+    #[test]
+    fn straggler_report_known_answer() {
+        // rank 1 computes 2× the median and idles; rank 0 is balanced.
+        let events = vec![
+            ev(Phase::ExpertFwd, 0, 0, 0.0, 100.0, 32),
+            ev(Phase::SpagWait, 0, 0, 100.0, 20.0, 0),
+            ev(Phase::ExpertFwd, 0, 1, 0.0, 200.0, 64),
+            ev(Phase::SpagWait, 0, 1, 250.0, 10.0, 0), // 50 µs gap → idle
+            ev(Phase::ExpertFwd, 0, 2, 0.0, 100.0, 32),
+        ];
+        let a = analyze(&events);
+        assert_eq!(a.ranks.len(), 3);
+        let r1 = &a.ranks[1];
+        assert_eq!(r1.rank, 1);
+        assert_eq!(r1.compute_us, 200.0);
+        assert_eq!(r1.wait_us, 10.0);
+        assert_eq!(r1.idle_us, 50.0);
+        assert_eq!(r1.tokens, 64);
+        assert!((r1.skew - 2.0).abs() < 1e-12, "median compute 100 → skew 2");
+        assert_eq!(a.max_skew(), 2.0);
+        assert_eq!(a.max_idle_us, 50.0);
+        assert_eq!(a.ranks[0].idle_us, 0.0);
+    }
+
+    #[test]
+    fn critical_path_per_step() {
+        let events = vec![
+            // iter 0: rank 1 is critical (150 µs busy, gate-dominated)
+            ev(Phase::ExpertFwd, 0, 0, 0.0, 100.0, 8),
+            ev(Phase::Gate, 0, 1, 0.0, 90.0, 0),
+            ev(Phase::ExpertFwd, 0, 1, 90.0, 60.0, 8),
+            // comm events must not decide the critical rank
+            ev(Phase::RecvChunk, 0, 0, 0.0, 500.0, 64),
+            // iter 1: rank 0 is critical
+            ev(Phase::ExpertFwd, 1, 0, 200.0, 80.0, 8),
+            ev(Phase::ExpertFwd, 1, 1, 200.0, 10.0, 8),
+        ];
+        let a = analyze(&events);
+        assert_eq!(a.steps.len(), 2);
+        let s0 = &a.steps[0];
+        assert_eq!(s0.iter, 0);
+        assert_eq!(s0.critical_rank, 1);
+        assert_eq!(s0.critical_busy_us, 150.0);
+        assert_eq!(s0.top_phase, Phase::Gate);
+        assert_eq!(s0.wall_us, 500.0, "wall spans all events incl. comm");
+        assert_eq!(a.steps[1].critical_rank, 0);
+        assert_eq!(a.steps[1].wall_us, 80.0);
+    }
+
+    #[test]
+    fn tables_and_summary_render() {
+        let events = vec![
+            ev(Phase::ExpertFwd, 0, 0, 0.0, 100.0, 8),
+            ev(Phase::RecvChunk, 0, 0, 0.0, 50.0, 64),
+            ev(Phase::SpagWait, 0, 0, 100.0, 10.0, 0),
+        ];
+        let a = analyze(&events);
+        let md = a.steps_table().to_markdown();
+        assert!(md.contains("critical_rank"), "{md}");
+        let md = a.straggler_table().to_markdown();
+        assert!(md.contains("skew"), "{md}");
+        assert!(a.summary().contains("overlap efficiency 80.0%"), "{}", a.summary());
+    }
+
+    #[test]
+    fn load_events_round_trips_through_dir() {
+        let dir =
+            std::env::temp_dir().join(format!("hecate-trace-an-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(EVENTS_FILE);
+        let _ = std::fs::remove_file(&path);
+        let events =
+            vec![ev(Phase::Gate, 0, 0, 0.0, 5.0, 0), ev(Phase::Adam, 0, 1, 5.0, 2.0, 0)];
+        super::super::append_jsonl(&path, &events).unwrap();
+        let loaded = load_events(&dir).unwrap();
+        assert_eq!(loaded, events);
+        assert!(analyze_dir(&dir).is_ok());
+        std::fs::remove_dir_all(&dir).unwrap();
+        assert!(analyze_dir(&dir).is_err(), "missing dir is a clear error");
+    }
+}

@@ -1,5 +1,9 @@
 //! Tiny leveled logger writing to stderr. Controlled by `HECATE_LOG`
 //! (`error|warn|info|debug|trace`, default `info`).
+//!
+//! Plain lines go through `log_error!` … `log_trace!`; `log_kv!` emits a
+//! structured `key=value` line (`[INFO ] module: event k1=v1 k2=v2`) for
+//! diagnostics that downstream tooling greps.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
@@ -52,6 +56,30 @@ pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     }
 }
 
+/// Structured log line: `event` plus `key=value` pairs, space-separated.
+/// Values are formatted with `Display`; formatting is skipped entirely
+/// when the level is filtered out.
+pub fn log_kv(level: Level, module: &str, event: &str, pairs: &[(&str, &dyn std::fmt::Display)]) {
+    if !enabled(level) {
+        return;
+    }
+    let mut line = String::from(event);
+    for (k, v) in pairs {
+        line.push(' ');
+        line.push_str(k);
+        line.push('=');
+        line.push_str(&v.to_string());
+    }
+    log(level, module, format_args!("{line}"));
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+
 #[macro_export]
 macro_rules! log_info {
     ($($arg:tt)*) => {
@@ -73,6 +101,27 @@ macro_rules! log_debug {
     };
 }
 
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Trace, module_path!(), format_args!($($arg)*))
+    };
+}
+
+/// `log_kv!(Level::Info, "event", k1 = v1, k2 = v2)` — structured
+/// `key=value` diagnostics; each value only needs `Display`.
+#[macro_export]
+macro_rules! log_kv {
+    ($level:expr, $event:expr $(, $key:ident = $val:expr)* $(,)?) => {
+        $crate::util::logging::log_kv(
+            $level,
+            module_path!(),
+            $event,
+            &[$((stringify!($key), &$val as &dyn ::std::fmt::Display)),*],
+        )
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,5 +136,20 @@ mod tests {
         set_level(Level::Info);
         assert!(enabled(Level::Info));
         assert!(!enabled(Level::Debug));
+        assert!(!enabled(Level::Trace));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Trace));
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn kv_macro_accepts_mixed_display_values() {
+        init();
+        // smoke: filtered-out level takes the early-return path, enabled
+        // level renders every pair via Display
+        crate::log_kv!(Level::Trace, "skipped", step = 1);
+        set_level(Level::Info);
+        crate::log_kv!(Level::Info, "reshard", step = 12u64, moved = 3usize, dir = "out");
+        crate::log_kv!(Level::Info, "bare_event");
     }
 }

@@ -1,0 +1,182 @@
+//! Integration: the telemetry subsystem is purely observational — traced
+//! runs stay bit-identical to untraced ones on both executors — and its
+//! exports are well-formed: per-rank timelines have non-decreasing span
+//! end times, the Chrome trace carries one phase row per rank, identical
+//! seeded runs record identical event multisets, and the analyzer reports
+//! a defined §4.3 overlap efficiency on paced links. Hermetic: reference
+//! backend, public `Session` API only.
+
+use hecate::fssdp::{parse_pacing, Session, SessionConfig, SessionConfigBuilder};
+use hecate::telemetry::analyze::{analyze, analyze_dir, load_events};
+use hecate::telemetry::{
+    Event, Phase, TraceWriter, CHROME_TRACE_FILE, COMM_TID_OFFSET, EVENTS_FILE,
+};
+use hecate::testing::all_chunks;
+use hecate::topology::Topology;
+use hecate::util::json::Json;
+
+/// 2-layer reference session on 4 devices; `spmd` selects the parallel
+/// executor, `trace` installs the recorder.
+fn cfg(spmd: bool, trace: bool, seed: u64) -> SessionConfigBuilder {
+    let mut b = SessionConfig::builder()
+        .reference()
+        .topology(Topology::cluster_a(2, 2))
+        .layers(2)
+        .seed(seed)
+        .data_shards(4)
+        .trace(trace);
+    if spmd {
+        b = b.parallel(true).threads(4);
+    }
+    b
+}
+
+fn run(spmd: bool, trace: bool, seed: u64) -> Session {
+    let mut s = Session::fresh(cfg(spmd, trace, seed).build().unwrap()).unwrap();
+    s.run(3).unwrap();
+    s
+}
+
+/// The order- and timing-independent identity of an event.
+fn key(e: &Event) -> (&'static str, u32, u32, u32, u64) {
+    (e.phase.as_str(), e.iter, e.layer, e.rank, e.detail)
+}
+
+#[test]
+fn tracing_is_observational_on_both_executors() {
+    for spmd in [false, true] {
+        let plain = run(spmd, false, 41);
+        let traced = run(spmd, true, 41);
+        assert!(plain.trace_events().is_none(), "tracing must be off by default");
+        assert!(!traced.trace_events().unwrap().is_empty());
+        assert_eq!(
+            all_chunks(plain.engine()),
+            all_chunks(traced.engine()),
+            "traced run (spmd={spmd}) must be bit-identical to untraced"
+        );
+    }
+}
+
+#[test]
+fn identical_seeded_runs_record_identical_event_multisets() {
+    // Unpaced runs: spans, sends, and deliveries are all decided by the
+    // deterministic plans, so the recorded (phase, iter, layer, rank,
+    // detail) multiset must be reproducible; only timings may differ.
+    for spmd in [false, true] {
+        let mut a: Vec<_> = run(spmd, true, 43).trace_events().unwrap().iter().map(key).collect();
+        let mut b: Vec<_> = run(spmd, true, 43).trace_events().unwrap().iter().map(key).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a.len(), b.len(), "event count must be stable (spmd={spmd})");
+        assert_eq!(a, b, "event multiset must be stable (spmd={spmd})");
+    }
+}
+
+#[test]
+fn per_rank_timelines_are_well_formed() {
+    let s = run(true, true, 47);
+    let events = s.trace_events().unwrap();
+    for r in 0..4u32 {
+        // spans are pushed at span *end* (nested issue spans close before
+        // their parent), so the per-rank invariant is on end times
+        let mut last_end = f64::NEG_INFINITY;
+        let mut any = false;
+        for e in events.iter().filter(|e| e.rank == r) {
+            any = true;
+            assert!(e.dur_us >= 0.0 && e.ts_us >= 0.0, "negative time: {e:?}");
+            assert!(e.iter < 3 + 1, "iter out of range: {e:?}"); // +1: eager next-iter issue
+            assert!(e.layer < 2, "layer out of range: {e:?}");
+            let end = e.ts_us + e.dur_us;
+            assert!(end >= last_end, "rank {r}: end times must be non-decreasing ({e:?})");
+            last_end = end;
+        }
+        assert!(any, "rank {r} recorded nothing");
+    }
+}
+
+#[test]
+fn trace_writer_exports_chrome_trace_and_jsonl() {
+    let dir = std::env::temp_dir().join(format!("hecate-trace-int-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut s = Session::fresh(cfg(true, true, 53).build().unwrap()).unwrap();
+    let mut writer = TraceWriter::new(&dir);
+    s.run_observed(3, &mut [&mut writer]).unwrap();
+    let n = s.trace_events().unwrap().len();
+    assert_eq!(writer.exported(), n, "writer must drain the full timeline");
+
+    // JSONL round-trips through the loader
+    let loaded = load_events(&dir).unwrap();
+    assert_eq!(loaded.len(), n);
+    assert_eq!(loaded, s.trace_events().unwrap());
+
+    // Chrome trace: valid JSON, one phase row + one comm row per rank
+    let text = std::fs::read_to_string(dir.join(CHROME_TRACE_FILE)).unwrap();
+    let doc = Json::parse(&text).unwrap();
+    let entries = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let thread_rows: Vec<f64> = entries
+        .iter()
+        .filter(|j| j.get("name").and_then(Json::as_str) == Some("thread_name"))
+        .map(|j| j.get("tid").unwrap().as_f64().unwrap())
+        .collect();
+    let phase_rows = thread_rows.iter().filter(|&&t| t < COMM_TID_OFFSET as f64).count();
+    let comm_rows = thread_rows.len() - phase_rows;
+    assert_eq!(phase_rows, 4, "one named timeline row per rank");
+    assert_eq!(comm_rows, 4, "one named comm row per rank");
+    let spans = entries
+        .iter()
+        .filter(|j| j.get("ph").and_then(Json::as_str) == Some("X"))
+        .count();
+    assert_eq!(spans, n, "every event renders as one complete span");
+
+    assert!(dir.join(EVENTS_FILE).exists());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn paced_run_reports_defined_overlap_efficiency() {
+    let dir = std::env::temp_dir().join(format!("hecate-trace-eff-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // α–β paced links give deliveries a modeled in-flight time, so the
+    // analyzer has wire time to compare against exposed waits.
+    let mut s = Session::fresh(
+        cfg(true, true, 59).pacing(parse_pacing("1e-4,1e-9").unwrap()).build().unwrap(),
+    )
+    .unwrap();
+    let mut writer = TraceWriter::new(&dir);
+    s.run_observed(2, &mut [&mut writer]).unwrap();
+
+    let a = analyze_dir(&dir).unwrap();
+    assert!(a.wire_us > 0.0, "paced deliveries must record wire time");
+    let eff = a.overlap_efficiency.expect("efficiency defined when wire > 0");
+    assert!((0.0..=1.0).contains(&eff), "efficiency in [0,1]: {eff}");
+    assert!(!a.steps.is_empty() && a.ranks.len() == 4);
+    assert!(a.summary().contains("overlap efficiency"), "{}", a.summary());
+
+    // in-memory analysis agrees with the directory round-trip
+    let b = analyze(s.trace_events().unwrap());
+    assert_eq!(a, b);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn sequential_trace_covers_the_step_phases() {
+    let s = run(false, true, 61);
+    let events = s.trace_events().unwrap();
+    for want in [
+        Phase::Materialize,
+        Phase::Gate,
+        Phase::ExpertFwd,
+        Phase::ExpertBwd,
+        Phase::SprsWait,
+        Phase::Adam,
+        Phase::SpagIssue,
+        Phase::SprsIssue,
+    ] {
+        assert!(events.iter().any(|e| e.phase == want), "missing {want:?}");
+    }
+    assert!(events.iter().all(|e| e.rank == 0), "sequential engine records as rank 0");
+}
