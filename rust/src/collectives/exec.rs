@@ -81,6 +81,13 @@ impl BufferPool {
     pub fn idle(&self) -> usize {
         self.free.len()
     }
+
+    /// Bytes of capacity held idle on the free list ([`BufferPool::put`]
+    /// clears returned buffers, so lengths are 0 — the held memory is the
+    /// capacity).
+    pub fn idle_bytes(&self) -> u64 {
+        self.free.iter().map(|b| b.capacity() as u64 * 4).sum()
+    }
 }
 
 /// Per-device chunk buffers.
@@ -488,6 +495,8 @@ mod tests {
         assert_eq!((pool.allocated, pool.reused), (1, 0));
         pool.put(a);
         assert_eq!(pool.idle(), 1);
+        // put() clears the buffer, so held memory is capacity, not length
+        assert!(pool.idle_bytes() >= 8 * 4, "idle bytes track capacity");
         let b = pool.take_copy(&[1.0, 2.0, 3.0]);
         assert_eq!(b, vec![1.0, 2.0, 3.0]);
         assert_eq!((pool.allocated, pool.reused), (1, 1));

@@ -13,9 +13,11 @@
 //!                  [--parallel [--threads N]] [--pacing a,b]   (SPMD executor)
 //!                  [--compute-threads T]       (sequential executor: threaded expert loops)
 //!                  [--trace-out DIR]           (per-rank Chrome trace + JSONL events)
+//!                  [--metrics-out DIR]         (memory ledger + load observatory export)
 //! hecate checkpoint --dir DIR [--devices N --iters K]          (hermetic snapshot demo)
 //! hecate resume     --dir DIR [--devices M --iters K]          (elastic resume demo)
 //! hecate trace analyze DIR                    (critical path / overlap / stragglers)
+//! hecate metrics report DIR                   (peak memory / predictor accuracy / imbalance)
 //! hecate bench spmd [--iters N --quick]       (thread scaling + cross-layer overlap)
 //! hecate bench step [--iters N --quick --json --compute-threads T]  (per-phase step times)
 //!                  [--check [--gate-tol F]]   (CI perf gate vs committed baseline)
@@ -31,7 +33,7 @@ use std::path::Path;
 
 use crate::checkpoint::faults::FaultSpec;
 use crate::config::{ClusterPreset, ModelConfig, SystemConfig, SystemKind, TrainConfig};
-use crate::fssdp::{self, Executor, PrintObserver, Session, SessionConfig};
+use crate::fssdp::{self, Executor, PrintObserver, Session, SessionConfig, StepObserver};
 use crate::sim::engine::{simulate, simulate_with_faults};
 use crate::sim::report;
 use crate::util::cli::Args;
@@ -52,6 +54,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "checkpoint" => cmd_checkpoint(&args),
         "resume" => cmd_resume(&args),
         "trace" => cmd_trace(&args),
+        "metrics" => cmd_metrics(&args),
         "bench" => cmd_bench(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -78,10 +81,12 @@ fn print_usage() {
          [--parallel [--threads N]]   (SPMD executor: one thread per rank)\n                  \
          [--pacing ALPHA,BETA]   (SPMD α–β link pacing: latency s, s/byte)\n                  \
          [--compute-threads T]   (sequential executor: threaded expert loops, bit-identical)\n                  \
-         [--trace-out DIR]   (write per-rank Chrome trace + JSONL events to DIR)\n  \
+         [--trace-out DIR]   (write per-rank Chrome trace + JSONL events to DIR)\n                  \
+         [--metrics-out DIR]   (write the memory ledger + load observatory to DIR)\n  \
          hecate checkpoint --dir DIR [--nodes N --devices N --layers L --iters K --seed S]\n  \
          hecate resume     --dir DIR [--nodes N --devices M --iters K]\n  \
          hecate trace analyze DIR   (critical path, overlap efficiency, straggler report)\n  \
+         hecate metrics report DIR   (peak-memory, predictor-accuracy, imbalance tables)\n  \
          hecate bench spmd [--iters N] [--quick]   (thread scaling + cross-layer overlap)\n  \
          hecate bench step [--iters N] [--quick] [--json] [--compute-threads T]\n                  \
          [--check [--gate-tol F]]   (per-phase step times; --json writes\n                  \
@@ -270,7 +275,7 @@ fn cmd_fssdp(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&[
         "devices", "iters", "artifacts", "nodes", "seed", "layers", "reshard-every",
         "checkpoint-every", "checkpoint-dir", "resume", "reference", "parallel", "threads",
-        "pacing", "compute-threads", "trace-out",
+        "pacing", "compute-threads", "trace-out", "metrics-out",
     ])?;
     let mut b = SessionConfig::builder()
         .cluster(args.usize_or("nodes", 2)?, args.usize_or("devices", 8)?)
@@ -303,6 +308,9 @@ fn cmd_fssdp(args: &Args) -> anyhow::Result<()> {
     if let Some(d) = args.str_opt("trace-out")? {
         b = b.trace_out(d);
     }
+    if let Some(d) = args.str_opt("metrics-out")? {
+        b = b.metrics_out(d);
+    }
     run_fssdp_session(b.build()?, args.str_opt("resume")?, args.usize_or("iters", 10)?)
 }
 
@@ -315,6 +323,7 @@ fn run_fssdp_session(
     iters: usize,
 ) -> anyhow::Result<()> {
     let trace_dir = cfg.telemetry().trace_dir.clone();
+    let metrics_dir = cfg.telemetry().metrics_dir.clone();
     println!(
         "FSSDP numeric engine on {} ({} devices)",
         cfg.topology().name,
@@ -361,24 +370,42 @@ fn run_fssdp_session(
         }
     );
 
+    // Compose the observer set: console always, plus the trace and
+    // metrics writers when their export directories are configured.
     let mut console = PrintObserver;
-    match trace_dir.as_deref() {
-        Some(dir) => {
-            let mut writer = crate::telemetry::TraceWriter::new(dir);
-            session.run_observed(iters, &mut [&mut console, &mut writer])?;
-            println!(
-                "trace: {} events -> {dir}/{{{}, {}}} (load {}/{} in Perfetto / \
-                 chrome://tracing; `hecate trace analyze {dir}` for the report)",
-                writer.exported(),
-                crate::telemetry::CHROME_TRACE_FILE,
-                crate::telemetry::EVENTS_FILE,
-                dir,
-                crate::telemetry::CHROME_TRACE_FILE,
-            );
+    let mut trace_writer = trace_dir.as_deref().map(crate::telemetry::TraceWriter::new);
+    let mut metrics_writer =
+        metrics_dir.as_deref().map(crate::telemetry::metrics_io::MetricsWriter::new);
+    {
+        let mut observers: Vec<&mut dyn StepObserver> = vec![&mut console];
+        if let Some(w) = trace_writer.as_mut() {
+            observers.push(w);
         }
-        None => {
-            session.run_observed(iters, &mut [&mut console])?;
+        if let Some(w) = metrics_writer.as_mut() {
+            observers.push(w);
         }
+        session.run_observed(iters, &mut observers)?;
+    }
+    if let (Some(w), Some(dir)) = (&trace_writer, trace_dir.as_deref()) {
+        println!(
+            "trace: {} events -> {dir}/{{{}, {}}} (load {}/{} in Perfetto / \
+             chrome://tracing; `hecate trace analyze {dir}` for the report)",
+            w.exported(),
+            crate::telemetry::CHROME_TRACE_FILE,
+            crate::telemetry::EVENTS_FILE,
+            dir,
+            crate::telemetry::CHROME_TRACE_FILE,
+        );
+    }
+    if let (Some(w), Some(dir)) = (&metrics_writer, metrics_dir.as_deref()) {
+        println!(
+            "metrics: {} samples -> {dir}/{{{}, {}, {}}} (`hecate metrics report {dir}` \
+             for the tables)",
+            w.exported(),
+            crate::telemetry::metrics_io::METRICS_JSONL_FILE,
+            crate::telemetry::metrics_io::METRICS_PROM_FILE,
+            crate::telemetry::metrics_io::COUNTERS_FILE,
+        );
     }
     if session.reshards_moved() > 0 {
         println!("re-shards moved {} expert(s) in total", session.reshards_moved());
@@ -504,6 +531,41 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     println!("\n-- per-rank straggler report --");
     print!("{}", a.straggler_table().to_markdown());
     println!("\n{}", a.summary());
+    Ok(())
+}
+
+/// `hecate metrics report DIR`: offline report over a `--metrics-out`
+/// directory — the per-rank peak-memory table (measured vs analytic
+/// baselines), the predictor-accuracy table, and the imbalance timeline.
+fn cmd_metrics(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["dir"])?;
+    let action = args.positional.first().cloned().unwrap_or_default();
+    anyhow::ensure!(
+        action == "report",
+        "unknown metrics action `{action}` (usage: hecate metrics report DIR)"
+    );
+    let dir = args
+        .str_opt("dir")?
+        .or_else(|| args.positional.get(1).cloned())
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "metrics report expects a directory (--metrics-out of a previous run)"
+            )
+        })?;
+    let log = crate::telemetry::metrics_io::load_metrics(Path::new(&dir))?;
+    println!("== Metrics report: {dir} ==\n");
+    print!("{}", log.peak_memory_table());
+    println!();
+    print!("{}", log.predictor_table());
+    println!();
+    print!("{}", log.imbalance_timeline());
+    // Round-trip the Prometheus exposition through the parser when it is
+    // present — the export sanity check CI leans on.
+    let prom = Path::new(&dir).join(crate::telemetry::metrics_io::METRICS_PROM_FILE);
+    if let Ok(text) = std::fs::read_to_string(&prom) {
+        let samples = crate::metrics::registry::parse_prometheus(&text)?;
+        println!("\nprometheus exposition: {} samples ({})", samples.len(), prom.display());
+    }
     Ok(())
 }
 
@@ -681,6 +743,58 @@ mod tests {
         assert!(run(argv(&["trace", "analyze", &d])).is_err());
         assert!(run(argv(&["trace", "export", &d])).is_err());
         assert!(run(argv(&["trace"])).is_err());
+    }
+
+    #[test]
+    fn metrics_out_writes_exports_and_report_reads_them() {
+        let dir = std::env::temp_dir()
+            .join(format!("hecate-coord-metrics-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let d = dir.to_str().unwrap().to_string();
+        run(argv(&[
+            "fssdp", "--reference", "--parallel", "--devices", "4", "--nodes", "2",
+            "--layers", "2", "--iters", "2", "--metrics-out", &d,
+        ]))
+        .unwrap();
+        assert!(dir.join(crate::telemetry::metrics_io::METRICS_JSONL_FILE).exists());
+        assert!(dir.join(crate::telemetry::metrics_io::METRICS_PROM_FILE).exists());
+        assert!(dir.join(crate::telemetry::metrics_io::COUNTERS_FILE).exists());
+        // both argument spellings of the report work on the result
+        run(argv(&["metrics", "report", &d])).unwrap();
+        run(argv(&["metrics", "report", "--dir", &d])).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+        // a missing directory exits with a clear typed error; so do a
+        // bogus action and a missing argument
+        let err = run(argv(&["metrics", "report", &d])).unwrap_err().to_string();
+        assert!(err.contains("does not exist"), "{err}");
+        assert!(run(argv(&["metrics", "export", &d])).is_err());
+        assert!(run(argv(&["metrics"])).is_err());
+    }
+
+    #[test]
+    fn trace_and_metrics_together_put_counter_rows_in_the_chrome_trace() {
+        let dir = std::env::temp_dir()
+            .join(format!("hecate-coord-trmet-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let d = dir.to_str().unwrap().to_string();
+        run(argv(&[
+            "fssdp", "--reference", "--parallel", "--devices", "4", "--nodes", "2",
+            "--layers", "2", "--iters", "2", "--trace-out", &d, "--metrics-out", &d,
+        ]))
+        .unwrap();
+        let text =
+            std::fs::read_to_string(dir.join(crate::telemetry::CHROME_TRACE_FILE)).unwrap();
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        let rows = doc.req("traceEvents").unwrap().as_arr().unwrap().to_vec();
+        let ph = |row: &crate::util::json::Json| {
+            row.get("ph").and_then(|p| p.as_str()).map(str::to_string)
+        };
+        assert!(
+            rows.iter().any(|r| ph(r).as_deref() == Some("C")),
+            "counter tracks render next to the spans"
+        );
+        assert!(rows.iter().any(|r| ph(r).as_deref() == Some("X")), "span rows still present");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

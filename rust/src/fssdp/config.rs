@@ -64,6 +64,8 @@ pub enum ConfigError {
     ZeroComputeThreads,
     /// `--trace-out` with an empty/blank directory path.
     TraceOutEmpty,
+    /// `--metrics-out` with an empty/blank directory path.
+    MetricsOutEmpty,
 }
 
 impl fmt::Display for ConfigError {
@@ -115,6 +117,9 @@ impl fmt::Display for ConfigError {
             }
             ConfigError::TraceOutEmpty => {
                 write!(f, "--trace-out expects a non-empty directory path")
+            }
+            ConfigError::MetricsOutEmpty => {
+                write!(f, "--metrics-out expects a non-empty directory path")
             }
         }
     }
@@ -405,6 +410,26 @@ impl SessionConfigBuilder {
         self
     }
 
+    /// Enable metering without file export: the engine's step meter
+    /// records the memory ledger + load observatory in memory, readable
+    /// via `Session::meter_samples`. Metering is observational only —
+    /// metered runs stay bit-identical to unmetered ones on every
+    /// executor.
+    pub fn metrics(mut self, on: bool) -> Self {
+        self.telemetry.metrics = on;
+        self
+    }
+
+    /// Enable metering and export into `dir` (`--metrics-out`): a JSONL
+    /// time series, a Prometheus-style text exposition, and a standalone
+    /// Chrome-trace counter document, written at every span boundary.
+    /// Implies [`Self::metrics`]`(true)`.
+    pub fn metrics_out(mut self, dir: impl Into<String>) -> Self {
+        self.telemetry.metrics = true;
+        self.telemetry.metrics_dir = Some(dir.into());
+        self
+    }
+
     /// Validate and freeze the configuration. Validation order matches the
     /// legacy CLI so the first error reported is unchanged.
     pub fn build(self) -> Result<SessionConfig, ConfigError> {
@@ -445,6 +470,11 @@ impl SessionConfigBuilder {
         if let Some(d) = &self.telemetry.trace_dir {
             if d.trim().is_empty() {
                 return Err(ConfigError::TraceOutEmpty);
+            }
+        }
+        if let Some(d) = &self.telemetry.metrics_dir {
+            if d.trim().is_empty() {
+                return Err(ConfigError::MetricsOutEmpty);
             }
         }
         let executor = if self.parallel {
@@ -628,6 +658,25 @@ mod tests {
         let cfg = base().cluster(2, 4).trace_out("/tmp/trace").build().unwrap();
         assert!(cfg.telemetry().enabled, "trace_out implies enabled");
         assert_eq!(cfg.telemetry().trace_dir.as_deref(), Some("/tmp/trace"));
+    }
+
+    #[test]
+    fn empty_metrics_out_error_string() {
+        let err = base().cluster(2, 4).metrics_out("   ").build().unwrap_err();
+        assert_eq!(err, ConfigError::MetricsOutEmpty);
+        assert_eq!(err.to_string(), "--metrics-out expects a non-empty directory path");
+    }
+
+    #[test]
+    fn metrics_flags_reach_the_config() {
+        let cfg = base().cluster(2, 4).build().unwrap();
+        assert!(!cfg.telemetry().metrics, "metering is off by default");
+        let cfg = base().cluster(2, 4).metrics(true).build().unwrap();
+        assert!(cfg.telemetry().metrics);
+        assert_eq!(cfg.telemetry().metrics_dir, None);
+        let cfg = base().cluster(2, 4).metrics_out("/tmp/metrics").build().unwrap();
+        assert!(cfg.telemetry().metrics, "metrics_out implies enabled");
+        assert_eq!(cfg.telemetry().metrics_dir.as_deref(), Some("/tmp/metrics"));
     }
 
     // ---- pacing parse ----

@@ -837,6 +837,10 @@ pub struct FssdpEngine {
     /// tracing is disabled — every instrumentation site is then a single
     /// branch on this option, allocating nothing.
     pub(crate) tracer: Option<crate::telemetry::TraceRecorder>,
+    /// Step meter: the per-rank memory ledger + load observatory. `None`
+    /// when metering is disabled — the same zero-overhead discipline as
+    /// `tracer` (one `Option` branch per instrumentation site).
+    pub(crate) meter: Option<crate::metrics::meter::StepMeter>,
 }
 
 impl FssdpEngine {
@@ -934,6 +938,7 @@ impl FssdpEngine {
             rng,
             spmd_metrics: None,
             tracer: None,
+            meter: None,
         }
     }
 
@@ -1049,15 +1054,24 @@ impl FssdpEngine {
 
         // All layers' plans are knowable up front: predictions use history
         // through iteration `iter - 1` only.
+        let metered = self.meter.is_some();
         let mut plans = Vec::with_capacity(nl);
+        let mut preds: Vec<Vec<f64>> = Vec::new();
         for ls in &self.layers {
-            plans.push(build_iter_plan(&self.topo, &ls.shards, &ls.predictor.predict(), cons)?);
+            let pred = ls.predictor.predict();
+            plans.push(build_iter_plan(&self.topo, &ls.shards, &pred, cons)?);
+            if metered {
+                // keep the plan-time prediction so the meter can score it
+                // against the realized loads below
+                preds.push(pred);
+            }
         }
 
         // Split the engine into disjoint field borrows: the expert loops
         // read the parameter stores while the compute backend and the
         // workspace are borrowed mutably — disjoint by field.
-        let FssdpEngine { topo, layers, compute, workspace: ws, phases, tracer, .. } = self;
+        let FssdpEngine { topo, layers, compute, workspace: ws, phases, tracer, meter, .. } =
+            self;
         let topo: &Topology = topo;
         ws.ensure_shape(nl, sources, &dims);
         let pool_allocs0 = ws.pool.allocated;
@@ -1091,6 +1105,19 @@ impl FssdpEngine {
             if let Some(tr) = tracer {
                 tr.span_from(TracePhase::Materialize, iter as usize, l, t0, 0);
             }
+            if let Some(m) = meter {
+                // memory ledger: sample right after spAG — the layer's
+                // per-iteration peak (owned shards + materialized
+                // replicas). The workspace pool is shared across simulated
+                // devices here, so its idle bytes repeat per rank row;
+                // there is no wire, so payload bytes are 0.
+                let pool_idle = ws.pool.idle_bytes();
+                for d in 0..nd {
+                    let resident =
+                        layers[l].params.dev(DeviceId(d)).resident_len() as u64 * 4;
+                    m.sample_mem(iter as usize, l, d, resident, pool_idle, 0);
+                }
+            }
 
             // gate per source on this layer's input activations (borrowed
             // weights and activations, reused output buffers)
@@ -1109,6 +1136,12 @@ impl FssdpEngine {
             }
             // realized loads feed this layer's predictor for the NEXT iter
             let realized = realized_loads(dims.experts, &ws.gate_idx);
+            if let Some(m) = meter {
+                // load observatory: score the plan-time prediction against
+                // what the gate actually produced, before the predictor
+                // absorbs it
+                m.sample_load(iter as usize, l, &preds[l], &realized);
+            }
             layers[l].predictor.observe(&realized);
             phases.gate += t0.elapsed();
             if let Some(tr) = tracer {
@@ -1457,12 +1490,9 @@ impl FssdpEngine {
                 );
             }
         }
-        if let Some(acc) = &mut span_metrics {
-            // `merge` summed the per-sub-span `spmd.ranks` gauge; restore it
-            // to the actual rank count.
-            acc.set("spmd.ranks", self.topo.num_devices() as f64);
-        }
         if span_metrics.is_some() {
+            // gauges (`spmd.ranks`, pool levels) take max under `merge`,
+            // so sub-span aggregation needs no fix-ups
             self.spmd_metrics = span_metrics;
         }
         Ok(out)
@@ -1506,6 +1536,12 @@ impl FssdpEngine {
     /// tracing is disabled).
     pub fn trace_events(&self) -> Option<&[crate::telemetry::Event]> {
         self.tracer.as_ref().map(|t| t.events())
+    }
+
+    /// The step meter — memory ledger + load observatory samples recorded
+    /// so far, merged across ranks (None when metering is disabled).
+    pub fn meter_samples(&self) -> Option<&crate::metrics::meter::StepMeter> {
+        self.meter.as_ref()
     }
 
     /// Drain the `(boundary_step, moved)` re-shard events of the most
@@ -1639,6 +1675,7 @@ impl FssdpEngine {
             rng: Rng::from_state(state.rng_state),
             spmd_metrics: None,
             tracer: None,
+            meter: None,
         };
         Ok((engine, plan))
     }
@@ -2002,6 +2039,23 @@ mod tests {
         // layer only — 15 spans per iteration.
         assert_eq!(events.len(), 10 * (2 * 7 + 1), "sequential span event count");
         assert!(events.iter().all(|ev| ev.rank == 0), "sequential events carry rank 0");
+    }
+
+    #[test]
+    fn metering_keeps_workspace_allocations_flat() {
+        // The memory ledger reads pool byte counts and pushes samples into
+        // the meter's own vecs — nothing on the numeric hot path may
+        // allocate for it, so the steady-state lock holds unchanged.
+        let mut e =
+            FssdpEngine::new_reference_layers(reference_dims(), 2, Topology::flat(1, 1e9), 3);
+        e.meter = Some(crate::metrics::meter::StepMeter::new(0));
+        let stats = e.run_span(0, 10, 4).unwrap();
+        for (i, s) in stats.iter().enumerate().skip(1) {
+            assert_eq!(s.ws_allocs, 0, "metered iteration {i} allocated {} buffers", s.ws_allocs);
+        }
+        let m = e.meter_samples().expect("meter installed");
+        assert_eq!(m.mem_samples().len(), 10 * 2, "10 iters x 2 layers x 1 device");
+        assert_eq!(m.load_samples().len(), 10 * 2);
     }
 
     #[test]

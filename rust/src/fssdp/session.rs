@@ -118,6 +118,13 @@ impl SpanCtx<'_> {
     pub fn trace_events(&self) -> Option<&[crate::telemetry::Event]> {
         self.engine.trace_events()
     }
+
+    /// The step meter — the per-rank memory ledger and load observatory —
+    /// accumulated so far (cumulative across spans), when metrics are
+    /// enabled. `None` with metering off.
+    pub fn meter_samples(&self) -> Option<&crate::metrics::meter::StepMeter> {
+        self.engine.meter_samples()
+    }
 }
 
 /// What [`Session::resume`] restored: the checkpointed position plus the
@@ -258,6 +265,17 @@ impl Session {
         // path allocates nothing extra.
         engine.tracer = if cfg.telemetry.enabled {
             Some(crate::telemetry::TraceRecorder::new(0))
+        } else {
+            None
+        };
+        // Metering follows the same discipline, and shares the tracer's
+        // epoch when both are on so counter tracks line up with span rows
+        // on one timeline.
+        engine.meter = if cfg.telemetry.metrics {
+            Some(match &engine.tracer {
+                Some(t) => crate::metrics::meter::StepMeter::with_epoch(t.epoch(), 0),
+                None => crate::metrics::meter::StepMeter::new(0),
+            })
         } else {
             None
         };
@@ -405,6 +423,12 @@ impl Session {
     /// enabled via the config. `None` with tracing off.
     pub fn trace_events(&self) -> Option<&[crate::telemetry::Event]> {
         self.engine.trace_events()
+    }
+
+    /// The step meter (memory ledger + load samples) accumulated so far,
+    /// when metrics are enabled via the config. `None` with metering off.
+    pub fn meter_samples(&self) -> Option<&crate::metrics::meter::StepMeter> {
+        self.engine.meter_samples()
     }
 
     /// The elastic-resume summary (None on fresh sessions).
@@ -629,6 +653,44 @@ mod tests {
             col.steps.iter().any(|(_, st)| st.ws_allocs > 0),
             "per-iteration allocation counts flow through on_step"
         );
+    }
+
+    #[test]
+    fn metrics_config_installs_meter_and_stays_bitwise() {
+        let mut plain = Session::fresh(cfg().layers(2).data_shards(4).build().unwrap()).unwrap();
+        let mut metered =
+            Session::fresh(cfg().layers(2).data_shards(4).metrics(true).build().unwrap())
+                .unwrap();
+        assert!(plain.meter_samples().is_none(), "metering is off by default");
+        plain.run(3).unwrap();
+        metered.run(3).unwrap();
+        assert_eq!(
+            all_chunks(plain.engine()),
+            all_chunks(metered.engine()),
+            "the ledger is observational: metered == unmetered bitwise"
+        );
+        let m = metered.meter_samples().expect("metrics(true) installs the meter");
+        // 3 iters x 2 layers x 4 devices memory rows; 3 x 2 load rows.
+        assert_eq!(m.mem_samples().len(), 3 * 2 * 4);
+        assert_eq!(m.load_samples().len(), 3 * 2);
+        assert!(m.mem_samples().iter().all(|s| s.resident_bytes > 0));
+    }
+
+    #[test]
+    fn span_ctx_exposes_meter_samples() {
+        struct Peek {
+            mem_rows: usize,
+        }
+        impl StepObserver for Peek {
+            fn on_span_end(&mut self, ctx: &SpanCtx<'_>) {
+                self.mem_rows = ctx.meter_samples().map(|m| m.mem_samples().len()).unwrap_or(0);
+            }
+        }
+        let mut s =
+            Session::fresh(cfg().data_shards(4).metrics(true).build().unwrap()).unwrap();
+        let mut peek = Peek { mem_rows: 0 };
+        s.run_observed(2, &mut [&mut peek]).unwrap();
+        assert_eq!(peek.mem_rows, 2 * 4, "2 iters x 1 layer x 4 devices");
     }
 
     #[test]

@@ -1,0 +1,376 @@
+//! The step meter: per-rank memory ledger + expert-load observatory.
+//!
+//! A [`StepMeter`] is the state-domain twin of the telemetry
+//! `TraceRecorder` (PR 6 covered the *time* domain): when metering is on,
+//! the engine holds `Some(StepMeter)` and every step samples
+//!
+//! * **memory** — resident expert bytes per rank per layer (right after
+//!   spAG materializes the layer, i.e. the per-iteration peak of
+//!   shards + replicas), workspace-pool idle bytes, and the communicator
+//!   payload free-list bytes, with per-`(rank, layer)` high-water marks;
+//! * **load** — the realized expert-load distribution's imbalance ratio
+//!   (max/mean), gate entropy, and the `LoadPredictor`'s accuracy against
+//!   it (per-step MAE + rank-order correlation).
+//!
+//! Metering is purely observational: samples are *reads* of existing
+//! state, recorded into plain `Vec`s owned by the meter — the training
+//! math, the buffer pools, and the `ws_allocs == 0` steady-state lock are
+//! untouched, and a metered run is bit-identical to an unmetered one.
+//! Every instrumentation site is one `Option` branch, mirroring the
+//! tracing discipline.
+//!
+//! The analytic FSSDP memory model ([`MemModel`]) prices the same
+//! quantity from the iteration plan — placement chunks × chunk bytes —
+//! next to the replicated (every expert everywhere) and EP (shards only)
+//! baselines, so the measured ledger can be checked against expectation.
+
+use std::time::Instant;
+
+/// One memory-ledger sample (bytes, one rank × layer × iteration).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemSample {
+    /// Microseconds since the meter epoch (counter-track timestamp).
+    pub ts_us: f64,
+    pub iter: u32,
+    pub layer: u32,
+    pub rank: u32,
+    /// Chunk bytes resident in the layer's store right after spAG
+    /// (owned shards + materialized replicas — the per-iteration peak).
+    pub resident_bytes: u64,
+    /// Idle capacity held by the workspace [`BufferPool`] free list.
+    ///
+    /// [`BufferPool`]: crate::collectives::exec::BufferPool
+    pub pool_idle_bytes: u64,
+    /// Idle capacity held by the communicator payload free list
+    /// (0 on the sequential executor — no wire).
+    pub payload_idle_bytes: u64,
+}
+
+/// One load-observatory sample (one layer × iteration; the control plane
+/// is replicated, so SPMD records these on rank 0 only).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadSample {
+    /// Microseconds since the meter epoch (counter-track timestamp).
+    pub ts_us: f64,
+    pub iter: u32,
+    pub layer: u32,
+    /// Imbalance ratio of the realized loads: max/mean (1.0 = perfectly
+    /// balanced; EP's straggler factor).
+    pub imbalance: f64,
+    /// Gate entropy of the realized distribution, −Σ p·ln p (nats).
+    pub entropy: f64,
+    /// Mean absolute error of the plan-time prediction vs realized loads.
+    pub mae: f64,
+    /// Spearman rank-order correlation of prediction vs realized loads
+    /// (0.0 when either side is constant, e.g. the uniform cold start).
+    pub rank_corr: f64,
+    /// Hottest realized expert fraction (the load histogram's tail).
+    pub max_load: f64,
+}
+
+/// Per-rank memory + load samples for a run, absorbed across SPMD ranks
+/// the way trace recorders are.
+#[derive(Debug, Clone)]
+pub struct StepMeter {
+    epoch: Instant,
+    rank: u32,
+    mem: Vec<MemSample>,
+    load: Vec<LoadSample>,
+}
+
+impl StepMeter {
+    /// Fresh meter for `rank`, with its own epoch.
+    pub fn new(rank: u32) -> StepMeter {
+        StepMeter::with_epoch(Instant::now(), rank)
+    }
+
+    /// Meter sharing an existing epoch (SPMD ranks share the tracer's so
+    /// counter tracks line up with span rows).
+    pub fn with_epoch(epoch: Instant, rank: u32) -> StepMeter {
+        StepMeter { epoch, rank, mem: Vec::new(), load: Vec::new() }
+    }
+
+    /// The shared epoch.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// The rank this meter records as (memory samples may override it
+    /// per call — the sequential engine meters all devices).
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    /// Record a memory-ledger sample for `(rank, layer)` at this instant.
+    pub fn sample_mem(
+        &mut self,
+        iter: usize,
+        layer: usize,
+        rank: usize,
+        resident_bytes: u64,
+        pool_idle_bytes: u64,
+        payload_idle_bytes: u64,
+    ) {
+        self.mem.push(MemSample {
+            ts_us: self.epoch.elapsed().as_secs_f64() * 1e6,
+            iter: iter as u32,
+            layer: layer as u32,
+            rank: rank as u32,
+            resident_bytes,
+            pool_idle_bytes,
+            payload_idle_bytes,
+        });
+    }
+
+    /// Record a load-observatory sample: `predicted` is the plan-time
+    /// `LoadPredictor::predict()` output, `realized` the fractions the
+    /// gate actually produced.
+    pub fn sample_load(&mut self, iter: usize, layer: usize, predicted: &[f64], realized: &[f64]) {
+        self.load.push(LoadSample {
+            ts_us: self.epoch.elapsed().as_secs_f64() * 1e6,
+            iter: iter as u32,
+            layer: layer as u32,
+            imbalance: imbalance_ratio(realized),
+            entropy: gate_entropy(realized),
+            mae: mean_absolute_error(predicted, realized),
+            rank_corr: rank_correlation(predicted, realized),
+            max_load: realized.iter().cloned().fold(0.0, f64::max),
+        });
+    }
+
+    /// All memory samples, in record order.
+    pub fn mem_samples(&self) -> &[MemSample] {
+        &self.mem
+    }
+
+    /// All load samples, in record order.
+    pub fn load_samples(&self) -> &[LoadSample] {
+        &self.load
+    }
+
+    /// High-water resident bytes per `(rank, layer)`, derived from the
+    /// ledger (0 entries are never created — no samples, no water).
+    pub fn high_water(&self) -> std::collections::BTreeMap<(u32, u32), u64> {
+        let mut hw = std::collections::BTreeMap::new();
+        for s in &self.mem {
+            let e = hw.entry((s.rank, s.layer)).or_insert(0u64);
+            *e = (*e).max(s.resident_bytes);
+        }
+        hw
+    }
+
+    /// Absorb another rank's samples (SPMD span exit, rank order).
+    pub fn absorb(&mut self, other: StepMeter) {
+        self.mem.extend(other.mem);
+        self.load.extend(other.load);
+    }
+
+    /// Number of samples recorded (both ledgers).
+    pub fn len(&self) -> usize {
+        self.mem.len() + self.load.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mem.is_empty() && self.load.is_empty()
+    }
+}
+
+/// Analytic per-device memory model: FSSDP (placement chunks) vs the
+/// replicated baseline (every expert on every device) vs EP (shards
+/// only), all in bytes of expert parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemModel {
+    /// FSSDP: chunks the iteration plan materializes on the device
+    /// (shards + replicas) × chunk bytes.
+    pub fssdp_bytes: u64,
+    /// Replicated/DP baseline: all experts × chunk bytes.
+    pub replicated_bytes: u64,
+    /// EP baseline: owned shards only × chunk bytes.
+    pub ep_bytes: u64,
+}
+
+impl MemModel {
+    /// Price one device's layer from chunk counts.
+    pub fn per_device(
+        placement_chunks: usize,
+        shard_chunks: usize,
+        experts: usize,
+        chunk_len: usize,
+    ) -> MemModel {
+        let b = chunk_len as u64 * 4;
+        MemModel {
+            fssdp_bytes: placement_chunks as u64 * b,
+            replicated_bytes: experts as u64 * b,
+            ep_bytes: shard_chunks as u64 * b,
+        }
+    }
+}
+
+/// Imbalance ratio of a load distribution: max/mean (≥ 1.0 whenever the
+/// loads are non-negative and not all zero; 1.0 on empty/zero input).
+pub fn imbalance_ratio(loads: &[f64]) -> f64 {
+    if loads.is_empty() {
+        return 1.0;
+    }
+    let max = loads.iter().cloned().fold(f64::MIN, f64::max);
+    let mean = loads.iter().sum::<f64>() / loads.len() as f64;
+    if mean <= 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
+/// Gate entropy −Σ p·ln p over the distribution (zero entries skipped;
+/// the input need not be normalized — it is re-normalized first).
+pub fn gate_entropy(loads: &[f64]) -> f64 {
+    let total: f64 = loads.iter().filter(|&&p| p > 0.0).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    -loads
+        .iter()
+        .filter(|&&p| p > 0.0)
+        .map(|&p| {
+            let q = p / total;
+            q * q.ln()
+        })
+        .sum::<f64>()
+}
+
+/// Mean absolute error between two equal-length distributions.
+pub fn mean_absolute_error(pred: &[f64], real: &[f64]) -> f64 {
+    assert_eq!(pred.len(), real.len(), "MAE needs equal-length inputs");
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter().zip(real.iter()).map(|(a, b)| (a - b).abs()).sum::<f64>() / pred.len() as f64
+}
+
+/// Average fractional ranks (ties share the mean of the positions they
+/// occupy — standard Spearman tie handling).
+fn average_ranks(v: &[f64]) -> Vec<f64> {
+    let n = v.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| v[a].total_cmp(&v[b]));
+    let mut ranks = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && v[idx[j + 1]] == v[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0; // 1-based average position
+        for &k in &idx[i..=j] {
+            ranks[k] = avg;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+/// Spearman rank-order correlation of two equal-length sequences:
+/// Pearson correlation of their average ranks, in `[-1, 1]`. Returns 0.0
+/// when either side is constant (the uniform cold-start prediction has
+/// no ordering to correlate).
+pub fn rank_correlation(pred: &[f64], real: &[f64]) -> f64 {
+    assert_eq!(pred.len(), real.len(), "rank correlation needs equal-length inputs");
+    let n = pred.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let ra = average_ranks(pred);
+    let rb = average_ranks(real);
+    let mean = (n as f64 + 1.0) / 2.0; // ranks always average to this
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (a, b) in ra.iter().zip(rb.iter()) {
+        let da = a - mean;
+        let db = b - mean;
+        cov += da * db;
+        va += da * da;
+        vb += db * db;
+    }
+    if va <= 0.0 || vb <= 0.0 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imbalance_and_entropy_known_answers() {
+        assert_eq!(imbalance_ratio(&[0.25, 0.25, 0.25, 0.25]), 1.0);
+        // mean 0.25, max 0.7 → 2.8
+        let r = imbalance_ratio(&[0.7, 0.1, 0.1, 0.1]);
+        assert!((r - 2.8).abs() < 1e-12, "{r}");
+        assert_eq!(imbalance_ratio(&[]), 1.0);
+        assert_eq!(imbalance_ratio(&[0.0, 0.0]), 1.0);
+
+        // uniform over 4 → ln 4; degenerate → 0
+        assert!((gate_entropy(&[0.25; 4]) - 4.0f64.ln()).abs() < 1e-12);
+        assert_eq!(gate_entropy(&[1.0, 0.0, 0.0]), 0.0);
+        assert_eq!(gate_entropy(&[0.0; 3]), 0.0);
+    }
+
+    #[test]
+    fn mae_known_answer() {
+        // |0.5-0.25| + |0.25-0.25| + |0.25-0.5| = 0.5 over 3 experts
+        let mae = mean_absolute_error(&[0.5, 0.25, 0.25], &[0.25, 0.25, 0.5]);
+        assert!((mae - 0.5 / 3.0).abs() < 1e-12, "{mae}");
+        assert_eq!(mean_absolute_error(&[0.3, 0.7], &[0.3, 0.7]), 0.0);
+    }
+
+    #[test]
+    fn rank_correlation_known_answers() {
+        // perfectly concordant / discordant orderings
+        assert!((rank_correlation(&[0.1, 0.2, 0.3, 0.4], &[1.0, 2.0, 3.0, 4.0]) - 1.0).abs() < 1e-12);
+        assert!((rank_correlation(&[0.1, 0.2, 0.3, 0.4], &[4.0, 3.0, 2.0, 1.0]) + 1.0).abs() < 1e-12);
+        // constant side (uniform cold-start prediction) → defined as 0
+        assert_eq!(rank_correlation(&[0.25; 4], &[0.1, 0.2, 0.3, 0.4]), 0.0);
+        // hand-computed with one swap: ranks (1,2,3,4) vs (1,2,4,3)
+        // Spearman = 1 − 6·Σd²/(n(n²−1)) = 1 − 6·2/60 = 0.8
+        let r = rank_correlation(&[0.1, 0.2, 0.3, 0.4], &[0.1, 0.2, 0.4, 0.3]);
+        assert!((r - 0.8).abs() < 1e-12, "{r}");
+        // ties get average ranks: [1, 2, 2] → ranks (1, 2.5, 2.5)
+        let r = rank_correlation(&[1.0, 2.0, 2.0], &[1.0, 2.0, 3.0]);
+        assert!(r > 0.0 && r < 1.0, "tied ranks correlate partially: {r}");
+    }
+
+    #[test]
+    fn meter_samples_and_high_water() {
+        let mut m = StepMeter::new(0);
+        m.sample_mem(0, 0, 0, 1000, 64, 0);
+        m.sample_mem(1, 0, 0, 1400, 64, 0);
+        m.sample_mem(1, 1, 0, 600, 64, 0);
+        m.sample_load(0, 0, &[0.25; 4], &[0.4, 0.3, 0.2, 0.1]);
+        assert_eq!(m.mem_samples().len(), 3);
+        assert_eq!(m.load_samples().len(), 1);
+        assert_eq!(m.len(), 4);
+        let hw = m.high_water();
+        assert_eq!(hw[&(0, 0)], 1400);
+        assert_eq!(hw[&(0, 1)], 600);
+        // high-water dominates every sample
+        for s in m.mem_samples() {
+            assert!(hw[&(s.rank, s.layer)] >= s.resident_bytes);
+        }
+        // absorb another rank's meter
+        let mut other = StepMeter::with_epoch(m.epoch(), 1);
+        other.sample_mem(0, 0, 1, 2000, 0, 128);
+        m.absorb(other);
+        assert_eq!(m.mem_samples().len(), 4);
+        assert_eq!(m.high_water()[&(1, 0)], 2000);
+    }
+
+    #[test]
+    fn mem_model_per_device() {
+        let m = MemModel::per_device(5, 2, 8, 280);
+        assert_eq!(m.fssdp_bytes, 5 * 280 * 4);
+        assert_eq!(m.replicated_bytes, 8 * 280 * 4);
+        assert_eq!(m.ep_bytes, 2 * 280 * 4);
+    }
+}

@@ -1,14 +1,30 @@
 //! Metrics: named timers/counters and table rendering for the repro
 //! drivers (markdown + CSV so EXPERIMENTS.md rows are copy-pasteable).
+//!
+//! The string-keyed [`Metrics`] type below is the legacy shim; the typed
+//! registry ([`registry::Registry`] with `Counter`/`Gauge`/`Histogram`
+//! series and label sets) and the step meter ([`meter::StepMeter`], the
+//! per-rank memory ledger + load observatory) are the PR-7 surface.
 
-use std::collections::BTreeMap;
+pub mod meter;
+pub mod registry;
+
+use std::collections::{BTreeMap, BTreeSet};
 use std::time::{Duration, Instant};
 
 /// Accumulating named metrics.
+///
+/// Two merge semantics coexist under one key space: values written with
+/// [`Metrics::add`] are **counters** (summed by [`Metrics::merge`], the
+/// multi-rank aggregation), while values written with [`Metrics::set`]
+/// are **gauges** (per-rank levels; `merge` takes the max instead of
+/// inflating them by the rank count).
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
     counters: BTreeMap<String, f64>,
     timers: BTreeMap<String, Duration>,
+    /// Keys written via [`Metrics::set`]: gauge semantics under merge.
+    gauges: BTreeSet<String>,
 }
 
 impl Metrics {
@@ -27,6 +43,7 @@ impl Metrics {
     /// Overwrite a counter (gauges that must not sum under [`Metrics::merge`]).
     pub fn set(&mut self, name: &str, v: f64) {
         self.counters.insert(name.to_string(), v);
+        self.gauges.insert(name.to_string());
     }
 
     /// Accumulate an externally measured duration (for call sites where a
@@ -35,13 +52,24 @@ impl Metrics {
         *self.timers.entry(name.to_string()).or_default() += d;
     }
 
-    /// Merge another metrics set into this one, summing counters and
-    /// timers. This is the multi-rank aggregation path: each SPMD rank
+    /// Merge another metrics set into this one: counters and timers sum,
+    /// gauges (keys written via [`Metrics::set`] on either side) take the
+    /// max. This is the multi-rank aggregation path: each SPMD rank
     /// records into a local `Metrics` (no locks on the hot path) and the
-    /// executor merges them after the span.
+    /// executor merges them after the span — summing a per-rank gauge
+    /// like `spmd.ws_allocs` across N ranks would inflate it N×, so the
+    /// merged gauge reports the worst rank instead.
     pub fn merge(&mut self, other: &Metrics) {
         for (k, v) in &other.counters {
-            *self.counters.entry(k.clone()).or_default() += v;
+            if self.gauges.contains(k) || other.gauges.contains(k) {
+                let e = self.counters.entry(k.clone()).or_insert(f64::NEG_INFINITY);
+                *e = e.max(*v);
+            } else {
+                *self.counters.entry(k.clone()).or_default() += v;
+            }
+        }
+        for g in &other.gauges {
+            self.gauges.insert(g.clone());
         }
         for (k, v) in &other.timers {
             *self.timers.entry(k.clone()).or_default() += *v;
@@ -177,6 +205,27 @@ mod tests {
         a.merge(&Metrics::new());
         assert_eq!(a.counter("tokens"), snapshot.counter("tokens"));
         assert_eq!(a.timer("compute"), snapshot.timer("compute"));
+    }
+
+    #[test]
+    fn gauges_take_max_under_an_8_rank_merge() {
+        // Regression: per-rank gauges written via `set()` (pool levels,
+        // `spmd.ws_allocs`) were summed across ranks on merge, reporting
+        // 8× the actual per-rank value after an 8-rank span.
+        let mut merged = Metrics::new();
+        for rank in 0..8 {
+            let mut m = Metrics::new();
+            m.set("spmd.ws_allocs", 3.0); // same level on every rank
+            m.set("pool.idle", rank as f64); // rank 7 holds the most
+            m.add("spmd.sends", 10.0); // counters still sum
+            merged.merge(&m);
+        }
+        assert_eq!(merged.counter("spmd.ws_allocs"), 3.0, "gauge must not sum");
+        assert_eq!(merged.counter("pool.idle"), 7.0, "gauge merge takes the max");
+        assert_eq!(merged.counter("spmd.sends"), 80.0, "counters keep summing");
+        // a later local set() still overwrites
+        merged.set("pool.idle", 1.0);
+        assert_eq!(merged.counter("pool.idle"), 1.0);
     }
 
     #[test]

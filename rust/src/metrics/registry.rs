@@ -1,0 +1,434 @@
+//! Typed metrics registry: `Counter` / `Gauge` / `Histogram` series with
+//! label sets, per-rank instances merged with correct semantics (counters
+//! sum, gauges take the max, histograms merge bucket-wise), and a
+//! Prometheus-style text exposition with a matching parser so exports can
+//! be round-trip checked.
+//!
+//! The registry is plain data — no interior mutability, no locks: each
+//! SPMD rank records into its own [`Registry`] and the executor calls
+//! [`Registry::merge`] after the span, mirroring the legacy
+//! [`Metrics`](super::Metrics) aggregation path.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Number of log-2 histogram buckets. Bucket `i` counts observations with
+/// `value <= 2^i` (bucket 0 also catches everything `<= 1`, including
+/// zero and negatives); values beyond the last bound land in the overflow
+/// bucket rendered as `+Inf`.
+pub const HISTOGRAM_BUCKETS: usize = 40;
+
+/// One metric series: the merge/exposition semantics plus the value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Series {
+    /// Monotone total; merge sums.
+    Counter(f64),
+    /// Instantaneous level; merge takes the max (the worst rank).
+    Gauge(f64),
+    /// Fixed log-2-bucket distribution; merge adds bucket-wise.
+    Histogram(Histogram),
+}
+
+/// Fixed-bucket log-2 histogram (`HISTOGRAM_BUCKETS` bounds `2^0..2^39`
+/// plus an overflow bucket), with the running count and sum Prometheus
+/// exposition needs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    /// `buckets[i]` counts observations `<= 2^i`; the last slot is the
+    /// `+Inf` overflow bucket.
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram { buckets: vec![0; HISTOGRAM_BUCKETS + 1], count: 0, sum: 0.0 }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Index of the first bucket whose upper bound covers `v`.
+    fn bucket_index(v: f64) -> usize {
+        if !v.is_finite() {
+            return HISTOGRAM_BUCKETS; // overflow bucket
+        }
+        let mut bound = 1.0f64;
+        for i in 0..HISTOGRAM_BUCKETS {
+            if v <= bound {
+                return i;
+            }
+            bound *= 2.0;
+        }
+        HISTOGRAM_BUCKETS
+    }
+
+    /// Record one observation.
+    pub fn observe(&mut self, v: f64) {
+        self.buckets[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all observed values.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Per-bucket counts (non-cumulative), overflow bucket last.
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Upper bound of bucket `i` (`None` for the overflow bucket).
+    pub fn bound(i: usize) -> Option<f64> {
+        (i < HISTOGRAM_BUCKETS).then(|| 2.0f64.powi(i as i32))
+    }
+
+    /// Bucket-wise merge: distributions from different ranks add.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+}
+
+/// Series identity: metric name plus a sorted label set
+/// (`BTreeMap` keeps the exposition deterministic).
+pub type Labels = BTreeMap<String, String>;
+
+/// Helper: build a label set from `(key, value)` pairs.
+pub fn labels(pairs: &[(&str, &str)]) -> Labels {
+    pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+/// The typed registry: `(name, labels) → Series`.
+#[derive(Debug, Default, Clone)]
+pub struct Registry {
+    series: BTreeMap<(String, Labels), Series>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Add to a counter series (created at zero on first touch).
+    pub fn counter_add(&mut self, name: &str, labels: Labels, v: f64) {
+        let e = self
+            .series
+            .entry((name.to_string(), labels))
+            .or_insert(Series::Counter(0.0));
+        match e {
+            Series::Counter(c) => *c += v,
+            other => panic!("metric {name} is not a counter: {other:?}"),
+        }
+    }
+
+    /// Set a gauge series to an instantaneous level.
+    pub fn gauge_set(&mut self, name: &str, labels: Labels, v: f64) {
+        let e = self
+            .series
+            .entry((name.to_string(), labels))
+            .or_insert(Series::Gauge(f64::NEG_INFINITY));
+        match e {
+            Series::Gauge(g) => *g = v,
+            other => panic!("metric {name} is not a gauge: {other:?}"),
+        }
+    }
+
+    /// Record one observation into a histogram series.
+    pub fn histogram_observe(&mut self, name: &str, labels: Labels, v: f64) {
+        let e = self
+            .series
+            .entry((name.to_string(), labels))
+            .or_insert_with(|| Series::Histogram(Histogram::new()));
+        match e {
+            Series::Histogram(h) => h.observe(v),
+            other => panic!("metric {name} is not a histogram: {other:?}"),
+        }
+    }
+
+    /// Read a series back (exact name + label match).
+    pub fn get(&self, name: &str, labels: &Labels) -> Option<&Series> {
+        self.series.get(&(name.to_string(), labels.clone()))
+    }
+
+    /// Scalar value of a counter/gauge series, 0.0 when absent.
+    pub fn value(&self, name: &str, labels: &Labels) -> f64 {
+        match self.get(name, labels) {
+            Some(Series::Counter(v)) | Some(Series::Gauge(v)) => *v,
+            _ => 0.0,
+        }
+    }
+
+    /// Number of series.
+    pub fn len(&self) -> usize {
+        self.series.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.series.is_empty()
+    }
+
+    /// All series in deterministic `(name, labels)` order.
+    pub fn iter(&self) -> impl Iterator<Item = (&(String, Labels), &Series)> {
+        self.series.iter()
+    }
+
+    /// Multi-rank aggregation: counters sum, gauges take the max,
+    /// histograms merge bucket-wise. A series kind mismatch between the
+    /// two registries is a programming error and panics.
+    pub fn merge(&mut self, other: &Registry) {
+        for (key, s) in &other.series {
+            match self.series.get_mut(key) {
+                None => {
+                    self.series.insert(key.clone(), s.clone());
+                }
+                Some(mine) => match (mine, s) {
+                    (Series::Counter(a), Series::Counter(b)) => *a += b,
+                    (Series::Gauge(a), Series::Gauge(b)) => *a = a.max(*b),
+                    (Series::Histogram(a), Series::Histogram(b)) => a.merge(b),
+                    (mine, s) => {
+                        panic!("metric {} kind mismatch: {mine:?} vs {s:?}", key.0)
+                    }
+                },
+            }
+        }
+    }
+
+    /// Prometheus text exposition: `# TYPE` comment per metric name, one
+    /// sample line per series, histograms expanded into cumulative
+    /// `_bucket{le=…}` lines plus `_sum`/`_count`.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_name: Option<&str> = None;
+        for ((name, labels), s) in &self.series {
+            if last_name != Some(name.as_str()) {
+                let kind = match s {
+                    Series::Counter(_) => "counter",
+                    Series::Gauge(_) => "gauge",
+                    Series::Histogram(_) => "histogram",
+                };
+                let _ = writeln!(out, "# TYPE {name} {kind}");
+                last_name = Some(name.as_str());
+            }
+            match s {
+                Series::Counter(v) | Series::Gauge(v) => {
+                    let _ = writeln!(out, "{name}{} {v}", render_labels(labels, None));
+                }
+                Series::Histogram(h) => {
+                    let mut cum = 0u64;
+                    for (i, n) in h.buckets().iter().enumerate() {
+                        cum += n;
+                        let le = Histogram::bound(i)
+                            .map(|b| format!("{b}"))
+                            .unwrap_or_else(|| "+Inf".to_string());
+                        let _ = writeln!(
+                            out,
+                            "{name}_bucket{} {cum}",
+                            render_labels(labels, Some(&le))
+                        );
+                    }
+                    let _ = writeln!(out, "{name}_sum{} {}", render_labels(labels, None), h.sum());
+                    let _ =
+                        writeln!(out, "{name}_count{} {}", render_labels(labels, None), h.count());
+                }
+            }
+        }
+        out
+    }
+}
+
+fn render_labels(labels: &Labels, le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+/// One parsed Prometheus sample line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PromSample {
+    pub name: String,
+    pub labels: Labels,
+    pub value: f64,
+}
+
+/// Minimal Prometheus text-format parser — enough to round-trip
+/// [`Registry::to_prometheus`] output (the CI export check). Comment and
+/// blank lines are skipped; anything else must be
+/// `name[{k="v",…}] value`.
+pub fn parse_prometheus(text: &str) -> anyhow::Result<Vec<PromSample>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let err = |what: &str| anyhow::anyhow!("prometheus line {}: {what}: `{line}`", i + 1);
+        let (head, value) = match line.rsplit_once(' ') {
+            Some(parts) => parts,
+            None => return Err(err("expected `name value`")),
+        };
+        let value: f64 = value.parse().map_err(|_| err("unparseable value"))?;
+        let (name, labels) = match head.split_once('{') {
+            None => (head.to_string(), Labels::new()),
+            Some((name, rest)) => {
+                let body = rest.strip_suffix('}').ok_or_else(|| err("unterminated labels"))?;
+                let mut labels = Labels::new();
+                for pair in body.split(',').filter(|p| !p.is_empty()) {
+                    let (k, v) = pair.split_once('=').ok_or_else(|| err("bad label pair"))?;
+                    let v = v
+                        .strip_prefix('"')
+                        .and_then(|v| v.strip_suffix('"'))
+                        .ok_or_else(|| err("unquoted label value"))?;
+                    labels.insert(k.to_string(), v.to_string());
+                }
+                (name.to_string(), labels)
+            }
+        };
+        out.push(PromSample { name, labels, value });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_histogram_merge_semantics() {
+        let mut a = Registry::new();
+        a.counter_add("sends", labels(&[("rank", "0")]), 10.0);
+        a.gauge_set("resident_bytes", labels(&[("rank", "0")]), 640.0);
+        a.histogram_observe("load", Labels::new(), 3.0);
+        let mut b = Registry::new();
+        b.counter_add("sends", labels(&[("rank", "0")]), 4.0);
+        b.gauge_set("resident_bytes", labels(&[("rank", "0")]), 320.0);
+        b.gauge_set("resident_bytes", labels(&[("rank", "1")]), 960.0);
+        b.histogram_observe("load", Labels::new(), 100.0);
+        a.merge(&b);
+        assert_eq!(a.value("sends", &labels(&[("rank", "0")])), 14.0);
+        assert_eq!(
+            a.value("resident_bytes", &labels(&[("rank", "0")])),
+            640.0,
+            "gauge merge takes the max, not the sum"
+        );
+        assert_eq!(a.value("resident_bytes", &labels(&[("rank", "1")])), 960.0);
+        match a.get("load", &Labels::new()).unwrap() {
+            Series::Histogram(h) => {
+                assert_eq!(h.count(), 2);
+                assert_eq!(h.sum(), 103.0);
+            }
+            other => panic!("not a histogram: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn histogram_buckets_are_log2_and_merge_bucket_wise() {
+        let mut h = Histogram::new();
+        // bucket bounds: 1, 2, 4, 8, …
+        h.observe(1.0); // bucket 0
+        h.observe(1.5); // bucket 1
+        h.observe(2.0); // bucket 1 (inclusive upper bound)
+        h.observe(7.0); // bucket 3
+        h.observe(f64::INFINITY); // overflow
+        assert_eq!(h.buckets()[0], 1);
+        assert_eq!(h.buckets()[1], 2);
+        assert_eq!(h.buckets()[2], 0);
+        assert_eq!(h.buckets()[3], 1);
+        assert_eq!(h.buckets()[HISTOGRAM_BUCKETS], 1);
+        assert_eq!(h.count(), 5);
+
+        let mut other = Histogram::new();
+        other.observe(0.0); // bucket 0 catches <= 1 including zero
+        other.observe(6.5); // bucket 3
+        h.merge(&other);
+        assert_eq!(h.buckets()[0], 2);
+        assert_eq!(h.buckets()[3], 2);
+        assert_eq!(h.count(), 7);
+        assert_eq!(Histogram::bound(3), Some(8.0));
+        assert_eq!(Histogram::bound(HISTOGRAM_BUCKETS), None);
+    }
+
+    #[test]
+    fn eight_rank_gauge_merge_regression() {
+        // Registry-level twin of the legacy Metrics regression: per-rank
+        // pool gauges must survive an 8-way merge un-inflated.
+        let mut merged = Registry::new();
+        for rank in 0..8 {
+            let mut r = Registry::new();
+            r.gauge_set("pool_idle_bytes", labels(&[("rank", &rank.to_string())]), 1024.0);
+            r.counter_add("steps", Labels::new(), 3.0);
+            merged.merge(&r);
+        }
+        for rank in 0..8 {
+            let l = labels(&[("rank", &rank.to_string())]);
+            assert_eq!(merged.value("pool_idle_bytes", &l), 1024.0);
+        }
+        assert_eq!(merged.value("steps", &Labels::new()), 24.0);
+    }
+
+    #[test]
+    fn prometheus_exposition_round_trips_through_the_parser() {
+        let mut r = Registry::new();
+        r.counter_add("spag_transfers_total", labels(&[("rank", "0"), ("layer", "1")]), 12.0);
+        r.gauge_set("resident_bytes", labels(&[("rank", "0")]), 4480.0);
+        r.histogram_observe("expert_load", Labels::new(), 3.0);
+        r.histogram_observe("expert_load", Labels::new(), 5.0);
+        let text = r.to_prometheus();
+        assert!(text.contains("# TYPE resident_bytes gauge"), "{text}");
+        assert!(text.contains("# TYPE expert_load histogram"), "{text}");
+        assert!(text.contains("expert_load_bucket{le=\"+Inf\"} 2"), "{text}");
+
+        let samples = parse_prometheus(&text).unwrap();
+        let find = |name: &str| samples.iter().find(|s| s.name == name).unwrap();
+        assert_eq!(find("resident_bytes").value, 4480.0);
+        assert_eq!(find("resident_bytes").labels, labels(&[("rank", "0")]));
+        assert_eq!(
+            find("spag_transfers_total").labels,
+            labels(&[("layer", "1"), ("rank", "0")])
+        );
+        assert_eq!(find("expert_load_sum").value, 8.0);
+        assert_eq!(find("expert_load_count").value, 2.0);
+        // cumulative buckets: le=4 covers 3, le=8 covers both
+        let bucket = |le: &str| {
+            samples
+                .iter()
+                .find(|s| {
+                    s.name == "expert_load_bucket" && s.labels.get("le").map(String::as_str) == Some(le)
+                })
+                .unwrap()
+                .value
+        };
+        assert_eq!(bucket("4"), 1.0);
+        assert_eq!(bucket("8"), 2.0);
+    }
+
+    #[test]
+    fn parser_rejects_malformed_lines() {
+        assert!(parse_prometheus("just_a_name").is_err());
+        assert!(parse_prometheus("name{k=\"v\" 1.0").is_err());
+        assert!(parse_prometheus("name{k=v} 1.0").is_err());
+        assert!(parse_prometheus("name notanumber").is_err());
+        // comments and blanks are fine
+        assert_eq!(parse_prometheus("# TYPE x counter\n\n").unwrap().len(), 0);
+    }
+}

@@ -323,7 +323,7 @@ pub fn spmd_scaling(iters: usize, quick: bool) -> anyhow::Result<Table> {
     let iters = iters.max(1);
     let mut t = Table::new(&[
         "threads", "modeled_comm_ms", "seq_ms_per_iter", "spmd_ms_per_iter", "speedup",
-        "straggler_skew",
+        "straggler_skew", "peak_resident_kb", "imbalance",
     ]);
     for &d in &[1usize, 2, 4, 8] {
         let topo =
@@ -337,9 +337,10 @@ pub fn spmd_scaling(iters: usize, quick: bool) -> anyhow::Result<Table> {
                 .seed(11)
                 .data_shards(d);
             if parallel {
-                // trace the SPMD run so the table can report realized
-                // per-rank compute skew next to the wall clock
-                b = b.parallel(true).threads(d).trace(true);
+                // trace + meter the SPMD run so the table can report
+                // realized compute skew, peak resident memory, and load
+                // imbalance next to the wall clock
+                b = b.parallel(true).threads(d).trace(true).metrics(true);
             }
             Session::fresh(b.build()?)
         };
@@ -368,6 +369,7 @@ pub fn spmd_scaling(iters: usize, quick: bool) -> anyhow::Result<Table> {
         let spmd = t0.elapsed().as_secs_f64() / iters as f64;
         let skew =
             crate::telemetry::analyze::analyze(par.trace_events().unwrap_or(&[])).max_skew();
+        let (peak_kb, imbalance) = meter_columns(par.meter_samples());
         t.row(vec![
             d.to_string(),
             format!("{:.4}", modeled * 1e3),
@@ -375,6 +377,8 @@ pub fn spmd_scaling(iters: usize, quick: bool) -> anyhow::Result<Table> {
             ms(spmd),
             fmt(seq / spmd.max(1e-12)),
             format!("{skew:.2}"),
+            format!("{peak_kb:.1}"),
+            format!("{imbalance:.2}"),
         ]);
     }
     Ok(t)
@@ -482,13 +486,14 @@ pub fn spmd_overlap(iters: usize, quick: bool) -> anyhow::Result<Table> {
     let pacing = Pacing::uniform(chunk_bytes / 400e-6, 20e-6);
     let mut t = Table::new(&[
         "layers", "overlap_off_ms_per_iter", "overlap_on_ms_per_iter", "speedup",
-        "overlap_eff_off_%", "overlap_eff_on_%",
+        "overlap_eff_off_%", "overlap_eff_on_%", "peak_resident_kb", "imbalance",
     ]);
     let pct = |eff: Option<f64>| eff.map(|p| format!("{p:.1}")).unwrap_or_else(|| "n/a".into());
     for &nl in &[1usize, 2, 3] {
-        // traced runs: the §4.3 overlap efficiency (fraction of paced wire
-        // time hidden under compute) lands next to the wall clock
-        let run = |overlap: bool| -> anyhow::Result<(f64, Option<f64>)> {
+        // traced + metered runs: the §4.3 overlap efficiency, peak
+        // resident memory, and realized load imbalance land next to the
+        // wall clock
+        let run = |overlap: bool| -> anyhow::Result<(f64, Option<f64>, f64, f64)> {
             let cfg = SessionConfig::builder()
                 .reference()
                 .dims(dims)
@@ -501,6 +506,7 @@ pub fn spmd_overlap(iters: usize, quick: bool) -> anyhow::Result<Table> {
                 .overlap(overlap)
                 .pacing(pacing)
                 .trace(true)
+                .metrics(true)
                 .build()?;
             let mut s = Session::fresh(cfg)?;
             let t0 = Instant::now();
@@ -508,10 +514,11 @@ pub fn spmd_overlap(iters: usize, quick: bool) -> anyhow::Result<Table> {
             let wall = t0.elapsed().as_secs_f64() / iters as f64;
             let eff =
                 crate::telemetry::analyze::analyze(s.trace_events().unwrap_or(&[])).overlap_pct();
-            Ok((wall, eff))
+            let (peak_kb, imbalance) = meter_columns(s.meter_samples());
+            Ok((wall, eff, peak_kb, imbalance))
         };
-        let (off, eff_off) = run(false)?;
-        let (on, eff_on) = run(true)?;
+        let (off, eff_off, _, _) = run(false)?;
+        let (on, eff_on, peak_kb, imbalance) = run(true)?;
         t.row(vec![
             nl.to_string(),
             ms(off),
@@ -519,9 +526,28 @@ pub fn spmd_overlap(iters: usize, quick: bool) -> anyhow::Result<Table> {
             fmt(off / on.max(1e-12)),
             pct(eff_off),
             pct(eff_on),
+            format!("{peak_kb:.1}"),
+            format!("{imbalance:.2}"),
         ]);
     }
     Ok(t)
+}
+
+/// The step-meter columns shared by the SPMD bench tables: worst-rank
+/// peak resident expert memory (KB) and mean realized load imbalance
+/// across the run's load samples (`1.00` when unmetered or no samples).
+fn meter_columns(meter: Option<&crate::metrics::meter::StepMeter>) -> (f64, f64) {
+    let Some(m) = meter else {
+        return (0.0, 1.0);
+    };
+    let peak = m.mem_samples().iter().map(|s| s.resident_bytes).max().unwrap_or(0);
+    let load = m.load_samples();
+    let imbalance = if load.is_empty() {
+        1.0
+    } else {
+        load.iter().map(|s| s.imbalance).sum::<f64>() / load.len() as f64
+    };
+    (peak as f64 / 1024.0, imbalance)
 }
 
 /// Per-phase deltas between two cumulative [`StepPhases`] samples
@@ -906,10 +932,14 @@ mod tests {
         let t = spmd_scaling(1, true).unwrap();
         assert_eq!(t.header[1], "modeled_comm_ms");
         assert_eq!(t.header[5], "straggler_skew");
+        assert_eq!(t.header[6], "peak_resident_kb");
+        assert_eq!(t.header[7], "imbalance");
         assert_eq!(t.rows.len(), 4);
         for row in &t.rows {
             assert!(row[4].parse::<f64>().unwrap() > 0.0, "speedup column: {row:?}");
             assert!(row[5].parse::<f64>().unwrap() >= 1.0, "skew column: {row:?}");
+            assert!(row[6].parse::<f64>().unwrap() > 0.0, "peak memory column: {row:?}");
+            assert!(row[7].parse::<f64>().unwrap() >= 1.0, "imbalance column: {row:?}");
         }
     }
 
@@ -918,6 +948,7 @@ mod tests {
         let t = spmd_overlap(1, true).unwrap();
         assert_eq!(t.rows.len(), 3);
         assert_eq!(t.header[5], "overlap_eff_on_%");
+        assert_eq!(t.header[7], "imbalance");
         for row in &t.rows {
             assert!(row[3].parse::<f64>().unwrap() > 0.0, "speedup column: {row:?}");
             // paced links → wire time is recorded, so the efficiency
@@ -926,6 +957,8 @@ mod tests {
                 let v = eff.parse::<f64>().unwrap();
                 assert!((0.0..=100.0).contains(&v), "efficiency column: {row:?}");
             }
+            assert!(row[6].parse::<f64>().unwrap() > 0.0, "peak memory column: {row:?}");
+            assert!(row[7].parse::<f64>().unwrap() >= 1.0, "imbalance column: {row:?}");
         }
     }
 

@@ -394,6 +394,13 @@ impl RankComm {
         (p.hits, p.misses)
     }
 
+    /// Bytes of capacity held idle on the payload free list (the memory
+    /// ledger's wire-buffer column; [`RankComm::recycle`] clears returned
+    /// buffers, so the held memory is the capacity).
+    pub fn payload_pool_bytes(&self) -> u64 {
+        self.pool.borrow().free.iter().map(|b| b.capacity() as u64 * 4).sum()
+    }
+
     /// Post a receive; complete it with [`RankComm::wait`] or
     /// [`RankComm::try_wait`].
     pub fn irecv(&self, src: usize, tag: Tag) -> Recv {

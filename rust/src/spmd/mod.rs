@@ -70,6 +70,7 @@ use crate::fssdp::{
 };
 use crate::loadsim::LoadPredictor;
 use crate::materialize::MatConstraints;
+use crate::metrics::meter::StepMeter;
 use crate::metrics::Metrics;
 use crate::placement::Placement;
 use crate::telemetry::{Phase as TracePhase, TraceRecorder};
@@ -109,6 +110,10 @@ struct RankCtx<'a> {
     overlap: bool,
     layers: Vec<RankLayerState>,
     comm: RankComm,
+    /// `Some(epoch)` when the engine is metered: each rank builds a local
+    /// [`StepMeter`] on the shared epoch so memory/load samples line up
+    /// with the trace timeline.
+    meter_epoch: Option<Instant>,
 }
 
 /// Global per-iteration stats, computed redundantly on rank 0 only,
@@ -130,6 +135,8 @@ struct RankOut {
     global: Vec<GlobalStats>,
     /// This rank's telemetry timeline (None when tracing is off).
     tracer: Option<TraceRecorder>,
+    /// This rank's memory/load samples (None when metering is off).
+    meter: Option<StepMeter>,
 }
 
 /// Run `iters` iterations of the engine on one thread per rank and sync
@@ -202,6 +209,8 @@ pub fn run_span(
         }
     }
 
+    let meter_epoch = engine.meter.as_ref().map(|m| m.epoch());
+
     let mut ctxs: Vec<RankCtx> = Vec::with_capacity(nd);
     for (me, (layers, comm)) in rank_layers.into_iter().zip(comms).enumerate() {
         ctxs.push(RankCtx {
@@ -219,6 +228,7 @@ pub fn run_span(
             overlap,
             layers,
             comm,
+            meter_epoch,
         });
     }
 
@@ -272,10 +282,15 @@ pub fn run_span(
     let mut opt_by_layer: Vec<BTreeMap<usize, AdamState>> = (0..nl).map(|_| BTreeMap::new()).collect();
     let mut merged = Metrics::new();
     for (r, out) in outs.into_iter().enumerate() {
-        let RankOut { layers, metrics, loss, global, tracer } = out;
+        let RankOut { layers, metrics, loss, global, tracer, meter } = out;
         if let Some(rank_tl) = tracer {
             if let Some(main) = &mut engine.tracer {
                 main.absorb(rank_tl);
+            }
+        }
+        if let Some(rank_meter) = meter {
+            if let Some(main) = &mut engine.meter {
+                main.absorb(rank_meter);
             }
         }
         anyhow::ensure!(loss.len() == iters, "rank {r} returned {} loss entries", loss.len());
@@ -301,7 +316,7 @@ pub fn run_span(
         }
         merged.merge(&metrics);
     }
-    merged.add("spmd.ranks", nd as f64);
+    merged.set("spmd.ranks", nd as f64);
     for (l, (devices, opt)) in devices_by_layer.into_iter().zip(opt_by_layer).enumerate() {
         engine.layers[l].params = ClusterMem { devices };
         engine.layers[l].opt = opt;
@@ -429,11 +444,13 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
         overlap,
         mut layers,
         mut comm,
+        meter_epoch,
     } = ctx;
     let nl = layers.len();
     let mut compute = Compute::Reference(Reference);
     let mut ov = Overlap::new(overlap);
     let mut metrics = Metrics::new();
+    let mut meter = meter_epoch.map(|epoch| StepMeter::with_epoch(epoch, me as u32));
     let mut losses: Vec<f64> = Vec::with_capacity(iters);
     let mut global: Vec<GlobalStats> = Vec::new();
     // Per-rank workspace, reused across the span's iterations and layers:
@@ -554,6 +571,18 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
 
             // predictor update (replicated, feeds next iteration's plan)
             let realized = realized_loads(dims.experts, &gate_idx);
+            if me == 0 {
+                if let Some(m) = meter.as_mut() {
+                    // load observatory (control plane is replicated, so
+                    // rank 0 records for everyone): `predict()` is pure
+                    // and this layer's predictor has only observed through
+                    // `iter - 1`, so this equals the plan-time prediction
+                    // — including when the plan was pre-built by the
+                    // overlap pipeline at the end of the previous iter
+                    let pred = layers[l].predictor.predict();
+                    m.sample_load(iter as usize, l, &pred, &realized);
+                }
+            }
             layers[l].predictor.observe(&realized);
 
             // ---- §4.3 cross-layer pipeline: issue layer l+1's spAG
@@ -661,6 +690,18 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
             metrics.add_duration("spmd.spag_wait", d);
             metrics.add_duration(&format!("spmd.spag_wait.l{l}"), d);
             comm.trace_span(TracePhase::SpagWait, iter, l, t0, 0);
+            if let Some(m) = meter.as_mut() {
+                // memory ledger: the layer is fully materialized on this
+                // rank — owned shards + replicas, the per-iteration peak
+                m.sample_mem(
+                    iter as usize,
+                    l,
+                    me,
+                    layers[l].store.resident_len() as u64 * 4,
+                    pool.idle_bytes(),
+                    comm.payload_pool_bytes(),
+                );
+            }
 
             // ---- layer boundary: combine (fwd) / seed cotangent (bwd) ----
             if !last_layer {
@@ -851,14 +892,16 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
     }
 
     // workspace counters: fresh pool allocations and payload recycling of
-    // this rank's span (summed across ranks by the metrics merge)
-    metrics.add("spmd.ws_allocs", pool.allocated as f64);
-    metrics.add("spmd.ws_reused", pool.reused as f64);
+    // this rank's span. These are per-rank levels, written as gauges so
+    // the cross-rank merge reports the worst rank instead of summing an
+    // N×-inflated total.
+    metrics.set("spmd.ws_allocs", pool.allocated as f64);
+    metrics.set("spmd.ws_reused", pool.reused as f64);
     let (hits, misses) = comm.payload_pool_stats();
-    metrics.add("spmd.payload_reused", hits as f64);
-    metrics.add("spmd.payload_alloc", misses as f64);
+    metrics.set("spmd.payload_reused", hits as f64);
+    metrics.set("spmd.payload_alloc", misses as f64);
 
-    Ok(RankOut { layers, metrics, loss: losses, global, tracer: comm.take_tracer() })
+    Ok(RankOut { layers, metrics, loss: losses, global, tracer: comm.take_tracer(), meter })
 }
 
 #[cfg(test)]
@@ -950,7 +993,7 @@ mod tests {
         ] {
             assert!(events.iter().any(|e| e.phase == want), "missing phase {want:?}");
         }
-        / per-rank timelines are pushed in span-end order
+        // per-rank timelines are pushed in span-end order
         for r in 0..4u32 {
             let mut last = f64::NEG_INFINITY;
             for e in events.iter().filter(|e| e.rank == r) {
@@ -958,6 +1001,41 @@ mod tests {
                 assert!(end >= last, "rank {r} end times must be non-decreasing");
                 last = end;
             }
+        }
+    }
+
+    #[test]
+    fn metered_spmd_span_is_bitwise_identical_and_samples_every_rank() {
+        let dims = reference_dims();
+        let mut plain = FssdpEngine::new_reference_layers(dims, 2, Topology::cluster_a(2, 2), 9);
+        plain.executor = Executor::Spmd { threads: 4, overlap: true };
+        plain.run_span(0, 3, 4).unwrap();
+
+        let mut metered =
+            FssdpEngine::new_reference_layers(dims, 2, Topology::cluster_a(2, 2), 9);
+        metered.executor = Executor::Spmd { threads: 4, overlap: true };
+        metered.meter = Some(StepMeter::new(0));
+        metered.run_span(0, 3, 4).unwrap();
+
+        assert_eq!(
+            final_chunks(&plain),
+            final_chunks(&metered),
+            "metering is observational: metered run must stay bit-identical"
+        );
+        let m = metered.meter_samples().expect("meter installed");
+        // one mem sample per (iter, layer, rank)
+        assert_eq!(m.mem_samples().len(), 3 * 2 * 4);
+        for r in 0..4u32 {
+            assert!(m.mem_samples().iter().any(|s| s.rank == r), "no samples from rank {r}");
+        }
+        // load samples come from rank 0 only (replicated control plane)
+        assert_eq!(m.load_samples().len(), 3 * 2);
+        // every rank materializes at least its own shards each iteration
+        assert!(m.mem_samples().iter().all(|s| s.resident_bytes > 0));
+        // high-water dominates every sample
+        let hw = m.high_water();
+        for s in m.mem_samples() {
+            assert!(hw[&(s.rank, s.layer)] >= s.resident_bytes);
         }
     }
 

@@ -189,24 +189,74 @@ pub fn analyze(events: &[Event]) -> Analysis {
     }
 }
 
+/// What went wrong loading a trace directory. Typed so `hecate trace
+/// analyze` maps each case to a clear message and a nonzero exit instead
+/// of an opaque I/O error.
+#[derive(Debug)]
+pub enum AnalyzeError {
+    /// The directory does not exist (or is not a directory).
+    MissingDir(std::path::PathBuf),
+    /// The directory exists but holds no [`EVENTS_FILE`].
+    MissingFile(std::path::PathBuf),
+    /// The event stream exists but contains no events.
+    Empty(std::path::PathBuf),
+    /// A line failed to parse (truncated write, foreign file…).
+    Parse {
+        path: std::path::PathBuf,
+        line: usize,
+        msg: String,
+    },
+}
+
+impl std::fmt::Display for AnalyzeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AnalyzeError::MissingDir(p) => {
+                write!(f, "trace directory `{}` does not exist", p.display())
+            }
+            AnalyzeError::MissingFile(p) => {
+                write!(
+                    f,
+                    "`{}` not found — run `hecate fssdp --trace-out` first",
+                    p.display()
+                )
+            }
+            AnalyzeError::Empty(p) => {
+                write!(f, "`{}` contains no trace events", p.display())
+            }
+            AnalyzeError::Parse { path, line, msg } => {
+                write!(f, "`{}` line {line}: {msg}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for AnalyzeError {}
+
 /// Load the JSONL event stream from a `--trace-out` directory.
-pub fn load_events(dir: &Path) -> anyhow::Result<Vec<Event>> {
+/// Missing/empty/truncated inputs come back as typed [`AnalyzeError`]s.
+pub fn load_events(dir: &Path) -> Result<Vec<Event>, AnalyzeError> {
+    if !dir.is_dir() {
+        return Err(AnalyzeError::MissingDir(dir.to_path_buf()));
+    }
     let path = dir.join(EVENTS_FILE);
-    let text = std::fs::read_to_string(&path).map_err(|e| {
-        anyhow::anyhow!(
-            "cannot read {} ({e}) — run `hecate fssdp --trace-out {}` first",
-            path.display(),
-            dir.display()
-        )
-    })?;
+    let text = std::fs::read_to_string(&path)
+        .map_err(|_| AnalyzeError::MissingFile(path.clone()))?;
     let mut events = Vec::new();
     for (i, line) in text.lines().enumerate() {
         if line.trim().is_empty() {
             continue;
         }
-        let j = Json::parse(line)
-            .map_err(|e| anyhow::anyhow!("{}:{}: {e}", path.display(), i + 1))?;
-        events.push(Event::from_json(&j)?);
+        let parse_err = |msg: String| AnalyzeError::Parse {
+            path: path.clone(),
+            line: i + 1,
+            msg,
+        };
+        let j = Json::parse(line).map_err(|e| parse_err(e.to_string()))?;
+        events.push(Event::from_json(&j).map_err(|e| parse_err(e.to_string()))?);
+    }
+    if events.is_empty() {
+        return Err(AnalyzeError::Empty(path));
     }
     Ok(events)
 }
@@ -398,5 +448,58 @@ mod tests {
         assert!(analyze_dir(&dir).is_ok());
         std::fs::remove_dir_all(&dir).unwrap();
         assert!(analyze_dir(&dir).is_err(), "missing dir is a clear error");
+    }
+
+    #[test]
+    fn load_events_reports_typed_errors() {
+        let base =
+            std::env::temp_dir().join(format!("hecate-trace-err-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+
+        // directory absent entirely
+        match load_events(&base) {
+            Err(AnalyzeError::MissingDir(_)) => {}
+            other => panic!("expected MissingDir, got {other:?}"),
+        }
+
+        // directory present, stream absent
+        std::fs::create_dir_all(&base).unwrap();
+        match load_events(&base) {
+            Err(AnalyzeError::MissingFile(p)) => {
+                assert!(p.ends_with(EVENTS_FILE), "{}", p.display())
+            }
+            other => panic!("expected MissingFile, got {other:?}"),
+        }
+
+        // stream present but empty (only blank lines)
+        let path = base.join(EVENTS_FILE);
+        std::fs::write(&path, "\n\n").unwrap();
+        match load_events(&base) {
+            Err(AnalyzeError::Empty(_)) => {}
+            other => panic!("expected Empty, got {other:?}"),
+        }
+
+        // truncated trailing line names the line number
+        let good = ev(Phase::Gate, 0, 0, 0.0, 5.0, 0).to_json().to_string();
+        std::fs::write(&path, format!("{good}\n{{\"phase\":\"gate\",\"it")).unwrap();
+        match load_events(&base) {
+            Err(AnalyzeError::Parse { line, .. }) => assert_eq!(line, 2),
+            other => panic!("expected Parse, got {other:?}"),
+        }
+
+        // a well-formed line with an unknown phase is also a Parse error
+        std::fs::write(
+            &path,
+            "{\"phase\":\"bogus\",\"iter\":0,\"layer\":0,\"rank\":0,\"ts_us\":0,\"dur_us\":0,\"detail\":0}\n",
+        )
+        .unwrap();
+        match load_events(&base) {
+            Err(AnalyzeError::Parse { line, msg }) => {
+                assert_eq!(line, 1);
+                assert!(msg.contains("bogus"), "{msg}");
+            }
+            other => panic!("expected Parse, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&base).unwrap();
     }
 }

@@ -1,0 +1,576 @@
+//! Metrics export & reporting: the file-format side of the step meter.
+//!
+//! [`MetricsWriter`] is the metrics twin of [`TraceWriter`]: a
+//! [`StepObserver`] that drains the engine's accumulated
+//! [`StepMeter`] samples at every span boundary into a `--metrics-out`
+//! directory as three artifacts:
+//!
+//! * [`METRICS_JSONL_FILE`] — the raw time series, one canonical JSON
+//!   object per line: a `kind: "meta"` header (run shape, so offline
+//!   consumers can price the analytic [`MemModel`] baselines), then
+//!   `kind: "mem"` / `kind: "load"` sample records appended
+//!   incrementally.
+//! * [`METRICS_PROM_FILE`] — a Prometheus text exposition rewritten per
+//!   span from a typed [`Registry`]: per-`(rank, layer)` peak-resident
+//!   gauges, per-rank pool gauges, sample counters, and an imbalance
+//!   histogram.
+//! * [`COUNTERS_FILE`] — a standalone Chrome-trace document holding only
+//!   the `ph: "C"` counter rows ([`counter_rows`]), loadable in Perfetto
+//!   on its own or next to the `--trace-out` span timeline.
+//!
+//! [`load_metrics`] + [`MetricsLog`] are the offline pass behind
+//! `hecate metrics report DIR`: parse the JSONL back, render the
+//! per-rank peak-memory table (measured ledger vs the analytic
+//! replicated/EP baselines), the predictor-accuracy table, and the
+//! imbalance timeline. Errors are typed ([`MetricsIoError`]) so the CLI
+//! can exit nonzero with a clear message on missing/empty/truncated
+//! directories.
+//!
+//! [`TraceWriter`]: super::TraceWriter
+//! [`StepObserver`]: crate::fssdp::StepObserver
+//! [`StepMeter`]: crate::metrics::meter::StepMeter
+//! [`MemModel`]: crate::metrics::meter::MemModel
+//! [`Registry`]: crate::metrics::registry::Registry
+//! [`counter_rows`]: super::counter_rows
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::fssdp::{SpanCtx, StepObserver};
+use crate::metrics::meter::{LoadSample, MemModel, MemSample, StepMeter};
+use crate::metrics::registry::{labels, Registry};
+use crate::util::json::{obj, Json};
+
+/// JSONL time-series file name inside a `--metrics-out` directory.
+pub const METRICS_JSONL_FILE: &str = "metrics.jsonl";
+/// Prometheus exposition file name inside a `--metrics-out` directory.
+pub const METRICS_PROM_FILE: &str = "metrics.prom";
+/// Standalone Chrome-trace counter-track file name inside a
+/// `--metrics-out` directory.
+pub const COUNTERS_FILE: &str = "counters.json";
+
+/// What went wrong loading a metrics directory. Typed so the CLI maps
+/// each case to a clear message and a nonzero exit.
+#[derive(Debug)]
+pub enum MetricsIoError {
+    /// The directory does not exist (or is not a directory).
+    MissingDir(PathBuf),
+    /// The directory exists but holds no [`METRICS_JSONL_FILE`].
+    MissingFile(PathBuf),
+    /// The JSONL stream exists but contains no sample records.
+    Empty(PathBuf),
+    /// A line failed to parse (truncated write, foreign file…).
+    Parse {
+        path: PathBuf,
+        line: usize,
+        msg: String,
+    },
+}
+
+impl fmt::Display for MetricsIoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MetricsIoError::MissingDir(p) => {
+                write!(f, "metrics directory `{}` does not exist", p.display())
+            }
+            MetricsIoError::MissingFile(p) => {
+                write!(
+                    f,
+                    "`{}` not found — was the run started with --metrics-out?",
+                    p.display()
+                )
+            }
+            MetricsIoError::Empty(p) => {
+                write!(f, "`{}` contains no metric samples", p.display())
+            }
+            MetricsIoError::Parse { path, line, msg } => {
+                write!(f, "`{}` line {line}: {msg}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for MetricsIoError {}
+
+/// The run shape recorded in the JSONL `meta` header — what the offline
+/// report needs to price the analytic [`MemModel`] baselines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunMeta {
+    pub devices: usize,
+    pub layers: usize,
+    pub experts: usize,
+    /// Floats per expert chunk (bytes = 4×).
+    pub chunk_len: usize,
+}
+
+impl RunMeta {
+    fn to_json(self) -> Json {
+        obj([
+            ("kind", Json::Str("meta".into())),
+            ("devices", Json::num(self.devices as f64)),
+            ("layers", Json::num(self.layers as f64)),
+            ("experts", Json::num(self.experts as f64)),
+            ("chunk_len", Json::num(self.chunk_len as f64)),
+        ])
+    }
+
+    /// Owned expert chunks of `rank` under the round-robin shard layout
+    /// (expert `e` lives on `e % devices`) — the EP baseline's count.
+    pub fn shard_chunks(&self, rank: usize) -> usize {
+        self.experts / self.devices + usize::from(rank < self.experts % self.devices)
+    }
+}
+
+/// [`StepObserver`] draining the engine's step meter at every span
+/// boundary into a metrics directory (see the module docs for the three
+/// artifacts). Inert when the session is not metered.
+#[derive(Debug)]
+pub struct MetricsWriter {
+    dir: PathBuf,
+    mem_seen: usize,
+    load_seen: usize,
+    started: bool,
+}
+
+impl MetricsWriter {
+    pub fn new(dir: impl Into<PathBuf>) -> MetricsWriter {
+        MetricsWriter { dir: dir.into(), mem_seen: 0, load_seen: 0, started: false }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Samples exported so far (both ledgers).
+    pub fn exported(&self) -> usize {
+        self.mem_seen + self.load_seen
+    }
+
+    fn flush(&mut self, meta: RunMeta, meter: &StepMeter) -> anyhow::Result<()> {
+        std::fs::create_dir_all(&self.dir)?;
+        let jsonl = self.dir.join(METRICS_JSONL_FILE);
+        if !self.started {
+            // fresh run into a reused directory: restart the stream, and
+            // lead with the meta header offline consumers key off
+            let _ = std::fs::remove_file(&jsonl);
+            append_lines(&jsonl, std::iter::once(meta.to_json()))?;
+            self.started = true;
+        }
+        let mem = meter.mem_samples();
+        let load = meter.load_samples();
+        append_lines(&jsonl, mem[self.mem_seen..].iter().map(mem_to_json))?;
+        append_lines(&jsonl, load[self.load_seen..].iter().map(load_to_json))?;
+        self.mem_seen = mem.len();
+        self.load_seen = load.len();
+
+        // full-history artifacts are rewritten so they are loadable at
+        // any point during the run (same policy as the Chrome trace)
+        let reg = build_registry(meta, mem, load);
+        std::fs::write(self.dir.join(METRICS_PROM_FILE), reg.to_prometheus())?;
+        let counters = super::counter_rows(mem, load);
+        let doc = super::chrome_trace_with_counters(&[], &counters);
+        std::fs::write(self.dir.join(COUNTERS_FILE), doc.to_string())?;
+        Ok(())
+    }
+}
+
+impl StepObserver for MetricsWriter {
+    fn on_span_end(&mut self, ctx: &SpanCtx<'_>) {
+        if let Some(meter) = ctx.meter_samples() {
+            let e = ctx.engine();
+            let meta = RunMeta {
+                devices: e.topo.num_devices(),
+                layers: e.num_layers(),
+                experts: e.dims.experts,
+                chunk_len: e.dims.chunk_len(),
+            };
+            if let Err(err) = self.flush(meta, meter) {
+                crate::log_warn!("metrics export to {} failed: {err}", self.dir.display());
+            }
+        }
+    }
+}
+
+fn append_lines(path: &Path, rows: impl Iterator<Item = Json>) -> anyhow::Result<()> {
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    let mut buf = String::new();
+    for row in rows {
+        buf.push_str(&row.to_string());
+        buf.push('\n');
+    }
+    f.write_all(buf.as_bytes())?;
+    Ok(())
+}
+
+fn mem_to_json(s: &MemSample) -> Json {
+    obj([
+        ("kind", Json::Str("mem".into())),
+        ("ts_us", Json::num(s.ts_us)),
+        ("iter", Json::num(s.iter as f64)),
+        ("layer", Json::num(s.layer as f64)),
+        ("rank", Json::num(s.rank as f64)),
+        ("resident_bytes", Json::num(s.resident_bytes as f64)),
+        ("pool_idle_bytes", Json::num(s.pool_idle_bytes as f64)),
+        ("payload_idle_bytes", Json::num(s.payload_idle_bytes as f64)),
+    ])
+}
+
+fn load_to_json(s: &LoadSample) -> Json {
+    obj([
+        ("kind", Json::Str("load".into())),
+        ("ts_us", Json::num(s.ts_us)),
+        ("iter", Json::num(s.iter as f64)),
+        ("layer", Json::num(s.layer as f64)),
+        ("imbalance", Json::num(s.imbalance)),
+        ("entropy", Json::num(s.entropy)),
+        ("mae", Json::num(s.mae)),
+        ("rank_corr", Json::num(s.rank_corr)),
+        ("max_load", Json::num(s.max_load)),
+    ])
+}
+
+/// Fold the raw samples into the typed registry behind the Prometheus
+/// exposition: peak/pool gauges per rank, sample counters, and the
+/// imbalance-percent histogram (log-2 buckets want values ≥ 1, so the
+/// ratio is scaled by 100).
+fn build_registry(meta: RunMeta, mem: &[MemSample], load: &[LoadSample]) -> Registry {
+    let mut reg = Registry::new();
+    reg.gauge_set("hecate_devices", labels(&[]), meta.devices as f64);
+    reg.gauge_set("hecate_layers", labels(&[]), meta.layers as f64);
+    reg.gauge_set(
+        "hecate_replicated_bytes_per_layer",
+        labels(&[]),
+        (meta.experts * meta.chunk_len * 4) as f64,
+    );
+    reg.counter_add("hecate_mem_samples_total", labels(&[]), mem.len() as f64);
+    reg.counter_add("hecate_load_samples_total", labels(&[]), load.len() as f64);
+    let mut peak: BTreeMap<(u32, u32), u64> = BTreeMap::new();
+    let mut pool: BTreeMap<u32, u64> = BTreeMap::new();
+    let mut payload: BTreeMap<u32, u64> = BTreeMap::new();
+    for s in mem {
+        let p = peak.entry((s.rank, s.layer)).or_insert(0);
+        *p = (*p).max(s.resident_bytes);
+        let p = pool.entry(s.rank).or_insert(0);
+        *p = (*p).max(s.pool_idle_bytes);
+        let p = payload.entry(s.rank).or_insert(0);
+        *p = (*p).max(s.payload_idle_bytes);
+    }
+    for ((rank, layer), bytes) in &peak {
+        let l = labels(&[("rank", &rank.to_string()), ("layer", &layer.to_string())]);
+        reg.gauge_set("hecate_peak_resident_bytes", l, *bytes as f64);
+    }
+    for (rank, bytes) in &pool {
+        let l = labels(&[("rank", &rank.to_string())]);
+        reg.gauge_set("hecate_pool_idle_bytes", l, *bytes as f64);
+    }
+    for (rank, bytes) in &payload {
+        let l = labels(&[("rank", &rank.to_string())]);
+        reg.gauge_set("hecate_payload_idle_bytes", l, *bytes as f64);
+    }
+    for s in load {
+        reg.histogram_observe("hecate_imbalance_pct", labels(&[]), s.imbalance * 100.0);
+        let l = labels(&[("layer", &s.layer.to_string())]);
+        reg.gauge_set("hecate_predictor_mae", l.clone(), s.mae);
+        reg.gauge_set("hecate_predictor_rank_corr", l, s.rank_corr);
+    }
+    reg
+}
+
+/// A metrics directory parsed back into memory: the `meta` header plus
+/// both sample ledgers, ready for report rendering.
+#[derive(Debug, Clone)]
+pub struct MetricsLog {
+    pub meta: RunMeta,
+    pub mem: Vec<MemSample>,
+    pub load: Vec<LoadSample>,
+}
+
+/// Parse `dir`'s [`METRICS_JSONL_FILE`] back into a [`MetricsLog`].
+pub fn load_metrics(dir: &Path) -> Result<MetricsLog, MetricsIoError> {
+    if !dir.is_dir() {
+        return Err(MetricsIoError::MissingDir(dir.to_path_buf()));
+    }
+    let path = dir.join(METRICS_JSONL_FILE);
+    let text = std::fs::read_to_string(&path)
+        .map_err(|_| MetricsIoError::MissingFile(path.clone()))?;
+    let mut meta: Option<RunMeta> = None;
+    let mut mem = Vec::new();
+    let mut load = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let err = |msg: String| MetricsIoError::Parse {
+            path: path.clone(),
+            line: i + 1,
+            msg,
+        };
+        let j = Json::parse(line).map_err(|e| err(e.to_string()))?;
+        let num = |key: &str| -> Result<f64, MetricsIoError> {
+            j.get(key)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| err(format!("missing numeric field `{key}`")))
+        };
+        match j.get("kind").and_then(|k| k.as_str()) {
+            Some("meta") => {
+                meta = Some(RunMeta {
+                    devices: num("devices")? as usize,
+                    layers: num("layers")? as usize,
+                    experts: num("experts")? as usize,
+                    chunk_len: num("chunk_len")? as usize,
+                });
+            }
+            Some("mem") => mem.push(MemSample {
+                ts_us: num("ts_us")?,
+                iter: num("iter")? as u32,
+                layer: num("layer")? as u32,
+                rank: num("rank")? as u32,
+                resident_bytes: num("resident_bytes")? as u64,
+                pool_idle_bytes: num("pool_idle_bytes")? as u64,
+                payload_idle_bytes: num("payload_idle_bytes")? as u64,
+            }),
+            Some("load") => load.push(LoadSample {
+                ts_us: num("ts_us")?,
+                iter: num("iter")? as u32,
+                layer: num("layer")? as u32,
+                imbalance: num("imbalance")?,
+                entropy: num("entropy")?,
+                mae: num("mae")?,
+                rank_corr: num("rank_corr")?,
+                max_load: num("max_load")?,
+            }),
+            Some(other) => return Err(err(format!("unknown record kind `{other}`"))),
+            None => return Err(err("record has no `kind` field".to_string())),
+        }
+    }
+    let meta = meta.ok_or_else(|| MetricsIoError::Parse {
+        path: path.clone(),
+        line: 1,
+        msg: "no `meta` header record".to_string(),
+    })?;
+    if mem.is_empty() && load.is_empty() {
+        return Err(MetricsIoError::Empty(path));
+    }
+    Ok(MetricsLog { meta, mem, load })
+}
+
+impl MetricsLog {
+    /// Per-`(rank, layer)` peak resident bytes from the ledger.
+    pub fn high_water(&self) -> BTreeMap<(u32, u32), u64> {
+        let mut hw = BTreeMap::new();
+        for s in &self.mem {
+            let e = hw.entry((s.rank, s.layer)).or_insert(0u64);
+            *e = (*e).max(s.resident_bytes);
+        }
+        hw
+    }
+
+    /// The peak-memory table: per rank, the measured peak resident bytes
+    /// (worst layer) next to the analytic replicated and EP baselines.
+    pub fn peak_memory_table(&self) -> String {
+        let hw = self.high_water();
+        let mut out = String::new();
+        out.push_str("peak memory (per rank, worst layer)\n");
+        out.push_str(&format!(
+            "{:>5} {:>14} {:>16} {:>10} {:>12}\n",
+            "rank", "peak_bytes", "replicated_bytes", "ep_bytes", "vs_replicated"
+        ));
+        for rank in 0..self.meta.devices {
+            let peak = (0..self.meta.layers)
+                .map(|l| hw.get(&(rank as u32, l as u32)).copied().unwrap_or(0))
+                .max()
+                .unwrap_or(0);
+            let model = MemModel::per_device(
+                0, // placement chunks come from the ledger, not the model
+                self.meta.shard_chunks(rank),
+                self.meta.experts,
+                self.meta.chunk_len,
+            );
+            let ratio = if model.replicated_bytes > 0 {
+                peak as f64 / model.replicated_bytes as f64
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "{:>5} {:>14} {:>16} {:>10} {:>11.2}x\n",
+                rank, peak, model.replicated_bytes, model.ep_bytes, ratio
+            ));
+        }
+        out
+    }
+
+    /// The predictor-accuracy table: per layer, mean/final MAE and mean
+    /// rank-order correlation across the recorded load samples.
+    pub fn predictor_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str("predictor accuracy (per layer)\n");
+        out.push_str(&format!(
+            "{:>5} {:>8} {:>10} {:>10} {:>10}\n",
+            "layer", "samples", "mean_mae", "final_mae", "rank_corr"
+        ));
+        for layer in 0..self.meta.layers {
+            let rows: Vec<&LoadSample> =
+                self.load.iter().filter(|s| s.layer == layer as u32).collect();
+            if rows.is_empty() {
+                continue;
+            }
+            let n = rows.len() as f64;
+            let mean_mae = rows.iter().map(|s| s.mae).sum::<f64>() / n;
+            let mean_corr = rows.iter().map(|s| s.rank_corr).sum::<f64>() / n;
+            let final_mae = rows.last().map(|s| s.mae).unwrap_or(0.0);
+            out.push_str(&format!(
+                "{:>5} {:>8} {:>10.4} {:>10.4} {:>10.3}\n",
+                layer,
+                rows.len(),
+                mean_mae,
+                final_mae,
+                mean_corr
+            ));
+        }
+        out
+    }
+
+    /// The imbalance timeline: one row per `(iter, layer)` load sample.
+    pub fn imbalance_timeline(&self) -> String {
+        let mut out = String::new();
+        out.push_str("imbalance timeline\n");
+        out.push_str(&format!(
+            "{:>5} {:>5} {:>10} {:>9} {:>9}\n",
+            "iter", "layer", "imbalance", "entropy", "max_load"
+        ));
+        for s in &self.load {
+            out.push_str(&format!(
+                "{:>5} {:>5} {:>10.3} {:>9.3} {:>9.3}\n",
+                s.iter, s.layer, s.imbalance, s.entropy, s.max_load
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fssdp::{Session, SessionConfig};
+    use crate::metrics::registry::parse_prometheus;
+    use crate::topology::Topology;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("hecate-mio-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn writer_exports_all_three_files_and_the_report_loads() {
+        let dir = tmp("rt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = SessionConfig::builder()
+            .reference()
+            .topology(Topology::cluster_a(2, 2))
+            .layers(2)
+            .data_shards(4)
+            .seed(11)
+            .metrics(true)
+            .build()
+            .unwrap();
+        let mut s = Session::fresh(cfg).unwrap();
+        let mut w = MetricsWriter::new(&dir);
+        s.run_observed(3, &mut [&mut w]).unwrap();
+        assert_eq!(w.exported(), 3 * 2 * 4 + 3 * 2, "mem + load samples");
+
+        let log = load_metrics(&dir).unwrap();
+        assert_eq!(log.meta.devices, 4);
+        assert_eq!(log.meta.layers, 2);
+        assert_eq!(log.mem.len(), 3 * 2 * 4);
+        assert_eq!(log.load.len(), 3 * 2);
+        // the parsed ledger is the in-memory ledger
+        assert_eq!(log.mem, s.meter_samples().unwrap().mem_samples());
+        assert_eq!(log.high_water(), s.meter_samples().unwrap().high_water());
+
+        // the exposition round-trips through the parser and agrees with
+        // the ledger's high-water marks
+        let text = std::fs::read_to_string(dir.join(METRICS_PROM_FILE)).unwrap();
+        let samples = parse_prometheus(&text).unwrap();
+        let hw = log.high_water();
+        for ((rank, layer), bytes) in &hw {
+            let found = samples
+                .iter()
+                .find(|p| {
+                    p.name == "hecate_peak_resident_bytes"
+                        && p.labels.get("rank").map(String::as_str)
+                            == Some(rank.to_string().as_str())
+                        && p.labels.get("layer").map(String::as_str)
+                            == Some(layer.to_string().as_str())
+                })
+                .expect("peak gauge per (rank, layer)");
+            assert_eq!(found.value, *bytes as f64);
+        }
+
+        // counters.json is a loadable chrome doc made of ph:"C" rows
+        let doc = std::fs::read_to_string(dir.join(COUNTERS_FILE)).unwrap();
+        let parsed = Json::parse(&doc).unwrap();
+        let rows = parsed.req("traceEvents").unwrap().as_arr().unwrap().to_vec();
+        assert!(rows
+            .iter()
+            .any(|r| r.get("ph").and_then(|p| p.as_str()) == Some("C")));
+
+        // the three report tables render and carry the headline numbers
+        let peak = log.peak_memory_table();
+        assert!(peak.contains("replicated_bytes"), "{peak}");
+        let pred = log.predictor_table();
+        assert!(pred.contains("mean_mae"), "{pred}");
+        let tl = log.imbalance_timeline();
+        assert_eq!(tl.lines().count(), 2 + 3 * 2, "header rows + one per sample");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn load_metrics_reports_typed_errors() {
+        let missing = tmp("missing");
+        let _ = std::fs::remove_dir_all(&missing);
+        match load_metrics(&missing) {
+            Err(MetricsIoError::MissingDir(_)) => {}
+            other => panic!("expected MissingDir, got {other:?}"),
+        }
+
+        let dir = tmp("nofile");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        match load_metrics(&dir) {
+            Err(MetricsIoError::MissingFile(_)) => {}
+            other => panic!("expected MissingFile, got {other:?}"),
+        }
+
+        // a meta header with no samples is Empty
+        std::fs::write(
+            dir.join(METRICS_JSONL_FILE),
+            "{\"kind\":\"meta\",\"devices\":4,\"layers\":1,\"experts\":8,\"chunk_len\":280}\n",
+        )
+        .unwrap();
+        match load_metrics(&dir) {
+            Err(MetricsIoError::Empty(_)) => {}
+            other => panic!("expected Empty, got {other:?}"),
+        }
+
+        // a truncated line is a Parse error naming the line
+        std::fs::write(
+            dir.join(METRICS_JSONL_FILE),
+            "{\"kind\":\"meta\",\"devices\":4,\"layers\":1,\"experts\":8,\"chunk_len\":280}\n{\"kind\":\"mem\",\"ts_us\":1.0,\"it",
+        )
+        .unwrap();
+        match load_metrics(&dir) {
+            Err(MetricsIoError::Parse { line, .. }) => assert_eq!(line, 2),
+            other => panic!("expected Parse, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn run_meta_shard_chunks_round_robin() {
+        let m = RunMeta { devices: 4, layers: 1, experts: 10, chunk_len: 280 };
+        // experts 0..10 round-robin over 4 devices: 3,3,2,2
+        assert_eq!((0..4).map(|r| m.shard_chunks(r)).collect::<Vec<_>>(), vec![3, 3, 2, 2]);
+        assert_eq!((0..4).map(|r| m.shard_chunks(r)).sum::<usize>(), 10);
+    }
+}

@@ -25,6 +25,7 @@
 //! bit-identical to an untraced one (locked by `tests/telemetry_trace.rs`).
 
 pub mod analyze;
+pub mod metrics_io;
 
 use std::collections::BTreeSet;
 use std::io::Write as _;
@@ -236,17 +237,28 @@ pub struct TelemetryConfig {
     /// Directory for the exported trace (`--trace-out DIR`); implies
     /// `enabled`.
     pub trace_dir: Option<String>,
+    /// Record the step meter — the per-rank memory ledger + load
+    /// observatory (in memory, drained via `Session::meter_samples` /
+    /// `MetricsWriter`).
+    pub metrics: bool,
+    /// Directory for metrics export (`--metrics-out DIR`); implies
+    /// `metrics`.
+    pub metrics_dir: Option<String>,
 }
 
 impl TelemetryConfig {
     /// Tracing on, no file export (programmatic consumers).
     pub fn enabled() -> TelemetryConfig {
-        TelemetryConfig { enabled: true, trace_dir: None }
+        TelemetryConfig { enabled: true, ..TelemetryConfig::default() }
     }
 
     /// Tracing on, exporting into `dir`.
     pub fn to_dir(dir: impl Into<String>) -> TelemetryConfig {
-        TelemetryConfig { enabled: true, trace_dir: Some(dir.into()) }
+        TelemetryConfig {
+            enabled: true,
+            trace_dir: Some(dir.into()),
+            ..TelemetryConfig::default()
+        }
     }
 }
 
@@ -349,6 +361,13 @@ pub const COMM_TID_OFFSET: u32 = 1000;
 /// `rank N comm` row for wire-level events, with `(iter, layer, detail)`
 /// in `args`.
 pub fn chrome_trace(events: &[Event]) -> Json {
+    chrome_trace_with_counters(events, &[])
+}
+
+/// [`chrome_trace`] plus pre-rendered counter rows (`ph: "C"`, see
+/// [`counter_rows`]) so Perfetto shows memory/load tracks next to the
+/// span timeline.
+pub fn chrome_trace_with_counters(events: &[Event], counters: &[Json]) -> Json {
     let ranks: BTreeSet<u32> = events.iter().map(|e| e.rank).collect();
     let mut out: Vec<Json> = Vec::with_capacity(events.len() + 2 * ranks.len() + 1);
     out.push(obj([
@@ -399,7 +418,51 @@ pub fn chrome_trace(events: &[Event]) -> Json {
             ),
         ]));
     }
+    out.extend(counters.iter().cloned());
     obj([("traceEvents", Json::Arr(out)), ("displayTimeUnit", Json::Str("ms".into()))])
+}
+
+/// Render step-meter samples as Chrome-trace counter rows (`ph: "C"`):
+/// one `resident_bytes rank N` / `pool_idle_bytes rank N` track per rank
+/// from the memory ledger, plus global `imbalance` / `predictor_mae`
+/// tracks from the load observatory. Counter tracks are keyed by name in
+/// Perfetto, so the rank is embedded in the track name.
+pub fn counter_rows(
+    mem: &[crate::metrics::meter::MemSample],
+    load: &[crate::metrics::meter::LoadSample],
+) -> Vec<Json> {
+    let row = |name: String, tid: u32, ts: f64, key: &'static str, v: f64| {
+        obj([
+            ("name", Json::Str(name)),
+            ("ph", Json::Str("C".into())),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(tid as f64)),
+            ("ts", Json::num(ts)),
+            ("args", obj([(key, Json::num(v))])),
+        ])
+    };
+    let mut out = Vec::with_capacity(2 * mem.len() + 2 * load.len());
+    for s in mem {
+        out.push(row(
+            format!("resident_bytes rank {}", s.rank),
+            s.rank,
+            s.ts_us,
+            "bytes",
+            s.resident_bytes as f64,
+        ));
+        out.push(row(
+            format!("pool_idle_bytes rank {}", s.rank),
+            s.rank,
+            s.ts_us,
+            "bytes",
+            s.pool_idle_bytes as f64,
+        ));
+    }
+    for s in load {
+        out.push(row("imbalance".to_string(), 0, s.ts_us, "ratio", s.imbalance));
+        out.push(row("predictor_mae".to_string(), 0, s.ts_us, "mae", s.mae));
+    }
+    out
 }
 
 /// Write the Chrome-trace document for `events` to `path` (overwrites).
@@ -445,7 +508,7 @@ impl TraceWriter {
         self.seen
     }
 
-    fn flush(&mut self, events: &[Event]) -> anyhow::Result<()> {
+    fn flush(&mut self, events: &[Event], counters: &[Json]) -> anyhow::Result<()> {
         std::fs::create_dir_all(&self.dir)?;
         let jsonl = self.dir.join(EVENTS_FILE);
         if self.seen == 0 && jsonl.exists() {
@@ -454,14 +517,22 @@ impl TraceWriter {
         }
         append_jsonl(&jsonl, &events[self.seen..])?;
         self.seen = events.len();
-        write_chrome_trace(&self.dir.join(CHROME_TRACE_FILE), events)
+        let doc = chrome_trace_with_counters(events, counters);
+        std::fs::write(self.dir.join(CHROME_TRACE_FILE), doc.to_string())?;
+        Ok(())
     }
 }
 
 impl StepObserver for TraceWriter {
     fn on_span_end(&mut self, ctx: &SpanCtx<'_>) {
         if let Some(events) = ctx.trace_events() {
-            if let Err(e) = self.flush(events) {
+            // when the run is also metered, render memory/load counter
+            // tracks next to the spans
+            let counters = ctx
+                .meter_samples()
+                .map(|m| counter_rows(m.mem_samples(), m.load_samples()))
+                .unwrap_or_default();
+            if let Err(e) = self.flush(events, &counters) {
                 crate::log_warn!("trace export to {} failed: {e}", self.dir.display());
             }
         }
@@ -565,6 +636,41 @@ mod tests {
             .filter(|i| i.get("name").and_then(|n| n.as_str()) == Some("thread_name"))
             .collect();
         assert_eq!(names.len(), 6, "phase + comm row names for 3 ranks");
+    }
+
+    #[test]
+    fn counter_rows_render_ph_c_tracks_next_to_spans() {
+        let mut m = crate::metrics::meter::StepMeter::new(0);
+        m.sample_mem(0, 0, 1, 4480, 64, 0);
+        m.sample_load(0, 0, &[0.25; 4], &[0.4, 0.3, 0.2, 0.1]);
+        let counters = counter_rows(m.mem_samples(), m.load_samples());
+        assert_eq!(counters.len(), 4, "2 mem tracks + 2 load tracks per sample");
+        let doc = chrome_trace_with_counters(&[ev(Phase::Gate, 1, 0.0, 10.0)], &counters);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let arr = parsed.req("traceEvents").unwrap().as_arr().unwrap().to_vec();
+        let c_rows: Vec<&Json> = arr
+            .iter()
+            .filter(|i| i.get("ph").and_then(|p| p.as_str()) == Some("C"))
+            .collect();
+        assert_eq!(c_rows.len(), 4);
+        let resident = c_rows
+            .iter()
+            .find(|i| i.get("name").and_then(|n| n.as_str()) == Some("resident_bytes rank 1"))
+            .expect("per-rank resident track");
+        assert_eq!(
+            resident.get("args").and_then(|a| a.get("bytes")).and_then(|b| b.as_f64()),
+            Some(4480.0)
+        );
+        assert!(c_rows
+            .iter()
+            .any(|i| i.get("name").and_then(|n| n.as_str()) == Some("imbalance")));
+        // span rows are untouched
+        assert_eq!(
+            arr.iter()
+                .filter(|i| i.get("ph").and_then(|p| p.as_str()) == Some("X"))
+                .count(),
+            1
+        );
     }
 
     #[test]

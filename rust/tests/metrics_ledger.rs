@@ -1,0 +1,197 @@
+//! Tier-1 integration locks for the memory ledger + load observatory.
+//!
+//! Contracts:
+//! 1. Metering is purely observational — a metered run is bit-identical
+//!    to an unmetered one on both executors, including across Algorithm 2
+//!    re-shard boundaries.
+//! 2. The measured ledger agrees with the analytic memory model: on a
+//!    flat single-device placement every sample equals the replicated
+//!    expectation exactly; on a sharded cluster every sample is a whole
+//!    number of chunks bounded by the replicated baseline.
+//! 3. Predictor-accuracy samples keep flowing across re-shard boundaries
+//!    and stay in range.
+//! 4. The export/report path round-trips: files written by
+//!    `MetricsWriter` parse back into the exact in-memory ledger, and
+//!    the Prometheus exposition survives its parser.
+
+use hecate::fssdp::{reference_dims, Session, SessionConfig};
+use hecate::metrics::meter::MemModel;
+use hecate::metrics::registry::parse_prometheus;
+use hecate::telemetry::metrics_io::{
+    load_metrics, MetricsWriter, COUNTERS_FILE, METRICS_JSONL_FILE, METRICS_PROM_FILE,
+};
+use hecate::testing::all_chunks;
+use hecate::topology::Topology;
+
+fn builder() -> hecate::fssdp::SessionConfigBuilder {
+    SessionConfig::builder().reference().topology(Topology::cluster_a(2, 2)).seed(23)
+}
+
+#[test]
+fn metered_run_is_bit_identical_on_both_executors() {
+    // Sequential executor, with Algorithm 2 firing mid-run.
+    let seq = |metered: bool| -> Vec<Vec<f32>> {
+        let mut b = builder().layers(2).data_shards(4).reshard_every(2);
+        if metered {
+            b = b.metrics(true);
+        }
+        let mut s = Session::fresh(b.build().unwrap()).unwrap();
+        s.run(4).unwrap();
+        all_chunks(s.engine())
+    };
+    assert_eq!(seq(false), seq(true), "sequential: metered == unmetered bitwise");
+
+    // SPMD executor, same workload.
+    let spmd = |metered: bool| -> Vec<Vec<f32>> {
+        let mut b =
+            builder().layers(2).data_shards(4).reshard_every(2).parallel(true).threads(4);
+        if metered {
+            b = b.metrics(true);
+        }
+        let mut s = Session::fresh(b.build().unwrap()).unwrap();
+        s.run(4).unwrap();
+        all_chunks(s.engine())
+    };
+    let plain = spmd(false);
+    assert_eq!(plain, spmd(true), "spmd: metered == unmetered bitwise");
+    assert_eq!(plain, seq(true), "and both executors agree");
+}
+
+#[test]
+fn ledger_matches_analytic_model_on_a_flat_single_device() {
+    // One device owns every expert: no replicas ever materialize beyond
+    // the shards, so every sample must equal the analytic expectation
+    // exactly — experts × chunk bytes, which is also the replicated
+    // baseline.
+    let dims = reference_dims();
+    let cfg = SessionConfig::builder()
+        .reference()
+        .topology(Topology::flat(1, 150e9))
+        .data_shards(1)
+        .seed(23)
+        .metrics(true)
+        .build()
+        .unwrap();
+    let mut s = Session::fresh(cfg).unwrap();
+    s.run(3).unwrap();
+    let m = s.meter_samples().unwrap();
+    assert_eq!(m.mem_samples().len(), 3, "3 iters x 1 layer x 1 device");
+    let model = MemModel::per_device(dims.experts, dims.experts, dims.experts, dims.chunk_len());
+    assert_eq!(model.fssdp_bytes, model.replicated_bytes);
+    for sample in m.mem_samples() {
+        assert_eq!(sample.resident_bytes, model.replicated_bytes, "{sample:?}");
+        assert_eq!(sample.payload_idle_bytes, 0, "sequential executor has no wire");
+    }
+    for hw in m.high_water().values() {
+        assert_eq!(*hw, model.replicated_bytes);
+    }
+}
+
+#[test]
+fn ledger_is_chunk_granular_and_bounded_on_a_sharded_cluster() {
+    let dims = reference_dims();
+    let chunk_bytes = dims.chunk_len() as u64 * 4;
+    let replicated = dims.experts as u64 * chunk_bytes;
+    for parallel in [false, true] {
+        let mut b = builder().layers(2).data_shards(4).metrics(true);
+        if parallel {
+            b = b.parallel(true).threads(4);
+        }
+        let mut s = Session::fresh(b.build().unwrap()).unwrap();
+        s.run(3).unwrap();
+        let m = s.meter_samples().unwrap();
+        assert_eq!(m.mem_samples().len(), 3 * 2 * 4, "3 iters x 2 layers x 4 devices");
+        let ranks: std::collections::BTreeSet<u32> =
+            m.mem_samples().iter().map(|s| s.rank).collect();
+        assert_eq!(ranks.len(), 4, "every rank contributes to the ledger");
+        let hw = m.high_water();
+        for sample in m.mem_samples() {
+            assert!(sample.resident_bytes > 0, "{sample:?}");
+            assert_eq!(
+                sample.resident_bytes % chunk_bytes,
+                0,
+                "resident memory is whole chunks: {sample:?}"
+            );
+            assert!(
+                sample.resident_bytes <= replicated,
+                "never above the replicated baseline: {sample:?}"
+            );
+            assert!(hw[&(sample.rank, sample.layer)] >= sample.resident_bytes);
+        }
+    }
+}
+
+#[test]
+fn predictor_accuracy_samples_span_reshard_boundaries() {
+    let cfg = builder()
+        .layers(2)
+        .data_shards(4)
+        .parallel(true)
+        .threads(4)
+        .reshard_every(2)
+        .metrics(true)
+        .build()
+        .unwrap();
+    let mut s = Session::fresh(cfg).unwrap();
+    s.run(5).unwrap();
+    assert!(s.reshards_moved() > 0 || s.reshard_every() == 2, "Algorithm 2 was on");
+    let m = s.meter_samples().unwrap();
+    let load = m.load_samples();
+    assert_eq!(load.len(), 5 * 2, "one load sample per iter per layer");
+    let iters: std::collections::BTreeSet<u32> = load.iter().map(|s| s.iter).collect();
+    assert_eq!(
+        iters,
+        (0..5).collect(),
+        "accuracy keeps being sampled across the reshard boundaries at 2 and 4"
+    );
+    for sample in load {
+        assert!(sample.mae.is_finite() && sample.mae >= 0.0 && sample.mae <= 2.0, "{sample:?}");
+        assert!((-1.0..=1.0).contains(&sample.rank_corr), "{sample:?}");
+        assert!(sample.imbalance >= 1.0, "{sample:?}");
+        assert!(sample.entropy >= 0.0, "{sample:?}");
+        assert!(sample.max_load > 0.0 && sample.max_load <= 1.0, "{sample:?}");
+    }
+}
+
+#[test]
+fn spmd_export_round_trips_files_prometheus_and_report_tables() {
+    let dir = std::env::temp_dir().join(format!("hecate-ledger-exp-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = builder()
+        .layers(2)
+        .data_shards(4)
+        .parallel(true)
+        .threads(4)
+        .metrics(true)
+        .build()
+        .unwrap();
+    let mut s = Session::fresh(cfg).unwrap();
+    let mut w = MetricsWriter::new(&dir);
+    s.run_observed(3, &mut [&mut w]).unwrap();
+    for f in [METRICS_JSONL_FILE, METRICS_PROM_FILE, COUNTERS_FILE] {
+        assert!(dir.join(f).exists(), "missing {f}");
+    }
+    let log = load_metrics(&dir).unwrap();
+    let m = s.meter_samples().unwrap();
+    assert_eq!(log.mem, m.mem_samples(), "JSONL round-trips the exact ledger");
+    assert_eq!(log.load, m.load_samples());
+    assert_eq!(log.high_water(), m.high_water());
+    // SPMD ranks recycle wire buffers, so payload idle bytes show up
+    assert!(
+        log.mem.iter().any(|s| s.payload_idle_bytes > 0),
+        "payload free-list column is live on the SPMD executor"
+    );
+
+    // exposition parses, and its peak gauges equal the ledger's marks
+    let text = std::fs::read_to_string(dir.join(METRICS_PROM_FILE)).unwrap();
+    let samples = parse_prometheus(&text).unwrap();
+    assert!(samples.iter().any(|p| p.name == "hecate_peak_resident_bytes"));
+    assert!(samples.iter().any(|p| p.name == "hecate_imbalance_pct_bucket"));
+
+    // the report tables carry one line per rank / per sample
+    let peak = log.peak_memory_table();
+    assert_eq!(peak.lines().count(), 2 + 4, "header rows + one per rank: {peak}");
+    let tl = log.imbalance_timeline();
+    assert_eq!(tl.lines().count(), 2 + 3 * 2, "header rows + one per load sample");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
