@@ -11,14 +11,19 @@
 //!                  [--layers L] [--reshard-every K]            (multi-layer stack)
 //!                  [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR] [--reference]
 //!                  [--parallel [--threads N]] [--pacing a,b]   (SPMD executor)
+//!                  [--racks R] [--pacing-topo SCALE]           (tiered topology + pacing)
+//!                  [--transport inproc|socket] [--recv-timeout S]   (SPMD rank transport)
+//!                  [--verify-inproc] [--worker-dir DIR]        (socket launcher extras)
 //!                  [--compute-threads T]       (sequential executor: threaded expert loops)
 //!                  [--trace-out DIR]           (per-rank Chrome trace + JSONL events)
 //!                  [--metrics-out DIR]         (memory ledger + load observatory export)
+//! hecate worker    --rank R --world N --listen ADDR --peers A0,..,AN-1 --out FILE
+//!                  (one SPMD rank as its own process; spawned by `fssdp --transport socket`)
 //! hecate checkpoint --dir DIR [--devices N --iters K]          (hermetic snapshot demo)
 //! hecate resume     --dir DIR [--devices M --iters K]          (elastic resume demo)
 //! hecate trace analyze DIR                    (critical path / overlap / stragglers)
 //! hecate metrics report DIR                   (peak memory / predictor accuracy / imbalance)
-//! hecate bench spmd [--iters N --quick]       (thread scaling + cross-layer overlap)
+//! hecate bench spmd [--iters N --quick] [--transport socket]   (thread scaling + overlap)
 //! hecate bench step [--iters N --quick --json --compute-threads T]  (per-phase step times)
 //!                  [--check [--gate-tol F]]   (CI perf gate vs committed baseline)
 //! ```
@@ -36,6 +41,7 @@ use crate::config::{ClusterPreset, ModelConfig, SystemConfig, SystemKind, TrainC
 use crate::fssdp::{self, Executor, PrintObserver, Session, SessionConfig, StepObserver};
 use crate::sim::engine::{simulate, simulate_with_faults};
 use crate::sim::report;
+use crate::spmd::transport::TransportKind;
 use crate::util::cli::Args;
 
 /// Entry point called by `main`.
@@ -51,6 +57,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "simulate" => cmd_simulate(&args),
         "train" => cmd_train(&args),
         "fssdp" => cmd_fssdp(&args),
+        "worker" => crate::spmd::worker::cmd_worker(&args),
         "checkpoint" => cmd_checkpoint(&args),
         "resume" => cmd_resume(&args),
         "trace" => cmd_trace(&args),
@@ -80,14 +87,19 @@ fn print_usage() {
          [--checkpoint-every N --checkpoint-dir DIR] [--resume DIR]\n                  \
          [--parallel [--threads N]]   (SPMD executor: one thread per rank)\n                  \
          [--pacing ALPHA,BETA]   (SPMD α–β link pacing: latency s, s/byte)\n                  \
+         [--racks R] [--pacing-topo SCALE]   (rack tier + topology-derived pacing)\n                  \
+         [--transport inproc|socket] [--recv-timeout S]   (SPMD rank transport)\n                  \
+         [--verify-inproc] [--worker-dir DIR]   (socket: bit-compare vs in-proc, keep logs)\n                  \
          [--compute-threads T]   (sequential executor: threaded expert loops, bit-identical)\n                  \
          [--trace-out DIR]   (write per-rank Chrome trace + JSONL events to DIR)\n                  \
          [--metrics-out DIR]   (write the memory ledger + load observatory to DIR)\n  \
+         hecate worker   --rank R --world N --listen ADDR --peers A0,..,AN-1 --out FILE\n                  \
+         (one SPMD rank as its own process; spawned by `fssdp --transport socket`)\n  \
          hecate checkpoint --dir DIR [--nodes N --devices N --layers L --iters K --seed S]\n  \
          hecate resume     --dir DIR [--nodes N --devices M --iters K]\n  \
          hecate trace analyze DIR   (critical path, overlap efficiency, straggler report)\n  \
          hecate metrics report DIR   (peak-memory, predictor-accuracy, imbalance tables)\n  \
-         hecate bench spmd [--iters N] [--quick]   (thread scaling + cross-layer overlap)\n  \
+         hecate bench spmd [--iters N] [--quick] [--transport socket]   (thread scaling + overlap)\n  \
          hecate bench step [--iters N] [--quick] [--json] [--compute-threads T]\n                  \
          [--check [--gate-tol F]]   (per-phase step times; --json writes\n                  \
          BENCH_runtime_step.json; --check gates on the committed baseline)"
@@ -273,9 +285,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_fssdp(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&[
-        "devices", "iters", "artifacts", "nodes", "seed", "layers", "reshard-every",
+        "devices", "iters", "artifacts", "nodes", "racks", "seed", "layers", "reshard-every",
         "checkpoint-every", "checkpoint-dir", "resume", "reference", "parallel", "threads",
-        "pacing", "compute-threads", "trace-out", "metrics-out",
+        "pacing", "pacing-topo", "transport", "recv-timeout", "verify-inproc", "worker-dir",
+        "compute-threads", "trace-out", "metrics-out",
     ])?;
     let mut b = SessionConfig::builder()
         .cluster(args.usize_or("nodes", 2)?, args.usize_or("devices", 8)?)
@@ -299,8 +312,20 @@ fn cmd_fssdp(args: &Args) -> anyhow::Result<()> {
     if args.has("reshard-every") {
         b = b.reshard_every(args.usize_or("reshard-every", 0)?);
     }
+    if args.has("racks") {
+        b = b.racks(args.usize_or("racks", 1)?);
+    }
     if let Some(p) = args.str_opt("pacing")? {
         b = b.pacing(fssdp::parse_pacing(&p)?);
+    }
+    if let Some(s) = args.str_opt("pacing-topo")? {
+        b = b.pacing_topo(fssdp::parse_pacing_scale(&s)?);
+    }
+    if let Some(t) = args.str_opt("transport")? {
+        b = b.transport(fssdp::parse_transport(&t)?);
+    }
+    if let Some(t) = args.str_opt("recv-timeout")? {
+        b = b.recv_timeout(fssdp::parse_recv_timeout(&t)?);
     }
     if let Some(d) = args.str_opt("checkpoint-dir")? {
         b = b.checkpoint_dir(d);
@@ -311,7 +336,41 @@ fn cmd_fssdp(args: &Args) -> anyhow::Result<()> {
     if let Some(d) = args.str_opt("metrics-out")? {
         b = b.metrics_out(d);
     }
-    run_fssdp_session(b.build()?, args.str_opt("resume")?, args.usize_or("iters", 10)?)
+    let resume = args.str_opt("resume")?;
+    let iters = args.usize_or("iters", 10)?;
+    let verify_inproc = args.bool_or("verify-inproc", false)?;
+    let worker_dir = args.str_opt("worker-dir")?;
+    let cfg = b.build()?;
+    if cfg.transport() == TransportKind::Socket {
+        // The process launcher runs fresh spans only: span-boundary logic
+        // (checkpoints, resume, re-sharding, telemetry export) lives on the
+        // coordinator engine, which the worker processes replace.
+        anyhow::ensure!(
+            resume.is_none(),
+            "--resume is not supported with --transport socket (the process launcher runs \
+             fresh spans only)"
+        );
+        anyhow::ensure!(
+            cfg.checkpoint_every() == 0 && cfg.checkpoint_dir().is_none(),
+            "--checkpoint-every/--checkpoint-dir are not supported with --transport socket"
+        );
+        anyhow::ensure!(
+            cfg.telemetry().trace_dir.is_none() && cfg.telemetry().metrics_dir.is_none(),
+            "--trace-out/--metrics-out are not supported with --transport socket \
+             (telemetry export stays within one process)"
+        );
+        anyhow::ensure!(
+            !args.has("reshard-every"),
+            "--reshard-every is not supported with --transport socket (re-sharding is a \
+             span-boundary operation on the coordinator engine)"
+        );
+        return crate::spmd::worker::launch_local(&cfg, iters, verify_inproc, worker_dir);
+    }
+    anyhow::ensure!(
+        !verify_inproc && worker_dir.is_none(),
+        "--verify-inproc/--worker-dir require --transport socket"
+    );
+    run_fssdp_session(cfg, resume, iters)
 }
 
 /// Shared driver of the `fssdp`/`checkpoint`/`resume` subcommands: enter a
@@ -444,11 +503,18 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         "spmd" => {
             // per-target allow-list: step-only flags must error here, not
             // silently no-op
-            args.reject_unknown(&["iters", "quick", "target"])?;
+            args.reject_unknown(&["iters", "quick", "target", "transport"])?;
             let iters = args.usize_or("iters", 3)?;
             let quick = args.bool_or("quick", false)?;
-            println!("== SPMD thread scaling: modeled comm vs measured wall clock ==");
-            let t = report::spmd_scaling(iters, quick)?;
+            let transport = match args.str_opt("transport")? {
+                Some(t) => fssdp::parse_transport(&t)?,
+                None => TransportKind::InProc,
+            };
+            println!(
+                "== SPMD thread scaling ({}): modeled comm vs measured wall clock ==",
+                transport.as_str()
+            );
+            let t = report::spmd_scaling(iters, quick, transport)?;
             print!("{}", t.to_markdown());
             println!("\n== Cross-layer overlap (paced links): wall clock on vs off ==");
             let t = report::spmd_overlap(iters, quick)?;
@@ -862,6 +928,86 @@ mod tests {
             .to_string();
         assert!(err.contains("--pacing expects"), "{err}");
         assert!(err.contains("got `fast`"), "{err}");
+    }
+
+    #[test]
+    fn socket_transport_flag_validation() {
+        // socket without --parallel fails in the shared config validation
+        let err = run(argv(&[
+            "fssdp", "--reference", "--iters", "1", "--transport", "socket",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--transport socket requires --parallel"), "{err}");
+        // a bogus transport names the value
+        let err = run(argv(&[
+            "fssdp", "--reference", "--iters", "1", "--transport", "telegraph",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("got `telegraph`"), "{err}");
+        // launcher extras are socket-only
+        let err = run(argv(&[
+            "fssdp", "--reference", "--parallel", "--devices", "4", "--iters", "1",
+            "--verify-inproc",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("require --transport socket"), "{err}");
+        // span-boundary features stay on the in-process coordinator
+        for extra in [
+            ["--resume", "/tmp/nowhere"],
+            ["--reshard-every", "2"],
+            ["--trace-out", "/tmp/nowhere"],
+        ] {
+            let mut a = argv(&[
+                "fssdp", "--reference", "--parallel", "--devices", "4", "--iters", "1",
+                "--transport", "socket",
+            ]);
+            a.extend(extra.iter().map(|s| s.to_string()));
+            let err = run(a).unwrap_err().to_string();
+            assert!(err.contains("not supported with --transport socket"), "{err}");
+        }
+    }
+
+    #[test]
+    fn rack_and_pacing_topo_flags_reach_validation() {
+        let err = run(argv(&[
+            "fssdp", "--reference", "--devices", "8", "--nodes", "4", "--racks", "3",
+            "--iters", "1",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--racks 3 must evenly divide --nodes 4"), "{err}");
+        // tiered pacing derived from a racked topology runs end to end
+        run(argv(&[
+            "fssdp", "--reference", "--parallel", "--devices", "8", "--nodes", "4",
+            "--racks", "2", "--pacing-topo", "1e6", "--iters", "1",
+        ]))
+        .unwrap();
+        let err = run(argv(&[
+            "fssdp", "--reference", "--parallel", "--devices", "4", "--iters", "1",
+            "--pacing", "1e-6,1e-12", "--pacing-topo", "1e6",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("mutually exclusive"), "{err}");
+    }
+
+    #[test]
+    fn bench_spmd_rejects_bad_transport_before_running() {
+        let err = run(argv(&["bench", "spmd", "--transport", "smoke-signal"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("got `smoke-signal`"), "{err}");
+    }
+
+    #[test]
+    fn worker_subcommand_is_dispatched() {
+        // full socket runs live in tests/socket_equivalence.rs (they need
+        // the real binary); here we check dispatch + flag validation.
+        let err = run(argv(&["worker", "--world", "4"])).unwrap_err().to_string();
+        assert!(err.contains("missing required option --rank"), "{err}");
     }
 
     #[test]

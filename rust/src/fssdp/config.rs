@@ -13,8 +13,10 @@
 
 use std::fmt;
 use std::path::PathBuf;
+use std::time::Duration;
 
 use crate::spmd::comm::Pacing;
+use crate::spmd::transport::TransportKind;
 use crate::telemetry::TelemetryConfig;
 use crate::topology::Topology;
 
@@ -66,6 +68,27 @@ pub enum ConfigError {
     TraceOutEmpty,
     /// `--metrics-out` with an empty/blank directory path.
     MetricsOutEmpty,
+    /// An unparseable `--transport` value.
+    BadTransport { given: String },
+    /// The socket transport on the sequential executor.
+    SocketNeedsParallel,
+    /// α–β link pacing combined with the socket transport (socket wire
+    /// time is real wall clock; pacing only models the in-proc fabric).
+    PacingWithSocket,
+    /// Both `--pacing` and `--pacing-topo` given.
+    PacingTopoConflict,
+    /// Topology-derived pacing on the sequential executor.
+    PacingTopoWithoutParallel,
+    /// An unparseable `--pacing-topo` value.
+    BadPacingScale { given: String },
+    /// `--racks 0`.
+    ZeroRacks,
+    /// A rack count that does not evenly divide the nodes.
+    RacksDontDivide { racks: usize, nodes: usize },
+    /// An unparseable `--recv-timeout` value.
+    BadRecvTimeout { given: String },
+    /// A receive timeout without the socket transport.
+    RecvTimeoutWithoutSocket,
 }
 
 impl fmt::Display for ConfigError {
@@ -121,6 +144,45 @@ impl fmt::Display for ConfigError {
             ConfigError::MetricsOutEmpty => {
                 write!(f, "--metrics-out expects a non-empty directory path")
             }
+            ConfigError::BadTransport { given } => {
+                write!(f, "--transport expects `inproc` or `socket`, got `{given}`")
+            }
+            ConfigError::SocketNeedsParallel => write!(
+                f,
+                "--transport socket requires --parallel (the transport moves SPMD rank \
+                 traffic; the sequential engine has none)"
+            ),
+            ConfigError::PacingWithSocket => write!(
+                f,
+                "--pacing/--pacing-topo require --transport inproc (socket wire time is \
+                 real wall clock; pacing models links for the in-process fabric only)"
+            ),
+            ConfigError::PacingTopoConflict => {
+                write!(f, "--pacing and --pacing-topo are mutually exclusive")
+            }
+            ConfigError::PacingTopoWithoutParallel => write!(
+                f,
+                "--pacing-topo requires --parallel (link pacing paces the SPMD \
+                 communicator; the sequential engine has no wire time to pace)"
+            ),
+            ConfigError::BadPacingScale { given } => write!(
+                f,
+                "--pacing-topo expects a positive time-scale factor (e.g. `1e3`), \
+                 got `{given}`"
+            ),
+            ConfigError::ZeroRacks => write!(f, "--racks must be at least 1"),
+            ConfigError::RacksDontDivide { racks, nodes } => {
+                write!(f, "--racks {racks} must evenly divide --nodes {nodes}")
+            }
+            ConfigError::BadRecvTimeout { given } => write!(
+                f,
+                "--recv-timeout expects a positive number of seconds, got `{given}`"
+            ),
+            ConfigError::RecvTimeoutWithoutSocket => write!(
+                f,
+                "--recv-timeout requires --transport socket (only the socket backend \
+                 polls receives against a deadline)"
+            ),
         }
     }
 }
@@ -142,6 +204,33 @@ pub fn parse_pacing(s: &str) -> Result<Pacing, ConfigError> {
     Ok(Pacing::uniform(1.0 / beta, alpha))
 }
 
+/// Parse the CLI's `--transport` value into a [`TransportKind`].
+pub fn parse_transport(s: &str) -> Result<TransportKind, ConfigError> {
+    TransportKind::parse(s).ok_or_else(|| ConfigError::BadTransport { given: s.to_string() })
+}
+
+/// Parse the CLI's `--pacing-topo` time-scale factor (simulated link
+/// seconds per wall-clock second; `1e3` makes a modeled millisecond cost a
+/// real microsecond).
+pub fn parse_pacing_scale(s: &str) -> Result<f64, ConfigError> {
+    let err = || ConfigError::BadPacingScale { given: s.to_string() };
+    let scale: f64 = s.trim().parse().map_err(|_| err())?;
+    if !scale.is_finite() || scale <= 0.0 {
+        return Err(err());
+    }
+    Ok(scale)
+}
+
+/// Parse the CLI's `--recv-timeout` value (seconds, fractional allowed).
+pub fn parse_recv_timeout(s: &str) -> Result<Duration, ConfigError> {
+    let err = || ConfigError::BadRecvTimeout { given: s.to_string() };
+    let secs: f64 = s.trim().parse().map_err(|_| err())?;
+    if !secs.is_finite() || secs <= 0.0 {
+        return Err(err());
+    }
+    Ok(Duration::from_secs_f64(secs))
+}
+
 /// Validated session configuration — the only way to obtain one is
 /// [`SessionConfig::builder`] + [`SessionConfigBuilder::build`], so holding
 /// a `SessionConfig` is proof the invariants hold.
@@ -159,6 +248,8 @@ pub struct SessionConfig {
     pub(crate) data_shards: Option<usize>,
     pub(crate) executor: Executor,
     pub(crate) pacing: Option<Pacing>,
+    pub(crate) transport: TransportKind,
+    pub(crate) recv_timeout: Option<Duration>,
     /// `Some(0)` explicitly disables in-run re-sharding (distinct from
     /// `None`, which keeps a resumed checkpoint's cadence).
     pub(crate) reshard_every: Option<usize>,
@@ -185,6 +276,11 @@ impl SessionConfig {
     /// The resolved executor.
     pub fn executor(&self) -> Executor {
         self.executor
+    }
+
+    /// The resolved SPMD transport backend.
+    pub fn transport(&self) -> TransportKind {
+        self.transport
     }
 
     /// Checkpoint destination, when configured.
@@ -219,6 +315,10 @@ pub struct SessionConfigBuilder {
     threads: Option<usize>,
     overlap: bool,
     pacing: Option<Pacing>,
+    pacing_topo: Option<f64>,
+    transport: TransportKind,
+    recv_timeout: Option<Duration>,
+    racks: Option<usize>,
     reshard_every: Option<usize>,
     checkpoint_every: usize,
     checkpoint_dir: Option<PathBuf>,
@@ -243,6 +343,10 @@ impl Default for SessionConfigBuilder {
             threads: None,
             overlap: true,
             pacing: None,
+            pacing_topo: None,
+            transport: TransportKind::InProc,
+            recv_timeout: None,
+            racks: None,
             reshard_every: None,
             checkpoint_every: 0,
             checkpoint_dir: None,
@@ -343,6 +447,42 @@ impl SessionConfigBuilder {
         self
     }
 
+    /// Derive the α–β pacing from the resolved topology's link tiers,
+    /// scaled by `scale` (simulated seconds per wall-clock second): every
+    /// SPMD transfer then occupies wall clock per the tier it crosses
+    /// (intra-node / inter-node / cross-rack). Mutually exclusive with
+    /// [`Self::pacing`]; requires [`Self::parallel`] and the in-proc
+    /// transport. Never affects numerics.
+    pub fn pacing_topo(mut self, scale: f64) -> Self {
+        self.pacing_topo = Some(scale);
+        self
+    }
+
+    /// Which transport the SPMD ranks communicate over: the in-process
+    /// mpsc fabric (default) or localhost sockets speaking the versioned
+    /// wire codec. Results are bit-identical either way (locked by
+    /// `rust/tests/socket_equivalence.rs`).
+    pub fn transport(mut self, t: TransportKind) -> Self {
+        self.transport = t;
+        self
+    }
+
+    /// Receive timeout of the socket transport (default 30 s): a rank
+    /// waiting longer than this on a peer fails with a typed timeout
+    /// instead of hanging the span.
+    pub fn recv_timeout(mut self, d: Duration) -> Self {
+        self.recv_timeout = Some(d);
+        self
+    }
+
+    /// Group the cluster's nodes into `n` racks (must divide the node
+    /// count): cross-rack hops get their own α–β tier in the topology and
+    /// in topology-derived pacing.
+    pub fn racks(mut self, n: usize) -> Self {
+        self.racks = Some(n);
+        self
+    }
+
     /// Re-run Algorithm 2 jointly over all layers every `k` iterations
     /// (0 disables; unset keeps a resumed checkpoint's cadence).
     pub fn reshard_every(mut self, k: usize) -> Self {
@@ -439,6 +579,28 @@ impl SessionConfigBuilder {
         if self.pacing.is_some() && !self.parallel {
             return Err(ConfigError::PacingWithoutParallel);
         }
+        if self.pacing_topo.is_some() && !self.parallel {
+            return Err(ConfigError::PacingTopoWithoutParallel);
+        }
+        if self.pacing.is_some() && self.pacing_topo.is_some() {
+            return Err(ConfigError::PacingTopoConflict);
+        }
+        if self.transport == TransportKind::Socket && !self.parallel {
+            return Err(ConfigError::SocketNeedsParallel);
+        }
+        if self.transport == TransportKind::Socket
+            && (self.pacing.is_some() || self.pacing_topo.is_some())
+        {
+            return Err(ConfigError::PacingWithSocket);
+        }
+        if self.recv_timeout.is_some() && self.transport != TransportKind::Socket {
+            return Err(ConfigError::RecvTimeoutWithoutSocket);
+        }
+        if let Some(scale) = self.pacing_topo {
+            if !scale.is_finite() || scale <= 0.0 {
+                return Err(ConfigError::BadPacingScale { given: scale.to_string() });
+            }
+        }
         let topo = match self.topology {
             Some(t) => t,
             None => {
@@ -450,6 +612,14 @@ impl SessionConfigBuilder {
                 }
                 Topology::cluster_a(self.nodes, self.devices / self.nodes)
             }
+        };
+        let topo = match self.racks {
+            Some(0) => return Err(ConfigError::ZeroRacks),
+            Some(r) if topo.nodes % r != 0 => {
+                return Err(ConfigError::RacksDontDivide { racks: r, nodes: topo.nodes });
+            }
+            Some(r) => topo.with_racks(r),
+            None => topo,
         };
         let devices = topo.num_devices();
         if devices == 0 {
@@ -489,6 +659,10 @@ impl SessionConfigBuilder {
         } else {
             Executor::Sequential
         };
+        let pacing = match self.pacing_topo {
+            Some(scale) => Some(Pacing::from_topology(&topo, scale)),
+            None => self.pacing,
+        };
         Ok(SessionConfig {
             backend: self.backend,
             dims: self.dims,
@@ -497,7 +671,9 @@ impl SessionConfigBuilder {
             seed: self.seed,
             data_shards: self.data_shards,
             executor,
-            pacing: self.pacing,
+            pacing,
+            transport: self.transport,
+            recv_timeout: self.recv_timeout,
             reshard_every: self.reshard_every,
             checkpoint_every: self.checkpoint_every,
             checkpoint_dir: self.checkpoint_dir,
@@ -677,6 +853,123 @@ mod tests {
         let cfg = base().cluster(2, 4).metrics_out("/tmp/metrics").build().unwrap();
         assert!(cfg.telemetry().metrics, "metrics_out implies enabled");
         assert_eq!(cfg.telemetry().metrics_dir.as_deref(), Some("/tmp/metrics"));
+    }
+
+    // ---- transport / rack knobs ----
+
+    #[test]
+    fn transport_parse_errors_name_the_value() {
+        assert_eq!(parse_transport("socket").unwrap(), TransportKind::Socket);
+        assert_eq!(parse_transport("inproc").unwrap(), TransportKind::InProc);
+        let err = parse_transport("carrier-pigeon").unwrap_err();
+        assert_eq!(err, ConfigError::BadTransport { given: "carrier-pigeon".to_string() });
+        assert_eq!(
+            err.to_string(),
+            "--transport expects `inproc` or `socket`, got `carrier-pigeon`"
+        );
+    }
+
+    #[test]
+    fn socket_transport_requires_parallel() {
+        let err = base().cluster(2, 4).transport(TransportKind::Socket).build().unwrap_err();
+        assert_eq!(err, ConfigError::SocketNeedsParallel);
+        assert!(err.to_string().contains("--transport socket requires --parallel"), "{err}");
+        let cfg = base()
+            .cluster(2, 4)
+            .parallel(true)
+            .transport(TransportKind::Socket)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.transport(), TransportKind::Socket);
+    }
+
+    #[test]
+    fn pacing_is_rejected_on_the_socket_transport() {
+        let p = parse_pacing("2e-5,1e-9").unwrap();
+        let err = base()
+            .cluster(2, 4)
+            .parallel(true)
+            .transport(TransportKind::Socket)
+            .pacing(p)
+            .build()
+            .unwrap_err();
+        assert_eq!(err, ConfigError::PacingWithSocket);
+        let err = base()
+            .cluster(2, 4)
+            .parallel(true)
+            .transport(TransportKind::Socket)
+            .pacing_topo(1e3)
+            .build()
+            .unwrap_err();
+        assert_eq!(err, ConfigError::PacingWithSocket);
+    }
+
+    #[test]
+    fn pacing_topo_derives_tiered_pacing_from_the_topology() {
+        let err = base().cluster(2, 4).pacing_topo(1e3).build().unwrap_err();
+        assert_eq!(err, ConfigError::PacingTopoWithoutParallel);
+        let p = parse_pacing("2e-5,1e-9").unwrap();
+        let err = base()
+            .cluster(2, 4)
+            .parallel(true)
+            .pacing(p)
+            .pacing_topo(1e3)
+            .build()
+            .unwrap_err();
+        assert_eq!(err, ConfigError::PacingTopoConflict);
+        let cfg =
+            base().cluster(4, 8).racks(2).parallel(true).pacing_topo(1e3).build().unwrap();
+        let pc = cfg.pacing.expect("pacing derived");
+        assert_eq!(pc.devices_per_node, 2);
+        assert_eq!(pc.nodes_per_rack, 2);
+        assert_eq!(pc.rack_bw, cfg.topology().rack_bw);
+        assert_eq!(pc.time_scale, 1e3);
+    }
+
+    #[test]
+    fn pacing_scale_parse_rejects_garbage() {
+        assert_eq!(parse_pacing_scale("1e3").unwrap(), 1e3);
+        for bad in ["nope", "0", "-5", "inf", ""] {
+            let err = parse_pacing_scale(bad).unwrap_err();
+            assert_eq!(err, ConfigError::BadPacingScale { given: bad.to_string() }, "{bad}");
+        }
+    }
+
+    #[test]
+    fn rack_knob_validates_and_reaches_the_topology() {
+        let err = base().cluster(4, 8).racks(0).build().unwrap_err();
+        assert_eq!(err, ConfigError::ZeroRacks);
+        assert_eq!(err.to_string(), "--racks must be at least 1");
+        let err = base().cluster(4, 8).racks(3).build().unwrap_err();
+        assert_eq!(err, ConfigError::RacksDontDivide { racks: 3, nodes: 4 });
+        assert_eq!(err.to_string(), "--racks 3 must evenly divide --nodes 4");
+        let cfg = base().cluster(4, 8).racks(2).build().unwrap();
+        assert_eq!(cfg.topology().racks, 2);
+        assert_eq!(cfg.topology().rack_bw, cfg.topology().inter_bw / 2.0);
+    }
+
+    #[test]
+    fn recv_timeout_parses_and_requires_socket() {
+        assert_eq!(parse_recv_timeout("1.5").unwrap(), Duration::from_millis(1500));
+        for bad in ["never", "0", "-1", "nan"] {
+            let err = parse_recv_timeout(bad).unwrap_err();
+            assert_eq!(err, ConfigError::BadRecvTimeout { given: bad.to_string() }, "{bad}");
+        }
+        let err = base()
+            .cluster(2, 4)
+            .parallel(true)
+            .recv_timeout(Duration::from_secs(5))
+            .build()
+            .unwrap_err();
+        assert_eq!(err, ConfigError::RecvTimeoutWithoutSocket);
+        let cfg = base()
+            .cluster(2, 4)
+            .parallel(true)
+            .transport(TransportKind::Socket)
+            .recv_timeout(Duration::from_secs(5))
+            .build()
+            .unwrap();
+        assert_eq!(cfg.recv_timeout, Some(Duration::from_secs(5)));
     }
 
     // ---- pacing parse ----

@@ -47,7 +47,10 @@ pub mod compute;
 pub mod config;
 pub mod session;
 
-pub use config::{parse_pacing, Backend, ConfigError, SessionConfig, SessionConfigBuilder};
+pub use config::{
+    parse_pacing, parse_pacing_scale, parse_recv_timeout, parse_transport, Backend, ConfigError,
+    SessionConfig, SessionConfigBuilder,
+};
 pub use session::{
     PrintObserver, ResumeReport, Session, SpanCtx, StatsCollector, StepObserver,
 };
@@ -820,6 +823,12 @@ pub struct FssdpEngine {
     /// numerics (pacing delays delivery, it cannot reorder the per-buffer
     /// accumulation orders).
     pub(crate) pacing: Option<Pacing>,
+    /// Which transport backend SPMD spans run over: the in-process mpsc
+    /// fabric (default) or localhost sockets, one OS process' worth of
+    /// rank threads speaking the wire codec end to end.
+    pub(crate) transport: crate::spmd::transport::TransportKind,
+    /// Receive timeout for the socket transport (None = backend default).
+    pub(crate) recv_timeout: Option<std::time::Duration>,
     /// Worker threads for the sequential executor's expert loops
     /// (reference backend only; 1 = in-line). SPMD ranks always use the
     /// single-threaded kernels — one OS thread per rank is the whole
@@ -932,6 +941,8 @@ impl FssdpEngine {
             reshards_moved: 0,
             reshard_events: Vec::new(),
             pacing: None,
+            transport: crate::spmd::transport::TransportKind::InProc,
+            recv_timeout: None,
             compute_threads: 1,
             workspace: StepWorkspace::default(),
             phases: StepPhases::default(),
@@ -1669,6 +1680,8 @@ impl FssdpEngine {
             reshards_moved: 0,
             reshard_events: Vec::new(),
             pacing: None,
+            transport: crate::spmd::transport::TransportKind::InProc,
+            recv_timeout: None,
             compute_threads: 1,
             workspace: StepWorkspace::default(),
             phases: StepPhases::default(),

@@ -253,6 +253,8 @@ impl Session {
     fn apply_tuning(engine: &mut FssdpEngine, cfg: &SessionConfig) {
         engine.executor = cfg.executor;
         engine.pacing = cfg.pacing;
+        engine.transport = cfg.transport;
+        engine.recv_timeout = cfg.recv_timeout;
         engine.compute_threads = cfg.compute_threads;
         if let Some(m) = cfg.mem_slots {
             engine.mem_slots = m;

@@ -4,11 +4,18 @@
 //! regenerates the paper's tables/figures, `simulate` runs a single
 //! cluster simulation, `train` drives the AOT-compiled model end-to-end
 //! through PJRT, and `fssdp` runs the numeric multi-device FSSDP engine.
+//!
+//! Exit codes: 0 success, 1 any other error, 2 a communicator failure
+//! (closed link, receive timeout, codec/handshake violation) — so process
+//! supervisors can tell a dead peer from a bad flag.
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = hecate::coordinator::run(argv) {
-        eprintln!("error: {e:#}");
-        std::process::exit(1);
+        let rendered = format!("{e:#}");
+        eprintln!("error: {rendered}");
+        let code =
+            if hecate::spmd::transport::CommError::is_comm_failure_msg(&rendered) { 2 } else { 1 };
+        std::process::exit(code);
     }
 }

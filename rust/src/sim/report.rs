@@ -309,7 +309,16 @@ pub fn recovery_table(
 /// for the first iteration's spAG+spRS; the `*_ms_per_iter` columns are
 /// **measured wall clock** on this host — the simulator's modeled times
 /// paired with physically executed ones, per the SPMD milestone.
-pub fn spmd_scaling(iters: usize, quick: bool) -> anyhow::Result<Table> {
+///
+/// `transport` picks the fabric under the SPMD column: the in-process mpsc
+/// backend, or (`--transport socket`) real unix sockets speaking the wire
+/// codec — the modeled α–β comm then sits next to measured socket wall
+/// clock, framing/syscall overhead included.
+pub fn spmd_scaling(
+    iters: usize,
+    quick: bool,
+    transport: crate::spmd::transport::TransportKind,
+) -> anyhow::Result<Table> {
     use crate::fssdp::{build_iter_plan, LayerDims, Session, SessionConfig};
     use crate::materialize::MatConstraints;
     use std::time::Instant;
@@ -340,7 +349,7 @@ pub fn spmd_scaling(iters: usize, quick: bool) -> anyhow::Result<Table> {
                 // trace + meter the SPMD run so the table can report
                 // realized compute skew, peak resident memory, and load
                 // imbalance next to the wall clock
-                b = b.parallel(true).threads(d).trace(true).metrics(true);
+                b = b.parallel(true).threads(d).trace(true).metrics(true).transport(transport);
             }
             Session::fresh(b.build()?)
         };
@@ -929,7 +938,7 @@ mod tests {
 
     #[test]
     fn spmd_scaling_smoke() {
-        let t = spmd_scaling(1, true).unwrap();
+        let t = spmd_scaling(1, true, crate::spmd::transport::TransportKind::InProc).unwrap();
         assert_eq!(t.header[1], "modeled_comm_ms");
         assert_eq!(t.header[5], "straggler_skew");
         assert_eq!(t.header[6], "peak_resident_kb");
@@ -940,6 +949,17 @@ mod tests {
             assert!(row[5].parse::<f64>().unwrap() >= 1.0, "skew column: {row:?}");
             assert!(row[6].parse::<f64>().unwrap() > 0.0, "peak memory column: {row:?}");
             assert!(row[7].parse::<f64>().unwrap() >= 1.0, "imbalance column: {row:?}");
+        }
+    }
+
+    #[test]
+    fn spmd_scaling_socket_smoke() {
+        // the socket arm: same table, SPMD column measured over real unix
+        // sockets (modeled α–β comm next to framed syscall wall clock)
+        let t = spmd_scaling(1, true, crate::spmd::transport::TransportKind::Socket).unwrap();
+        assert_eq!(t.rows.len(), 4);
+        for row in &t.rows {
+            assert!(row[4].parse::<f64>().unwrap() > 0.0, "speedup column: {row:?}");
         }
     }
 

@@ -1,39 +1,49 @@
-//! The in-process communicator: per-link mailboxes over `std::sync::mpsc`.
+//! The SPMD communicator: MPI-style tag matching over a pluggable
+//! [`Transport`].
 //!
-//! Every pair of ranks is connected by a dedicated unbounded channel (the
-//! "link"), so sends never block and per-link FIFO order is guaranteed by
-//! the transport. On top of that the communicator provides MPI-style
+//! Every pair of ranks is connected by a dedicated FIFO link; which kind
+//! of link is the backend's business ([`super::transport`]): the
+//! [`inproc`](super::transport::inproc) backend uses unbounded
+//! `std::sync::mpsc` channels between rank threads, the
+//! [`socket`](super::transport::socket) backend TCP/UDS streams between
+//! processes. On top of the raw link the communicator provides MPI-style
 //! **tag matching**: a receive names `(source, Tag)` and consumes the
 //! first message on that link carrying the tag, stashing earlier arrivals
 //! with other tags for their own receives. Tags carry the iteration
 //! number, so ranks may run ahead (the overlap scheduler issues
 //! next-iteration spAG traffic while peers still compute) without any
-//! global barrier.
+//! global barrier — on either backend, since the tag travels in the wire
+//! frame.
 //!
 //! Primitives:
-//! * [`RankComm::isend`] — nonblocking tagged send (never blocks; the
-//!   channel is unbounded).
+//! * [`RankComm::isend`] — nonblocking tagged send (never blocks; links
+//!   are unbounded / stream-buffered).
 //! * [`RankComm::irecv`] / [`RankComm::wait`] / [`RankComm::try_wait`] —
 //!   nonblocking receive with a completion handle, blocking completion,
 //!   and polling completion.
-//! * [`RankComm::barrier`] — full-communicator barrier.
+//! * [`RankComm::barrier`] — full-communicator barrier: the backend's
+//!   native barrier when it has one (in-proc), otherwise an all-to-all
+//!   exchange of empty [`MsgKind::Barrier`] messages.
 //! * [`RankComm::allgather`] — each rank contributes one buffer, all
 //!   ranks receive all buffers (used for the gate-decision exchange).
 //!
-//! **Link pacing** (optional): with a [`Pacing`] config, each message is
-//! assigned a delivery instant from the α–β model of the topology,
-//! serialized on the contended resource — the sender's NVLink port /
-//! NIC and the receiver's — so bottleneck-link contention (Eq. 1) is
+//! Failures are typed [`CommError`]s: a dropped peer surfaces as a
+//! closed-link error (never a hang — the socket backend additionally
+//! arms a receive timeout), carrying the rank/peer/tag context.
+//!
+//! **Link pacing** (optional, in-proc only): with a [`Pacing`] config,
+//! each message is assigned a delivery instant from the α–β model of the
+//! topology tier it crosses, so bottleneck-link contention (Eq. 1) is
 //! physically reproduced in wall-clock time rather than only predicted.
 
 use std::cell::RefCell;
 use std::collections::VecDeque;
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::{Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
 
+use super::transport::{CommError, Envelope, Transport, TransportKind};
 use crate::telemetry::{Phase as TracePhase, TraceRecorder};
-use crate::topology::Topology;
+
+pub use super::transport::Pacing;
 
 /// Message classes multiplexed over one link.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -52,6 +62,10 @@ pub enum MsgKind {
     GradX,
     /// Free-form control/test traffic.
     Ctrl,
+    /// Empty-payload barrier round (`iter` = barrier sequence number,
+    /// `a` = sending rank) — the fallback for backends without a native
+    /// barrier.
+    Barrier,
 }
 
 /// Matching key of a message. Two messages on one link never share a tag
@@ -77,121 +91,6 @@ pub struct Recv {
     pub tag: Tag,
 }
 
-struct Envelope {
-    tag: Tag,
-    data: Vec<f32>,
-    /// With pacing: the modeled delivery instant (the transfer is "on the
-    /// wire" until then).
-    ready_at: Option<Instant>,
-    /// Modeled in-flight time (queueing + transfer) in µs, 0 unpaced.
-    /// Carried on the wire so the receiver can attribute it in the trace.
-    wire_us: u64,
-}
-
-/// α–β link pacing configuration (all times in seconds, bandwidth in
-/// bytes/s). `time_scale` maps modeled seconds to real seconds so that
-/// GPU-cluster bandwidths produce observable wall-clock effects.
-#[derive(Debug, Clone, Copy)]
-pub struct Pacing {
-    pub devices_per_node: usize,
-    pub intra_bw: f64,
-    pub inter_bw: f64,
-    pub intra_lat: f64,
-    pub inter_lat: f64,
-    pub time_scale: f64,
-}
-
-impl Pacing {
-    /// Derive pacing from a topology's α–β parameters.
-    pub fn from_topology(t: &Topology, time_scale: f64) -> Pacing {
-        Pacing {
-            devices_per_node: t.devices_per_node,
-            intra_bw: t.intra_bw,
-            inter_bw: t.inter_bw,
-            intra_lat: t.intra_lat,
-            inter_lat: t.inter_lat,
-            time_scale,
-        }
-    }
-
-    /// Uniform single-switch pacing (tests): every transfer of `bytes`
-    /// bytes occupies its src/dst ports for `secs_per_msg(bytes)` seconds.
-    pub fn uniform(n_bytes_per_sec: f64, lat: f64) -> Pacing {
-        Pacing {
-            devices_per_node: usize::MAX,
-            intra_bw: n_bytes_per_sec,
-            inter_bw: n_bytes_per_sec,
-            intra_lat: lat,
-            inter_lat: lat,
-            time_scale: 1.0,
-        }
-    }
-}
-
-/// Shared pacing clocks: per-device port and per-node NIC busy-until
-/// times, in modeled seconds since `epoch`.
-struct Clocks {
-    dev_out: Vec<f64>,
-    dev_in: Vec<f64>,
-    nic_out: Vec<f64>,
-    nic_in: Vec<f64>,
-}
-
-struct Pacer {
-    cfg: Pacing,
-    epoch: Instant,
-    clocks: Mutex<Clocks>,
-}
-
-impl Pacer {
-    fn new(cfg: Pacing, n: usize) -> Pacer {
-        let dpn = cfg.devices_per_node.max(1);
-        let nodes = if dpn >= n { 1 } else { (n + dpn - 1) / dpn };
-        Pacer {
-            cfg,
-            epoch: Instant::now(),
-            clocks: Mutex::new(Clocks {
-                dev_out: vec![0.0; n],
-                dev_in: vec![0.0; n],
-                nic_out: vec![0.0; nodes],
-                nic_in: vec![0.0; nodes],
-            }),
-        }
-    }
-
-    /// Reserve the contended resources for a `bytes`-byte transfer and
-    /// return its delivery instant: the transfer starts when both the
-    /// source's egress and the destination's ingress are free, and holds
-    /// both for its α–β duration (serialization on the bottleneck link).
-    fn schedule(&self, src: usize, dst: usize, bytes: f64) -> Instant {
-        let dpn = self.cfg.devices_per_node.max(1);
-        let same_node = src / dpn == dst / dpn;
-        let (bw, lat) = if same_node {
-            (self.cfg.intra_bw, self.cfg.intra_lat)
-        } else {
-            (self.cfg.inter_bw, self.cfg.inter_lat)
-        };
-        let dur = (lat + bytes / bw.max(1.0)) * self.cfg.time_scale;
-        let now = self.epoch.elapsed().as_secs_f64();
-        let mut c = self.clocks.lock().expect("pacer lock poisoned");
-        let fin = if same_node {
-            let start = now.max(c.dev_out[src]).max(c.dev_in[dst]);
-            let fin = start + dur;
-            c.dev_out[src] = fin;
-            c.dev_in[dst] = fin;
-            fin
-        } else {
-            let (sn, dn) = (src / dpn, dst / dpn);
-            let start = now.max(c.nic_out[sn]).max(c.nic_in[dn]);
-            let fin = start + dur;
-            c.nic_out[sn] = fin;
-            c.nic_in[dn] = fin;
-            fin
-        };
-        self.epoch + Duration::from_secs_f64(fin)
-    }
-}
-
 /// Free-list of message payload buffers, per rank endpoint. Senders draw
 /// staging copies from it ([`RankComm::isend_slice`]) and receivers return
 /// consumed payloads ([`RankComm::recycle`]); since every rank both sends
@@ -206,16 +105,16 @@ struct PayloadPool {
     misses: u64,
 }
 
-/// One rank's endpoint of the communicator.
+/// One rank's endpoint of the communicator: tag matching, payload
+/// recycling, and telemetry over a boxed [`Transport`].
 pub struct RankComm {
     pub me: usize,
     n: usize,
-    tx: Vec<Sender<Envelope>>,
-    rx: Vec<Receiver<Envelope>>,
+    transport: Box<dyn Transport>,
     /// Arrived-but-unmatched messages, per source link.
     stash: Vec<VecDeque<Envelope>>,
-    barrier: Arc<Barrier>,
-    pacer: Option<Arc<Pacer>>,
+    /// Sequence number of the next fallback barrier round.
+    barrier_seq: u64,
     pool: RefCell<PayloadPool>,
     /// Per-rank telemetry recorder (None when tracing is off). `RefCell`
     /// because sends happen under shared borrows; the endpoint is owned by
@@ -223,45 +122,47 @@ pub struct RankComm {
     tracer: RefCell<Option<TraceRecorder>>,
 }
 
-/// Build the full n×n mailbox fabric; element `r` is rank `r`'s endpoint.
+/// Build the full n×n in-process mailbox fabric; element `r` is rank
+/// `r`'s endpoint. (The socket analog is
+/// [`local_fabric`](super::transport::socket::local_fabric); separate
+/// worker processes build endpoints via
+/// [`mesh_connect`](super::transport::socket::mesh_connect).)
 pub fn fabric(n: usize, pacing: Option<Pacing>) -> Vec<RankComm> {
-    assert!(n > 0, "communicator needs at least one rank");
-    // Channel (src → dst): src holds the Sender, dst the Receiver.
-    // senders[src][dst] / receivers[dst][src] — the nested loops append
-    // exactly one entry per (src, dst) pair to each side, in index order.
-    let mut senders: Vec<Vec<Sender<Envelope>>> = (0..n).map(|_| Vec::with_capacity(n)).collect();
-    let mut receivers: Vec<Vec<Receiver<Envelope>>> =
-        (0..n).map(|_| Vec::with_capacity(n)).collect();
-    for src in 0..n {
-        for dst in 0..n {
-            let (tx, rx) = channel();
-            senders[src].push(tx); // appended at index dst
-            receivers[dst].push(rx); // appended at index src
-        }
-    }
-    let barrier = Arc::new(Barrier::new(n));
-    let pacer = pacing.map(|p| Arc::new(Pacer::new(p, n)));
-    let mut out = Vec::with_capacity(n);
-    for (me, (tx, rx)) in senders.into_iter().zip(receivers).enumerate() {
-        out.push(RankComm {
-            me,
-            n,
-            tx,
-            rx,
-            stash: (0..n).map(|_| VecDeque::new()).collect(),
-            barrier: Arc::clone(&barrier),
-            pacer: pacer.clone(),
-            pool: RefCell::new(PayloadPool::default()),
-            tracer: RefCell::new(None),
-        });
-    }
-    out
+    super::transport::inproc::fabric(n, pacing)
+        .into_iter()
+        .map(|t| RankComm::endpoint(Box::new(t)))
+        .collect()
 }
 
 impl RankComm {
+    /// Wrap a connected transport endpoint into a communicator endpoint.
+    pub fn endpoint(transport: Box<dyn Transport>) -> RankComm {
+        let (me, n) = (transport.me(), transport.num_ranks());
+        RankComm {
+            me,
+            n,
+            transport,
+            stash: (0..n).map(|_| VecDeque::new()).collect(),
+            barrier_seq: 0,
+            pool: RefCell::new(PayloadPool::default()),
+            tracer: RefCell::new(None),
+        }
+    }
+
     /// Number of ranks in the communicator.
     pub fn num_ranks(&self) -> usize {
         self.n
+    }
+
+    /// Which backend carries this endpoint's traffic.
+    pub fn transport_kind(&self) -> TransportKind {
+        self.transport.kind()
+    }
+
+    /// Backend + addressing description (the socket backend reports its
+    /// listen path), for logs and trace metadata.
+    pub fn endpoint_desc(&self) -> String {
+        self.transport.describe()
     }
 
     /// Install this rank's telemetry recorder (the SPMD runtime does this
@@ -344,21 +245,20 @@ impl RankComm {
     }
 
     /// Nonblocking tagged send. Never blocks (unbounded link); errors only
-    /// if the destination rank has died (its receiver was dropped).
-    pub fn isend(&self, dst: usize, tag: Tag, data: Vec<f32>) -> anyhow::Result<()> {
-        let ready_at =
-            self.pacer.as_ref().map(|p| p.schedule(self.me, dst, data.len() as f64 * 4.0));
-        let wire_us = ready_at
-            .map_or(0, |t| t.saturating_duration_since(Instant::now()).as_micros() as u64);
+    /// if the destination rank has died. If the transport is done with the
+    /// buffer at return time (socket: it serialized a wire copy), the
+    /// buffer recycles into the payload free list.
+    pub fn isend(&self, dst: usize, tag: Tag, data: Vec<f32>) -> Result<(), CommError> {
         self.trace_send(tag, data.len() as u64 * 4);
-        self.tx[dst].send(Envelope { tag, data, ready_at, wire_us }).map_err(|_| {
-            anyhow::anyhow!("rank {}: link to rank {dst} closed (peer rank died)", self.me)
-        })
+        if let Some(buf) = self.transport.send(dst, tag, data)? {
+            self.recycle(buf);
+        }
+        Ok(())
     }
 
     /// [`RankComm::isend`] from a borrowed slice: the wire copy is staged
     /// in a recycled payload buffer instead of a fresh allocation.
-    pub fn isend_slice(&self, dst: usize, tag: Tag, data: &[f32]) -> anyhow::Result<()> {
+    pub fn isend_slice(&self, dst: usize, tag: Tag, data: &[f32]) -> Result<(), CommError> {
         self.isend(dst, tag, self.payload_from(data))
     }
 
@@ -408,20 +308,13 @@ impl RankComm {
     }
 
     /// Blocking completion of a posted receive.
-    pub fn wait(&mut self, r: Recv) -> anyhow::Result<Vec<f32>> {
+    pub fn wait(&mut self, r: Recv) -> Result<Vec<f32>, CommError> {
         if let Some(i) = self.stash[r.src].iter().position(|e| e.tag == r.tag) {
             let env = self.stash[r.src].remove(i).expect("index valid");
             return Ok(self.deliver(env));
         }
         loop {
-            let env = self.rx[r.src].recv().map_err(|_| {
-                anyhow::anyhow!(
-                    "rank {}: link from rank {} closed while waiting for {:?}",
-                    self.me,
-                    r.src,
-                    r.tag
-                )
-            })?;
+            let env = self.transport.recv_next(r.src).map_err(|e| e.with_tag(r.tag))?;
             if env.tag == r.tag {
                 return Ok(self.deliver(env));
             }
@@ -431,15 +324,16 @@ impl RankComm {
 
     /// Polling completion: `Ok(None)` if the message has not arrived (or,
     /// under pacing, is still on the wire). Errors if the link is closed
-    /// and the message can no longer arrive.
-    pub fn try_wait(&mut self, r: Recv) -> anyhow::Result<Option<Vec<f32>>> {
-        let mut closed = false;
+    /// (or broken) and the message can no longer arrive — arrivals already
+    /// stashed before the failure still complete first.
+    pub fn try_wait(&mut self, r: Recv) -> Result<Option<Vec<f32>>, CommError> {
+        let mut link_err: Option<CommError> = None;
         loop {
-            match self.rx[r.src].try_recv() {
-                Ok(env) => self.stash[r.src].push_back(env),
-                Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => {
-                    closed = true;
+            match self.transport.try_recv_next(r.src) {
+                Ok(Some(env)) => self.stash[r.src].push_back(env),
+                Ok(None) => break,
+                Err(e) => {
+                    link_err = Some(e);
                     break;
                 }
             }
@@ -454,26 +348,42 @@ impl RankComm {
             self.trace_delivery(env.tag, env.data.len() as u64 * 4, env.wire_us);
             return Ok(Some(env.data));
         }
-        if closed {
-            anyhow::bail!(
-                "rank {}: link from rank {} closed; {:?} will never arrive",
-                self.me,
-                r.src,
-                r.tag
-            );
+        match link_err {
+            Some(e) => Err(e.with_tag(r.tag)),
+            None => Ok(None),
         }
-        Ok(None)
     }
 
     /// Blocking tagged receive (`irecv` + `wait`).
-    pub fn recv(&mut self, src: usize, tag: Tag) -> anyhow::Result<Vec<f32>> {
+    pub fn recv(&mut self, src: usize, tag: Tag) -> Result<Vec<f32>, CommError> {
         let r = self.irecv(src, tag);
         self.wait(r)
     }
 
-    /// Full-communicator barrier.
-    pub fn barrier(&self) {
-        self.barrier.wait();
+    /// Full-communicator barrier: the backend's native barrier when it
+    /// has one, otherwise an all-to-all round of empty
+    /// [`MsgKind::Barrier`] messages under a fresh sequence number (no
+    /// rank leaves before every rank has entered).
+    pub fn barrier(&mut self) -> Result<(), CommError> {
+        if self.transport.barrier_wait() {
+            return Ok(());
+        }
+        let seq = self.barrier_seq;
+        self.barrier_seq += 1;
+        for dst in 0..self.n {
+            if dst != self.me {
+                let t = Tag { iter: seq, kind: MsgKind::Barrier, layer: 0, a: self.me, b: 0 };
+                self.isend_slice(dst, t, &[])?;
+            }
+        }
+        for src in 0..self.n {
+            if src != self.me {
+                let t = Tag { iter: seq, kind: MsgKind::Barrier, layer: 0, a: src, b: 0 };
+                let buf = self.recv(src, t)?;
+                self.recycle(buf);
+            }
+        }
+        Ok(())
     }
 
     /// Each rank contributes one buffer; returns all ranks' buffers
@@ -486,7 +396,7 @@ impl RankComm {
         kind: MsgKind,
         layer: usize,
         mine: &[f32],
-    ) -> anyhow::Result<Vec<Vec<f32>>> {
+    ) -> Result<Vec<Vec<f32>>, CommError> {
         for dst in 0..self.n {
             if dst != self.me {
                 self.isend_slice(dst, Tag { iter, kind, layer, a: self.me, b: 0 }, mine)?;
@@ -588,7 +498,9 @@ mod tests {
         let mut c1 = comms.remove(1);
         let c0 = comms.remove(0);
         drop(c0); // rank 0 dies
-        assert!(c1.recv(0, tag(0, 0)).is_err());
+        let err = c1.recv(0, tag(0, 0)).unwrap_err();
+        assert!(err.to_string().contains("link from rank 0 closed"), "{err}");
+        assert!(err.to_string().contains("will never arrive"), "awaited tag context: {err}");
         let r = c1.irecv(0, tag(0, 0));
         assert!(c1.try_wait(r).is_err());
     }
@@ -601,10 +513,10 @@ mod tests {
             .into_iter()
             .map(|mut c| {
                 thread::spawn(move || {
-                    c.barrier();
+                    c.barrier().unwrap();
                     let mine = vec![c.me as f32; c.me + 1];
                     let all = c.allgather(9, MsgKind::Ctrl, 0, &mine).unwrap();
-                    c.barrier();
+                    c.barrier().unwrap();
                     all
                 })
             })
@@ -704,5 +616,33 @@ mod tests {
         assert!(elapsed >= Duration::from_millis(90), "pacing too fast: {elapsed:?}");
         assert!(elapsed < Duration::from_millis(500), "pacing too slow: {elapsed:?}");
         drop(c0);
+    }
+
+    #[test]
+    fn fallback_barrier_synchronizes_socket_ranks() {
+        // The socket backend has no native barrier: the all-to-all
+        // Barrier-message round must still hold every rank until all
+        // have entered, twice in a row (sequence numbers disambiguate).
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let n = 3;
+        let comms = super::super::transport::socket::local_fabric(n, None).unwrap();
+        let entered = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                let entered = Arc::clone(&entered);
+                thread::spawn(move || {
+                    entered.fetch_add(1, Ordering::SeqCst);
+                    c.barrier().unwrap();
+                    assert_eq!(entered.load(Ordering::SeqCst), n, "barrier leaked a rank early");
+                    c.barrier().unwrap();
+                    c
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 }

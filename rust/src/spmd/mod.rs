@@ -1,15 +1,19 @@
-//! The SPMD parallel executor: run the numeric FSSDP engine with **one OS
-//! thread per simulated rank**, connected by an in-process communicator.
+//! The SPMD parallel executor: run the numeric FSSDP engine with **one
+//! program per rank** — OS threads over the in-process transport, or
+//! separate `hecate worker` processes over the socket transport.
 //!
 //! The sequential engine ([`FssdpEngine::step`]) is the oracle: it walks
 //! all N device memories in one loop, layer by layer. This module executes
 //! the *same* iteration — the same plans, the same kernels, the same
 //! floating-point orders — as N true SPMD programs:
 //!
-//! * [`comm`] — per-link mailboxes over `std::sync::mpsc` with MPI-style
-//!   tag matching (tags carry iteration **and layer**), barrier,
-//!   nonblocking `isend`/`irecv` + completion handles, and optional α–β
-//!   link pacing.
+//! * [`comm`] — the communicator: MPI-style tag matching (tags carry
+//!   iteration **and layer**), barrier, nonblocking `isend`/`irecv` +
+//!   completion handles, payload recycling, and optional α–β link pacing.
+//! * [`transport`] — the pluggable byte-moving layer under the
+//!   communicator: in-process mpsc mailboxes or TCP/UDS sockets with a
+//!   versioned wire codec (rank programs can be threads or processes
+//!   without the executor noticing).
 //! * [`exec`] — per-rank spAG/spRS execution ([`exec::RankSpag`],
 //!   [`exec::RankSprs`]), staged exactly as the compiled
 //!   [`SparsePlan`](crate::collectives::sparse::SparsePlan) dictates.
@@ -55,6 +59,8 @@
 pub mod comm;
 pub mod exec;
 pub(crate) mod sched;
+pub mod transport;
+pub(crate) mod worker;
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -79,6 +85,7 @@ use crate::topology::{DeviceId, Topology};
 use comm::{MsgKind, RankComm};
 use exec::{RankSpag, RankSprs};
 use sched::{order_resident_first, Overlap};
+use transport::{CommError, TransportKind};
 
 /// One layer's slice of a rank's state for a span.
 struct RankLayerState {
@@ -139,6 +146,32 @@ struct RankOut {
     meter: Option<StepMeter>,
 }
 
+/// Clone one rank's per-layer state slice out of the engine: its device's
+/// chunk store, the Adam states of the experts it owns, and a replicated
+/// predictor clone. Shared by the in-process span split and the
+/// `hecate worker` process entry ([`worker`]), so both build ranks from
+/// the identical deterministic recipe.
+fn split_rank_state(engine: &FssdpEngine, r: usize) -> anyhow::Result<Vec<RankLayerState>> {
+    let nd = engine.topo.num_devices();
+    let mut out = Vec::with_capacity(engine.layers.len());
+    for ls in &engine.layers {
+        anyhow::ensure!(
+            ls.params.devices.len() == nd,
+            "engine memory does not match the topology"
+        );
+        let store = ls.params.devices[r].clone();
+        let mut opt = BTreeMap::new();
+        for (e, st) in &ls.opt {
+            let owner = ls.shards.holders(*e).next().expect("every expert has an owner");
+            if owner.0 == r {
+                opt.insert(*e, st.clone());
+            }
+        }
+        out.push(RankLayerState { store, opt, predictor: ls.predictor.clone() });
+    }
+    Ok(out)
+}
+
 /// Run `iters` iterations of the engine on one thread per rank and sync
 /// the (bit-identical) state back into `engine`. Called through
 /// [`FssdpEngine::run_span`] with `Executor::Spmd`.
@@ -180,26 +213,15 @@ pub fn run_span(
     // states, not the originals: if any rank fails, the engine keeps its
     // pre-span state intact (a span either commits whole or not at all).
     // One parameter-set copy per span is noise next to a span of steps.
-    let mut rank_layers: Vec<Vec<RankLayerState>> =
-        (0..nd).map(|_| Vec::with_capacity(nl)).collect();
-    for ls in &engine.layers {
-        anyhow::ensure!(
-            ls.params.devices.len() == nd,
-            "engine memory does not match the topology"
-        );
-        for (r, ranks) in rank_layers.iter_mut().enumerate() {
-            let store = ls.params.devices[r].clone();
-            let mut opt = BTreeMap::new();
-            for (e, st) in &ls.opt {
-                let owner = ls.shards.holders(*e).next().expect("every expert has an owner");
-                if owner.0 == r {
-                    opt.insert(*e, st.clone());
-                }
-            }
-            ranks.push(RankLayerState { store, opt, predictor: ls.predictor.clone() });
-        }
-    }
-    let comms = comm::fabric(nd, engine.pacing);
+    let rank_layers: Vec<Vec<RankLayerState>> =
+        (0..nd).map(|r| split_rank_state(engine, r)).collect::<anyhow::Result<_>>()?;
+    let comms = match engine.transport {
+        TransportKind::InProc => comm::fabric(nd, engine.pacing),
+        // Real sockets between rank threads: a private UDS mesh. Pacing
+        // models wire time and only applies to the in-proc backend (the
+        // config layer rejects the combination); socket wall-clock is real.
+        TransportKind::Socket => transport::socket::local_fabric(nd, engine.recv_timeout)?,
+    };
     // Tracing on: give every rank endpoint a recorder sharing the engine
     // recorder's epoch, so all ranks' timestamps are directly comparable.
     if let Some(tr) = &engine.tracer {
@@ -259,7 +281,10 @@ pub fn run_span(
                 }
             }
             Ok(Err(e)) => {
-                if e.to_string().contains("closed") {
+                // A closed link / receive timeout is the *symptom* of a
+                // peer dying, not the cause — demote it behind whatever
+                // error killed the peer.
+                if CommError::is_peer_loss_msg(&e.to_string()) {
                     if secondary.is_none() {
                         secondary = Some(e);
                     }

@@ -1,0 +1,345 @@
+//! The in-process backend: per-link mailboxes over `std::sync::mpsc`.
+//!
+//! Every pair of ranks is connected by a dedicated unbounded channel (the
+//! "link"), so sends never block and per-link FIFO order is guaranteed by
+//! the channel itself. This is the original Hecate fabric — one OS thread
+//! per rank inside one process — and it remains the zero-alloc reference
+//! backend (the `ws_allocs == 0` steady-state lock runs over it).
+//!
+//! **Link pacing** (optional): with a [`Pacing`] config, each message is
+//! assigned a delivery instant from the α–β model of the topology,
+//! serialized on the contended resource for its tier crossing — the
+//! device's NVLink port within a node, the node's NIC within a rack, the
+//! rack's uplink across racks — so bottleneck-link contention (Eq. 1) is
+//! physically reproduced in wall-clock time rather than only predicted.
+//! Pacing shapes *time*, never payloads, so it cannot affect numerics.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+use super::{CommError, Envelope, Transport, TransportKind};
+use crate::spmd::comm::Tag;
+use crate::topology::Topology;
+
+/// α–β link pacing configuration (all times in seconds, bandwidth in
+/// bytes/s). `time_scale` maps modeled seconds to real seconds so that
+/// GPU-cluster bandwidths produce observable wall-clock effects.
+///
+/// Three tiers, selected by the link's crossing: device ports within a
+/// node (`intra_*`), node NICs within a rack (`inter_*`), rack uplinks
+/// across racks (`rack_*`).
+#[derive(Debug, Clone, Copy)]
+pub struct Pacing {
+    pub devices_per_node: usize,
+    /// Nodes per rack (`usize::MAX` = everything in one rack, the
+    /// pre-hierarchical default).
+    pub nodes_per_rack: usize,
+    pub intra_bw: f64,
+    pub inter_bw: f64,
+    /// Cross-rack uplink bandwidth (bytes/s).
+    pub rack_bw: f64,
+    pub intra_lat: f64,
+    pub inter_lat: f64,
+    /// Cross-rack latency (seconds).
+    pub rack_lat: f64,
+    pub time_scale: f64,
+}
+
+impl Pacing {
+    /// Derive per-link α–β from a topology's tier parameters: the tier a
+    /// message crosses ([`Topology::tier`]) picks its bandwidth/latency
+    /// pair and the serializing resource.
+    pub fn from_topology(t: &Topology, time_scale: f64) -> Pacing {
+        Pacing {
+            devices_per_node: t.devices_per_node,
+            nodes_per_rack: t.nodes_per_rack(),
+            intra_bw: t.intra_bw,
+            inter_bw: t.inter_bw,
+            rack_bw: t.rack_bw,
+            intra_lat: t.intra_lat,
+            inter_lat: t.inter_lat,
+            rack_lat: t.rack_lat,
+            time_scale,
+        }
+    }
+
+    /// Uniform single-switch pacing (tests): every transfer of `bytes`
+    /// bytes occupies its src/dst ports for `lat + bytes/bw` seconds.
+    pub fn uniform(n_bytes_per_sec: f64, lat: f64) -> Pacing {
+        Pacing {
+            devices_per_node: usize::MAX,
+            nodes_per_rack: usize::MAX,
+            intra_bw: n_bytes_per_sec,
+            inter_bw: n_bytes_per_sec,
+            rack_bw: n_bytes_per_sec,
+            intra_lat: lat,
+            inter_lat: lat,
+            rack_lat: lat,
+            time_scale: 1.0,
+        }
+    }
+}
+
+/// Shared pacing clocks: per-device port, per-node NIC, and per-rack
+/// uplink busy-until times, in modeled seconds since `epoch`.
+struct Clocks {
+    dev_out: Vec<f64>,
+    dev_in: Vec<f64>,
+    nic_out: Vec<f64>,
+    nic_in: Vec<f64>,
+    rack_out: Vec<f64>,
+    rack_in: Vec<f64>,
+}
+
+pub(crate) struct Pacer {
+    cfg: Pacing,
+    epoch: Instant,
+    clocks: Mutex<Clocks>,
+}
+
+impl Pacer {
+    pub(crate) fn new(cfg: Pacing, n: usize) -> Pacer {
+        let dpn = cfg.devices_per_node.max(1);
+        let nodes = if dpn >= n { 1 } else { (n + dpn - 1) / dpn };
+        let npr = cfg.nodes_per_rack.max(1);
+        let racks = if npr >= nodes { 1 } else { (nodes + npr - 1) / npr };
+        Pacer {
+            cfg,
+            epoch: Instant::now(),
+            clocks: Mutex::new(Clocks {
+                dev_out: vec![0.0; n],
+                dev_in: vec![0.0; n],
+                nic_out: vec![0.0; nodes],
+                nic_in: vec![0.0; nodes],
+                rack_out: vec![0.0; racks],
+                rack_in: vec![0.0; racks],
+            }),
+        }
+    }
+
+    /// Reserve the contended resources for a `bytes`-byte transfer and
+    /// return its delivery instant: the transfer starts when both the
+    /// source's egress and the destination's ingress are free at the
+    /// link's tier, and holds both for its α–β duration (serialization on
+    /// the bottleneck link). Intra-node links contend on device ports,
+    /// intra-rack links on node NICs, cross-rack links on rack uplinks.
+    pub(crate) fn schedule(&self, src: usize, dst: usize, bytes: f64) -> Instant {
+        let dpn = self.cfg.devices_per_node.max(1);
+        let npr = self.cfg.nodes_per_rack.max(1);
+        let (sn, dn) = (src / dpn, dst / dpn);
+        let (sr, dr) = (sn / npr, dn / npr);
+        let (bw, lat) = if sn == dn {
+            (self.cfg.intra_bw, self.cfg.intra_lat)
+        } else if sr == dr {
+            (self.cfg.inter_bw, self.cfg.inter_lat)
+        } else {
+            (self.cfg.rack_bw, self.cfg.rack_lat)
+        };
+        let dur = (lat + bytes / bw.max(1.0)) * self.cfg.time_scale;
+        let now = self.epoch.elapsed().as_secs_f64();
+        let mut c = self.clocks.lock().expect("pacer lock poisoned");
+        let (out_clock, in_clock): (&mut Vec<f64>, &mut Vec<f64>) = if sn == dn {
+            (&mut c.dev_out, &mut c.dev_in)
+        } else if sr == dr {
+            (&mut c.nic_out, &mut c.nic_in)
+        } else {
+            (&mut c.rack_out, &mut c.rack_in)
+        };
+        let (oi, ii) = if sn == dn {
+            (src, dst)
+        } else if sr == dr {
+            (sn, dn)
+        } else {
+            (sr, dr)
+        };
+        let start = now.max(out_clock[oi]).max(in_clock[ii]);
+        let fin = start + dur;
+        out_clock[oi] = fin;
+        in_clock[ii] = fin;
+        self.epoch + Duration::from_secs_f64(fin)
+    }
+}
+
+/// One rank's endpoint of the in-process mailbox fabric.
+pub struct InProcTransport {
+    me: usize,
+    n: usize,
+    tx: Vec<Sender<Envelope>>,
+    rx: Vec<Receiver<Envelope>>,
+    barrier: Arc<Barrier>,
+    pacer: Option<Arc<Pacer>>,
+}
+
+/// Build the full n×n mailbox fabric; element `r` is rank `r`'s endpoint.
+pub fn fabric(n: usize, pacing: Option<Pacing>) -> Vec<InProcTransport> {
+    assert!(n > 0, "communicator needs at least one rank");
+    // Channel (src → dst): src holds the Sender, dst the Receiver.
+    // senders[src][dst] / receivers[dst][src] — the nested loops append
+    // exactly one entry per (src, dst) pair to each side, in index order.
+    let mut senders: Vec<Vec<Sender<Envelope>>> = (0..n).map(|_| Vec::with_capacity(n)).collect();
+    let mut receivers: Vec<Vec<Receiver<Envelope>>> =
+        (0..n).map(|_| Vec::with_capacity(n)).collect();
+    for src in 0..n {
+        for dst in 0..n {
+            let (tx, rx) = channel();
+            senders[src].push(tx); // appended at index dst
+            receivers[dst].push(rx); // appended at index src
+        }
+    }
+    let barrier = Arc::new(Barrier::new(n));
+    let pacer = pacing.map(|p| Arc::new(Pacer::new(p, n)));
+    let mut out = Vec::with_capacity(n);
+    for (me, (tx, rx)) in senders.into_iter().zip(receivers).enumerate() {
+        out.push(InProcTransport {
+            me,
+            n,
+            tx,
+            rx,
+            barrier: Arc::clone(&barrier),
+            pacer: pacer.clone(),
+        });
+    }
+    out
+}
+
+impl Transport for InProcTransport {
+    fn me(&self) -> usize {
+        self.me
+    }
+
+    fn num_ranks(&self) -> usize {
+        self.n
+    }
+
+    fn send(&self, dst: usize, tag: Tag, data: Vec<f32>) -> Result<Option<Vec<f32>>, CommError> {
+        let ready_at =
+            self.pacer.as_ref().map(|p| p.schedule(self.me, dst, data.len() as f64 * 4.0));
+        let wire_us = ready_at
+            .map_or(0, |t| t.saturating_duration_since(Instant::now()).as_micros() as u64);
+        self.tx[dst].send(Envelope { tag, data, ready_at, wire_us }).map_err(|_| {
+            CommError::PeerClosed { rank: self.me, peer: dst, sending: true, tag: Some(tag) }
+        })?;
+        Ok(None) // ownership moved into the fabric
+    }
+
+    fn recv_next(&mut self, src: usize) -> Result<Envelope, CommError> {
+        self.rx[src].recv().map_err(|_| CommError::PeerClosed {
+            rank: self.me,
+            peer: src,
+            sending: false,
+            tag: None,
+        })
+    }
+
+    fn try_recv_next(&mut self, src: usize) -> Result<Option<Envelope>, CommError> {
+        match self.rx[src].try_recv() {
+            Ok(env) => Ok(Some(env)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(CommError::PeerClosed {
+                rank: self.me,
+                peer: src,
+                sending: false,
+                tag: None,
+            }),
+        }
+    }
+
+    fn barrier_wait(&self) -> bool {
+        self.barrier.wait();
+        true
+    }
+
+    fn kind(&self) -> TransportKind {
+        TransportKind::InProc
+    }
+
+    fn describe(&self) -> String {
+        format!("inproc rank {}/{} (mpsc)", self.me, self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmd::comm::MsgKind;
+
+    fn tag(a: usize) -> Tag {
+        Tag { iter: 0, kind: MsgKind::Ctrl, layer: 0, a, b: 0 }
+    }
+
+    #[test]
+    fn send_and_recv_next_move_payloads_fifo() {
+        let mut f = fabric(2, None);
+        let mut t1 = f.remove(1);
+        let t0 = f.remove(0);
+        assert!(t0.send(1, tag(0), vec![1.0]).unwrap().is_none(), "inproc keeps the buffer");
+        t0.send(1, tag(1), vec![2.0]).unwrap();
+        let a = t1.recv_next(0).unwrap();
+        let b = t1.recv_next(0).unwrap();
+        assert_eq!((a.tag.a, a.data), (0, vec![1.0]));
+        assert_eq!((b.tag.a, b.data), (1, vec![2.0]));
+        assert!(t1.try_recv_next(0).unwrap().is_none());
+        assert_eq!(t0.kind(), TransportKind::InProc);
+    }
+
+    #[test]
+    fn dropped_peer_is_a_typed_error() {
+        let mut f = fabric(2, None);
+        let mut t1 = f.remove(1);
+        drop(f.remove(0));
+        match t1.recv_next(0) {
+            Err(CommError::PeerClosed { rank: 1, peer: 0, sending: false, .. }) => {}
+            other => panic!("unexpected: {:?}", other.map(|e| e.tag)),
+        }
+        assert!(matches!(t1.try_recv_next(0), Err(CommError::PeerClosed { .. })));
+    }
+
+    #[test]
+    fn rack_tier_paces_slower_than_intra_rack() {
+        // 2 devices per node, 1 node per rack: ranks {0,1} rack 0,
+        // ranks {2,3} rack 1. Cross-rack bandwidth is 100× slower, so the
+        // same payload takes ≥ ~100 ms across racks vs ~1 ms within a node.
+        let cfg = Pacing {
+            devices_per_node: 2,
+            nodes_per_rack: 1,
+            intra_bw: 1_000_000.0,
+            inter_bw: 1_000_000.0,
+            rack_bw: 10_000.0,
+            intra_lat: 0.0,
+            inter_lat: 0.0,
+            rack_lat: 0.0,
+            time_scale: 1.0,
+        };
+        let pacer = Pacer::new(cfg, 4);
+        let t0 = Instant::now();
+        let intra = pacer.schedule(0, 1, 1000.0);
+        let cross = pacer.schedule(0, 2, 1000.0);
+        assert!(intra.duration_since(t0) < Duration::from_millis(50));
+        assert!(cross.duration_since(t0) >= Duration::from_millis(90));
+    }
+
+    #[test]
+    fn cross_rack_transfers_serialize_on_the_rack_uplink() {
+        // Two different node pairs crossing the same rack boundary must
+        // share the rack uplink: second transfer finishes ~2× later.
+        let cfg = Pacing {
+            devices_per_node: 1,
+            nodes_per_rack: 2,
+            intra_bw: 1e9,
+            inter_bw: 1e9,
+            rack_bw: 10_000.0,
+            intra_lat: 0.0,
+            inter_lat: 0.0,
+            rack_lat: 0.0,
+            time_scale: 1.0,
+        };
+        // 4 ranks = 4 nodes = 2 racks: {0,1} and {2,3}.
+        let pacer = Pacer::new(cfg, 4);
+        let t0 = Instant::now();
+        let first = pacer.schedule(0, 2, 1000.0); // rack 0 → rack 1, 100 ms
+        let second = pacer.schedule(1, 3, 1000.0); // same uplink, serialized
+        assert!(first.duration_since(t0) >= Duration::from_millis(90));
+        assert!(second.duration_since(t0) >= Duration::from_millis(190));
+    }
+}

@@ -1,0 +1,323 @@
+//! Pluggable rank-to-rank transports under the SPMD communicator.
+//!
+//! [`RankComm`](crate::spmd::comm::RankComm) owns everything that makes the
+//! communicator *a communicator* — MPI-style tag matching, the per-link
+//! stash, payload free-lists, and the telemetry seams — and delegates the
+//! raw byte movement to a [`Transport`] object. Two backends implement the
+//! trait:
+//!
+//! * [`inproc`] — the original per-link `std::sync::mpsc` mailbox fabric
+//!   (one OS thread per rank inside one process), with optional α–β link
+//!   [`Pacing`] so wire time is physically on the clock.
+//! * [`socket`] — TCP/UDS streams with a versioned, length-prefixed wire
+//!   codec, so ranks can run as separate processes (`hecate worker`). The
+//!   codec carries the full `(iter, layer, kind, a, b)` tag, which is what
+//!   keeps iteration-tagged, barrier-free overlap (§4.3) working across
+//!   process boundaries.
+//!
+//! The trait contract every backend must honor (the determinism contract
+//! of `DESIGN.md §SPMD` leans on all three):
+//!
+//! 1. **Per-link FIFO** — messages from one `src` arrive in send order.
+//! 2. **Reliable, non-blocking sends** — `send` never blocks on a healthy
+//!    peer and never drops a message.
+//! 3. **Payload integrity** — `f32` payloads arrive bit-identical
+//!    (IEEE-754 bit patterns, including NaN payloads, survive the wire).
+//!
+//! Failures surface as typed [`CommError`]s carrying the rank, peer, and
+//! (where known) the tag being waited on, so a dead worker process reports
+//! *which* link broke instead of hanging the fabric.
+
+use std::time::Duration;
+
+use crate::spmd::comm::Tag;
+
+pub mod inproc;
+pub mod socket;
+
+pub use inproc::Pacing;
+
+/// Which transport backs the SPMD communicator fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TransportKind {
+    /// In-process mpsc mailboxes (one OS thread per rank, one process).
+    InProc,
+    /// TCP/UDS streams with the versioned wire codec (rank threads or
+    /// separate `hecate worker` processes).
+    Socket,
+}
+
+impl TransportKind {
+    /// Parse a CLI spelling (`inproc` | `socket`).
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s {
+            "inproc" | "in-proc" | "mpsc" => Some(TransportKind::InProc),
+            "socket" | "uds" | "tcp" => Some(TransportKind::Socket),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Socket => "socket",
+        }
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One message as the transport hands it to the matching layer: the tag,
+/// the payload, and (under pacing) the modeled delivery schedule.
+pub struct Envelope {
+    pub tag: Tag,
+    pub data: Vec<f32>,
+    /// With pacing: the modeled delivery instant (the transfer is "on the
+    /// wire" until then). `None` on unpaced links and the socket backend
+    /// (socket wall-clock is real, not modeled).
+    pub ready_at: Option<std::time::Instant>,
+    /// Modeled in-flight time (queueing + transfer) in µs, 0 unpaced.
+    /// Carried on the wire so the receiver can attribute it in the trace.
+    pub wire_us: u64,
+}
+
+/// A typed communicator failure: every variant names the local rank and —
+/// where the failure is link-scoped — the peer and the tag being carried
+/// or awaited, so errors out of an 8-process fabric are actionable.
+///
+/// The vendored `anyhow` stand-in is string-erased (no `downcast_ref`), so
+/// callers that only hold a rendered error chain classify it with
+/// [`CommError::is_comm_failure_msg`] / [`CommError::is_peer_loss_msg`];
+/// both are locked to the `Display` forms below by unit tests.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CommError {
+    /// The peer endpoint is gone: its rank thread died, its process
+    /// exited, or the stream hit EOF / a broken pipe.
+    PeerClosed {
+        rank: usize,
+        peer: usize,
+        /// True when detected on the send path, false on the receive path.
+        sending: bool,
+        /// The tag being sent / awaited, when known.
+        tag: Option<Tag>,
+    },
+    /// A blocking receive exceeded the configured timeout (socket backend;
+    /// see `SessionConfigBuilder::recv_timeout`).
+    Timeout { rank: usize, peer: usize, tag: Option<Tag>, after: Duration },
+    /// The peer sent bytes the wire codec rejects (bad magic/version/
+    /// length, truncated frame, unknown message kind).
+    Codec { rank: usize, peer: usize, detail: String },
+    /// An OS-level transport error (connect/bind/read/write).
+    Io { rank: usize, peer: usize, op: &'static str, detail: String },
+    /// A handshake or addressing violation (wrong rank count, duplicate
+    /// peer, self-receive, malformed address).
+    Protocol { rank: usize, detail: String },
+}
+
+impl CommError {
+    /// Attach the awaited tag to a link-scoped error that was raised below
+    /// the matching layer (which alone knows what it was waiting for).
+    pub(crate) fn with_tag(self, t: Tag) -> CommError {
+        match self {
+            CommError::PeerClosed { rank, peer, sending, tag: None } => {
+                CommError::PeerClosed { rank, peer, sending, tag: Some(t) }
+            }
+            CommError::Timeout { rank, peer, tag: None, after } => {
+                CommError::Timeout { rank, peer, tag: Some(t), after }
+            }
+            other => other,
+        }
+    }
+
+    /// Does a rendered error chain contain a communicator failure? (The
+    /// CLI maps these to a dedicated nonzero exit code.)
+    pub fn is_comm_failure_msg(msg: &str) -> bool {
+        [
+            "link to rank",
+            "link from rank",
+            "timed out after",
+            "wire codec error",
+            "transport i/o error",
+            "transport protocol error",
+        ]
+        .iter()
+        .any(|needle| msg.contains(needle))
+    }
+
+    /// Does a rendered error chain describe a *lost peer* (closed link or
+    /// receive timeout)? Used by the span merge to demote secondary
+    /// "my peer died" errors behind the primary failure that killed it.
+    pub fn is_peer_loss_msg(msg: &str) -> bool {
+        msg.contains("closed") || msg.contains("timed out")
+    }
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::PeerClosed { rank, peer, sending: true, tag } => {
+                write!(f, "rank {rank}: link to rank {peer} closed (peer rank died)")?;
+                if let Some(t) = tag {
+                    write!(f, " while sending {t:?}")?;
+                }
+                Ok(())
+            }
+            CommError::PeerClosed { rank, peer, sending: false, tag } => {
+                write!(f, "rank {rank}: link from rank {peer} closed")?;
+                if let Some(t) = tag {
+                    write!(f, "; {t:?} will never arrive")?;
+                }
+                Ok(())
+            }
+            CommError::Timeout { rank, peer, tag, after } => {
+                write!(f, "rank {rank}: receive from rank {peer} timed out after {after:?}")?;
+                if let Some(t) = tag {
+                    write!(f, " while waiting for {t:?}")?;
+                }
+                Ok(())
+            }
+            CommError::Codec { rank, peer, detail } => {
+                write!(f, "rank {rank}: wire codec error on link from rank {peer}: {detail}")
+            }
+            CommError::Io { rank, peer, op, detail } => {
+                write!(f, "rank {rank}: transport i/o error ({op}, peer rank {peer}): {detail}")
+            }
+            CommError::Protocol { rank, detail } => {
+                write!(f, "rank {rank}: transport protocol error: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+/// The raw endpoint a [`RankComm`](crate::spmd::comm::RankComm) speaks to.
+///
+/// The object moves messages; it does **not** match tags — `recv_next` /
+/// `try_recv_next` surface whatever is next on the link and the
+/// communicator stashes non-matching arrivals. Sends take `&self`
+/// (the overlap scheduler and the collective drivers send under shared
+/// borrows of the endpoint); backends use interior mutability for their
+/// writer state. An endpoint is owned by exactly one rank thread.
+pub trait Transport: Send {
+    /// This endpoint's rank.
+    fn me(&self) -> usize;
+
+    /// Number of ranks in the fabric.
+    fn num_ranks(&self) -> usize;
+
+    /// Nonblocking tagged send of an owned payload. Returns the payload
+    /// buffer when the transport is done with it at return time (the
+    /// socket backend serializes into its own scratch), so the caller can
+    /// recycle it; `None` when ownership moved into the fabric (in-proc).
+    fn send(&self, dst: usize, tag: Tag, data: Vec<f32>) -> Result<Option<Vec<f32>>, CommError>;
+
+    /// Blocking receive of the next message from `src`, any tag. Honors
+    /// the backend's receive timeout, if any.
+    fn recv_next(&mut self, src: usize) -> Result<Envelope, CommError>;
+
+    /// Nonblocking poll: `Ok(None)` when no message is currently
+    /// available on the link from `src`.
+    fn try_recv_next(&mut self, src: usize) -> Result<Option<Envelope>, CommError>;
+
+    /// Execute a native fabric-wide barrier if the backend has one
+    /// (in-proc: `std::sync::Barrier`). Returns false when the backend has
+    /// no native barrier; the communicator then runs its message-based
+    /// fallback over [`Transport::send`] / [`Transport::recv_next`].
+    fn barrier_wait(&self) -> bool;
+
+    /// Which backend this is.
+    fn kind(&self) -> TransportKind;
+
+    /// Human-readable endpoint description (backend + addressing) for
+    /// error messages and traces — the socket backend reports its
+    /// listen path here.
+    fn describe(&self) -> String;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmd::comm::MsgKind;
+
+    fn tag() -> Tag {
+        Tag { iter: 3, kind: MsgKind::Ctrl, layer: 1, a: 2, b: 0 }
+    }
+
+    #[test]
+    fn transport_kind_parses_cli_spellings() {
+        assert_eq!(TransportKind::parse("inproc"), Some(TransportKind::InProc));
+        assert_eq!(TransportKind::parse("socket"), Some(TransportKind::Socket));
+        assert_eq!(TransportKind::parse("uds"), Some(TransportKind::Socket));
+        assert_eq!(TransportKind::parse("carrier-pigeon"), None);
+        assert_eq!(TransportKind::Socket.to_string(), "socket");
+    }
+
+    #[test]
+    fn errors_render_rank_peer_and_tag_context() {
+        let e = CommError::PeerClosed { rank: 1, peer: 0, sending: false, tag: Some(tag()) };
+        let msg = e.to_string();
+        assert!(msg.contains("rank 1"), "{msg}");
+        assert!(msg.contains("link from rank 0 closed"), "{msg}");
+        assert!(msg.contains("will never arrive"), "{msg}");
+
+        let e = CommError::PeerClosed { rank: 2, peer: 3, sending: true, tag: None };
+        assert_eq!(e.to_string(), "rank 2: link to rank 3 closed (peer rank died)");
+
+        let e = CommError::Timeout {
+            rank: 0,
+            peer: 1,
+            tag: Some(tag()),
+            after: Duration::from_secs(5),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("timed out after"), "{msg}");
+        assert!(msg.contains("while waiting for"), "{msg}");
+    }
+
+    #[test]
+    fn with_tag_fills_only_missing_tags() {
+        let e = CommError::PeerClosed { rank: 0, peer: 1, sending: false, tag: None };
+        match e.with_tag(tag()) {
+            CommError::PeerClosed { tag: Some(t), .. } => assert_eq!(t, tag()),
+            other => panic!("unexpected: {other:?}"),
+        }
+        let preset = Tag { iter: 9, kind: MsgKind::Gate, layer: 0, a: 1, b: 0 };
+        let e = CommError::PeerClosed { rank: 0, peer: 1, sending: false, tag: Some(preset) };
+        match e.with_tag(tag()) {
+            CommError::PeerClosed { tag: Some(t), .. } => assert_eq!(t, preset),
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rendered_chain_classifiers_match_every_variant() {
+        // The vendored anyhow cannot downcast, so these substring
+        // classifiers are the CLI's and the span merge's only handle on
+        // typed comm failures — lock them to the Display forms.
+        let all = [
+            CommError::PeerClosed { rank: 0, peer: 1, sending: true, tag: None },
+            CommError::PeerClosed { rank: 0, peer: 1, sending: false, tag: Some(tag()) },
+            CommError::Timeout { rank: 0, peer: 1, tag: None, after: Duration::from_secs(1) },
+            CommError::Codec { rank: 0, peer: 1, detail: "bad magic".into() },
+            CommError::Io { rank: 0, peer: 1, op: "write", detail: "broken pipe".into() },
+            CommError::Protocol { rank: 0, detail: "duplicate handshake".into() },
+        ];
+        for e in &all {
+            assert!(
+                CommError::is_comm_failure_msg(&e.to_string()),
+                "not classified as comm failure: {e}"
+            );
+        }
+        // peer-loss covers exactly the closed-link and timeout shapes
+        assert!(CommError::is_peer_loss_msg(&all[0].to_string()));
+        assert!(CommError::is_peer_loss_msg(&all[1].to_string()));
+        assert!(CommError::is_peer_loss_msg(&all[2].to_string()));
+        assert!(!CommError::is_peer_loss_msg(&all[3].to_string()));
+        assert!(!CommError::is_comm_failure_msg("the gate weights are frozen"));
+    }
+}

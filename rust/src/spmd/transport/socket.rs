@@ -1,0 +1,715 @@
+//! The socket backend: TCP/UDS streams with a versioned wire codec.
+//!
+//! Ranks connect as a full mesh — rank `r` dials every rank below it and
+//! accepts from every rank above it, identifying inbound peers with a
+//! 9-byte handshake — so the same endpoint works for rank threads inside
+//! one process ([`local_fabric`]) and for separate `hecate worker`
+//! processes on localhost. A dedicated reader thread per inbound link
+//! decodes frames into an unbounded channel, preserving the per-link FIFO
+//! guarantee the tag-matching layer relies on; a clean peer shutdown
+//! surfaces exactly like a dropped in-proc mailbox (the channel
+//! disconnects and the receive reports a closed link).
+//!
+//! ## Wire format (version 1, all integers little-endian)
+//!
+//! ```text
+//! handshake (once per connection, dialer → acceptor):
+//!   [magic  4B = "HCTP"] [version 1B] [rank 4B]
+//! frame (repeated):
+//!   [len 4B] [version 1B] [kind 1B] [iter 8B] [layer 4B] [a 4B] [b 4B]
+//!   [payload: len-22 bytes of f32 little-endian bit patterns]
+//! ```
+//!
+//! `len` counts every byte after the length prefix, so an empty payload
+//! frame has `len == 22`. Frames carry the full `(iter, kind, layer, a,
+//! b)` tag, which is what keeps iteration-tagged, barrier-free overlap
+//! working across process boundaries. Payloads are raw IEEE-754 bit
+//! patterns — `f32::to_bits`/`from_bits`, never a text round-trip — so
+//! parameters arrive bit-identical and the `in-proc ≡ socket` equivalence
+//! lock can compare with `==`. Decoding rejects bad magic, unknown
+//! versions or kinds, truncated frames, payload lengths that are not a
+//! multiple of 4, and frames beyond [`MAX_FRAME_LEN`].
+
+use std::cell::RefCell;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::{CommError, Envelope, Transport, TransportKind};
+use crate::spmd::comm::{MsgKind, RankComm, Tag};
+
+/// Wire protocol version carried in the handshake and every frame.
+pub const WIRE_VERSION: u8 = 1;
+/// Handshake magic ("HeCaTe Transport Protocol").
+pub const MAGIC: [u8; 4] = *b"HCTP";
+/// Frame bytes after the length prefix, before the payload.
+pub const HEADER_LEN: usize = 22;
+/// Largest accepted frame body (header + 64 MiB of payload).
+pub const MAX_FRAME_LEN: usize = HEADER_LEN + (64 << 20);
+
+/// Default blocking-receive timeout of the socket backend: a vanished
+/// peer process must surface as an error, never a hang.
+pub const DEFAULT_RECV_TIMEOUT: Duration = Duration::from_secs(30);
+/// Default time budget for establishing the full mesh.
+pub const DEFAULT_CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
+fn kind_code(k: MsgKind) -> u8 {
+    match k {
+        MsgKind::SpagChunk => 0,
+        MsgKind::SprsChunk => 1,
+        MsgKind::Gate => 2,
+        MsgKind::Combine => 3,
+        MsgKind::GradX => 4,
+        MsgKind::Ctrl => 5,
+        MsgKind::Barrier => 6,
+    }
+}
+
+fn kind_from_code(c: u8) -> Option<MsgKind> {
+    Some(match c {
+        0 => MsgKind::SpagChunk,
+        1 => MsgKind::SprsChunk,
+        2 => MsgKind::Gate,
+        3 => MsgKind::Combine,
+        4 => MsgKind::GradX,
+        5 => MsgKind::Ctrl,
+        6 => MsgKind::Barrier,
+        _ => return None,
+    })
+}
+
+/// Serialize one tagged message as a full frame (length prefix included)
+/// into `out`, which is cleared first. The payload is written as raw
+/// little-endian `f32` bit patterns.
+pub fn encode_frame(tag: Tag, data: &[f32], out: &mut Vec<u8>) {
+    out.clear();
+    let len = HEADER_LEN + data.len() * 4;
+    out.reserve(4 + len);
+    out.extend_from_slice(&(len as u32).to_le_bytes());
+    out.push(WIRE_VERSION);
+    out.push(kind_code(tag.kind));
+    out.extend_from_slice(&tag.iter.to_le_bytes());
+    out.extend_from_slice(&(tag.layer as u32).to_le_bytes());
+    out.extend_from_slice(&(tag.a as u32).to_le_bytes());
+    out.extend_from_slice(&(tag.b as u32).to_le_bytes());
+    for x in data {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+/// Decode a frame body (everything after the length prefix). Errors are
+/// context-free detail strings; the transport wraps them in
+/// [`CommError::Codec`] with rank/peer context.
+pub fn decode_frame(body: &[u8]) -> Result<(Tag, Vec<f32>), String> {
+    if body.len() < HEADER_LEN {
+        return Err(format!("truncated frame: {} bytes, header needs {HEADER_LEN}", body.len()));
+    }
+    if body.len() > MAX_FRAME_LEN {
+        return Err(format!("frame of {} bytes exceeds cap {MAX_FRAME_LEN}", body.len()));
+    }
+    let version = body[0];
+    if version != WIRE_VERSION {
+        return Err(format!("unsupported wire version {version} (expected {WIRE_VERSION})"));
+    }
+    let kind = kind_from_code(body[1]).ok_or_else(|| format!("unknown msg kind {}", body[1]))?;
+    let le_u32 = |b: &[u8]| u32::from_le_bytes(b.try_into().expect("4 bytes")) as usize;
+    let iter = u64::from_le_bytes(body[2..10].try_into().expect("8 bytes"));
+    let tag = Tag {
+        iter,
+        kind,
+        layer: le_u32(&body[10..14]),
+        a: le_u32(&body[14..18]),
+        b: le_u32(&body[18..22]),
+    };
+    let payload = &body[HEADER_LEN..];
+    if payload.len() % 4 != 0 {
+        return Err(format!("payload of {} bytes is not a whole number of f32s", payload.len()));
+    }
+    let data = payload
+        .chunks_exact(4)
+        .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().expect("4 bytes"))))
+        .collect();
+    Ok((tag, data))
+}
+
+/// A stream of either flavor; everything above this enum is
+/// address-family agnostic.
+enum Conn {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Conn {
+    fn try_clone(&self) -> std::io::Result<Conn> {
+        Ok(match self {
+            Conn::Unix(s) => Conn::Unix(s.try_clone()?),
+            Conn::Tcp(s) => Conn::Tcp(s.try_clone()?),
+        })
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Conn::Unix(s) => s.set_read_timeout(d),
+            Conn::Tcp(s) => s.set_read_timeout(d),
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Conn::Unix(s) => s.set_nonblocking(nb),
+            Conn::Tcp(s) => s.set_nonblocking(nb),
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Unix(s) => s.read(buf),
+            Conn::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Unix(s) => s.write(buf),
+            Conn::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Unix(s) => s.flush(),
+            Conn::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// Frames decoded off one inbound link, or the error that ended it.
+type InboundChannel = Receiver<Result<Envelope, CommError>>;
+
+fn io_error(me: usize, peer: usize, op: &'static str, detail: String) -> CommError {
+    CommError::Io { rank: me, peer, op, detail }
+}
+
+/// A bound listener of either flavor, plus its resolved address string.
+pub struct Listener {
+    inner: ListenerInner,
+    addr: String,
+}
+
+enum ListenerInner {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+/// Normalize an endpoint address: `unix:/path`, `tcp:host:port`, or a
+/// bare absolute path (treated as UDS).
+fn split_addr(addr: &str) -> Result<(bool, &str), String> {
+    if let Some(p) = addr.strip_prefix("unix:") {
+        Ok((true, p))
+    } else if let Some(hp) = addr.strip_prefix("tcp:") {
+        Ok((false, hp))
+    } else if addr.starts_with('/') {
+        Ok((true, addr))
+    } else if addr.contains(':') {
+        Ok((false, addr))
+    } else {
+        Err(format!("unrecognized address `{addr}` (use unix:/path or tcp:host:port)"))
+    }
+}
+
+/// Bind a listening endpoint for this rank. A stale UDS path from a
+/// crashed earlier run is unlinked before binding.
+pub fn bind(me: usize, addr: &str) -> Result<Listener, CommError> {
+    let (is_unix, rest) =
+        split_addr(addr).map_err(|detail| CommError::Protocol { rank: me, detail })?;
+    let io = |e: std::io::Error| io_error(me, me, "bind", format!("{addr}: {e}"));
+    if is_unix {
+        let _ = std::fs::remove_file(rest);
+        let l = UnixListener::bind(rest).map_err(io)?;
+        Ok(Listener { inner: ListenerInner::Unix(l), addr: format!("unix:{rest}") })
+    } else {
+        let l = TcpListener::bind(rest).map_err(io)?;
+        let resolved = l.local_addr().map_err(io)?;
+        Ok(Listener { inner: ListenerInner::Tcp(l), addr: format!("tcp:{resolved}") })
+    }
+}
+
+impl Listener {
+    /// The resolved address (`tcp:` with the OS-assigned port filled in).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+}
+
+fn connect(me: usize, peer: usize, addr: &str, deadline: Instant) -> Result<Conn, CommError> {
+    let (is_unix, rest) =
+        split_addr(addr).map_err(|detail| CommError::Protocol { rank: me, detail })?;
+    loop {
+        let attempt = if is_unix {
+            UnixStream::connect(rest).map(Conn::Unix)
+        } else {
+            TcpStream::connect(rest).map(Conn::Tcp)
+        };
+        match attempt {
+            Ok(c) => {
+                if let Conn::Tcp(s) = &c {
+                    let _ = s.set_nodelay(true);
+                }
+                return Ok(c);
+            }
+            // The peer's listener may not be up yet — retry until the deadline.
+            Err(_) if Instant::now() < deadline => std::thread::sleep(Duration::from_millis(2)),
+            Err(e) => return Err(io_error(me, peer, "connect", format!("{addr}: {e}"))),
+        }
+    }
+}
+
+/// Map a send/read I/O failure: connection teardown shapes become
+/// [`CommError::PeerClosed`], everything else [`CommError::Io`].
+fn map_io(me: usize, peer: usize, sending: bool, op: &'static str, e: std::io::Error) -> CommError {
+    match e.kind() {
+        ErrorKind::BrokenPipe
+        | ErrorKind::ConnectionReset
+        | ErrorKind::ConnectionAborted
+        | ErrorKind::NotConnected => CommError::PeerClosed { rank: me, peer, sending, tag: None },
+        _ => CommError::Io { rank: me, peer, op, detail: e.to_string() },
+    }
+}
+
+/// Read frames off one inbound link until EOF or error, forwarding into
+/// the per-source channel. A clean EOF just drops the sender (the
+/// receive side then reports a closed link, mirroring in-proc); a codec
+/// or I/O error is forwarded first so the receiver sees the cause.
+fn reader_loop(mut conn: Conn, me: usize, src: usize, tx: Sender<Result<Envelope, CommError>>) {
+    loop {
+        let mut len_buf = [0u8; 4];
+        match conn.read_exact(&mut len_buf) {
+            Ok(()) => {}
+            Err(e) if e.kind() == ErrorKind::UnexpectedEof => return, // clean close
+            Err(e) => {
+                let _ = tx.send(Err(map_io(me, src, false, "read", e)));
+                return;
+            }
+        }
+        let len = u32::from_le_bytes(len_buf) as usize;
+        if !(HEADER_LEN..=MAX_FRAME_LEN).contains(&len) {
+            let _ = tx.send(Err(CommError::Codec {
+                rank: me,
+                peer: src,
+                detail: format!("bad frame length {len}"),
+            }));
+            return;
+        }
+        let mut body = vec![0u8; len];
+        if let Err(e) = conn.read_exact(&mut body) {
+            let err = if e.kind() == ErrorKind::UnexpectedEof {
+                CommError::Codec { rank: me, peer: src, detail: "truncated frame".into() }
+            } else {
+                map_io(me, src, false, "read", e)
+            };
+            let _ = tx.send(Err(err));
+            return;
+        }
+        match decode_frame(&body) {
+            Ok((tag, data)) => {
+                let env = Envelope { tag, data, ready_at: None, wire_us: 0 };
+                if tx.send(Ok(env)).is_err() {
+                    return; // endpoint dropped
+                }
+            }
+            Err(detail) => {
+                let _ = tx.send(Err(CommError::Codec { rank: me, peer: src, detail }));
+                return;
+            }
+        }
+    }
+}
+
+/// One rank's endpoint over the socket mesh.
+pub struct SocketTransport {
+    me: usize,
+    n: usize,
+    listen: String,
+    /// Outbound stream per peer (`None` at `me`). `Mutex` because sends
+    /// happen under shared borrows of the endpoint; uncontended in
+    /// practice (one rank thread owns the endpoint).
+    writers: Vec<Option<Mutex<Conn>>>,
+    /// Per-source decoded-frame channels fed by the reader threads.
+    rx: Vec<Option<InboundChannel>>,
+    recv_timeout: Option<Duration>,
+    /// Reused frame-serialization buffer (steady-state sends allocate
+    /// nothing on the encode path).
+    scratch: RefCell<Vec<u8>>,
+}
+
+impl SocketTransport {
+    fn channel_for(&self, src: usize) -> Result<&InboundChannel, CommError> {
+        self.rx.get(src).and_then(|r| r.as_ref()).ok_or_else(|| CommError::Protocol {
+            rank: self.me,
+            detail: format!("receive from invalid peer {src}"),
+        })
+    }
+
+    /// The address this endpoint accepted peers on.
+    pub fn listen_addr(&self) -> &str {
+        &self.listen
+    }
+}
+
+impl Transport for SocketTransport {
+    fn me(&self) -> usize {
+        self.me
+    }
+
+    fn num_ranks(&self) -> usize {
+        self.n
+    }
+
+    fn send(&self, dst: usize, tag: Tag, data: Vec<f32>) -> Result<Option<Vec<f32>>, CommError> {
+        let w = self.writers.get(dst).and_then(|w| w.as_ref()).ok_or_else(|| {
+            CommError::Protocol { rank: self.me, detail: format!("send to invalid peer {dst}") }
+        })?;
+        let mut frame = self.scratch.borrow_mut();
+        encode_frame(tag, &data, &mut frame);
+        let mut conn = w.lock().expect("writer lock poisoned");
+        conn.write_all(&frame)
+            .and_then(|()| conn.flush())
+            .map_err(|e| map_io(self.me, dst, true, "write", e).with_tag(tag))?;
+        Ok(Some(data)) // serialized — the caller may recycle the buffer
+    }
+
+    fn recv_next(&mut self, src: usize) -> Result<Envelope, CommError> {
+        let (me, timeout) = (self.me, self.recv_timeout);
+        let ch = self.channel_for(src)?;
+        match timeout {
+            Some(d) => match ch.recv_timeout(d) {
+                Ok(next) => next,
+                Err(RecvTimeoutError::Timeout) => {
+                    Err(CommError::Timeout { rank: me, peer: src, tag: None, after: d })
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    Err(CommError::PeerClosed { rank: me, peer: src, sending: false, tag: None })
+                }
+            },
+            None => match ch.recv() {
+                Ok(next) => next,
+                Err(_) => {
+                    Err(CommError::PeerClosed { rank: me, peer: src, sending: false, tag: None })
+                }
+            },
+        }
+    }
+
+    fn try_recv_next(&mut self, src: usize) -> Result<Option<Envelope>, CommError> {
+        let me = self.me;
+        let ch = self.channel_for(src)?;
+        match ch.try_recv() {
+            Ok(next) => next.map(Some),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => {
+                Err(CommError::PeerClosed { rank: me, peer: src, sending: false, tag: None })
+            }
+        }
+    }
+
+    fn barrier_wait(&self) -> bool {
+        false // no native barrier — the communicator runs its message fallback
+    }
+
+    fn kind(&self) -> TransportKind {
+        TransportKind::Socket
+    }
+
+    fn describe(&self) -> String {
+        format!("socket rank {}/{} on {}", self.me, self.n, self.listen)
+    }
+}
+
+/// Establish this rank's endpoint of the full mesh: dial every rank below
+/// `me` (retrying until `connect_timeout` — peers may still be starting),
+/// accept and handshake every rank above, then spawn one reader thread
+/// per inbound link. `peer_addrs[r]` is rank `r`'s listen address;
+/// `peer_addrs[me]` is ignored (the bound `listener` is used).
+pub fn mesh_connect(
+    me: usize,
+    listener: Listener,
+    peer_addrs: &[String],
+    recv_timeout: Option<Duration>,
+    connect_timeout: Duration,
+) -> Result<SocketTransport, CommError> {
+    let n = peer_addrs.len();
+    assert!(n > 0, "communicator needs at least one rank");
+    assert!(me < n, "rank {me} out of range for {n} ranks");
+    let deadline = Instant::now() + connect_timeout;
+    let mut conns: Vec<Option<Conn>> = (0..n).map(|_| None).collect();
+
+    // Dial down: rank r initiates to every lower rank and identifies
+    // itself. The 9-byte handshake rides the connect, so this never
+    // waits on the acceptor's progress — no ordering deadlock.
+    for (peer, addr) in peer_addrs.iter().enumerate().take(me) {
+        let mut c = connect(me, peer, addr, deadline)?;
+        let mut hello = [0u8; 9];
+        hello[..4].copy_from_slice(&MAGIC);
+        hello[4] = WIRE_VERSION;
+        hello[5..9].copy_from_slice(&(me as u32).to_le_bytes());
+        c.write_all(&hello)
+            .and_then(|()| c.flush())
+            .map_err(|e| map_io(me, peer, true, "handshake", e))?;
+        conns[peer] = Some(c);
+    }
+
+    // Accept up: every higher rank dials us; the handshake says which.
+    let listen_addr = listener.addr.clone();
+    match &listener.inner {
+        ListenerInner::Unix(l) => l.set_nonblocking(true),
+        ListenerInner::Tcp(l) => l.set_nonblocking(true),
+    }
+    .map_err(|e| io_error(me, me, "listen", e.to_string()))?;
+    let mut pending = n - me - 1;
+    while pending > 0 {
+        let accepted = match &listener.inner {
+            ListenerInner::Unix(l) => l.accept().map(|(s, _)| Conn::Unix(s)),
+            ListenerInner::Tcp(l) => l.accept().map(|(s, _)| {
+                let _ = s.set_nodelay(true);
+                Conn::Tcp(s)
+            }),
+        };
+        let mut c = match accepted {
+            Ok(c) => c,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if Instant::now() > deadline {
+                    return Err(CommError::Protocol {
+                        rank: me,
+                        detail: format!(
+                            "timed out on {listen_addr} with {pending} peer connection(s) missing"
+                        ),
+                    });
+                }
+                std::thread::sleep(Duration::from_millis(1));
+                continue;
+            }
+            Err(e) => return Err(io_error(me, me, "accept", e.to_string())),
+        };
+        c.set_nonblocking(false).map_err(|e| io_error(me, me, "accept", e.to_string()))?;
+        c.set_read_timeout(Some(connect_timeout))
+            .map_err(|e| io_error(me, me, "accept", e.to_string()))?;
+        let mut hello = [0u8; 9];
+        c.read_exact(&mut hello).map_err(|e| map_io(me, me, false, "handshake", e))?;
+        if hello[..4] != MAGIC {
+            return Err(CommError::Protocol { rank: me, detail: "bad handshake magic".into() });
+        }
+        if hello[4] != WIRE_VERSION {
+            return Err(CommError::Protocol {
+                rank: me,
+                detail: format!("peer speaks wire version {}, we speak {WIRE_VERSION}", hello[4]),
+            });
+        }
+        let peer = u32::from_le_bytes(hello[5..9].try_into().expect("4 bytes")) as usize;
+        if peer <= me || peer >= n {
+            return Err(CommError::Protocol {
+                rank: me,
+                detail: format!("unexpected handshake from rank {peer}"),
+            });
+        }
+        if conns[peer].is_some() {
+            return Err(CommError::Protocol {
+                rank: me,
+                detail: format!("duplicate connection from rank {peer}"),
+            });
+        }
+        c.set_read_timeout(None).map_err(|e| io_error(me, peer, "accept", e.to_string()))?;
+        conns[peer] = Some(c);
+        pending -= 1;
+    }
+
+    // Split each stream: the writer half stays on the endpoint, the
+    // reader half feeds a per-source channel from its own thread.
+    let mut writers: Vec<Option<Mutex<Conn>>> = Vec::with_capacity(n);
+    let mut rx: Vec<Option<InboundChannel>> = Vec::with_capacity(n);
+    for (peer, slot) in conns.into_iter().enumerate() {
+        match slot {
+            Some(conn) => {
+                let reader =
+                    conn.try_clone().map_err(|e| io_error(me, peer, "clone", e.to_string()))?;
+                let (tx, r) = channel();
+                std::thread::Builder::new()
+                    .name(format!("hecate-rx-{me}-from-{peer}"))
+                    .spawn(move || reader_loop(reader, me, peer, tx))
+                    .map_err(|e| io_error(me, peer, "spawn", e.to_string()))?;
+                writers.push(Some(Mutex::new(conn)));
+                rx.push(Some(r));
+            }
+            None => {
+                writers.push(None);
+                rx.push(None);
+            }
+        }
+    }
+    Ok(SocketTransport {
+        me,
+        n,
+        listen: listen_addr,
+        writers,
+        rx,
+        recv_timeout: recv_timeout.or(Some(DEFAULT_RECV_TIMEOUT)),
+        scratch: RefCell::new(Vec::new()),
+    })
+}
+
+static FABRIC_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Build a full n-rank socket fabric *inside this process* over UDS in a
+/// private temp directory: bind all listeners up front (no dial race),
+/// run the n mesh handshakes on scoped threads, and wrap each endpoint
+/// in a [`RankComm`]. This is how `--transport socket` runs under the
+/// library API (rank threads, real sockets) and how the `in-proc ≡
+/// socket` equivalence lock gets a socket fabric without spawning
+/// processes. Socket files are unlinked once the mesh is up.
+pub fn local_fabric(n: usize, recv_timeout: Option<Duration>) -> Result<Vec<RankComm>, CommError> {
+    assert!(n > 0, "communicator needs at least one rank");
+    let seq = FABRIC_SEQ.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!("hecate-fab-{}-{seq}", std::process::id()));
+    std::fs::create_dir_all(&dir)
+        .map_err(|e| io_error(0, 0, "bind", format!("{}: {e}", dir.display())))?;
+    let paths: Vec<String> =
+        (0..n).map(|r| format!("unix:{}", dir.join(format!("sock-{r}")).display())).collect();
+    let mut listeners = Vec::with_capacity(n);
+    for (r, p) in paths.iter().enumerate() {
+        listeners.push(bind(r, p)?);
+    }
+    let mut endpoints: Vec<Result<SocketTransport, CommError>> = Vec::with_capacity(n);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(n);
+        for (me, listener) in listeners.into_iter().enumerate() {
+            let paths = &paths;
+            handles.push(scope.spawn(move || {
+                mesh_connect(me, listener, paths, recv_timeout, DEFAULT_CONNECT_TIMEOUT)
+            }));
+        }
+        for h in handles {
+            endpoints.push(h.join().expect("mesh thread panicked"));
+        }
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut out = Vec::with_capacity(n);
+    for t in endpoints {
+        out.push(RankComm::endpoint(Box::new(t?)));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tag(iter: u64, a: usize) -> Tag {
+        Tag { iter, kind: MsgKind::Ctrl, layer: 0, a, b: 0 }
+    }
+
+    #[test]
+    fn frame_round_trips_payload_bits() {
+        let t = Tag { iter: 7, kind: MsgKind::SpagChunk, layer: 2, a: 5, b: 1 };
+        let data = [1.5f32, -0.0, f32::NAN, f32::MIN_POSITIVE, 3.25e-12];
+        let mut frame = Vec::new();
+        encode_frame(t, &data, &mut frame);
+        let len = u32::from_le_bytes(frame[..4].try_into().unwrap()) as usize;
+        assert_eq!(len, frame.len() - 4);
+        let (tag, out) = decode_frame(&frame[4..]).unwrap();
+        assert_eq!(tag, t);
+        let bits: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+        let want: Vec<u32> = data.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bits, want, "payload must survive bit-exactly (incl. NaN, -0.0)");
+    }
+
+    #[test]
+    fn empty_payload_frame_round_trips() {
+        let t = Tag { iter: 0, kind: MsgKind::Barrier, layer: 0, a: 3, b: 0 };
+        let mut frame = Vec::new();
+        encode_frame(t, &[], &mut frame);
+        assert_eq!(frame.len(), 4 + HEADER_LEN);
+        let (tag, out) = decode_frame(&frame[4..]).unwrap();
+        assert_eq!((tag, out.len()), (t, 0));
+    }
+
+    #[test]
+    fn max_size_chunk_round_trips() {
+        // A full-size expert chunk at the repo's reference dims is tiny;
+        // stress the codec with a 1 MiB payload instead.
+        let data: Vec<f32> = (0..262_144).map(|i| i as f32 * 0.5).collect();
+        let mut frame = Vec::new();
+        encode_frame(tag(1, 0), &data, &mut frame);
+        let (_, out) = decode_frame(&frame[4..]).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn garbage_and_truncated_frames_are_rejected() {
+        // too short for the header
+        assert!(decode_frame(&[0u8; 5]).unwrap_err().contains("truncated"));
+        // wrong version
+        let mut frame = Vec::new();
+        encode_frame(tag(0, 0), &[1.0], &mut frame);
+        let mut bad = frame[4..].to_vec();
+        bad[0] = 9;
+        assert!(decode_frame(&bad).unwrap_err().contains("version"));
+        // unknown kind
+        let mut bad = frame[4..].to_vec();
+        bad[1] = 200;
+        assert!(decode_frame(&bad).unwrap_err().contains("kind"));
+        // payload not a multiple of 4 bytes
+        let mut bad = frame[4..].to_vec();
+        bad.push(0xAB);
+        assert!(decode_frame(&bad).unwrap_err().contains("whole number"));
+    }
+
+    #[test]
+    fn addresses_parse_and_reject() {
+        assert_eq!(split_addr("unix:/tmp/x.sock").unwrap(), (true, "/tmp/x.sock"));
+        assert_eq!(split_addr("/tmp/x.sock").unwrap(), (true, "/tmp/x.sock"));
+        assert_eq!(split_addr("tcp:127.0.0.1:0").unwrap(), (false, "127.0.0.1:0"));
+        assert_eq!(split_addr("127.0.0.1:4000").unwrap(), (false, "127.0.0.1:4000"));
+        assert!(split_addr("carrier pigeon").is_err());
+    }
+
+    #[test]
+    fn two_rank_mesh_moves_tagged_payloads_both_ways() {
+        let mut comms = local_fabric(2, None).unwrap();
+        let mut c1 = comms.remove(1);
+        let mut c0 = comms.remove(0);
+        let h = std::thread::spawn(move || {
+            c0.isend(1, tag(0, 1), vec![1.0, 2.0]).unwrap();
+            let back = c0.recv(1, tag(0, 2)).unwrap();
+            (c0, back)
+        });
+        assert_eq!(c1.recv(0, tag(0, 1)).unwrap(), vec![1.0, 2.0]);
+        c1.isend(0, tag(0, 2), vec![3.0]).unwrap();
+        let (_c0, back) = h.join().unwrap();
+        assert_eq!(back, vec![3.0]);
+    }
+
+    #[test]
+    fn recv_timeout_fires_instead_of_hanging() {
+        let mut comms = local_fabric(2, Some(Duration::from_millis(50))).unwrap();
+        let mut c1 = comms.remove(1);
+        let _c0 = comms.remove(0); // alive but silent
+        let err = c1.recv(0, tag(0, 0)).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn dropped_peer_process_surfaces_as_closed_link() {
+        let mut comms = local_fabric(2, None).unwrap();
+        let mut c1 = comms.remove(1);
+        drop(comms.remove(0)); // rank 0 "process" exits
+        let err = c1.recv(0, tag(0, 0)).unwrap_err();
+        assert!(err.to_string().contains("closed"), "{err}");
+    }
+}

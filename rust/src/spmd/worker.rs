@@ -1,0 +1,597 @@
+//! `hecate worker` — one SPMD rank as its own OS process — plus the
+//! coordinator-side launcher behind `hecate fssdp --parallel --transport
+//! socket`.
+//!
+//! The worker is the same rank program the in-process executor runs on a
+//! thread ([`super::rank_main`]), built from the same deterministic recipe:
+//! it reconstructs the full engine from `(devices, nodes, racks, layers,
+//! seed)` through the shared [`SessionConfig`] validation path, slices out
+//! its own rank's state with [`super::split_rank_state`], joins the socket
+//! mesh, and runs the span. Because every rank derives the identical
+//! replicated control plane, no coordinator→worker state shipping is
+//! needed — the CLI flags *are* the state.
+//!
+//! At span end each worker serializes its result (per-iteration losses,
+//! rank-0 global stats, its owned expert chunks) into a little-endian
+//! state blob (`HWKR` magic, versioned) that the launcher merges exactly
+//! like [`super::run_span`] merges `RankOut`s. `--verify-inproc` then
+//! reruns the span on the in-process transport and asserts the final
+//! parameters are bit-identical — the cross-process determinism lock.
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::time::Instant;
+
+use crate::fssdp::{Executor, FssdpEngine, SessionConfig};
+use crate::materialize::MatConstraints;
+use crate::placement::Placement;
+use crate::util::cli::Args;
+
+use super::comm::RankComm;
+use super::transport::socket::{self, DEFAULT_CONNECT_TIMEOUT};
+use super::transport::{Transport as _, TransportKind};
+use super::{GlobalStats, RankCtx};
+
+/// Magic of the worker state blob.
+pub const STATE_MAGIC: [u8; 4] = *b"HWKR";
+/// Version byte of the worker state blob.
+pub const STATE_VERSION: u8 = 1;
+
+/// One worker's span result, as carried by the state blob.
+struct WorkerState {
+    rank: usize,
+    world: usize,
+    /// This rank's per-iteration partial loss.
+    losses: Vec<f64>,
+    /// Rank 0 only; empty elsewhere.
+    global: Vec<GlobalStats>,
+    /// Per layer: expert id -> final chunk (owned shards only).
+    layers: Vec<BTreeMap<usize, Vec<f32>>>,
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn encode_state(ws: &WorkerState) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&STATE_MAGIC);
+    out.push(STATE_VERSION);
+    put_u32(&mut out, ws.rank as u32);
+    put_u32(&mut out, ws.world as u32);
+    put_u32(&mut out, ws.layers.len() as u32);
+    put_u32(&mut out, ws.losses.len() as u32);
+    for l in &ws.losses {
+        put_f64(&mut out, *l);
+    }
+    out.push(if ws.global.is_empty() { 0 } else { 1 });
+    if !ws.global.is_empty() {
+        debug_assert_eq!(ws.global.len(), ws.losses.len());
+        for g in &ws.global {
+            put_f64(&mut out, g.sparsity);
+            put_u64(&mut out, g.replicas as u64);
+            put_u64(&mut out, g.remote_tokens as u64);
+            put_f64(&mut out, g.straggler);
+        }
+    }
+    for layer in &ws.layers {
+        put_u32(&mut out, layer.len() as u32);
+        for (e, data) in layer {
+            put_u32(&mut out, *e as u32);
+            put_u32(&mut out, data.len() as u32);
+            for x in data {
+                put_u32(&mut out, x.to_bits());
+            }
+        }
+    }
+    out
+}
+
+/// Bounds-checked little-endian reader over a state blob.
+struct Cur<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.off + n <= self.buf.len(),
+            "truncated worker state blob at byte {} (wanted {n} more of {})",
+            self.off,
+            self.buf.len()
+        );
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+}
+
+fn decode_state(buf: &[u8]) -> anyhow::Result<WorkerState> {
+    let mut c = Cur { buf, off: 0 };
+    anyhow::ensure!(c.take(4)? == STATE_MAGIC, "not a worker state blob (bad magic)");
+    let version = c.u8()?;
+    anyhow::ensure!(
+        version == STATE_VERSION,
+        "worker state blob version {version}, this build speaks {STATE_VERSION}"
+    );
+    let rank = c.u32()? as usize;
+    let world = c.u32()? as usize;
+    let nl = c.u32()? as usize;
+    let iters = c.u32()? as usize;
+    let mut losses = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        losses.push(c.f64()?);
+    }
+    let mut global = Vec::new();
+    if c.u8()? != 0 {
+        for _ in 0..iters {
+            let sparsity = c.f64()?;
+            let replicas = c.u64()? as usize;
+            let remote_tokens = c.u64()? as usize;
+            let straggler = c.f64()?;
+            global.push(GlobalStats { sparsity, replicas, remote_tokens, straggler });
+        }
+    }
+    let mut layers = Vec::with_capacity(nl);
+    for _ in 0..nl {
+        let nchunks = c.u32()? as usize;
+        let mut layer = BTreeMap::new();
+        for _ in 0..nchunks {
+            let e = c.u32()? as usize;
+            let len = c.u32()? as usize;
+            let mut data = Vec::with_capacity(len);
+            for _ in 0..len {
+                data.push(f32::from_bits(c.u32()?));
+            }
+            anyhow::ensure!(layer.insert(e, data).is_none(), "duplicate chunk {e} in blob");
+        }
+        layers.push(layer);
+    }
+    anyhow::ensure!(
+        c.off == buf.len(),
+        "{} trailing bytes in worker state blob",
+        buf.len() - c.off
+    );
+    Ok(WorkerState { rank, world, losses, global, layers })
+}
+
+/// Build the validated session config a worker/launcher pair shares: both
+/// sides call this with the same flag values, so the resolved topology,
+/// dims, and seed are identical by construction.
+fn worker_config(args: &Args) -> anyhow::Result<SessionConfig> {
+    let mut b = SessionConfig::builder()
+        .reference()
+        .cluster(args.usize_or("nodes", 2)?, args.usize_or("devices", 8)?)
+        .seed(args.usize_or("seed", 42)? as u64)
+        .parallel(true)
+        .overlap(args.bool_or("overlap", true)?)
+        .transport(TransportKind::Socket);
+    if args.has("racks") {
+        b = b.racks(args.usize_or("racks", 1)?);
+    }
+    if args.has("layers") {
+        b = b.layers(args.usize_or("layers", 1)?);
+    }
+    if args.has("data-shards") {
+        b = b.data_shards(args.usize_or("data-shards", 1)?);
+    }
+    if let Some(t) = args.str_opt("recv-timeout")? {
+        b = b.recv_timeout(crate::fssdp::parse_recv_timeout(&t)?);
+    }
+    Ok(b.build()?)
+}
+
+/// `hecate worker`: run one rank of a socket-transport span and write the
+/// state blob to `--out`. Spawned by the launcher; runnable by hand for
+/// debugging (all ranks must agree on every engine flag).
+pub(crate) fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&[
+        "rank", "world", "listen", "peers", "devices", "nodes", "racks", "layers", "seed",
+        "data-shards", "iters", "overlap", "recv-timeout", "out",
+    ])?;
+    let rank: usize = args.req("rank")?.parse()?;
+    let world: usize = args.req("world")?.parse()?;
+    let listen = args.req("listen")?;
+    let peers: Vec<String> = args.req("peers")?.split(',').map(|s| s.to_string()).collect();
+    let out_path = PathBuf::from(args.req("out")?);
+    let iters = args.usize_or("iters", 10)?;
+    let cfg = worker_config(args)?;
+
+    let nd = cfg.topology().num_devices();
+    anyhow::ensure!(world == nd, "--world {world} must equal the device count {nd}");
+    anyhow::ensure!(rank < world, "--rank {rank} out of range for --world {world}");
+    anyhow::ensure!(
+        peers.len() == world,
+        "--peers lists {} addresses, world is {world}",
+        peers.len()
+    );
+
+    // The same deterministic engine every peer builds (and the launcher's
+    // --verify-inproc rebuilds): replicated control plane from flags alone.
+    let layers = cfg.layers.unwrap_or(1);
+    let engine =
+        FssdpEngine::new_reference_layers(cfg.dims, layers, cfg.topology().clone(), cfg.seed);
+    let sources = cfg.data_shards.unwrap_or(nd);
+    let rank_layers = super::split_rank_state(&engine, rank)?;
+    let shards_v: Vec<Placement> = engine.layers.iter().map(|ls| ls.shards.clone()).collect();
+    let gate_w_v: Vec<Vec<f32>> = engine.layers.iter().map(|ls| ls.gate_w.clone()).collect();
+    let cons =
+        MatConstraints { overlap_degree: engine.overlap_degree, mem_slots: engine.mem_slots };
+    let overlap = matches!(cfg.executor(), Executor::Spmd { overlap: true, .. });
+
+    let listener = socket::bind(rank, &listen)?;
+    eprintln!("worker {rank}/{world}: listening on {}", listener.addr());
+    let transport =
+        socket::mesh_connect(rank, listener, &peers, cfg.recv_timeout, DEFAULT_CONNECT_TIMEOUT)?;
+    eprintln!("worker {rank}/{world}: mesh up ({})", transport.describe());
+
+    let topo = engine.topo.clone();
+    let ctx = RankCtx {
+        me: rank,
+        nd,
+        sources,
+        start: 0,
+        iters,
+        dims: engine.dims,
+        topo: &topo,
+        shards: &shards_v,
+        gate_w: &gate_w_v,
+        adam: engine.adam,
+        cons,
+        overlap,
+        layers: rank_layers,
+        comm: RankComm::endpoint(Box::new(transport)),
+        meter_epoch: None,
+    };
+    let out = super::rank_main(ctx)?;
+
+    let mut layer_chunks = Vec::with_capacity(out.layers.len());
+    for rls in &out.layers {
+        let mut ids: Vec<usize> = rls.store.chunks().collect();
+        ids.sort_unstable();
+        let mut layer = BTreeMap::new();
+        for e in ids {
+            layer.insert(e, rls.store.get(e).expect("listed above").to_vec());
+        }
+        layer_chunks.push(layer);
+    }
+    let ws = WorkerState {
+        rank,
+        world,
+        losses: out.loss,
+        global: out.global,
+        layers: layer_chunks,
+    };
+    std::fs::write(&out_path, encode_state(&ws))
+        .map_err(|e| anyhow::anyhow!("worker {rank}: writing {}: {e}", out_path.display()))?;
+    eprintln!("worker {rank}/{world}: span complete ({iters} iters) -> {}", out_path.display());
+    let _ = std::io::stderr().flush();
+    Ok(())
+}
+
+/// Tail of a worker's log file, for failure reports.
+fn log_tail(path: &Path, lines: usize) -> String {
+    match std::fs::read_to_string(path) {
+        Err(_) => String::from("(no log)"),
+        Ok(text) => {
+            let all: Vec<&str> = text.lines().collect();
+            let start = all.len().saturating_sub(lines);
+            all[start..].join("\n      ")
+        }
+    }
+}
+
+/// `hecate fssdp --parallel --transport socket`: spawn one `hecate worker`
+/// process per rank on a localhost UDS mesh, wait, merge the state blobs,
+/// and print the run exactly like the in-process path. With
+/// `verify_inproc`, rerun on the in-process transport and assert the final
+/// parameters are bit-identical.
+pub(crate) fn launch_local(
+    cfg: &SessionConfig,
+    iters: usize,
+    verify_inproc: bool,
+    worker_dir: Option<String>,
+) -> anyhow::Result<()> {
+    let nd = cfg.topology().num_devices();
+    let Executor::Spmd { overlap, .. } = cfg.executor() else {
+        anyhow::bail!("the socket launcher requires the SPMD executor (--parallel)");
+    };
+    let layers = cfg.layers.unwrap_or(1);
+    let sources = cfg.data_shards.unwrap_or(nd);
+    let dir = match worker_dir {
+        Some(d) => PathBuf::from(d),
+        None => std::env::temp_dir().join(format!("hecate-launch-{}", std::process::id())),
+    };
+    std::fs::create_dir_all(&dir)
+        .map_err(|e| anyhow::anyhow!("creating worker dir {}: {e}", dir.display()))?;
+    let addrs: Vec<String> =
+        (0..nd).map(|r| format!("unix:{}", dir.join(format!("sock-{r}")).display())).collect();
+    let peers = addrs.join(",");
+    let exe = std::env::current_exe()
+        .map_err(|e| anyhow::anyhow!("resolving the hecate binary for workers: {e}"))?;
+
+    println!(
+        "FSSDP numeric engine on {} ({} devices, {} worker processes over unix sockets)",
+        cfg.topology().name,
+        nd,
+        nd
+    );
+    let t0 = Instant::now();
+    let mut children = Vec::with_capacity(nd);
+    for (r, addr) in addrs.iter().enumerate() {
+        let log = std::fs::File::create(dir.join(format!("worker-{r}.log")))
+            .map_err(|e| anyhow::anyhow!("creating worker-{r}.log: {e}"))?;
+        let log_err = log.try_clone().map_err(|e| anyhow::anyhow!("cloning log handle: {e}"))?;
+        let mut cmd = Command::new(&exe);
+        cmd.arg("worker")
+            .arg("--rank")
+            .arg(r.to_string())
+            .arg("--world")
+            .arg(nd.to_string())
+            .arg("--listen")
+            .arg(addr)
+            .arg("--peers")
+            .arg(&peers)
+            .arg("--devices")
+            .arg(nd.to_string())
+            .arg("--nodes")
+            .arg(cfg.topology().nodes.to_string())
+            .arg("--racks")
+            .arg(cfg.topology().racks.to_string())
+            .arg("--layers")
+            .arg(layers.to_string())
+            .arg("--seed")
+            .arg(cfg.seed.to_string())
+            .arg("--data-shards")
+            .arg(sources.to_string())
+            .arg("--iters")
+            .arg(iters.to_string())
+            .arg("--overlap")
+            .arg(if overlap { "true" } else { "false" })
+            .arg("--out")
+            .arg(dir.join(format!("state-{r}.bin")))
+            .stdin(Stdio::null())
+            .stdout(Stdio::from(log))
+            .stderr(Stdio::from(log_err));
+        if let Some(t) = cfg.recv_timeout {
+            cmd.arg("--recv-timeout").arg(format!("{}", t.as_secs_f64()));
+        }
+        let child = cmd
+            .spawn()
+            .map_err(|e| anyhow::anyhow!("spawning worker {r} ({}): {e}", exe.display()))?;
+        children.push(child);
+    }
+
+    let mut failed: Vec<(usize, String)> = Vec::new();
+    for (r, child) in children.iter_mut().enumerate() {
+        let status = child
+            .wait()
+            .map_err(|e| anyhow::anyhow!("waiting for worker {r}: {e}"))?;
+        if !status.success() {
+            let code = match status.code() {
+                Some(c) => c.to_string(),
+                None => "a signal".to_string(),
+            };
+            failed.push((r, code));
+        }
+    }
+    if !failed.is_empty() {
+        let (r, code) = &failed[0];
+        anyhow::bail!(
+            "{} of {nd} worker processes failed; worker {r} exited with {code}, log tail \
+             ({}):\n      {}",
+            failed.len(),
+            dir.join(format!("worker-{r}.log")).display(),
+            log_tail(&dir.join(format!("worker-{r}.log")), 12)
+        );
+    }
+    let wall = t0.elapsed();
+
+    // Merge the blobs exactly like run_span merges RankOuts: losses summed
+    // in rank order, global stats from rank 0, chunks onto their owners.
+    let mut losses = vec![0.0f64; iters];
+    let mut global: Vec<GlobalStats> = Vec::new();
+    let mut merged: Vec<BTreeMap<usize, Vec<f32>>> = vec![BTreeMap::new(); layers];
+    for r in 0..nd {
+        let path = dir.join(format!("state-{r}.bin"));
+        let bytes = std::fs::read(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let ws = decode_state(&bytes)?;
+        anyhow::ensure!(ws.rank == r && ws.world == nd, "state blob {r} is from another run");
+        anyhow::ensure!(ws.losses.len() == iters, "worker {r} ran {} iters", ws.losses.len());
+        anyhow::ensure!(ws.layers.len() == layers, "worker {r} has {} layers", ws.layers.len());
+        for (i, l) in ws.losses.iter().enumerate() {
+            losses[i] += *l;
+        }
+        if r == 0 {
+            global = ws.global;
+        }
+        for (l, layer) in ws.layers.into_iter().enumerate() {
+            for (e, data) in layer {
+                anyhow::ensure!(
+                    merged[l].insert(e, data).is_none(),
+                    "expert {e} of layer {l} came back from two workers"
+                );
+            }
+        }
+    }
+    for (i, loss) in losses.iter().enumerate() {
+        match global.get(i) {
+            Some(g) => println!(
+                "iter {i:>3}  loss {loss:.5}  λ={:.2}  replicas {}  remote_tokens {}  straggler {:.2}",
+                g.sparsity, g.replicas, g.remote_tokens, g.straggler
+            ),
+            None => println!("iter {i:>3}  loss {loss:.5}"),
+        }
+    }
+    println!(
+        "workers: {nd} processes, {iters} iters in {:.2}s — logs and state under {}",
+        wall.as_secs_f64(),
+        dir.display()
+    );
+
+    if verify_inproc {
+        let mut engine =
+            FssdpEngine::new_reference_layers(cfg.dims, layers, cfg.topology().clone(), cfg.seed);
+        engine.executor = Executor::Spmd { threads: nd, overlap };
+        engine.run_span(0, iters, sources)?;
+        let want = crate::testing::all_chunks(&engine);
+        let experts = engine.dims.experts;
+        anyhow::ensure!(
+            want.len() == layers * experts,
+            "in-proc rerun produced {} chunks, expected {}",
+            want.len(),
+            layers * experts
+        );
+        for l in 0..layers {
+            for e in 0..experts {
+                let got = merged[l].get(&e).ok_or_else(|| {
+                    anyhow::anyhow!("socket run lost expert {e} of layer {l}")
+                })?;
+                anyhow::ensure!(
+                    got == &want[l * experts + e],
+                    "socket and in-proc parameters diverged at layer {l}, expert {e}"
+                );
+            }
+        }
+        println!(
+            "verify: socket run is bit-identical to the in-process executor \
+             ({} chunks compared)",
+            want.len()
+        );
+    }
+    println!("done — parameters live on their shard owners (one global copy).");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_state(with_global: bool) -> WorkerState {
+        let global = if with_global {
+            vec![
+                GlobalStats { sparsity: 0.25, replicas: 3, remote_tokens: 17, straggler: 1.5 },
+                GlobalStats { sparsity: 0.5, replicas: 0, remote_tokens: 0, straggler: 1.0 },
+            ]
+        } else {
+            Vec::new()
+        };
+        let mut l0 = BTreeMap::new();
+        l0.insert(2usize, vec![1.0f32, f32::NAN, -0.0, f32::MIN_POSITIVE]);
+        let mut l1 = BTreeMap::new();
+        l1.insert(0usize, Vec::new());
+        l1.insert(7usize, vec![-3.5]);
+        WorkerState {
+            rank: 1,
+            world: 4,
+            losses: vec![2.5, -0.125],
+            global,
+            layers: vec![l0, l1],
+        }
+    }
+
+    #[test]
+    fn state_blob_round_trips_bit_exactly() {
+        for with_global in [false, true] {
+            let ws = sample_state(with_global);
+            let back = decode_state(&encode_state(&ws)).unwrap();
+            assert_eq!(back.rank, 1);
+            assert_eq!(back.world, 4);
+            assert_eq!(back.losses, ws.losses);
+            assert_eq!(back.global.len(), ws.global.len());
+            for (a, b) in back.global.iter().zip(ws.global.iter()) {
+                assert_eq!(a.sparsity, b.sparsity);
+                assert_eq!(a.replicas, b.replicas);
+                assert_eq!(a.remote_tokens, b.remote_tokens);
+                assert_eq!(a.straggler, b.straggler);
+            }
+            assert_eq!(back.layers.len(), 2);
+            // NaN payloads survive (bit compare, not float compare)
+            let got = &back.layers[0][&2];
+            let want = &ws.layers[0][&2];
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(want.iter()) {
+                assert_eq!(g.to_bits(), w.to_bits());
+            }
+            assert_eq!(back.layers[1], ws.layers[1]);
+        }
+    }
+
+    #[test]
+    fn garbage_and_truncated_blobs_are_rejected() {
+        let good = encode_state(&sample_state(true));
+        assert!(decode_state(&[]).is_err(), "empty blob");
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        let err = decode_state(&bad_magic).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+        let mut bad_version = good.clone();
+        bad_version[4] = 99;
+        let err = decode_state(&bad_version).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+        for cut in [5, 12, good.len() / 2, good.len() - 1] {
+            assert!(decode_state(&good[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        let mut trailing = good.clone();
+        trailing.push(0);
+        let err = decode_state(&trailing).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn worker_flags_validate_before_any_socket_work() {
+        let args = |s: &str| Args::parse(s.split_whitespace().map(|t| t.to_string()));
+        // rank out of range
+        let err = cmd_worker(&args(
+            "--rank 9 --world 4 --listen unix:/tmp/x --peers a,b,c,d --devices 4 --out /tmp/o",
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--rank 9 out of range"), "{err}");
+        // world disagrees with the topology
+        let err = cmd_worker(&args(
+            "--rank 0 --world 3 --listen unix:/tmp/x --peers a,b,c --devices 4 --out /tmp/o",
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("must equal the device count"), "{err}");
+        // peer list length mismatch
+        let err = cmd_worker(&args(
+            "--rank 0 --world 4 --listen unix:/tmp/x --peers a,b --devices 4 --out /tmp/o",
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--peers lists 2 addresses"), "{err}");
+        // unknown flags are rejected like every other subcommand
+        let err = cmd_worker(&args("--rank 0 --bogus 1")).unwrap_err().to_string();
+        assert!(err.contains("unknown option --bogus"), "{err}");
+    }
+}

@@ -23,6 +23,14 @@
 //! Determinism contract: tracing is observational. Recorders never touch
 //! engine state, payloads, or message ordering, so a traced run is
 //! bit-identical to an untraced one (locked by `tests/telemetry_trace.rs`).
+//!
+//! Transport note: comm events ([`Phase::SendChunk`]/[`Phase::RecvChunk`]
+//! and the row/pacing phases) are recorded by the rank endpoint
+//! (`RankComm`) *above* the pluggable transport, so timelines have the
+//! same shape over the in-process fabric and the socket backend. Only the
+//! delivery durations differ: modeled α–β in-flight time when paced, zero
+//! over sockets — where real wire time surfaces as `SpagWait`/`SprsWait`
+//! wall clock instead.
 
 pub mod analyze;
 pub mod metrics_io;

@@ -7,8 +7,11 @@
 //!   400 Gbps inter-node network.
 //!
 //! Link transfers follow the standard α–β model: `time = α + bytes / β`,
-//! with separate (α, β) for intra-node and inter-node hops. The collectives
-//! cost models in [`crate::collectives`] are built on the per-device
+//! with separate (α, β) per link tier. The default hierarchy is two-tier
+//! (intra-node / inter-node); [`Topology::with_racks`] adds a third tier
+//! for clusters whose nodes are grouped into racks behind an oversubscribed
+//! spine, giving cross-rack hops their own (α, β). The collectives cost
+//! models in [`crate::collectives`] are built on the per-device
 //! inbound/outbound bottleneck analysis the paper uses in §3.1.
 
 /// Identifier of a device (global index across the cluster).
@@ -19,19 +22,40 @@ pub struct DeviceId(pub usize);
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct NodeId(pub usize);
 
+/// Identifier of a rack (group of nodes behind one spine uplink).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RackId(pub usize);
+
+/// Which tier of the interconnect hierarchy a point-to-point hop crosses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkTier {
+    /// Both devices share a node (NVLink/NVSwitch).
+    IntraNode,
+    /// Different nodes, same rack (NIC + top-of-rack switch).
+    InterNode,
+    /// Different racks (NIC + oversubscribed spine).
+    InterRack,
+}
+
 /// Physical cluster description.
 #[derive(Debug, Clone)]
 pub struct Topology {
     pub nodes: usize,
     pub devices_per_node: usize,
+    /// Rack groups the nodes split into (1 = single rack, no third tier).
+    pub racks: usize,
     /// Intra-node per-direction bandwidth, bytes/s (NVLink/NVSwitch).
     pub intra_bw: f64,
     /// Inter-node per-direction bandwidth, bytes/s (NIC, per node).
     pub inter_bw: f64,
+    /// Cross-rack per-direction bandwidth, bytes/s (spine share per node).
+    pub rack_bw: f64,
     /// Intra-node link latency, seconds.
     pub intra_lat: f64,
     /// Inter-node link latency, seconds.
     pub inter_lat: f64,
+    /// Cross-rack link latency, seconds.
+    pub rack_lat: f64,
     /// Dense compute throughput per device, flop/s (for the simulator).
     pub device_flops: f64,
     /// Device memory capacity, bytes.
@@ -48,10 +72,13 @@ impl Topology {
         Topology {
             nodes,
             devices_per_node,
+            racks: 1,
             intra_bw: 150e9, // per-direction share of 300 GB/s aggregate
             inter_bw: 100e9 / 8.0, // 100 Gbps = 12.5 GB/s per node
+            rack_bw: 100e9 / 8.0,
             intra_lat: 3e-6,
             inter_lat: 15e-6,
+            rack_lat: 15e-6,
             device_flops: 112e12 * 0.4,
             device_mem: 32e9,
             name: format!("ClusterA[{}x{} V100]", nodes, devices_per_node),
@@ -64,10 +91,13 @@ impl Topology {
         Topology {
             nodes,
             devices_per_node,
+            racks: 1,
             intra_bw: 300e9,
             inter_bw: 400e9 / 8.0, // 400 Gbps = 50 GB/s per node
+            rack_bw: 400e9 / 8.0,
             intra_lat: 2e-6,
             inter_lat: 10e-6,
+            rack_lat: 10e-6,
             device_flops: 312e12 * 0.45,
             device_mem: 40e9,
             name: format!("ClusterB[{}x{} A100]", nodes, devices_per_node),
@@ -80,19 +110,48 @@ impl Topology {
         Topology {
             nodes: 1,
             devices_per_node: devices,
+            racks: 1,
             intra_bw: bw,
             inter_bw: bw,
+            rack_bw: bw,
             intra_lat: 1e-6,
             inter_lat: 1e-6,
+            rack_lat: 1e-6,
             device_flops: 100e12,
             device_mem: 32e9,
             name: format!("Flat[{devices}]"),
         }
     }
 
+    /// Group the nodes into `racks` racks, deriving a conservatively
+    /// oversubscribed spine: half the NIC bandwidth, triple the inter-node
+    /// latency. Use [`Topology::with_rack_links`] afterwards to override.
+    pub fn with_racks(mut self, racks: usize) -> Topology {
+        assert!(racks >= 1, "a topology needs at least one rack");
+        assert!(self.nodes % racks == 0, "racks must evenly divide the node count");
+        self.racks = racks;
+        if racks > 1 {
+            self.rack_bw = self.inter_bw / 2.0;
+            self.rack_lat = self.inter_lat * 3.0;
+        }
+        self
+    }
+
+    /// Override the cross-rack α–β parameters.
+    pub fn with_rack_links(mut self, bw: f64, lat: f64) -> Topology {
+        self.rack_bw = bw;
+        self.rack_lat = lat;
+        self
+    }
+
     /// Total number of devices.
     pub fn num_devices(&self) -> usize {
         self.nodes * self.devices_per_node
+    }
+
+    /// Nodes per rack (all of them when the cluster is single-rack).
+    pub fn nodes_per_rack(&self) -> usize {
+        self.nodes / self.racks
     }
 
     /// Node that hosts a device.
@@ -122,21 +181,42 @@ impl Topology {
         self.node_of(a) == self.node_of(b)
     }
 
+    /// Rack that hosts a device.
+    pub fn rack_of(&self, d: DeviceId) -> RackId {
+        RackId(self.node_of(d).0 / self.nodes_per_rack())
+    }
+
+    /// Whether two devices share a rack.
+    pub fn same_rack(&self, a: DeviceId, b: DeviceId) -> bool {
+        self.rack_of(a) == self.rack_of(b)
+    }
+
+    /// The interconnect tier a hop between two devices crosses.
+    pub fn tier(&self, a: DeviceId, b: DeviceId) -> LinkTier {
+        if self.same_node(a, b) {
+            LinkTier::IntraNode
+        } else if self.same_rack(a, b) {
+            LinkTier::InterNode
+        } else {
+            LinkTier::InterRack
+        }
+    }
+
     /// Point-to-point bandwidth between two devices (bytes/s).
     pub fn bw(&self, a: DeviceId, b: DeviceId) -> f64 {
-        if self.same_node(a, b) {
-            self.intra_bw
-        } else {
-            self.inter_bw
+        match self.tier(a, b) {
+            LinkTier::IntraNode => self.intra_bw,
+            LinkTier::InterNode => self.inter_bw,
+            LinkTier::InterRack => self.rack_bw,
         }
     }
 
     /// Point-to-point latency between two devices (seconds).
     pub fn lat(&self, a: DeviceId, b: DeviceId) -> f64 {
-        if self.same_node(a, b) {
-            self.intra_lat
-        } else {
-            self.inter_lat
+        match self.tier(a, b) {
+            LinkTier::IntraNode => self.intra_lat,
+            LinkTier::InterNode => self.inter_lat,
+            LinkTier::InterRack => self.rack_lat,
         }
     }
 
@@ -150,11 +230,13 @@ impl Topology {
     }
 
     /// The effective bandwidth used for the overlap-degree computation in
-    /// Algorithm 1: the *inter-node* bandwidth when the interconnect is
-    /// heterogeneous (the algorithm minimizes cross-node traffic first),
-    /// otherwise the uniform bandwidth.
+    /// Algorithm 1: the *slowest* tier's bandwidth when the interconnect is
+    /// heterogeneous (the algorithm minimizes traffic over the narrowest
+    /// links first), otherwise the uniform bandwidth.
     pub fn planning_bw(&self) -> f64 {
-        if self.nodes > 1 {
+        if self.racks > 1 {
+            self.rack_bw
+        } else if self.nodes > 1 {
             self.inter_bw
         } else {
             self.intra_bw
@@ -209,5 +291,51 @@ mod tests {
         assert_eq!(a.planning_bw(), a.inter_bw);
         let f = Topology::flat(8, 5e9);
         assert_eq!(f.planning_bw(), 5e9);
+    }
+
+    #[test]
+    fn single_rack_topologies_have_two_tiers() {
+        let t = Topology::cluster_a(4, 8);
+        assert_eq!(t.racks, 1);
+        assert_eq!(t.nodes_per_rack(), 4);
+        assert_eq!(t.rack_of(DeviceId(0)), t.rack_of(DeviceId(31)));
+        assert_eq!(t.tier(DeviceId(0), DeviceId(8)), LinkTier::InterNode);
+        assert_eq!(t.rack_bw, t.inter_bw);
+        assert_eq!(t.rack_lat, t.inter_lat);
+    }
+
+    #[test]
+    fn rack_tier_maps_devices_and_routes_links() {
+        let t = Topology::cluster_a(4, 2).with_racks(2);
+        assert_eq!(t.nodes_per_rack(), 2);
+        assert_eq!(t.rack_of(DeviceId(0)), RackId(0));
+        assert_eq!(t.rack_of(DeviceId(3)), RackId(0));
+        assert_eq!(t.rack_of(DeviceId(4)), RackId(1));
+        assert!(t.same_rack(DeviceId(1), DeviceId(2)));
+        assert!(!t.same_rack(DeviceId(3), DeviceId(4)));
+        assert_eq!(t.tier(DeviceId(0), DeviceId(1)), LinkTier::IntraNode);
+        assert_eq!(t.tier(DeviceId(0), DeviceId(2)), LinkTier::InterNode);
+        assert_eq!(t.tier(DeviceId(0), DeviceId(4)), LinkTier::InterRack);
+        assert_eq!(t.bw(DeviceId(0), DeviceId(4)), t.rack_bw);
+        assert_eq!(t.lat(DeviceId(0), DeviceId(4)), t.rack_lat);
+    }
+
+    #[test]
+    fn with_racks_derives_an_oversubscribed_spine() {
+        let t = Topology::cluster_b(4, 8).with_racks(2);
+        assert_eq!(t.rack_bw, t.inter_bw / 2.0);
+        assert_eq!(t.rack_lat, t.inter_lat * 3.0);
+        assert_eq!(t.planning_bw(), t.rack_bw);
+        let custom = Topology::cluster_b(4, 8).with_racks(2).with_rack_links(7e9, 1e-4);
+        assert_eq!(custom.rack_bw, 7e9);
+        assert_eq!(custom.rack_lat, 1e-4);
+        let d = custom.xfer_time(DeviceId(0), DeviceId(16), 7e9);
+        assert!((d - (1e-4 + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "racks must evenly divide")]
+    fn with_racks_rejects_nondividing_counts() {
+        let _ = Topology::cluster_a(4, 8).with_racks(3);
     }
 }

@@ -1,0 +1,163 @@
+//! Integration: the socket transport is a drop-in replacement for the
+//! in-process fabric — an 8-rank, 3-layer SPMD run over unix sockets
+//! (versioned wire codec, reader threads, message-fallback barrier)
+//! produces final expert parameters **bit-identical** to the in-process
+//! backend at the same seed, and both collapse to the sequential oracle.
+//! Also drives the real `hecate` binary end to end: the coordinator
+//! launcher spawns one `hecate worker` process per rank over a UDS mesh
+//! and `--verify-inproc` bit-compares the merged result in-process.
+//! Hermetic: reference backend, localhost sockets only.
+
+use std::process::Command;
+
+use hecate::fssdp::{Session, SessionConfig, SessionConfigBuilder};
+use hecate::spmd::transport::TransportKind;
+use hecate::testing::all_chunks;
+use hecate::topology::Topology;
+
+#[allow(clippy::too_many_arguments)]
+fn cfg(
+    layers: usize,
+    topo: Topology,
+    threads: usize,
+    overlap: bool,
+    sources: usize,
+    seed: u64,
+    transport: TransportKind,
+) -> SessionConfigBuilder {
+    SessionConfig::builder()
+        .reference()
+        .topology(topo)
+        .layers(layers)
+        .seed(seed)
+        .data_shards(sources)
+        .parallel(true)
+        .threads(threads)
+        .overlap(overlap)
+        .transport(transport)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run(
+    layers: usize,
+    topo: Topology,
+    threads: usize,
+    overlap: bool,
+    iters: usize,
+    sources: usize,
+    seed: u64,
+    transport: TransportKind,
+) -> Vec<Vec<f32>> {
+    let b = cfg(layers, topo, threads, overlap, sources, seed, transport);
+    let mut s = Session::fresh(b.build().unwrap()).unwrap();
+    s.run(iters).unwrap();
+    all_chunks(s.engine())
+}
+
+#[test]
+fn socket_matches_inproc_bitwise_on_8_ranks_3_layers() {
+    // The acceptance lock: 8 ranks, 3 MoE layers, overlap scheduler on,
+    // same seed — the socket backend must not perturb a single bit.
+    let inproc =
+        run(3, Topology::cluster_a(2, 4), 8, true, 3, 8, 23, TransportKind::InProc);
+    let socket =
+        run(3, Topology::cluster_a(2, 4), 8, true, 3, 8, 23, TransportKind::Socket);
+    assert_eq!(inproc, socket, "socket transport must be bit-identical to in-proc");
+}
+
+#[test]
+fn socket_matches_the_sequential_oracle_with_overlap_off() {
+    // Transitivity check through the other executor: a socket run with the
+    // overlap scheduler off equals the sequential engine bit for bit.
+    let mut s = Session::fresh(
+        SessionConfig::builder()
+            .reference()
+            .topology(Topology::cluster_a(2, 2))
+            .layers(2)
+            .seed(19)
+            .data_shards(4)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    s.run(3).unwrap();
+    let seq = all_chunks(s.engine());
+    let socket =
+        run(2, Topology::cluster_a(2, 2), 4, false, 3, 4, 19, TransportKind::Socket);
+    assert_eq!(seq, socket, "socket SPMD must collapse to the sequential trajectory");
+}
+
+#[test]
+fn racked_topology_runs_over_sockets_bit_identically() {
+    // The hierarchical tiers change planning inputs, never numerics: a
+    // 2-rack topology must agree across transports too.
+    let topo = Topology::cluster_a(4, 2).with_racks(2);
+    let inproc = run(2, topo.clone(), 8, true, 2, 8, 37, TransportKind::InProc);
+    let socket = run(2, topo, 8, true, 2, 8, 37, TransportKind::Socket);
+    assert_eq!(inproc, socket, "rack tiers must not perturb socket numerics");
+}
+
+#[test]
+fn multiprocess_launcher_verifies_against_inproc() {
+    // The real binary: coordinator spawns 4 `hecate worker` processes over
+    // a UDS mesh, merges their state blobs, and bit-compares against an
+    // in-process rerun (--verify-inproc). This is the CI smoke flow.
+    let dir = std::env::temp_dir().join(format!("hecate-socket-cli-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = Command::new(env!("CARGO_BIN_EXE_hecate"))
+        .args([
+            "fssdp",
+            "--reference",
+            "--parallel",
+            "--devices",
+            "4",
+            "--nodes",
+            "2",
+            "--layers",
+            "2",
+            "--iters",
+            "2",
+            "--transport",
+            "socket",
+            "--verify-inproc",
+            "--worker-dir",
+            dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "launcher failed:\n{stdout}\n{stderr}");
+    assert!(
+        stdout.contains("verify: socket run is bit-identical to the in-process executor"),
+        "missing verification line:\n{stdout}"
+    );
+    assert!(stdout.contains("iter   0  loss"), "missing per-iteration lines:\n{stdout}");
+    // per-rank logs and state blobs are kept for post-mortems / artifacts
+    for r in 0..4 {
+        assert!(dir.join(format!("worker-{r}.log")).exists(), "missing worker-{r}.log");
+        assert!(dir.join(format!("state-{r}.bin")).exists(), "missing state-{r}.bin");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn comm_failures_exit_with_code_2() {
+    // A worker with an unusable listen address dies with a typed
+    // communicator error, which `main` maps to exit code 2 — supervisors
+    // can tell a dead fabric from a bad flag (exit 1).
+    let out = Command::new(env!("CARGO_BIN_EXE_hecate"))
+        .args([
+            "worker", "--rank", "0", "--world", "4", "--listen", "carrier-pigeon:nest",
+            "--peers", "a,b,c,d", "--devices", "4", "--out", "/tmp/hecate-unused-state.bin",
+        ])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    // a plain flag error stays exit 1
+    let out = Command::new(env!("CARGO_BIN_EXE_hecate"))
+        .args(["fssdp", "--bogus", "1"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+}
