@@ -135,11 +135,13 @@ fn main() {
     for overlap in [false, true] {
         let mut s =
             session(mdims, 3, Topology::cluster_a(2, 2), Some((4, overlap)), 4, Some(pacing));
-        b.run(
-            if overlap { "step_3layers_crosslayer_overlap_on" } else { "step_3layers_crosslayer_overlap_off" },
-            || {
-                s.run(1).unwrap();
-            },
-        );
+        let name = if overlap {
+            "step_3layers_crosslayer_overlap_on"
+        } else {
+            "step_3layers_crosslayer_overlap_off"
+        };
+        b.run(name, || {
+            s.run(1).unwrap();
+        });
     }
 }

@@ -1,0 +1,446 @@
+//! The four static checks over an extracted [`SpanModel`]: match
+//! completeness, deadlock freedom, wire safety, and resource discipline.
+//! Each check returns human-readable diagnostics (empty = pass); the
+//! driver aggregates them into one nonzero-exit report.
+//!
+//! [`SpanModel`]: super::model::SpanModel
+
+use std::collections::BTreeMap;
+
+use crate::placement::Placement;
+use crate::spmd::comm::Tag;
+use crate::spmd::transport::socket::{HEADER_LEN, MAX_FRAME_LEN};
+use crate::topology::DeviceId;
+
+use super::model::{OpKind, SpanModel, SymOp};
+
+fn fmt_tag(t: &Tag) -> String {
+    format!("iter {} layer {} {:?} a={} b={}", t.iter, t.layer, t.kind, t.a, t.b)
+}
+
+/// Check 1 — match completeness: on every directed link, each tag's send
+/// count equals its recv count. Orphans are reported with rank, iter,
+/// layer, and tag.
+pub(crate) fn check_matching(model: &SpanModel) -> Vec<String> {
+    let mut sends: BTreeMap<(usize, usize, Tag), usize> = BTreeMap::new();
+    let mut recvs: BTreeMap<(usize, usize, Tag), usize> = BTreeMap::new();
+    for (r, ops) in model.ranks.iter().enumerate() {
+        for op in ops {
+            match op.kind {
+                OpKind::Send { dst } => *sends.entry((r, dst, op.tag)).or_default() += 1,
+                OpKind::Recv { src } => *recvs.entry((src, r, op.tag)).or_default() += 1,
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for ((src, dst, tag), &n) in &sends {
+        let m = recvs.get(&(*src, *dst, *tag)).copied().unwrap_or(0);
+        if m != n {
+            out.push(format!(
+                "orphan send: rank {src} -> rank {dst}, {}: sent {n}x, received {m}x",
+                fmt_tag(tag)
+            ));
+        }
+    }
+    for ((src, dst, tag), &m) in &recvs {
+        if !sends.contains_key(&(*src, *dst, *tag)) {
+            out.push(format!(
+                "orphan recv: rank {dst} <- rank {src}, {}: received {m}x, never sent",
+                fmt_tag(tag)
+            ));
+        }
+    }
+    out
+}
+
+/// Check 2 — deadlock freedom: build the wait-for graph over blocking
+/// receives and verify it is acyclic.
+///
+/// Nodes are receives. A receive depends on (a) the previous receive in
+/// its own rank's program (control cannot reach it earlier) and (b) the
+/// last receive preceding its matching send in the *sender's* program
+/// (sends never block — unbounded links — so a send is issued once every
+/// blocking op before it completed). Tag stashing removes per-link
+/// head-of-line edges: an early arrival with another tag parks in the
+/// stash. A cycle is a real schedule deadlock and is printed hop by hop.
+pub(crate) fn check_deadlock(model: &SpanModel) -> Vec<String> {
+    // Pair the i-th send of a (src, dst, tag) key with its i-th recv
+    // (per-tag FIFO; ambiguous reuse is flagged by the wire check).
+    struct Node {
+        rank: usize,
+        src: usize,
+        tag: Tag,
+        deps: Vec<usize>,
+    }
+    let mut nodes: Vec<Node> = Vec::new();
+    // (rank, op index) of each recv → node id; send position lists.
+    let mut recv_ids: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+    let mut send_pos: BTreeMap<(usize, usize, Tag), Vec<usize>> = BTreeMap::new();
+    let mut last_recv_before: Vec<Vec<Option<usize>>> = Vec::new(); // per rank, per op idx
+    for (r, ops) in model.ranks.iter().enumerate() {
+        let mut last: Option<usize> = None; // node id of most recent recv
+        let mut befores = Vec::with_capacity(ops.len());
+        for (i, op) in ops.iter().enumerate() {
+            befores.push(last);
+            match op.kind {
+                OpKind::Send { dst } => {
+                    send_pos.entry((r, dst, op.tag)).or_default().push(i);
+                }
+                OpKind::Recv { src } => {
+                    let id = nodes.len();
+                    nodes.push(Node { rank: r, src, tag: op.tag, deps: Vec::new() });
+                    recv_ids.insert((r, i), id);
+                    if let Some(prev) = last {
+                        nodes[id].deps.push(prev); // program order
+                    }
+                    last = Some(id);
+                }
+            }
+        }
+        last_recv_before.push(befores);
+    }
+    // Cross edges: recv → the sender's last recv before the matching send.
+    let mut match_counter: BTreeMap<(usize, usize, Tag), usize> = BTreeMap::new();
+    for (r, ops) in model.ranks.iter().enumerate() {
+        for (i, op) in ops.iter().enumerate() {
+            if let OpKind::Recv { src } = op.kind {
+                let key = (src, r, op.tag);
+                let nth = match_counter.entry(key).or_default();
+                let pos = send_pos.get(&key).and_then(|v| v.get(*nth).copied());
+                *nth += 1;
+                let Some(send_i) = pos else {
+                    continue; // unmatched — the matching check reports it
+                };
+                if let Some(dep) = last_recv_before[src][send_i] {
+                    let id = recv_ids[&(r, i)];
+                    nodes[id].deps.push(dep);
+                }
+            }
+        }
+    }
+    // DFS cycle detection (iterative; colors 0=white 1=gray 2=black).
+    let mut color = vec![0u8; nodes.len()];
+    for start in 0..nodes.len() {
+        if color[start] != 0 {
+            continue;
+        }
+        let mut stack: Vec<(usize, usize)> = vec![(start, 0)];
+        let mut path: Vec<usize> = vec![start];
+        color[start] = 1;
+        while let Some(&(v, next)) = stack.last() {
+            if next < nodes[v].deps.len() {
+                stack.last_mut().expect("nonempty").1 += 1;
+                let w = nodes[v].deps[next];
+                match color[w] {
+                    0 => {
+                        color[w] = 1;
+                        stack.push((w, 0));
+                        path.push(w);
+                    }
+                    1 => {
+                        // Cycle: slice the current path from w to v.
+                        let from = path.iter().position(|&x| x == w).unwrap_or(0);
+                        let mut hops: Vec<String> = path[from..]
+                            .iter()
+                            .map(|&id| {
+                                let n = &nodes[id];
+                                format!(
+                                    "rank {} waits for {} from rank {}",
+                                    n.rank,
+                                    fmt_tag(&n.tag),
+                                    n.src
+                                )
+                            })
+                            .collect();
+                        hops.push(hops[0].clone()); // close the loop visibly
+                        return vec![format!(
+                            "deadlock cycle ({} waits):\n    {}",
+                            path.len() - from,
+                            hops.join("\n    -> ")
+                        )];
+                    }
+                    _ => {}
+                }
+            } else {
+                color[v] = 2;
+                stack.pop();
+                path.pop();
+            }
+        }
+    }
+    Vec::new()
+}
+
+/// Check 3 — wire safety: every payload fits [`MAX_FRAME_LEN`] under the
+/// socket codec's header (`check_frames` = socket transport), and no
+/// `(iter, layer, kind, a, b)` tag is sent twice on one directed link
+/// (tag matching would pair the receives ambiguously). `row_bound` caps
+/// the content-dependent exchanges: at top-2 gating every source routes at
+/// most `2 · tokens` rows of `d_model` floats.
+pub(crate) fn check_wire(model: &SpanModel, check_frames: bool, row_bound: usize) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut seen: BTreeMap<(usize, usize, Tag), usize> = BTreeMap::new();
+    for (r, ops) in model.ranks.iter().enumerate() {
+        for op in ops {
+            let OpKind::Send { dst } = op.kind else { continue };
+            *seen.entry((r, dst, op.tag)).or_default() += 1;
+            if check_frames {
+                let floats = op.floats.unwrap_or(row_bound);
+                let frame = HEADER_LEN + floats * 4;
+                if frame > MAX_FRAME_LEN {
+                    out.push(format!(
+                        "oversized frame: rank {r} -> rank {dst}, {}: {frame} bytes \
+                         ({floats} floats + {HEADER_LEN}B header) exceeds MAX_FRAME_LEN \
+                         = {MAX_FRAME_LEN}",
+                        fmt_tag(&op.tag)
+                    ));
+                }
+            }
+        }
+    }
+    for ((src, dst, tag), n) in seen {
+        if n > 1 {
+            out.push(format!(
+                "ambiguous tag reuse: rank {src} -> rank {dst}, {}: {n} in-flight messages \
+                 share one matching key",
+                fmt_tag(&tag)
+            ));
+        }
+    }
+    out
+}
+
+/// Check 4 — resource discipline: walk each iteration's plans per rank and
+/// verify chunk-store conservation (spAG never double-delivers, deferred
+/// fan-out sends have an earlier-stage inbound chunk, the plan placement
+/// materializes fully), gradient-buffer discipline (spRS sends and reduces
+/// touch only live buffers, owners end the stage loop holding their
+/// shards), and the recycle ledger (every buffer a rank takes for the
+/// iteration is returned or retained as an owned shard — the invariant
+/// behind the `ws_allocs == 0` steady state). Shard-partition exactness
+/// across reshard migrations is checked by the driver per span.
+pub(crate) fn check_resources(model: &SpanModel, shards: &[Placement], start: u64) -> Vec<String> {
+    let mut out = Vec::new();
+    let nd = model.ranks.len();
+    for (k, plans) in model.plans.iter().enumerate() {
+        let iter = start + k as u64;
+        for (l, plan) in plans.iter().enumerate() {
+            for r in 0..nd {
+                let me = DeviceId(r);
+                // ---- spAG: owned shards in, placement materialized out ----
+                let mut resident: Vec<bool> = (0..shards[l].num_chunks())
+                    .map(|c| shards[l].contains(c, me))
+                    .collect();
+                // ledger: buffers taken (recvs + grad zero-fills) must be
+                // returned (recycled/released) or retained as owned shards
+                let mut taken = 0usize;
+                let mut returned = 0usize;
+                for stage in 0..plan.spag.num_stages {
+                    // deferred sends of this stage need the chunk already
+                    // resident (owned, or landed at an earlier stage)
+                    for t in plan.spag.transfers.iter().filter(|t| t.stage == stage) {
+                        if t.src.0 == r && !resident[t.chunk] {
+                            out.push(format!(
+                                "iter {iter} layer {l}: rank {r} must forward chunk {} at \
+                                 stage {stage} but it is neither owned nor delivered by an \
+                                 earlier stage",
+                                t.chunk
+                            ));
+                        }
+                    }
+                    for t in plan.spag.transfers.iter().filter(|t| t.stage == stage) {
+                        if t.dst.0 == r {
+                            if resident[t.chunk] {
+                                out.push(format!(
+                                    "iter {iter} layer {l}: spAG delivers chunk {} to rank \
+                                     {r} twice (stage {stage}) — the replica would leak",
+                                    t.chunk
+                                ));
+                            }
+                            resident[t.chunk] = true;
+                            taken += 1;
+                        }
+                    }
+                }
+                for c in plan.placement.chunks_on_iter(me) {
+                    if !resident[c] {
+                        out.push(format!(
+                            "iter {iter} layer {l}: placement expects chunk {c} on rank {r} \
+                             but no spAG transfer delivers it"
+                        ));
+                    }
+                }
+                // settle releases everything outside the owner partition
+                for (c, res) in resident.iter().enumerate() {
+                    if *res && !shards[l].contains(c, me) {
+                        returned += 1;
+                    }
+                }
+                // ---- spRS: gradient buffers live exactly per placement ----
+                let mut grads: Vec<bool> = (0..shards[l].num_chunks())
+                    .map(|c| plan.placement.contains(c, me))
+                    .collect();
+                taken += grads.iter().filter(|g| **g).count();
+                for stage in 0..plan.sprs.num_stages {
+                    for t in plan.sprs.transfers.iter().filter(|t| t.stage == stage) {
+                        if t.src.0 == r && !grads[t.chunk] {
+                            out.push(format!(
+                                "iter {iter} layer {l}: spRS rank {r} sends gradient chunk \
+                                 {} at stage {stage} without holding it",
+                                t.chunk
+                            ));
+                        }
+                    }
+                    for t in plan.sprs.transfers.iter().filter(|t| t.stage == stage) {
+                        if t.dst.0 == r {
+                            if t.reduce {
+                                if !grads[t.chunk] {
+                                    out.push(format!(
+                                        "iter {iter} layer {l}: spRS reduce into rank {r} \
+                                         lacks accumulator chunk {}",
+                                        t.chunk
+                                    ));
+                                }
+                                taken += 1; // the wire buffer…
+                                returned += 1; // …is consumed and recycled
+                            } else {
+                                if grads[t.chunk] {
+                                    out.push(format!(
+                                        "iter {iter} layer {l}: spRS insert of chunk {} \
+                                         overwrites rank {r}'s live accumulation",
+                                        t.chunk
+                                    ));
+                                }
+                                grads[t.chunk] = true;
+                                taken += 1;
+                            }
+                        }
+                    }
+                }
+                for (c, live) in grads.iter().enumerate() {
+                    if *live && !shards[l].contains(c, me) {
+                        returned += 1; // scatter releases non-owned
+                    }
+                }
+                // owners must end the stage loop holding their shards
+                for c in shards[l].chunks_on_iter(me) {
+                    if !grads[c] {
+                        out.push(format!(
+                            "iter {iter} layer {l}: owner rank {r} ends spRS without \
+                             gradient chunk {c}"
+                        ));
+                    }
+                }
+                // iteration teardown recycles the owned gradient buffers
+                returned += shards[l].chunks_on_iter(me).filter(|&c| grads[c]).count();
+                if taken != returned {
+                    out.push(format!(
+                        "iter {iter} layer {l}: rank {r} recycle ledger unbalanced: took \
+                         {taken} buffers, returned {returned}"
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Shard-partition exactness: every chunk of every layer has exactly one
+/// owner. Run at span entry and after every reshard migration.
+pub(crate) fn check_partition(shards: &[Placement], nd: usize, iter: u64) -> Vec<String> {
+    let mut out = Vec::new();
+    for (l, p) in shards.iter().enumerate() {
+        for c in 0..p.num_chunks() {
+            let holders: Vec<usize> = p.holders(c).map(|d| d.0).collect();
+            if holders.len() != 1 {
+                out.push(format!(
+                    "iter {iter} layer {l}: chunk {c} owned by {:?} after reshard — the \
+                     shard map must stay an exact partition over {nd} ranks",
+                    holders
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::model::{emit_barrier_round, OpKind, SpanModel, SymOp};
+    use super::*;
+    use crate::spmd::comm::MsgKind;
+
+    fn empty_model(nd: usize) -> SpanModel {
+        SpanModel { ranks: (0..nd).map(|_| Vec::new()).collect(), plans: Vec::new() }
+    }
+
+    #[test]
+    fn modeled_barrier_round_is_clean_and_matched() {
+        let mut m = empty_model(3);
+        emit_barrier_round(&mut m.ranks, 0, false);
+        emit_barrier_round(&mut m.ranks, 1, false); // sequence numbers disambiguate
+        assert!(check_matching(&m).is_empty());
+        assert!(check_deadlock(&m).is_empty());
+        assert!(check_wire(&m, true, 0).is_empty());
+    }
+
+    #[test]
+    fn swapped_barrier_round_prints_a_cycle() {
+        let mut m = empty_model(2);
+        emit_barrier_round(&mut m.ranks, 0, true);
+        let diags = check_deadlock(&m);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert!(diags[0].contains("deadlock cycle"), "{}", diags[0]);
+        assert!(diags[0].contains("rank 0 waits for"), "{}", diags[0]);
+        assert!(diags[0].contains("rank 1 waits for"), "{}", diags[0]);
+    }
+
+    #[test]
+    fn orphan_send_and_recv_are_reported_with_tags() {
+        let mut m = empty_model(2);
+        let t = Tag { iter: 3, kind: MsgKind::Ctrl, layer: 1, a: 9, b: 0 };
+        m.ranks[0].push(SymOp { kind: OpKind::Send { dst: 1 }, tag: t, floats: Some(4) });
+        let diags = check_matching(&m);
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].contains("orphan send"), "{}", diags[0]);
+        assert!(diags[0].contains("iter 3 layer 1"), "{}", diags[0]);
+        m.ranks[1].push(SymOp { kind: OpKind::Recv { src: 0 }, tag: t, floats: Some(4) });
+        assert!(check_matching(&m).is_empty());
+        m.ranks[1].push(SymOp {
+            kind: OpKind::Recv { src: 0 },
+            tag: Tag { iter: 4, ..t },
+            floats: None,
+        });
+        let diags = check_matching(&m);
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].contains("orphan recv"), "{}", diags[0]);
+    }
+
+    #[test]
+    fn frame_cap_and_tag_reuse_are_flagged() {
+        let mut m = empty_model(2);
+        let t = Tag { iter: 0, kind: MsgKind::SpagChunk, layer: 0, a: 0, b: 0 };
+        let too_big = (MAX_FRAME_LEN - HEADER_LEN) / 4 + 1;
+        m.ranks[0].push(SymOp { kind: OpKind::Send { dst: 1 }, tag: t, floats: Some(too_big) });
+        let diags = check_wire(&m, true, 0);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert!(diags[0].contains("oversized frame"), "{}", diags[0]);
+        // the in-proc fabric has no frame cap
+        assert!(check_wire(&m, false, 0).is_empty());
+        m.ranks[0].push(SymOp { kind: OpKind::Send { dst: 1 }, tag: t, floats: Some(1) });
+        let diags = check_wire(&m, false, 0);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert!(diags[0].contains("ambiguous tag reuse"), "{}", diags[0]);
+    }
+
+    #[test]
+    fn double_owned_chunk_fails_the_partition_check() {
+        let mut shards = vec![Placement::round_robin(4, 2)];
+        assert!(check_partition(&shards, 2, 8).is_empty());
+        shards[0].add(0, DeviceId(1));
+        let diags = check_partition(&shards, 2, 8);
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].contains("chunk 0 owned by [0, 1]"), "{}", diags[0]);
+        assert!(diags[0].contains("iter 8 layer 0"), "{}", diags[0]);
+    }
+}

@@ -1,0 +1,370 @@
+//! Static schedule verification: prove a configuration's SPMD
+//! communication schedule is fully matched, deadlock-free, wire-safe, and
+//! resource-disciplined — **without executing it**.
+//!
+//! [`model`] replays the plan-building path (`build_iter_plan` over the
+//! replicated predictor state, Algorithm 2 resharding at the configured
+//! cadence, the `sched`/`exec` issue rules) and enumerates every rank's
+//! tagged sends and receives in program order. [`checks`] runs four
+//! analyses over that model; [`analyze_config`] drives both across a
+//! window of iterations spanning every reshard boundary in the window and
+//! aggregates violations into one diagnostic error (the CLI surface is
+//! `hecate analyze schedule`, which exits nonzero on any violation).
+//!
+//! The same extractor backs a `debug_assertions` cross-check inside
+//! `spmd::run_span`: every debug-build SPMD span compares its actual
+//! per-rank traffic (a communicator audit log) against the model's
+//! predicted multiset, so the static model cannot silently drift from the
+//! executor. [`Injection`] seeds deliberate violations — a dropped
+//! receive, a swapped barrier, an oversized frame, a double-owned chunk —
+//! to prove each check actually fires.
+
+pub(crate) mod checks;
+pub(crate) mod model;
+
+use crate::fssdp::{Executor, SessionConfig};
+use crate::loadsim::{LoadPredictor, ModelLoadTrace};
+use crate::materialize::MatConstraints;
+use crate::placement::Placement;
+use crate::sharding::{heterogeneous_sticky, ShardingPlan};
+use crate::spmd::transport::socket::{HEADER_LEN, MAX_FRAME_LEN};
+use crate::spmd::transport::TransportKind;
+use crate::topology::DeviceId;
+
+use model::{OpKind, SpanSpec, SymOp};
+
+/// A deliberate schedule violation, seeded into the model so the mutation
+/// tests (and `hecate analyze schedule --inject …`) can prove every check
+/// catches what it claims to catch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Injection {
+    /// Delete the first spAG receive of the first span — its matching
+    /// send becomes an orphan (match-completeness must fire).
+    DropRecv,
+    /// Append a fallback-barrier round with the send/receive phases
+    /// swapped on every rank — the classic all-blocked-on-receives
+    /// deadlock (cycle detection must fire and print the cycle).
+    SwapBarrier,
+    /// Inflate the first spAG send past `MAX_FRAME_LEN` (wire safety must
+    /// fire; meaningful with `--transport socket`).
+    OversizeFrame,
+    /// Give layer 0's chunk 0 a second owner at the first reshard
+    /// boundary (or at span entry when resharding is off) — the shard map
+    /// stops being a partition (resource discipline must fire).
+    DoubleOwn,
+}
+
+impl Injection {
+    /// Parse a CLI `--inject` value.
+    pub fn parse(s: &str) -> Option<Injection> {
+        match s {
+            "drop-recv" => Some(Injection::DropRecv),
+            "swap-barrier" => Some(Injection::SwapBarrier),
+            "oversize-frame" => Some(Injection::OversizeFrame),
+            "double-own" => Some(Injection::DoubleOwn),
+            _ => None,
+        }
+    }
+}
+
+/// What a clean analysis covered, for the CLI summary line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScheduleReport {
+    /// Ranks in the communicator.
+    pub ranks: usize,
+    /// MoE layers in the stack.
+    pub layers: usize,
+    /// Iterations analyzed.
+    pub iters: usize,
+    /// Reshard-free spans the window split into.
+    pub spans: usize,
+    /// Reshard boundaries replayed.
+    pub reshards: usize,
+    /// Expert shards that migrated across those boundaries.
+    pub experts_moved: usize,
+    /// Total modeled sends across all ranks and iterations.
+    pub sends: usize,
+    /// Total modeled receives.
+    pub recvs: usize,
+    /// Largest modeled wire frame in bytes (known-size payloads).
+    pub max_frame_bytes: usize,
+}
+
+fn count_ops(ranks: &[Vec<SymOp>]) -> (usize, usize, usize) {
+    let (mut sends, mut recvs, mut max_floats) = (0usize, 0usize, 0usize);
+    for ops in ranks {
+        for op in ops {
+            match op.kind {
+                OpKind::Send { .. } => sends += 1,
+                OpKind::Recv { .. } => recvs += 1,
+            }
+            if let Some(f) = op.floats {
+                max_floats = max_floats.max(f);
+            }
+        }
+    }
+    (sends, recvs, max_floats)
+}
+
+/// Statically analyze `iters` iterations of `cfg`'s communication
+/// schedule: replay plans and resharding from the same deterministic
+/// recipe the engine uses (round-robin shards, window-5 predictors fed a
+/// seeded synthetic load trajectory), extract every reshard-free span's
+/// per-rank event multiset, and run the four checks. Returns the coverage
+/// report, or an error aggregating every diagnostic (the CLI maps it to a
+/// nonzero exit).
+pub fn analyze_config(
+    cfg: &SessionConfig,
+    iters: usize,
+    inject: Option<Injection>,
+) -> anyhow::Result<ScheduleReport> {
+    let topo = cfg.topology();
+    let nd = topo.num_devices();
+    let dims = cfg.dims;
+    let nl = cfg.layers.unwrap_or(1);
+    anyhow::ensure!(nl > 0, "schedule analysis needs at least one layer");
+    anyhow::ensure!(iters > 0, "schedule analysis needs at least one iteration");
+    let sources = cfg.data_shards.unwrap_or(nd);
+    let reshard_every = cfg.reshard_every.unwrap_or(0);
+    let cons = MatConstraints {
+        overlap_degree: cfg.overlap_degree.unwrap_or(4),
+        mem_slots: cfg.mem_slots.unwrap_or(4),
+    };
+    let overlap = match cfg.executor() {
+        Executor::Spmd { overlap, .. } => overlap,
+        Executor::Sequential => true,
+    };
+    let check_frames = cfg.transport() == TransportKind::Socket;
+    // Worst case for the content-dependent row exchanges: top-2 gating
+    // routes at most 2·tokens rows of d_model floats per source, and one
+    // rank may compute every routed group.
+    let row_bound = 2 * dims.tokens * sources * dims.d_model;
+
+    // Engine-identical control-plane state at iteration 0.
+    let mut shards: Vec<Placement> =
+        (0..nl).map(|_| Placement::round_robin(dims.experts, nd)).collect();
+    let mut predictors: Vec<LoadPredictor> =
+        (0..nl).map(|_| LoadPredictor::new(dims.experts, 5)).collect();
+    // The static pass has no gate kernels to realize loads; a seeded
+    // locality-preserving trace drives the predictor windows (and thus
+    // plan evolution) through a realistic trajectory.
+    let mut trace = ModelLoadTrace::new(nl, dims.experts, cfg.seed);
+    let realized_all: Vec<Vec<Vec<f64>>> = (0..iters).map(|_| trace.step()).collect();
+
+    if inject == Some(Injection::DoubleOwn) && reshard_every == 0 {
+        let owner = shards[0].holders(0).next().expect("chunk 0 has an owner");
+        shards[0].add(0, DeviceId((owner.0 + 1) % nd));
+    }
+
+    let mut violations: Vec<String> = Vec::new();
+    let (mut spans, mut reshards, mut experts_moved) = (0usize, 0usize, 0usize);
+    let (mut sends, mut recvs, mut max_floats) = (0usize, 0usize, 0usize);
+    let mut step = 0usize;
+    let mut first_span = true;
+    while step < iters && violations.is_empty() {
+        let span_len = if reshard_every > 0 {
+            (reshard_every - (step % reshard_every)).min(iters - step)
+        } else {
+            iters - step
+        };
+        violations.extend(checks::check_partition(&shards, nd, step as u64));
+        if !violations.is_empty() {
+            break; // a broken shard map invalidates plan building
+        }
+        let spec = SpanSpec {
+            topo,
+            dims,
+            shards: &shards,
+            cons,
+            sources,
+            start: step as u64,
+            iters: span_len,
+            overlap,
+        };
+        let mut m = model::extract_span(
+            &spec,
+            &mut predictors,
+            &realized_all[step..step + span_len],
+        )?;
+        if first_span {
+            match inject {
+                Some(Injection::DropRecv) => {
+                    // Prefer a spAG receive; any receive demonstrates the
+                    // orphaned matching send either way.
+                    let find = |ops: &Vec<SymOp>, spag_only: bool| {
+                        ops.iter().position(|op| {
+                            matches!(op.kind, OpKind::Recv { .. })
+                                && (!spag_only
+                                    || op.tag.kind == crate::spmd::comm::MsgKind::SpagChunk)
+                        })
+                    };
+                    let dropped = m.ranks.iter_mut().any(|ops| {
+                        if let Some(i) = find(ops, true).or_else(|| find(ops, false)) {
+                            ops.remove(i);
+                            true
+                        } else {
+                            false
+                        }
+                    });
+                    anyhow::ensure!(dropped, "no receive to drop in this schedule");
+                }
+                Some(Injection::SwapBarrier) => {
+                    model::emit_barrier_round(&mut m.ranks, iters as u64, true);
+                }
+                Some(Injection::OversizeFrame) => {
+                    // Prefer a spAG send; any send exercises the frame cap.
+                    let grow = |ops: &mut Vec<SymOp>, spag_only: bool| {
+                        for op in ops.iter_mut() {
+                            if matches!(op.kind, OpKind::Send { .. })
+                                && (!spag_only
+                                    || op.tag.kind == crate::spmd::comm::MsgKind::SpagChunk)
+                            {
+                                op.floats = Some((MAX_FRAME_LEN - HEADER_LEN) / 4 + 1);
+                                return true;
+                            }
+                        }
+                        false
+                    };
+                    let bumped = m.ranks.iter_mut().any(|ops| grow(ops, true) || grow(ops, false));
+                    anyhow::ensure!(bumped, "no send to oversize in this schedule");
+                }
+                _ => {}
+            }
+            first_span = false;
+        }
+        violations.extend(checks::check_matching(&m));
+        violations.extend(checks::check_deadlock(&m));
+        violations.extend(checks::check_wire(&m, check_frames, row_bound));
+        violations.extend(checks::check_resources(&m, &shards, step as u64));
+        let (s, r, f) = count_ops(&m.ranks);
+        sends += s;
+        recvs += r;
+        max_floats = max_floats.max(f);
+        spans += 1;
+        step += span_len;
+        // Reshard boundary: replay Algorithm 2 exactly as `reshard_now`
+        // does (sticky joint re-partition from the predicted loads).
+        if step < iters && reshard_every > 0 && step % reshard_every == 0 {
+            let loads: Vec<Vec<f64>> = predictors.iter().map(|p| p.predict()).collect();
+            let prev = ShardingPlan { layers: shards.clone() };
+            let plan = heterogeneous_sticky(
+                topo,
+                &loads,
+                cons.overlap_degree.min(dims.experts),
+                Some(&prev),
+            );
+            for (old, new) in prev.layers.iter().zip(plan.layers.iter()) {
+                for e in 0..dims.experts {
+                    if old.holders(e).next() != new.holders(e).next() {
+                        experts_moved += 1;
+                    }
+                }
+            }
+            shards = plan.layers;
+            reshards += 1;
+            if reshards == 1 && inject == Some(Injection::DoubleOwn) {
+                let owner = shards[0].holders(0).next().expect("chunk 0 has an owner");
+                shards[0].add(0, DeviceId((owner.0 + 1) % nd));
+            }
+        }
+    }
+    if !violations.is_empty() {
+        let shown = violations.len().min(16);
+        anyhow::bail!(
+            "schedule verification failed: {} violation(s)\n  {}",
+            violations.len(),
+            violations[..shown].join("\n  ")
+        );
+    }
+    Ok(ScheduleReport {
+        ranks: nd,
+        layers: nl,
+        iters,
+        spans,
+        reshards,
+        experts_moved,
+        sends,
+        recvs,
+        max_frame_bytes: HEADER_LEN + max_floats * 4,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base(devices: usize, nodes: usize) -> SessionConfig {
+        SessionConfig::builder()
+            .reference()
+            .cluster(nodes, devices)
+            .parallel(true)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn default_parallel_config_is_clean() {
+        let rep = analyze_config(&base(8, 2), 4, None).unwrap();
+        assert_eq!((rep.ranks, rep.layers, rep.iters, rep.spans), (8, 1, 4, 1));
+        assert_eq!(rep.reshards, 0);
+        assert!(rep.sends > 0 && rep.sends == rep.recvs, "{rep:?}");
+    }
+
+    #[test]
+    fn overlap_modes_predict_the_same_multiset() {
+        let on = SessionConfig::builder()
+            .reference()
+            .cluster(2, 4)
+            .layers(3)
+            .parallel(true)
+            .overlap(true)
+            .build()
+            .unwrap();
+        let off = SessionConfig::builder()
+            .reference()
+            .cluster(2, 4)
+            .layers(3)
+            .parallel(true)
+            .overlap(false)
+            .build()
+            .unwrap();
+        let a = analyze_config(&on, 3, None).unwrap();
+        let b = analyze_config(&off, 3, None).unwrap();
+        assert_eq!((a.sends, a.recvs), (b.sends, b.recvs), "overlap reorders, never adds");
+    }
+
+    #[test]
+    fn reshard_window_splits_spans_and_moves_experts() {
+        let cfg = SessionConfig::builder()
+            .reference()
+            .cluster(2, 8)
+            .layers(2)
+            .parallel(true)
+            .reshard_every(3)
+            .build()
+            .unwrap();
+        let rep = analyze_config(&cfg, 8, None).unwrap();
+        assert_eq!(rep.spans, 3, "8 iters at cadence 3 → spans of 3+3+2");
+        assert_eq!(rep.reshards, 2);
+    }
+
+    #[test]
+    fn injections_are_caught_with_diagnostics() {
+        let cfg = base(4, 2);
+        let err = analyze_config(&cfg, 2, Some(Injection::DropRecv)).unwrap_err().to_string();
+        assert!(err.contains("orphan send"), "{err}");
+        let err = analyze_config(&cfg, 2, Some(Injection::SwapBarrier)).unwrap_err().to_string();
+        assert!(err.contains("deadlock cycle"), "{err}");
+        let err = analyze_config(&cfg, 2, Some(Injection::DoubleOwn)).unwrap_err().to_string();
+        assert!(err.contains("must stay an exact partition"), "{err}");
+    }
+
+    #[test]
+    fn injection_names_parse() {
+        assert_eq!(Injection::parse("drop-recv"), Some(Injection::DropRecv));
+        assert_eq!(Injection::parse("swap-barrier"), Some(Injection::SwapBarrier));
+        assert_eq!(Injection::parse("oversize-frame"), Some(Injection::OversizeFrame));
+        assert_eq!(Injection::parse("double-own"), Some(Injection::DoubleOwn));
+        assert_eq!(Injection::parse("nope"), None);
+    }
+}

@@ -1,0 +1,452 @@
+//! Symbolic schedule extraction: replay the plan-building path of a span
+//! and enumerate every rank's communication ops **in program order**,
+//! without executing a single kernel.
+//!
+//! The extractor mirrors `spmd::rank_main` exactly:
+//!
+//! * plans are rebuilt per iteration from the replicated
+//!   [`LoadPredictor`] state (predict all layers, then observe all layers
+//!   — the same ordering the executor follows in both the synchronous and
+//!   the §4.3 overlap schedule);
+//! * spAG sends split into begin-time sends (chunks owned per the shard
+//!   partition, hence resident) and deferred fan-out sends emitted inside
+//!   the staged finish — the exact split `exec::RankSpag` performs;
+//! * spRS is stage-synchronous: stage-0 sends at `begin`, later stages'
+//!   sends before that stage's plan-ordered receives (`exec::RankSprs`);
+//! * the gate / combine / cotangent exchanges are allgathers tagged
+//!   `(iter, kind, layer, sender, 0)` with the executor's exact fan-out.
+//!
+//! The eager next-iteration issue (`sched::Overlap::eager_issue`) sends
+//! the *same* tagged messages earlier in wall-clock time than this model
+//! places them; the multiset is identical and an earlier send can only
+//! shrink the wait-for graph, so checking the model is conservative.
+//!
+//! [`LoadPredictor`]: crate::loadsim::LoadPredictor
+
+use crate::collectives::sparse::SparsePlan;
+use crate::fssdp::{build_iter_plan, IterPlan, LayerDims};
+use crate::loadsim::LoadPredictor;
+use crate::materialize::MatConstraints;
+use crate::placement::Placement;
+use crate::spmd::comm::{AuditEvent, MsgKind, Tag};
+use crate::topology::{DeviceId, Topology};
+
+/// Direction + peer of one symbolic communication op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub(crate) enum OpKind {
+    Send { dst: usize },
+    Recv { src: usize },
+}
+
+/// One entry of a rank's symbolic program: a tagged send or receive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub(crate) struct SymOp {
+    pub kind: OpKind,
+    pub tag: Tag,
+    /// Payload length in floats; `None` when content-dependent (gate
+    /// routing decides the combine/cotangent row counts). The match and
+    /// deadlock checks ignore sizes; the wire check bounds `None` by the
+    /// worst-case routed-row payload.
+    pub floats: Option<usize>,
+}
+
+/// Inputs of one reshard-free span, mirroring what `spmd::run_span` hands
+/// each rank thread.
+pub(crate) struct SpanSpec<'a> {
+    pub topo: &'a Topology,
+    pub dims: LayerDims,
+    /// Per-layer owner partitions at span entry.
+    pub shards: &'a [Placement],
+    pub cons: MatConstraints,
+    pub sources: usize,
+    pub start: u64,
+    pub iters: usize,
+    pub overlap: bool,
+}
+
+/// The extracted model: every rank's ops in program order, plus the
+/// per-iteration plans (the resource check re-walks them).
+pub(crate) struct SpanModel {
+    /// `ranks[r]` = rank `r`'s symbolic program for the span.
+    pub ranks: Vec<Vec<SymOp>>,
+    /// `plans[k][l]` = iteration `start + k`'s layer-`l` plan.
+    pub plans: Vec<Vec<IterPlan>>,
+}
+
+fn spag_tag(iter: u64, layer: usize, chunk: usize, stage: usize) -> Tag {
+    Tag { iter, kind: MsgKind::SpagChunk, layer, a: chunk, b: stage }
+}
+
+fn sprs_tag(iter: u64, layer: usize, chunk: usize, stage: usize) -> Tag {
+    Tag { iter, kind: MsgKind::SprsChunk, layer, a: chunk, b: stage }
+}
+
+/// Begin-time spAG sends: every transfer sourced here whose chunk is owned
+/// (owned ⇒ resident when `RankSpag::begin` runs — the settle of the
+/// previous iteration retained exactly the shard chunks).
+fn emit_spag_begin(
+    ops: &mut Vec<SymOp>,
+    r: usize,
+    iter: u64,
+    layer: usize,
+    plan: &SparsePlan,
+    owned: &Placement,
+    chunk_len: usize,
+) {
+    for t in &plan.transfers {
+        if t.src.0 == r && owned.contains(t.chunk, DeviceId(r)) {
+            ops.push(SymOp {
+                kind: OpKind::Send { dst: t.dst.0 },
+                tag: spag_tag(iter, layer, t.chunk, t.stage),
+                floats: Some(chunk_len),
+            });
+        }
+    }
+}
+
+/// Staged spAG completion: per stage, the deferred fan-out sends of
+/// chunks that just landed, then this rank's receives in plan order. The
+/// polling executor may interleave differently; this serialization is
+/// causally consistent (a deferred stage-`s` send only needs an inbound
+/// chunk from a stage `< s`, which the resource check enforces).
+fn emit_spag_finish(
+    ops: &mut Vec<SymOp>,
+    r: usize,
+    iter: u64,
+    layer: usize,
+    plan: &SparsePlan,
+    owned: &Placement,
+    chunk_len: usize,
+) {
+    for stage in 0..plan.num_stages {
+        for t in &plan.transfers {
+            if t.stage == stage && t.src.0 == r && !owned.contains(t.chunk, DeviceId(r)) {
+                ops.push(SymOp {
+                    kind: OpKind::Send { dst: t.dst.0 },
+                    tag: spag_tag(iter, layer, t.chunk, t.stage),
+                    floats: Some(chunk_len),
+                });
+            }
+        }
+        for t in &plan.transfers {
+            if t.stage == stage && t.dst.0 == r {
+                ops.push(SymOp {
+                    kind: OpKind::Recv { src: t.src.0 },
+                    tag: spag_tag(iter, layer, t.chunk, t.stage),
+                    floats: Some(chunk_len),
+                });
+            }
+        }
+    }
+}
+
+/// Stage-0 spRS sends (`RankSprs::begin` — the gradient buffers are final).
+fn emit_sprs_begin(
+    ops: &mut Vec<SymOp>,
+    r: usize,
+    iter: u64,
+    layer: usize,
+    plan: &SparsePlan,
+    chunk_len: usize,
+) {
+    if plan.num_stages == 0 {
+        return;
+    }
+    for t in &plan.transfers {
+        if t.stage == 0 && t.src.0 == r {
+            ops.push(SymOp {
+                kind: OpKind::Send { dst: t.dst.0 },
+                tag: sprs_tag(iter, layer, t.chunk, t.stage),
+                floats: Some(chunk_len),
+            });
+        }
+    }
+}
+
+/// The remaining spRS stage loop: per stage, later-stage sends first, then
+/// this rank's receives in plan order (`RankSprs::finish`).
+fn emit_sprs_finish(
+    ops: &mut Vec<SymOp>,
+    r: usize,
+    iter: u64,
+    layer: usize,
+    plan: &SparsePlan,
+    chunk_len: usize,
+) {
+    for stage in 0..plan.num_stages {
+        if stage > 0 {
+            for t in &plan.transfers {
+                if t.stage == stage && t.src.0 == r {
+                    ops.push(SymOp {
+                        kind: OpKind::Send { dst: t.dst.0 },
+                        tag: sprs_tag(iter, layer, t.chunk, t.stage),
+                        floats: Some(chunk_len),
+                    });
+                }
+            }
+        }
+        for t in &plan.transfers {
+            if t.stage == stage && t.dst.0 == r {
+                ops.push(SymOp {
+                    kind: OpKind::Recv { src: t.src.0 },
+                    tag: sprs_tag(iter, layer, t.chunk, t.stage),
+                    floats: Some(chunk_len),
+                });
+            }
+        }
+    }
+}
+
+/// An allgather round `(iter, kind, layer, sender, 0)`: sends to every
+/// peer, then receives in rank order (`RankComm::allgather`); the rank's
+/// own contribution never touches the transport. `floats(q)` gives rank
+/// `q`'s payload length, `None` when content-dependent.
+fn emit_allgather(
+    ops: &mut Vec<SymOp>,
+    r: usize,
+    nd: usize,
+    iter: u64,
+    kind: MsgKind,
+    layer: usize,
+    floats: impl Fn(usize) -> Option<usize>,
+) {
+    for dst in 0..nd {
+        if dst != r {
+            ops.push(SymOp {
+                kind: OpKind::Send { dst },
+                tag: Tag { iter, kind, layer, a: r, b: 0 },
+                floats: floats(r),
+            });
+        }
+    }
+    for src in 0..nd {
+        if src != r {
+            ops.push(SymOp {
+                kind: OpKind::Recv { src },
+                tag: Tag { iter, kind, layer, a: src, b: 0 },
+                floats: floats(src),
+            });
+        }
+    }
+}
+
+/// A fallback-barrier round (`RankComm::barrier` on backends without a
+/// native barrier): sends to every peer, then receives from every peer,
+/// under one sequence number. `swapped` reverses the two phases — the
+/// classic deadlock every rank blocking on receives before sending — used
+/// by the `swap-barrier` mutation to prove the cycle detector fires.
+pub(crate) fn emit_barrier_round(ranks: &mut [Vec<SymOp>], seq: u64, swapped: bool) {
+    let nd = ranks.len();
+    for (r, ops) in ranks.iter_mut().enumerate() {
+        let sends: Vec<SymOp> = (0..nd)
+            .filter(|&dst| dst != r)
+            .map(|dst| SymOp {
+                kind: OpKind::Send { dst },
+                tag: Tag { iter: seq, kind: MsgKind::Barrier, layer: 0, a: r, b: 0 },
+                floats: Some(0),
+            })
+            .collect();
+        let recvs: Vec<SymOp> = (0..nd)
+            .filter(|&src| src != r)
+            .map(|src| SymOp {
+                kind: OpKind::Recv { src },
+                tag: Tag { iter: seq, kind: MsgKind::Barrier, layer: 0, a: src, b: 0 },
+                floats: Some(0),
+            })
+            .collect();
+        if swapped {
+            ops.extend(recvs);
+            ops.extend(sends);
+        } else {
+            ops.extend(sends);
+            ops.extend(recvs);
+        }
+    }
+}
+
+/// Replay one reshard-free span symbolically: build every iteration's
+/// plans from the live predictor state, emit every rank's program, then
+/// feed the predictors the realized loads — the exact predict/observe
+/// cadence of `rank_main`. `realized[k][l]` is iteration `start + k`'s
+/// layer-`l` realized load fractions (a synthetic trajectory for the
+/// static CLI, the recorded gate outcome for the runtime cross-check).
+pub(crate) fn extract_span(
+    spec: &SpanSpec<'_>,
+    predictors: &mut [LoadPredictor],
+    realized: &[Vec<Vec<f64>>],
+) -> anyhow::Result<SpanModel> {
+    let nd = spec.topo.num_devices();
+    let nl = spec.shards.len();
+    anyhow::ensure!(nl > 0, "schedule model needs at least one layer");
+    anyhow::ensure!(predictors.len() == nl, "one predictor per layer");
+    anyhow::ensure!(realized.len() == spec.iters, "one realized-load row per iteration");
+    let clen = spec.dims.chunk_len();
+    let gate_rec = 1 + 4 * spec.dims.tokens;
+    let gate_cnt =
+        |q: usize| (0..spec.sources).filter(|s| s % nd == q).count();
+
+    let mut ranks: Vec<Vec<SymOp>> = (0..nd).map(|_| Vec::new()).collect();
+    let mut plans_by_iter: Vec<Vec<IterPlan>> = Vec::with_capacity(spec.iters);
+    for k in 0..spec.iters {
+        let iter = spec.start + k as u64;
+        // Plans for all layers from the span-entry shard partition and the
+        // current predictor window — identical on every rank, and
+        // identical whether built at the iteration top or pre-built by the
+        // overlap pipeline (the predictors observe strictly before either
+        // build point).
+        let mut plans: Vec<IterPlan> = Vec::with_capacity(nl);
+        for (l, p) in predictors.iter().enumerate() {
+            plans.push(build_iter_plan(spec.topo, &spec.shards[l], &p.predict(), spec.cons)?);
+        }
+
+        for (r, ops) in ranks.iter_mut().enumerate() {
+            // ---- forward sweep ----
+            for l in 0..nl {
+                let last_layer = l + 1 == nl;
+                if spec.overlap {
+                    if l == 0 {
+                        emit_spag_begin(ops, r, iter, 0, &plans[0].spag, &spec.shards[0], clen);
+                    }
+                    emit_allgather(ops, r, nd, iter, MsgKind::Gate, l, |q| {
+                        Some(gate_cnt(q) * gate_rec)
+                    });
+                    if !last_layer {
+                        emit_spag_begin(
+                            ops,
+                            r,
+                            iter,
+                            l + 1,
+                            &plans[l + 1].spag,
+                            &spec.shards[l + 1],
+                            clen,
+                        );
+                    }
+                    emit_spag_finish(ops, r, iter, l, &plans[l].spag, &spec.shards[l], clen);
+                } else {
+                    emit_spag_begin(ops, r, iter, l, &plans[l].spag, &spec.shards[l], clen);
+                    emit_spag_finish(ops, r, iter, l, &plans[l].spag, &spec.shards[l], clen);
+                    emit_allgather(ops, r, nd, iter, MsgKind::Gate, l, |q| {
+                        Some(gate_cnt(q) * gate_rec)
+                    });
+                }
+                if !last_layer {
+                    emit_allgather(ops, r, nd, iter, MsgKind::Combine, l, |_| None);
+                } else if nl > 1 {
+                    emit_allgather(ops, r, nd, iter, MsgKind::GradX, l, |_| None);
+                }
+            }
+            // ---- backward sweep ----
+            for l in (0..nl).rev() {
+                if l + 1 < nl && l > 0 {
+                    emit_allgather(ops, r, nd, iter, MsgKind::GradX, l, |_| None);
+                }
+                emit_sprs_begin(ops, r, iter, l, &plans[l].sprs, clen);
+                if spec.overlap {
+                    if l + 1 < nl {
+                        emit_sprs_finish(ops, r, iter, l + 1, &plans[l + 1].sprs, clen);
+                    }
+                } else {
+                    emit_sprs_finish(ops, r, iter, l, &plans[l].sprs, clen);
+                }
+            }
+            if spec.overlap {
+                emit_sprs_finish(ops, r, iter, 0, &plans[0].sprs, clen);
+            }
+        }
+
+        // Every layer observes this iteration's realized loads before the
+        // next iteration's plans exist (rank_main observes during the
+        // forward sweep; next-iteration plans are built strictly after).
+        for (l, p) in predictors.iter_mut().enumerate() {
+            anyhow::ensure!(
+                realized[k][l].len() == spec.dims.experts,
+                "realized loads of iter {iter} layer {l} have the wrong arity"
+            );
+            p.observe(&realized[k][l]);
+        }
+        plans_by_iter.push(plans);
+    }
+    Ok(SpanModel { ranks, plans: plans_by_iter })
+}
+
+/// The `debug_assertions` drift guard: re-extract the span's predicted
+/// multiset from the *recorded* realized loads and compare it per rank
+/// against the communicator's audit log — counts per `(direction, peer,
+/// tag)` always, payload lengths wherever the model knows them.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn verify_span_traffic(
+    spec: &SpanSpec<'_>,
+    predictors: &mut [LoadPredictor],
+    realized: &[Vec<Vec<f64>>],
+    audits: &[Vec<AuditEvent>],
+) -> anyhow::Result<()> {
+    use std::collections::BTreeMap;
+    let model = extract_span(spec, predictors, realized)?;
+    anyhow::ensure!(
+        audits.len() == model.ranks.len(),
+        "audit logs from {} ranks, model has {}",
+        audits.len(),
+        model.ranks.len()
+    );
+    let mut diffs: Vec<String> = Vec::new();
+    for (r, (ops, audit)) in model.ranks.iter().zip(audits).enumerate() {
+        // (is_send, peer, tag) → (count, expected floats if size-checked)
+        let mut want: BTreeMap<(bool, usize, Tag), (usize, Option<usize>)> = BTreeMap::new();
+        for op in ops {
+            let (send, peer) = match op.kind {
+                OpKind::Send { dst } => (true, dst),
+                OpKind::Recv { src } => (false, src),
+            };
+            let e = want.entry((send, peer, op.tag)).or_insert((0, op.floats));
+            e.0 += 1;
+        }
+        let mut got: BTreeMap<(bool, usize, Tag), (usize, usize)> = BTreeMap::new();
+        for ev in audit {
+            let e = got.entry((ev.send, ev.peer, ev.tag)).or_insert((0, ev.floats));
+            e.0 += 1;
+        }
+        for (key, (n, floats)) in &want {
+            let (dir, peer) = (if key.0 { "send to" } else { "recv from" }, key.1);
+            match got.get(key) {
+                None => diffs.push(format!(
+                    "rank {r}: predicted {dir} rank {peer} {:?} ({n}×) never happened",
+                    key.2
+                )),
+                Some((m, len)) => {
+                    if m != n {
+                        diffs.push(format!(
+                            "rank {r}: {dir} rank {peer} {:?} happened {m}×, predicted {n}×",
+                            key.2
+                        ));
+                    }
+                    if let Some(f) = floats {
+                        if len != f {
+                            diffs.push(format!(
+                                "rank {r}: {dir} rank {peer} {:?} carried {len} floats, \
+                                 predicted {f}",
+                                key.2
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        for (key, (m, _)) in &got {
+            if !want.contains_key(key) {
+                let (dir, peer) = (if key.0 { "send to" } else { "recv from" }, key.1);
+                diffs.push(format!(
+                    "rank {r}: unpredicted {dir} rank {peer} {:?} ({m}×)",
+                    key.2
+                ));
+            }
+        }
+    }
+    if !diffs.is_empty() {
+        diffs.truncate(12);
+        anyhow::bail!(
+            "SPMD traffic diverged from the static schedule model:\n  {}",
+            diffs.join("\n  ")
+        );
+    }
+    Ok(())
+}

@@ -335,7 +335,11 @@ pub fn load(dir: &Path) -> anyhow::Result<(TrainState, SavedTopo)> {
             "{file}: content does not match manifest checksum"
         );
         let decoded = shard::decode_rank(&bytes, chunk_len, num_layers)?;
-        anyhow::ensure!(decoded.rank == r, "{file}: blob is for rank {}, expected {r}", decoded.rank);
+        anyhow::ensure!(
+            decoded.rank == r,
+            "{file}: blob is for rank {}, expected {r}",
+            decoded.rank
+        );
         for (l, layer) in decoded.layers.into_iter().enumerate() {
             for (e, st) in layer {
                 anyhow::ensure!(e < num_experts, "{file}: layer {l} expert id {e} out of range");

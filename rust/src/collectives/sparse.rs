@@ -107,7 +107,11 @@ impl SparsePlan {
 ///    prefer one on the least-used NIC so far);
 /// 2. **stage 1** — intra-node fan-out from the node's (new or existing)
 ///    holder to the remaining destination devices.
-pub fn build_spag(topo: &Topology, pre: &Placement, post: &Placement) -> anyhow::Result<SparsePlan> {
+pub fn build_spag(
+    topo: &Topology,
+    pre: &Placement,
+    post: &Placement,
+) -> anyhow::Result<SparsePlan> {
     validate_spag(pre, post)?;
     let mut transfers = Vec::new();
     let mut nic_out_load: BTreeMap<usize, usize> = BTreeMap::new();
@@ -170,7 +174,11 @@ pub fn build_spag(topo: &Topology, pre: &Placement, post: &Placement) -> anyhow:
 ///    to one node leader (the owner itself if local, else the lowest id);
 /// 2. **stage 1** — each node leader sends its partial sum to the owner,
 ///    which accumulates.
-pub fn build_sprs(topo: &Topology, pre: &Placement, post: &Placement) -> anyhow::Result<SparsePlan> {
+pub fn build_sprs(
+    topo: &Topology,
+    pre: &Placement,
+    post: &Placement,
+) -> anyhow::Result<SparsePlan> {
     validate_sprs(pre, post)?;
     let mut transfers = Vec::new();
     let mut num_stages = 0;

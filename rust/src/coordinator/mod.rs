@@ -23,6 +23,10 @@
 //! hecate resume     --dir DIR [--devices M --iters K]          (elastic resume demo)
 //! hecate trace analyze DIR                    (critical path / overlap / stragglers)
 //! hecate metrics report DIR                   (peak memory / predictor accuracy / imbalance)
+//! hecate analyze schedule [--devices N --nodes N --racks R --layers L --iters K]
+//!                  [--reshard-every K] [--transport inproc|socket] [--overlap BOOL]
+//!                  [--inject drop-recv|swap-barrier|oversize-frame|double-own]
+//!                  (static deadlock/match/wire/resource verification, no execution)
 //! hecate bench spmd [--iters N --quick] [--transport socket]   (thread scaling + overlap)
 //! hecate bench step [--iters N --quick --json --compute-threads T]  (per-phase step times)
 //!                  [--check [--gate-tol F]]   (CI perf gate vs committed baseline)
@@ -62,6 +66,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "resume" => cmd_resume(&args),
         "trace" => cmd_trace(&args),
         "metrics" => cmd_metrics(&args),
+        "analyze" => cmd_analyze(&args),
         "bench" => cmd_bench(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -99,6 +104,11 @@ fn print_usage() {
          hecate resume     --dir DIR [--nodes N --devices M --iters K]\n  \
          hecate trace analyze DIR   (critical path, overlap efficiency, straggler report)\n  \
          hecate metrics report DIR   (peak-memory, predictor-accuracy, imbalance tables)\n  \
+         hecate analyze schedule [--devices N] [--nodes N] [--racks R] [--layers L]\n                  \
+         [--iters K] [--reshard-every K] [--transport inproc|socket] [--overlap BOOL]\n                  \
+         [--inject drop-recv|swap-barrier|oversize-frame|double-own]\n                  \
+         (static schedule verification: match completeness, deadlock freedom,\n                  \
+         wire safety, resource discipline — nonzero exit on any violation)\n  \
          hecate bench spmd [--iters N] [--quick] [--transport socket]   (thread scaling + overlap)\n  \
          hecate bench step [--iters N] [--quick] [--json] [--compute-threads T]\n                  \
          [--check [--gate-tol F]]   (per-phase step times; --json writes\n                  \
@@ -213,11 +223,16 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         let r = simulate_with_faults(&topo, &model, &sys_cfg, &train, &opts, &spec);
         println!("system     : {} (fault injection)", r.sim.system);
         println!("topology   : {}", topo.name);
+        let every = if spec.checkpoint_every == 0 {
+            "never".to_string()
+        } else {
+            spec.checkpoint_every.to_string()
+        };
         println!(
             "failure    : device {} at step {} (snapshot every {})",
             spec.fail_device % topo.num_devices().max(1),
             spec.fail_step,
-            if spec.checkpoint_every == 0 { "never".to_string() } else { spec.checkpoint_every.to_string() }
+            every
         );
         println!("iter time  : {:.2} ms", r.sim.iter_time * 1e3);
         let rec = &r.recovery;
@@ -635,6 +650,71 @@ fn cmd_metrics(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `hecate analyze schedule`: statically verify a configuration's SPMD
+/// communication schedule — replay plan building and resharding without
+/// executing a kernel, then check match completeness, deadlock freedom,
+/// wire safety, and resource discipline ([`crate::analysis`]). Exits
+/// nonzero with a rank/iter/layer/tag diagnostic on any violation;
+/// `--inject` seeds a deliberate violation to demonstrate the checks.
+fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&[
+        "devices", "nodes", "racks", "layers", "seed", "iters", "reshard-every", "transport",
+        "overlap", "inject",
+    ])?;
+    let action = args.positional.first().cloned().unwrap_or_default();
+    anyhow::ensure!(
+        action == "schedule",
+        "unknown analyze action `{action}` (usage: hecate analyze schedule [flags])"
+    );
+    // The same builder path as `hecate fssdp` validates the flags; the
+    // analyzer reads the resulting config, it never runs the engine.
+    let mut b = SessionConfig::builder()
+        .reference()
+        .cluster(args.usize_or("nodes", 2)?, args.usize_or("devices", 8)?)
+        .seed(args.usize_or("seed", 42)? as u64)
+        .parallel(true)
+        .overlap(args.bool_or("overlap", true)?);
+    if args.has("layers") {
+        b = b.layers(args.usize_or("layers", 1)?);
+    }
+    let reshard_every = args.usize_or("reshard-every", 0)?;
+    if args.has("reshard-every") {
+        b = b.reshard_every(reshard_every);
+    }
+    if args.has("racks") {
+        b = b.racks(args.usize_or("racks", 1)?);
+    }
+    if let Some(t) = args.str_opt("transport")? {
+        b = b.transport(fssdp::parse_transport(&t)?);
+    }
+    let cfg = b.build()?;
+    // Default window: past the first reshard boundary when resharding is
+    // on, so the partition-migration checks actually see a migration.
+    let iters = args.usize_or("iters", if reshard_every > 0 { reshard_every + 2 } else { 4 })?;
+    let inject = match args.str_opt("inject")? {
+        Some(s) => Some(crate::analysis::Injection::parse(&s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "--inject expects drop-recv|swap-barrier|oversize-frame|double-own, got `{s}`"
+            )
+        })?),
+        None => None,
+    };
+    let rep = crate::analysis::analyze_config(&cfg, iters, inject)?;
+    println!(
+        "schedule OK: {} ranks x {} layer(s), {} iteration(s) in {} span(s) \
+         ({} reshard(s), {} expert(s) moved)",
+        rep.ranks, rep.layers, rep.iters, rep.spans, rep.reshards, rep.experts_moved
+    );
+    println!(
+        "  {} sends / {} recvs modeled; largest known frame {} bytes (wire cap {})",
+        rep.sends,
+        rep.recvs,
+        rep.max_frame_bytes,
+        crate::spmd::transport::socket::MAX_FRAME_LEN
+    );
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1008,6 +1088,31 @@ mod tests {
         // the real binary); here we check dispatch + flag validation.
         let err = run(argv(&["worker", "--world", "4"])).unwrap_err().to_string();
         assert!(err.contains("missing required option --rank"), "{err}");
+    }
+
+    #[test]
+    fn analyze_schedule_smoke_and_validation() {
+        // a clean config verifies end to end through the CLI
+        run(argv(&[
+            "analyze", "schedule", "--devices", "4", "--nodes", "2", "--iters", "2",
+        ]))
+        .unwrap();
+        // a seeded violation surfaces as an error with its diagnostic
+        let err = run(argv(&[
+            "analyze", "schedule", "--devices", "4", "--nodes", "2", "--iters", "2",
+            "--inject", "drop-recv",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("orphan send"), "{err}");
+        // bad action, bad injection name, unknown flag
+        let err = run(argv(&["analyze", "verify"])).unwrap_err().to_string();
+        assert!(err.contains("unknown analyze action"), "{err}");
+        let err = run(argv(&["analyze", "schedule", "--inject", "gremlins"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("got `gremlins`"), "{err}");
+        assert!(run(argv(&["analyze", "schedule", "--bogus", "1"])).is_err());
     }
 
     #[test]

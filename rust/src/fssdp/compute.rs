@@ -805,7 +805,8 @@ mod tests {
     fn gate_produces_valid_top2() {
         // Mirrors the PJRT integration test `gate_fwd_produces_valid_top2`.
         let (t, dm, e) = (12, 8, 6);
-        let x = HostTensor::f32(vec![t, dm], (0..t * dm).map(|i| (i as f32 * 0.37).sin()).collect());
+        let x =
+            HostTensor::f32(vec![t, dm], (0..t * dm).map(|i| (i as f32 * 0.37).sin()).collect());
         let wg = HostTensor::f32(
             vec![dm, e],
             (0..dm * e).map(|i| (i as f32 * 0.11).cos() * 0.3).collect(),

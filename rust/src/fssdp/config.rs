@@ -9,6 +9,12 @@
 //! (asserted by the regression tests below), replacing the `ensure!`
 //! checks formerly scattered across `run_demo_with` and the coordinator.
 //!
+//! A validated [`SessionConfig`] is also the input to the static schedule
+//! verifier: `hecate analyze schedule` builds one with the same builder
+//! (mirroring the `fssdp` flags) and enumerates the SPMD communication
+//! plan it implies without running a kernel
+//! ([`crate::analysis::analyze_config`]).
+//!
 //! [`Session`]: crate::fssdp::Session
 
 use std::fmt;

@@ -365,7 +365,11 @@ pub(crate) fn realized_loads(experts: usize, gate_idx: &[Vec<i32>]) -> Vec<f64> 
 
 /// `assignments[src_device][expert]` — sources map round-robin onto
 /// devices (all on device 0 in the 1-device reference).
-pub(crate) fn assignment_matrix(nd: usize, experts: usize, gate_idx: &[Vec<i32>]) -> Vec<Vec<usize>> {
+pub(crate) fn assignment_matrix(
+    nd: usize,
+    experts: usize,
+    gate_idx: &[Vec<i32>],
+) -> Vec<Vec<usize>> {
     let mut asg = vec![vec![0usize; experts]; nd];
     for (s, idx) in gate_idx.iter().enumerate() {
         let dev = s % nd;
@@ -1057,7 +1061,8 @@ impl FssdpEngine {
         let nd = self.topo.num_devices();
         let dims = self.dims;
         let nl = self.layers.len();
-        let cons = MatConstraints { overlap_degree: self.overlap_degree, mem_slots: self.mem_slots };
+        let cons =
+            MatConstraints { overlap_degree: self.overlap_degree, mem_slots: self.mem_slots };
         let adam = self.adam;
         let threads = self.compute_threads;
         let use_threads = threads > 1 && matches!(self.compute, Compute::Reference(_));

@@ -45,6 +45,7 @@
     clippy::new_without_default
 )]
 
+pub mod analysis;
 pub mod bench;
 pub mod checkpoint;
 pub mod collectives;

@@ -328,8 +328,12 @@ mod tests {
     #[test]
     fn rank_correlation_known_answers() {
         // perfectly concordant / discordant orderings
-        assert!((rank_correlation(&[0.1, 0.2, 0.3, 0.4], &[1.0, 2.0, 3.0, 4.0]) - 1.0).abs() < 1e-12);
-        assert!((rank_correlation(&[0.1, 0.2, 0.3, 0.4], &[4.0, 3.0, 2.0, 1.0]) + 1.0).abs() < 1e-12);
+        assert!(
+            (rank_correlation(&[0.1, 0.2, 0.3, 0.4], &[1.0, 2.0, 3.0, 4.0]) - 1.0).abs() < 1e-12
+        );
+        assert!(
+            (rank_correlation(&[0.1, 0.2, 0.3, 0.4], &[4.0, 3.0, 2.0, 1.0]) + 1.0).abs() < 1e-12
+        );
         // constant side (uniform cold-start prediction) → defined as 0
         assert_eq!(rank_correlation(&[0.25; 4], &[0.1, 0.2, 0.3, 0.4]), 0.0);
         // hand-computed with one swap: ranks (1,2,3,4) vs (1,2,4,3)

@@ -413,7 +413,8 @@ mod tests {
             samples
                 .iter()
                 .find(|s| {
-                    s.name == "expert_load_bucket" && s.labels.get("le").map(String::as_str) == Some(le)
+                    s.name == "expert_load_bucket"
+                        && s.labels.get("le").map(String::as_str) == Some(le)
                 })
                 .unwrap()
                 .value

@@ -157,7 +157,11 @@ impl Runtime {
 
     /// Execute an entry with host tensors; returns the unpacked outputs.
     /// Inputs are validated against the manifest specs.
-    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[HostTensor],
+    ) -> anyhow::Result<Vec<HostTensor>> {
         self.compile(name)?;
         let entry = self.entry(name)?;
         anyhow::ensure!(

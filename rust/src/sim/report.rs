@@ -78,7 +78,8 @@ pub fn end_to_end(cluster: ClusterPreset, nodes: usize, dpn: usize, opts: &SimOp
     let gpus = topo.num_devices();
     // weak scaling: 32 experts at 16 GPUs, 64 at 32 (paper §5.2)
     let experts = if gpus <= 16 { 32 } else { 64 };
-    let mut t = Table::new(&["Model", "GPUs", "EP", "FasterMoE", "SmartMoE", "FlexMoE", "Hecate", "Hecate/best"]);
+    let cols = ["Model", "GPUs", "EP", "FasterMoE", "SmartMoE", "FlexMoE", "Hecate", "Hecate/best"];
+    let mut t = Table::new(&cols);
     for model in ModelConfig::all_paper_models() {
         let model = model.with_experts(experts);
         let train = TrainConfig { batch_per_device: paper_batch(&model), ..Default::default() };

@@ -91,6 +91,22 @@ pub struct Recv {
     pub tag: Tag,
 }
 
+/// One audited transfer through the endpoint, recorded when auditing is
+/// enabled ([`RankComm::enable_audit`]). Debug builds compare the audit
+/// log of every SPMD span against the static schedule model
+/// ([`crate::analysis`]) so the analyzer cannot drift from the executor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AuditEvent {
+    /// `true` for a send, `false` for a completed receive.
+    pub send: bool,
+    /// Destination rank of a send, source rank of a receive.
+    pub peer: usize,
+    /// Matching tag on the wire.
+    pub tag: Tag,
+    /// Payload length in `f32` elements.
+    pub floats: usize,
+}
+
 /// Free-list of message payload buffers, per rank endpoint. Senders draw
 /// staging copies from it ([`RankComm::isend_slice`]) and receivers return
 /// consumed payloads ([`RankComm::recycle`]); since every rank both sends
@@ -120,6 +136,9 @@ pub struct RankComm {
     /// because sends happen under shared borrows; the endpoint is owned by
     /// one rank thread, so there is no contention.
     tracer: RefCell<Option<TraceRecorder>>,
+    /// Traffic audit log (None when auditing is off). Same `RefCell`
+    /// rationale as the tracer.
+    audit: RefCell<Option<Vec<AuditEvent>>>,
 }
 
 /// Build the full n×n in-process mailbox fabric; element `r` is rank
@@ -146,6 +165,7 @@ impl RankComm {
             barrier_seq: 0,
             pool: RefCell::new(PayloadPool::default()),
             tracer: RefCell::new(None),
+            audit: RefCell::new(None),
         }
     }
 
@@ -175,6 +195,23 @@ impl RankComm {
     /// the engine's timeline).
     pub fn take_tracer(&self) -> Option<TraceRecorder> {
         self.tracer.borrow_mut().take()
+    }
+
+    /// Start recording every send and completed receive into an audit log
+    /// (the debug-build schedule cross-check turns this on at span entry).
+    pub fn enable_audit(&self) {
+        *self.audit.borrow_mut() = Some(Vec::new());
+    }
+
+    /// Remove and return the audit log (empty when auditing was off).
+    pub fn take_audit(&self) -> Vec<AuditEvent> {
+        self.audit.borrow_mut().take().unwrap_or_default()
+    }
+
+    fn audit_event(&self, send: bool, peer: usize, tag: Tag, floats: usize) {
+        if let Some(log) = self.audit.borrow_mut().as_mut() {
+            log.push(AuditEvent { send, peer, tag, floats });
+        }
     }
 
     /// Record a rank-level span through the endpoint's recorder — the one
@@ -250,6 +287,7 @@ impl RankComm {
     /// buffer recycles into the payload free list.
     pub fn isend(&self, dst: usize, tag: Tag, data: Vec<f32>) -> Result<(), CommError> {
         self.trace_send(tag, data.len() as u64 * 4);
+        self.audit_event(true, dst, tag, data.len());
         if let Some(buf) = self.transport.send(dst, tag, data)? {
             self.recycle(buf);
         }
@@ -311,11 +349,13 @@ impl RankComm {
     pub fn wait(&mut self, r: Recv) -> Result<Vec<f32>, CommError> {
         if let Some(i) = self.stash[r.src].iter().position(|e| e.tag == r.tag) {
             let env = self.stash[r.src].remove(i).expect("index valid");
+            self.audit_event(false, r.src, r.tag, env.data.len());
             return Ok(self.deliver(env));
         }
         loop {
             let env = self.transport.recv_next(r.src).map_err(|e| e.with_tag(r.tag))?;
             if env.tag == r.tag {
+                self.audit_event(false, r.src, r.tag, env.data.len());
                 return Ok(self.deliver(env));
             }
             self.stash[r.src].push_back(env);
@@ -345,6 +385,7 @@ impl RankComm {
                 }
             }
             let env = self.stash[r.src].remove(i).expect("index valid");
+            self.audit_event(false, r.src, r.tag, env.data.len());
             self.trace_delivery(env.tag, env.data.len() as u64 * 4, env.wire_us);
             return Ok(Some(env.data));
         }
@@ -473,6 +514,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "wall-clock polling loop is too slow under the interpreter")]
     fn try_wait_polls_without_blocking() {
         let mut comms = fabric(2, None);
         let mut c1 = comms.remove(1);
@@ -551,6 +593,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "wall-clock pacing timing is meaningless under the interpreter")]
     fn pacing_serializes_contended_link() {
         // 1 kB at 10 kB/s = 100 ms per message. Two messages into the same
         // destination port must serialize: the second completes ≥ ~200 ms
@@ -574,6 +617,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "wall-clock pacing timing is meaningless under the interpreter")]
     fn tracer_records_sends_deliveries_and_pacing() {
         // 1 kB at 10 kB/s: ~100 ms on the wire. The sender logs a
         // send_chunk, the receiver a pacing_wait (it blocked) and a
@@ -604,6 +648,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "wall-clock pacing timing is meaningless under the interpreter")]
     fn pacing_uncontended_is_single_transfer_time() {
         let pacing = Pacing::uniform(10_000.0, 0.0);
         let mut comms = fabric(2, Some(pacing));
@@ -619,6 +664,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "socket syscalls are unsupported under the interpreter")]
     fn fallback_barrier_synchronizes_socket_ranks() {
         // The socket backend has no native barrier: the all-to-all
         // Barrier-message round must still hold every rank until all
@@ -644,5 +690,86 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "socket syscalls are unsupported under the interpreter")]
+    fn fallback_barrier_times_out_when_a_peer_never_enters() {
+        // A silent (but alive) peer must surface as CommError::Timeout
+        // from the barrier's receive phase — never a hang.
+        use super::super::transport::socket;
+        let mut comms = socket::local_fabric(2, Some(Duration::from_millis(50))).unwrap();
+        let _c1 = comms.remove(1); // alive, never enters the barrier
+        let mut c0 = comms.remove(0);
+        let err = c0.barrier().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("timed out"), "{msg}");
+        assert!(msg.contains("Barrier"), "awaited tag context: {msg}");
+        assert!(CommError::is_peer_loss_msg(&msg), "{msg}");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "socket syscalls are unsupported under the interpreter")]
+    fn fallback_barrier_errors_when_a_peer_exits() {
+        // A peer that exits mid-barrier surfaces as a typed peer-loss
+        // error (closed link, or a timeout if the exit raced the send).
+        use super::super::transport::socket;
+        let mut comms = socket::local_fabric(2, Some(Duration::from_millis(200))).unwrap();
+        drop(comms.remove(1)); // rank 1's "process" exits
+        let mut c0 = comms.remove(0);
+        let err = c0.barrier().unwrap_err();
+        let msg = err.to_string();
+        assert!(CommError::is_peer_loss_msg(&msg), "{msg}");
+    }
+
+    #[test]
+    fn audit_log_records_sends_and_completed_receives() {
+        // The debug-build schedule cross-check consumes this log; it must
+        // see every send and every completed receive — through the direct
+        // wait path, the stash path, and the try_wait path alike.
+        let mut comms = fabric(2, None);
+        let mut c1 = comms.remove(1);
+        let c0 = comms.remove(0);
+        c0.enable_audit();
+        c1.enable_audit();
+        let sender = thread::spawn(move || {
+            c0.isend(1, tag(0, 7), vec![7.0]).unwrap(); // stashed by the tag(0,3) wait
+            c0.isend(1, tag(0, 3), vec![3.0, 3.5]).unwrap();
+            c0.isend(1, tag(0, 9), vec![9.0]).unwrap();
+            c0
+        });
+        assert_eq!(c1.recv(0, tag(0, 3)).unwrap(), vec![3.0, 3.5]); // loop-match path
+        assert_eq!(c1.recv(0, tag(0, 7)).unwrap(), vec![7.0]); // stash path
+        let r = c1.irecv(0, tag(0, 9));
+        let mut got = None;
+        for _ in 0..1000 {
+            got = c1.try_wait(r).unwrap();
+            if got.is_some() {
+                break;
+            }
+            thread::sleep(Duration::from_micros(50));
+        }
+        assert_eq!(got, Some(vec![9.0])); // try_wait path
+        let c0 = sender.join().unwrap();
+        let sends = c0.take_audit();
+        assert_eq!(
+            sends,
+            vec![
+                AuditEvent { send: true, peer: 1, tag: tag(0, 7), floats: 1 },
+                AuditEvent { send: true, peer: 1, tag: tag(0, 3), floats: 2 },
+                AuditEvent { send: true, peer: 1, tag: tag(0, 9), floats: 1 },
+            ]
+        );
+        let recvs = c1.take_audit();
+        assert_eq!(
+            recvs,
+            vec![
+                AuditEvent { send: false, peer: 0, tag: tag(0, 3), floats: 2 },
+                AuditEvent { send: false, peer: 0, tag: tag(0, 7), floats: 1 },
+                AuditEvent { send: false, peer: 0, tag: tag(0, 9), floats: 1 },
+            ]
+        );
+        // auditing is one-shot: the log is gone until re-enabled
+        assert!(c1.take_audit().is_empty());
     }
 }

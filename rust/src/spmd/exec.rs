@@ -35,6 +35,13 @@
 //!   polls all outstanding receives, forwarding fan-out sends as chunks
 //!   land, so a rank stalled on a late chunk still serves its own
 //!   forwarding duties. See `DESIGN.md` (SPMD executor).
+//!
+//! Both properties are *checked statically*: `crate::analysis::model`
+//! replays the staged send/receive structure above symbolically (same
+//! tags, same stage order, zero kernels) and `hecate analyze schedule`
+//! proves match-completeness and wait-graph acyclicity over it; debug
+//! builds additionally assert each run's audited traffic equals the
+//! model's multiset (`analysis::model::verify_span_traffic`).
 
 use std::collections::BTreeSet;
 use std::time::{Duration, Instant};

@@ -82,7 +82,7 @@ use crate::placement::Placement;
 use crate::telemetry::{Phase as TracePhase, TraceRecorder};
 use crate::topology::{DeviceId, Topology};
 
-use comm::{MsgKind, RankComm};
+use comm::{AuditEvent, MsgKind, RankComm};
 use exec::{RankSpag, RankSprs};
 use sched::{order_resident_first, Overlap};
 use transport::{CommError, TransportKind};
@@ -144,6 +144,12 @@ struct RankOut {
     tracer: Option<TraceRecorder>,
     /// This rank's memory/load samples (None when metering is off).
     meter: Option<StepMeter>,
+    /// Communicator audit log (debug builds only; empty in release). Fed
+    /// to the static schedule model's drift cross-check.
+    audit: Vec<AuditEvent>,
+    /// Realized load fractions `[iter][layer]` (rank 0 only; empty
+    /// elsewhere). The drift cross-check replays plan building from them.
+    realized: Vec<Vec<Vec<f64>>>,
 }
 
 /// Clone one rank's per-layer state slice out of the engine: its device's
@@ -207,12 +213,22 @@ pub fn run_span(
     let gate_w_v: Vec<Vec<f32>> = engine.layers.iter().map(|ls| ls.gate_w.clone()).collect();
     let dims = engine.dims;
     let adam = engine.adam;
-    let cons = MatConstraints { overlap_degree: engine.overlap_degree, mem_slots: engine.mem_slots };
+    let cons =
+        MatConstraints { overlap_degree: engine.overlap_degree, mem_slots: engine.mem_slots };
 
     // Rank threads get *copies* of the device memories and optimizer
     // states, not the originals: if any rank fails, the engine keeps its
     // pre-span state intact (a span either commits whole or not at all).
     // One parameter-set copy per span is noise next to a span of steps.
+    // Debug builds cross-check the span's actual traffic against the
+    // static schedule model (`crate::analysis`); that replay needs the
+    // predictor state as of span entry.
+    let predictors_snapshot: Option<Vec<LoadPredictor>> = if cfg!(debug_assertions) {
+        Some(engine.layers.iter().map(|ls| ls.predictor.clone()).collect())
+    } else {
+        None
+    };
+
     let rank_layers: Vec<Vec<RankLayerState>> =
         (0..nd).map(|r| split_rank_state(engine, r)).collect::<anyhow::Result<_>>()?;
     let comms = match engine.transport {
@@ -304,10 +320,17 @@ pub fn run_span(
     let mut stats = vec![EngineStats::default(); iters];
     let mut devices_by_layer: Vec<Vec<ChunkStore>> =
         (0..nl).map(|_| Vec::with_capacity(nd)).collect();
-    let mut opt_by_layer: Vec<BTreeMap<usize, AdamState>> = (0..nl).map(|_| BTreeMap::new()).collect();
+    let mut opt_by_layer: Vec<BTreeMap<usize, AdamState>> =
+        (0..nl).map(|_| BTreeMap::new()).collect();
     let mut merged = Metrics::new();
+    let mut audits: Vec<Vec<AuditEvent>> = Vec::with_capacity(nd);
+    let mut realized0: Vec<Vec<Vec<f64>>> = Vec::new();
     for (r, out) in outs.into_iter().enumerate() {
-        let RankOut { layers, metrics, loss, global, tracer, meter } = out;
+        let RankOut { layers, metrics, loss, global, tracer, meter, audit, realized } = out;
+        audits.push(audit);
+        if r == 0 {
+            realized0 = realized;
+        }
         if let Some(rank_tl) = tracer {
             if let Some(main) = &mut engine.tracer {
                 main.absorb(rank_tl);
@@ -347,6 +370,24 @@ pub fn run_span(
         engine.layers[l].opt = opt;
     }
     engine.spmd_metrics = Some(merged);
+
+    // Drift guard (debug builds): the communicator audit logs must carry
+    // exactly the multiset of tagged transfers the static schedule model
+    // predicts from this span's inputs — if the executor and the analyzer
+    // ever disagree, every debug-build SPMD test fails loudly here.
+    if let Some(mut preds) = predictors_snapshot {
+        let spec = crate::analysis::model::SpanSpec {
+            topo: &topo,
+            dims,
+            shards: &shards_v,
+            cons,
+            sources,
+            start,
+            iters,
+            overlap,
+        };
+        crate::analysis::model::verify_span_traffic(&spec, &mut preds, &realized0, &audits)?;
+    }
     Ok(stats)
 }
 
@@ -474,6 +515,12 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
     let nl = layers.len();
     let mut compute = Compute::Reference(Reference);
     let mut ov = Overlap::new(overlap);
+    // Debug builds audit every transfer and (on rank 0) record the
+    // realized loads, feeding the schedule model's drift cross-check.
+    if cfg!(debug_assertions) {
+        comm.enable_audit();
+    }
+    let mut realized_log: Vec<Vec<Vec<f64>>> = Vec::new();
     let mut metrics = Metrics::new();
     let mut meter = meter_epoch.map(|epoch| StepMeter::with_epoch(epoch, me as u32));
     let mut losses: Vec<f64> = Vec::with_capacity(iters);
@@ -488,6 +535,9 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
     for k in 0..iters {
         let iter = start + k as u64;
         let last_iter = k + 1 == iters;
+        if me == 0 && cfg!(debug_assertions) {
+            realized_log.push(Vec::with_capacity(nl));
+        }
 
         // ---- plans (replicated): per layer, predict → Algorithm 1 ----
         let t0 = Instant::now();
@@ -609,6 +659,9 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
                 }
             }
             layers[l].predictor.observe(&realized);
+            if me == 0 && cfg!(debug_assertions) {
+                realized_log.last_mut().expect("one entry per iteration").push(realized);
+            }
 
             // ---- §4.3 cross-layer pipeline: issue layer l+1's spAG
             //      sends now, so its materialization hides under this
@@ -926,7 +979,16 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
     metrics.set("spmd.payload_reused", hits as f64);
     metrics.set("spmd.payload_alloc", misses as f64);
 
-    Ok(RankOut { layers, metrics, loss: losses, global, tracer: comm.take_tracer(), meter })
+    Ok(RankOut {
+        layers,
+        metrics,
+        loss: losses,
+        global,
+        tracer: comm.take_tracer(),
+        meter,
+        audit: comm.take_audit(),
+        realized: realized_log,
+    })
 }
 
 #[cfg(test)]

@@ -26,6 +26,14 @@
 //! gradient accumulation order is fixed by the route map, spAG only
 //! copies, and spRS receives stay in plan order.
 //!
+//! Communication-wise the eager issue is *multiset-neutral*: it sends the
+//! same `(iter+1, layer)`-tagged transfers that [`RankSpag::begin`] would
+//! send at iteration `i+1`'s start, just earlier, and `next_plans` is
+//! `None` on a span's last iteration, so no message escapes the span.
+//! That is what lets the static schedule verifier (`crate::analysis`)
+//! model each iteration's sends at begin time and still match debug-build
+//! audits exactly.
+//!
 //! [`RankSpag`]: crate::spmd::exec::RankSpag
 
 use std::collections::BTreeSet;

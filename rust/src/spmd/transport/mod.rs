@@ -27,6 +27,12 @@
 //! Failures surface as typed [`CommError`]s carrying the rank, peer, and
 //! (where known) the tag being waited on, so a dead worker process reports
 //! *which* link broke instead of hanging the fabric.
+//!
+//! The static schedule verifier (`crate::analysis`, `hecate analyze
+//! schedule`) leans on the same contract: its deadlock and matching
+//! analysis pairs sends with receives per `(src, dst, tag)` in FIFO
+//! order, which is sound only because guarantee 1 holds on every backend
+//! (both test suites pin it with interleaved-tag FIFO tests).
 
 use std::time::Duration;
 

@@ -680,6 +680,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "Miri cannot emulate socket syscalls")]
     fn two_rank_mesh_moves_tagged_payloads_both_ways() {
         let mut comms = local_fabric(2, None).unwrap();
         let mut c1 = comms.remove(1);
@@ -696,6 +697,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "Miri cannot emulate socket syscalls")]
     fn recv_timeout_fires_instead_of_hanging() {
         let mut comms = local_fabric(2, Some(Duration::from_millis(50))).unwrap();
         let mut c1 = comms.remove(1);
@@ -705,11 +707,53 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "Miri cannot emulate socket syscalls")]
     fn dropped_peer_process_surfaces_as_closed_link() {
         let mut comms = local_fabric(2, None).unwrap();
         let mut c1 = comms.remove(1);
         drop(comms.remove(0)); // rank 0 "process" exits
         let err = c1.recv(0, tag(0, 0)).unwrap_err();
         assert!(err.to_string().contains("closed"), "{err}");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "Miri cannot emulate socket syscalls")]
+    fn socket_fifo_order_holds_under_interleaved_tags() {
+        // Same FIFO contract the static schedule verifier relies on, but
+        // over a real stream socket: the per-link reader thread must hand
+        // frames to the mailbox in wire order even when tags interleave.
+        // Build raw endpoints (no RankComm) so delivery order is visible.
+        let dir = std::env::temp_dir().join(format!("hecate-fifo-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let paths: Vec<String> =
+            (0..2).map(|r| format!("unix:{}", dir.join(format!("sock-{r}")).display())).collect();
+        let listeners: Vec<_> =
+            paths.iter().enumerate().map(|(r, p)| bind(r, p).unwrap()).collect();
+        let mut endpoints: Vec<SocketTransport> = Vec::new();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (me, listener) in listeners.into_iter().enumerate() {
+                let paths = &paths;
+                handles.push(scope.spawn(move || {
+                    mesh_connect(me, listener, paths, None, DEFAULT_CONNECT_TIMEOUT).unwrap()
+                }));
+            }
+            for h in handles {
+                endpoints.push(h.join().unwrap());
+            }
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut t1 = endpoints.remove(1);
+        let t0 = endpoints.remove(0);
+        let order = [3usize, 0, 2, 0, 3, 1];
+        for (i, &a) in order.iter().enumerate() {
+            t0.send(1, tag(5, a), vec![i as f32]).unwrap();
+        }
+        for (i, &a) in order.iter().enumerate() {
+            let env = t1.recv_next(0).unwrap();
+            assert_eq!(env.tag, tag(5, a), "frame {i} out of order");
+            assert_eq!(env.data, vec![i as f32]);
+        }
+        assert!(t1.try_recv_next(0).unwrap().is_none());
     }
 }

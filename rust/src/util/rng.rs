@@ -24,7 +24,8 @@ impl Rng {
     /// Seed the generator. Equal seeds produce equal streams.
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
-        Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
+        let mut word = || splitmix64(&mut sm);
+        Rng { s: [word(), word(), word(), word()] }
     }
 
     /// Derive an independent child stream (for per-layer / per-device rngs).

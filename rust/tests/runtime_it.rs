@@ -18,8 +18,9 @@ fn manifest_lists_engine_entries() {
         return;
     }
     let rt = Runtime::open("artifacts").unwrap();
-    for required in ["gate_fwd", "expert_ffn_fwd", "expert_ffn_bwd", "tiny_init", "tiny_train_step"] {
-        assert!(rt.entry(required).is_ok(), "missing entry {required}");
+    let required = ["gate_fwd", "expert_ffn_fwd", "expert_ffn_bwd", "tiny_init", "tiny_train_step"];
+    for entry in required {
+        assert!(rt.entry(entry).is_ok(), "missing entry {entry}");
     }
 }
 
@@ -65,7 +66,9 @@ fn expert_ffn_bwd_matches_finite_difference() {
     let e = rt.entry("expert_ffn_fwd").unwrap().clone();
     let (cap, dm) = (e.inputs[0].shape[0], e.inputs[0].shape[1]);
     let dff = e.inputs[1].shape[1];
-    let mk = |n: usize, f: f32| -> Vec<f32> { (0..n).map(|i| ((i as f32) * f).sin() * 0.1).collect() };
+    let mk = |n: usize, f: f32| -> Vec<f32> {
+        (0..n).map(|i| ((i as f32) * f).sin() * 0.1).collect()
+    };
     let x = HostTensor::f32(vec![cap, dm], mk(cap * dm, 0.13));
     let w1 = HostTensor::f32(vec![dm, dff], mk(dm * dff, 0.07));
     let b1 = HostTensor::f32(vec![dff], mk(dff, 0.19));
