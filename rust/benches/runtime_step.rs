@@ -8,7 +8,7 @@
 //! `cargo bench --bench runtime_step [-- --quick] [filter]`
 
 use hecate::bench::Bench;
-use hecate::fssdp::{LayerDims, Session, SessionConfig};
+use hecate::fssdp::{ComputeMode, LayerDims, Session, SessionConfig};
 use hecate::runtime::{HostTensor, Runtime};
 use hecate::topology::Topology;
 
@@ -18,7 +18,7 @@ fn main() {
     // ---- hermetic: the reference-backend step (no artifacts needed) ----
     b.section("reference engine step (8 devices x 3 layers, hermetic)");
     let dims = LayerDims { tokens: 64, d_model: 48, d_ffn: 96, experts: 8, cap: 32 };
-    let reference_session = |threads: usize| {
+    let hermetic_session = |threads: usize, mode: ComputeMode| {
         Session::fresh(
             SessionConfig::builder()
                 .reference()
@@ -28,20 +28,31 @@ fn main() {
                 .seed(5)
                 .data_shards(8)
                 .compute_threads(threads)
+                .compute_mode(mode)
                 .build()
                 .unwrap(),
         )
         .unwrap()
     };
-    let mut seq = reference_session(1);
+    let mut seq = hermetic_session(1, ComputeMode::Reference);
     seq.run(1).unwrap(); // warm the workspace and pool
     b.run("reference_step_8dev_3layer", || {
         seq.run(1).unwrap();
     });
-    let mut thr = reference_session(4);
+    let mut thr = hermetic_session(4, ComputeMode::Reference);
     thr.run(1).unwrap();
     b.run("reference_step_8dev_3layer_threads4", || {
         thr.run(1).unwrap();
+    });
+    let mut fast = hermetic_session(1, ComputeMode::Fast);
+    fast.run(1).unwrap();
+    b.run("fast_step_8dev_3layer", || {
+        fast.run(1).unwrap();
+    });
+    let mut fast_thr = hermetic_session(4, ComputeMode::Fast);
+    fast_thr.run(1).unwrap();
+    b.run("fast_step_8dev_3layer_threads4", || {
+        fast_thr.run(1).unwrap();
     });
 
     if !std::path::Path::new("artifacts/manifest.json").exists() {

@@ -14,7 +14,8 @@
 //!                  [--racks R] [--pacing-topo SCALE]           (tiered topology + pacing)
 //!                  [--transport inproc|socket] [--recv-timeout S]   (SPMD rank transport)
 //!                  [--verify-inproc] [--worker-dir DIR]        (socket launcher extras)
-//!                  [--compute-threads T]       (sequential executor: threaded expert loops)
+//!                  [--compute-threads T]       (threaded expert loops, both executors)
+//!                  [--compute-mode ref|fast]   (bitwise oracle vs fast-math kernels)
 //!                  [--trace-out DIR]           (per-rank Chrome trace + JSONL events)
 //!                  [--metrics-out DIR]         (memory ledger + load observatory export)
 //! hecate worker    --rank R --world N --listen ADDR --peers A0,..,AN-1 --out FILE
@@ -28,7 +29,9 @@
 //!                  [--inject drop-recv|swap-barrier|oversize-frame|double-own]
 //!                  (static deadlock/match/wire/resource verification, no execution)
 //! hecate bench spmd [--iters N --quick] [--transport socket]   (thread scaling + overlap)
+//!                  [--compute-mode ref|fast] [--compute-threads T]   (kernel tier + pool)
 //! hecate bench step [--iters N --quick --json --compute-threads T]  (per-phase step times)
+//!                  [--compute-mode ref|fast]   (tier to gate on; default fast)
 //!                  [--check [--gate-tol F]]   (CI perf gate vs committed baseline)
 //! ```
 //!
@@ -95,7 +98,8 @@ fn print_usage() {
          [--racks R] [--pacing-topo SCALE]   (rack tier + topology-derived pacing)\n                  \
          [--transport inproc|socket] [--recv-timeout S]   (SPMD rank transport)\n                  \
          [--verify-inproc] [--worker-dir DIR]   (socket: bit-compare vs in-proc, keep logs)\n                  \
-         [--compute-threads T]   (sequential executor: threaded expert loops, bit-identical)\n                  \
+         [--compute-threads T]   (threaded expert loops, both executors; Reference stays bit-identical)\n                  \
+         [--compute-mode ref|fast]   (bitwise oracle vs fast-math kernels)\n                  \
          [--trace-out DIR]   (write per-rank Chrome trace + JSONL events to DIR)\n                  \
          [--metrics-out DIR]   (write the memory ledger + load observatory to DIR)\n  \
          hecate worker   --rank R --world N --listen ADDR --peers A0,..,AN-1 --out FILE\n                  \
@@ -109,10 +113,12 @@ fn print_usage() {
          [--inject drop-recv|swap-barrier|oversize-frame|double-own]\n                  \
          (static schedule verification: match completeness, deadlock freedom,\n                  \
          wire safety, resource discipline — nonzero exit on any violation)\n  \
-         hecate bench spmd [--iters N] [--quick] [--transport socket]   (thread scaling + overlap)\n  \
+         hecate bench spmd [--iters N] [--quick] [--transport socket]\n                  \
+         [--compute-mode ref|fast] [--compute-threads T]   (thread scaling + overlap)\n  \
          hecate bench step [--iters N] [--quick] [--json] [--compute-threads T]\n                  \
-         [--check [--gate-tol F]]   (per-phase step times; --json writes\n                  \
-         BENCH_runtime_step.json; --check gates on the committed baseline)"
+         [--compute-mode ref|fast] [--check [--gate-tol F]]   (per-phase step times;\n                  \
+         --json writes BENCH_runtime_step.json with the Fast-vs-Reference speedup\n                  \
+         and divergence bound; --check gates on the committed baseline)"
     );
 }
 
@@ -303,7 +309,7 @@ fn cmd_fssdp(args: &Args) -> anyhow::Result<()> {
         "devices", "iters", "artifacts", "nodes", "racks", "seed", "layers", "reshard-every",
         "checkpoint-every", "checkpoint-dir", "resume", "reference", "parallel", "threads",
         "pacing", "pacing-topo", "transport", "recv-timeout", "verify-inproc", "worker-dir",
-        "compute-threads", "trace-out", "metrics-out",
+        "compute-threads", "compute-mode", "trace-out", "metrics-out",
     ])?;
     let mut b = SessionConfig::builder()
         .cluster(args.usize_or("nodes", 2)?, args.usize_or("devices", 8)?)
@@ -320,6 +326,9 @@ fn cmd_fssdp(args: &Args) -> anyhow::Result<()> {
     }
     if args.has("compute-threads") {
         b = b.compute_threads(args.usize_or("compute-threads", 1)?);
+    }
+    if let Some(m) = args.str_opt("compute-mode")? {
+        b = b.compute_mode(fssdp::parse_compute_mode(&m)?);
     }
     if args.has("layers") {
         b = b.layers(args.usize_or("layers", 1)?);
@@ -518,18 +527,27 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         "spmd" => {
             // per-target allow-list: step-only flags must error here, not
             // silently no-op
-            args.reject_unknown(&["iters", "quick", "target", "transport"])?;
+            args.reject_unknown(&[
+                "iters", "quick", "target", "transport", "compute-mode", "compute-threads",
+            ])?;
             let iters = args.usize_or("iters", 3)?;
             let quick = args.bool_or("quick", false)?;
             let transport = match args.str_opt("transport")? {
                 Some(t) => fssdp::parse_transport(&t)?,
                 None => TransportKind::InProc,
             };
+            let mode = match args.str_opt("compute-mode")? {
+                Some(m) => fssdp::parse_compute_mode(&m)?,
+                None => fssdp::ComputeMode::Reference,
+            };
+            let kthreads = args.usize_or("compute-threads", 1)?;
             println!(
-                "== SPMD thread scaling ({}): modeled comm vs measured wall clock ==",
-                transport.as_str()
+                "== SPMD thread scaling ({}, {} kernels): modeled comm vs measured wall \
+                 clock ==",
+                transport.as_str(),
+                mode.as_str()
             );
-            let t = report::spmd_scaling(iters, quick, transport)?;
+            let t = report::spmd_scaling(iters, quick, transport, mode, kthreads)?;
             print!("{}", t.to_markdown());
             println!("\n== Cross-layer overlap (paced links): wall clock on vs off ==");
             let t = report::spmd_overlap(iters, quick)?;
@@ -538,11 +556,20 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         }
         "step" => {
             args.reject_unknown(&[
-                "iters", "quick", "target", "json", "compute-threads", "check", "gate-tol",
+                "iters", "quick", "target", "json", "compute-threads", "compute-mode", "check",
+                "gate-tol",
             ])?;
             let iters = args.usize_or("iters", 8)?;
             let quick = args.bool_or("quick", false)?;
             let threads = args.usize_or("compute-threads", 4)?;
+            // the bench's default tier under test is Fast — `bench step
+            // --json` then reports the Fast-vs-Reference speedup and
+            // divergence without extra flags, and `--check` gates the
+            // Fast tier against the committed Reference baseline
+            let mode = match args.str_opt("compute-mode")? {
+                Some(m) => fssdp::parse_compute_mode(&m)?,
+                None => fssdp::ComputeMode::Fast,
+            };
             let json = args.bool_or("json", false)?;
             let check = if args.bool_or("check", false)? {
                 Some(args.f64_or("gate-tol", 0.25)?)
@@ -552,8 +579,10 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             if args.has("gate-tol") && check.is_none() {
                 anyhow::bail!("--gate-tol requires --check");
             }
-            println!("== Runtime step (reference backend, 8 devices x 3 layers): per-phase ==");
-            let t = report::bench_step(iters, quick, threads, json, check)?;
+            println!(
+                "== Runtime step (hermetic backends, 8 devices x 3 layers): per-phase =="
+            );
+            let t = report::bench_step(iters, quick, threads, mode, json, check)?;
             print!("{}", t.to_markdown());
             Ok(())
         }
@@ -802,7 +831,23 @@ mod tests {
         assert!(run(argv(&["bench", "spmd", "--bogus", "1"])).is_err());
         // step-only flags must not silently no-op on the spmd target
         assert!(run(argv(&["bench", "spmd", "--json"])).is_err());
-        assert!(run(argv(&["bench", "spmd", "--compute-threads", "2"])).is_err());
+        // compute-mode must name a real tier
+        let err = run(argv(&["bench", "step", "--quick", "--iters", "1", "--compute-mode", "turbo"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--compute-mode expects"), "{err}");
+    }
+
+    #[test]
+    fn bench_spmd_accepts_kernel_pool_flags() {
+        // Regression: `bench spmd --compute-threads` used to be rejected as a
+        // step-only flag; the SPMD ranks now run their own kernel pools, so
+        // the combination is accepted and validated through SessionConfig.
+        run(argv(&[
+            "bench", "spmd", "--quick", "--iters", "1", "--compute-threads", "2",
+            "--compute-mode", "fast",
+        ]))
+        .unwrap();
     }
 
     #[test]
@@ -849,10 +894,14 @@ mod tests {
     }
 
     #[test]
-    fn bench_step_check_is_a_bootstrap_pass_without_baseline() {
-        // the committed BENCH_runtime_step.json has a null baseline, so
-        // the gate must pass (bootstrap) rather than fail the build; no
-        // --json, so nothing is written
+    fn bench_step_check_passes_against_the_committed_baseline() {
+        // The committed BENCH_runtime_step.json now carries a non-null
+        // baseline.step_ms (full bench shape), so the gate is armed; the
+        // quick shape is far below it, so --check must pass with the
+        // default tolerance. The failure path is locked by the
+        // `perf_gate_known_answers` unit test and exercised end-to-end by
+        // the CI injected-regression step. No --json, so nothing is
+        // written.
         run(argv(&[
             "bench", "step", "--quick", "--iters", "1", "--compute-threads", "1", "--check",
         ]))

@@ -26,13 +26,49 @@
 //!   on PJRT it falls back to building `HostTensor`s (the runtime owns its
 //!   buffers anyway).
 //!
-//! The matmul kernels are blocked over rows/columns for cache locality,
-//! but the k-accumulation order of every output element is exactly the
-//! naive kernels' order (ascending `p`, zero-skip unchanged), so results
-//! are **bitwise identical** to the pre-blocking implementation — the
-//! oracle tests below lock this.
+//! The in-process kernels come in **two tiers**, selected by
+//! [`ComputeMode`]:
+//!
+//! * [`ComputeMode::Reference`] ([`Reference`]) — the oracle. Its matmuls
+//!   are blocked over rows/columns for cache locality, but the
+//!   k-accumulation order of every output element is exactly the naive
+//!   kernels' order (ascending `p`, zero-skip unchanged), so results are
+//!   **bitwise identical** to the pre-blocking implementation — the oracle
+//!   tests below lock this. Bit-identical at any thread count.
+//! * [`ComputeMode::Fast`] ([`Fast`]) — the speed tier. Same semantics
+//!   within a measured divergence bound, but written for the
+//!   autovectorizer: contiguous inner loops with unrolled, FMA-reassociable
+//!   accumulation, no zero-skip/ascending-k ordering constraint, split
+//!   accumulator lanes in the dot products, a branch-free polynomial
+//!   `tanh`, and fused bias/GeLU passes that skip intermediate stores.
+//!   Deterministic run-to-run at a fixed thread count (the lane/unroll
+//!   reduction order is fixed), but **not** bit-identical to Reference.
+//!   The divergence-bound harness (`fssdp::diverge`) measures and locks
+//!   the Fast-vs-Reference parameter drift over training spans.
 
 use crate::runtime::{HostTensor, Runtime, TensorView, TensorViewMut};
+
+/// Which kernel tier the in-process (reference-family) backends run.
+/// Compute-only: routing, schedules, and communication plans are
+/// identical in both modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ComputeMode {
+    /// Bitwise-reproducible oracle kernels ([`Reference`]).
+    #[default]
+    Reference,
+    /// Autovectorizer-friendly fast-math kernels ([`Fast`]).
+    Fast,
+}
+
+impl ComputeMode {
+    /// Canonical CLI spelling (`ref` / `fast`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ComputeMode::Reference => "ref",
+            ComputeMode::Fast => "fast",
+        }
+    }
+}
 
 /// Row-tile edge of the blocked matmuls.
 const BLOCK_ROWS: usize = 16;
@@ -45,6 +81,8 @@ pub enum Compute {
     Pjrt(Runtime),
     /// In-process reference kernels (see [`Reference`]).
     Reference(Reference),
+    /// In-process fast-math kernels (see [`Fast`]).
+    Fast(Fast),
 }
 
 /// Borrowed views of one expert's packed parameter chunk
@@ -101,6 +139,26 @@ impl Compute {
         match self {
             Compute::Pjrt(_) => "pjrt",
             Compute::Reference(_) => "reference",
+            Compute::Fast(_) => "fast",
+        }
+    }
+
+    /// The in-process backend of `mode` (the hermetic reference family —
+    /// what worker threads and SPMD ranks construct locally).
+    pub fn for_mode(mode: ComputeMode) -> Compute {
+        match mode {
+            ComputeMode::Reference => Compute::Reference(Reference),
+            ComputeMode::Fast => Compute::Fast(Fast),
+        }
+    }
+
+    /// The kernel tier of an in-process backend (`None` for PJRT, whose
+    /// executables are opaque).
+    pub fn mode(&self) -> Option<ComputeMode> {
+        match self {
+            Compute::Pjrt(_) => None,
+            Compute::Reference(_) => Some(ComputeMode::Reference),
+            Compute::Fast(_) => Some(ComputeMode::Fast),
         }
     }
 
@@ -113,6 +171,7 @@ impl Compute {
         match self {
             Compute::Pjrt(rt) => rt.execute(name, inputs),
             Compute::Reference(r) => r.execute(name, inputs),
+            Compute::Fast(f) => f.execute(name, inputs),
         }
     }
 
@@ -134,6 +193,7 @@ impl Compute {
     ) -> anyhow::Result<()> {
         match self {
             Compute::Reference(r) => r.gate_fwd_into(x, wg, t, dm, e, scr, w2, idx),
+            Compute::Fast(f) => f.gate_fwd_into(x, wg, t, dm, e, scr, w2, idx),
             Compute::Pjrt(rt) => {
                 let out = rt.execute(
                     "gate_fwd",
@@ -173,6 +233,10 @@ impl Compute {
                 r.ffn_fwd_into(p, x, cap, dm, dff, scr, y);
                 Ok(())
             }
+            Compute::Fast(f) => {
+                f.ffn_fwd_into(p, x, cap, dm, dff, scr, y);
+                Ok(())
+            }
             Compute::Pjrt(rt) => {
                 let out = rt.execute(
                     "expert_ffn_fwd",
@@ -206,6 +270,10 @@ impl Compute {
         match self {
             Compute::Reference(r) => {
                 r.ffn_bwd_into(p, x, gy, cap, dm, dff, scr, out);
+                Ok(())
+            }
+            Compute::Fast(f) => {
+                f.ffn_bwd_into(p, x, gy, cap, dm, dff, scr, out);
                 Ok(())
             }
             Compute::Pjrt(rt) => {
@@ -329,6 +397,173 @@ pub fn matmul_tn(a: TensorView<'_>, b: TensorView<'_>, out: &mut [f32]) {
     }
 }
 
+/// Softmax + GShard top-2 over the logits already in `scr.logits`
+/// (`t × e`), shared by both kernel tiers: probabilities land in
+/// `scr.probs`, normalized weights/indices in `w2`/`idx` (resized to
+/// `t × 2`), ties toward the lower expert index (strict `>` scans). The
+/// selection logic being shared is what keeps the two tiers' routing
+/// decisions identical whenever their logits agree on the top-2 order.
+fn softmax_top2(scr: &mut KernelScratch, t: usize, e: usize, w2: &mut Vec<f32>, idx: &mut Vec<i32>) {
+    w2.clear();
+    w2.resize(t * 2, 0.0);
+    idx.clear();
+    idx.resize(t * 2, 0);
+    for row in 0..t {
+        let l = &scr.logits[row * e..(row + 1) * e];
+        let max = l.iter().cloned().fold(f32::MIN, f32::max);
+        let p = &mut scr.probs[row * e..(row + 1) * e];
+        let mut sum = 0.0f32;
+        for (pi, &li) in p.iter_mut().zip(l.iter()) {
+            *pi = (li - max).exp();
+            sum += *pi;
+        }
+        for pi in p.iter_mut() {
+            *pi /= sum;
+        }
+        // top-2 with ties toward the lower index (strict > scans).
+        let mut i1 = 0usize;
+        for (i, &pi) in p.iter().enumerate() {
+            if pi > p[i1] {
+                i1 = i;
+            }
+        }
+        let mut i2 = usize::MAX;
+        for (i, &pi) in p.iter().enumerate() {
+            if i == i1 {
+                continue;
+            }
+            if i2 == usize::MAX || pi > p[i2] {
+                i2 = i;
+            }
+        }
+        let (p1, p2) = (p[i1], p[i2]);
+        let denom = p1 + p2;
+        w2[row * 2] = p1 / denom;
+        w2[row * 2 + 1] = p2 / denom;
+        idx[row * 2] = i1 as i32;
+        idx[row * 2 + 1] = i2 as i32;
+    }
+}
+
+// ---- the fast tier's kernels -----------------------------------------
+
+/// `a [n,k] @ b [k,m]` into `out [n,m]`, fast tier: four `b` rows are
+/// folded per pass with the four products summed in one expression, so the
+/// compiler is free to keep vector accumulators and emit FMAs. The
+/// remainder rows fall through to the single-row loop. No zero-skip — the
+/// branch would block vectorization.
+pub fn matmul_nn_fast(a: TensorView<'_>, b: TensorView<'_>, out: &mut [f32]) {
+    let (n, k, m) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(b.rows(), k, "matmul_nn_fast: inner dims {} vs {}", k, b.rows());
+    assert_eq!(out.len(), n * m, "matmul_nn_fast: out len {} vs {n}x{m}", out.len());
+    out.fill(0.0);
+    let (av, bv) = (a.data(), b.data());
+    for i in 0..n {
+        let arow = &av[i * k..(i + 1) * k];
+        let orow = &mut out[i * m..(i + 1) * m];
+        let mut p = 0usize;
+        while p + 4 <= k {
+            let (x0, x1, x2, x3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
+            let b0 = &bv[p * m..(p + 1) * m];
+            let b1 = &bv[(p + 1) * m..(p + 2) * m];
+            let b2 = &bv[(p + 2) * m..(p + 3) * m];
+            let b3 = &bv[(p + 3) * m..(p + 4) * m];
+            for ((((o, &y0), &y1), &y2), &y3) in
+                orow.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3)
+            {
+                *o += x0 * y0 + x1 * y1 + x2 * y2 + x3 * y3;
+            }
+            p += 4;
+        }
+        while p < k {
+            let x = arow[p];
+            for (o, &y) in orow.iter_mut().zip(&bv[p * m..(p + 1) * m]) {
+                *o += x * y;
+            }
+            p += 1;
+        }
+    }
+}
+
+/// Dot product with eight split accumulator lanes over `chunks_exact(8)`
+/// and a fixed-order lane reduction — reassociated relative to the naive
+/// left-to-right sum (vectorizable), but deterministic: the lane/tail
+/// order never depends on thread count or data values.
+fn dot_fast(x: &[f32], y: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 8];
+    for (cx, cy) in x.chunks_exact(8).zip(y.chunks_exact(8)) {
+        for l in 0..8 {
+            acc[l] += cx[l] * cy[l];
+        }
+    }
+    let head = x.len() - x.len() % 8;
+    let mut tail = 0.0f32;
+    for (xv, yv) in x[head..].iter().zip(&y[head..]) {
+        tail += xv * yv;
+    }
+    (((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]))) + tail
+}
+
+/// `a [n,k] @ bᵀ` with `b [m,k]`, fast tier: [`dot_fast`] per output
+/// element (both operands row-contiguous).
+pub fn matmul_nt_fast(a: TensorView<'_>, b: TensorView<'_>, out: &mut [f32]) {
+    let (n, k, m) = (a.rows(), a.cols(), b.rows());
+    assert_eq!(b.cols(), k, "matmul_nt_fast: inner dims {} vs {}", k, b.cols());
+    assert_eq!(out.len(), n * m, "matmul_nt_fast: out len {} vs {n}x{m}", out.len());
+    for i in 0..n {
+        let arow = a.row(i);
+        for j in 0..m {
+            out[i * m + j] = dot_fast(arow, b.row(j));
+        }
+    }
+}
+
+/// `aᵀ @ b` with `a [k,n]`, `b [k,m]`, fast tier: contiguous axpy rows
+/// with no zero-skip branch in the inner loop.
+pub fn matmul_tn_fast(a: TensorView<'_>, b: TensorView<'_>, out: &mut [f32]) {
+    let (k, n, m) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(b.rows(), k, "matmul_tn_fast: inner dims {} vs {}", k, b.rows());
+    assert_eq!(out.len(), n * m, "matmul_tn_fast: out len {} vs {n}x{m}", out.len());
+    out.fill(0.0);
+    for p in 0..k {
+        let arow = a.row(p);
+        let brow = b.row(p);
+        for i in 0..n {
+            let x = arow[i];
+            for (o, &y) in out[i * m..(i + 1) * m].iter_mut().zip(brow.iter()) {
+                *o += x * y;
+            }
+        }
+    }
+}
+
+/// Branch-free clamped odd Padé(7,6) approximant of `tanh` — no libm
+/// call, so the surrounding elementwise loops vectorize. Exact enough for
+/// the fast tier: max absolute error ≈ 1.2e-4 (at the clamp edge, where
+/// the rational form slightly overshoots 1), well inside the locked
+/// Fast-vs-Reference divergence bound.
+fn tanh_fast(x: f32) -> f32 {
+    let x = x.clamp(-4.97, 4.97);
+    let x2 = x * x;
+    let p = x * (135135.0 + x2 * (17325.0 + x2 * (378.0 + x2)));
+    let q = 135135.0 + x2 * (62370.0 + x2 * (3150.0 + 28.0 * x2));
+    p / q
+}
+
+fn gelu_fast(z: f32) -> f32 {
+    0.5 * z * (1.0 + tanh_fast(GELU_K * (z + GELU_C * z * z * z)))
+}
+
+/// Fused GeLU value + derivative sharing one `tanh` evaluation — the
+/// backward pass needs both, and the shared `t` halves the transcendental
+/// count relative to calling `gelu` and `gelu_grad` separately.
+fn gelu_fused_fast(z: f32) -> (f32, f32) {
+    let u = GELU_K * (z + GELU_C * z * z * z);
+    let t = tanh_fast(u);
+    let du = GELU_K * (1.0 + 3.0 * GELU_C * z * z);
+    (0.5 * z * (1.0 + t), 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * du)
+}
+
 fn shape2(t: &HostTensor, what: &str) -> anyhow::Result<(usize, usize)> {
     let s = t.shape();
     anyhow::ensure!(s.len() == 2, "{what}: expected rank-2 tensor, got shape {s:?}");
@@ -370,45 +605,7 @@ impl Reference {
         sized(&mut scr.logits, t * e);
         sized(&mut scr.probs, t * e);
         matmul_nn(TensorView::new(t, dm, x), TensorView::new(dm, e, wg), &mut scr.logits);
-        w2.clear();
-        w2.resize(t * 2, 0.0);
-        idx.clear();
-        idx.resize(t * 2, 0);
-        for row in 0..t {
-            let l = &scr.logits[row * e..(row + 1) * e];
-            let max = l.iter().cloned().fold(f32::MIN, f32::max);
-            let p = &mut scr.probs[row * e..(row + 1) * e];
-            let mut sum = 0.0f32;
-            for (pi, &li) in p.iter_mut().zip(l.iter()) {
-                *pi = (li - max).exp();
-                sum += *pi;
-            }
-            for pi in p.iter_mut() {
-                *pi /= sum;
-            }
-            // top-2 with ties toward the lower index (strict > scans).
-            let mut i1 = 0usize;
-            for (i, &pi) in p.iter().enumerate() {
-                if pi > p[i1] {
-                    i1 = i;
-                }
-            }
-            let mut i2 = usize::MAX;
-            for (i, &pi) in p.iter().enumerate() {
-                if i == i1 {
-                    continue;
-                }
-                if i2 == usize::MAX || pi > p[i2] {
-                    i2 = i;
-                }
-            }
-            let (p1, p2) = (p[i1], p[i2]);
-            let denom = p1 + p2;
-            w2[row * 2] = p1 / denom;
-            w2[row * 2 + 1] = p2 / denom;
-            idx[row * 2] = i1 as i32;
-            idx[row * 2 + 1] = i2 as i32;
-        }
+        softmax_top2(scr, t, e, w2, idx);
         Ok(())
     }
 
@@ -601,6 +798,215 @@ impl Reference {
             HostTensor::f32(vec![dff, dm], gw2),
             HostTensor::f32(vec![dm], gb2),
         ])
+    }
+}
+
+/// Pure-Rust fast-math kernels — the speed tier of the reference family.
+///
+/// Same math as [`Reference`] (`python/compile/kernels/ref.py` semantics)
+/// but traded for throughput: reassociated accumulation
+/// ([`matmul_nn_fast`]/[`matmul_nt_fast`]/[`matmul_tn_fast`]), the
+/// polynomial [`tanh_fast`], and fused bias+GeLU passes that never
+/// materialize the biased pre-activation separately. Divergence from
+/// [`Reference`] is bounded and measured (`fssdp::diverge`); run-to-run
+/// results are deterministic at a fixed thread count.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fast;
+
+impl Fast {
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[HostTensor],
+    ) -> anyhow::Result<Vec<HostTensor>> {
+        match name {
+            "gate_fwd" => {
+                anyhow::ensure!(inputs.len() == 2, "gate_fwd expects (x, wg)");
+                let (t, dm) = shape2(&inputs[0], "gate x")?;
+                let (dm2, e) = shape2(&inputs[1], "gate wg")?;
+                anyhow::ensure!(dm == dm2, "gate: x d_model {dm} != wg d_model {dm2}");
+                let mut scr = KernelScratch::default();
+                let mut w2 = Vec::new();
+                let mut idx = Vec::new();
+                self.gate_fwd_into(
+                    inputs[0].as_f32()?,
+                    inputs[1].as_f32()?,
+                    t,
+                    dm,
+                    e,
+                    &mut scr,
+                    &mut w2,
+                    &mut idx,
+                )?;
+                Ok(vec![
+                    HostTensor::f32(vec![t, e], scr.probs),
+                    HostTensor::f32(vec![t, 2], w2),
+                    HostTensor::i32(vec![t, 2], idx),
+                ])
+            }
+            "expert_ffn_fwd" => {
+                let (cap, dm, dff) = Reference::ffn_check_shapes(inputs, 5, "expert_ffn_fwd")?;
+                let p = Reference::params_of(inputs)?;
+                let mut scr = KernelScratch::default();
+                let mut y = vec![0.0f32; cap * dm];
+                self.ffn_fwd_into(&p, inputs[0].as_f32()?, cap, dm, dff, &mut scr, &mut y);
+                Ok(vec![HostTensor::f32(vec![cap, dm], y)])
+            }
+            "expert_ffn_bwd" => {
+                let (cap, dm, dff) = Reference::ffn_check_shapes(inputs, 6, "expert_ffn_bwd")?;
+                anyhow::ensure!(
+                    inputs[5].shape() == [cap, dm],
+                    "expert_ffn_bwd: gy shape {:?} vs [{cap},{dm}]",
+                    inputs[5].shape()
+                );
+                let p = Reference::params_of(inputs)?;
+                let mut scr = KernelScratch::default();
+                let mut gx = vec![0.0f32; cap * dm];
+                let mut gw1 = vec![0.0f32; dm * dff];
+                let mut gb1 = vec![0.0f32; dff];
+                let mut gw2 = vec![0.0f32; dff * dm];
+                let mut gb2 = vec![0.0f32; dm];
+                self.ffn_bwd_into(
+                    &p,
+                    inputs[0].as_f32()?,
+                    inputs[5].as_f32()?,
+                    cap,
+                    dm,
+                    dff,
+                    &mut scr,
+                    FfnGrads {
+                        gx: &mut gx,
+                        gw1: &mut gw1,
+                        gb1: &mut gb1,
+                        gw2: &mut gw2,
+                        gb2: &mut gb2,
+                    },
+                );
+                Ok(vec![
+                    HostTensor::f32(vec![cap, dm], gx),
+                    HostTensor::f32(vec![dm, dff], gw1),
+                    HostTensor::f32(vec![dff], gb1),
+                    HostTensor::f32(vec![dff, dm], gw2),
+                    HostTensor::f32(vec![dm], gb2),
+                ])
+            }
+            other => anyhow::bail!("fast backend has no entry `{other}`"),
+        }
+    }
+
+    /// Fast-tier gate: [`matmul_nn_fast`] logits into the shared
+    /// [`softmax_top2`] tail, so routing decisions match [`Reference`]
+    /// whenever the logits agree on the top-2 order.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gate_fwd_into(
+        &self,
+        x: &[f32],
+        wg: &[f32],
+        t: usize,
+        dm: usize,
+        e: usize,
+        scr: &mut KernelScratch,
+        w2: &mut Vec<f32>,
+        idx: &mut Vec<i32>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(e >= 2, "gate needs at least 2 experts for top-2");
+        assert_eq!(x.len(), t * dm, "gate x len");
+        assert_eq!(wg.len(), dm * e, "gate wg len");
+        sized(&mut scr.logits, t * e);
+        sized(&mut scr.probs, t * e);
+        matmul_nn_fast(TensorView::new(t, dm, x), TensorView::new(dm, e, wg), &mut scr.logits);
+        softmax_top2(scr, t, e, w2, idx);
+        Ok(())
+    }
+
+    /// `y = gelu(x@w1 + b1) @ w2 + b2`, fused: the bias add and GeLU run
+    /// in one pass writing `h` directly (the biased pre-activation is
+    /// never stored), and the output bias folds into a single row pass
+    /// after the second matmul.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ffn_fwd_into(
+        &self,
+        p: &ExpertParams<'_>,
+        x: &[f32],
+        cap: usize,
+        dm: usize,
+        dff: usize,
+        scr: &mut KernelScratch,
+        y: &mut [f32],
+    ) {
+        assert_eq!(x.len(), cap * dm, "ffn x len");
+        assert_eq!(y.len(), cap * dm, "ffn y len");
+        sized(&mut scr.z, cap * dff);
+        sized(&mut scr.h, cap * dff);
+        matmul_nn_fast(TensorView::new(cap, dm, x), TensorView::new(dm, dff, p.w1), &mut scr.z);
+        for row in 0..cap {
+            let zrow = &scr.z[row * dff..(row + 1) * dff];
+            let hrow = &mut scr.h[row * dff..(row + 1) * dff];
+            for ((hv, &zv), &bv) in hrow.iter_mut().zip(zrow.iter()).zip(p.b1.iter()) {
+                *hv = gelu_fast(zv + bv);
+            }
+        }
+        matmul_nn_fast(TensorView::new(cap, dff, &scr.h), TensorView::new(dff, dm, p.w2), y);
+        let mut yv = TensorViewMut::new(cap, dm, y);
+        for row in 0..cap {
+            for (yi, &bi) in yv.row_mut(row).iter_mut().zip(p.b2.iter()) {
+                *yi += bi;
+            }
+        }
+    }
+
+    /// VJP of [`Fast::ffn_fwd_into`]: recomputes the pre-activation once,
+    /// then one fused pass yields `h` and `gelu'(z)` sharing a single
+    /// `tanh` per element (the derivative lands in `scr.z`, overwriting
+    /// the raw pre-activation it came from).
+    #[allow(clippy::too_many_arguments)]
+    pub fn ffn_bwd_into(
+        &self,
+        p: &ExpertParams<'_>,
+        x: &[f32],
+        gy: &[f32],
+        cap: usize,
+        dm: usize,
+        dff: usize,
+        scr: &mut KernelScratch,
+        out: FfnGrads<'_>,
+    ) {
+        assert_eq!(gy.len(), cap * dm, "ffn gy len");
+        sized(&mut scr.z, cap * dff);
+        sized(&mut scr.h, cap * dff);
+        matmul_nn_fast(TensorView::new(cap, dm, x), TensorView::new(dm, dff, p.w1), &mut scr.z);
+        for row in 0..cap {
+            let zrow = &mut scr.z[row * dff..(row + 1) * dff];
+            let hrow = &mut scr.h[row * dff..(row + 1) * dff];
+            for ((zv, hv), &bv) in zrow.iter_mut().zip(hrow.iter_mut()).zip(p.b1.iter()) {
+                let (h, dh) = gelu_fused_fast(*zv + bv);
+                *hv = h;
+                *zv = dh;
+            }
+        }
+        // gb2[c] = Σ_rows gy ; gw2 = hᵀ @ gy ; gh = gy @ w2ᵀ
+        out.gb2.fill(0.0);
+        for row in 0..cap {
+            for (g, &v) in out.gb2.iter_mut().zip(gy[row * dm..(row + 1) * dm].iter()) {
+                *g += v;
+            }
+        }
+        matmul_tn_fast(TensorView::new(cap, dff, &scr.h), TensorView::new(cap, dm, gy), out.gw2);
+        sized(&mut scr.gh, cap * dff);
+        matmul_nt_fast(TensorView::new(cap, dm, gy), TensorView::new(dff, dm, p.w2), &mut scr.gh);
+        // gz = gh ⊙ gelu'(z) — the derivative is already sitting in scr.z
+        sized(&mut scr.gz, cap * dff);
+        for ((gzv, &ghv), &dv) in scr.gz.iter_mut().zip(scr.gh.iter()).zip(scr.z.iter()) {
+            *gzv = ghv * dv;
+        }
+        out.gb1.fill(0.0);
+        for row in 0..cap {
+            for (g, &v) in out.gb1.iter_mut().zip(scr.gz[row * dff..(row + 1) * dff].iter()) {
+                *g += v;
+            }
+        }
+        matmul_tn_fast(TensorView::new(cap, dm, x), TensorView::new(cap, dff, &scr.gz), out.gw1);
+        matmul_nt_fast(TensorView::new(cap, dff, &scr.gz), TensorView::new(dm, dff, p.w1), out.gx);
     }
 }
 
@@ -978,5 +1384,213 @@ mod tests {
     #[test]
     fn unknown_entry_errors() {
         assert!(Reference.execute("nope", &[]).is_err());
+        assert!(Fast.execute("nope", &[]).is_err());
+    }
+
+    // ---- the fast tier: bounded divergence from the naive oracles,
+    //      bitwise run-to-run determinism ----
+
+    /// Per-element relative tolerance of one reassociated matmul against
+    /// the naive summation order (f32 accumulation noise only — the fast
+    /// kernels compute the same products).
+    fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+            let denom = w.abs().max(1.0e-3);
+            assert!(
+                (g - w).abs() / denom <= tol,
+                "{what}[{i}]: fast {g} vs oracle {w} (rel {})",
+                (g - w).abs() / denom
+            );
+        }
+    }
+
+    #[test]
+    fn fast_nn_stays_within_reassociation_tolerance_of_naive() {
+        for &(n, k, m) in SHAPES {
+            let a = mk(n * k, 0.13);
+            let b = mk(k * m, 0.07);
+            let mut out = vec![7.0f32; n * m];
+            matmul_nn_fast(TensorView::new(n, k, &a), TensorView::new(k, m, &b), &mut out);
+            assert_close(&out, &naive_nn(&a, &b, n, k, m), 1e-5, &format!("nn {n}x{k}x{m}"));
+        }
+    }
+
+    #[test]
+    fn fast_nt_stays_within_reassociation_tolerance_of_naive() {
+        for &(n, k, m) in SHAPES {
+            let a = mk(n * k, 0.19);
+            let b = mk(m * k, 0.05);
+            let mut out = vec![7.0f32; n * m];
+            matmul_nt_fast(TensorView::new(n, k, &a), TensorView::new(m, k, &b), &mut out);
+            assert_close(&out, &naive_nt(&a, &b, n, k, m), 1e-5, &format!("nt {n}x{k}x{m}"));
+        }
+    }
+
+    #[test]
+    fn fast_tn_stays_within_reassociation_tolerance_of_naive() {
+        for &(n, k, m) in SHAPES {
+            let a = mk(k * n, 0.23);
+            let b = mk(k * m, 0.11);
+            let mut out = vec![7.0f32; n * m];
+            matmul_tn_fast(TensorView::new(k, n, &a), TensorView::new(k, m, &b), &mut out);
+            assert_close(&out, &naive_tn(&a, &b, k, n, m), 1e-5, &format!("tn {n}x{k}x{m}"));
+        }
+    }
+
+    #[test]
+    fn fast_kernels_handle_zero_heavy_inputs() {
+        // The fast tier dropped the zero-skip; sparse rows must still
+        // produce the same sums (zeros contribute nothing either way).
+        let (n, k, m) = (19, 33, 21);
+        let mut a = mk(n * k, 0.31);
+        for v in a.iter_mut().step_by(3) {
+            *v = 0.0;
+        }
+        let b = mk(k * m, 0.17);
+        let mut out = vec![0.0f32; n * m];
+        matmul_nn_fast(TensorView::new(n, k, &a), TensorView::new(k, m, &b), &mut out);
+        assert_close(&out, &naive_nn(&a, &b, n, k, m), 1e-5, "nn sparse");
+        let mut out = vec![0.0f32; n * m];
+        matmul_tn_fast(TensorView::new(k, n, &a[..k * n]), TensorView::new(k, m, &b), &mut out);
+        assert_close(&out, &naive_tn(&a[..k * n], &b, k, n, m), 1e-5, "tn sparse");
+    }
+
+    #[test]
+    fn tanh_fast_tracks_libm_tanh() {
+        let mut max_err = 0.0f32;
+        let mut x = -8.0f32;
+        while x <= 8.0 {
+            let err = (tanh_fast(x) - x.tanh()).abs();
+            max_err = max_err.max(err);
+            x += 1.0 / 512.0;
+        }
+        assert!(max_err < 2e-4, "tanh_fast max abs error {max_err}");
+    }
+
+    #[test]
+    fn fast_gelu_pair_tracks_reference_gelu() {
+        let mut z = -6.0f32;
+        while z <= 6.0 {
+            let (h, dh) = gelu_fused_fast(z);
+            assert!((gelu_fast(z) - gelu(z)).abs() < 1e-3, "gelu at {z}");
+            assert!((h - gelu(z)).abs() < 1e-3, "fused gelu at {z}");
+            assert!((dh - gelu_grad(z)).abs() < 1e-3, "fused gelu' at {z}");
+            z += 1.0 / 64.0;
+        }
+    }
+
+    #[test]
+    fn fast_ffn_paths_stay_close_to_reference_and_are_deterministic() {
+        let (cap, dm, dff) = (17, 10, 14);
+        let x = mk(cap * dm, 0.13);
+        let chunk: Vec<f32> =
+            [mk(dm * dff, 0.07), mk(dff, 0.19), mk(dff * dm, 0.05), mk(dm, 0.23)].concat();
+        let p = ExpertParams {
+            w1: &chunk[..dm * dff],
+            b1: &chunk[dm * dff..dm * dff + dff],
+            w2: &chunk[dm * dff + dff..dm * dff + dff + dff * dm],
+            b2: &chunk[dm * dff + dff + dff * dm..],
+        };
+        let gy = mk(cap * dm, 0.29);
+        let mut scr = KernelScratch::default();
+        let mut y_ref = vec![0.0f32; cap * dm];
+        Reference.ffn_fwd_into(&p, &x, cap, dm, dff, &mut scr, &mut y_ref);
+        let mut y_fast = vec![0.0f32; cap * dm];
+        Fast.ffn_fwd_into(&p, &x, cap, dm, dff, &mut scr, &mut y_fast);
+        assert_close(&y_fast, &y_ref, 2e-3, "ffn fwd fast vs reference");
+        // run-to-run determinism: a second pass through the same (dirty)
+        // scratch reproduces every bit
+        let mut y_again = vec![0.0f32; cap * dm];
+        Fast.ffn_fwd_into(&p, &x, cap, dm, dff, &mut scr, &mut y_again);
+        assert_eq!(y_fast, y_again, "fast forward must be deterministic");
+
+        let mut run_bwd = |c: &mut dyn FnMut(
+            &mut KernelScratch,
+            FfnGrads<'_>,
+        )| -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+            let mut gx = vec![0.0f32; cap * dm];
+            let mut gw1 = vec![0.0f32; dm * dff];
+            let mut gb1 = vec![0.0f32; dff];
+            let mut gw2 = vec![0.0f32; dff * dm];
+            let mut gb2 = vec![0.0f32; dm];
+            let mut scr = KernelScratch::default();
+            c(
+                &mut scr,
+                FfnGrads {
+                    gx: &mut gx,
+                    gw1: &mut gw1,
+                    gb1: &mut gb1,
+                    gw2: &mut gw2,
+                    gb2: &mut gb2,
+                },
+            );
+            (gx, gw1, gb1, gw2, gb2)
+        };
+        let r = run_bwd(&mut |scr, out| Reference.ffn_bwd_into(&p, &x, &gy, cap, dm, dff, scr, out));
+        let f = run_bwd(&mut |scr, out| Fast.ffn_bwd_into(&p, &x, &gy, cap, dm, dff, scr, out));
+        let f2 = run_bwd(&mut |scr, out| Fast.ffn_bwd_into(&p, &x, &gy, cap, dm, dff, scr, out));
+        assert_close(&f.0, &r.0, 2e-3, "gx");
+        assert_close(&f.1, &r.1, 2e-3, "gw1");
+        assert_close(&f.2, &r.2, 2e-3, "gb1");
+        assert_close(&f.3, &r.3, 2e-3, "gw2");
+        assert_close(&f.4, &r.4, 2e-3, "gb2");
+        assert_eq!(f, f2, "fast backward must be deterministic");
+    }
+
+    #[test]
+    fn fast_gate_routes_like_reference_away_from_ties() {
+        let (t, dm, e) = (24, 8, 6);
+        let x = mk(t * dm, 0.37);
+        let wg = mk(dm * e, 0.11);
+        let mut scr_r = KernelScratch::default();
+        let (mut w2_r, mut idx_r) = (Vec::new(), Vec::new());
+        Reference.gate_fwd_into(&x, &wg, t, dm, e, &mut scr_r, &mut w2_r, &mut idx_r).unwrap();
+        let mut scr_f = KernelScratch::default();
+        let (mut w2_f, mut idx_f) = (Vec::new(), Vec::new());
+        Fast.gate_fwd_into(&x, &wg, t, dm, e, &mut scr_f, &mut w2_f, &mut idx_f).unwrap();
+        assert_eq!(idx_r, idx_f, "top-2 routing must agree on well-separated logits");
+        assert_close(&w2_f, &w2_r, 1e-4, "gate weights");
+    }
+
+    #[test]
+    fn fast_host_tensor_path_matches_into_kernels_bitwise() {
+        let (cap, dm, dff) = (6, 10, 14);
+        let x = mk(cap * dm, 0.13);
+        let chunk: Vec<f32> =
+            [mk(dm * dff, 0.07), mk(dff, 0.19), mk(dff * dm, 0.05), mk(dm, 0.23)].concat();
+        let p = ExpertParams {
+            w1: &chunk[..dm * dff],
+            b1: &chunk[dm * dff..dm * dff + dff],
+            w2: &chunk[dm * dff + dff..dm * dff + dff + dff * dm],
+            b2: &chunk[dm * dff + dff + dff * dm..],
+        };
+        let mut scr = KernelScratch::default();
+        let mut y = vec![0.0f32; cap * dm];
+        Fast.ffn_fwd_into(&p, &x, cap, dm, dff, &mut scr, &mut y);
+        let via_tensors = Fast
+            .execute(
+                "expert_ffn_fwd",
+                &[
+                    HostTensor::f32(vec![cap, dm], x.clone()),
+                    HostTensor::f32(vec![dm, dff], p.w1.to_vec()),
+                    HostTensor::f32(vec![dff], p.b1.to_vec()),
+                    HostTensor::f32(vec![dff, dm], p.w2.to_vec()),
+                    HostTensor::f32(vec![dm], p.b2.to_vec()),
+                ],
+            )
+            .unwrap();
+        assert_eq!(y.as_slice(), via_tensors[0].as_f32().unwrap());
+    }
+
+    #[test]
+    fn compute_mode_round_trips_through_for_mode() {
+        assert_eq!(Compute::for_mode(ComputeMode::Reference).mode(), Some(ComputeMode::Reference));
+        assert_eq!(Compute::for_mode(ComputeMode::Fast).mode(), Some(ComputeMode::Fast));
+        assert_eq!(Compute::for_mode(ComputeMode::Reference).backend_name(), "reference");
+        assert_eq!(Compute::for_mode(ComputeMode::Fast).backend_name(), "fast");
+        assert_eq!(ComputeMode::default(), ComputeMode::Reference);
+        assert_eq!(ComputeMode::Reference.as_str(), "ref");
+        assert_eq!(ComputeMode::Fast.as_str(), "fast");
     }
 }

@@ -26,6 +26,7 @@ use crate::spmd::transport::TransportKind;
 use crate::telemetry::TelemetryConfig;
 use crate::topology::Topology;
 
+use super::compute::ComputeMode;
 use super::{reference_dims, Executor, LayerDims};
 
 /// Which compute backend executes the kernels.
@@ -95,6 +96,10 @@ pub enum ConfigError {
     BadRecvTimeout { given: String },
     /// A receive timeout without the socket transport.
     RecvTimeoutWithoutSocket,
+    /// An unparseable `--compute-mode` value.
+    BadComputeMode { given: String },
+    /// More kernel worker threads than the host has cores to run them.
+    ComputeThreadsExceedCores { threads: usize, cores: usize },
 }
 
 impl fmt::Display for ConfigError {
@@ -189,6 +194,15 @@ impl fmt::Display for ConfigError {
                 "--recv-timeout requires --transport socket (only the socket backend \
                  polls receives against a deadline)"
             ),
+            ConfigError::BadComputeMode { given } => {
+                write!(f, "--compute-mode expects `ref` or `fast`, got `{given}`")
+            }
+            ConfigError::ComputeThreadsExceedCores { threads, cores } => write!(
+                f,
+                "--compute-threads {threads} exceeds the {cores} available cores \
+                 (the kernel worker pool is CPU-bound; oversubscribing only adds \
+                 scheduling noise)"
+            ),
         }
     }
 }
@@ -225,6 +239,18 @@ pub fn parse_pacing_scale(s: &str) -> Result<f64, ConfigError> {
         return Err(err());
     }
     Ok(scale)
+}
+
+/// Parse the CLI's `--compute-mode` value into a [`ComputeMode`]:
+/// `ref`/`reference` selects the bitwise-reproducible oracle kernels,
+/// `fast` the autovectorizer-friendly speed tier (see
+/// [`crate::fssdp::compute`] for the determinism contract of each).
+pub fn parse_compute_mode(s: &str) -> Result<ComputeMode, ConfigError> {
+    match s.trim() {
+        "ref" | "reference" => Ok(ComputeMode::Reference),
+        "fast" => Ok(ComputeMode::Fast),
+        other => Err(ConfigError::BadComputeMode { given: other.to_string() }),
+    }
 }
 
 /// Parse the CLI's `--recv-timeout` value (seconds, fractional allowed).
@@ -264,6 +290,7 @@ pub struct SessionConfig {
     pub(crate) mem_slots: Option<usize>,
     pub(crate) overlap_degree: Option<usize>,
     pub(crate) compute_threads: usize,
+    pub(crate) compute_mode: ComputeMode,
     pub(crate) telemetry: TelemetryConfig,
 }
 
@@ -303,6 +330,11 @@ impl SessionConfig {
     pub fn telemetry(&self) -> &TelemetryConfig {
         &self.telemetry
     }
+
+    /// The resolved compute mode (Reference unless `--compute-mode fast`).
+    pub fn compute_mode(&self) -> ComputeMode {
+        self.compute_mode
+    }
 }
 
 /// Builder for [`SessionConfig`]; all validation happens in
@@ -331,6 +363,8 @@ pub struct SessionConfigBuilder {
     mem_slots: Option<usize>,
     overlap_degree: Option<usize>,
     compute_threads: usize,
+    compute_mode: ComputeMode,
+    cores_hint: Option<usize>,
     telemetry: TelemetryConfig,
 }
 
@@ -359,6 +393,8 @@ impl Default for SessionConfigBuilder {
             mem_slots: None,
             overlap_degree: None,
             compute_threads: 1,
+            compute_mode: ComputeMode::Reference,
+            cores_hint: None,
             telemetry: TelemetryConfig::default(),
         }
     }
@@ -526,15 +562,39 @@ impl SessionConfigBuilder {
         self
     }
 
-    /// Worker threads for the **sequential** executor's expert loops
-    /// (default 1 = in-line). Takes effect on the reference backend only —
-    /// PJRT runtime handles cannot be shared across threads, so PJRT
-    /// engines always run the in-line loop; SPMD ranks likewise keep the
-    /// single-threaded kernels (one OS thread per rank is the whole
-    /// parallelism budget there). Results are bit-identical for any value:
-    /// per-key work is independent and merges in route order.
+    /// Worker threads for the expert-kernel loops (default 1 = in-line).
+    /// On the sequential executor the engine's per-key loop fans out
+    /// across this many scoped threads; under `--parallel` each SPMD rank
+    /// runs its own pool of this size over its capacity groups. Takes
+    /// effect on the hermetic backends only — PJRT runtime handles cannot
+    /// be shared across threads, so PJRT engines always run the in-line
+    /// loop. Per-key work is independent and merges in route order, so
+    /// Reference mode stays bit-identical at any value and Fast mode is
+    /// deterministic per thread count. Validated against
+    /// [`Self::cores_hint`] at build time.
     pub fn compute_threads(mut self, n: usize) -> Self {
         self.compute_threads = n;
+        self
+    }
+
+    /// Select the compute tier: [`ComputeMode::Reference`] (default, the
+    /// bitwise-reproducible oracle) or [`ComputeMode::Fast`] (the
+    /// autovectorizer-friendly speed tier; deterministic per thread count,
+    /// divergence from Reference bounded by `fssdp::diverge`). Ignored by
+    /// the PJRT backend, which brings its own kernels. Compute-only: the
+    /// schedule verifier and every communication plan are unchanged by it.
+    pub fn compute_mode(mut self, m: ComputeMode) -> Self {
+        self.compute_mode = m;
+        self
+    }
+
+    /// Cap [`Self::compute_threads`] at `n` cores (build-time check).
+    /// Defaults to the host's available parallelism with a floor of 8, so
+    /// portable configs with small pools build everywhere while gross
+    /// oversubscription is still rejected; tests set it explicitly for a
+    /// deterministic bound.
+    pub fn cores_hint(mut self, n: usize) -> Self {
+        self.cores_hint = Some(n);
         self
     }
 
@@ -643,6 +703,15 @@ impl SessionConfigBuilder {
         if self.compute_threads == 0 {
             return Err(ConfigError::ZeroComputeThreads);
         }
+        let cores = self.cores_hint.unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8).max(8)
+        });
+        if self.compute_threads > cores {
+            return Err(ConfigError::ComputeThreadsExceedCores {
+                threads: self.compute_threads,
+                cores,
+            });
+        }
         if let Some(d) = &self.telemetry.trace_dir {
             if d.trim().is_empty() {
                 return Err(ConfigError::TraceOutEmpty);
@@ -686,6 +755,7 @@ impl SessionConfigBuilder {
             mem_slots: self.mem_slots,
             overlap_degree: self.overlap_degree,
             compute_threads: self.compute_threads,
+            compute_mode: self.compute_mode,
             telemetry: self.telemetry,
         })
     }
@@ -798,6 +868,56 @@ mod tests {
         assert_eq!(err.to_string(), "--compute-threads must be at least 1");
         let cfg = base().cluster(2, 4).compute_threads(4).build().unwrap();
         assert_eq!(cfg.compute_threads, 4);
+    }
+
+    #[test]
+    fn compute_threads_are_accepted_with_parallel() {
+        // regression for the old must-reject contract: SPMD ranks now run
+        // per-rank kernel worker pools, so the combination is valid.
+        let cfg = base().cluster(2, 4).parallel(true).compute_threads(2).build().unwrap();
+        assert_eq!(cfg.compute_threads, 2);
+        assert_eq!(cfg.executor(), Executor::Spmd { threads: 4, overlap: true });
+    }
+
+    #[test]
+    fn compute_threads_beyond_cores_hint_error_string() {
+        let err = base()
+            .cluster(2, 4)
+            .cores_hint(4)
+            .compute_threads(9)
+            .build()
+            .unwrap_err();
+        assert_eq!(err, ConfigError::ComputeThreadsExceedCores { threads: 9, cores: 4 });
+        assert_eq!(
+            err.to_string(),
+            "--compute-threads 9 exceeds the 4 available cores (the kernel worker \
+             pool is CPU-bound; oversubscribing only adds scheduling noise)"
+        );
+        assert!(base().cluster(2, 4).cores_hint(4).compute_threads(4).build().is_ok());
+        // the default hint has a floor of 8, so portable small pools build
+        // on any host
+        assert!(base().cluster(2, 4).compute_threads(8).build().is_ok());
+    }
+
+    #[test]
+    fn compute_mode_parses_and_reaches_the_config() {
+        assert_eq!(parse_compute_mode("ref").unwrap(), ComputeMode::Reference);
+        assert_eq!(parse_compute_mode("reference").unwrap(), ComputeMode::Reference);
+        assert_eq!(parse_compute_mode("fast").unwrap(), ComputeMode::Fast);
+        let err = parse_compute_mode("turbo").unwrap_err();
+        assert_eq!(err, ConfigError::BadComputeMode { given: "turbo".to_string() });
+        assert_eq!(err.to_string(), "--compute-mode expects `ref` or `fast`, got `turbo`");
+
+        let cfg = base().cluster(2, 4).build().unwrap();
+        assert_eq!(cfg.compute_mode(), ComputeMode::Reference, "Reference is the default");
+        let cfg = base()
+            .cluster(2, 4)
+            .parallel(true)
+            .compute_mode(ComputeMode::Fast)
+            .compute_threads(2)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.compute_mode(), ComputeMode::Fast);
     }
 
     #[test]

@@ -45,11 +45,13 @@
 pub mod adam;
 pub mod compute;
 pub mod config;
+pub mod diverge;
 pub mod session;
 
+pub use compute::ComputeMode;
 pub use config::{
-    parse_pacing, parse_pacing_scale, parse_recv_timeout, parse_transport, Backend, ConfigError,
-    SessionConfig, SessionConfigBuilder,
+    parse_compute_mode, parse_pacing, parse_pacing_scale, parse_recv_timeout, parse_transport,
+    Backend, ConfigError, SessionConfig, SessionConfigBuilder,
 };
 pub use session::{
     PrintObserver, ResumeReport, Session, SpanCtx, StatsCollector, StepObserver,
@@ -74,7 +76,7 @@ use crate::topology::{DeviceId, Topology};
 use crate::util::rng::Rng;
 
 use adam::{AdamCfg, AdamState};
-use compute::{Compute, ExpertParams, FfnGrads, KernelScratch, Reference};
+use compute::{Compute, ExpertParams, FfnGrads, KernelScratch};
 
 /// How the engine executes an iteration span: the sequential oracle (one
 /// thread steps every simulated device in turn) or the SPMD runtime
@@ -633,17 +635,17 @@ pub(crate) fn backward_expert_key(
 
 /// One expert key's outputs from a worker thread, merged on the main
 /// thread in deterministic route order.
-struct KeyOut {
-    loss: f64,
-    grad: Vec<f32>,
-    rows: Vec<f32>,
+pub(crate) struct KeyOut {
+    pub(crate) loss: f64,
+    pub(crate) grad: Vec<f32>,
+    pub(crate) rows: Vec<f32>,
 }
 
-type KeyOuts = Vec<((usize, usize), KeyOut)>;
+pub(crate) type KeyOuts = Vec<((usize, usize), KeyOut)>;
 
 /// What the workers of [`expert_keys_threaded`] compute per route key.
 #[derive(Clone, Copy)]
-enum KeyMode<'a> {
+pub(crate) enum KeyMode<'a> {
     /// Last layer: fused fwd + loss + bwd ([`compute_expert_key`]).
     FusedLast { inv_t: f32, want_gx: bool },
     /// Inner-layer forward ([`forward_expert_rows`]).
@@ -653,11 +655,12 @@ enum KeyMode<'a> {
     Backward { g: &'a [Vec<f32>] },
 }
 
-/// Split one layer's route keys across scoped worker threads (reference
-/// backend only — each worker owns a stateless kernel set and its own
-/// scratch). Outputs come back **in route order** and the caller merges
-/// them in that order, so every floating-point operation lands exactly
-/// where the single-threaded loop would put it:
+/// Split one layer's route keys across scoped worker threads (hermetic
+/// backends only — each worker owns a stateless kernel set of the
+/// requested [`ComputeMode`] and its own scratch). Outputs come back **in
+/// route order** and the caller merges them in that order, so every
+/// floating-point operation lands exactly where the single-threaded loop
+/// would put it:
 ///
 /// * keys are independent (one gradient buffer per `(device, expert)`
 ///   key), so per-key work parallelizes freely;
@@ -667,10 +670,15 @@ enum KeyMode<'a> {
 /// * loss sums and cotangent scatters happen on the main thread in route
 ///   order.
 ///
-/// Bit-identity to the single-threaded loop is locked by the module test
-/// `threaded_expert_loop_is_bit_identical`.
-fn expert_keys_threaded(
+/// In Reference mode this makes the split bit-identical to the in-line
+/// loop at any thread count (locked by the module test
+/// `threaded_expert_loop_is_bit_identical`); in Fast mode per-key results
+/// are themselves deterministic, so the merged outcome is deterministic at
+/// any thread count too. Shared by the sequential engine and each SPMD
+/// rank's capacity-group loop.
+pub(crate) fn expert_keys_threaded(
     threads: usize,
+    kernel_mode: ComputeMode,
     dims: &LayerDims,
     params: &ClusterMem,
     routes: &Routes,
@@ -689,7 +697,7 @@ fn expert_keys_threaded(
             .chunks(per)
             .map(|slice| {
                 sc.spawn(move || -> anyhow::Result<KeyOuts> {
-                    let mut compute = Compute::Reference(Reference);
+                    let mut compute = Compute::for_mode(kernel_mode);
                     let mut scr = KeyScratch::default();
                     let mut outs: KeyOuts = Vec::with_capacity(slice.len());
                     for &(dev, e) in slice {
@@ -833,10 +841,12 @@ pub struct FssdpEngine {
     pub(crate) transport: crate::spmd::transport::TransportKind,
     /// Receive timeout for the socket transport (None = backend default).
     pub(crate) recv_timeout: Option<std::time::Duration>,
-    /// Worker threads for the sequential executor's expert loops
-    /// (reference backend only; 1 = in-line). SPMD ranks always use the
-    /// single-threaded kernels — one OS thread per rank is the whole
-    /// parallelism budget there.
+    /// Worker threads for the expert-kernel loops (hermetic backends
+    /// only; 1 = in-line). The sequential executor fans its per-key loop
+    /// out across this many scoped threads; under SPMD every rank runs
+    /// its own pool of this size over its capacity groups. Reference mode
+    /// stays bit-identical at any value; Fast mode is deterministic per
+    /// thread count.
     pub(crate) compute_threads: usize,
     /// Reusable per-span scratch (never part of the training state).
     pub(crate) workspace: StepWorkspace,
@@ -1012,9 +1022,24 @@ impl FssdpEngine {
         self.reshards_moved
     }
 
-    /// Worker threads of the sequential executor's expert loops.
+    /// Worker threads of the expert-kernel loops (sequential engine and
+    /// per SPMD rank).
     pub fn compute_threads(&self) -> usize {
         self.compute_threads
+    }
+
+    /// The kernel tier in effect (`None` under PJRT, which brings its own
+    /// kernels).
+    pub fn compute_mode(&self) -> Option<ComputeMode> {
+        self.compute.mode()
+    }
+
+    /// Swap the hermetic kernel tier. A no-op under PJRT — the mode knob
+    /// only selects between the pure-Rust tiers.
+    pub(crate) fn set_compute_mode(&mut self, mode: ComputeMode) {
+        if self.compute.mode().is_some() {
+            self.compute = Compute::for_mode(mode);
+        }
     }
 
     /// Per-phase wall-clock accumulated by sequential steps since
@@ -1065,7 +1090,9 @@ impl FssdpEngine {
             MatConstraints { overlap_degree: self.overlap_degree, mem_slots: self.mem_slots };
         let adam = self.adam;
         let threads = self.compute_threads;
-        let use_threads = threads > 1 && matches!(self.compute, Compute::Reference(_));
+        let kernel_mode = self.compute.mode();
+        let use_threads = threads > 1 && kernel_mode.is_some();
+        let kernel_mode = kernel_mode.unwrap_or_default();
         let mut stats = EngineStats::default();
 
         // All layers' plans are knowable up front: predictions use history
@@ -1201,6 +1228,7 @@ impl FssdpEngine {
                 if use_threads {
                     let outs = expert_keys_threaded(
                         threads,
+                        kernel_mode,
                         &dims,
                         &layers[l].params,
                         &routes,
@@ -1258,6 +1286,7 @@ impl FssdpEngine {
                 if use_threads {
                     let outs = expert_keys_threaded(
                         threads,
+                        kernel_mode,
                         &dims,
                         &layers[l].params,
                         &routes,
@@ -1312,6 +1341,7 @@ impl FssdpEngine {
                 if use_threads {
                     let outs = expert_keys_threaded(
                         threads,
+                        kernel_mode,
                         &dims,
                         &layers[l].params,
                         routes,
@@ -2002,6 +2032,36 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn fast_mode_is_deterministic_and_still_trains() {
+        // The Fast tier gives up bit-identity to Reference, not
+        // determinism: with the mode and thread count fixed, repeated runs
+        // must agree to the bit — and because per-key work merges in route
+        // order into zeroed buffers, the threaded split reproduces the
+        // in-line loop exactly even in Fast mode.
+        let dims = reference_dims();
+        let run = |threads: usize| {
+            let mut e =
+                FssdpEngine::new_reference_layers(dims, 3, Topology::cluster_a(2, 2), 17);
+            e.set_compute_mode(ComputeMode::Fast);
+            assert_eq!(e.compute_mode(), Some(ComputeMode::Fast));
+            assert_eq!(e.backend(), "fast");
+            e.compute_threads = threads;
+            let losses: Vec<u64> =
+                (0..4).map(|i| e.step(i, 4).unwrap().loss.to_bits()).collect();
+            (all_chunks(&e), losses)
+        };
+        let (c_a, l_a) = run(2);
+        let (c_b, l_b) = run(2);
+        assert_eq!(c_a, c_b, "Fast mode must be run-to-run deterministic at fixed threads");
+        assert_eq!(l_a, l_b, "loss bits must repeat run to run");
+        let (c_c, l_c) = run(1);
+        assert_eq!(c_a, c_c, "route-order merge must equal the in-line Fast loop");
+        assert_eq!(l_a, l_c);
+        let (first, last) = (f64::from_bits(l_a[0]), f64::from_bits(l_a[3]));
+        assert!(last < first, "Fast mode must still train: {first} -> {last}");
     }
 
     #[test]

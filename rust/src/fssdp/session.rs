@@ -256,6 +256,9 @@ impl Session {
         engine.transport = cfg.transport;
         engine.recv_timeout = cfg.recv_timeout;
         engine.compute_threads = cfg.compute_threads;
+        // Kernel tier: a no-op under PJRT (which brings its own kernels)
+        // and for the default Reference mode.
+        engine.set_compute_mode(cfg.compute_mode);
         if let Some(m) = cfg.mem_slots {
             engine.mem_slots = m;
         }
@@ -639,6 +642,35 @@ mod tests {
             all_chunks(a.engine()),
             all_chunks(b.engine()),
             "threaded expert loops must not change a single bit"
+        );
+    }
+
+    #[test]
+    fn compute_mode_reaches_the_engine_and_fast_stays_deterministic() {
+        use crate::fssdp::ComputeMode;
+        let run = || {
+            let mut s = Session::fresh(
+                cfg()
+                    .layers(2)
+                    .data_shards(4)
+                    .compute_mode(ComputeMode::Fast)
+                    .compute_threads(2)
+                    .build()
+                    .unwrap(),
+            )
+            .unwrap();
+            assert_eq!(s.engine().compute_mode(), Some(ComputeMode::Fast));
+            assert_eq!(s.engine().backend(), "fast");
+            s.run(3).unwrap();
+            all_chunks(s.engine())
+        };
+        assert_eq!(run(), run(), "Fast sessions must repeat bit-for-bit");
+
+        let s = Session::fresh(cfg().build().unwrap()).unwrap();
+        assert_eq!(
+            s.engine().compute_mode(),
+            Some(ComputeMode::Reference),
+            "Reference is the default tier"
         );
     }
 

@@ -4,7 +4,7 @@
 
 use crate::checkpoint::faults::{recover, FaultSpec};
 use crate::config::{ClusterPreset, ModelConfig, SystemConfig, SystemKind, TrainConfig};
-use crate::fssdp::StepPhases;
+use crate::fssdp::{ComputeMode, StepPhases};
 use crate::loadsim::ModelLoadTrace;
 use crate::metrics::Table;
 use crate::sim::engine::{simulate, SimOptions, SimResult};
@@ -314,11 +314,17 @@ pub fn recovery_table(
 /// `transport` picks the fabric under the SPMD column: the in-process mpsc
 /// backend, or (`--transport socket`) real unix sockets speaking the wire
 /// codec — the modeled α–β comm then sits next to measured socket wall
-/// clock, framing/syscall overhead included.
+/// clock, framing/syscall overhead included. `mode` selects the compute
+/// tier both columns run at (`--compute-mode fast` benches the SIMD
+/// kernels) and `compute_threads` sizes each rank's kernel worker pool
+/// (`--compute-threads`, also applied to the sequential column so the
+/// speedup stays like-for-like).
 pub fn spmd_scaling(
     iters: usize,
     quick: bool,
     transport: crate::spmd::transport::TransportKind,
+    mode: ComputeMode,
+    compute_threads: usize,
 ) -> anyhow::Result<Table> {
     use crate::fssdp::{build_iter_plan, LayerDims, Session, SessionConfig};
     use crate::materialize::MatConstraints;
@@ -345,7 +351,9 @@ pub fn spmd_scaling(
                 .dims(dims)
                 .topology(topo.clone())
                 .seed(11)
-                .data_shards(d);
+                .data_shards(d)
+                .compute_mode(mode)
+                .compute_threads(compute_threads.max(1));
             if parallel {
                 // trace + meter the SPMD run so the table can report
                 // realized compute skew, peak resident memory, and load
@@ -574,22 +582,27 @@ fn phase_delta(a: StepPhases, b: StepPhases) -> StepPhases {
     }
 }
 
-/// `hecate bench step`: the reference-backend 8-device, 3-layer training
-/// step timed end-to-end and per phase (materialize/spAG, gate, expert
-/// fwd, expert bwd, spRS, Adam+release) — the zero-copy hot path's
-/// acceptance benchmark. Measures the in-line expert loop and, when
-/// `compute_threads > 1`, the scoped-thread split next to it (bit-identical
-/// results, different wall clock). With `write_json`, writes
-/// `BENCH_runtime_step.json` in the working directory so CI can track the
-/// perf trajectory as an artifact; an existing `baseline` entry in that
-/// file is preserved so before/after stays visible across runs. With
-/// `check = Some(tolerance)`, the freshly measured sequential step time is
-/// run through [`perf_gate`] against that committed baseline and the call
-/// fails on a regression beyond the tolerance.
+/// `hecate bench step`: the hermetic 8-device, 3-layer training step
+/// timed end-to-end and per phase (materialize/spAG, gate, expert fwd,
+/// expert bwd, spRS, Adam+release) — the zero-copy hot path's acceptance
+/// benchmark. Always measures the Reference tier; measures the Fast tier
+/// next to it when `mode` selects it or a JSON report is requested, and
+/// with `compute_threads > 1` also the scoped-thread kernel split of each
+/// tier (bit-identical results in Reference mode, different wall clock).
+/// With `write_json`, writes `BENCH_runtime_step.json` in the working
+/// directory so CI can track the perf trajectory as an artifact — the
+/// `current` entry records the selected `mode`'s numbers plus the
+/// Fast-vs-Reference speedup and the measured parameter-divergence bound
+/// ([`crate::fssdp::diverge`]); an existing `baseline` entry in that file
+/// is preserved so before/after stays visible across runs. With
+/// `check = Some(tolerance)`, the freshly measured step time of the
+/// selected mode is run through [`perf_gate`] against that committed
+/// baseline and the call fails on a regression beyond the tolerance.
 pub fn bench_step(
     iters: usize,
     quick: bool,
     compute_threads: usize,
+    mode: ComputeMode,
     write_json: bool,
     check: Option<f64>,
 ) -> anyhow::Result<Table> {
@@ -606,26 +619,28 @@ pub fn bench_step(
     let iters = iters.max(1);
     let layers = 3usize;
 
-    let measure = |threads: usize| -> anyhow::Result<(f64, StepPhases, WorkspaceStats)> {
-        let mut s = Session::fresh(
-            SessionConfig::builder()
-                .reference()
-                .dims(dims)
-                .topology(Topology::cluster_a(2, 4))
-                .layers(layers)
-                .seed(5)
-                .data_shards(8)
-                .compute_threads(threads)
-                .build()?,
-        )?;
-        s.run(2)?; // warm the workspace, pool, and predictors
-        let p0 = s.engine().phases();
-        let t0 = Instant::now();
-        s.run(iters)?;
-        let wall = t0.elapsed().as_secs_f64() / iters as f64;
-        let phases = phase_delta(p0, s.engine().phases());
-        Ok((wall, phases, s.engine().workspace_stats()))
-    };
+    let measure =
+        |threads: usize, m: ComputeMode| -> anyhow::Result<(f64, StepPhases, WorkspaceStats)> {
+            let mut s = Session::fresh(
+                SessionConfig::builder()
+                    .reference()
+                    .dims(dims)
+                    .topology(Topology::cluster_a(2, 4))
+                    .layers(layers)
+                    .seed(5)
+                    .data_shards(8)
+                    .compute_threads(threads)
+                    .compute_mode(m)
+                    .build()?,
+            )?;
+            s.run(2)?; // warm the workspace, pool, and predictors
+            let p0 = s.engine().phases();
+            let t0 = Instant::now();
+            s.run(iters)?;
+            let wall = t0.elapsed().as_secs_f64() / iters as f64;
+            let phases = phase_delta(p0, s.engine().phases());
+            Ok((wall, phases, s.engine().workspace_stats()))
+        };
 
     let per_iter = |d: std::time::Duration| d.as_secs_f64() / iters as f64;
     let mut t = Table::new(&[
@@ -638,22 +653,9 @@ pub fn bench_step(
         "sprs_ms",
         "adam_ms",
     ]);
-    let (seq_wall, seq_phases, seq_ws) = measure(1)?;
-    t.row(vec![
-        "sequential".into(),
-        ms(seq_wall),
-        ms(per_iter(seq_phases.materialize)),
-        ms(per_iter(seq_phases.gate)),
-        ms(per_iter(seq_phases.expert_fwd)),
-        ms(per_iter(seq_phases.expert_bwd)),
-        ms(per_iter(seq_phases.sprs)),
-        ms(per_iter(seq_phases.adam)),
-    ]);
-    let mut thr: Option<(f64, StepPhases)> = None;
-    if compute_threads > 1 {
-        let (w, p, _) = measure(compute_threads)?;
+    let mut push_row = |t: &mut Table, label: String, w: f64, p: &StepPhases| {
         t.row(vec![
-            format!("threads={compute_threads}"),
+            label,
             ms(w),
             ms(per_iter(p.materialize)),
             ms(per_iter(p.gate)),
@@ -662,8 +664,45 @@ pub fn bench_step(
             ms(per_iter(p.sprs)),
             ms(per_iter(p.adam)),
         ]);
-        thr = Some((w, p));
+    };
+    let (ref_wall, ref_phases, ref_ws) = measure(1, ComputeMode::Reference)?;
+    push_row(&mut t, "reference".into(), ref_wall, &ref_phases);
+    if compute_threads > 1 {
+        let (w, p, _) = measure(compute_threads, ComputeMode::Reference)?;
+        push_row(&mut t, format!("reference threads={compute_threads}"), w, &p);
     }
+    let want_fast = mode == ComputeMode::Fast || write_json;
+    let mut fast: Option<(f64, StepPhases, WorkspaceStats)> = None;
+    if want_fast {
+        let f = measure(1, ComputeMode::Fast)?;
+        push_row(&mut t, "fast".into(), f.0, &f.1);
+        if compute_threads > 1 {
+            let (w, p, _) = measure(compute_threads, ComputeMode::Fast)?;
+            push_row(&mut t, format!("fast threads={compute_threads}"), w, &p);
+        }
+        fast = Some(f);
+    }
+    // the tier under test: what the JSON `current` entry and the perf
+    // gate see
+    let (cur_wall, cur_phases, cur_ws) = match (mode, &fast) {
+        (ComputeMode::Fast, Some((w, p, ws))) => (*w, *p, *ws),
+        _ => (ref_wall, ref_phases, ref_ws),
+    };
+    // Fast-vs-Reference correctness evidence for the JSON report: the
+    // divergence harness trains both tiers in lockstep on this shape
+    let divergence = if want_fast {
+        Some(crate::fssdp::diverge::measure(
+            dims,
+            layers,
+            Topology::cluster_a(2, 4),
+            5,
+            if quick { 4 } else { 8 },
+            8,
+            ComputeMode::Fast,
+        )?)
+    } else {
+        None
+    };
 
     let path = "BENCH_runtime_step.json";
     // keep a committed/previous baseline entry visible across runs — it is
@@ -685,6 +724,19 @@ pub fn bench_step(
                 ("adam", Json::num(per_iter(p.adam) * 1e3)),
             ])
         };
+        let divergence_json = match &divergence {
+            None => Json::Null,
+            Some(d) => obj([
+                ("max_abs", Json::num(d.max_abs)),
+                ("max_rel", Json::num(d.max_rel)),
+                ("bound_rel", Json::num(crate::fssdp::diverge::FAST_REL_BOUND)),
+                ("iters", Json::num(d.per_step.len() as f64)),
+            ]),
+        };
+        let speedup = fast
+            .as_ref()
+            .map(|(w, _, _)| Json::num(ref_wall / w.max(1e-12)))
+            .unwrap_or(Json::Null);
         let doc = obj([
             ("bench", Json::Str("runtime_step".into())),
             (
@@ -703,19 +755,25 @@ pub fn bench_step(
             ),
             ("baseline", baseline.clone()),
             (
+                "reference",
+                obj([
+                    ("step_ms", Json::num(ref_wall * 1e3)),
+                    ("phases_ms", phases_json(&ref_phases)),
+                ]),
+            ),
+            (
                 "current",
                 obj([
-                    ("step_ms", Json::num(seq_wall * 1e3)),
-                    (
-                        "step_ms_threaded",
-                        thr.as_ref().map(|(w, _)| Json::num(w * 1e3)).unwrap_or(Json::Null),
-                    ),
-                    ("phases_ms", phases_json(&seq_phases)),
+                    ("mode", Json::Str(mode.as_str().into())),
+                    ("step_ms", Json::num(cur_wall * 1e3)),
+                    ("speedup_vs_reference", speedup),
+                    ("phases_ms", phases_json(&cur_phases)),
+                    ("divergence", divergence_json),
                     (
                         "workspace",
                         obj([
-                            ("pool_allocated", Json::num(seq_ws.pool_allocated as f64)),
-                            ("pool_reused", Json::num(seq_ws.pool_reused as f64)),
+                            ("pool_allocated", Json::num(cur_ws.pool_allocated as f64)),
+                            ("pool_reused", Json::num(cur_ws.pool_reused as f64)),
                         ]),
                     ),
                 ]),
@@ -723,10 +781,13 @@ pub fn bench_step(
             (
                 "note",
                 Json::Str(
-                    "per-iteration milliseconds; regenerate with `hecate bench step --json`; \
-                     `bench step --check` gates CI on baseline.step_ms (bootstrap-pass while \
-                     it is null — fill it from a toolchain host's current.step_ms to arm the \
-                     gate, default tolerance 25%, override with --gate-tol)"
+                    "per-iteration milliseconds; regenerate with `hecate bench step --json \
+                     --compute-mode fast`; baseline = Reference tier, current = the selected \
+                     --compute-mode tier; `bench step --check` gates CI on baseline.step_ms \
+                     (bootstrap-pass while it is null — fill it from a toolchain host's \
+                     reference.step_ms to arm the gate, default tolerance 25%, override with \
+                     --gate-tol); divergence is the Fast-vs-Reference ∞-norm parameter drift \
+                     measured by the diverge harness"
                         .into(),
                 ),
             ),
@@ -734,8 +795,16 @@ pub fn bench_step(
         std::fs::write(path, doc.to_string_pretty())?;
         crate::log_info!("wrote {path}");
     }
+    if let Some(d) = &divergence {
+        println!(
+            "divergence fast-vs-ref: max_abs {:.3e}, max_rel {:.3e} (bound {})",
+            d.max_abs,
+            d.max_rel,
+            crate::fssdp::diverge::FAST_REL_BOUND
+        );
+    }
     if let Some(tolerance) = check {
-        println!("{}", perf_gate(&baseline, seq_wall * 1e3, tolerance)?);
+        println!("{}", perf_gate(&baseline, cur_wall * 1e3, tolerance)?);
     }
     Ok(t)
 }
@@ -939,7 +1008,14 @@ mod tests {
 
     #[test]
     fn spmd_scaling_smoke() {
-        let t = spmd_scaling(1, true, crate::spmd::transport::TransportKind::InProc).unwrap();
+        let t = spmd_scaling(
+            1,
+            true,
+            crate::spmd::transport::TransportKind::InProc,
+            ComputeMode::Reference,
+            1,
+        )
+        .unwrap();
         assert_eq!(t.header[1], "modeled_comm_ms");
         assert_eq!(t.header[5], "straggler_skew");
         assert_eq!(t.header[6], "peak_resident_kb");
@@ -957,7 +1033,14 @@ mod tests {
     fn spmd_scaling_socket_smoke() {
         // the socket arm: same table, SPMD column measured over real unix
         // sockets (modeled α–β comm next to framed syscall wall clock)
-        let t = spmd_scaling(1, true, crate::spmd::transport::TransportKind::Socket).unwrap();
+        let t = spmd_scaling(
+            1,
+            true,
+            crate::spmd::transport::TransportKind::Socket,
+            ComputeMode::Fast,
+            2,
+        )
+        .unwrap();
         assert_eq!(t.rows.len(), 4);
         for row in &t.rows {
             assert!(row[4].parse::<f64>().unwrap() > 0.0, "speedup column: {row:?}");

@@ -51,6 +51,13 @@
 //!    combine/cotangent scatters run in `(device, expert)` order.
 //!    (The global *loss* stat is a cross-rank f64 sum and may differ in
 //!    the last ulps; parameters never do.)
+//! 4. Per-rank kernel worker pools (`compute_threads > 1`) split each
+//!    rank's expert-key loops across `std::thread::scope` workers, but
+//!    every key accumulates into its own zeroed buffer and results merge
+//!    on the rank thread in ascending-expert order — so Reference-mode
+//!    parameters and losses carry the same bits at any thread count, and
+//!    Fast-mode ([`ComputeMode::Fast`]) runs are deterministic run-to-run
+//!    and across thread counts.
 //!
 //! `rust/tests/spmd_equivalence.rs` locks the contract at L=1 (including
 //! bit-identity to the seed engine) and L=3, plus resume from a checkpoint
@@ -68,11 +75,11 @@ use std::time::Instant;
 use crate::collectives::exec::{BufferPool, ChunkStore, ClusterMem};
 use crate::dispatch::dispatch;
 use crate::fssdp::adam::{AdamCfg, AdamState};
-use crate::fssdp::compute::{Compute, Reference};
+use crate::fssdp::compute::{Compute, ComputeMode};
 use crate::fssdp::{
     assignment_matrix, backward_expert_key, batch_for, build_iter_plan, compute_expert_key,
     forward_expert_rows, realized_loads, routes_from_gates, scatter_rows, zero_acts,
-    EngineStats, FssdpEngine, IterPlan, KeyScratch, LayerDims, Routes,
+    EngineStats, FssdpEngine, IterPlan, KeyMode, KeyOut, KeyScratch, LayerDims, Routes,
 };
 use crate::loadsim::LoadPredictor;
 use crate::materialize::MatConstraints;
@@ -115,6 +122,12 @@ struct RankCtx<'a> {
     adam: AdamCfg,
     cons: MatConstraints,
     overlap: bool,
+    /// Kernel tier every gate/expert kernel on this rank runs at
+    /// (Reference is the bit-exact oracle, Fast the SIMD tier).
+    kernel_mode: ComputeMode,
+    /// Kernel worker threads for this rank's expert-key loops (1 =
+    /// in-line on the rank thread).
+    kthreads: usize,
     layers: Vec<RankLayerState>,
     comm: RankComm,
     /// `Some(epoch)` when the engine is metered: each rank builds a local
@@ -194,11 +207,13 @@ pub fn run_span(
         threads == nd,
         "SPMD executor runs one OS thread per rank: {threads} threads != {nd} devices"
     );
-    anyhow::ensure!(
-        matches!(engine.compute, Compute::Reference(_)),
-        "SPMD executor requires the hermetic reference backend \
-         (PJRT client handles cannot be shared across rank threads)"
-    );
+    let kernel_mode = engine.compute.mode().ok_or_else(|| {
+        anyhow::anyhow!(
+            "SPMD executor requires a hermetic compute backend \
+             (PJRT client handles cannot be shared across rank threads)"
+        )
+    })?;
+    let kthreads = engine.compute_threads.max(1);
     if iters == 0 {
         return Ok(Vec::new());
     }
@@ -264,6 +279,8 @@ pub fn run_span(
             adam,
             cons,
             overlap,
+            kernel_mode,
+            kthreads,
             layers,
             comm,
             meter_epoch,
@@ -491,6 +508,112 @@ fn settle_layer(
     Ok(())
 }
 
+/// Split one rank's route keys for a layer across scoped kernel worker
+/// threads — the SPMD twin of [`crate::fssdp`]'s `expert_keys_threaded`,
+/// working on the rank's own [`ChunkStore`] instead of the whole cluster
+/// memory. Every chunk must already be resident (the caller pulls missing
+/// replicas first). Each worker owns a stateless kernel set of the rank's
+/// [`ComputeMode`] plus its own scratch, and accumulates each key's
+/// gradient into a zeroed per-key buffer — the identical add sequence the
+/// in-line loop performs into the zeroed gradient store. Outputs come back
+/// in ascending-expert order and the caller merges them on the rank
+/// thread, so Reference mode is bit-identical to the in-line loop at any
+/// thread count and Fast mode is deterministic at any thread count.
+#[allow(clippy::too_many_arguments)]
+fn rank_keys_threaded(
+    threads: usize,
+    kernel_mode: ComputeMode,
+    dims: &LayerDims,
+    store: &ChunkStore,
+    me: usize,
+    routes: &Routes,
+    keys: &[usize],
+    acts: &[Vec<f32>],
+    mode: KeyMode<'_>,
+) -> anyhow::Result<Vec<(usize, KeyOut)>> {
+    if keys.is_empty() {
+        return Ok(Vec::new());
+    }
+    let nt = threads.min(keys.len()).max(1);
+    let per = (keys.len() + nt - 1) / nt;
+    let chunk_len = dims.chunk_len();
+    let results: Vec<anyhow::Result<Vec<(usize, KeyOut)>>> = std::thread::scope(|sc| {
+        let handles: Vec<_> = keys
+            .chunks(per)
+            .map(|slice| {
+                sc.spawn(move || -> anyhow::Result<Vec<(usize, KeyOut)>> {
+                    let mut compute = Compute::for_mode(kernel_mode);
+                    let mut scr = KeyScratch::default();
+                    let mut outs = Vec::with_capacity(slice.len());
+                    for &e in slice {
+                        let toks = routes.get(&(me, e)).expect("key from this map");
+                        let chunk = store
+                            .get(e)
+                            .ok_or_else(|| anyhow::anyhow!("rank {me} lacks expert {e}"))?;
+                        let mut rows = Vec::new();
+                        let (loss, grad) = match mode {
+                            KeyMode::FusedLast { inv_t, want_gx } => {
+                                let mut acc = vec![0.0f32; chunk_len];
+                                let lo = compute_expert_key(
+                                    &mut compute,
+                                    dims,
+                                    chunk,
+                                    toks,
+                                    acts,
+                                    inv_t,
+                                    &mut acc,
+                                    want_gx,
+                                    &mut scr,
+                                    &mut rows,
+                                )?;
+                                (lo, acc)
+                            }
+                            KeyMode::Forward => {
+                                forward_expert_rows(
+                                    &mut compute,
+                                    dims,
+                                    chunk,
+                                    toks,
+                                    acts,
+                                    &mut scr,
+                                    &mut rows,
+                                )?;
+                                (0.0, Vec::new())
+                            }
+                            KeyMode::Backward { g } => {
+                                let mut acc = vec![0.0f32; chunk_len];
+                                backward_expert_key(
+                                    &mut compute,
+                                    dims,
+                                    chunk,
+                                    toks,
+                                    acts,
+                                    g,
+                                    &mut acc,
+                                    &mut scr,
+                                    &mut rows,
+                                )?;
+                                (0.0, acc)
+                            }
+                        };
+                        outs.push((e, KeyOut { loss, grad, rows }));
+                    }
+                    Ok(outs)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("rank kernel worker panicked"))
+            .collect()
+    });
+    let mut out = Vec::with_capacity(keys.len());
+    for r in results {
+        out.extend(r?);
+    }
+    Ok(out)
+}
+
 /// The rank program: the body of [`FssdpEngine::step`], restricted to one
 /// rank's slice of the work, with communicator exchanges where the
 /// sequential engine touches other devices' memory.
@@ -508,12 +631,14 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
         adam,
         cons,
         overlap,
+        kernel_mode,
+        kthreads,
         mut layers,
         mut comm,
         meter_epoch,
     } = ctx;
     let nl = layers.len();
-    let mut compute = Compute::Reference(Reference);
+    let mut compute = Compute::for_mode(kernel_mode);
     let mut ov = Overlap::new(overlap);
     // Debug builds audit every transfer and (on rank 0) record the
     // realized loads, feeding the schedule model's drift cross-check.
@@ -709,56 +834,123 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
                 routes.keys().filter(|(d, _)| *d == me).map(|(_, e)| *e).collect();
             let order = order_resident_first(&my_keys, &layers[l].store);
             let mut out_rows: BTreeMap<usize, Vec<f32>> = BTreeMap::new();
-            for e in order {
-                if !layers[l].store.contains(e) {
-                    let t0 = Instant::now();
-                    spags[l].as_mut().expect("begun").ensure(&mut layers[l].store, &mut comm, e)?;
-                    let d = t0.elapsed();
-                    metrics.add_duration("spmd.spag_wait", d);
-                    metrics.add_duration(&format!("spmd.spag_wait.l{l}"), d);
-                    metrics.add("spmd.lazy_chunks", 1.0);
-                    comm.trace_span(TracePhase::SpagWait, iter, l, t0, 1);
-                }
-                let toks = routes.get(&(me, e)).expect("key from this map");
-                let chunk = layers[l].store.get(e).expect("ensured above");
-                let t0 = Instant::now();
-                if last_layer {
-                    let acc = grads.get_mut(e).expect("grads cover the placement");
-                    let mut gx = Vec::new();
-                    let lo = compute_expert_key(
-                        &mut compute,
-                        &dims,
-                        chunk,
-                        toks,
-                        &acts,
-                        inv_t,
-                        acc,
-                        nl > 1,
-                        &mut scr,
-                        &mut gx,
-                    )?;
-                    loss += lo;
-                    if nl > 1 {
-                        out_rows.insert(e, gx);
+            // Per-key losses merge in ascending-expert order below, so the
+            // rank's partial loss carries the same bits at every kernel
+            // thread count.
+            let mut key_loss: BTreeMap<usize, f64> = BTreeMap::new();
+            if kthreads > 1 && my_keys.len() > 1 {
+                // Threaded: pull every missing replica first (in the same
+                // resident-first order, with the same spag accounting),
+                // then fan the per-key compute across the rank's pool.
+                for &e in &order {
+                    if !layers[l].store.contains(e) {
+                        let t0 = Instant::now();
+                        spags[l]
+                            .as_mut()
+                            .expect("begun")
+                            .ensure(&mut layers[l].store, &mut comm, e)?;
+                        let d = t0.elapsed();
+                        metrics.add_duration("spmd.spag_wait", d);
+                        metrics.add_duration(&format!("spmd.spag_wait.l{l}"), d);
+                        metrics.add("spmd.lazy_chunks", 1.0);
+                        comm.trace_span(TracePhase::SpagWait, iter, l, t0, 1);
                     }
+                }
+                let t0 = Instant::now();
+                let kmode = if last_layer {
+                    KeyMode::FusedLast { inv_t, want_gx: nl > 1 }
                 } else {
-                    let mut rows = Vec::new();
-                    forward_expert_rows(
-                        &mut compute,
-                        &dims,
-                        chunk,
-                        toks,
-                        &acts,
-                        &mut scr,
-                        &mut rows,
-                    )?;
-                    out_rows.insert(e, rows);
+                    KeyMode::Forward
+                };
+                let outs = rank_keys_threaded(
+                    kthreads,
+                    kernel_mode,
+                    &dims,
+                    &layers[l].store,
+                    me,
+                    &routes,
+                    &my_keys,
+                    &acts,
+                    kmode,
+                )?;
+                let mut rows_total = 0u64;
+                for (e, out) in outs {
+                    let toks = routes.get(&(me, e)).expect("key from this map");
+                    rows_total += toks.len() as u64;
+                    metrics.add("spmd.groups", toks.chunks(dims.cap).len() as f64);
+                    if last_layer {
+                        let acc = grads.get_mut(e).expect("grads cover the placement");
+                        acc.copy_from_slice(&out.grad);
+                        key_loss.insert(e, out.loss);
+                        if nl > 1 {
+                            out_rows.insert(e, out.rows);
+                        }
+                    } else {
+                        out_rows.insert(e, out.rows);
+                    }
                 }
                 let d = t0.elapsed();
                 metrics.add_duration("spmd.compute", d);
                 metrics.add_duration(&format!("spmd.compute.l{l}"), d);
-                metrics.add("spmd.groups", toks.chunks(dims.cap).len() as f64);
-                comm.trace_span(TracePhase::ExpertFwd, iter, l, t0, toks.len() as u64);
+                comm.trace_span(TracePhase::ExpertFwd, iter, l, t0, rows_total);
+            } else {
+                for e in order {
+                    if !layers[l].store.contains(e) {
+                        let t0 = Instant::now();
+                        spags[l]
+                            .as_mut()
+                            .expect("begun")
+                            .ensure(&mut layers[l].store, &mut comm, e)?;
+                        let d = t0.elapsed();
+                        metrics.add_duration("spmd.spag_wait", d);
+                        metrics.add_duration(&format!("spmd.spag_wait.l{l}"), d);
+                        metrics.add("spmd.lazy_chunks", 1.0);
+                        comm.trace_span(TracePhase::SpagWait, iter, l, t0, 1);
+                    }
+                    let toks = routes.get(&(me, e)).expect("key from this map");
+                    let chunk = layers[l].store.get(e).expect("ensured above");
+                    let t0 = Instant::now();
+                    if last_layer {
+                        let acc = grads.get_mut(e).expect("grads cover the placement");
+                        let mut gx = Vec::new();
+                        let lo = compute_expert_key(
+                            &mut compute,
+                            &dims,
+                            chunk,
+                            toks,
+                            &acts,
+                            inv_t,
+                            acc,
+                            nl > 1,
+                            &mut scr,
+                            &mut gx,
+                        )?;
+                        key_loss.insert(e, lo);
+                        if nl > 1 {
+                            out_rows.insert(e, gx);
+                        }
+                    } else {
+                        let mut rows = Vec::new();
+                        forward_expert_rows(
+                            &mut compute,
+                            &dims,
+                            chunk,
+                            toks,
+                            &acts,
+                            &mut scr,
+                            &mut rows,
+                        )?;
+                        out_rows.insert(e, rows);
+                    }
+                    let d = t0.elapsed();
+                    metrics.add_duration("spmd.compute", d);
+                    metrics.add_duration(&format!("spmd.compute.l{l}"), d);
+                    metrics.add("spmd.groups", toks.chunks(dims.cap).len() as f64);
+                    comm.trace_span(TracePhase::ExpertFwd, iter, l, t0, toks.len() as u64);
+                }
+            }
+            for lo in key_loss.values() {
+                loss += *lo;
             }
 
             // Remaining receives + fan-out duties before the next phase.
@@ -847,30 +1039,63 @@ fn rank_main(ctx: RankCtx) -> anyhow::Result<RankOut> {
                 let my_keys: Vec<usize> =
                     routes.keys().filter(|(d, _)| *d == me).map(|(_, e)| *e).collect();
                 let mut gx_rows: BTreeMap<usize, Vec<f32>> = BTreeMap::new();
-                for e in my_keys {
-                    let toks = routes.get(&(me, e)).expect("key from this map");
-                    let chunk =
-                        layers[l].store.get(e).expect("replicas live until their bwd");
-                    let acc = grads_stack[l].get_mut(e).expect("grads cover the placement");
+                if kthreads > 1 && my_keys.len() > 1 {
+                    // replicas live until their bwd, so every chunk is
+                    // already resident: fan out immediately
                     let t0 = Instant::now();
-                    let mut gx = Vec::new();
-                    backward_expert_key(
-                        &mut compute,
+                    let outs = rank_keys_threaded(
+                        kthreads,
+                        kernel_mode,
                         &dims,
-                        chunk,
-                        toks,
+                        &layers[l].store,
+                        me,
+                        routes,
+                        &my_keys,
                         &acts_stack[l],
-                        &g,
-                        acc,
-                        &mut scr,
-                        &mut gx,
+                        KeyMode::Backward { g: &g },
                     )?;
+                    let mut rows_total = 0u64;
+                    for (e, out) in outs {
+                        let toks = routes.get(&(me, e)).expect("key from this map");
+                        rows_total += toks.len() as u64;
+                        let acc =
+                            grads_stack[l].get_mut(e).expect("grads cover the placement");
+                        acc.copy_from_slice(&out.grad);
+                        if l > 0 {
+                            gx_rows.insert(e, out.rows);
+                        }
+                    }
                     let d = t0.elapsed();
                     metrics.add_duration("spmd.compute", d);
                     metrics.add_duration(&format!("spmd.compute.l{l}"), d);
-                    comm.trace_span(TracePhase::ExpertBwd, iter, l, t0, toks.len() as u64);
-                    if l > 0 {
-                        gx_rows.insert(e, gx);
+                    comm.trace_span(TracePhase::ExpertBwd, iter, l, t0, rows_total);
+                } else {
+                    for e in my_keys {
+                        let toks = routes.get(&(me, e)).expect("key from this map");
+                        let chunk =
+                            layers[l].store.get(e).expect("replicas live until their bwd");
+                        let acc =
+                            grads_stack[l].get_mut(e).expect("grads cover the placement");
+                        let t0 = Instant::now();
+                        let mut gx = Vec::new();
+                        backward_expert_key(
+                            &mut compute,
+                            &dims,
+                            chunk,
+                            toks,
+                            &acts_stack[l],
+                            &g,
+                            acc,
+                            &mut scr,
+                            &mut gx,
+                        )?;
+                        let d = t0.elapsed();
+                        metrics.add_duration("spmd.compute", d);
+                        metrics.add_duration(&format!("spmd.compute.l{l}"), d);
+                        comm.trace_span(TracePhase::ExpertBwd, iter, l, t0, toks.len() as u64);
+                        if l > 0 {
+                            gx_rows.insert(e, gx);
+                        }
                     }
                 }
                 if l > 0 {
@@ -996,7 +1221,6 @@ mod tests {
     use super::*;
     use crate::fssdp::{reference_dims, Executor};
     use crate::testing::all_chunks as final_chunks;
-
 
     #[test]
     fn spmd_span_matches_sequential_bitwise() {
@@ -1124,6 +1348,53 @@ mod tests {
         for s in m.mem_samples() {
             assert!(hw[&(s.rank, s.layer)] >= s.resident_bytes);
         }
+    }
+
+    #[test]
+    fn rank_kernel_pool_is_bitwise_invariant_across_thread_counts() {
+        let dims = reference_dims();
+        let mut base = FssdpEngine::new_reference_layers(dims, 2, Topology::cluster_a(2, 2), 31);
+        base.executor = Executor::Spmd { threads: 4, overlap: true };
+        let base_stats = base.run_span(0, 3, 4).unwrap();
+        for kthreads in [2usize, 4] {
+            let mut e =
+                FssdpEngine::new_reference_layers(dims, 2, Topology::cluster_a(2, 2), 31);
+            e.executor = Executor::Spmd { threads: 4, overlap: true };
+            e.compute_threads = kthreads;
+            let stats = e.run_span(0, 3, 4).unwrap();
+            assert_eq!(
+                final_chunks(&base),
+                final_chunks(&e),
+                "params must be bit-identical at {kthreads} kernel threads"
+            );
+            for (a, b) in base_stats.iter().zip(stats.iter()) {
+                assert_eq!(
+                    a.loss.to_bits(),
+                    b.loss.to_bits(),
+                    "loss must carry the same bits at {kthreads} kernel threads"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fast_mode_spmd_is_deterministic_and_thread_count_invariant() {
+        let dims = reference_dims();
+        let run = |kthreads: usize| {
+            let mut e =
+                FssdpEngine::new_reference_layers(dims, 2, Topology::cluster_a(2, 2), 33);
+            e.set_compute_mode(ComputeMode::Fast);
+            e.executor = Executor::Spmd { threads: 4, overlap: true };
+            e.compute_threads = kthreads;
+            e.run_span(0, 3, 4).unwrap();
+            final_chunks(&e)
+        };
+        let a = run(2);
+        assert_eq!(a, run(2), "Fast-mode SPMD must be deterministic run-to-run");
+        // per-key buffers + ascending-expert merge make even the Fast tier
+        // invariant to the kernel thread count
+        assert_eq!(a, run(1));
+        assert_eq!(a, run(4));
     }
 
     #[test]

@@ -205,6 +205,10 @@ fn worker_config(args: &Args) -> anyhow::Result<SessionConfig> {
     if let Some(t) = args.str_opt("recv-timeout")? {
         b = b.recv_timeout(crate::fssdp::parse_recv_timeout(&t)?);
     }
+    if let Some(m) = args.str_opt("compute-mode")? {
+        b = b.compute_mode(crate::fssdp::parse_compute_mode(&m)?);
+    }
+    b = b.compute_threads(args.usize_or("compute-threads", 1)?);
     Ok(b.build()?)
 }
 
@@ -214,7 +218,8 @@ fn worker_config(args: &Args) -> anyhow::Result<SessionConfig> {
 pub(crate) fn cmd_worker(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&[
         "rank", "world", "listen", "peers", "devices", "nodes", "racks", "layers", "seed",
-        "data-shards", "iters", "overlap", "recv-timeout", "out",
+        "data-shards", "iters", "overlap", "recv-timeout", "out", "compute-mode",
+        "compute-threads",
     ])?;
     let rank: usize = args.req("rank")?.parse()?;
     let world: usize = args.req("world")?.parse()?;
@@ -266,6 +271,8 @@ pub(crate) fn cmd_worker(args: &Args) -> anyhow::Result<()> {
         adam: engine.adam,
         cons,
         overlap,
+        kernel_mode: cfg.compute_mode(),
+        kthreads: cfg.compute_threads.max(1),
         layers: rank_layers,
         comm: RankComm::endpoint(Box::new(transport)),
         meter_epoch: None,
@@ -375,6 +382,10 @@ pub(crate) fn launch_local(
             .arg(iters.to_string())
             .arg("--overlap")
             .arg(if overlap { "true" } else { "false" })
+            .arg("--compute-mode")
+            .arg(cfg.compute_mode().as_str())
+            .arg("--compute-threads")
+            .arg(cfg.compute_threads.to_string())
             .arg("--out")
             .arg(dir.join(format!("state-{r}.bin")))
             .stdin(Stdio::null())
@@ -461,6 +472,8 @@ pub(crate) fn launch_local(
         let mut engine =
             FssdpEngine::new_reference_layers(cfg.dims, layers, cfg.topology().clone(), cfg.seed);
         engine.executor = Executor::Spmd { threads: nd, overlap };
+        engine.set_compute_mode(cfg.compute_mode());
+        engine.compute_threads = cfg.compute_threads;
         engine.run_span(0, iters, sources)?;
         let want = crate::testing::all_chunks(&engine);
         let experts = engine.dims.experts;

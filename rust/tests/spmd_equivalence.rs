@@ -6,7 +6,7 @@
 //! backend, no artifacts or PJRT required. All runs go through the public
 //! `Session` API (the engine constructors are crate-private).
 
-use hecate::fssdp::{Session, SessionConfig, SessionConfigBuilder};
+use hecate::fssdp::{ComputeMode, Session, SessionConfig, SessionConfigBuilder};
 use hecate::testing::{all_chunks, max_rel_err};
 use hecate::topology::Topology;
 
@@ -167,6 +167,88 @@ fn parallel_resume_from_checkpoint_is_bit_identical() {
     let seq = run_layers(layers, Topology::cluster_a(2, 2), None, 4, sources, 33);
     assert_eq!(all_chunks(full.engine()), seq);
     std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Bitwise comparison of two f32 buffers (plain `==` would conflate
+/// `-0.0` and `0.0`, and the locks here are about *bits*).
+fn same_bits(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn rank_kernel_pools_preserve_params_moments_and_loss_bits() {
+    // The per-rank kernel worker pool (compute_threads on the SPMD
+    // executor) must be invisible in Reference mode: final parameters,
+    // Adam moments, *and* the per-step loss bits all match the
+    // single-threaded run at every pool width. The Adam moments come out
+    // through a checkpoint snapshot — `all_chunks` only sees parameters.
+    let snapshot = |kthreads: usize| {
+        let mut s = Session::fresh(
+            cfg(2, Topology::cluster_a(2, 2), Some((4, true)), 4, 41)
+                .compute_threads(kthreads)
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
+        let stats = s.run(3).unwrap();
+        let losses: Vec<u64> = stats.iter().map(|st| st.loss.to_bits()).collect();
+        let dir = std::env::temp_dir()
+            .join(format!("hecate-spmd-kpool-{}-{kthreads}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        s.checkpoint_to(&dir).unwrap();
+        let (state, _) = hecate::checkpoint::load(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+        (losses, state)
+    };
+
+    let (base_losses, base) = snapshot(1);
+    for kthreads in [2usize, 4] {
+        let (losses, state) = snapshot(kthreads);
+        assert_eq!(base_losses, losses, "loss bits must not depend on the pool width");
+        assert_eq!(base.layers.len(), state.layers.len());
+        for (l, (lb, ls)) in base.layers.iter().zip(state.layers.iter()).enumerate() {
+            for (e, (eb, es)) in lb.experts.iter().zip(ls.experts.iter()).enumerate() {
+                assert!(
+                    same_bits(&eb.chunk, &es.chunk),
+                    "layer {l} expert {e}: params drift at compute_threads={kthreads}"
+                );
+                assert!(
+                    same_bits(&eb.m, &es.m) && same_bits(&eb.v, &es.v) && eb.t == es.t,
+                    "layer {l} expert {e}: Adam moments drift at compute_threads={kthreads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_mode_spmd_is_reproducible_across_runs_and_pool_widths() {
+    // Fast-tier kernels reorder float accumulation vs Reference, but the
+    // per-key work is self-contained and merged in expert order — so two
+    // identical runs are bit-equal, and so are runs at different kernel
+    // pool widths.
+    let run_fast = |kthreads: usize| {
+        let mut s = Session::fresh(
+            cfg(2, Topology::cluster_a(2, 2), Some((4, true)), 4, 43)
+                .compute_mode(ComputeMode::Fast)
+                .compute_threads(kthreads)
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
+        s.run(3).unwrap();
+        all_chunks(s.engine())
+    };
+    let a = run_fast(2);
+    let b = run_fast(2);
+    assert_eq!(a.len(), b.len());
+    for (e, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert!(same_bits(x, y), "expert {e}: Fast SPMD must be run-to-run deterministic");
+    }
+    let c = run_fast(4);
+    for (e, (x, y)) in a.iter().zip(c.iter()).enumerate() {
+        assert!(same_bits(x, y), "expert {e}: Fast SPMD must be pool-width invariant");
+    }
 }
 
 #[test]
